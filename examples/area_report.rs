@@ -1,0 +1,65 @@
+//! Circuit-area model walkthrough: per-method PE totals (Table 3 column)
+//! and component breakdowns (Tables 7/8/9), plus the analytic L1 TPU
+//! estimates from DESIGN.md §8.
+//!
+//! ```bash
+//! cargo run --release --example area_report
+//! ```
+
+use lqer::hwcost;
+use lqer::util::bench::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "circuit area at matched 16-MAC/cycle throughput",
+        &["method", "LUTs", "vs FP16"],
+    );
+    for method in [
+        "fp16", "gptq-w4", "awq-w4", "llmint4", "smoothquant-w8a8",
+        "clipq-w6a6", "mxint-w4a8", "l2qer-int-w4a8", "l2qer-w4a6",
+        "l2qer-w4a8", "l2qer-w2a8",
+    ] {
+        let pe = hwcost::area_for_method(method).unwrap();
+        t.row(vec![
+            method.to_string(),
+            format!("{:.0}", pe.total),
+            format!("{:.2}x", pe.relative()),
+        ]);
+    }
+    print!("{}", t.render());
+
+    for method in ["llmint4", "awq-w4", "l2qer-w4a8"] {
+        let pe = hwcost::area_for_method(method).unwrap();
+        let mut bt = Table::new(&format!("breakdown: {method}"),
+                                &["component", "LUTs", "share"]);
+        for (name, luts) in &pe.components {
+            bt.row(vec![
+                name.clone(),
+                format!("{luts:.0}"),
+                format!("{:.1}%", luts / pe.total * 100.0),
+            ]);
+        }
+        print!("{}", bt.render());
+    }
+
+    // L1 kernel VMEM/MXU analytics (DESIGN.md §8): per-tile footprint for
+    // the fused LQER kernel at representative shapes.
+    let mut vt = Table::new(
+        "L1 Pallas kernel VMEM footprint per grid step (f32)",
+        &["shape (K,bm,bn,r)", "KiB", "fits 16MiB VMEM"],
+    );
+    for (k, bm, bn, r) in
+        [(768usize, 128usize, 128usize, 16usize),
+         (768, 128, 128, 256),
+         (12288, 128, 128, 32)]
+    {
+        let floats = bm * k + k * bn + k * r + r * bn + bm * bn;
+        let kib = floats as f64 * 4.0 / 1024.0;
+        vt.row(vec![
+            format!("({k},{bm},{bn},{r})"),
+            format!("{kib:.0}"),
+            (kib < 16.0 * 1024.0).to_string(),
+        ]);
+    }
+    print!("{}", vt.render());
+}

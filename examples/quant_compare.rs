@@ -1,0 +1,53 @@
+//! Compare PTQ methods on one model: perplexity, memory, circuit area —
+//! a Table-2/3-style report through the public API.
+//!
+//! ```bash
+//! cargo run --release --example quant_compare [-- <model>]
+//! ```
+
+use lqer::config::Manifest;
+use lqer::eval;
+use lqer::hwcost;
+use lqer::runtime::{ModelRunner, Runtime};
+use lqer::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or("opt-mini".into());
+    let manifest = Manifest::load(&lqer::default_artifacts_dir())?;
+    let rt = Runtime::cpu()?;
+    let stream =
+        lqer::util::read_u16_file(&manifest.data_dir().join("test.u16"))?;
+
+    let methods = [
+        "fp16", "mxint-w2a8", "lqer-w2a8", "l2qer-w2a8", "mxint-w4a8",
+        "l2qer-w4a8", "gptq-w4", "awq-w4",
+    ];
+    let mut t = Table::new(
+        &format!("quantization methods on {model}"),
+        &["method", "ppl", "dPPL", "avg w bits", "circuit area"],
+    );
+    let mut fp16 = 0.0;
+    for method in methods {
+        let runner = ModelRunner::new(&manifest, &model, method)?;
+        let r = eval::ppl::perplexity(&rt, &manifest, &runner, &stream, 8)?;
+        if method == "fp16" {
+            fp16 = r.ppl;
+        }
+        let bits = manifest
+            .run_meta(manifest.run(&model, method)?)?
+            .f64_at("avg_w_bits")
+            .unwrap_or(f64::NAN);
+        t.row(vec![
+            method.to_string(),
+            format!("{:.3}", r.ppl),
+            format!("{:+.3}", r.ppl - fp16),
+            format!("{bits:.2}"),
+            hwcost::area_for_method(method)
+                .map(|pe| format!("{:.2}x", pe.relative()))
+                .unwrap_or("-".into()),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\nppl over 8 windows of the held-out stream; dPPL vs FP16.");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: load a quantized model through the public API and serve a
+//! few requests.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! This walks the whole stack: manifest -> LQTW weights -> HLO-text
+//! compile on the PJRT CPU client -> serving engine (continuous batcher +
+//! KV cache) -> tokenizer round-trip.
+
+use lqer::config::Manifest;
+use lqer::coordinator::{EngineConfig, EngineHandle, Request, Sampling};
+use lqer::tokenizer::Tokenizer;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = lqer::default_artifacts_dir();
+    let manifest = Manifest::load(&artifacts)?;
+    let tok = Tokenizer::from_file(
+        &manifest.data_dir().join("vocab.json"))?;
+
+    println!("== LQER quickstart ==");
+    println!("model:  {} (L2QER W4A8, k=16)", manifest.serve.model);
+
+    // One engine per (model, method); it owns the PJRT runtime.
+    let engine = EngineHandle::spawn(
+        artifacts.clone(),
+        EngineConfig {
+            model: manifest.serve.model.clone(),
+            method: "l2qer-w4a8".into(),
+            decode_batch: 4,
+            prefill_buckets: manifest
+                .serve
+                .prefill_shapes
+                .iter()
+                .map(|(_, t)| *t)
+                .collect(),
+            max_prefill_per_step: 2,
+        },
+    )?;
+
+    // Grab a few grammatical prompts from the corpus prompt set.
+    let prompts = lqer::coordinator::loadtest::load_prompts(&manifest)?;
+    for (i, prompt) in prompts.iter().take(3).enumerate() {
+        let resp = engine.generate(Request {
+            id: i as u64 + 1,
+            prompt: prompt.clone(),
+            max_new_tokens: 16,
+            sampling: if i == 0 {
+                Sampling::Greedy
+            } else {
+                Sampling::TopK { k: 8, temperature: 0.8, seed: 7 }
+            },
+        })?;
+        println!("\nprompt {} : {}", i + 1,
+                 tok.decode_clean(&prompt[1..].to_vec()));
+        println!("output   : {}", tok.decode_clean(&resp.tokens));
+        println!("           ({} tokens, ttft {:.0} ms, total {:.0} ms, \
+                  {:?})",
+                 resp.tokens.len(), resp.ttft_ms, resp.total_ms,
+                 resp.finish);
+    }
+
+    let metrics = engine.metrics()?;
+    println!("\nengine: {}", metrics.report());
+    engine.shutdown();
+    Ok(())
+}

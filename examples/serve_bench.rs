@@ -1,0 +1,57 @@
+//! End-to-end serving driver (the prompt-mandated E2E validation): load
+//! the small trained model quantized with L²QER-W4A8, serve a batched
+//! request workload through the continuous-batching engine, and report
+//! latency/throughput — then repeat with the FP16 baseline for
+//! comparison.  Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example serve_bench [-- <requests> <max_new>]
+//! ```
+
+use lqer::config::Manifest;
+use lqer::coordinator::{loadtest, EngineConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let requests: usize =
+        args.get(1).and_then(|v| v.parse().ok()).unwrap_or(24);
+    let max_new: usize =
+        args.get(2).and_then(|v| v.parse().ok()).unwrap_or(24);
+
+    let manifest = Manifest::load(&lqer::default_artifacts_dir())?;
+    println!(
+        "== serve_bench: {} requests x {} new tokens on {} ==",
+        requests, max_new, manifest.serve.model
+    );
+
+    for method in manifest.serve.methods.clone() {
+        let batch = *manifest.serve.decode_batches.iter().max().unwrap();
+        let cfg = EngineConfig {
+            model: manifest.serve.model.clone(),
+            method: method.clone(),
+            decode_batch: batch,
+            prefill_buckets: manifest
+                .serve
+                .prefill_shapes
+                .iter()
+                .map(|(_, t)| *t)
+                .collect(),
+            max_prefill_per_step: 2,
+        };
+        let t0 = std::time::Instant::now();
+        let stats = loadtest::run_loadtest(&manifest, &cfg, requests,
+                                           max_new)?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!("\n[{method}] wall {:.1}s  ({:.1} req/s, {:.1} gen tok/s \
+                  end-to-end)", wall, requests as f64 / wall,
+                 stats.tokens_generated as f64 / wall);
+        println!("  {}", stats.report());
+        println!(
+            "  runtime split: exec {:.0}ms upload {:.0}ms download {:.0}ms",
+            stats.exec.exec_ns as f64 / 1e6,
+            stats.exec.upload_ns as f64 / 1e6,
+            stats.exec.download_ns as f64 / 1e6
+        );
+    }
+    Ok(())
+}

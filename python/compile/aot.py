@@ -1,0 +1,418 @@
+"""AOT build driver: python runs ONCE here, never on the request path.
+
+    python -m compile.aot --out-dir ../artifacts [--models tiny,micro,mini]
+
+Stages (all incremental -- existing artifacts are reused):
+
+  data    TinyPajama corpus + task suite            -> artifacts/data/
+  train   the synthetic model family                -> artifacts/models/
+  quant   every (model x method) PTQ run            -> artifacts/runs/
+  hlo     lowered HLO *text* graphs                 -> artifacts/hlo/
+  golden  cross-language test vectors               -> artifacts/golden/
+
+HLO text (not serialized protos) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+weights.bin ("LQTW" format): magic LQTW0001 | u32 manifest_len | JSON
+manifest | pad to 64 | raw f32 little-endian tensors.  The manifest lists
+tensors in *jax tree-flatten order*, which is exactly the HLO parameter
+order of every lowered graph.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import calibration, data as D, model as M, pipeline, train
+from .quant import formats, lqer
+
+# ----------------------------------------------------------------------------
+# Experiment grid
+# ----------------------------------------------------------------------------
+
+DEFAULT_MODELS = ["opt-tiny", "opt-micro", "opt-mini"]
+SERVE_MODEL = "opt-mini"
+SERVE_METHODS = ["fp16", "l2qer-w4a8"]
+FIG3_MODEL = "opt-micro"
+FIG3_RANKS = [1, 2, 4, 8, 16, 32, 64, 128]
+FIG1A_LAYER = "layers.2.fc1"     # of opt-mini
+SCORE_B, SCORE_T = 4, 96
+PREFILL_SHAPES = [(1, 16), (1, 96)]
+DECODE_BATCHES = [1, 4, 8]
+
+TRAIN_STEPS = {"opt-tiny": 400, "opt-micro": 500, "opt-mini": 500,
+               "opt-small": 500}
+
+
+# ----------------------------------------------------------------------------
+# HLO lowering helpers (see /opt/xla-example/gen_hlo.py)
+# ----------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_graph(fn, *specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def _tok_spec(b: int, t: int):
+    return jax.ShapeDtypeStruct((b, t), jnp.int32)
+
+
+# ----------------------------------------------------------------------------
+# LQTW weight files
+# ----------------------------------------------------------------------------
+
+
+def write_lqtw(path: str, params, extra_meta: dict) -> None:
+    flat = M.flatten_with_names(params)
+    manifest = {"tensors": [], "meta": extra_meta}
+    offset = 0
+    for name, arr in flat:
+        nbytes = arr.size * 4
+        manifest["tensors"].append({
+            "name": name, "shape": list(arr.shape), "offset": offset,
+            "nbytes": nbytes})
+        offset += nbytes
+    mjson = json.dumps(manifest).encode("utf-8")
+    with open(path, "wb") as fh:
+        fh.write(b"LQTW0001")
+        fh.write(struct.pack("<I", len(mjson)))
+        fh.write(mjson)
+        pad = (-fh.tell()) % 64
+        fh.write(b"\0" * pad)
+        for _, arr in flat:
+            fh.write(np.ascontiguousarray(arr, np.float32).tobytes())
+
+
+# ----------------------------------------------------------------------------
+# Stages
+# ----------------------------------------------------------------------------
+
+
+def stage_data(out_dir: str) -> D.Dataset:
+    ddir = os.path.join(out_dir, "data")
+    ds = D.build_dataset()
+    if not os.path.exists(os.path.join(ddir, "meta.json")):
+        print("[aot] generating TinyPajama corpus + tasks")
+        D.export_dataset(ds, ddir)
+    return ds
+
+
+def stage_train(out_dir: str, ds: D.Dataset, models: list[str]) -> dict:
+    trained = {}
+    for name in models:
+        cfg = M.make_config(name, vocab=ds.vocab.size)
+        mdir = os.path.join(out_dir, "models", name)
+        params = train.train_model(
+            cfg, ds.train, ds.val, mdir, steps=TRAIN_STEPS.get(name, 500))
+        trained[name] = (cfg, params)
+    return trained
+
+
+def _method_runs(models: list[str]) -> list[tuple[str, str, dict]]:
+    """(model, run_name, spec) for the full experiment grid."""
+    runs = []
+    for name in models:
+        for method, spec in pipeline.METHODS.items():
+            if method == "mxint-w3a8" and name != FIG3_MODEL:
+                continue  # fig-3 baseline only needed on the sweep model
+            runs.append((name, method, spec))
+    # Figure 3 rank sweep on the sweep model (W2A8, LQER vs L2QER --
+    # difficulty-matched to the paper's W3-on-1.3B setting, see DESIGN.md).
+    for k in FIG3_RANKS:
+        runs.append((FIG3_MODEL, f"lqer-w2a8-k{k}",
+                     pipeline.rank_sweep_spec(k, scaled=False)))
+        runs.append((FIG3_MODEL, f"l2qer-w2a8-k{k}",
+                     pipeline.rank_sweep_spec(k, scaled=True)))
+    return runs
+
+
+def _rank_pad_for(run_name: str, spec: dict) -> int:
+    if not spec["lowrank"]:
+        return 0
+    k = spec["lowrank"]["k"]
+    import re
+    if re.search(r"-k\d+$", run_name):  # fig-3 sweep shares one K graph
+        return max(FIG3_RANKS)
+    if k <= 16:
+        return 16
+    return k
+
+
+def stage_quant(out_dir: str, ds: D.Dataset, trained: dict,
+                models: list[str]) -> list[dict]:
+    run_index = []
+    stats_cache: dict[str, dict] = {}
+    for name in models:
+        cfg, params = trained[name]
+        for model_name, run_name, spec in _method_runs(models):
+            if model_name != name:
+                continue
+            rdir = os.path.join(out_dir, "runs", name, run_name)
+            wpath = os.path.join(rdir, "weights.bin")
+            mpath = os.path.join(rdir, "meta.json")
+            rank_pad = _rank_pad_for(run_name, spec)
+            gv = pipeline.graph_variant_for(spec, rank_pad)
+            entry = {"model": name, "method": run_name,
+                     "graph": gv.tag, "weights": wpath, "meta": mpath}
+            run_index.append(entry)
+            if os.path.exists(mpath):
+                continue
+            if name not in stats_cache and spec["algo"] != "none":
+                print(f"[aot] calibrating {name} (32 samples)")
+                stats_cache[name] = calibration.collect_stats(
+                    params, ds.calib, cfg)
+            print(f"[aot] quantizing {name} / {run_name}")
+            spectra_layer = (FIG1A_LAYER
+                             if name == "opt-mini"
+                             and run_name == "l2qer-w4a8" else None)
+            qparams, meta = pipeline.quantize_model(
+                params, cfg, spec, stats_cache.get(name),
+                rank_pad=rank_pad, spectra_layer=spectra_layer)
+            os.makedirs(rdir, exist_ok=True)
+            meta.update({"model": name, "method": run_name,
+                         "model_cfg": dataclasses_dict(cfg)})
+            write_lqtw(wpath, qparams, {"model": name, "method": run_name,
+                                        "graph": gv.tag})
+            with open(mpath, "w") as fh:
+                json.dump(meta, fh, indent=1)
+    return run_index
+
+
+def dataclasses_dict(cfg: M.ModelConfig) -> dict:
+    return {"name": cfg.name, "vocab": cfg.vocab, "d": cfg.d,
+            "layers": cfg.layers, "heads": cfg.heads, "ffn": cfg.ffn,
+            "t_max": cfg.t_max}
+
+
+def stage_hlo(out_dir: str, trained: dict, models: list[str],
+              run_index: list[dict]) -> list[dict]:
+    """Lower every graph variant any run needs, plus the serving graphs."""
+    graph_index = []
+    needed: dict[tuple, M.GraphVariant] = {}
+    for entry in run_index:
+        name = entry["model"]
+        tag = entry["graph"]
+        act = tag.split("_k")[0].replace("act-", "")
+        rank = int(tag.split("_k")[1])
+        needed[(name, tag, "score", SCORE_B, SCORE_T)] = M.GraphVariant(
+            act=act, rank=rank)
+    for method in SERVE_METHODS:
+        for e in run_index:
+            if e["model"] == SERVE_MODEL and e["method"] == method:
+                tag = e["graph"]
+                act = tag.split("_k")[0].replace("act-", "")
+                rank = int(tag.split("_k")[1])
+                gv = M.GraphVariant(act=act, rank=rank)
+                for (b, t) in PREFILL_SHAPES:
+                    needed[(SERVE_MODEL, tag, "prefill", b, t)] = gv
+                for b in DECODE_BATCHES:
+                    needed[(SERVE_MODEL, tag, "decode", b, 0)] = gv
+
+    for (name, tag, entry_kind, b, t), gv in sorted(needed.items()):
+        cfg, params = trained[name]
+        hdir = os.path.join(out_dir, "hlo", name)
+        os.makedirs(hdir, exist_ok=True)
+        fname = (f"{tag}_{entry_kind}_b{b}" +
+                 (f"_t{t}" if entry_kind != "decode" else "") + ".hlo.txt")
+        path = os.path.join(hdir, fname)
+        graph_index.append({"model": name, "graph": tag,
+                            "entry": entry_kind, "b": b, "t": t,
+                            "path": path})
+        if os.path.exists(path):
+            continue
+        t0 = time.time()
+        vparams = M.attach_variant_params(
+            jax.tree_util.tree_map(np.asarray, params), cfg, gv)
+        pspecs = M.param_specs(vparams)
+        if entry_kind == "score":
+            fn = lambda p, toks: (M.score(p, toks, cfg, gv),)
+            text = lower_graph(fn, pspecs, _tok_spec(b, t))
+        elif entry_kind == "prefill":
+            fn = lambda p, toks: M.prefill(p, toks, cfg, gv)
+            text = lower_graph(fn, pspecs, _tok_spec(b, t))
+        else:  # decode
+            fn = lambda p, tok, kc, vc, pos: M.decode(
+                p, tok, kc, vc, pos, cfg, gv)
+            tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+            cache = jax.ShapeDtypeStruct(
+                (cfg.layers, b, cfg.t_max, cfg.d), jnp.float32)
+            pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+            text = lower_graph(fn, pspecs, tok, cache, cache, pos)
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"[aot] lowered {name}/{fname} "
+              f"({len(text) // 1024} KiB, {time.time() - t0:.1f}s)")
+    return graph_index
+
+
+def stage_golden(out_dir: str, trained: dict) -> None:
+    """Cross-language vectors: rust quant/svd must match these exactly."""
+    gdir = os.path.join(out_dir, "golden")
+    if os.path.exists(os.path.join(gdir, "golden.json")):
+        return
+    os.makedirs(gdir, exist_ok=True)
+    rng = np.random.default_rng(42)
+    cases = []
+
+    def dump(name, arr):
+        p = os.path.join(gdir, name + ".f32")
+        np.ascontiguousarray(arr, np.float32).tofile(p)
+        return {"file": name + ".f32", "shape": list(arr.shape)}
+
+    # MXINT weight + act orientations, several bit widths.
+    for bits in (2, 3, 4, 8):
+        w = rng.normal(0, 0.4, size=(64, 48)).astype(np.float32)
+        wq = np.asarray(formats.mxint_quant_weight(w, bits), np.float32)
+        cases.append({"kind": "mxint_weight", "bits": bits,
+                      "exp_bits": 4, "block": 16,
+                      "input": dump(f"mxw{bits}_in", w),
+                      "output": dump(f"mxw{bits}_out", wq)})
+        x = (rng.normal(0, 1.5, size=(8, 64)) ** 3).astype(np.float32)
+        xq = np.asarray(formats.mxint_quant_act(x, bits, 8), np.float32)
+        cases.append({"kind": "mxint_act", "bits": bits,
+                      "exp_bits": 8, "block": 16,
+                      "input": dump(f"mxa{bits}_in", x),
+                      "output": dump(f"mxa{bits}_out", xq)})
+    # INT group quant.
+    for bits, group in ((4, 128), (8, 128), (2, 128)):
+        w = rng.normal(0, 0.3, size=(256, 32)).astype(np.float32)
+        wq = np.asarray(formats.int_quant_group(w, bits, group, axis=0),
+                        np.float32)
+        cases.append({"kind": "int_group", "bits": bits, "group": group,
+                      "input": dump(f"ig{bits}_in", w),
+                      "output": dump(f"ig{bits}_out", wq)})
+    # Per-token int8.
+    x = rng.normal(0, 2.0, size=(16, 96)).astype(np.float32)
+    xq = np.asarray(formats.int_quant_per_token(x, 8), np.float32)
+    cases.append({"kind": "int_per_token", "bits": 8,
+                  "input": dump("pt8_in", x), "output": dump("pt8_out", xq)})
+    # SVD case: quantization error of a real trained layer (fig 1a data).
+    if "opt-mini" in trained:
+        cfg, params = trained["opt-mini"]
+        li, lname = 2, "fc1"
+        w = np.asarray(params["layers"][li][lname]["w"], np.float32)
+        wq = np.asarray(formats.mxint_quant_weight(w, 3), np.float32)
+        eq = w - wq
+        sv = np.linalg.svd(eq.astype(np.float64), compute_uv=False)
+        cases.append({"kind": "svd", "input": dump("svd_in", eq),
+                      "singular_values": dump(
+                          "svd_out", sv.astype(np.float32))})
+    with open(os.path.join(gdir, "golden.json"), "w") as fh:
+        json.dump({"cases": cases}, fh, indent=1)
+    print(f"[aot] wrote {len(cases)} golden cases")
+
+
+def stage_fig1a(out_dir: str, ds: D.Dataset, trained: dict) -> dict | None:
+    """Export E_q and the Appendix-A scale vector for the Figure-1a layer;
+    the rust analysis module computes both spectra with its own SVD."""
+    if "opt-mini" not in trained:
+        return None
+    fdir = os.path.join(out_dir, "fig1a")
+    jpath = os.path.join(fdir, "fig1a.json")
+    if os.path.exists(jpath):
+        with open(jpath) as fh:
+            return json.load(fh)
+    os.makedirs(fdir, exist_ok=True)
+    cfg, params = trained["opt-mini"]
+    stats = calibration.collect_stats(params, ds.calib, cfg,
+                                      need_hessian=False)
+    li = int(FIG1A_LAYER.split(".")[1])
+    lname = FIG1A_LAYER.split(".")[2]
+    w = np.asarray(params["layers"][li][lname]["w"], np.float32)
+    qfn = pipeline.weight_quant_fn(("mxint", 3))
+    wq = qfn(w)
+    eq = (w - wq).astype(np.float32)
+    s_diag = lqer.calib_scale_matrix(stats[FIG1A_LAYER].a_bar)
+    eq.tofile(os.path.join(fdir, "eq.f32"))
+    s_diag.astype(np.float32).tofile(os.path.join(fdir, "s.f32"))
+    # Python-side spectra for cross-checking the rust SVD.
+    spectra = lqer.error_spectra(w, qfn, s_diag)
+    info = {"layer": FIG1A_LAYER, "shape": list(eq.shape),
+            "eq": "eq.f32", "s": "s.f32",
+            "spectrum_lqer": spectra["lqer"].tolist(),
+            "spectrum_l2qer": spectra["l2qer"].tolist()}
+    with open(jpath, "w") as fh:
+        json.dump(info, fh)
+    print("[aot] exported fig1a error matrix + spectra")
+    return info
+
+
+# ----------------------------------------------------------------------------
+# Main
+# ----------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS))
+    ap.add_argument("--stage", default="all",
+                    choices=["all", "data", "train", "quant", "hlo",
+                             "golden"])
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    models = [m if m.startswith("opt-") else f"opt-{m}"
+              for m in args.models.split(",")]
+    os.makedirs(out_dir, exist_ok=True)
+
+    t0 = time.time()
+    ds = stage_data(out_dir)
+    if args.stage == "data":
+        return
+    trained = stage_train(out_dir, ds, models)
+    if args.stage == "train":
+        return
+    run_index = []
+    graph_index = []
+    if args.stage in ("all", "quant"):
+        run_index = stage_quant(out_dir, ds, trained, models)
+    if args.stage in ("all", "hlo"):
+        graph_index = stage_hlo(out_dir, trained, models, run_index)
+    if args.stage in ("all", "golden"):
+        stage_golden(out_dir, trained)
+    fig1a = stage_fig1a(out_dir, ds, trained) if args.stage == "all" else None
+
+    if args.stage == "all":
+        manifest = {
+            "created": time.strftime("%Y-%m-%d %H:%M:%S"),
+            "models": {
+                name: {**dataclasses_dict(trained[name][0]),
+                       "n_params": trained[name][0].param_count()}
+                for name in models},
+            "runs": run_index,
+            "graphs": graph_index,
+            "score_shape": [SCORE_B, SCORE_T],
+            "serve": {"model": SERVE_MODEL, "methods": SERVE_METHODS,
+                      "prefill_shapes": PREFILL_SHAPES,
+                      "decode_batches": DECODE_BATCHES},
+            "fig3": {"model": FIG3_MODEL, "ranks": FIG3_RANKS},
+            "fig1a": fig1a and {"layer": fig1a["layer"],
+                                "shape": fig1a["shape"]},
+            "data": {"dir": "data"},
+        }
+        with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+            json.dump(manifest, fh, indent=1)
+        print(f"[aot] done in {time.time() - t0:.0f}s; "
+              f"manifest at {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

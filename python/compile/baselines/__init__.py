@@ -1,0 +1,1 @@
+from . import awq, clipq, gptq, llm_int4, rtn, smoothquant  # noqa: F401

@@ -1,0 +1,48 @@
+"""AWQ (Lin et al., 2023): activation-aware per-channel weight scaling.
+
+Salient weights -- those multiplied by large-magnitude activation channels
+-- are protected by scaling them *up* before quantization and folding the
+inverse scale into the activation side.  Since the inverse scale is folded
+back into the weight after dequantization (s and 1/s cancel analytically),
+the net effect is that the quantization grid is allocated per channel
+proportionally to activation importance:
+
+    s_ch   = a_max_ch^alpha / mean(a_max^alpha)     (alpha grid-searched)
+    W_eff  = q(W * s) / s
+
+alpha is chosen per layer to minimize ||X W - X W_eff||_F on the
+calibration sample, exactly AWQ's data-driven grid search (no gradients).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..quant import formats
+
+
+def quantize(w: np.ndarray, a_max: np.ndarray, x_sample: np.ndarray,
+             bits: int = 4, group: int = 128,
+             n_grid: int = 20) -> dict:
+    """w: (m, n); a_max: (m,) channel abs-max; x_sample: (t, m) calib acts."""
+    w = np.asarray(w, np.float32)
+    a = np.asarray(a_max, np.float64)
+    a = np.maximum(a, 1e-8)
+    y_ref = x_sample.astype(np.float64) @ w.astype(np.float64)
+
+    best = None
+    for gi in range(n_grid + 1):
+        alpha = gi / n_grid
+        s = a ** alpha
+        s = s / np.exp(np.mean(np.log(s)))  # geomean-normalize
+        s = np.clip(s, 1e-4, 1e4).astype(np.float32)
+        wq = np.asarray(
+            formats.int_quant_group(w * s[:, None], bits, group, axis=0),
+            np.float32)
+        w_eff = wq / s[:, None]
+        err = float(np.linalg.norm(
+            x_sample.astype(np.float64) @ w_eff.astype(np.float64) - y_ref))
+        if best is None or err < best[0]:
+            best = (err, alpha, w_eff)
+    _, alpha, w_eff = best
+    return {"w": w_eff.astype(np.float32), "alpha": alpha}

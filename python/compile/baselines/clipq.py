@@ -1,0 +1,47 @@
+"""clipq: gradient-free learnable-weight-clipping baseline (the OmniQuant
+stand-in, DESIGN.md section 2).
+
+OmniQuant's main lever (LWC) learns a per-group clipping ratio by SGD on
+WikiText2 for 20 epochs.  clipq grid-searches the same per-group clip
+ratio directly against reconstruction error on the calibration sample --
+the gradient-free core of the idea at PTQ cost parity with LQER.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..quant.formats import effective_group
+
+
+def _clip_quant(w: np.ndarray, bits: int, group: int,
+                ratio: float) -> np.ndarray:
+    m, n = w.shape
+    g = effective_group(m, group)
+    qmax = 2.0 ** (bits - 1) - 1
+    out = np.empty_like(w)
+    for gi in range(m // g):
+        blk = w[gi * g:(gi + 1) * g, :]
+        amax = np.max(np.abs(blk), axis=0) * ratio
+        s = np.where(amax > 0, amax / qmax, 1.0)
+        s = s.astype(np.float16).astype(np.float32)
+        out[gi * g:(gi + 1) * g, :] = (
+            np.clip(np.round(blk / s), -qmax - 1, qmax) * s)
+    return out
+
+
+def quantize(w: np.ndarray, x_sample: np.ndarray, bits: int = 4,
+             group: int = 128,
+             ratios=(1.0, 0.95, 0.9, 0.85, 0.8, 0.75, 0.7)) -> dict:
+    """Pick the clip ratio minimizing ||X W - X W_q|| on calib acts."""
+    w = np.asarray(w, np.float32)
+    y_ref = x_sample.astype(np.float64) @ w.astype(np.float64)
+    best = None
+    for r in ratios:
+        wq = _clip_quant(w, bits, group, r)
+        err = float(np.linalg.norm(
+            x_sample.astype(np.float64) @ wq.astype(np.float64) - y_ref))
+        if best is None or err < best[0]:
+            best = (err, r, wq)
+    _, ratio, wq = best
+    return {"w": wq.astype(np.float32), "ratio": ratio}

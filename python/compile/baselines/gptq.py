@@ -1,0 +1,74 @@
+"""GPTQ (Frantar et al., 2022): Hessian-guided error-compensating rounding.
+
+Implements the standard GPTQ algorithm (the Cholesky formulation of OBQ
+with lazy batch updates removed -- our layers are small enough to process
+column-by-column):
+
+  H = X^T X + lambda I          (from calibration, see calibration.py)
+  Hinv = Cholesky^-1 upper factorization trick
+  for each input feature i (in order):
+      q_i   = quantize(row W[i, :])
+      err_i = (W[i, :] - q_i) / Hinv[i, i]
+      W[i+1:, :] -= Hinv[i+1:, i] x err_i     (compensate later rows)
+
+Quantization of each element uses the same INT-g128 grid as the RTN/AWQ
+baselines so Table 3's w-only comparison is apples-to-apples.
+
+Note the transpose convention: our W is (in_features m, out_features n),
+i.e. the paper's W^T; GPTQ iterates over *input* features, which are our
+rows.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..quant.formats import effective_group
+
+
+def _group_scales(w: np.ndarray, bits: int, group: int) -> np.ndarray:
+    """Precompute per-(group, out) scales from the original weight, as
+    GPTQ does (scales frozen before error compensation)."""
+    m, n = w.shape
+    g = effective_group(m, group)
+    qmax = 2.0 ** (bits - 1) - 1
+    scales = np.empty((m // g, n), np.float32)
+    for gi in range(m // g):
+        blk = w[gi * g:(gi + 1) * g, :]
+        amax = np.max(np.abs(blk), axis=0)
+        s = np.where(amax > 0, amax / qmax, 1.0)
+        scales[gi] = s.astype(np.float16).astype(np.float32)
+    return scales
+
+
+def quantize(w: np.ndarray, h: np.ndarray, bits: int = 4,
+             group: int = 128, damp: float = 0.01) -> dict:
+    """GPTQ-quantize one (m, n) weight with Hessian proxy h (m, m)."""
+    w = np.array(w, np.float64)
+    m, n = w.shape
+    g = effective_group(m, group)
+    qmax = 2.0 ** (bits - 1) - 1
+    scales = _group_scales(w.astype(np.float32), bits, group)
+
+    hm = np.array(h, np.float64)
+    # dampening: lambda = damp * mean(diag(H))
+    dead = np.diag(hm) == 0
+    hm[dead, dead] = 1.0
+    w[dead, :] = 0.0
+    lam = damp * np.mean(np.diag(hm))
+    hm[np.diag_indices(m)] += lam
+    # Upper Cholesky factor U of H^-1 (H^-1 = U^T U), as in the reference
+    # implementation's torch.linalg.cholesky(Hinv, upper=True).
+    hinv = np.linalg.inv(hm)
+    hinv = (hinv + hinv.T) / 2.0
+    u = np.linalg.cholesky(hinv).T  # upper triangular
+
+    q_out = np.empty_like(w)
+    for i in range(m):
+        s = scales[i // g]                       # (n,)
+        qi = np.clip(np.round(w[i, :] / s), -qmax - 1, qmax) * s
+        q_out[i, :] = qi
+        err = (w[i, :] - qi) / u[i, i]
+        if i + 1 < m:
+            w[i + 1:, :] -= np.outer(u[i, i + 1:], err)
+    return {"w": q_out.astype(np.float32)}

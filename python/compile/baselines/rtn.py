@@ -1,0 +1,24 @@
+"""Round-to-nearest baselines: plain MXINT / plain INT group quantization.
+
+"Plain MXINT" is the Table-2 baseline ("the whole network is simply MXINT
+quantized without any special treatments").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..quant import formats
+
+
+def quantize_mxint(w: np.ndarray, bits: int, exp_bits: int = 4,
+                   block: int = 16) -> dict:
+    wq = np.asarray(formats.mxint_quant_weight(w, bits, exp_bits, block),
+                    np.float32)
+    return {"w": wq}
+
+
+def quantize_int(w: np.ndarray, bits: int, group: int = 128) -> dict:
+    wq = np.asarray(formats.int_quant_group(w, bits, group, axis=0),
+                    np.float32)
+    return {"w": wq}

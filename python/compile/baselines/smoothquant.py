@@ -1,0 +1,32 @@
+"""SmoothQuant (Xiao et al., 2023): migrate activation outliers into the
+weights with a per-channel smoothing factor
+
+    s_ch = max|X_ch|^alpha / max|W_ch|^(1-alpha)      (alpha = 0.5)
+
+At inference X is divided by s (the ``smooth`` parameter in the lowered
+graph) and W is multiplied by s before quantization, so the product is
+unchanged but activation ranges shrink.  In the real method s is fused
+into the *preceding* layer; our graphs apply it at the linear input, which
+is compute-equivalent for PTQ fidelity (DESIGN.md section 2 notes the
+substitution).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..quant import formats
+
+
+def quantize(w: np.ndarray, a_max: np.ndarray, bits: int = 8,
+             alpha: float = 0.5, group: int = 128) -> dict:
+    w = np.asarray(w, np.float32)
+    a = np.maximum(np.asarray(a_max, np.float64), 1e-8)
+    w_ch = np.maximum(np.max(np.abs(w), axis=1), 1e-8)  # (m,)
+    s = (a ** alpha) / (w_ch ** (1.0 - alpha))
+    s = np.clip(s / np.exp(np.mean(np.log(np.maximum(s, 1e-12)))),
+                1e-4, 1e4).astype(np.float32)
+    wq = np.asarray(
+        formats.int_quant_group(w * s[:, None], bits, group, axis=0),
+        np.float32)
+    return {"w": wq, "smooth": s}

@@ -1,0 +1,74 @@
+"""Activation calibration (paper Appendix A + baselines' statistics).
+
+Runs the FP32 model over the 32-sample calibration set and collects, per
+linear layer:
+
+  * ``a_bar``  -- the Appendix-A channel magnitude profile: mean |x_ch|
+    over tokens within each sample, then max over samples (Eq. 13); feeds
+    the L2QER scale matrix S (Eq. 14),
+  * ``a_max``  -- max |x_ch| over all tokens (AWQ / SmoothQuant / the
+    LLM.int4() outlier threshold),
+  * ``h``      -- the Gram matrix  X^T X  accumulated over all calibration
+    tokens (GPTQ's Hessian proxy).
+
+No gradients anywhere -- this is the "32 samples, profiling only"
+calibration the paper contrasts with OmniQuant's 20-epoch training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from . import model as M
+
+
+@dataclasses.dataclass
+class LinearStats:
+    a_bar: np.ndarray    # (m,) Appendix-A profile
+    a_max: np.ndarray    # (m,) channel abs-max
+    h: np.ndarray        # (m, m) X^T X accumulated
+    n_tokens: int
+    x_sample: np.ndarray | None = None  # (t', m) raw acts for grid searches
+
+
+def collect_stats(params, calib: np.ndarray, cfg: M.ModelConfig,
+                  need_hessian: bool = True,
+                  sample_tokens: int = 384) -> dict[str, LinearStats]:
+    """calib: (n_samples, t) int token matrix -> per-linear stats keyed by
+    'layers.<i>.<name>'."""
+    gv = M.GraphVariant(act="none", rank=0)
+
+    def fwd(p, toks):
+        collect: dict = {}
+        M.score(p, toks, cfg, gv, collect=collect)
+        return collect
+
+    fwd_j = jax.jit(fwd)
+    stats: dict[str, LinearStats] = {}
+    for i in range(calib.shape[0]):
+        toks = calib[i:i + 1].astype(np.int32)
+        acts = {k: np.asarray(v) for k, v in fwd_j(params, toks).items()}
+        for name, x in acts.items():
+            x2 = x.reshape(-1, x.shape[-1]).astype(np.float64)  # (t, m)
+            sample_bar = np.mean(np.abs(x2), axis=0)
+            amax = np.max(np.abs(x2), axis=0)
+            if name not in stats:
+                m = x2.shape[1]
+                stats[name] = LinearStats(
+                    a_bar=np.zeros(m), a_max=np.zeros(m),
+                    h=np.zeros((m, m)), n_tokens=0)
+            st = stats[name]
+            st.a_bar = np.maximum(st.a_bar, sample_bar)   # max over samples
+            st.a_max = np.maximum(st.a_max, amax)
+            if need_hessian:
+                st.h += x2.T @ x2
+            if st.x_sample is None:
+                st.x_sample = x2.astype(np.float32)
+            elif st.x_sample.shape[0] < sample_tokens:
+                st.x_sample = np.concatenate(
+                    [st.x_sample, x2.astype(np.float32)])[:sample_tokens]
+            st.n_tokens += x2.shape[0]
+    return stats

@@ -1,0 +1,477 @@
+"""TinyPajama: a deterministic synthetic corpus + downstream task suite.
+
+This module is the substitution for the paper's evaluation data (WikiText-2
+perplexity, SlimPajama calibration, and the six lm-eval-harness downstream
+tasks).  See DESIGN.md section 2 for the substitution rationale.
+
+The corpus is a small templated language over a 512-word vocabulary with
+real statistical structure for a language model to learn:
+
+  * a Zipfian unigram distribution within each part-of-speech category,
+  * deterministic noun->verb agreement classes (each noun belongs to an
+    "animacy" class; each class licenses a subset of verbs),
+  * document-level topics that skew the noun distribution,
+  * question/answer lines ("does the cat sing ? no .") whose answers are
+    derivable from the agreement classes, and
+  * recall lines ("the cat chases the fish . the cat chases the fish .")
+    that reward induction heads.
+
+Six downstream tasks mirror the *formats* of the paper's suite:
+
+  paper task        ours            format
+  --------------    ------------    ------------------------------------
+  ARC (easy)        arc_easy        4-way continuation, random distractors
+  ARC (challenge)   arc_challenge   4-way continuation, same-category
+                                    near-miss distractors
+  LAMBADA           lambada         exact final-word prediction
+  PIQA              piqa            2-way sentence plausibility
+  BoolQ             boolq           yes/no agreement question
+  OpenBookQA        openbook        4-way recall of a fact in context
+
+All generation is seeded and reproducible; train / validation / test /
+calibration splits are disjoint by construction (different seeds and
+different topic mixtures are NOT used -- only different draws -- so the
+eval split is in-distribution, like WikiText-2 test vs train).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+# ----------------------------------------------------------------------------
+# Vocabulary
+# ----------------------------------------------------------------------------
+
+PAD, BOS, EOS, UNK = 0, 1, 2, 3
+SPECIALS = ["<pad>", "<bos>", "<eos>", "<unk>"]
+
+_ONSETS = ["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z",
+           "ch", "sh", "br", "cl", "dr", "gr", "pl", "st", "tr"]
+_NUCLEI = ["a", "e", "i", "o", "u", "ai", "ea", "oo"]
+_CODAS = ["", "n", "m", "r", "l", "s", "t", "k", "nd", "st"]
+
+N_NOUNS = 160
+N_VERBS = 96
+N_ADJS = 64
+N_ADVS = 32
+N_NAMES = 48
+FUNCTION_WORDS = [
+    "the", "a", "and", "but", "then", "while", "near", "inside", "with",
+    "yes", "no", "does", "did", "will", "?", ".", ":", ",", "who", "what",
+    "which", "because", "so", "very", "quite", "not", "also", "again",
+    "question", "answer", "fact", "story", "recall", "it", "they", "is",
+]
+
+N_AGREE_CLASSES = 4  # noun animacy classes; each licenses half the verbs
+N_TOPICS = 8
+
+
+def _make_words(rng: np.random.Generator, n: int, suffix: str) -> list[str]:
+    """Generate ``n`` distinct pronounceable words, tagged by POS suffix."""
+    words: set[str] = set()
+    out: list[str] = []
+    while len(out) < n:
+        syll = lambda: (_ONSETS[rng.integers(len(_ONSETS))]
+                        + _NUCLEI[rng.integers(len(_NUCLEI))]
+                        + _CODAS[rng.integers(len(_CODAS))])
+        w = syll() + (syll() if rng.random() < 0.6 else "")
+        w = w + suffix
+        if w not in words and w not in FUNCTION_WORDS:
+            words.add(w)
+            out.append(w)
+    return out
+
+
+@dataclasses.dataclass
+class Vocab:
+    words: list[str]                  # id -> string, specials first
+    word_to_id: dict[str, int]
+    nouns: np.ndarray                 # token ids
+    verbs: np.ndarray
+    adjs: np.ndarray
+    advs: np.ndarray
+    names: np.ndarray
+    func: dict[str, int]              # function word -> id
+
+    @property
+    def size(self) -> int:
+        return len(self.words)
+
+    def encode(self, text: str) -> list[int]:
+        return [self.word_to_id.get(w, UNK) for w in text.split()]
+
+    def decode(self, ids) -> str:
+        return " ".join(self.words[int(i)] for i in ids)
+
+
+def build_vocab(seed: int = 7) -> Vocab:
+    rng = np.random.default_rng(seed)
+    nouns = _make_words(rng, N_NOUNS, "")
+    verbs = _make_words(rng, N_VERBS, "s")
+    adjs = _make_words(rng, N_ADJS, "y")
+    advs = _make_words(rng, N_ADVS, "ly")
+    names = _make_words(rng, N_NAMES, "o")
+    words = list(SPECIALS) + FUNCTION_WORDS + nouns + verbs + adjs + advs + names
+    assert len(words) == len(set(words)), "vocabulary collision"
+    w2i = {w: i for i, w in enumerate(words)}
+    return Vocab(
+        words=words,
+        word_to_id=w2i,
+        nouns=np.array([w2i[w] for w in nouns]),
+        verbs=np.array([w2i[w] for w in verbs]),
+        adjs=np.array([w2i[w] for w in adjs]),
+        advs=np.array([w2i[w] for w in advs]),
+        names=np.array([w2i[w] for w in names]),
+        func={w: w2i[w] for w in FUNCTION_WORDS},
+    )
+
+
+# ----------------------------------------------------------------------------
+# Grammar
+# ----------------------------------------------------------------------------
+
+
+class Grammar:
+    """Deterministic agreement structure + topic-conditional distributions."""
+
+    def __init__(self, vocab: Vocab, seed: int = 11):
+        self.v = vocab
+        rng = np.random.default_rng(seed)
+        # Noun -> agreement class (round-robin so classes are balanced).
+        self.noun_class = np.arange(N_NOUNS) % N_AGREE_CLASSES
+        # Class -> licensed verbs (each class licenses a distinct half).
+        perm = rng.permutation(N_VERBS)
+        halves = np.split(perm, 2)
+        self.class_verbs = [
+            np.sort(np.concatenate([halves[0], halves[1]])[: N_VERBS // 2]),
+        ]
+        # Build per-class verb subsets: overlapping windows over a permutation.
+        self.class_verbs = []
+        win = N_VERBS // 2
+        for c in range(N_AGREE_CLASSES):
+            start = (c * N_VERBS // N_AGREE_CLASSES) % N_VERBS
+            idx = [(start + j) % N_VERBS for j in range(win)]
+            self.class_verbs.append(np.sort(perm[idx]))
+        # Topic -> noun weights (Zipf base reweighted by topic affinity).
+        zipf = 1.0 / np.arange(1, N_NOUNS + 1) ** 0.8
+        self.topic_noun_w = np.empty((N_TOPICS, N_NOUNS))
+        for t in range(N_TOPICS):
+            boost = np.where(np.arange(N_NOUNS) % N_TOPICS == t, 6.0, 1.0)
+            w = zipf * boost
+            self.topic_noun_w[t] = w / w.sum()
+        self.verb_w = 1.0 / np.arange(1, N_VERBS + 1) ** 0.7
+        self.adj_w = 1.0 / np.arange(1, N_ADJS + 1) ** 0.9
+        self.adv_w = 1.0 / np.arange(1, N_ADVS + 1) ** 0.9
+
+    # -- draws ---------------------------------------------------------------
+    def draw_noun(self, rng, topic: int) -> int:
+        i = rng.choice(N_NOUNS, p=self.topic_noun_w[topic])
+        return int(self.v.nouns[i])
+
+    def noun_index(self, noun_id: int) -> int:
+        return int(np.where(self.v.nouns == noun_id)[0][0])
+
+    def draw_verb_for(self, rng, noun_id: int) -> int:
+        cls = self.noun_class[self.noun_index(noun_id)]
+        allowed = self.class_verbs[cls]
+        w = self.verb_w[allowed]
+        i = rng.choice(len(allowed), p=w / w.sum())
+        return int(self.v.verbs[allowed[i]])
+
+    def draw_verb_not_for(self, rng, noun_id: int) -> int:
+        cls = self.noun_class[self.noun_index(noun_id)]
+        allowed = set(self.class_verbs[cls].tolist())
+        bad = np.array([i for i in range(N_VERBS) if i not in allowed])
+        w = self.verb_w[bad]
+        i = rng.choice(len(bad), p=w / w.sum())
+        return int(self.v.verbs[bad[i]])
+
+    def verb_agrees(self, noun_id: int, verb_id: int) -> bool:
+        cls = self.noun_class[self.noun_index(noun_id)]
+        vi = int(np.where(self.v.verbs == verb_id)[0][0])
+        return vi in set(self.class_verbs[cls].tolist())
+
+    def draw_adj(self, rng) -> int:
+        i = rng.choice(N_ADJS, p=self.adj_w / self.adj_w.sum())
+        return int(self.v.adjs[i])
+
+    def draw_adv(self, rng) -> int:
+        i = rng.choice(N_ADVS, p=self.adv_w / self.adv_w.sum())
+        return int(self.v.advs[i])
+
+
+# ----------------------------------------------------------------------------
+# Sentence / document generation
+# ----------------------------------------------------------------------------
+
+
+class CorpusGen:
+    def __init__(self, vocab: Vocab, grammar: Grammar, seed: int):
+        self.v = vocab
+        self.g = grammar
+        self.rng = np.random.default_rng(seed)
+        self.f = vocab.func
+
+    def sentence(self, topic: int) -> list[int]:
+        """One declarative sentence as token ids (ends with '.')."""
+        r = self.rng
+        f = self.f
+        n1 = self.g.draw_noun(r, topic)
+        verb = self.g.draw_verb_for(r, n1)
+        kind = r.random()
+        toks = [f["the"]]
+        if r.random() < 0.35:
+            toks.append(self.g.draw_adj(r))
+        toks += [n1, verb]
+        if kind < 0.55:  # transitive
+            toks.append(f["the"])
+            if r.random() < 0.25:
+                toks.append(self.g.draw_adj(r))
+            toks.append(self.g.draw_noun(r, topic))
+        elif kind < 0.8:  # adverbial
+            toks.append(self.g.draw_adv(r))
+        if r.random() < 0.2:
+            toks += [f["and"], self.g.draw_verb_for(r, n1),
+                     f["the"], self.g.draw_noun(r, topic)]
+        toks.append(f["."])
+        return toks
+
+    def qa_line(self, topic: int) -> list[int]:
+        """'question : does the NOUN VERB ? answer : yes/no .'"""
+        r = self.rng
+        f = self.f
+        n = self.g.draw_noun(r, topic)
+        if r.random() < 0.5:
+            v = self.g.draw_verb_for(r, n)
+            ans = f["yes"]
+        else:
+            v = self.g.draw_verb_not_for(r, n)
+            ans = f["no"]
+        return [f["question"], f[":"], f["does"], f["the"], n, v, f["?"],
+                f["answer"], f[":"], ans, f["."]]
+
+    def recall_line(self, topic: int) -> list[int]:
+        """'fact : the N1 V the N2 . recall : the N1 V the N2 .'"""
+        r = self.rng
+        f = self.f
+        n1 = self.g.draw_noun(r, topic)
+        v = self.g.draw_verb_for(r, n1)
+        n2 = self.g.draw_noun(r, topic)
+        body = [f["the"], n1, v, f["the"], n2, f["."]]
+        return [f["fact"], f[":"]] + body + [f["recall"], f[":"]] + body
+
+    def document(self) -> list[int]:
+        topic = int(self.rng.integers(N_TOPICS))
+        toks = [BOS]
+        n_lines = int(self.rng.integers(4, 10))
+        for _ in range(n_lines):
+            u = self.rng.random()
+            if u < 0.62:
+                toks += self.sentence(topic)
+            elif u < 0.84:
+                toks += self.qa_line(topic)
+            else:
+                toks += self.recall_line(topic)
+        toks.append(EOS)
+        return toks
+
+    def stream(self, n_tokens: int) -> np.ndarray:
+        out: list[int] = []
+        while len(out) < n_tokens:
+            out += self.document()
+        return np.array(out[:n_tokens], dtype=np.uint16)
+
+
+# ----------------------------------------------------------------------------
+# Downstream tasks
+# ----------------------------------------------------------------------------
+
+
+def _mc_item(context: list[int], options: list[list[int]], answer: int,
+             task: str) -> dict:
+    return {"task": task, "context": context, "options": options,
+            "answer": answer}
+
+
+class TaskGen:
+    """Generates the six downstream task sets (token-id level)."""
+
+    def __init__(self, vocab: Vocab, grammar: Grammar, seed: int):
+        self.v = vocab
+        self.g = grammar
+        self.rng = np.random.default_rng(seed)
+        self.f = vocab.func
+        self.cg = CorpusGen(vocab, grammar, seed + 1)
+
+    def _random_words(self, n: int) -> list[int]:
+        pools = np.concatenate([self.v.adjs, self.v.advs, self.v.names])
+        return [int(pools[self.rng.integers(len(pools))]) for _ in range(n)]
+
+    def arc_easy(self) -> dict:
+        """Continuation choice; distractors are wrong-POS random words."""
+        topic = int(self.rng.integers(N_TOPICS))
+        n = self.g.draw_noun(self.rng, topic)
+        v = self.g.draw_verb_for(self.rng, n)
+        ctx = [BOS, self.f["the"], n]
+        options = [[v]] + [[w] for w in self._random_words(3)]
+        order = self.rng.permutation(4)
+        options = [options[i] for i in order]
+        return _mc_item(ctx, options, int(np.where(order == 0)[0][0]),
+                        "arc_easy")
+
+    def arc_challenge(self) -> dict:
+        """Continuation choice; distractors are non-agreeing verbs."""
+        topic = int(self.rng.integers(N_TOPICS))
+        n = self.g.draw_noun(self.rng, topic)
+        v = self.g.draw_verb_for(self.rng, n)
+        ds = []
+        while len(ds) < 3:
+            d = self.g.draw_verb_not_for(self.rng, n)
+            if d != v and d not in ds:
+                ds.append(d)
+        options = [[v]] + [[d] for d in ds]
+        order = self.rng.permutation(4)
+        options = [options[i] for i in order]
+        ctx = [BOS, self.f["the"], n]
+        return _mc_item(ctx, options, int(np.where(order == 0)[0][0]),
+                        "arc_challenge")
+
+    def lambada(self) -> dict:
+        """Recall-style passage; predict the exact final word."""
+        topic = int(self.rng.integers(N_TOPICS))
+        line = self.cg.recall_line(topic)
+        # final token before '.': strip trailing '.' then target is last tok
+        assert line[-1] == self.f["."]
+        ctx = [BOS] + line[:-2]
+        target = line[-2]
+        return {"task": "lambada", "context": ctx, "options": [[target]],
+                "answer": 0}
+
+    def piqa(self) -> dict:
+        """Two sentences, one violating agreement; pick the plausible one."""
+        topic = int(self.rng.integers(N_TOPICS))
+        n = self.g.draw_noun(self.rng, topic)
+        good = [self.f["the"], n, self.g.draw_verb_for(self.rng, n),
+                self.f["."]]
+        bad = [self.f["the"], n, self.g.draw_verb_not_for(self.rng, n),
+               self.f["."]]
+        options = [good, bad]
+        order = self.rng.permutation(2)
+        options = [options[i] for i in order]
+        return _mc_item([BOS], options, int(np.where(order == 0)[0][0]),
+                        "piqa")
+
+    def boolq(self) -> dict:
+        topic = int(self.rng.integers(N_TOPICS))
+        n = self.g.draw_noun(self.rng, topic)
+        agree = self.rng.random() < 0.5
+        v = (self.g.draw_verb_for(self.rng, n) if agree
+             else self.g.draw_verb_not_for(self.rng, n))
+        f = self.f
+        ctx = [BOS, f["question"], f[":"], f["does"], f["the"], n, v, f["?"],
+               f["answer"], f[":"]]
+        options = [[f["yes"]], [f["no"]]]
+        return _mc_item(ctx, options, 0 if agree else 1, "boolq")
+
+    def openbook(self) -> dict:
+        """Fact in context; 4-way recall of the object noun."""
+        topic = int(self.rng.integers(N_TOPICS))
+        f = self.f
+        n1 = self.g.draw_noun(self.rng, topic)
+        v = self.g.draw_verb_for(self.rng, n1)
+        n2 = self.g.draw_noun(self.rng, topic)
+        ctx = [BOS, f["fact"], f[":"], f["the"], n1, v, f["the"], n2, f["."],
+               f["recall"], f[":"], f["the"], n1, v, f["the"]]
+        ds = []
+        while len(ds) < 3:
+            d = self.g.draw_noun(self.rng, topic)
+            if d != n2 and d not in ds:
+                ds.append(d)
+        options = [[n2]] + [[d] for d in ds]
+        order = self.rng.permutation(4)
+        options = [options[i] for i in order]
+        return _mc_item(ctx, options, int(np.where(order == 0)[0][0]),
+                        "openbook")
+
+    def suite(self, n_per_task: int) -> list[dict]:
+        out = []
+        for gen in (self.arc_easy, self.arc_challenge, self.lambada,
+                    self.piqa, self.boolq, self.openbook):
+            for _ in range(n_per_task):
+                out.append(gen())
+        return out
+
+
+TASK_NAMES = ["arc_easy", "arc_challenge", "lambada", "piqa", "boolq",
+              "openbook"]
+
+
+# ----------------------------------------------------------------------------
+# Dataset bundle + export
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Dataset:
+    vocab: Vocab
+    grammar: Grammar
+    train: np.ndarray       # uint16 token stream
+    val: np.ndarray
+    test: np.ndarray
+    calib: np.ndarray       # [n_calib, calib_len] token matrix
+    tasks: list[dict]
+    judge_prompts: list[list[int]]   # prompts for the AlpacaEval-style judge
+
+
+def build_dataset(train_tokens: int = 1_500_000,
+                  val_tokens: int = 32_768,
+                  test_tokens: int = 49_152,
+                  n_calib: int = 32,
+                  calib_len: int = 96,
+                  n_per_task: int = 200,
+                  n_judge: int = 100,
+                  seed: int = 1234) -> Dataset:
+    vocab = build_vocab()
+    grammar = Grammar(vocab)
+    train = CorpusGen(vocab, grammar, seed).stream(train_tokens)
+    val = CorpusGen(vocab, grammar, seed + 1).stream(val_tokens)
+    test = CorpusGen(vocab, grammar, seed + 2).stream(test_tokens)
+    calib_stream = CorpusGen(vocab, grammar, seed + 3).stream(
+        n_calib * calib_len)
+    calib = calib_stream.reshape(n_calib, calib_len)
+    tasks = TaskGen(vocab, grammar, seed + 4).suite(n_per_task)
+    # Judge prompts: short contexts the engine will continue from.
+    jg = CorpusGen(vocab, grammar, seed + 5)
+    judge_prompts = []
+    for _ in range(n_judge):
+        topic = int(jg.rng.integers(N_TOPICS))
+        sent = jg.sentence(topic)
+        judge_prompts.append([BOS] + sent[: max(3, len(sent) // 2)])
+    return Dataset(vocab, grammar, train, val, test, calib, tasks,
+                   judge_prompts)
+
+
+def export_dataset(ds: Dataset, out_dir: str) -> None:
+    """Write data artifacts consumed by the rust layer."""
+    os.makedirs(out_dir, exist_ok=True)
+    ds.train.tofile(os.path.join(out_dir, "train.u16"))
+    ds.val.tofile(os.path.join(out_dir, "val.u16"))
+    ds.test.tofile(os.path.join(out_dir, "test.u16"))
+    ds.calib.astype(np.uint16).tofile(os.path.join(out_dir, "calib.u16"))
+    with open(os.path.join(out_dir, "vocab.json"), "w") as fh:
+        json.dump({"words": ds.vocab.words,
+                   "specials": {"pad": PAD, "bos": BOS, "eos": EOS,
+                                "unk": UNK}}, fh)
+    with open(os.path.join(out_dir, "tasks.json"), "w") as fh:
+        json.dump({"tasks": ds.tasks, "names": TASK_NAMES}, fh)
+    with open(os.path.join(out_dir, "judge_prompts.json"), "w") as fh:
+        json.dump({"prompts": ds.judge_prompts}, fh)
+    meta = {"n_calib": int(ds.calib.shape[0]),
+            "calib_len": int(ds.calib.shape[1]),
+            "vocab_size": ds.vocab.size}
+    with open(os.path.join(out_dir, "meta.json"), "w") as fh:
+        json.dump(meta, fh)

@@ -1,0 +1,3 @@
+from .lqer_linear import lqer_linear  # noqa: F401
+from .mxint import mxint_quant_act_pallas, mxint_quant_weight_pallas  # noqa: F401
+from .intq import int_quant_per_token_pallas  # noqa: F401

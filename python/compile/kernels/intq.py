@@ -1,0 +1,47 @@
+"""Per-token symmetric fixed-point activation quantization as a Pallas
+kernel (the activation side of the INTx w&a baselines, e.g. W4A8 g128).
+
+Each token (row) shares one FP16 scale = amax / (2^(b-1) - 1); elements
+round to b-bit signed integers.  The grid walks row tiles; scales live in
+VMEM next to the tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _intq_kernel(x_ref, o_ref, *, bits: int):
+    x = x_ref[...]
+    qmax = 2.0 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    o_ref[...] = q * scale
+
+
+def _pick_rows(m: int, target: int = 256) -> int:
+    b = min(m, target)
+    while m % b != 0:
+        b -= 1
+    return b
+
+
+def int_quant_per_token_pallas(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    shape = x.shape
+    x2 = jnp.asarray(x, jnp.float32).reshape(-1, shape[-1])
+    m, n = x2.shape
+    bm = _pick_rows(m)
+    out = pl.pallas_call(
+        functools.partial(_intq_kernel, bits=bits),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x2)
+    return out.reshape(shape)

@@ -1,0 +1,121 @@
+"""The LQER inference pattern as a fused Pallas kernel (the paper's L1
+compute hot-spot).
+
+    Y = X W_q  +  (X A_k) B_k          (paper Eq. 9 / Eq. 12)
+
+Hardware adaptation (DESIGN.md section 5).  The paper runs the dense
+low-precision GEMM and the two skinny high-precision GEMMs as *parallel*
+streams on GPU / parallel PE banks on FPGA.  On TPU the natural analogue is
+to FUSE them into one kernel so the X row-panel is moved HBM->VMEM exactly
+once and feeds both the W_q panel (MXU, the big matmul) and the A_k panel
+(the skinny correction):
+
+  grid = (M/bm, N/bn); at step (i, j) VMEM holds
+      x   : (bm, K)    -- the shared row panel
+      wq  : (K, bn)    -- low-precision weight panel
+      ak  : (K, r)     -- low-rank left factor (whole, r is small)
+      bk  : (r, bn)    -- low-rank right factor panel
+      out : (bm, bn)
+
+  out = x @ wq + (x @ ak) @ bk
+
+VMEM budget per step (f32, worst case in this repo: K=768, bm=bn=128,
+r=256): 128*768 + 768*128 + 768*256 + 256*128 + 128*128 floats
+= 1.77 MiB << 16 MiB, leaving room for double buffering; for the paper's
+OPT-175B shapes (K=12288, r=32) the same schedule holds with bk-tiling of
+K.  The extra multiplies of the correction are (m+n)*k vs m*n for the main
+GEMM -- the paper's ~0.01*k% overhead formula -- so MXU utilization is
+dominated by the W_q panel.
+
+``interpret=True`` everywhere: the CPU PJRT backend cannot execute Mosaic
+custom-calls, so the kernel is lowered through the Pallas interpreter into
+plain HLO (numerically identical; see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, target: int = 128) -> int:
+    """Largest divisor of n that is <= target (tile sizes must tile n)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _kernel_lowrank(x_ref, wq_ref, ak_ref, bk_ref, o_ref):
+    x = x_ref[...]
+    y = jnp.dot(x, wq_ref[...], preferred_element_type=jnp.float32)
+    p = jnp.dot(x, ak_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = y + jnp.dot(p, bk_ref[...],
+                             preferred_element_type=jnp.float32)
+
+
+def _kernel_plain(x_ref, wq_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], wq_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def lqer_linear(x: jnp.ndarray, wq: jnp.ndarray,
+                ak: jnp.ndarray | None = None,
+                bk: jnp.ndarray | None = None,
+                block_m: int = 128, block_n: int = 128) -> jnp.ndarray:
+    """Apply the LQER linear pattern to ``x`` of shape (..., K).
+
+    wq: (K, N) effective (already fake-quantized) weight.
+    ak: (K, r) / bk: (r, N) low-rank error reconstruction, or None.
+    """
+    orig_shape = x.shape
+    k_in = orig_shape[-1]
+    n = wq.shape[1]
+    assert wq.shape[0] == k_in
+    x2 = x.reshape(-1, k_in)
+    m = x2.shape[0]
+    # Perf (EXPERIMENTS.md §Perf-L1): decode-path calls have tiny M
+    # (= batch size).  Tiling those like a big GEMM buys nothing and pays
+    # one XLA loop iteration per output tile; a single wide tile keeps the
+    # whole output row panel in one grid step (VMEM: K*N f32 <= 590 KiB at
+    # this repo's largest shapes, far under the 16 MiB budget).
+    if m <= 32:
+        bm = m
+        bn = _pick_block(n, 512)
+    else:
+        bm = _pick_block(m, block_m)
+        bn = _pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+
+    has_lowrank = ak is not None and bk is not None and ak.shape[1] > 0
+    if has_lowrank:
+        r = ak.shape[1]
+        out = pl.pallas_call(
+            _kernel_lowrank,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, k_in), lambda i, j: (i, 0)),
+                pl.BlockSpec((k_in, bn), lambda i, j: (0, j)),
+                pl.BlockSpec((k_in, r), lambda i, j: (0, 0)),
+                pl.BlockSpec((r, bn), lambda i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(x2, wq, ak, bk)
+    else:
+        out = pl.pallas_call(
+            _kernel_plain,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, k_in), lambda i, j: (i, 0)),
+                pl.BlockSpec((k_in, bn), lambda i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(x2, wq)
+    return out.reshape(*orig_shape[:-1], n)

@@ -1,0 +1,92 @@
+"""MXINT fake-quantization as Pallas kernels.
+
+Two variants, matching the paper's block orientations (section 4.1):
+
+  * activations: block [1, 16] -- 16 consecutive channels of one token
+    share an 8-bit exponent;
+  * weights:     block [16, 1] -- 16 consecutive input-features of one
+    output column share a 4-bit exponent.
+
+Both reduce to the same 1-D kernel over a (rows, cols) view whose last
+axis is the blocked one; the weight variant transposes in and out.
+
+The kernel walks a 1-D grid of row tiles; each step owns a
+(tile_rows, cols) VMEM block, reshapes it to (tile_rows, cols/16, 16),
+and applies shared-exponent rounding:
+
+    E    = clamp(floor(log2(max |block|)), exp_min, exp_max)
+    step = 2^(E - m + 2)
+    out  = clamp(round_half_even(x / step), -2^(m-1), 2^(m-1)-1) * step
+
+floor(log2(.)) is computed from the f32 bit pattern (frexp semantics), so
+the result is exact and matches the rust twin (rust/src/quant/mxint.rs)
+bit-for-bit -- verified by the cross-language golden vectors.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mxint_kernel(x_ref, o_ref, *, elem_bits: int, exp_bits: int,
+                  block: int):
+    x = x_ref[...]
+    rows, cols = x.shape
+    xb = x.reshape(rows, cols // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    _, e = jnp.frexp(amax)
+    e = e - 1  # floor(log2 amax) for amax > 0
+    exp_min = -(2 ** (exp_bits - 1))
+    exp_max = 2 ** (exp_bits - 1) - 1
+    e = jnp.where(amax > 0, e, exp_min)
+    e = jnp.clip(e, exp_min, exp_max).astype(jnp.float32)
+    step = jnp.exp2(e - (elem_bits - 2))
+    qmin = -(2.0 ** (elem_bits - 1))
+    qmax = 2.0 ** (elem_bits - 1) - 1
+    q = jnp.clip(jnp.round(xb / step), qmin, qmax)
+    o_ref[...] = (q * step).reshape(rows, cols)
+
+
+def _pick_rows(m: int, target: int = 256) -> int:
+    b = min(m, target)
+    while m % b != 0:
+        b -= 1
+    return b
+
+
+def _mxint_2d(x2: jnp.ndarray, elem_bits: int, exp_bits: int,
+              block: int) -> jnp.ndarray:
+    m, n = x2.shape
+    assert n % block == 0, f"last dim {n} not divisible by block {block}"
+    bm = _pick_rows(m)
+    kern = functools.partial(_mxint_kernel, elem_bits=elem_bits,
+                             exp_bits=exp_bits, block=block)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x2)
+
+
+def mxint_quant_act_pallas(x: jnp.ndarray, elem_bits: int,
+                           exp_bits: int = 8, block: int = 16) -> jnp.ndarray:
+    """Blocks of [1, block] along the channel (last) axis."""
+    shape = x.shape
+    x2 = jnp.asarray(x, jnp.float32).reshape(-1, shape[-1])
+    return _mxint_2d(x2, elem_bits, exp_bits, block).reshape(shape)
+
+
+def mxint_quant_weight_pallas(w: jnp.ndarray, elem_bits: int,
+                              exp_bits: int = 4,
+                              block: int = 16) -> jnp.ndarray:
+    """Blocks of [block, 1] along input features (axis 0 of (in, out))."""
+    assert w.ndim == 2
+    wt = jnp.asarray(w, jnp.float32).T
+    return _mxint_2d(wt, elem_bits, exp_bits, block).T

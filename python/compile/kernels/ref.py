@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+The quantization oracles are the shared implementations in
+``compile.quant.formats`` (also the source of the rust golden vectors);
+``lqer_linear_ref`` is the mathematical definition of the paper's
+inference pattern (Eq. 9 / Eq. 12):
+
+    Y = X W_q + (X A_k) B_k
+
+pytest (python/tests/test_kernels.py) asserts each Pallas kernel matches
+its oracle to float32 tolerance across hypothesis-swept shapes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..quant import formats
+
+
+def mxint_quant_act_ref(x, elem_bits: int, exp_bits: int = 8,
+                        block: int = 16):
+    return formats.mxint_quant_act(x, elem_bits, exp_bits, block)
+
+
+def mxint_quant_weight_ref(w, elem_bits: int, exp_bits: int = 4,
+                           block: int = 16):
+    return formats.mxint_quant_weight(w, elem_bits, exp_bits, block)
+
+
+def int_quant_per_token_ref(x, bits: int):
+    return formats.int_quant_per_token(x, bits)
+
+
+def lqer_linear_ref(x: jnp.ndarray, wq: jnp.ndarray,
+                    ak: jnp.ndarray | None,
+                    bk: jnp.ndarray | None) -> jnp.ndarray:
+    """Y = X W_q + (X A_k) B_k   (LQER inference pattern, paper Eq. 9)."""
+    y = jnp.dot(x, wq, preferred_element_type=jnp.float32)
+    if ak is not None and bk is not None and ak.shape[1] > 0:
+        y = y + jnp.dot(jnp.dot(x, ak, preferred_element_type=jnp.float32),
+                        bk, preferred_element_type=jnp.float32)
+    return y

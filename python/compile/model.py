@@ -1,0 +1,361 @@
+"""L2: OPT-style decoder-only transformer in pure JAX.
+
+Every linear layer in the transformer blocks runs the paper's LQER
+inference pattern via the fused L1 Pallas kernel
+(``kernels.lqer_linear``):
+
+    Y = Xq W_q + (Xq A_k) B_k
+
+where Xq is the (optionally fake-quantized) activation and (A_k, B_k) is
+the low-rank error reconstruction.  For non-LQER methods the same graph is
+lowered without the low-rank branch; the *weights are HLO parameters*, so
+one lowered graph serves every quantization method that shares
+(activation mode, rank) -- see DESIGN.md section 3.
+
+Three entry points are lowered to HLO text for the rust runtime:
+
+  score(params, tokens[B,T])              -> logits[B,T,V]
+  prefill(params, tokens[B,T])            -> logits[B,T,V], k/v caches
+  decode(params, token[B], kc, vc, pos[B])-> logits[B,V], k_new, v_new
+
+The decode step is cache-stationary: rust owns the KV cache buffers and
+writes (k_new, v_new) into position pos after each step, so only the tiny
+per-step tensors cross the PJRT boundary as outputs.
+
+Activation modes (``act``):
+  "none"  : f32 activations (the FP16 baseline and w-only setups)
+  "mx8"/"mx6": MXINT fake-quant, 8-bit shared exponent, block [1,16]
+  "int8"/"int6": per-token symmetric fixed point, with an optional
+      per-channel smoothing vector (SmoothQuant) and an outlier mask
+      (LLM.int4(): masked channels stay high-precision) -- both are
+      parameters, defaulting to ones.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import lqer_linear
+from .quant import formats
+
+# ----------------------------------------------------------------------------
+# Configuration
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d: int          # embedding dim
+    layers: int
+    heads: int
+    ffn: int
+    t_max: int      # maximum positions
+
+    @property
+    def head_dim(self) -> int:
+        return self.d // self.heads
+
+    def param_count(self) -> int:
+        d, f = self.d, self.ffn
+        per_layer = 4 * d * d + 2 * d * f + 4 * d + f + d + 4 * d
+        return (self.vocab * d + self.t_max * d
+                + self.layers * per_layer + 2 * d)
+
+
+MODEL_FAMILY = {
+    # name        d    L  H  ffn
+    "opt-tiny": dict(d=64, layers=2, heads=2, ffn=256),
+    "opt-micro": dict(d=128, layers=4, heads=4, ffn=512),
+    "opt-mini": dict(d=192, layers=6, heads=6, ffn=768),
+    "opt-small": dict(d=256, layers=8, heads=8, ffn=1024),
+}
+
+LINEAR_NAMES = ["wq", "wk", "wv", "wo", "fc1", "fc2"]
+
+
+def make_config(name: str, vocab: int, t_max: int = 160) -> ModelConfig:
+    spec = MODEL_FAMILY[name]
+    return ModelConfig(name=name, vocab=vocab, t_max=t_max, **spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphVariant:
+    """One lowered-HLO graph shape: activation mode x low-rank rank."""
+    act: str          # none | mx8 | mx6 | int8 | int6
+    rank: int         # 0 = no low-rank branch; >0 = padded rank of A/B
+
+    @property
+    def tag(self) -> str:
+        return f"act-{self.act}_k{self.rank}"
+
+    @property
+    def act_bits(self) -> int:
+        return {"none": 16, "mx8": 8, "mx6": 6,
+                "int8": 8, "int6": 6}[self.act]
+
+    @property
+    def needs_smooth(self) -> bool:
+        return self.act in ("int8", "int6")
+
+
+# ----------------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """FP32 initialization (GPT-2 style scaled normal)."""
+    rng = np.random.default_rng(seed)
+    d, f = cfg.d, cfg.ffn
+
+    def nrm(*shape, scale):
+        return rng.normal(0.0, scale, size=shape).astype(np.float32)
+
+    params: dict[str, Any] = {
+        "embed": nrm(cfg.vocab, d, scale=0.05),
+        "pos": nrm(cfg.t_max, d, scale=0.02),
+        "ln_f": {"scale": np.ones(d, np.float32),
+                 "bias": np.zeros(d, np.float32)},
+        "layers": [],
+    }
+    resid = 1.0 / np.sqrt(2 * cfg.layers)
+    for _ in range(cfg.layers):
+        layer = {
+            "ln1": {"scale": np.ones(d, np.float32),
+                    "bias": np.zeros(d, np.float32)},
+            "ln2": {"scale": np.ones(d, np.float32),
+                    "bias": np.zeros(d, np.float32)},
+            "wq": {"w": nrm(d, d, scale=0.08)},
+            "wk": {"w": nrm(d, d, scale=0.08)},
+            "wv": {"w": nrm(d, d, scale=0.08)},
+            "wo": {"w": nrm(d, d, scale=0.08 * resid)},
+            "fc1": {"w": nrm(d, f, scale=0.08)},
+            "fc2": {"w": nrm(f, d, scale=0.08 * resid)},
+            "bq": np.zeros(d, np.float32), "bk": np.zeros(d, np.float32),
+            "bv": np.zeros(d, np.float32), "bo": np.zeros(d, np.float32),
+            "b1": np.zeros(f, np.float32), "b2": np.zeros(d, np.float32),
+        }
+        params["layers"].append(layer)
+    return params
+
+
+def attach_variant_params(params: dict, cfg: ModelConfig,
+                          gv: GraphVariant) -> dict:
+    """Extend an FP32 param tree with the per-linear tensors a graph
+    variant expects (identity defaults).  The PTQ pipeline overwrites
+    these with real factors / scales / masks."""
+    out = jax.tree_util.tree_map(lambda x: x, params)
+    for layer in out["layers"]:
+        for name in LINEAR_NAMES:
+            lin = dict(layer[name])
+            m, n = lin["w"].shape
+            if gv.rank > 0:
+                lin.setdefault("a", np.zeros((m, gv.rank), np.float32))
+                lin.setdefault("b", np.zeros((gv.rank, n), np.float32))
+            else:
+                lin.pop("a", None)
+                lin.pop("b", None)
+            if gv.needs_smooth:
+                lin.setdefault("smooth", np.ones(m, np.float32))
+                lin.setdefault("actmask", np.ones(m, np.float32))
+            else:
+                lin.pop("smooth", None)
+                lin.pop("actmask", None)
+            layer[name] = lin
+    return out
+
+
+def param_specs(params):
+    """Shape/dtype specs for lowering (weights become HLO parameters)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), jnp.float32), params)
+
+
+def flatten_with_names(params) -> list[tuple[str, np.ndarray]]:
+    """Deterministic (name, array) list in jax tree-flatten order -- this
+    exact order is the HLO parameter order recorded in weights.bin."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path, simple=True, separator=".")
+        out.append((name, np.asarray(leaf, np.float32)))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Forward pieces
+# ----------------------------------------------------------------------------
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654
+                                     * (x + 0.044715 * x * x * x)))
+
+
+def _act_quant(x, gv: GraphVariant, lin: dict):
+    """Simulate the activation-side number format at a linear input."""
+    if gv.act == "none":
+        return x
+    if gv.act in ("mx8", "mx6"):
+        return formats.mxint_quant_act(x, gv.act_bits)
+    # int8 / int6: optional SmoothQuant division + LLM.int4() outlier mask.
+    xs = x / lin["smooth"]
+    xq = formats.int_quant_per_token(xs, gv.act_bits)
+    mask = lin["actmask"]
+    return mask * xq + (1.0 - mask) * xs
+
+
+def linear(x, lin: dict, gv: GraphVariant, collect=None, name: str = ""):
+    """One LQER linear: act-quant then the fused Pallas kernel."""
+    if collect is not None:
+        collect[name] = x
+    xq = _act_quant(x, gv, lin)
+    return lqer_linear(xq, lin["w"], lin.get("a"), lin.get("b"))
+
+
+def _split_heads(x, cfg: ModelConfig):
+    b, t, _ = x.shape
+    return x.reshape(b, t, cfg.heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x, cfg: ModelConfig):
+    b, h, t, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * hd)
+
+
+def block_full(h, layer, cfg: ModelConfig, gv: GraphVariant,
+               collect=None, idx: int = 0):
+    """One transformer block over a full (B, T, d) sequence (causal)."""
+    b, t, d = h.shape
+    x = layer_norm(h, layer["ln1"]["scale"], layer["ln1"]["bias"])
+    pre = f"layers.{idx}."
+    q = linear(x, layer["wq"], gv, collect, pre + "wq") + layer["bq"]
+    k = linear(x, layer["wk"], gv, collect, pre + "wk") + layer["bk"]
+    v = linear(x, layer["wv"], gv, collect, pre + "wv") + layer["bv"]
+    qh, kh, vh = (_split_heads(z, cfg) for z in (q, k, v))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / np.sqrt(cfg.head_dim)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(causal, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    ctx = _merge_heads(jnp.einsum("bhqk,bhkd->bhqd", att, vh), cfg)
+    h = h + linear(ctx, layer["wo"], gv, collect, pre + "wo") + layer["bo"]
+
+    x = layer_norm(h, layer["ln2"]["scale"], layer["ln2"]["bias"])
+    u = gelu(linear(x, layer["fc1"], gv, collect, pre + "fc1") + layer["b1"])
+    h = h + linear(u, layer["fc2"], gv, collect, pre + "fc2") + layer["b2"]
+    return h, (k, v)
+
+
+def score(params, tokens, cfg: ModelConfig, gv: GraphVariant,
+          collect=None):
+    """Full-sequence logits (perplexity / task scoring graph)."""
+    b, t = tokens.shape
+    h = params["embed"][tokens] + params["pos"][:t]
+    for i, layer in enumerate(params["layers"]):
+        h, _ = block_full(h, layer, cfg, gv, collect, i)
+    h = layer_norm(h, params["ln_f"]["scale"], params["ln_f"]["bias"])
+    return jnp.einsum("btd,vd->btv", h, params["embed"])
+
+
+def prefill(params, tokens, cfg: ModelConfig, gv: GraphVariant):
+    """Like score, but also returns per-layer K/V caches (L, B, T, d)."""
+    b, t = tokens.shape
+    h = params["embed"][tokens] + params["pos"][:t]
+    ks, vs = [], []
+    for i, layer in enumerate(params["layers"]):
+        h, (k, v) = block_full(h, layer, cfg, gv, None, i)
+        ks.append(k)
+        vs.append(v)
+    h = layer_norm(h, params["ln_f"]["scale"], params["ln_f"]["bias"])
+    logits = jnp.einsum("btd,vd->btv", h, params["embed"])
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode(params, token, k_cache, v_cache, pos, cfg: ModelConfig,
+           gv: GraphVariant):
+    """One decode step.
+
+    token:  (B,) int32 current tokens
+    k/v_cache: (L, B, T_max, d) -- positions < pos[b] are valid
+    pos:    (B,) int32 position of the current token
+    returns logits (B, V), k_new (L, B, d), v_new (L, B, d)
+    """
+    b = token.shape[0]
+    t_max = k_cache.shape[2]
+    h = params["embed"][token] + params["pos"][pos]  # (B, d)
+    h = h[:, None, :]                                # (B, 1, d)
+    k_news, v_news = [], []
+    for li, layer in enumerate(params["layers"]):
+        x = layer_norm(h, layer["ln1"]["scale"], layer["ln1"]["bias"])
+        q = linear(x, layer["wq"], gv) + layer["bq"]
+        k = linear(x, layer["wk"], gv) + layer["bk"]
+        v = linear(x, layer["wv"], gv) + layer["bv"]
+        k_news.append(k[:, 0, :])
+        v_news.append(v[:, 0, :])
+        qh = _split_heads(q, cfg)                        # (B, H, 1, hd)
+        kc = k_cache[li].reshape(b, t_max, cfg.heads, cfg.head_dim)
+        kc = kc.transpose(0, 2, 1, 3)                    # (B, H, T, hd)
+        vc = v_cache[li].reshape(b, t_max, cfg.heads, cfg.head_dim)
+        vc = vc.transpose(0, 2, 1, 3)
+        s_cache = (jnp.einsum("bhqd,bhkd->bhqk", qh, kc)
+                   / np.sqrt(cfg.head_dim))
+        valid = jnp.arange(t_max)[None, :] < pos[:, None]  # (B, T_max)
+        s_cache = jnp.where(valid[:, None, None, :], s_cache, -1e30)
+        kh = _split_heads(k, cfg)
+        vh = _split_heads(v, cfg)
+        s_self = (jnp.einsum("bhqd,bhkd->bhqk", qh, kh)
+                  / np.sqrt(cfg.head_dim))
+        s_all = jnp.concatenate([s_cache, s_self], axis=-1)
+        att = jax.nn.softmax(s_all, axis=-1)
+        ctx = (jnp.einsum("bhqk,bhkd->bhqd", att[..., :t_max], vc)
+               + jnp.einsum("bhqk,bhkd->bhqd", att[..., t_max:], vh))
+        ctx = _merge_heads(ctx, cfg)
+        h = h + linear(ctx, layer["wo"], gv) + layer["bo"]
+        x = layer_norm(h, layer["ln2"]["scale"], layer["ln2"]["bias"])
+        u = gelu(linear(x, layer["fc1"], gv) + layer["b1"])
+        h = h + linear(u, layer["fc2"], gv) + layer["b2"]
+    h = layer_norm(h, params["ln_f"]["scale"], params["ln_f"]["bias"])
+    logits = jnp.einsum("btd,vd->btv", h, params["embed"])[:, 0, :]
+    return logits, jnp.stack(k_news), jnp.stack(v_news)
+
+
+# ----------------------------------------------------------------------------
+# Training-time forward (plain f32, no Pallas -- keeps training fast)
+# ----------------------------------------------------------------------------
+
+
+def train_forward(params, tokens, cfg: ModelConfig):
+    """Plain f32 forward used by the trainer (jnp.dot, no fake quant)."""
+    b, t = tokens.shape
+    h = params["embed"][tokens] + params["pos"][:t]
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    for layer in params["layers"]:
+        x = layer_norm(h, layer["ln1"]["scale"], layer["ln1"]["bias"])
+        q = x @ layer["wq"]["w"] + layer["bq"]
+        k = x @ layer["wk"]["w"] + layer["bk"]
+        v = x @ layer["wv"]["w"] + layer["bv"]
+        qh, kh, vh = (_split_heads(z, cfg) for z in (q, k, v))
+        s = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / np.sqrt(cfg.head_dim)
+        s = jnp.where(causal, s, -1e30)
+        ctx = _merge_heads(
+            jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(s, axis=-1), vh),
+            cfg)
+        h = h + ctx @ layer["wo"]["w"] + layer["bo"]
+        x = layer_norm(h, layer["ln2"]["scale"], layer["ln2"]["bias"])
+        u = gelu(x @ layer["fc1"]["w"] + layer["b1"])
+        h = h + u @ layer["fc2"]["w"] + layer["b2"]
+    h = layer_norm(h, params["ln_f"]["scale"], params["ln_f"]["bias"])
+    return jnp.einsum("btd,vd->btv", h, params["embed"])

@@ -1,0 +1,1 @@
+from . import formats  # noqa: F401

@@ -1,0 +1,174 @@
+"""Number formats: MXINT (block floating point) and fixed-point group quant.
+
+These are the *fake-quantization* (quantize-dequantize) reference
+implementations in pure jnp.  They are used
+
+  * by the PTQ pipeline to produce effective weights on the quantization
+    grid (build time),
+  * inside the lowered L2 graphs to simulate low-precision activations on
+    the f32 CPU PJRT backend, and
+  * as the correctness oracle for the L1 Pallas kernels
+    (python/compile/kernels/*) and for the bit-exact rust twins
+    (rust/src/quant/*, via golden vectors).
+
+MXINT(e, m, B): a block of B numbers shares an e-bit exponent; each element
+is an m-bit (sign + m-1 magnitude) fixed-point mantissa.  Following the
+paper (section 4.1): activations use 8-bit shared exponents and block
+[1, 16] (along channels); weights and low-rank factors use 4-bit shared
+exponents and block [16, 1] (along input features).  "WxAy" refers to the
+element (mantissa) width.
+
+Quantization step within a block with shared exponent E:
+
+    step = 2^(E - m + 2)        # so the max magnitude ~2^(E+1) is covered
+    q    = clamp(round_half_even(x / step), -2^(m-1), 2^(m-1) - 1)
+    x_q  = q * step
+
+E = floor(log2(max|block|)) clamped to the e-bit two's complement range
+[-2^(e-1), 2^(e-1)-1].  All-zero blocks use E = exp_min.  This matches the
+rust implementation bit-for-bit (both use frexp for floor(log2(.)) and
+round-half-to-even).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _floor_log2(amax: jnp.ndarray) -> jnp.ndarray:
+    """floor(log2(amax)) for amax > 0, computed exactly via frexp."""
+    _, e = jnp.frexp(amax)
+    return e - 1  # amax = f * 2^e with f in [0.5, 1)
+
+
+def mxint_quant(x: jnp.ndarray, elem_bits: int, exp_bits: int,
+                block: int, axis: int = -1) -> jnp.ndarray:
+    """MXINT fake-quantization along ``axis`` with block size ``block``.
+
+    The axis length must be divisible by ``block`` (the model dims in this
+    repo are all multiples of 16).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    assert n % block == 0, f"axis len {n} not divisible by block {block}"
+    # Move target axis last, reshape to (..., n/block, block).
+    xm = jnp.moveaxis(x, axis, -1)
+    shape = xm.shape
+    xb = xm.reshape(*shape[:-1], n // block, block)
+
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    exp_min = -(2 ** (exp_bits - 1))
+    exp_max = 2 ** (exp_bits - 1) - 1
+    e = jnp.where(amax > 0, _floor_log2(amax), exp_min)
+    e = jnp.clip(e, exp_min, exp_max).astype(jnp.float32)
+
+    step = jnp.exp2(e - (elem_bits - 2))
+    qmin = -(2.0 ** (elem_bits - 1))
+    qmax = 2.0 ** (elem_bits - 1) - 1
+    q = jnp.clip(jnp.round(xb / step), qmin, qmax)
+    out = (q * step).reshape(shape)
+    return jnp.moveaxis(out, -1, axis)
+
+
+def mxint_quant_weight(w: jnp.ndarray, elem_bits: int,
+                       exp_bits: int = 4, block: int = 16) -> jnp.ndarray:
+    """Weight-side MXINT: blocks of [16, 1], i.e. along input features
+    (axis 0 of an (in, out) weight matrix)."""
+    return mxint_quant(w, elem_bits, exp_bits, block, axis=0)
+
+
+def mxint_quant_act(x: jnp.ndarray, elem_bits: int,
+                    exp_bits: int = 8, block: int = 16) -> jnp.ndarray:
+    """Activation-side MXINT: blocks of [1, 16], i.e. along channels
+    (last axis of a (tokens, channels) activation)."""
+    return mxint_quant(x, elem_bits, exp_bits, block, axis=-1)
+
+
+def effective_group(n: int, group: int) -> int:
+    """Largest divisor of n that is <= group (ragged tail groups are not
+    modeled; layer dims in this repo always admit a near-target divisor)."""
+    g = min(group, n)
+    while n % g != 0:
+        g -= 1
+    return g
+
+
+def int_quant_group(w: jnp.ndarray, bits: int, group: int = 128,
+                    axis: int = 0) -> jnp.ndarray:
+    """Symmetric fixed-point group quantization (the GPTQ/AWQ 'INTb gG'
+    configuration).  Each group of ``group`` values along ``axis`` shares
+    an FP16 scale = amax / (2^(b-1) - 1)."""
+    w = jnp.asarray(w, jnp.float32)
+    axis = axis % w.ndim
+    n = w.shape[axis]
+    g = effective_group(n, group)
+    wm = jnp.moveaxis(w, axis, -1)
+    shape = wm.shape
+    wb = wm.reshape(*shape[:-1], n // g, g)
+    qmax = 2.0 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(wb), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    # FP16 scale, as in deployed kernels.
+    scale = scale.astype(jnp.float16).astype(jnp.float32)
+    q = jnp.clip(jnp.round(wb / scale), -qmax - 1, qmax)
+    out = (q * scale).reshape(shape)
+    return jnp.moveaxis(out, -1, axis)
+
+
+def int_quant_per_token(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Symmetric per-token (last-axis) fixed-point activation quant."""
+    x = jnp.asarray(x, jnp.float32)
+    qmax = 2.0 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return q * scale
+
+
+# ----------------------------------------------------------------------------
+# Memory accounting (the "Avg. w bits" column of Table 3)
+# ----------------------------------------------------------------------------
+
+
+def mxint_avg_bits(elem_bits: int, exp_bits: int, block: int) -> float:
+    """Average bits per element of an MXINT tensor."""
+    return elem_bits + exp_bits / block
+
+
+def int_group_avg_bits(bits: int, group: int, scale_bits: int = 16) -> float:
+    """Average bits per element of group-quantized fixed point."""
+    return bits + scale_bits / group
+
+
+def lqer_avg_bits(m: int, n: int, k: int, w_bits_avg: float,
+                  lowrank_bits_avg: float) -> float:
+    """Average weight bits of an LQER layer: the W_q matrix plus the two
+    rank-k factors, amortized over the m*n nominal weights (paper, App. D)."""
+    total = m * n * w_bits_avg + (m + n) * k * lowrank_bits_avg
+    return total / (m * n)
+
+
+# ----------------------------------------------------------------------------
+# Numpy twins (exact, for golden-vector generation)
+# ----------------------------------------------------------------------------
+
+
+def mxint_quant_np(x: np.ndarray, elem_bits: int, exp_bits: int,
+                   block: int, axis: int = -1) -> np.ndarray:
+    out = np.asarray(
+        mxint_quant(jnp.asarray(x), elem_bits, exp_bits, block, axis))
+    return out
+
+
+def int_quant_group_np(w: np.ndarray, bits: int, group: int = 128,
+                       axis: int = 0) -> np.ndarray:
+    return np.asarray(int_quant_group(jnp.asarray(w), bits, group, axis))
+
+
+@functools.lru_cache(maxsize=None)
+def format_name(kind: str, bits: int) -> str:
+    return f"{kind.upper()}{bits}"

@@ -1,0 +1,128 @@
+"""LQER / L2QER: low-rank quantization error reconstruction (paper sec. 3).
+
+Given a trained weight W (in_features x out_features), a quantizer q(.),
+and (for L2QER) an activation-induced diagonal scale S:
+
+  LQER  (sec 3.1):   E_q = W - q(W);  SVD(E_q)   -> A_k = U_k, B_k = S_k V_k^T
+  L2QER (sec 3.2):   SVD(S E_q) -> A_k = S^-1 U'_k, B_k = S'_k V'_k^T
+
+The low-rank factors are themselves quantized to the "high precision"
+format (8-bit MXINT by default, matching the paper's (b_l, b_h) pairs).
+
+Shape convention: the paper writes X (t x m) @ W (m x n); our weights are
+stored (in_features m, out_features n), so S scales E_q's *rows* (input
+channels), exactly as the paper's left-multiplication.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import formats
+
+
+@dataclasses.dataclass
+class LqerFactors:
+    """Result of quantizing one linear layer with LQER/L2QER."""
+    w_q: np.ndarray            # (m, n) effective low-precision weight
+    a_k: np.ndarray            # (m, k) high-precision left factor
+    b_k: np.ndarray            # (k, n) high-precision right factor
+    singular_values: np.ndarray  # full spectrum of the (scaled) error
+    approx_err: float          # e_a = mean |E_q - A_k B_k|  (paper Eq. 15)
+
+
+def calib_scale_matrix(a_bar: np.ndarray) -> np.ndarray:
+    """Appendix A, Eq. 14: s_i = a_i / sqrt(min(a) * max(a)).
+
+    ``a_bar`` is the per-channel activation magnitude profile (Eq. 13).
+    Channels that never fire are floored to the smallest observed non-zero
+    magnitude so S stays invertible (the paper notes no LLM channel is
+    always zero; the synthetic corpus can starve a channel at tiny scale).
+    """
+    a = np.asarray(a_bar, np.float64).copy()
+    nz = a[a > 0]
+    floor = nz.min() if nz.size else 1.0
+    a[a <= 0] = floor
+    denom = np.sqrt(a.min() * a.max())
+    return a / denom
+
+
+def svd_truncate(e: np.ndarray, k: int):
+    """Rank-k truncated SVD of e: returns (U_k, s_k, Vt_k, full_spectrum)."""
+    u, s, vt = np.linalg.svd(e.astype(np.float64), full_matrices=False)
+    k = min(k, s.shape[0])
+    return u[:, :k], s[:k], vt[:k, :], s
+
+
+def lqer_quantize(w: np.ndarray, quantize_fn, k: int,
+                  s_diag: np.ndarray | None = None,
+                  lowrank_bits: int = 8,
+                  pad_to: int | None = None) -> LqerFactors:
+    """Quantize one weight matrix with LQER (s_diag=None) or L2QER.
+
+    quantize_fn: W -> W_q on the low-precision grid (MXINT4/INT4/...).
+    k: reconstruction rank. pad_to: zero-pad factors to this rank so that
+    several ranks can share one lowered HLO graph (DESIGN.md section 3).
+    """
+    w = np.asarray(w, np.float32)
+    m, n = w.shape
+    w_q = np.asarray(quantize_fn(w), np.float32)
+    e_q = (w - w_q).astype(np.float64)
+
+    if s_diag is not None:
+        s_diag = np.asarray(s_diag, np.float64)
+        assert s_diag.shape == (m,), (s_diag.shape, m)
+        scaled = e_q * s_diag[:, None]          # S E_q (row scaling)
+        u_k, sv_k, vt_k, spectrum = svd_truncate(scaled, k)
+        a_k = (u_k / s_diag[:, None])           # S^-1 U'_k
+        b_k = sv_k[:, None] * vt_k              # Sigma'_k V'_k^T
+    else:
+        u_k, sv_k, vt_k, spectrum = svd_truncate(e_q, k)
+        a_k = u_k
+        b_k = sv_k[:, None] * vt_k
+
+    a_k = a_k.astype(np.float32)
+    b_k = b_k.astype(np.float32)
+    # High-precision factors are stored in the b_h format (8-bit MXINT,
+    # [16,1] blocks, 4-bit shared exponent -- paper section 4.1).  For
+    # ranks below the block size (figure-3 sweep) the block shrinks to k.
+    if lowrank_bits is not None:
+        a_k = np.asarray(formats.mxint_quant_weight(a_k, lowrank_bits),
+                         np.float32)
+        blk_b = min(16, b_k.shape[0])
+        assert b_k.shape[0] % blk_b == 0
+        b_k = np.asarray(
+            formats.mxint_quant_weight(b_k, lowrank_bits, block=blk_b),
+            np.float32)
+
+    e_tilde = a_k.astype(np.float64) @ b_k.astype(np.float64)
+    approx_err = float(np.mean(np.abs(e_q - e_tilde)))
+
+    if pad_to is not None and pad_to > a_k.shape[1]:
+        pad = pad_to - a_k.shape[1]
+        a_k = np.pad(a_k, ((0, 0), (0, pad)))
+        b_k = np.pad(b_k, ((0, pad), (0, 0)))
+
+    return LqerFactors(w_q=w_q, a_k=a_k, b_k=b_k,
+                       singular_values=spectrum.astype(np.float32),
+                       approx_err=approx_err)
+
+
+def error_spectra(w: np.ndarray, quantize_fn,
+                  s_diag: np.ndarray) -> dict[str, np.ndarray]:
+    """Figure 1a: normalized singular-value spectra of E_q vs S E_q.
+
+    Both spectra are normalized to the same Frobenius norm (the paper's
+    footnote 1: E_q is rescaled by alpha so ||alpha E_q||_F = ||S E_q||_F).
+    """
+    w = np.asarray(w, np.float32)
+    w_q = np.asarray(quantize_fn(w), np.float32)
+    e_q = (w - w_q).astype(np.float64)
+    scaled = e_q * np.asarray(s_diag, np.float64)[:, None]
+    alpha = np.linalg.norm(scaled) / max(np.linalg.norm(e_q), 1e-30)
+    s_plain = np.linalg.svd(alpha * e_q, compute_uv=False)
+    s_scaled = np.linalg.svd(scaled, compute_uv=False)
+    return {"lqer": s_plain.astype(np.float32),
+            "l2qer": s_scaled.astype(np.float32)}

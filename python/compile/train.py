@@ -1,0 +1,150 @@
+"""Build-time trainer for the synthetic model family.
+
+Hand-rolled AdamW (no optax in this image) + cosine LR schedule + gradient
+clipping.  Trains each family member on the TinyPajama corpus until it is
+genuinely predictive (val PPL well under the unigram baseline), then
+checkpoints to ``artifacts/models/<name>/params.npz``.  Quantization acts
+on these *trained* weights -- the singular-value structure of E_q that
+drives LQER only exists for real weight/activation statistics.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+def cross_entropy(params, tokens, cfg: M.ModelConfig):
+    """Next-token CE over (B, T) batches, ignoring PAD targets."""
+    logits = M.train_forward(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _tree_zeros_like(t):
+    return jax.tree_util.tree_map(jnp.zeros_like, t)
+
+
+def make_update_step(cfg: M.ModelConfig, base_lr: float, total_steps: int,
+                     weight_decay: float = 0.01, clip: float = 1.0):
+    """One jitted AdamW step: (params, m, v, step, batch) -> updated."""
+
+    def step_fn(params, m, v, step, batch):
+        loss, grads = jax.value_and_grad(cross_entropy)(params, batch, cfg)
+        # global-norm clip
+        leaves = jax.tree_util.tree_leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+        scale = jnp.minimum(1.0, clip / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        # cosine schedule with 40-step warmup
+        warm = jnp.minimum(step / 40.0, 1.0)
+        prog = jnp.clip(step / total_steps, 0.0, 1.0)
+        lr = base_lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        b1, b2, eps = 0.9, 0.95, 1e-8
+        m = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g,
+                                   m, grads)
+        v = jax.tree_util.tree_map(lambda a, g: b2 * a + (1 - b2) * g * g,
+                                   v, grads)
+        t = step + 1.0
+        mhat = jax.tree_util.tree_map(lambda a: a / (1 - b1 ** t), m)
+        vhat = jax.tree_util.tree_map(lambda a: a / (1 - b2 ** t), v)
+        params = jax.tree_util.tree_map(
+            lambda p, a, b: p - lr * (a / (jnp.sqrt(b) + eps)
+                                      + weight_decay * p),
+            params, mhat, vhat)
+        return params, m, v, loss, gnorm
+
+    return jax.jit(step_fn)
+
+
+def batches(stream: np.ndarray, batch: int, seq: int, seed: int):
+    """Random crops from the token stream, forever."""
+    rng = np.random.default_rng(seed)
+    n = len(stream) - seq - 1
+    while True:
+        idx = rng.integers(0, n, size=batch)
+        yield np.stack([stream[i:i + seq + 1] for i in idx]).astype(np.int32)
+
+
+def eval_ppl(params, stream: np.ndarray, cfg: M.ModelConfig,
+             batch: int = 8, seq: int = 96, n_batches: int = 16) -> float:
+    """Val perplexity on contiguous windows (mirrors the rust evaluator)."""
+    fn = jax.jit(lambda p, t: cross_entropy(p, t, cfg))
+    losses = []
+    for i in range(n_batches):
+        start = i * batch * seq
+        rows = []
+        for b in range(batch):
+            s = start + b * seq
+            if s + seq + 1 > len(stream):
+                break
+            rows.append(stream[s:s + seq + 1])
+        if len(rows) < batch:
+            break
+        losses.append(float(fn(params, np.stack(rows).astype(np.int32))))
+    return float(np.exp(np.mean(losses)))
+
+
+def train_model(cfg: M.ModelConfig, train_stream: np.ndarray,
+                val_stream: np.ndarray, out_dir: str,
+                steps: int = 600, batch: int = 16, seq: int = 96,
+                lr: float = 3e-3, seed: int = 0,
+                log_every: int = 50) -> dict:
+    """Train one model; returns params. Caches to out_dir/params.npz."""
+    ckpt = os.path.join(out_dir, "params.npz")
+    if os.path.exists(ckpt):
+        return load_params(out_dir, cfg)
+
+    os.makedirs(out_dir, exist_ok=True)
+    params = M.init_params(cfg, seed=seed)
+    params = jax.tree_util.tree_map(jnp.asarray, params)
+    m = _tree_zeros_like(params)
+    v = _tree_zeros_like(params)
+    update = make_update_step(cfg, lr, steps)
+    gen = batches(train_stream, batch, seq, seed + 1)
+    log = []
+    t0 = time.time()
+    for step in range(steps):
+        bt = next(gen)
+        params, m, v, loss, gnorm = update(params, m, v, float(step), bt)
+        if step % log_every == 0 or step == steps - 1:
+            entry = {"step": step, "loss": float(loss),
+                     "gnorm": float(gnorm), "sec": time.time() - t0}
+            log.append(entry)
+            print(f"[train {cfg.name}] step {step:4d} "
+                  f"loss {float(loss):.4f} ({entry['sec']:.0f}s)",
+                  flush=True)
+    ppl = eval_ppl(params, val_stream, cfg)
+    print(f"[train {cfg.name}] val ppl {ppl:.3f}")
+
+    save_params(params, out_dir)
+    with open(os.path.join(out_dir, "train_log.json"), "w") as fh:
+        json.dump({"log": log, "val_ppl": ppl,
+                   "params": cfg.param_count()}, fh, indent=1)
+    return jax.tree_util.tree_map(np.asarray, params)
+
+
+def save_params(params, out_dir: str) -> None:
+    flat = M.flatten_with_names(params)
+    np.savez(os.path.join(out_dir, "params.npz"),
+             **{name: arr for name, arr in flat})
+
+
+def load_params(out_dir: str, cfg: M.ModelConfig) -> dict:
+    """Rebuild the param tree from the flat npz checkpoint."""
+    data = np.load(os.path.join(out_dir, "params.npz"))
+    skeleton = M.init_params(cfg, seed=0)
+    flat_names = [n for n, _ in M.flatten_with_names(skeleton)]
+    leaves = [np.asarray(data[n], np.float32) for n in flat_names]
+    treedef = jax.tree_util.tree_structure(skeleton)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

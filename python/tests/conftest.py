@@ -1,0 +1,31 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import pytest
+
+from compile import data as D, model as M
+
+
+@pytest.fixture(scope="session")
+def dataset():
+    """Small dataset shared across the test session."""
+    return D.build_dataset(train_tokens=30_000, val_tokens=4_096,
+                           test_tokens=4_096, n_per_task=8, n_judge=4)
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg(dataset):
+    return M.make_config("opt-tiny", vocab=dataset.vocab.size)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg):
+    return M.init_params(tiny_cfg, seed=3)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

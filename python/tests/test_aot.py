@@ -1,0 +1,83 @@
+"""AOT export path: LQTW weight files and HLO-text lowering."""
+
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+def test_lqtw_roundtrip(tmp_path):
+    params = {"embed": np.arange(6, dtype=np.float32).reshape(2, 3),
+              "layers": [{"wq": {"w": np.ones((4, 2), np.float32) * 2}}]}
+    path = tmp_path / "w.bin"
+    aot.write_lqtw(str(path), params, {"model": "x"})
+    raw = path.read_bytes()
+    assert raw[:8] == b"LQTW0001"
+    (mlen,) = struct.unpack("<I", raw[8:12])
+    manifest = json.loads(raw[12:12 + mlen])
+    assert manifest["meta"]["model"] == "x"
+    names = [t["name"] for t in manifest["tensors"]]
+    assert names == ["embed", "layers.0.wq.w"]
+    data_start = ((12 + mlen) + 63) // 64 * 64
+    first = np.frombuffer(raw[data_start:data_start + 24], np.float32)
+    np.testing.assert_array_equal(first,
+                                  np.arange(6, dtype=np.float32))
+
+
+def test_hlo_text_lowering_smoke(dataset):
+    cfg = M.ModelConfig(name="t", vocab=dataset.vocab.size, d=32,
+                        layers=1, heads=2, ffn=64, t_max=16)
+    params = M.init_params(cfg)
+    gv = M.GraphVariant(act="mx8", rank=4)
+    vp = M.attach_variant_params(params, cfg, gv)
+    text = aot.lower_graph(
+        lambda p, t: (M.score(p, t, cfg, gv),),
+        M.param_specs(vp), jax.ShapeDtypeStruct((1, 8), jnp.int32))
+    assert "HloModule" in text
+    assert "f32[1,8,%d]" % cfg.vocab in text
+
+
+def test_rank_pad_rules():
+    import compile.pipeline as pipeline
+    assert aot._rank_pad_for("l2qer-w4a8",
+                             pipeline.METHODS["l2qer-w4a8"]) == 16
+    assert aot._rank_pad_for("fp16", pipeline.METHODS["fp16"]) == 0
+    assert aot._rank_pad_for(
+        "l2qer-w2a8-k4", pipeline.rank_sweep_spec(4, True)) == max(
+            aot.FIG3_RANKS)
+    assert aot._rank_pad_for("l2qer-w2a8",
+                             pipeline.METHODS["l2qer-w2a8"]) == 64
+
+
+def test_method_runs_cover_grid():
+    runs = aot._method_runs(["opt-tiny", "opt-micro"])
+    names = {(m, r) for m, r, _ in runs}
+    assert ("opt-tiny", "fp16") in names
+    assert ("opt-micro", "l2qer-w4a8") in names
+    # sweep only on the fig-3 model
+    assert ("opt-micro", "l2qer-w2a8-k1") in names
+    assert ("opt-tiny", "l2qer-w2a8-k1") not in names
+
+
+@pytest.mark.skipif(not os.path.exists(
+    os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                 "manifest.json")),
+    reason="full artifacts not built")
+def test_built_manifest_consistent():
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    with open(os.path.join(root, "manifest.json")) as fh:
+        m = json.load(fh)
+    for run in m["runs"]:
+        assert os.path.exists(run["weights"]), run["weights"]
+        assert os.path.exists(run["meta"]), run["meta"]
+        # every run's graph must have a lowered score HLO
+        tags = {(g["model"], g["graph"], g["entry"]) for g in m["graphs"]}
+        assert (run["model"], run["graph"], "score") in tags
+    for g in m["graphs"]:
+        assert os.path.exists(g["path"]), g["path"]

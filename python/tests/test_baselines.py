@@ -1,0 +1,98 @@
+"""Baseline PTQ algorithms: GPTQ, AWQ, LLM.int4(), SmoothQuant, clipq."""
+
+import numpy as np
+import pytest
+
+from compile.baselines import awq, clipq, gptq, llm_int4, rtn, smoothquant
+
+
+@pytest.fixture
+def layer():
+    """A weight + correlated calibration activations."""
+    rng = np.random.default_rng(0)
+    m, n, t = 128, 64, 256
+    w = rng.normal(0, 0.3, size=(m, n)).astype(np.float32)
+    # correlated activations with a few dominant channels
+    base = rng.normal(size=(t, m)).astype(np.float32)
+    boost = np.ones(m, np.float32)
+    boost[:6] = 8.0
+    x = base * boost
+    h = (x.astype(np.float64).T @ x.astype(np.float64))
+    return w, x, h
+
+
+def _out_err(w, w_eff, x):
+    y = x.astype(np.float64) @ w.astype(np.float64)
+    yq = x.astype(np.float64) @ w_eff.astype(np.float64)
+    return np.linalg.norm(y - yq)
+
+
+def test_gptq_beats_rtn_on_output_error(layer):
+    w, x, h = layer
+    w_rtn = rtn.quantize_int(w, bits=3)["w"]
+    w_gptq = gptq.quantize(w, h, bits=3)["w"]
+    assert _out_err(w, w_gptq, x) < _out_err(w, w_rtn, x)
+
+
+def test_gptq_stays_on_grid_shape(layer):
+    w, _, h = layer
+    q = gptq.quantize(w, h, bits=4)["w"]
+    assert q.shape == w.shape
+    assert np.isfinite(q).all()
+
+
+def test_awq_not_worse_than_rtn(layer):
+    w, x, _ = layer
+    a_max = np.abs(x).max(0)
+    w_rtn = rtn.quantize_int(w, bits=3)["w"]
+    res = awq.quantize(w, a_max, x, bits=3)
+    # alpha=0 is RTN, so grid search can never be worse on calib data
+    assert _out_err(w, res["w"], x) <= _out_err(w, w_rtn, x) * (1 + 1e-9)
+    assert 0.0 <= res["alpha"] <= 1.0
+
+
+def test_llmint4_preserves_outlier_rows(layer):
+    w, x, _ = layer
+    a_max = np.abs(x).max(0)
+    res = llm_int4.quantize(w, a_max, bits=4, outlier_frac=0.05)
+    outliers = np.argsort(a_max)[::-1][:res["n_outliers"]]
+    # outlier-feature rows are bit-exact FP
+    np.testing.assert_array_equal(res["w"][outliers], w[outliers])
+    # mask marks exactly those channels as high-precision (0)
+    assert res["actmask"][outliers].sum() == 0
+    assert res["actmask"].sum() == w.shape[0] - res["n_outliers"]
+
+
+def test_smoothquant_shrinks_activation_range(layer):
+    w, x, _ = layer
+    a_max = np.abs(x).max(0)
+    res = smoothquant.quantize(w, a_max, bits=8)
+    x_s = x / res["smooth"]
+    assert np.abs(x_s).max() < np.abs(x).max()
+
+
+def test_smoothquant_product_preserved_before_quant(layer):
+    w, x, _ = layer
+    a_max = np.abs(x).max(0)
+    s = smoothquant.quantize(w, a_max, bits=16)["smooth"]
+    # (x / s) @ (w * s) == x @ w up to float error (16-bit grid ~ exact-ish)
+    y = x @ w
+    ys = (x / s) @ (w * s[:, None])
+    np.testing.assert_allclose(y, ys, rtol=1e-3, atol=1e-3)
+
+
+def test_clipq_picks_clipping_when_outliers_hurt():
+    rng = np.random.default_rng(1)
+    w = rng.normal(0, 0.1, size=(128, 32)).astype(np.float32)
+    w[0, :] = 5.0  # weight outlier stretches the group scale
+    x = rng.normal(size=(64, 128)).astype(np.float32)
+    res = clipq.quantize(w, x, bits=3)
+    assert res["ratio"] <= 1.0
+    assert np.isfinite(res["w"]).all()
+
+
+def test_rtn_mxint_and_int_shapes():
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(64, 32)).astype(np.float32)
+    assert rtn.quantize_mxint(w, 4)["w"].shape == w.shape
+    assert rtn.quantize_int(w, 4)["w"].shape == w.shape

@@ -1,0 +1,97 @@
+"""TinyPajama corpus + downstream task generators."""
+
+import numpy as np
+
+from compile import data as D
+
+
+def test_vocab_deterministic_and_unique():
+    v1 = D.build_vocab()
+    v2 = D.build_vocab()
+    assert v1.words == v2.words
+    assert len(set(v1.words)) == len(v1.words)
+    assert v1.words[D.PAD] == "<pad>"
+
+
+def test_vocab_encode_decode_roundtrip():
+    v = D.build_vocab()
+    text = v.decode([v.func["the"], int(v.nouns[0]), int(v.verbs[0])])
+    assert v.encode(text) == [v.func["the"], int(v.nouns[0]),
+                              int(v.verbs[0])]
+
+
+def test_corpus_deterministic(dataset):
+    v = dataset.vocab
+    g = D.Grammar(v)
+    s1 = D.CorpusGen(v, g, seed=5).stream(1000)
+    s2 = D.CorpusGen(v, g, seed=5).stream(1000)
+    np.testing.assert_array_equal(s1, s2)
+    s3 = D.CorpusGen(v, g, seed=6).stream(1000)
+    assert not np.array_equal(s1, s3)
+
+
+def test_stream_tokens_in_vocab(dataset):
+    assert dataset.train.max() < dataset.vocab.size
+    assert dataset.train.dtype == np.uint16
+
+
+def test_agreement_is_learnable_signal(dataset):
+    """Verb draws respect noun classes (the core task signal)."""
+    g = dataset.grammar
+    v = dataset.vocab
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        n = g.draw_noun(rng, topic=0)
+        verb = g.draw_verb_for(rng, n)
+        assert g.verb_agrees(n, verb)
+        bad = g.draw_verb_not_for(rng, n)
+        assert not g.verb_agrees(n, bad)
+
+
+def test_task_items_well_formed(dataset):
+    assert len(dataset.tasks) == 6 * 8
+    names = {t["task"] for t in dataset.tasks}
+    assert names == set(D.TASK_NAMES)
+    for item in dataset.tasks:
+        assert 0 <= item["answer"] < len(item["options"])
+        assert all(len(o) >= 1 for o in item["options"])
+        assert item["context"][0] == D.BOS
+
+
+def test_boolq_answers_follow_agreement(dataset):
+    g = dataset.grammar
+    v = dataset.vocab
+    yes = v.func["yes"]
+    for item in dataset.tasks:
+        if item["task"] != "boolq":
+            continue
+        noun = item["context"][5]
+        verb = item["context"][6]
+        agrees = g.verb_agrees(noun, verb)
+        chosen = item["options"][item["answer"]][0]
+        assert (chosen == yes) == agrees
+
+
+def test_openbook_answer_in_context(dataset):
+    for item in dataset.tasks:
+        if item["task"] != "openbook":
+            continue
+        answer_tok = item["options"][item["answer"]][0]
+        assert answer_tok in item["context"]
+
+
+def test_splits_disjoint_draws(dataset):
+    # different seeds -> streams differ (not literally disjoint texts, but
+    # distinct draws, like WikiText train/test)
+    assert not np.array_equal(dataset.train[:4096], dataset.val[:4096])
+    assert not np.array_equal(dataset.val, dataset.test[:len(dataset.val)])
+
+
+def test_export_dataset_files(tmp_path, dataset):
+    D.export_dataset(dataset, str(tmp_path))
+    for f in ["train.u16", "val.u16", "test.u16", "calib.u16",
+              "vocab.json", "tasks.json", "judge_prompts.json",
+              "meta.json"]:
+        assert (tmp_path / f).exists(), f
+    raw = np.fromfile(tmp_path / "train.u16", dtype=np.uint16)
+    np.testing.assert_array_equal(raw, dataset.train)

@@ -1,0 +1,86 @@
+"""Number-format properties (MXINT / INT group quantization)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quant import formats
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+@given(seed=st.integers(0, 2**16),
+       bits=st.sampled_from([2, 3, 4, 8]),
+       scale=st.sampled_from([1e-4, 1.0, 1e4]))
+@settings(**SETTINGS)
+def test_mxint_error_bounded(seed, bits, scale):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(0, scale, size=(8, 64))).astype(np.float32)
+    q = np.asarray(formats.mxint_quant_act(jnp.asarray(x), bits))
+    # per-block error bound: one grid step of the block's scale
+    xb = x.reshape(8, 4, 16)
+    qb = q.reshape(8, 4, 16)
+    amax = np.abs(xb).max(-1, keepdims=True)
+    step = 2.0 ** (np.floor(np.log2(np.maximum(amax, 1e-38)))
+                   - (bits - 2))
+    assert np.all(np.abs(xb - qb) <= step + 1e-30)
+
+
+def test_mxint_blocks_independent():
+    x = np.zeros((1, 32), np.float32)
+    x[0, :16] = 100.0
+    x[0, 16:] = 0.001
+    q = np.asarray(formats.mxint_quant_act(jnp.asarray(x), 4))
+    # small-magnitude block keeps fine resolution despite the big block
+    assert np.abs(q[0, 16:] - 0.001).max() < 1e-4
+
+
+def test_mxint_exp_clamping():
+    # 4-bit exponent clamps at +7: huge values saturate the grid
+    x = np.full((16, 1), 1e30, np.float32)
+    q = np.asarray(formats.mxint_quant_weight(jnp.asarray(x), 4,
+                                              exp_bits=4))
+    assert np.all(np.isfinite(q))
+    assert np.all(q <= 2.0 ** 9)  # qmax * 2^(7-2)
+
+
+@given(seed=st.integers(0, 2**16), bits=st.sampled_from([2, 4, 8]))
+@settings(**SETTINGS)
+def test_int_group_idempotent(seed, bits):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.3, size=(256, 8)).astype(np.float32)
+    q1 = np.asarray(formats.int_quant_group(jnp.asarray(w), bits))
+    q2 = np.asarray(formats.int_quant_group(jnp.asarray(q1), bits))
+    np.testing.assert_allclose(q1, q2, atol=1e-6)
+
+
+def test_effective_group():
+    assert formats.effective_group(256, 128) == 128
+    assert formats.effective_group(192, 128) == 96
+    assert formats.effective_group(64, 128) == 64
+    assert formats.effective_group(100, 128) == 100
+
+
+def test_per_token_rows_independent():
+    x = np.array([[1.0, -2.0, 0.5], [100.0, 50.0, -25.0]], np.float32)
+    q = np.asarray(formats.int_quant_per_token(jnp.asarray(x), 8))
+    assert abs(q[0, 0] - 1.0) < 0.02
+    assert abs(q[1, 0] - 100.0) < 1.0
+
+
+@pytest.mark.parametrize("bits,expected", [(4, 4.25), (8, 8.25), (2, 2.25)])
+def test_mxint_avg_bits(bits, expected):
+    assert formats.mxint_avg_bits(bits, 4, 16) == pytest.approx(expected)
+
+
+def test_int_group_avg_bits():
+    assert formats.int_group_avg_bits(4, 128) == pytest.approx(4.125)
+
+
+def test_lqer_avg_bits_overhead():
+    # paper appendix D: overhead shrinks with layer size
+    small = formats.lqer_avg_bits(128, 128, 16, 4.25, 8.25)
+    large = formats.lqer_avg_bits(12288, 49152, 32, 4.25, 8.25)
+    assert small > large
+    assert large < 4.3

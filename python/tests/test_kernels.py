@@ -1,0 +1,114 @@
+"""L1 correctness: every Pallas kernel must match its pure-jnp oracle.
+
+This is the CORE correctness signal of the compile path — hypothesis
+sweeps shapes, bit widths, and value scales.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (int_quant_per_token_pallas, lqer_linear,
+                             mxint_quant_act_pallas,
+                             mxint_quant_weight_pallas)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng_seed, *shape, scale=1.0):
+    rng = np.random.default_rng(rng_seed)
+    return (rng.normal(0, scale, size=shape)).astype(np.float32)
+
+
+@given(rows=st.sampled_from([1, 3, 8]),
+       blocks=st.sampled_from([1, 2, 5]),
+       bits=st.sampled_from([2, 3, 4, 6, 8]),
+       scale=st.sampled_from([1e-3, 1.0, 100.0]),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_mxint_act_kernel_matches_ref(rows, blocks, bits, scale, seed):
+    x = _rand(seed, rows, blocks * 16, scale=scale)
+    got = mxint_quant_act_pallas(jnp.asarray(x), bits)
+    want = ref.mxint_quant_act_ref(jnp.asarray(x), bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(in_blocks=st.sampled_from([1, 2, 4]),
+       cols=st.sampled_from([1, 8, 48]),
+       bits=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_mxint_weight_kernel_matches_ref(in_blocks, cols, bits, seed):
+    w = _rand(seed, in_blocks * 16, cols, scale=0.5)
+    got = mxint_quant_weight_pallas(jnp.asarray(w), bits)
+    want = ref.mxint_quant_weight_ref(jnp.asarray(w), bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(rows=st.sampled_from([1, 4, 16]),
+       cols=st.sampled_from([16, 96]),
+       bits=st.sampled_from([4, 6, 8]),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_int_per_token_kernel_matches_ref(rows, cols, bits, seed):
+    x = _rand(seed, rows, cols, scale=3.0)
+    got = int_quant_per_token_pallas(jnp.asarray(x), bits)
+    want = ref.int_quant_per_token_ref(jnp.asarray(x), bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=1e-6)
+
+
+@given(m=st.sampled_from([2, 6, 24]),
+       k_in=st.sampled_from([32, 96]),
+       n=st.sampled_from([40, 160]),
+       r=st.sampled_from([0, 1, 8, 16]),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_lqer_linear_kernel_matches_ref(m, k_in, n, r, seed):
+    x = _rand(seed, m, k_in)
+    w = _rand(seed + 1, k_in, n, scale=0.3)
+    a = _rand(seed + 2, k_in, r, scale=0.3) if r else None
+    b = _rand(seed + 3, r, n, scale=0.3) if r else None
+    got = lqer_linear(jnp.asarray(x), jnp.asarray(w),
+                      None if a is None else jnp.asarray(a),
+                      None if b is None else jnp.asarray(b))
+    want = ref.lqer_linear_ref(jnp.asarray(x), jnp.asarray(w),
+                               None if a is None else jnp.asarray(a),
+                               None if b is None else jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_lqer_linear_batched_shape():
+    x = _rand(0, 2, 5, 32)  # (B, T, K)
+    w = _rand(1, 32, 48)
+    y = lqer_linear(jnp.asarray(x), jnp.asarray(w))
+    assert y.shape == (2, 5, 48)
+
+
+def test_lqer_linear_zero_rank_equals_plain():
+    x = _rand(2, 4, 32)
+    w = _rand(3, 32, 16)
+    a = np.zeros((32, 4), np.float32)
+    b = np.zeros((4, 16), np.float32)
+    y0 = lqer_linear(jnp.asarray(x), jnp.asarray(w))
+    y1 = lqer_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(a),
+                     jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_mxint_requantization_drift_bounded(bits):
+    # Exact idempotence fails when a value lands on -2^(m-1): the block
+    # max then doubles and the shared exponent shifts by one (a property
+    # of the real MXINT grid, not a bug).  Drift is bounded by one step
+    # of the coarser grid.
+    x = _rand(7, 4, 32)
+    q1 = np.asarray(mxint_quant_act_pallas(jnp.asarray(x), bits))
+    q2 = np.asarray(mxint_quant_act_pallas(jnp.asarray(q1), bits))
+    xb = q1.reshape(-1, 16)
+    step = 2.0 ** (np.floor(np.log2(np.maximum(
+        np.abs(xb).max(-1, keepdims=True), 1e-38))) - (bits - 2))
+    assert np.all(np.abs(q2.reshape(-1, 16) - xb) <= step + 1e-30)

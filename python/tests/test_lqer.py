@@ -1,0 +1,95 @@
+"""LQER / L2QER algebra (paper section 3)."""
+
+import numpy as np
+import pytest
+
+from compile.quant import formats, lqer
+
+
+def _w(seed=0, m=64, n=48, scale=0.4):
+    rng = np.random.default_rng(seed)
+    return rng.normal(0, scale, size=(m, n)).astype(np.float32)
+
+
+def _qfn(bits=3):
+    import jax.numpy as jnp
+    return lambda w: np.asarray(
+        formats.mxint_quant_weight(jnp.asarray(w), bits), np.float32)
+
+
+def test_full_rank_recovers_error_exactly():
+    """With k = min(m,n) and no factor quantization, W_q + A_k B_k == W."""
+    w = _w()
+    fac = lqer.lqer_quantize(w, _qfn(), k=48, lowrank_bits=None)
+    recon = fac.w_q + fac.a_k @ fac.b_k
+    np.testing.assert_allclose(recon, w, atol=1e-4)
+    assert fac.approx_err < 1e-6
+
+
+def test_rank_monotone_improvement():
+    w = _w(1)
+    errs = [lqer.lqer_quantize(w, _qfn(), k=k, lowrank_bits=None).approx_err
+            for k in (1, 4, 16, 48)]
+    for a, b in zip(errs, errs[1:]):
+        assert b <= a + 1e-9, errs
+
+
+def test_scaled_svd_cancels_scaling():
+    """L2QER: S^-1 (S E_q)_k must equal E_q exactly at full rank."""
+    w = _w(2)
+    s = np.abs(np.random.default_rng(3).normal(1.5, 0.5, size=64)) + 0.2
+    fac = lqer.lqer_quantize(w, _qfn(), k=48, s_diag=s, lowrank_bits=None)
+    recon = fac.w_q + fac.a_k @ fac.b_k
+    np.testing.assert_allclose(recon, w, atol=1e-4)
+
+
+def test_l2qer_weights_salient_rows():
+    """The scaled reconstruction must approximate high-S rows better."""
+    w = _w(4, m=64, n=64)
+    s = np.ones(64)
+    s[:8] = 50.0  # "salient" activation channels
+    plain = lqer.lqer_quantize(w, _qfn(), k=4, lowrank_bits=None)
+    scaled = lqer.lqer_quantize(w, _qfn(), k=4, s_diag=s,
+                                lowrank_bits=None)
+    eq = w - plain.w_q
+    err_plain = np.abs(eq - plain.a_k @ plain.b_k)[:8].mean()
+    err_scaled = np.abs(eq - scaled.a_k @ scaled.b_k)[:8].mean()
+    assert err_scaled < err_plain
+
+
+def test_pad_to_extends_with_zeros():
+    w = _w(5)
+    fac = lqer.lqer_quantize(w, _qfn(), k=4, pad_to=16)
+    assert fac.a_k.shape == (64, 16)
+    assert fac.b_k.shape == (16, 48)
+    assert np.all(fac.a_k[:, 4:] == 0.0)
+    assert np.all(fac.b_k[4:, :] == 0.0)
+
+
+def test_calib_scale_matrix_formula():
+    a = np.array([1.0, 4.0, 2.0])
+    s = lqer.calib_scale_matrix(a)
+    denom = np.sqrt(1.0 * 4.0)
+    np.testing.assert_allclose(s, a / denom)
+
+
+def test_calib_scale_matrix_floors_zero_channels():
+    a = np.array([0.0, 2.0, 8.0])
+    s = lqer.calib_scale_matrix(a)
+    assert np.all(s > 0)  # S stays invertible
+
+
+def test_error_spectra_normalized():
+    """Footnote 1: both spectra share the same Frobenius norm."""
+    w = _w(6)
+    s = np.abs(np.random.default_rng(7).normal(1, 0.5, size=64)) + 0.3
+    sp = lqer.error_spectra(w, _qfn(), s)
+    f_lqer = np.sqrt((sp["lqer"] ** 2).sum())
+    f_l2qer = np.sqrt((sp["l2qer"] ** 2).sum())
+    assert f_lqer == pytest.approx(f_l2qer, rel=1e-4)
+
+
+def test_spectra_sorted_descending():
+    w = _w(8)
+    sp = lqer.error_spectra(w, _qfn(), np.ones(64))
+    assert np.all(np.diff(sp["lqer"]) <= 1e-6)

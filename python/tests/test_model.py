@@ -1,0 +1,148 @@
+"""L2 model: shapes, variant params, and the critical prefill/decode
+consistency invariant (KV-cache decode must reproduce full-sequence
+scoring)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = M.ModelConfig(name="t", vocab=64, d=32, layers=2, heads=2,
+                        ffn=64, t_max=24)
+    params = M.init_params(cfg, seed=1)
+    return cfg, params
+
+
+def test_param_count_matches_tree(setup):
+    cfg, params = setup
+    total = sum(np.asarray(a).size for _, a in M.flatten_with_names(params))
+    assert total == cfg.param_count()
+
+
+def test_flatten_names_deterministic(setup):
+    cfg, params = setup
+    n1 = [n for n, _ in M.flatten_with_names(params)]
+    n2 = [n for n, _ in M.flatten_with_names(M.init_params(cfg, seed=9))]
+    assert n1 == n2
+    assert "layers.0.fc1.w" in n1
+
+
+def test_attach_variant_adds_and_removes(setup):
+    cfg, params = setup
+    gv = M.GraphVariant(act="int8", rank=4)
+    vp = M.attach_variant_params(params, cfg, gv)
+    lin = vp["layers"][0]["wq"]
+    assert lin["a"].shape == (32, 4)
+    assert lin["smooth"].shape == (32,)
+    gv0 = M.GraphVariant(act="none", rank=0)
+    vp0 = M.attach_variant_params(vp, cfg, gv0)
+    assert "a" not in vp0["layers"][0]["wq"]
+    assert "smooth" not in vp0["layers"][0]["wq"]
+
+
+def test_score_shapes(setup):
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    toks = np.arange(2 * 8, dtype=np.int32).reshape(2, 8) % cfg.vocab
+    logits = M.score(params, toks, cfg, gv)
+    assert logits.shape == (2, 8, cfg.vocab)
+
+
+def test_causality(setup):
+    """Changing a future token must not change past logits."""
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    t1 = np.ones((1, 8), np.int32)
+    t2 = t1.copy()
+    t2[0, 7] = 5
+    l1 = np.asarray(M.score(params, t1, cfg, gv))
+    l2 = np.asarray(M.score(params, t2, cfg, gv))
+    np.testing.assert_allclose(l1[0, :7], l2[0, :7], atol=1e-5)
+    assert np.abs(l1[0, 7] - l2[0, 7]).max() > 1e-6
+
+
+def test_prefill_matches_score(setup):
+    cfg, params = setup
+    gv = M.GraphVariant(act="mx8", rank=0)
+    vp = M.attach_variant_params(params, cfg, gv)
+    toks = (np.arange(8, dtype=np.int32) * 3 % cfg.vocab)[None, :]
+    l_score = np.asarray(M.score(vp, toks, cfg, gv))
+    l_pre, k, v = M.prefill(vp, toks, cfg, gv)
+    np.testing.assert_allclose(np.asarray(l_pre), l_score, atol=1e-5)
+    assert k.shape == (cfg.layers, 1, 8, cfg.d)
+
+
+def test_decode_consistent_with_score(setup):
+    """Prefill t tokens then decode token t: logits must equal the
+    full-sequence score at position t.  This validates the whole KV-cache
+    path end-to-end."""
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    rng = np.random.default_rng(0)
+    seq = rng.integers(4, cfg.vocab, size=10).astype(np.int32)
+    t_pre = 6
+
+    full = np.asarray(M.score(params, seq[None, :], cfg, gv))[0]
+
+    _, k, v = M.prefill(params, seq[None, :t_pre], cfg, gv)
+    kc = np.zeros((cfg.layers, 1, cfg.t_max, cfg.d), np.float32)
+    vc = np.zeros_like(kc)
+    kc[:, :, :t_pre] = np.asarray(k)
+    vc[:, :, :t_pre] = np.asarray(v)
+    for i in range(t_pre, 10):
+        logits, kn, vn = M.decode(
+            params, seq[i:i + 1], jnp.asarray(kc), jnp.asarray(vc),
+            np.array([i], np.int32), cfg, gv)
+        np.testing.assert_allclose(
+            np.asarray(logits)[0], full[i], rtol=1e-4, atol=1e-4)
+        kc[:, 0, i] = np.asarray(kn)[:, 0]
+        vc[:, 0, i] = np.asarray(vn)[:, 0]
+
+
+def test_decode_batch_entries_independent(setup):
+    """A garbage row in the decode batch must not affect other rows."""
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    kc = np.random.default_rng(1).normal(
+        size=(cfg.layers, 2, cfg.t_max, cfg.d)).astype(np.float32)
+    vc = kc * 0.5
+    tok = np.array([7, 9], np.int32)
+    pos = np.array([3, 5], np.int32)
+    l2, _, _ = M.decode(params, tok, kc, vc, pos, cfg, gv)
+    # change row 1's cache & token; row 0 logits unchanged
+    kc2 = kc.copy()
+    kc2[:, 1] *= 2.0
+    tok2 = np.array([7, 11], np.int32)
+    l2b, _, _ = M.decode(params, tok2, kc2, vc, pos, cfg, gv)
+    np.testing.assert_allclose(np.asarray(l2)[0], np.asarray(l2b)[0],
+                               atol=1e-5)
+
+
+def test_train_forward_matches_quantless_variant(setup):
+    """train_forward (plain jnp) == score with act=none, rank=0."""
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    toks = np.arange(2 * 6, dtype=np.int32).reshape(2, 6) % cfg.vocab
+    a = np.asarray(M.train_forward(params, toks, cfg))
+    b = np.asarray(M.score(params, toks, cfg, gv))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_act_quant_modes_change_output(setup):
+    cfg, params = setup
+    toks = np.arange(6, dtype=np.int32)[None, :] % cfg.vocab
+    outs = {}
+    for act in ["none", "mx8", "mx6", "int8"]:
+        gv = M.GraphVariant(act=act, rank=0)
+        vp = M.attach_variant_params(params, cfg, gv)
+        outs[act] = np.asarray(M.score(vp, toks, cfg, gv))
+    assert np.abs(outs["none"] - outs["mx6"]).max() > 1e-5
+    # lower precision -> larger deviation from fp32
+    d8 = np.abs(outs["none"] - outs["mx8"]).mean()
+    d6 = np.abs(outs["none"] - outs["mx6"]).mean()
+    assert d6 > d8

@@ -1,0 +1,96 @@
+"""PTQ pipeline + calibration on a tiny trained-ish model."""
+
+import jax
+import numpy as np
+import pytest
+
+from compile import calibration, model as M, pipeline
+
+
+@pytest.fixture(scope="module")
+def quant_setup(dataset):
+    cfg = M.make_config("opt-tiny", vocab=dataset.vocab.size)
+    params = M.init_params(cfg, seed=2)
+    stats = calibration.collect_stats(params, dataset.calib[:6], cfg)
+    return cfg, params, stats
+
+
+def test_calibration_stats_shapes(quant_setup):
+    cfg, params, stats = quant_setup
+    assert len(stats) == cfg.layers * 6
+    st = stats["layers.0.fc1"]
+    assert st.a_bar.shape == (cfg.d,)
+    assert st.h.shape == (cfg.d, cfg.d)
+    assert np.all(st.a_bar >= 0)
+    assert st.n_tokens > 0
+    assert st.x_sample is not None and st.x_sample.shape[1] == cfg.d
+
+
+def test_hessian_is_psd(quant_setup):
+    _, _, stats = quant_setup
+    h = stats["layers.0.wq"].h
+    eig = np.linalg.eigvalsh((h + h.T) / 2)
+    assert eig.min() > -1e-6
+
+
+@pytest.mark.parametrize("method", ["fp16", "mxint-w4a8", "l2qer-w4a8",
+                                    "gptq-w4", "awq-w4", "llmint4",
+                                    "smoothquant-w8a8", "clipq-w6a6"])
+def test_quantize_model_every_method(quant_setup, method):
+    cfg, params, stats = quant_setup
+    spec = pipeline.METHODS[method]
+    qp, meta = pipeline.quantize_model(params, cfg, spec, stats,
+                                       rank_pad=16)
+    assert meta["avg_w_bits"] > 0
+    gv = pipeline.graph_variant_for(spec, 16)
+    # variant params must match the graph's expectations
+    lin = qp["layers"][0]["wq"]
+    assert ("a" in lin) == (gv.rank > 0)
+    assert ("smooth" in lin) == gv.needs_smooth
+    # weights must be finite and shaped
+    for name, arr in M.flatten_with_names(qp):
+        assert np.isfinite(arr).all(), name
+
+
+def test_avg_bits_ordering(quant_setup):
+    cfg, params, stats = quant_setup
+    bits = {}
+    for m in ["fp16", "mxint-w4a8", "l2qer-w4a8", "smoothquant-w8a8"]:
+        _, meta = pipeline.quantize_model(
+            params, cfg, pipeline.METHODS[m], stats)
+        bits[m] = meta["avg_w_bits"]
+    assert bits["fp16"] == 16.0
+    assert bits["mxint-w4a8"] == pytest.approx(4.25)
+    assert bits["l2qer-w4a8"] > bits["mxint-w4a8"]  # low-rank overhead
+    assert bits["l2qer-w4a8"] < bits["smoothquant-w8a8"]
+
+
+def test_l2qer_reduces_weight_error_vs_plain(quant_setup):
+    """The reconstructed weight must be closer to W than plain W_q."""
+    cfg, params, stats = quant_setup
+    spec_plain = pipeline.METHODS["mxint-w2a8"]
+    spec_l2 = pipeline.METHODS["l2qer-w2a8"]
+    qp_p, _ = pipeline.quantize_model(params, cfg, spec_plain, stats)
+    qp_l, _ = pipeline.quantize_model(params, cfg, spec_l2, stats)
+    w = np.asarray(params["layers"][0]["fc1"]["w"])
+    wq = np.asarray(qp_p["layers"][0]["fc1"]["w"])
+    lin = qp_l["layers"][0]["fc1"]
+    w_recon = np.asarray(lin["w"]) + np.asarray(lin["a"]) @ np.asarray(
+        lin["b"])
+    assert np.abs(w - w_recon).mean() < np.abs(w - wq).mean()
+
+
+def test_graph_tags_stable(quant_setup):
+    spec = pipeline.METHODS["l2qer-w4a8"]
+    gv = pipeline.graph_variant_for(spec, 16)
+    assert gv.tag == "act-mx8_k16"
+    gv0 = pipeline.graph_variant_for(pipeline.METHODS["fp16"], 0)
+    assert gv0.tag == "act-none_k0"
+
+
+def test_opt_cost_recorded(quant_setup):
+    cfg, params, stats = quant_setup
+    _, meta = pipeline.quantize_model(
+        params, cfg, pipeline.METHODS["l2qer-w4a8"], stats)
+    assert meta["opt_seconds"] > 0
+    assert meta["spec"]["algo"] == "rtn"

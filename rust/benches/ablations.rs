@@ -1,0 +1,57 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//!  * b_h — precision of the low-rank factors A_k/B_k (paper fixes 8-bit
+//!    MXINT; we sweep {4, 8, fp32}),
+//!  * k   — reconstruction rank at the W2A8 stress setting (16 vs 64),
+//!  * S   — the activation-induced scaling (LQER vs L²QER at equal k).
+//!
+//! Usage: `cargo bench --bench ablations [-- --fast]`
+
+use lqer::config::Manifest;
+use lqer::eval;
+use lqer::runtime::{ModelRunner, Runtime};
+use lqer::util::bench::Table;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let windows = if fast { 4 } else { 12 };
+    let m = Manifest::load(&lqer::default_artifacts_dir())
+        .expect("run `make artifacts` first");
+    let rt = Runtime::cpu().unwrap();
+    let stream =
+        lqer::util::read_u16_file(&m.data_dir().join("test.u16")).unwrap();
+    let model = "opt-mini";
+
+    let rows: &[(&str, &str)] = &[
+        ("FP16 reference", "fp16"),
+        ("plain MXINT W2A8 (no reconstruction)", "mxint-w2a8"),
+        ("LQER k=64 (no S)", "lqer-w2a8"),
+        ("L2QER k=16", "l2qer-w2a8-rank16"),
+        ("L2QER k=64, b_h=4", "l2qer-w2a8-lr4"),
+        ("L2QER k=64, b_h=8 (paper)", "l2qer-w2a8"),
+        ("L2QER k=64, b_h=fp32", "l2qer-w2a8-lrfp"),
+    ];
+    let mut t = Table::new(
+        &format!("ablations on {model} (W2A8 stress setting, {windows} \
+                  ppl windows)"),
+        &["variant", "ppl", "avg w bits"],
+    );
+    for (label, method) in rows {
+        let runner = ModelRunner::new(&m, model, method)
+            .unwrap_or_else(|e| panic!("{method}: {e:#}"));
+        let r = eval::ppl::perplexity(&rt, &m, &runner, &stream, windows)
+            .unwrap();
+        let bits = m
+            .run(model, method)
+            .ok()
+            .and_then(|run| m.run_meta(run).ok())
+            .and_then(|meta| meta.f64_at("avg_w_bits").ok())
+            .unwrap_or(f64::NAN);
+        t.row(vec![label.to_string(), format!("{:.3}", r.ppl),
+                   format!("{bits:.2}")]);
+    }
+    print!("{}", t.render());
+    println!("\nreading: the factor precision b_h trades ~2 bits/weight \
+              of overhead for error-reconstruction fidelity; k trades \
+              compute (+(m+n)k MACs) for recovery.");
+}

@@ -1,0 +1,100 @@
+//! Microbenchmarks of the L3 substrates (quantizers, SVD, JSON, sampling,
+//! KV-cache ops) — the profile base for the §Perf iteration log.
+//!
+//! Usage: `cargo bench --bench microbench [-- --fast]`
+
+use lqer::kvcache::KvCache;
+use lqer::linalg::{svd, Mat};
+use lqer::quant::{intq, mxint::MxFormat};
+use lqer::util::bench::{Bench, Stats};
+use lqer::util::json;
+use lqer::util::rng::Rng;
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let b = if fast { Bench::quick() } else { Bench::default() };
+    let mut rng = Rng::new(42);
+    let mut report: Vec<Stats> = Vec::new();
+
+    // MXINT weight quantization of a mini-sized fc1 (192x768).
+    let w: Vec<f32> =
+        (0..192 * 768).map(|_| rng.normal() as f32 * 0.3).collect();
+    report.push(b.run("mxint4 quant_cols 192x768", || {
+        let mut data = w.clone();
+        MxFormat::weight(4).quant_cols(&mut data, 768);
+        std::hint::black_box(&data);
+    }));
+    report.push(b.run("mxint8 quant_rows 384x192 (act)", || {
+        let mut data = w[..384 * 192].to_vec();
+        MxFormat::act(8).quant_rows(&mut data, 192);
+        std::hint::black_box(&data);
+    }));
+    report.push(b.run("int4 g128 quant 192x768", || {
+        let mut data = w.clone();
+        intq::int_quant_group_cols(&mut data, 768, 4, 128);
+        std::hint::black_box(&data);
+    }));
+
+    // SVD of a quantization-error-sized matrix.
+    let e: Vec<f64> = (0..96 * 192).map(|_| rng.normal() * 0.01).collect();
+    let mat = Mat::from_vec(96, 192, e);
+    report.push(b.run("jacobi svd 96x192", || {
+        std::hint::black_box(svd::singular_values(&mat));
+    }));
+
+    // JSON parse of a manifest-sized document.
+    let doc = {
+        let mut items = Vec::new();
+        for i in 0..200 {
+            items.push(format!(
+                r#"{{"model":"opt-mini","method":"m{i}","graph":"act-mx8_k16","weights":"runs/w{i}.bin","meta":"runs/m{i}.json"}}"#
+            ));
+        }
+        format!(r#"{{"runs":[{}]}}"#, items.join(","))
+    };
+    report.push(b.run("json parse 200-run manifest", || {
+        std::hint::black_box(json::parse(&doc).unwrap());
+    }));
+
+    // Sampling from a vocab-sized logits row.
+    let logits: Vec<f32> = (0..440).map(|_| rng.normal() as f32).collect();
+    let mut srng = Rng::new(1);
+    report.push(b.run("top-8 sample from 440 logits", || {
+        std::hint::black_box(lqer::coordinator::sample(
+            &logits,
+            lqer::coordinator::Sampling::TopK {
+                k: 8,
+                temperature: 0.8,
+                seed: 3,
+            },
+            &mut srng,
+        ));
+    }));
+    report.push(b.run("log_prob over 440 logits", || {
+        std::hint::black_box(lqer::eval::log_prob(&logits, 17));
+    }));
+
+    // KV-cache append for a mini-sized decode batch.
+    let (layers, batch, t_max, d) = (6, 8, 160, 192);
+    let mut cache = KvCache::new(layers, batch, t_max, d);
+    let slots: Vec<usize> =
+        (0..batch).map(|i| cache.alloc(i as u64).unwrap()).collect();
+    let k_new = vec![0.1f32; layers * batch * d];
+    report.push(b.run("kvcache append_rows L6 B8 d192", || {
+        // reset positions by re-alloc when full
+        if cache.pos(0) >= t_max {
+            for &s in &slots {
+                cache.free(s);
+            }
+            for i in 0..batch {
+                cache.alloc(100 + i as u64);
+            }
+        }
+        cache.append_rows(&slots, &k_new, &k_new).unwrap();
+    }));
+
+    println!("\n== microbench ==");
+    for s in &report {
+        println!("{}", s.report());
+    }
+}

@@ -1,0 +1,125 @@
+//! Regenerates the paper's *figures* as printed series (DESIGN.md §4):
+//!
+//!   Figure 1a — singular-value spectra of E_q vs S·E_q (rust SVD)
+//!   Figure 3  — perplexity vs rank k, LQER vs L²QER
+//!   Figure 4  — per-layer approximation error e_a (Eq. 15)
+//!
+//! Usage: `cargo bench --bench paper_figures [-- --fig 1a|3|4] [-- --fast]`
+
+use lqer::analysis;
+use lqer::config::Manifest;
+use lqer::eval;
+use lqer::runtime::{ModelRunner, Runtime};
+use lqer::util::bench::Table;
+
+fn fig1a(m: &Manifest) {
+    let s = analysis::fig1a_spectra(&m.dir.join("fig1a"))
+        .expect("fig1a artifacts");
+    println!("\nFigure 1a — normalized singular values of the W3 \
+              quantization error ({})", s.layer);
+    let mut t = Table::new(
+        "spectra (equal Frobenius norm, paper footnote 1)",
+        &["i", "LQER: sigma_i(E_q)", "L2QER: sigma_i(S E_q)"],
+    );
+    let step = (s.lqer.len() / 24).max(1);
+    for i in (0..s.lqer.len()).step_by(step) {
+        t.row(vec![i.to_string(), format!("{:.4}", s.lqer[i]),
+                   format!("{:.4}", s.l2qer[i])]);
+    }
+    print!("{}", t.render());
+    let mut e = Table::new("top-k energy fraction (steeper = better)",
+                           &["k", "LQER", "L2QER"]);
+    for k in [4, 8, 16, 32, 64, 128] {
+        e.row(vec![
+            k.to_string(),
+            format!("{:.3}", analysis::Spectra::energy_at(&s.lqer, k)),
+            format!("{:.3}", analysis::Spectra::energy_at(&s.l2qer, k)),
+        ]);
+    }
+    print!("{}", e.render());
+}
+
+fn fig3(m: &Manifest, windows: usize) {
+    let rt = Runtime::cpu().unwrap();
+    let stream =
+        lqer::util::read_u16_file(&m.data_dir().join("test.u16")).unwrap();
+    let model = m.fig3_model.clone();
+    let fp16 = {
+        let runner = ModelRunner::new(m, &model, "fp16").unwrap();
+        eval::ppl::perplexity(&rt, m, &runner, &stream, windows)
+            .unwrap()
+            .ppl
+    };
+    let plain = {
+        let runner = ModelRunner::new(m, &model, "mxint-w2a8").unwrap();
+        eval::ppl::perplexity(&rt, m, &runner, &stream, windows)
+            .unwrap()
+            .ppl
+    };
+    println!("\nFigure 3 — perplexity vs rank k ({model}, W2A8; FP16 = \
+              {fp16:.3}, plain MXINT = {plain:.3})");
+    let mut t = Table::new("ppl vs k", &["k", "LQER", "L2QER"]);
+    for &k in &m.fig3_ranks {
+        let mut row = vec![k.to_string()];
+        for prefix in ["lqer", "l2qer"] {
+            let runner = ModelRunner::new(
+                m, &model, &format!("{prefix}-w2a8-k{k}")).unwrap();
+            let p = eval::ppl::perplexity(&rt, m, &runner, &stream,
+                                          windows)
+                .unwrap()
+                .ppl;
+            row.push(format!("{p:.3}"));
+        }
+        t.row(row);
+    }
+    print!("{}", t.render());
+}
+
+fn fig4(m: &Manifest) {
+    println!("\nFigure 4 — per-layer approximation error e_a (Eq. 15), \
+              LQER vs L2QER (W2A8, k=64, {})", m.serve.model);
+    let lqer_meta = m
+        .run_meta(m.run(&m.serve.model, "lqer-w2a8").unwrap())
+        .unwrap();
+    let l2_meta = m
+        .run_meta(m.run(&m.serve.model, "l2qer-w2a8").unwrap())
+        .unwrap();
+    let e1 = analysis::approx_errors(&lqer_meta);
+    let e2 = analysis::approx_errors(&l2_meta);
+    let mut t = Table::new("approximation error per linear layer",
+                           &["layer", "LQER e_a", "L2QER e_a", "winner"]);
+    let mut l2_wins = 0;
+    for ((k1, v1), (_, v2)) in e1.iter().zip(&e2) {
+        let win = if v2 < v1 { "L2QER" } else { "LQER" };
+        if v2 < v1 {
+            l2_wins += 1;
+        }
+        t.row(vec![k1.clone(), format!("{v1:.5}"), format!("{v2:.5}"),
+                   win.into()]);
+    }
+    print!("{}", t.render());
+    println!("L2QER reconstructs better on {l2_wins}/{} layers",
+             e1.len());
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let fast = args.iter().any(|a| a == "--fast");
+    let fig: Option<String> = args
+        .iter()
+        .position(|a| a == "--fig")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let m = Manifest::load(&lqer::default_artifacts_dir())
+        .expect("run `make artifacts` first");
+    let want = |f: &str| fig.is_none() || fig.as_deref() == Some(f);
+    if want("1a") {
+        fig1a(&m);
+    }
+    if want("3") {
+        fig3(&m, if fast { 4 } else { 12 });
+    }
+    if want("4") {
+        fig4(&m);
+    }
+}

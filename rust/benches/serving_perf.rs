@@ -1,0 +1,86 @@
+//! Serving performance bench (the prompt-mandated end-to-end driver and
+//! the §Perf measurement base): batched load through the engine for the
+//! FP16 baseline vs L²QER-W4A8, across decode batch buckets.
+//!
+//! Reports decode tokens/s, mean step latency, runtime-boundary overhead
+//! (upload/download vs execute), and batch-occupancy.
+//!
+//! Usage: `cargo bench --bench serving_perf [-- --fast]`
+
+use lqer::config::Manifest;
+use lqer::coordinator::{loadtest, EngineConfig};
+use lqer::util::bench::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let fast = args.iter().any(|a| a == "--fast");
+    let m = Manifest::load(&lqer::default_artifacts_dir())
+        .expect("run `make artifacts` first");
+    let requests = if fast { 8 } else { 24 };
+    let max_new = if fast { 12 } else { 24 };
+
+    let mut t = Table::new(
+        &format!(
+            "serving load test — {} ({requests} requests x {max_new} \
+             new tokens)",
+            m.serve.model
+        ),
+        &[
+            "method", "batch", "decode tok/s", "step ms", "prefill ms",
+            "occupancy", "exec %", "upload %", "download %",
+        ],
+    );
+    for method in m.serve.methods.clone() {
+        for &batch in &m.serve.decode_batches.clone() {
+            let cfg = EngineConfig {
+                model: m.serve.model.clone(),
+                method: method.clone(),
+                decode_batch: batch,
+                prefill_buckets: m
+                    .serve
+                    .prefill_shapes
+                    .iter()
+                    .map(|(_, tt)| *tt)
+                    .collect(),
+                max_prefill_per_step: 2,
+            };
+            let stats = loadtest::run_loadtest(&m, &cfg, requests, max_new)
+                .expect("loadtest");
+            let step_ms = if stats.decode_steps > 0 {
+                stats.decode_ns as f64 / stats.decode_steps as f64 / 1e6
+            } else {
+                0.0
+            };
+            let prefill_ms = if stats.prefill_steps > 0 {
+                stats.prefill_ns as f64 / stats.prefill_steps as f64 / 1e6
+            } else {
+                0.0
+            };
+            let total_ns = (stats.exec.exec_ns + stats.exec.upload_ns
+                + stats.exec.download_ns)
+                .max(1);
+            t.row(vec![
+                method.clone(),
+                batch.to_string(),
+                format!("{:.0}", stats.decode_tokens_per_sec()),
+                format!("{step_ms:.2}"),
+                format!("{prefill_ms:.1}"),
+                format!("{:.2}", stats.mean_batch_occupancy()),
+                format!("{:.0}%",
+                        stats.exec.exec_ns as f64 / total_ns as f64 * 100.0),
+                format!("{:.0}%",
+                        stats.exec.upload_ns as f64 / total_ns as f64
+                        * 100.0),
+                format!("{:.0}%",
+                        stats.exec.download_ns as f64 / total_ns as f64
+                        * 100.0),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    println!(
+        "\nnote: FP16 vs L2QER wall-clock is expected to be ~equal on the \
+         CPU PJRT backend (numerics are simulated in f32); the TPU-side \
+         win is analytic — see DESIGN.md §8 and EXPERIMENTS.md §Perf-L1."
+    );
+}

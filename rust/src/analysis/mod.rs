@@ -1,0 +1,130 @@
+//! Analysis tooling behind the paper's figures.
+//!
+//! * Figure 1a: singular-value spectra of E_q vs S·E_q, computed with the
+//!   in-crate Jacobi SVD on the exported error matrix of a trained layer.
+//! * Figure 4: per-layer approximation error e_a (Eq. 15), read from the
+//!   PTQ run metadata.
+//! * Figure 3: perplexity-vs-rank series (driven by eval::ppl over the
+//!   rank-sweep runs; assembled by the bench harness).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::linalg::{svd, Mat};
+use crate::util::json;
+
+/// Normalized spectra of the quantization error with and without the
+/// activation-induced scaling (paper Figure 1a, footnote 1).
+#[derive(Debug, Clone)]
+pub struct Spectra {
+    pub layer: String,
+    pub lqer: Vec<f64>,  // sigma(alpha * E_q)
+    pub l2qer: Vec<f64>, // sigma(S * E_q)
+}
+
+impl Spectra {
+    /// Cumulative energy fraction captured by the top-k components.
+    pub fn energy_at(series: &[f64], k: usize) -> f64 {
+        let total: f64 = series.iter().map(|s| s * s).sum();
+        if total == 0.0 {
+            return 0.0;
+        }
+        series[..k.min(series.len())]
+            .iter()
+            .map(|s| s * s)
+            .sum::<f64>()
+            / total
+    }
+}
+
+/// Compute Figure-1a spectra from the exported artifacts
+/// (`artifacts/fig1a/{fig1a.json, eq.f32, s.f32}`).
+pub fn fig1a_spectra(fig1a_dir: &Path) -> Result<Spectra> {
+    let info = json::parse_file(&fig1a_dir.join("fig1a.json"))?;
+    let shape = info.req("shape")?;
+    let m = shape.as_array().unwrap()[0].as_usize().unwrap();
+    let n = shape.as_array().unwrap()[1].as_usize().unwrap();
+    let eq_raw =
+        crate::util::read_f32_file(&fig1a_dir.join(info.str_at("eq")?))?;
+    let s_raw =
+        crate::util::read_f32_file(&fig1a_dir.join(info.str_at("s")?))?;
+    anyhow::ensure!(eq_raw.len() == m * n, "eq size");
+    anyhow::ensure!(s_raw.len() == m, "s size");
+
+    let eq = Mat::from_f32(m, n, &eq_raw);
+    let mut scaled = eq.clone();
+    for r in 0..m {
+        scaled.scale_row(r, s_raw[r] as f64);
+    }
+    // Footnote 1: rescale E_q to share the Frobenius norm of S E_q.
+    let alpha = scaled.frobenius() / eq.frobenius().max(1e-30);
+    let mut eq_n = eq;
+    for v in &mut eq_n.data {
+        *v *= alpha;
+    }
+    Ok(Spectra {
+        layer: info.str_at("layer")?,
+        lqer: svd::singular_values(&eq_n),
+        l2qer: svd::singular_values(&scaled),
+    })
+}
+
+/// Figure-4 data: per-layer approximation error for one PTQ run, ordered
+/// by (layer index, linear name).
+pub fn approx_errors(meta: &json::Value) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    if let Some(errs) = meta.get("approx_err").and_then(|v| v.as_object()) {
+        for (k, v) in errs {
+            if let Some(f) = v.as_f64() {
+                out.push((k.clone(), f));
+            }
+        }
+    }
+    out.sort_by_key(|(k, _)| {
+        let parts: Vec<&str> = k.split('.').collect();
+        let layer: usize = parts.get(1).and_then(|p| p.parse().ok())
+            .unwrap_or(0);
+        let lin = ["wq", "wk", "wv", "wo", "fc1", "fc2"]
+            .iter()
+            .position(|n| parts.get(2) == Some(n))
+            .unwrap_or(9);
+        layer * 10 + lin
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_fraction_monotone() {
+        let s = vec![4.0, 2.0, 1.0, 0.5];
+        let e1 = Spectra::energy_at(&s, 1);
+        let e2 = Spectra::energy_at(&s, 2);
+        let e4 = Spectra::energy_at(&s, 4);
+        assert!(e1 < e2 && e2 < e4);
+        assert!((e4 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn approx_errors_sorted_by_layer_then_linear() {
+        let meta = json::parse(
+            r#"{"approx_err": {"layers.1.wq": 0.2, "layers.0.fc2": 0.1,
+                               "layers.0.wq": 0.3}}"#,
+        )
+        .unwrap();
+        let errs = approx_errors(&meta);
+        let keys: Vec<&str> =
+            errs.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys,
+                   vec!["layers.0.wq", "layers.0.fc2", "layers.1.wq"]);
+    }
+
+    #[test]
+    fn empty_meta_no_errors() {
+        let meta = json::parse("{}").unwrap();
+        assert!(approx_errors(&meta).is_empty());
+    }
+}

@@ -1,0 +1,250 @@
+//! Typed views over the artifact manifest (`artifacts/manifest.json`) and
+//! per-run metadata — the contract between the python AOT path and the
+//! rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Value};
+
+/// Architecture of one trained model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub t_max: usize,
+    pub n_params: usize,
+}
+
+/// One PTQ run: a (model, method) pair with its weights + metadata.
+#[derive(Debug, Clone)]
+pub struct RunInfo {
+    pub model: String,
+    pub method: String,
+    pub graph: String, // graph-variant tag, e.g. "act-mx8_k16"
+    pub weights: PathBuf,
+    pub meta: PathBuf,
+}
+
+/// One lowered HLO graph.
+#[derive(Debug, Clone)]
+pub struct GraphInfo {
+    pub model: String,
+    pub graph: String,
+    pub entry: String, // score | prefill | decode
+    pub b: usize,
+    pub t: usize,
+    pub path: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeInfo {
+    pub model: String,
+    pub methods: Vec<String>,
+    pub decode_batches: Vec<usize>,
+    pub prefill_shapes: Vec<(usize, usize)>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelInfo>,
+    pub runs: Vec<RunInfo>,
+    pub graphs: Vec<GraphInfo>,
+    pub serve: ServeInfo,
+    pub score_shape: (usize, usize),
+    pub fig3_model: String,
+    pub fig3_ranks: Vec<usize>,
+}
+
+fn as_usize_list(v: &Value) -> Vec<usize> {
+    v.as_array()
+        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let v = json::parse_file(&path)?;
+
+        let mut models = Vec::new();
+        for (name, m) in v.req("models")?.as_object().unwrap_or(&[]) {
+            models.push(ModelInfo {
+                name: name.clone(),
+                vocab: m.usize_at("vocab")?,
+                d: m.usize_at("d")?,
+                layers: m.usize_at("layers")?,
+                heads: m.usize_at("heads")?,
+                ffn: m.usize_at("ffn")?,
+                t_max: m.usize_at("t_max")?,
+                n_params: m.usize_at("n_params")?,
+            });
+        }
+
+        let fix_path = |p: &str| -> PathBuf {
+            let pb = PathBuf::from(p);
+            if pb.is_absolute() {
+                pb
+            } else {
+                artifacts_dir.join(p)
+            }
+        };
+
+        let mut runs = Vec::new();
+        for r in v.req("runs")?.as_array().unwrap_or(&[]) {
+            runs.push(RunInfo {
+                model: r.str_at("model")?,
+                method: r.str_at("method")?,
+                graph: r.str_at("graph")?,
+                weights: fix_path(&r.str_at("weights")?),
+                meta: fix_path(&r.str_at("meta")?),
+            });
+        }
+
+        let mut graphs = Vec::new();
+        for g in v.req("graphs")?.as_array().unwrap_or(&[]) {
+            graphs.push(GraphInfo {
+                model: g.str_at("model")?,
+                graph: g.str_at("graph")?,
+                entry: g.str_at("entry")?,
+                b: g.usize_at("b")?,
+                t: g.usize_at("t")?,
+                path: fix_path(&g.str_at("path")?),
+            });
+        }
+
+        let sv = v.req("serve")?;
+        let serve = ServeInfo {
+            model: sv.str_at("model")?,
+            methods: sv
+                .req("methods")?
+                .as_array()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_str().map(str::to_string))
+                .collect(),
+            decode_batches: as_usize_list(sv.req("decode_batches")?),
+            prefill_shapes: sv
+                .req("prefill_shapes")?
+                .as_array()
+                .unwrap_or(&[])
+                .iter()
+                .map(|p| {
+                    let l = as_usize_list(p);
+                    (l[0], l[1])
+                })
+                .collect(),
+        };
+
+        let ss = as_usize_list(v.req("score_shape")?);
+        let fig3 = v.req("fig3")?;
+        Ok(Manifest {
+            dir: artifacts_dir.to_path_buf(),
+            models,
+            runs,
+            graphs,
+            serve,
+            score_shape: (ss[0], ss[1]),
+            fig3_model: fig3.str_at("model")?,
+            fig3_ranks: as_usize_list(fig3.req("ranks")?),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelInfo> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))
+    }
+
+    pub fn run(&self, model: &str, method: &str) -> anyhow::Result<&RunInfo> {
+        self.runs
+            .iter()
+            .find(|r| r.model == model && r.method == method)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no run for model={model} method={method}")
+            })
+    }
+
+    pub fn graph(
+        &self,
+        model: &str,
+        graph: &str,
+        entry: &str,
+        b: usize,
+        t: usize,
+    ) -> anyhow::Result<&GraphInfo> {
+        self.graphs
+            .iter()
+            .find(|g| {
+                g.model == model
+                    && g.graph == graph
+                    && g.entry == entry
+                    && g.b == b
+                    && (entry == "decode" || g.t == t)
+            })
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no graph model={model} tag={graph} entry={entry} b={b} t={t}"
+                )
+            })
+    }
+
+    pub fn methods_for(&self, model: &str) -> Vec<String> {
+        self.runs
+            .iter()
+            .filter(|r| r.model == model)
+            .map(|r| r.method.clone())
+            .collect()
+    }
+
+    pub fn data_dir(&self) -> PathBuf {
+        self.dir.join("data")
+    }
+
+    /// Per-run metadata (avg bits, approximation errors, opt seconds).
+    pub fn run_meta(&self, run: &RunInfo) -> anyhow::Result<Value> {
+        json::parse_file(&run.meta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("lqer_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+          "models": {"opt-x": {"vocab": 440, "d": 64, "layers": 2,
+                               "heads": 2, "ffn": 256, "t_max": 160,
+                               "n_params": 1000, "name": "opt-x"}},
+          "runs": [{"model": "opt-x", "method": "fp16",
+                    "graph": "act-none_k0", "weights": "runs/w.bin",
+                    "meta": "runs/meta.json"}],
+          "graphs": [{"model": "opt-x", "graph": "act-none_k0",
+                      "entry": "score", "b": 4, "t": 96,
+                      "path": "hlo/x.hlo.txt"}],
+          "serve": {"model": "opt-x", "methods": ["fp16"],
+                    "decode_batches": [1, 4],
+                    "prefill_shapes": [[1, 16]]},
+          "score_shape": [4, 96],
+          "fig3": {"model": "opt-x", "ranks": [1, 2]}
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model("opt-x").unwrap().d, 64);
+        assert!(m.model("nope").is_err());
+        let r = m.run("opt-x", "fp16").unwrap();
+        assert!(r.weights.ends_with("runs/w.bin"));
+        assert!(m.graph("opt-x", "act-none_k0", "score", 4, 96).is_ok());
+        assert!(m.graph("opt-x", "act-none_k0", "score", 8, 96).is_err());
+        assert_eq!(m.serve.decode_batches, vec![1, 4]);
+        assert_eq!(m.fig3_ranks, vec![1, 2]);
+    }
+}

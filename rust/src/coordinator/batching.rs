@@ -1,0 +1,89 @@
+//! Batching policy helpers: prefill length buckets and admission ordering.
+//!
+//! Prefill graphs are shape-specialized (b=1, t in a small bucket set);
+//! the scheduler right-pads each prompt to the smallest bucket that fits.
+//! Padding waste is the price of AOT shape specialization — the bucket set
+//! is chosen so waste stays under ~50% for the corpus length distribution.
+
+/// Smallest bucket >= len (buckets need not be sorted).
+pub fn pick_bucket(buckets: &[usize], len: usize) -> Option<usize> {
+    buckets
+        .iter()
+        .copied()
+        .filter(|&b| b >= len.max(1))
+        .min()
+}
+
+/// Padding overhead fraction for a given prompt length.
+pub fn padding_waste(buckets: &[usize], len: usize) -> Option<f64> {
+    pick_bucket(buckets, len).map(|b| (b - len) as f64 / b as f64)
+}
+
+/// Greedy micro-batch packing: group waiting prompt lengths so each group
+/// shares a bucket (used by the batched-scoring evaluator, which *can*
+/// batch prefills, unlike the b=1 serving prefill graphs).
+pub fn pack_by_bucket(
+    buckets: &[usize],
+    lens: &[usize],
+    group: usize,
+) -> Vec<(usize, Vec<usize>)> {
+    // (bucket, indices) groups, preserving FIFO order within a bucket.
+    let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+    for (i, &len) in lens.iter().enumerate() {
+        let Some(b) = pick_bucket(buckets, len) else { continue };
+        match groups
+            .iter_mut()
+            .find(|(gb, idxs)| *gb == b && idxs.len() < group)
+        {
+            Some((_, idxs)) => idxs.push(i),
+            None => groups.push((b, vec![i])),
+        }
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_smallest_fitting_bucket() {
+        let buckets = [96, 16];
+        assert_eq!(pick_bucket(&buckets, 1), Some(16));
+        assert_eq!(pick_bucket(&buckets, 16), Some(16));
+        assert_eq!(pick_bucket(&buckets, 17), Some(96));
+        assert_eq!(pick_bucket(&buckets, 96), Some(96));
+        assert_eq!(pick_bucket(&buckets, 97), None);
+    }
+
+    #[test]
+    fn waste_is_fractional() {
+        let buckets = [16];
+        assert_eq!(padding_waste(&buckets, 16), Some(0.0));
+        assert_eq!(padding_waste(&buckets, 8), Some(0.5));
+    }
+
+    #[test]
+    fn packing_respects_group_size_and_fifo() {
+        let buckets = [16, 96];
+        let lens = [4, 8, 40, 12, 16, 90];
+        let groups = pack_by_bucket(&buckets, &lens, 3);
+        // bucket 16 gets (0,1,3) then (4); bucket 96 gets (2,5).
+        assert_eq!(groups[0], (16, vec![0, 1, 3]));
+        assert!(groups.contains(&(96, vec![2, 5])));
+        assert!(groups.contains(&(16, vec![4])));
+        // FIFO within groups:
+        for (_, idxs) in &groups {
+            let mut sorted = idxs.clone();
+            sorted.sort_unstable();
+            assert_eq!(&sorted, idxs);
+        }
+    }
+
+    #[test]
+    fn too_long_prompts_dropped_from_packing() {
+        let groups = pack_by_bucket(&[16], &[4, 99], 4);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].1, vec![0]);
+    }
+}

@@ -1,0 +1,144 @@
+//! Load-test and pairwise-generation drivers built on the engine — used by
+//! the `serve-bench` / `judge` CLI commands, the serving bench, and the
+//! AlpacaEval-style Table 5 reproduction.
+
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use super::{EngineConfig, EngineHandle, EngineMetrics, Request, Response,
+            Sampling};
+use crate::config::Manifest;
+use crate::util::json;
+
+/// Prompts for driving the engine (the judge prompt set exported by the
+/// AOT path: short corpus-grammar prefixes).
+pub fn load_prompts(manifest: &Manifest) -> Result<Vec<Vec<u32>>> {
+    let v = json::parse_file(
+        &manifest.data_dir().join("judge_prompts.json"))?;
+    let mut out = Vec::new();
+    for p in v.req("prompts")?.as_array().unwrap_or(&[]) {
+        out.push(
+            p.as_array()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_usize().map(|u| u as u32))
+                .collect(),
+        );
+    }
+    anyhow::ensure!(!out.is_empty(), "no prompts");
+    Ok(out)
+}
+
+/// Submit `n` requests open-loop and wait for all of them; returns the
+/// engine metrics (throughput, latency percentiles, batch occupancy).
+pub fn run_loadtest(
+    manifest: &Manifest,
+    cfg: &EngineConfig,
+    n: usize,
+    max_new: usize,
+) -> Result<EngineMetrics> {
+    let prompts = load_prompts(manifest)?;
+    let engine = EngineHandle::spawn(manifest.dir.clone(), cfg.clone())?;
+    let mut rxs: Vec<mpsc::Receiver<Response>> = Vec::with_capacity(n);
+    for i in 0..n {
+        rxs.push(engine.submit(Request {
+            id: i as u64 + 1,
+            prompt: prompts[i % prompts.len()].clone(),
+            max_new_tokens: max_new,
+            sampling: Sampling::Greedy,
+        }));
+    }
+    for rx in rxs {
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("request dropped by engine"))?;
+    }
+    let metrics = engine.metrics()?;
+    engine.shutdown();
+    Ok(metrics)
+}
+
+/// Generate continuations for `prompts` with one engine.
+pub fn generate_all(
+    manifest: &Manifest,
+    cfg: &EngineConfig,
+    prompts: &[Vec<u32>],
+    max_new: usize,
+) -> Result<Vec<Vec<u32>>> {
+    let engine = EngineHandle::spawn(manifest.dir.clone(), cfg.clone())?;
+    let rxs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            engine.submit(Request {
+                id: i as u64 + 1,
+                prompt: p.clone(),
+                max_new_tokens: max_new,
+                sampling: Sampling::Greedy,
+            })
+        })
+        .collect();
+    let mut by_id: Vec<Vec<u32>> = vec![Vec::new(); prompts.len()];
+    for rx in rxs {
+        let resp = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("request dropped"))?;
+        by_id[(resp.id - 1) as usize] = resp.tokens;
+    }
+    engine.shutdown();
+    Ok(by_id)
+}
+
+/// Table 5: generate with methods A and B, judge with the FP16 model.
+pub fn run_judge(
+    manifest: &Manifest,
+    model: &str,
+    method_a: &str,
+    method_b: &str,
+    n: usize,
+    max_new: usize,
+) -> Result<crate::eval::judge::JudgeResult> {
+    let prompts: Vec<Vec<u32>> = load_prompts(manifest)?
+        .into_iter()
+        .take(n)
+        .collect();
+    let mk_cfg = |method: &str| EngineConfig {
+        model: model.to_string(),
+        method: method.to_string(),
+        decode_batch: *manifest
+            .serve
+            .decode_batches
+            .iter()
+            .max()
+            .unwrap_or(&4),
+        prefill_buckets: manifest
+            .serve
+            .prefill_shapes
+            .iter()
+            .map(|(_, t)| *t)
+            .collect(),
+        max_prefill_per_step: 2,
+    };
+    let gens_a = generate_all(manifest, &mk_cfg(method_a), &prompts,
+                              max_new)?;
+    let gens_b = generate_all(manifest, &mk_cfg(method_b), &prompts,
+                              max_new)?;
+
+    let rt = crate::runtime::Runtime::cpu()?;
+    let judge =
+        crate::runtime::ModelRunner::new(manifest, model, "fp16")?;
+    let mut result = crate::eval::judge::JudgeResult::default();
+    let eos = {
+        let tok = crate::tokenizer::Tokenizer::from_file(
+            &manifest.data_dir().join("vocab.json"))?;
+        tok.specials.eos
+    };
+    let strip = |g: &[u32]| -> Vec<u32> {
+        g.iter().take_while(|&&t| t != eos).copied().collect()
+    };
+    for ((p, a), b) in prompts.iter().zip(&gens_a).zip(&gens_b) {
+        crate::eval::judge::judge_pair(
+            &rt, manifest, &judge, p, &strip(a), &strip(b), &mut result)?;
+    }
+    Ok(result)
+}

@@ -1,0 +1,186 @@
+//! Engine metrics: throughput counters + streaming latency histograms.
+
+use crate::runtime::ExecStats;
+
+/// Fixed-bucket log-scale histogram for latencies (ms) / occupancy.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Bucket upper bounds (exclusive), last bucket catches the rest.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    n: u64,
+    max: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // 0.1ms .. ~100s, x2 per bucket.
+        let mut bounds = Vec::new();
+        let mut b = 0.1;
+        while b < 1e5 {
+            bounds.push(b);
+            b *= 2.0;
+        }
+        let n = bounds.len();
+        LatencyHistogram {
+            bounds,
+            counts: vec![0; n + 1],
+            sum: 0.0,
+            n: 0,
+            max: 0.0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| v < *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.n += 1;
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate percentile from bucket boundaries (upper bound of the
+    /// bucket containing the p-th sample).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.n as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.max
+                };
+            }
+        }
+        self.max
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EngineMetrics {
+    pub submitted: u64,
+    pub completed: u64,
+    pub tokens_generated: u64,
+    pub prefill_steps: u64,
+    pub prefill_ns: u64,
+    pub decode_steps: u64,
+    pub decode_ns: u64,
+    pub ttft_ms: LatencyHistogram,
+    pub total_ms: LatencyHistogram,
+    pub batch_occupancy: LatencyHistogram,
+    pub exec: ExecStats,
+}
+
+impl EngineMetrics {
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        if self.decode_ns == 0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / (self.decode_ns as f64 / 1e9)
+        }
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        self.batch_occupancy.mean()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests {}/{} done | tokens {} | prefill {} steps {:.1} ms avg \
+             | decode {} steps {:.2} ms avg | {:.1} tok/s decode | occupancy \
+             {:.2} | ttft p50 {:.0} ms p99 {:.0} ms",
+            self.completed,
+            self.submitted,
+            self.tokens_generated,
+            self.prefill_steps,
+            if self.prefill_steps > 0 {
+                self.prefill_ns as f64 / self.prefill_steps as f64 / 1e6
+            } else {
+                0.0
+            },
+            self.decode_steps,
+            if self.decode_steps > 0 {
+                self.decode_ns as f64 / self.decode_steps as f64 / 1e6
+            } else {
+                0.0
+            },
+            self.decode_tokens_per_sec(),
+            self.mean_batch_occupancy(),
+            self.ttft_ms.percentile(50.0),
+            self.ttft_ms.percentile(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let mut h = LatencyHistogram::default();
+        for v in [1.0, 2.0, 3.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(h.max(), 3.0);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let mut h = LatencyHistogram::default();
+        for i in 0..1000 {
+            h.record(i as f64 / 10.0);
+        }
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p99);
+        assert!(p50 >= 25.0 && p50 <= 102.4, "{p50}");
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn tokens_per_sec() {
+        let m = EngineMetrics {
+            tokens_generated: 100,
+            decode_ns: 2_000_000_000,
+            ..Default::default()
+        };
+        assert!((m.decode_tokens_per_sec() - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,492 @@
+//! L3 coordinator: request types, admission queue, continuous batcher, and
+//! the serving engine loop.
+//!
+//! Architecture (vLLM-style, scaled to this testbed):
+//!
+//! ```text
+//!  clients ── submit(Request + reply Sender) ──► admission queue (FIFO)
+//!                                                     │
+//!                                  engine thread (owns PJRT runtime)
+//!                                                     │
+//!        ┌─────────── scheduler iteration ────────────┤
+//!        │ 1. admit waiting requests into free KV slots (prefill, b=1,
+//!        │    bucketed sequence lengths, right-padded)
+//!        │ 2. one batched decode step over all active slots
+//!        │ 3. sample, detect EOS/limits, free slots, send responses
+//!        └────────────────────────────────────────────┘
+//! ```
+//!
+//! The PJRT client is not `Send`, so the engine thread constructs and owns
+//! the entire runtime; callers talk to it exclusively through channels
+//! ([`EngineHandle`]).  Continuous batching falls out of the slot design:
+//! new sequences join the decode batch as soon as a slot frees up, without
+//! draining the batch.
+
+pub mod batching;
+pub mod loadtest;
+pub mod metrics;
+pub mod server;
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::Manifest;
+use crate::kvcache::KvCache;
+use crate::runtime::{ModelRunner, Runtime};
+use crate::util::rng::Rng;
+
+pub use metrics::{EngineMetrics, LatencyHistogram};
+
+/// Decoding strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    Greedy,
+    /// top-k sampling with temperature.
+    TopK { k: usize, temperature: f32, seed: u64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    Length,
+    CacheFull,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    /// Wall-clock from submit to first generated token (ms).
+    pub ttft_ms: f64,
+    /// Wall-clock from submit to completion (ms).
+    pub total_ms: f64,
+}
+
+enum Msg {
+    Submit(Request, mpsc::Sender<Response>),
+    Metrics(mpsc::Sender<EngineMetrics>),
+    Shutdown,
+}
+
+/// Client-side handle to a running engine.
+pub struct EngineHandle {
+    tx: mpsc::Sender<Msg>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub model: String,
+    pub method: String,
+    /// Decode batch bucket (must have a lowered decode graph).
+    pub decode_batch: usize,
+    /// Prefill length buckets (must have lowered prefill graphs, b=1).
+    pub prefill_buckets: Vec<usize>,
+    /// Max prefills admitted per scheduler iteration (batching policy).
+    pub max_prefill_per_step: usize,
+}
+
+impl EngineHandle {
+    /// Start an engine thread for one (model, method) run.
+    pub fn spawn(
+        artifacts: std::path::PathBuf,
+        cfg: EngineConfig,
+    ) -> Result<EngineHandle> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("lqer-engine".into())
+            .spawn(move || {
+                match Engine::new(&artifacts, &cfg) {
+                    Ok(mut engine) => {
+                        let _ = ready_tx.send(Ok(()));
+                        engine.run(rx);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                }
+            })?;
+        ready_rx.recv()??;
+        Ok(EngineHandle { tx, join: Some(join) })
+    }
+
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Submit(req, tx));
+        rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn generate(&self, req: Request) -> Result<Response> {
+        let rx = self.submit(req);
+        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped request"))
+    }
+
+    pub fn metrics(&self) -> Result<EngineMetrics> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Metrics(tx))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine gone"))
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for EngineHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine internals (runs on the engine thread)
+// ---------------------------------------------------------------------------
+
+struct ActiveSeq {
+    request: Request,
+    reply: mpsc::Sender<Response>,
+    submitted: Instant,
+    ttft_ms: Option<f64>,
+    generated: Vec<u32>,
+    last_token: u32,
+    rng: Rng,
+}
+
+struct Waiting {
+    request: Request,
+    reply: mpsc::Sender<Response>,
+    submitted: Instant,
+}
+
+struct Engine {
+    manifest: Manifest,
+    rt: Runtime,
+    runner: ModelRunner,
+    cache: KvCache,
+    cfg: EngineConfig,
+    eos: u32,
+    waiting: std::collections::VecDeque<Waiting>,
+    active: Vec<Option<ActiveSeq>>, // indexed by KV slot
+    metrics: EngineMetrics,
+}
+
+impl Engine {
+    fn new(artifacts: &std::path::Path, cfg: &EngineConfig) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts)?;
+        let rt = Runtime::cpu()?;
+        let runner = ModelRunner::new(&manifest, &cfg.model, &cfg.method)?;
+        let info = runner.model.clone();
+        let tok = crate::tokenizer::Tokenizer::from_file(
+            &manifest.data_dir().join("vocab.json"),
+        )?;
+        let cache = KvCache::new(info.layers, cfg.decode_batch, info.t_max,
+                                 info.d);
+        // Pre-compile the decode + prefill graphs so first-request latency
+        // is honest (XLA CPU compilation takes seconds per graph).
+        runner.executable(&rt, &manifest, "decode", cfg.decode_batch, 0)?;
+        for &t in &cfg.prefill_buckets {
+            runner.executable(&rt, &manifest, "prefill", 1, t)?;
+        }
+        Ok(Engine {
+            manifest,
+            rt,
+            runner,
+            cache,
+            cfg: cfg.clone(),
+            eos: tok.specials.eos,
+            waiting: Default::default(),
+            active: (0..cfg.decode_batch).map(|_| None).collect(),
+            metrics: EngineMetrics::default(),
+        })
+    }
+
+    fn run(&mut self, rx: mpsc::Receiver<Msg>) {
+        loop {
+            // 1. Drain control/submission messages (block only when idle).
+            let idle = self.waiting.is_empty() && self.cache.free_count()
+                == self.cache.batch;
+            loop {
+                let msg = if idle && self.waiting.is_empty() {
+                    match rx.recv() {
+                        Ok(m) => m,
+                        Err(_) => return,
+                    }
+                } else {
+                    match rx.try_recv() {
+                        Ok(m) => m,
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => return,
+                    }
+                };
+                match msg {
+                    Msg::Submit(request, reply) => {
+                        self.metrics.submitted += 1;
+                        self.waiting.push_back(Waiting {
+                            request,
+                            reply,
+                            submitted: Instant::now(),
+                        });
+                    }
+                    Msg::Metrics(tx) => {
+                        let mut m = self.metrics.clone();
+                        m.exec = self.runner.stats();
+                        let _ = tx.send(m);
+                    }
+                    Msg::Shutdown => return,
+                }
+                if !idle {
+                    // Drain whatever is queued without blocking, then serve.
+                    continue;
+                }
+            }
+
+            // 2. Admit waiting requests into free slots (prefill).
+            let mut admitted = 0;
+            while admitted < self.cfg.max_prefill_per_step
+                && self.cache.free_count() > 0
+                && !self.waiting.is_empty()
+            {
+                let w = self.waiting.pop_front().unwrap();
+                if let Err(e) = self.admit(w) {
+                    crate::info!("admit failed: {e:#}");
+                }
+                admitted += 1;
+            }
+
+            // 3. One batched decode step over all active slots.
+            if !self.cache.active_slots().is_empty() {
+                if let Err(e) = self.decode_step() {
+                    crate::info!("decode step failed: {e:#}");
+                }
+            }
+        }
+    }
+
+    fn admit(&mut self, w: Waiting) -> Result<()> {
+        let info = &self.runner.model;
+        let prompt: Vec<u32> = w
+            .request
+            .prompt
+            .iter()
+            .copied()
+            .filter(|&t| (t as usize) < info.vocab)
+            .collect();
+        let len = prompt.len().min(info.t_max - 1);
+        let bucket = batching::pick_bucket(&self.cfg.prefill_buckets, len)
+            .ok_or_else(|| anyhow::anyhow!("prompt longer than buckets"))?;
+        let slot = self
+            .cache
+            .alloc(w.request.id)
+            .ok_or_else(|| anyhow::anyhow!("no free slot"))?;
+
+        // Right-pad the prompt to the bucket length.
+        let mut toks = vec![0i32; bucket];
+        for (i, t) in prompt.iter().take(len).enumerate() {
+            toks[i] = *t as i32;
+        }
+        let t0 = Instant::now();
+        let (logits, k, v) =
+            self.runner
+                .prefill(&self.rt, &self.manifest, &toks, 1, bucket)?;
+        self.metrics.prefill_steps += 1;
+        self.metrics.prefill_ns += t0.elapsed().as_nanos() as u64;
+        self.cache
+            .write_prefill(slot, &k.data, &v.data, bucket, len)?;
+
+        // Sample the first generated token from the last prompt position.
+        let vsize = info.vocab;
+        let row = &logits.data[(len - 1) * vsize..len * vsize];
+        let mut seq = ActiveSeq {
+            rng: Rng::new(match w.request.sampling {
+                Sampling::TopK { seed, .. } => seed ^ w.request.id,
+                Sampling::Greedy => w.request.id,
+            }),
+            request: w.request,
+            reply: w.reply,
+            submitted: w.submitted,
+            ttft_ms: None,
+            generated: Vec::new(),
+            last_token: 0,
+        };
+        let first = sample(row, seq.request.sampling, &mut seq.rng);
+        seq.ttft_ms =
+            Some(seq.submitted.elapsed().as_secs_f64() * 1e3);
+        seq.generated.push(first);
+        seq.last_token = first;
+        self.active[slot] = Some(seq);
+        // The sampled token will be fed at position `len` by decode_step;
+        // finish immediately if it is EOS or the request wants one token.
+        self.maybe_finish(slot);
+        Ok(())
+    }
+
+    fn decode_step(&mut self) -> Result<()> {
+        let b = self.cfg.decode_batch;
+        let slots = self.cache.active_slots();
+        if slots.is_empty() {
+            return Ok(());
+        }
+        let mut tokens = vec![0i32; b];
+        for &s in &slots {
+            tokens[s] = self.active[s].as_ref().unwrap().last_token as i32;
+        }
+        let pos = self.cache.pos_vector();
+        let t0 = Instant::now();
+        let (logits, k_new, v_new) = self.runner.decode(
+            &self.rt,
+            &self.manifest,
+            &tokens,
+            self.cache.k_data(),
+            self.cache.v_data(),
+            &pos,
+            b,
+        )?;
+        self.metrics.decode_steps += 1;
+        self.metrics.decode_ns += t0.elapsed().as_nanos() as u64;
+        self.metrics.batch_occupancy.record(slots.len() as f64);
+
+        self.cache.append_rows(&slots, &k_new.data, &v_new.data)?;
+        let vsize = self.runner.model.vocab;
+        for &s in &slots {
+            let row = &logits.data[s * vsize..(s + 1) * vsize];
+            let seq = self.active[s].as_mut().unwrap();
+            let tok = sample(row, seq.request.sampling, &mut seq.rng);
+            seq.generated.push(tok);
+            seq.last_token = tok;
+            self.metrics.tokens_generated += 1;
+            self.maybe_finish(s);
+        }
+        Ok(())
+    }
+
+    fn maybe_finish(&mut self, slot: usize) {
+        let info_tmax = self.runner.model.t_max;
+        let pos = self.cache.pos(slot);
+        let finish = {
+            let seq = self.active[slot].as_ref().unwrap();
+            if seq.generated.last() == Some(&self.eos) {
+                Some(FinishReason::Eos)
+            } else if seq.generated.len() >= seq.request.max_new_tokens {
+                Some(FinishReason::Length)
+            } else if pos + 1 >= info_tmax {
+                Some(FinishReason::CacheFull)
+            } else {
+                None
+            }
+        };
+        if let Some(reason) = finish {
+            let seq = self.active[slot].take().unwrap();
+            self.cache.free(slot);
+            let total_ms = seq.submitted.elapsed().as_secs_f64() * 1e3;
+            self.metrics.completed += 1;
+            self.metrics.ttft_ms.record(seq.ttft_ms.unwrap_or(total_ms));
+            self.metrics.total_ms.record(total_ms);
+            let _ = seq.reply.send(Response {
+                id: seq.request.id,
+                prompt_len: seq.request.prompt.len(),
+                tokens: seq.generated,
+                finish: reason,
+                ttft_ms: seq.ttft_ms.unwrap_or(total_ms),
+                total_ms,
+            });
+        }
+    }
+}
+
+/// Sample a token id from a logits row.
+pub fn sample(logits: &[f32], strategy: Sampling, rng: &mut Rng) -> u32 {
+    match strategy {
+        Sampling::Greedy => argmax(logits) as u32,
+        Sampling::TopK { k, temperature, .. } => {
+            let k = k.max(1).min(logits.len());
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            idx.sort_unstable_by(|&a, &b| {
+                logits[b].partial_cmp(&logits[a]).unwrap()
+            });
+            let top = &idx[..k];
+            let t = temperature.max(1e-3);
+            let mx = logits[top[0]];
+            let weights: Vec<f64> = top
+                .iter()
+                .map(|&i| (((logits[i] - mx) / t) as f64).exp())
+                .collect();
+            top[rng.weighted(&weights)] as u32
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, x) in xs.iter().enumerate() {
+        if *x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut rng = Rng::new(0);
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        assert_eq!(sample(&logits, Sampling::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_stays_in_top_k() {
+        let mut rng = Rng::new(0);
+        let logits = vec![-5.0, 10.0, 9.5, -7.0, 9.9];
+        for _ in 0..200 {
+            let t = sample(
+                &logits,
+                Sampling::TopK { k: 3, temperature: 1.0, seed: 1 },
+                &mut rng,
+            );
+            assert!([1u32, 2, 4].contains(&t), "sampled {t}");
+        }
+    }
+
+    #[test]
+    fn topk_low_temperature_nearly_greedy() {
+        let mut rng = Rng::new(0);
+        let logits = vec![0.0, 5.0, 4.0];
+        let mut ones = 0;
+        for _ in 0..100 {
+            if sample(
+                &logits,
+                Sampling::TopK { k: 2, temperature: 0.05, seed: 2 },
+                &mut rng,
+            ) == 1
+            {
+                ones += 1;
+            }
+        }
+        assert!(ones >= 99, "{ones}");
+    }
+}

@@ -1,0 +1,290 @@
+//! Minimal HTTP/1.1 frontend over the serving engine — the deployment
+//! launcher (`lqer serve`).  No web framework is reachable offline; this
+//! implements the small HTTP subset the API needs, with its own
+//! request-parser tests.
+//!
+//! Endpoints:
+//!   GET  /healthz            -> 200 "ok"
+//!   GET  /metrics            -> engine counters as JSON
+//!   POST /generate           -> {"prompt": "...", "max_new_tokens": n,
+//!                                "top_k": k?}  ->
+//!                               {"output": "...", "tokens": n, ...}
+//!
+//! One OS thread per connection (std::net); the engine itself is the
+//! single consumer of the request channel, so concurrency is bounded by
+//! the KV slot pool, not by connection count.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{EngineHandle, Request, Sampling};
+use crate::tokenizer::Tokenizer;
+use crate::util::json::{self, Value};
+
+/// A parsed HTTP request (the subset we serve).
+#[derive(Debug, PartialEq)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Parse an HTTP/1.1 request from raw bytes (headers + optional body).
+pub fn parse_http(raw: &str) -> Result<HttpRequest> {
+    let (head, body) = match raw.find("\r\n\r\n") {
+        Some(i) => (&raw[..i], &raw[i + 4..]),
+        None => (raw, ""),
+    };
+    let mut lines = head.lines();
+    let request_line = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty request"))?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("no method"))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("no path"))?
+        .to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    Ok(HttpRequest {
+        method,
+        path,
+        body: body.chars().take(content_length.max(body.len())).collect(),
+    })
+}
+
+/// Format an HTTP response.
+pub fn http_response(status: u16, content_type: &str, body: &str) -> String {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+/// Serve requests on `addr` until the process exits.
+pub fn serve(
+    addr: &str,
+    engine: EngineHandle,
+    tokenizer: Tokenizer,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    crate::info!("listening on http://{addr}");
+    let engine = Arc::new(engine);
+    let tokenizer = Arc::new(tokenizer);
+    let next_id = Arc::new(AtomicU64::new(1));
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let engine = engine.clone();
+        let tokenizer = tokenizer.clone();
+        let next_id = next_id.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(stream, &engine, &tokenizer, &next_id);
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    engine: &EngineHandle,
+    tokenizer: &Tokenizer,
+    next_id: &AtomicU64,
+) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut total = 0usize;
+    // Read until we have headers + declared body.
+    loop {
+        let n = stream.read(&mut buf[total..])?;
+        if n == 0 {
+            break;
+        }
+        total += n;
+        let text = String::from_utf8_lossy(&buf[..total]);
+        if let Some(i) = text.find("\r\n\r\n") {
+            let cl = text
+                .lines()
+                .find_map(|l| {
+                    let (k, v) = l.split_once(':')?;
+                    k.trim()
+                        .eq_ignore_ascii_case("content-length")
+                        .then(|| v.trim().parse::<usize>().ok())?
+                })
+                .unwrap_or(0);
+            if total >= i + 4 + cl {
+                break;
+            }
+        }
+        if total == buf.len() {
+            break;
+        }
+    }
+    let text = String::from_utf8_lossy(&buf[..total]).to_string();
+    let response = match parse_http(&text) {
+        Ok(req) => route(&req, engine, tokenizer, next_id),
+        Err(e) => http_response(400, "text/plain", &format!("{e}")),
+    };
+    stream.write_all(response.as_bytes())?;
+    Ok(())
+}
+
+fn route(
+    req: &HttpRequest,
+    engine: &EngineHandle,
+    tokenizer: &Tokenizer,
+    next_id: &AtomicU64,
+) -> String {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => http_response(200, "text/plain", "ok"),
+        ("GET", "/metrics") => match engine.metrics() {
+            Ok(m) => http_response(
+                200,
+                "application/json",
+                &json::obj(vec![
+                    ("submitted", json::num(m.submitted as f64)),
+                    ("completed", json::num(m.completed as f64)),
+                    ("tokens_generated",
+                     json::num(m.tokens_generated as f64)),
+                    ("decode_steps", json::num(m.decode_steps as f64)),
+                    ("decode_tok_per_sec",
+                     json::num(m.decode_tokens_per_sec())),
+                    ("mean_batch_occupancy",
+                     json::num(m.mean_batch_occupancy())),
+                    ("ttft_ms_p50", json::num(m.ttft_ms.percentile(50.0))),
+                    ("ttft_ms_p99", json::num(m.ttft_ms.percentile(99.0))),
+                ])
+                .to_string(),
+            ),
+            Err(e) => http_response(500, "text/plain", &format!("{e}")),
+        },
+        ("POST", "/generate") => generate(req, engine, tokenizer, next_id),
+        _ => http_response(404, "text/plain", "not found"),
+    }
+}
+
+fn generate(
+    req: &HttpRequest,
+    engine: &EngineHandle,
+    tokenizer: &Tokenizer,
+    next_id: &AtomicU64,
+) -> String {
+    let parsed = match json::parse(&req.body) {
+        Ok(v) => v,
+        Err(e) => {
+            return http_response(400, "text/plain",
+                                 &format!("bad JSON: {e}"))
+        }
+    };
+    let Some(prompt) = parsed.get("prompt").and_then(|v| v.as_str()) else {
+        return http_response(400, "text/plain", "missing 'prompt'");
+    };
+    let max_new = parsed
+        .get("max_new_tokens")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(24);
+    let sampling = match parsed.get("top_k").and_then(|v| v.as_usize()) {
+        Some(k) if k > 0 => Sampling::TopK {
+            k,
+            temperature: parsed
+                .get("temperature")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.8) as f32,
+            seed: parsed
+                .get("seed")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(17) as u64,
+        },
+        _ => Sampling::Greedy,
+    };
+    let id = next_id.fetch_add(1, Ordering::Relaxed);
+    match engine.generate(Request {
+        id,
+        prompt: tokenizer.encode_prompt(prompt),
+        max_new_tokens: max_new.min(256),
+        sampling,
+    }) {
+        Ok(resp) => http_response(
+            200,
+            "application/json",
+            &json::obj(vec![
+                ("id", json::num(resp.id as f64)),
+                ("output", json::s(&tokenizer.decode_clean(&resp.tokens))),
+                ("tokens", json::num(resp.tokens.len() as f64)),
+                ("finish", json::s(&format!("{:?}", resp.finish))),
+                ("ttft_ms", json::num(resp.ttft_ms)),
+                ("total_ms", json::num(resp.total_ms)),
+            ])
+            .to_string(),
+        ),
+        Err(e) => http_response(500, "text/plain", &format!("{e}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_get() {
+        let r = parse_http("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert_eq!(r.body, "");
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let body = r#"{"prompt":"hi"}"#;
+        let raw = format!(
+            "POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let r = parse_http(&raw).unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.body, body);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse_http("").is_err());
+        assert!(parse_http("GARBAGE").is_err());
+    }
+
+    #[test]
+    fn response_has_content_length() {
+        let resp = http_response(200, "text/plain", "hello");
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(resp.contains("Content-Length: 5\r\n"));
+        assert!(resp.ends_with("hello"));
+    }
+
+    #[test]
+    fn response_reason_phrases() {
+        assert!(http_response(404, "text/plain", "").contains("Not Found"));
+        assert!(http_response(400, "text/plain", "")
+            .contains("Bad Request"));
+    }
+}

@@ -1,0 +1,123 @@
+//! AlpacaEval-style pairwise evaluation (paper Table 5).
+//!
+//! The paper asks GPT-4-Turbo which of two model generations it prefers
+//! (L2QER vs the AWQ reference) and reports the win rate plus a
+//! length-controlled variant.  Our judge substitute (DESIGN.md §2) is the
+//! FP16 model itself: for each prompt both quantized engines generate a
+//! continuation greedily; the judge prefers the generation with the lower
+//! FP16-model NLL (i.e. the continuation the full-precision model finds
+//! more plausible).  The length-controlled variant compares *per-token*
+//! NLL so verbose generations are not penalized.
+
+use anyhow::Result;
+
+use crate::config::Manifest;
+use crate::runtime::{ModelRunner, Runtime};
+
+#[derive(Debug, Clone, Default)]
+pub struct JudgeResult {
+    pub n: usize,
+    pub wins: usize,
+    pub lc_wins: usize,
+    pub ties: usize,
+}
+
+impl JudgeResult {
+    pub fn win_rate(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            (self.wins as f64 + 0.5 * self.ties as f64) / self.n as f64
+        }
+    }
+
+    pub fn lc_win_rate(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            (self.lc_wins as f64 + 0.5 * self.ties as f64) / self.n as f64
+        }
+    }
+}
+
+/// NLL of `continuation` after `prompt` under the judge model (total and
+/// per-token).
+pub fn continuation_nll(
+    rt: &Runtime,
+    manifest: &Manifest,
+    judge: &ModelRunner,
+    prompt: &[u32],
+    continuation: &[u32],
+) -> Result<(f64, f64)> {
+    let (b, t) = manifest.score_shape;
+    let vocab = judge.model.vocab;
+    anyhow::ensure!(
+        prompt.len() + continuation.len() <= t,
+        "sequence too long for score graph"
+    );
+    anyhow::ensure!(!continuation.is_empty(), "empty continuation");
+    let mut tokens = vec![0i32; b * t];
+    for (i, &tok) in prompt.iter().chain(continuation.iter()).enumerate() {
+        tokens[i] = tok as i32;
+    }
+    let logits = judge.score(rt, manifest, &tokens, b, t)?;
+    let mut nll = 0.0f64;
+    for (i, &tok) in continuation.iter().enumerate() {
+        let posn = prompt.len() + i - 1;
+        let off = posn * vocab;
+        nll -= super::log_prob(&logits.data[off..off + vocab], tok as usize);
+    }
+    Ok((nll, nll / continuation.len() as f64))
+}
+
+/// Judge a pair of generations; positive verdicts favor `gen_a`.
+pub fn judge_pair(
+    rt: &Runtime,
+    manifest: &Manifest,
+    judge: &ModelRunner,
+    prompt: &[u32],
+    gen_a: &[u32],
+    gen_b: &[u32],
+    result: &mut JudgeResult,
+) -> Result<()> {
+    // Strip trailing EOS/pad-ish tokens beyond score capacity.
+    let (_, t) = manifest.score_shape;
+    let cap = t.saturating_sub(prompt.len() + 1);
+    let a = &gen_a[..gen_a.len().min(cap)];
+    let b = &gen_b[..gen_b.len().min(cap)];
+    if a.is_empty() || b.is_empty() {
+        result.n += 1;
+        result.ties += 1;
+        return Ok(());
+    }
+    let (nll_a, pt_a) = continuation_nll(rt, manifest, judge, prompt, a)?;
+    let (nll_b, pt_b) = continuation_nll(rt, manifest, judge, prompt, b)?;
+    result.n += 1;
+    if (nll_a - nll_b).abs() < 1e-9 {
+        result.ties += 1;
+    } else if nll_a < nll_b {
+        result.wins += 1;
+    }
+    if pt_a < pt_b {
+        result.lc_wins += 1;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn win_rates_count_ties_as_half() {
+        let r = JudgeResult { n: 4, wins: 1, lc_wins: 2, ties: 2 };
+        assert!((r.win_rate() - 0.5).abs() < 1e-12);
+        assert!((r.lc_win_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_result_safe() {
+        let r = JudgeResult::default();
+        assert_eq!(r.win_rate(), 0.0);
+    }
+}

@@ -1,0 +1,64 @@
+//! Perplexity over a token stream through the score graph.
+//!
+//! The stream is cut into non-overlapping windows of the score shape
+//! (B, T); within each window, position i predicts token i+1 (the first
+//! token of each row is context only).  This mirrors the python trainer's
+//! validation metric and the standard WikiText-2 protocol.
+
+use anyhow::Result;
+
+use crate::config::Manifest;
+use crate::runtime::{ModelRunner, Runtime};
+
+#[derive(Debug, Clone)]
+pub struct PplResult {
+    pub ppl: f64,
+    pub nll: f64,
+    pub tokens: usize,
+    pub windows: usize,
+}
+
+/// Evaluate perplexity of `runner` on `stream`, using up to `max_windows`
+/// (B,T) windows (0 = all).
+pub fn perplexity(
+    rt: &Runtime,
+    manifest: &Manifest,
+    runner: &ModelRunner,
+    stream: &[u16],
+    max_windows: usize,
+) -> Result<PplResult> {
+    let (b, t) = manifest.score_shape;
+    let vocab = runner.model.vocab;
+    let window = b * t;
+    let mut nll_sum = 0.0f64;
+    let mut count = 0usize;
+    let mut windows = 0usize;
+
+    let total = stream.len() / window;
+    let n_windows = if max_windows == 0 {
+        total
+    } else {
+        total.min(max_windows)
+    };
+    for w in 0..n_windows {
+        let chunk = &stream[w * window..(w + 1) * window];
+        let tokens: Vec<i32> = chunk.iter().map(|&x| x as i32).collect();
+        let logits = runner.score(rt, manifest, &tokens, b, t)?;
+        debug_assert_eq!(logits.shape, vec![b, t, vocab]);
+        for row in 0..b {
+            for posn in 0..t - 1 {
+                let target = tokens[row * t + posn + 1] as usize;
+                let off = (row * t + posn) * vocab;
+                nll_sum -= super::log_prob(
+                    &logits.data[off..off + vocab],
+                    target,
+                );
+                count += 1;
+            }
+        }
+        windows += 1;
+    }
+    anyhow::ensure!(count > 0, "empty evaluation stream");
+    let nll = nll_sum / count as f64;
+    Ok(PplResult { ppl: nll.exp(), nll, tokens: count, windows })
+}

@@ -1,0 +1,212 @@
+//! Downstream-task evaluation (the six tasks of Table 4, lm-eval-harness
+//! protocol): each option is appended to the item context and scored by
+//! length-normalized option log-likelihood under the model; the highest
+//! scoring option wins.  `lambada` is exact final-word prediction
+//! (argmax over the vocabulary at the final context position).
+//!
+//! Scoring runs through the (B, T) score graph: the options of one item
+//! are packed into one batch (2-way tasks pad the batch with repeats).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::Manifest;
+use crate::runtime::{ModelRunner, Runtime};
+use crate::util::json;
+
+#[derive(Debug, Clone)]
+pub struct TaskItem {
+    pub task: String,
+    pub context: Vec<u32>,
+    pub options: Vec<Vec<u32>>,
+    pub answer: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskScores {
+    /// (task name, accuracy, n items)
+    pub per_task: Vec<(String, f64, usize)>,
+}
+
+impl TaskScores {
+    pub fn average(&self) -> f64 {
+        if self.per_task.is_empty() {
+            return 0.0;
+        }
+        self.per_task.iter().map(|(_, a, _)| a).sum::<f64>()
+            / self.per_task.len() as f64
+    }
+
+    pub fn accuracy(&self, task: &str) -> Option<f64> {
+        self.per_task
+            .iter()
+            .find(|(t, _, _)| t == task)
+            .map(|(_, a, _)| *a)
+    }
+}
+
+fn ids(v: &json::Value) -> Vec<u32> {
+    v.as_array()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|x| x.as_usize().map(|u| u as u32))
+        .collect()
+}
+
+/// Load `artifacts/data/tasks.json`.
+pub fn load_tasks(path: &Path) -> Result<Vec<TaskItem>> {
+    let v = json::parse_file(path)?;
+    let mut out = Vec::new();
+    for item in v.req("tasks")?.as_array().unwrap_or(&[]) {
+        out.push(TaskItem {
+            task: item.str_at("task")?,
+            context: ids(item.req("context")?),
+            options: item
+                .req("options")?
+                .as_array()
+                .unwrap_or(&[])
+                .iter()
+                .map(ids)
+                .collect(),
+            answer: item.usize_at("answer")?,
+        });
+    }
+    Ok(out)
+}
+
+/// Score one item: returns the model's chosen option index.
+pub fn choose_option(
+    rt: &Runtime,
+    manifest: &Manifest,
+    runner: &ModelRunner,
+    item: &TaskItem,
+) -> Result<usize> {
+    let (b, t) = manifest.score_shape;
+    let vocab = runner.model.vocab;
+
+    if item.task == "lambada" {
+        // Exact final-token prediction.
+        let ctx = &item.context;
+        anyhow::ensure!(ctx.len() < t, "context too long");
+        let mut tokens = vec![0i32; b * t];
+        for (i, &tok) in ctx.iter().enumerate() {
+            tokens[i] = tok as i32;
+        }
+        let logits = runner.score(rt, manifest, &tokens, b, t)?;
+        let off = (ctx.len() - 1) * vocab;
+        let row = &logits.data[off..off + vocab];
+        let target = item.options[0][0] as usize;
+        let mut best = 0usize;
+        for (i, x) in row.iter().enumerate() {
+            if *x > row[best] {
+                best = i;
+            }
+        }
+        return Ok(if best == target { item.answer } else { usize::MAX });
+    }
+
+    anyhow::ensure!(item.options.len() <= b, "too many options for batch");
+    let mut tokens = vec![0i32; b * t];
+    let mut spans = Vec::new(); // (start, len) of each option's tokens
+    for (o, opt) in item.options.iter().enumerate() {
+        let ctx_len = item.context.len();
+        anyhow::ensure!(ctx_len + opt.len() < t, "item too long");
+        for (i, &tok) in item.context.iter().enumerate() {
+            tokens[o * t + i] = tok as i32;
+        }
+        for (i, &tok) in opt.iter().enumerate() {
+            tokens[o * t + ctx_len + i] = tok as i32;
+        }
+        spans.push((ctx_len, opt.len()));
+    }
+    // Pad unused batch rows with a copy of row 0 (ignored).
+    for o in item.options.len()..b {
+        let (src, dst) = tokens.split_at_mut(o * t);
+        dst[..t].copy_from_slice(&src[..t]);
+    }
+
+    let logits = runner.score(rt, manifest, &tokens, b, t)?;
+    let mut best = (f64::NEG_INFINITY, 0usize);
+    for (o, (start, len)) in spans.iter().enumerate() {
+        let mut lp = 0.0f64;
+        for i in 0..*len {
+            // position (start + i - 1) predicts token (start + i)
+            let posn = start + i - 1;
+            let target = tokens[o * t + start + i] as usize;
+            let off = (o * t + posn) * vocab;
+            lp += super::log_prob(&logits.data[off..off + vocab], target);
+        }
+        let norm = lp / *len as f64; // length-normalized
+        if norm > best.0 {
+            best = (norm, o);
+        }
+    }
+    Ok(best.1)
+}
+
+/// Evaluate all tasks, using up to `per_task` items each (0 = all).
+pub fn evaluate(
+    rt: &Runtime,
+    manifest: &Manifest,
+    runner: &ModelRunner,
+    items: &[TaskItem],
+    per_task: usize,
+) -> Result<TaskScores> {
+    let mut names: Vec<String> = Vec::new();
+    for it in items {
+        if !names.contains(&it.task) {
+            names.push(it.task.clone());
+        }
+    }
+    let mut per = Vec::new();
+    for name in names {
+        let subset: Vec<&TaskItem> = items
+            .iter()
+            .filter(|i| i.task == name)
+            .take(if per_task == 0 { usize::MAX } else { per_task })
+            .collect();
+        let mut correct = 0usize;
+        for item in &subset {
+            let choice = choose_option(rt, manifest, runner, item)?;
+            if choice == item.answer {
+                correct += 1;
+            }
+        }
+        per.push((name, correct as f64 / subset.len() as f64, subset.len()));
+    }
+    Ok(TaskScores { per_task: per })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_task_items() {
+        let txt = r#"{"tasks": [{"task": "piqa", "context": [1, 4],
+                      "options": [[5], [6, 7]], "answer": 1}],
+                     "names": ["piqa"]}"#;
+        let dir = std::env::temp_dir().join("lqer_tasks_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tasks.json");
+        std::fs::write(&p, txt).unwrap();
+        let items = load_tasks(&p).unwrap();
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].options[1], vec![6, 7]);
+        assert_eq!(items[0].answer, 1);
+    }
+
+    #[test]
+    fn scores_average() {
+        let s = TaskScores {
+            per_task: vec![
+                ("a".into(), 0.5, 10),
+                ("b".into(), 1.0, 10),
+            ],
+        };
+        assert!((s.average() - 0.75).abs() < 1e-12);
+        assert_eq!(s.accuracy("b"), Some(1.0));
+        assert_eq!(s.accuracy("c"), None);
+    }
+}

@@ -1,0 +1,281 @@
+//! Circuit-area model: LUT counts for the processing engines (PEs) behind
+//! the paper's hardware-efficiency claims (Table 3 "Circuit area" column,
+//! breakdown Tables 7/8/9).
+//!
+//! The paper synthesized real arithmetic cores with Vivado 2023.1 on a
+//! Xilinx Alveo U250 at a matched throughput of **16 MACs/cycle** and
+//! reports LUTs (1 DSP counted as 100 LUTs).  We have no Vivado in this
+//! image, so this module is an *analytical* model with primitive costs
+//! **calibrated against the paper's own breakdown tables**:
+//!
+//! * integer MAC (a-bit x b-bit):  `0.9*a*b + 2*(a+b) + 8` LUTs — fitted
+//!   so the L2QER PE breakdown reproduces Table 9 within a few percent
+//!   (model 1033/1772/937 vs paper 1028/1782/992 LUTs);
+//! * FP16 MAC: 717 LUTs (Table 8's 16-MAC FP16 GEMM / 16);
+//! * runtime dequantizer lane (INT-g128 -> FP16): 3932 LUTs (Table 8's
+//!   dequantize block / 16);
+//! * LLM.int4() scatter/gather + casting blocks: Table 7's synthesized
+//!   constants;
+//! * "other" (control, FIFOs): per-method fraction from Tables 7-9.
+//!
+//! Everything downstream (Table 3's relative column, the breakdowns) is
+//! *derived* from these primitives.  EXPERIMENTS.md notes where the
+//! derived relative factors deviate from the paper's (the paper's FP16
+//! baseline PE is evidently smaller than its FP16-GEMM-inside-AWQ block).
+
+/// Integer MAC cost in LUTs for an a-bit x b-bit multiply-accumulate.
+pub fn int_mac_luts(a_bits: u32, b_bits: u32) -> f64 {
+    0.9 * (a_bits * b_bits) as f64 + 2.0 * (a_bits + b_bits) as f64 + 8.0
+}
+
+/// FP16 multiply-accumulate (calibrated, includes pipeline registers).
+pub const FP16_MAC_LUTS: f64 = 717.0;
+
+/// One runtime dequantization lane: unpack INT-gG word, FP16 scale
+/// multiply, group index machinery (calibrated to Table 8).
+pub const DEQUANT_LANE_LUTS: f64 = 3932.0;
+
+/// LLM.int4() blocks (calibrated to Table 7).
+pub const SCATTER_GATHER_LUTS: f64 = 11_579.0;
+pub const LLMINT4_GEMM_CAST_LUTS: f64 = 106_959.0;
+pub const LLMINT4_GEMM_H_LUTS: f64 = 404.0;
+
+/// MXINT extras: shared-exponent adder + alignment shifter per PE.
+pub const MX_EXP_ALIGN_LUTS: f64 = 60.0;
+/// On-the-fly MXINT activation quantizer (max-tree + shift) per PE.
+pub const MX_ACT_QUANT_LUTS: f64 = 150.0;
+/// Per-token INT activation quantizer + per-output rescale unit.
+pub const INT_ACT_RESCALE_LUTS: f64 = 430.0;
+/// Duty factor of the skinny (X A_k) B_k GEMM (output-stationary, shallower
+/// accumulation network than the full-width panels).
+pub const MATMUL3_DUTY: f64 = 0.6;
+
+pub const LANES: usize = 16; // matched throughput: 16 MACs/cycle
+
+/// Per-method "other" share (control/FIFO/AXI), from Tables 7-9.
+fn other_frac(method: &str) -> f64 {
+    if method.starts_with("llmint4") {
+        0.103
+    } else if method.starts_with("awq")
+        || method.starts_with("gptq")
+        || method.starts_with("rtn")
+        || method.starts_with("clipq-w2")
+    {
+        0.130
+    } else {
+        0.264
+    }
+}
+
+/// A processing engine area report.
+#[derive(Debug, Clone)]
+pub struct PeArea {
+    pub method: String,
+    pub components: Vec<(String, f64)>,
+    pub total: f64,
+}
+
+impl PeArea {
+    fn build(method: &str, comps: Vec<(&str, f64)>) -> PeArea {
+        let subtotal: f64 = comps.iter().map(|(_, v)| v).sum();
+        let other = subtotal * other_frac(method) / (1.0 - other_frac(method));
+        let mut components: Vec<(String, f64)> = comps
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect();
+        components.push(("other".to_string(), other));
+        PeArea {
+            method: method.to_string(),
+            total: subtotal + other,
+            components,
+        }
+    }
+
+    /// Relative to the FP16 baseline PE.
+    pub fn relative(&self) -> f64 {
+        self.total / fp16_pe().total
+    }
+}
+
+/// FP16 baseline: 16 FP16 MACs.
+pub fn fp16_pe() -> PeArea {
+    PeArea::build(
+        "fp16",
+        vec![("fp16_gemm", LANES as f64 * FP16_MAC_LUTS)],
+    )
+}
+
+/// w-only dequantization PE (GPTQ / AWQ / RTN-INT4): runtime dequant lanes
+/// feeding an FP16 GEMM (paper Table 8).
+pub fn dequant_pe(method: &str) -> PeArea {
+    PeArea::build(
+        method,
+        vec![
+            ("dequantize", LANES as f64 * DEQUANT_LANE_LUTS),
+            ("fp16_gemm", LANES as f64 * FP16_MAC_LUTS),
+        ],
+    )
+}
+
+/// LLM.int4() mixed-precision PE (paper Table 7).
+pub fn llmint4_pe() -> PeArea {
+    PeArea::build(
+        "llmint4",
+        vec![
+            ("gemm_l+cast", LLMINT4_GEMM_CAST_LUTS),
+            ("scatter+gather", SCATTER_GATHER_LUTS),
+            ("gemm_h", LLMINT4_GEMM_H_LUTS),
+        ],
+    )
+}
+
+/// Plain integer w&a PE (SmoothQuant W8A8, OmniQuant-style W6A6, ...).
+pub fn int_wa_pe(method: &str, w_bits: u32, a_bits: u32) -> PeArea {
+    PeArea::build(
+        method,
+        vec![
+            (
+                "int_gemm",
+                LANES as f64 * int_mac_luts(w_bits, a_bits),
+            ),
+            ("act_quant+rescale", INT_ACT_RESCALE_LUTS),
+        ],
+    )
+}
+
+/// MXINT w&a PE without low-rank correction (plain MXINT WxAy).
+pub fn mxint_pe(method: &str, w_bits: u32, a_bits: u32) -> PeArea {
+    PeArea::build(
+        method,
+        vec![
+            (
+                "mx_gemm",
+                LANES as f64 * int_mac_luts(w_bits, a_bits)
+                    + MX_EXP_ALIGN_LUTS,
+            ),
+            ("act_quant", MX_ACT_QUANT_LUTS),
+        ],
+    )
+}
+
+/// The L2QER PE (paper Table 9): three parallel GEMM blocks.
+///   matmul1: X W_q     (a_bits x w_bits, the big low-precision panel)
+///   matmul2: X A_k     (a_bits x 8, full activation throughput)
+///   matmul3: (X A_k) B_k  (8 x 8, skinny)
+/// `mx` selects MXINT (shared-exponent) vs INT-g128 arithmetic.
+pub fn l2qer_pe(method: &str, w_bits: u32, a_bits: u32, mx: bool) -> PeArea {
+    let exp = if mx { MX_EXP_ALIGN_LUTS } else { 0.0 };
+    let actq = if mx {
+        MX_ACT_QUANT_LUTS
+    } else {
+        INT_ACT_RESCALE_LUTS
+    };
+    let m1 = LANES as f64 * int_mac_luts(w_bits, a_bits) + exp;
+    let m2 = LANES as f64 * int_mac_luts(8, a_bits) + exp + actq;
+    let m3 = LANES as f64 * int_mac_luts(8, 8) * MATMUL3_DUTY;
+    PeArea::build(
+        method,
+        vec![("matmul2", m2), ("matmul1", m1), ("matmul3", m3)],
+    )
+}
+
+/// Area for a named experiment method (Table 3 rows).
+pub fn area_for_method(method: &str) -> Option<PeArea> {
+    Some(match method {
+        "fp16" => fp16_pe(),
+        "gptq-w4" | "awq-w4" | "rtn-w4" | "awq-w2" | "clipq-w2" => {
+            dequant_pe(method)
+        }
+        "llmint4" => llmint4_pe(),
+        "smoothquant-w8a8" => int_wa_pe(method, 8, 8),
+        "clipq-w6a6" => int_wa_pe(method, 6, 6),
+        "mxint-w4a8" => mxint_pe(method, 4, 8),
+        "mxint-w3a8" => mxint_pe(method, 3, 8),
+        "lqer-w4a8" | "l2qer-w4a8" => l2qer_pe(method, 4, 8, true),
+        "l2qer-w4a6" => l2qer_pe(method, 4, 6, true),
+        "l2qer-w2a8" => l2qer_pe(method, 2, 8, true),
+        "l2qer-int-w4" | "l2qer-int-w4a8" => l2qer_pe(method, 4, 8, false),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_table9_within_tolerance() {
+        // Paper Table 9: matmul2 1782, matmul1 1028, matmul3 992 LUTs.
+        let pe = l2qer_pe("l2qer-w4a8", 4, 8, true);
+        let get = |name: &str| {
+            pe.components
+                .iter()
+                .find(|(k, _)| k == name)
+                .map(|(_, v)| *v)
+                .unwrap()
+        };
+        assert!((get("matmul2") - 1782.0).abs() / 1782.0 < 0.05,
+                "matmul2 {}", get("matmul2"));
+        assert!((get("matmul1") - 1028.0).abs() / 1028.0 < 0.05,
+                "matmul1 {}", get("matmul1"));
+        assert!((get("matmul3") - 992.0).abs() / 992.0 < 0.10,
+                "matmul3 {}", get("matmul3"));
+    }
+
+    #[test]
+    fn reproduces_table8_shape() {
+        // Paper Table 8: dequant 62907 (73.6%), matmul 11476 (13.4%).
+        let pe = dequant_pe("awq");
+        let dq = pe.components[0].1;
+        let mm = pe.components[1].1;
+        assert!((dq - 62907.0).abs() / 62907.0 < 0.02, "dequant {dq}");
+        assert!((mm - 11476.0).abs() / 11476.0 < 0.01, "matmul {mm}");
+        assert!(dq / pe.total > 0.65 && dq / pe.total < 0.80);
+    }
+
+    #[test]
+    fn reproduces_table7_total() {
+        let pe = llmint4_pe();
+        // Paper total = 106959 + 11579 + 404 + 13604 = 132546.
+        assert!((pe.total - 132_546.0).abs() / 132_546.0 < 0.02,
+                "total {}", pe.total);
+    }
+
+    #[test]
+    fn relative_ordering_matches_table3() {
+        // LLM.int4 >> dequant w-only >> FP16 > L2QER-INT > L2QER-MXINT.
+        let fp16 = fp16_pe().relative();
+        let awq = dequant_pe("awq").relative();
+        let llm = llmint4_pe().relative();
+        let l2_int = l2qer_pe("l2qer-int-w4a8", 4, 8, false).relative();
+        let l2_mx8 = l2qer_pe("l2qer-w4a8", 4, 8, true).relative();
+        let l2_mx6 = l2qer_pe("l2qer-w4a6", 4, 6, true).relative();
+        assert!((fp16 - 1.0).abs() < 1e-9);
+        assert!(llm > awq && awq > 3.0, "llm {llm} awq {awq}");
+        assert!(l2_int < 1.0 && l2_mx8 < l2_int);
+        assert!(l2_mx6 < l2_mx8, "W4A6 must be cheaper than W4A8");
+        // Paper: L2QER-MXINT W4A8 = 0.33x; our derived model lands nearby.
+        assert!(l2_mx8 > 0.15 && l2_mx8 < 0.55, "l2_mx8 {l2_mx8}");
+    }
+
+    #[test]
+    fn int_mac_monotone_in_bits() {
+        assert!(int_mac_luts(4, 8) < int_mac_luts(8, 8));
+        assert!(int_mac_luts(2, 8) < int_mac_luts(4, 8));
+        assert!(int_mac_luts(6, 6) < int_mac_luts(8, 8));
+    }
+
+    #[test]
+    fn every_registered_method_priced() {
+        for m in [
+            "fp16", "gptq-w4", "awq-w4", "rtn-w4", "llmint4",
+            "smoothquant-w8a8", "clipq-w6a6", "mxint-w4a8", "lqer-w4a8",
+            "l2qer-w4a8", "l2qer-w4a6", "l2qer-w2a8", "l2qer-int-w4",
+            "l2qer-int-w4a8", "awq-w2", "clipq-w2",
+        ] {
+            let pe = area_for_method(m).unwrap_or_else(|| panic!("{m}"));
+            assert!(pe.total > 0.0);
+        }
+        assert!(area_for_method("nope").is_none());
+    }
+}

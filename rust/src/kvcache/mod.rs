@@ -1,0 +1,244 @@
+//! Slot-based KV-cache manager for batched decode.
+//!
+//! The decode graph is shape-specialized to a batch bucket `B`; the engine
+//! owns one `KvCache` per bucket holding host-side key/value arrays of
+//! shape (L, B, T_max, d) plus per-slot occupancy.  Sequences claim a slot
+//! at admission, fill positions `0..len` from the prefill outputs, append
+//! one row per decode step, and release the slot at completion.
+//!
+//! Invariants (property-tested in rust/tests/proptests.rs):
+//! * a slot is never double-allocated or double-freed,
+//! * `pos(slot) <= t_max` always; append past `t_max` is rejected,
+//! * freeing zeroes occupancy so the scheduler's accounting stays exact.
+
+use anyhow::Result;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Slot {
+    Free,
+    Active { request_id: u64, pos: usize },
+}
+
+#[derive(Debug)]
+pub struct KvCache {
+    pub layers: usize,
+    pub t_max: usize,
+    pub d: usize,
+    pub batch: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    slots: Vec<Slot>,
+}
+
+impl KvCache {
+    pub fn new(layers: usize, batch: usize, t_max: usize, d: usize) -> Self {
+        let n = layers * batch * t_max * d;
+        KvCache {
+            layers,
+            t_max,
+            d,
+            batch,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            slots: vec![Slot::Free; batch],
+        }
+    }
+
+    #[inline]
+    fn idx(&self, layer: usize, slot: usize, t: usize) -> usize {
+        ((layer * self.batch + slot) * self.t_max + t) * self.d
+    }
+
+    pub fn k_data(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v_data(&self) -> &[f32] {
+        &self.v
+    }
+
+    pub fn slots(&self) -> &[Slot] {
+        &self.slots
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.slots.iter().filter(|s| matches!(s, Slot::Free)).count()
+    }
+
+    pub fn active_slots(&self) -> Vec<usize> {
+        (0..self.batch)
+            .filter(|&i| matches!(self.slots[i], Slot::Active { .. }))
+            .collect()
+    }
+
+    pub fn pos(&self, slot: usize) -> usize {
+        match self.slots[slot] {
+            Slot::Active { pos, .. } => pos,
+            Slot::Free => 0,
+        }
+    }
+
+    pub fn request_id(&self, slot: usize) -> Option<u64> {
+        match self.slots[slot] {
+            Slot::Active { request_id, .. } => Some(request_id),
+            Slot::Free => None,
+        }
+    }
+
+    /// Claim a free slot for a request.
+    pub fn alloc(&mut self, request_id: u64) -> Option<usize> {
+        let slot = self.slots.iter().position(|s| matches!(s, Slot::Free))?;
+        self.slots[slot] = Slot::Active { request_id, pos: 0 };
+        Some(slot)
+    }
+
+    /// Release a slot (panics on double-free: that is a scheduler bug).
+    pub fn free(&mut self, slot: usize) {
+        assert!(
+            matches!(self.slots[slot], Slot::Active { .. }),
+            "double free of slot {slot}"
+        );
+        self.slots[slot] = Slot::Free;
+    }
+
+    /// Copy prefill K/V (shape (L, 1, t, d) row-major) into a slot and set
+    /// its position to `len` (`len <= t`: right-padded prefill).
+    pub fn write_prefill(
+        &mut self,
+        slot: usize,
+        k_pre: &[f32],
+        v_pre: &[f32],
+        t: usize,
+        len: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(len <= t && len <= self.t_max, "prefill len {len}");
+        anyhow::ensure!(
+            k_pre.len() == self.layers * t * self.d,
+            "prefill kv size {} != {}",
+            k_pre.len(),
+            self.layers * t * self.d
+        );
+        for l in 0..self.layers {
+            let src = l * t * self.d;
+            let dst = self.idx(l, slot, 0);
+            let n = len * self.d;
+            self.k[dst..dst + n].copy_from_slice(&k_pre[src..src + n]);
+            self.v[dst..dst + n].copy_from_slice(&v_pre[src..src + n]);
+        }
+        match &mut self.slots[slot] {
+            Slot::Active { pos, .. } => *pos = len,
+            Slot::Free => anyhow::bail!("prefill into free slot"),
+        }
+        Ok(())
+    }
+
+    /// Append one decode step's K/V rows (shape (L, B, d)) for the given
+    /// slots, advancing each slot's position.
+    pub fn append_rows(
+        &mut self,
+        slots: &[usize],
+        k_new: &[f32],
+        v_new: &[f32],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            k_new.len() == self.layers * self.batch * self.d,
+            "k_new size"
+        );
+        for &slot in slots {
+            let pos = self.pos(slot);
+            anyhow::ensure!(pos < self.t_max, "slot {slot} cache overflow");
+            for l in 0..self.layers {
+                let src = (l * self.batch + slot) * self.d;
+                let dst = self.idx(l, slot, pos);
+                self.k[dst..dst + self.d]
+                    .copy_from_slice(&k_new[src..src + self.d]);
+                self.v[dst..dst + self.d]
+                    .copy_from_slice(&v_new[src..src + self.d]);
+            }
+            match &mut self.slots[slot] {
+                Slot::Active { pos, .. } => *pos += 1,
+                Slot::Free => anyhow::bail!("append into free slot"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Position vector (length B) for the decode graph.
+    pub fn pos_vector(&self) -> Vec<i32> {
+        (0..self.batch).map(|i| self.pos(i) as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache() -> KvCache {
+        KvCache::new(2, 3, 8, 4)
+    }
+
+    #[test]
+    fn alloc_until_full_then_none() {
+        let mut c = cache();
+        assert_eq!(c.free_count(), 3);
+        let a = c.alloc(1).unwrap();
+        let b = c.alloc(2).unwrap();
+        let d = c.alloc(3).unwrap();
+        assert_eq!(c.free_count(), 0);
+        assert!(c.alloc(4).is_none());
+        assert_ne!(a, b);
+        assert_ne!(b, d);
+        c.free(b);
+        assert_eq!(c.alloc(5).unwrap(), b);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut c = cache();
+        let s = c.alloc(1).unwrap();
+        c.free(s);
+        c.free(s);
+    }
+
+    #[test]
+    fn prefill_sets_pos_and_copies() {
+        let mut c = cache();
+        let s = c.alloc(7).unwrap();
+        let t = 4;
+        let n = 2 * t * 4; // L * t * d
+        let k: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..n).map(|i| (i as f32) * 10.0).collect();
+        c.write_prefill(s, &k, &v, t, 3).unwrap();
+        assert_eq!(c.pos(s), 3);
+        // layer 1, position 2, feature 1:
+        let src = (1 * t + 2) * 4 + 1;
+        let dst = c.idx(1, s, 2) + 1;
+        assert_eq!(c.k[dst], k[src]);
+        assert_eq!(c.v[dst], v[src]);
+    }
+
+    #[test]
+    fn append_advances_and_overflows() {
+        let mut c = cache();
+        let s = c.alloc(1).unwrap();
+        let kn = vec![1.0f32; 2 * 3 * 4];
+        let vn = vec![2.0f32; 2 * 3 * 4];
+        for i in 0..8 {
+            assert_eq!(c.pos(s), i);
+            c.append_rows(&[s], &kn, &vn).unwrap();
+        }
+        assert!(c.append_rows(&[s], &kn, &vn).is_err(), "overflow");
+    }
+
+    #[test]
+    fn pos_vector_covers_all_slots() {
+        let mut c = cache();
+        let s = c.alloc(1).unwrap();
+        let kn = vec![0.0f32; 2 * 3 * 4];
+        c.append_rows(&[s], &kn, &kn).unwrap();
+        let pv = c.pos_vector();
+        assert_eq!(pv.len(), 3);
+        assert_eq!(pv[s], 1);
+    }
+}

@@ -1,0 +1,55 @@
+//! # lqer — Low-Rank Quantization Error Reconstruction for LLMs
+//!
+//! Rust + JAX + Pallas reproduction of *LQER: Low-Rank Quantization Error
+//! Reconstruction for LLMs* (Zhang et al., ICML 2024).
+//!
+//! This crate is **Layer 3** of the three-layer stack (DESIGN.md §3): the
+//! self-contained serving coordinator and evaluation harness.  Python/JAX
+//! runs only at build time (`make artifacts`) to train the synthetic model
+//! family, run the PTQ pipeline, and lower the model graphs to HLO text;
+//! this crate loads those artifacts through the PJRT CPU client and owns
+//! everything on the request path:
+//!
+//! * [`runtime`]     — PJRT client, HLO-text loader, weight store (LQTW)
+//! * [`coordinator`] — request queue, continuous batcher, engine loop
+//! * [`kvcache`]     — slot-based KV cache manager for batched decode
+//! * [`tokenizer`]   — word-level tokenizer over the corpus vocabulary
+//! * [`eval`]        — perplexity / downstream-task / pairwise-judge evaluators
+//! * [`quant`]       — bit-exact MXINT + fixed-point twins of the L1 kernels
+//! * [`linalg`]      — dense matrices + one-sided Jacobi SVD
+//! * [`analysis`]    — singular-value spectra & approximation-error tooling
+//! * [`hwcost`]      — the circuit-area model behind the paper's Tables 3/7/8/9
+//! * [`config`]      — typed experiment / serving configuration
+//! * [`util`]        — JSON, argparse, RNG, logging, timers, mini-proptest
+//!   (no external crates are reachable offline; these substrates are built
+//!   from scratch and unit-tested like everything else)
+
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod hwcost;
+pub mod kvcache;
+pub mod linalg;
+pub mod quant;
+pub mod runtime;
+pub mod tokenizer;
+pub mod util;
+
+/// Repository-relative default artifacts directory.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    // Honour LQER_ARTIFACTS, else walk up from CWD looking for `artifacts/`.
+    if let Ok(p) = std::env::var("LQER_ARTIFACTS") {
+        return std::path::PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_default();
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return std::path::PathBuf::from("artifacts");
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! One-sided Jacobi SVD.
+//!
+//! `svd(A)` for A (m x n) returns (U, s, V^T) with A = U diag(s) V^T,
+//! singular values sorted descending.  The one-sided Jacobi method rotates
+//! *column pairs* of a working copy of A until all pairs are mutually
+//! orthogonal; the column norms are then the singular values.  It is
+//! O(n^2 m) per sweep but numerically excellent — more than enough for the
+//! Figure-1a spectra (192x768) and the LQER reconstruction tests.
+//!
+//! For m < n we factor A^T and swap U/V.
+
+use super::Mat;
+
+pub struct Svd {
+    pub u: Mat,       // m x r
+    pub s: Vec<f64>,  // r, descending
+    pub vt: Mat,      // r x n
+}
+
+const MAX_SWEEPS: usize = 60;
+const TOL: f64 = 1e-12;
+
+/// Compute the thin SVD of `a`.
+pub fn svd(a: &Mat) -> Svd {
+    if a.rows < a.cols {
+        // A = U S V^T  <=>  A^T = V S U^T
+        let t = svd(&a.transpose());
+        return Svd {
+            u: t.vt.transpose(),
+            s: t.s,
+            vt: t.u.transpose(),
+        };
+    }
+    let m = a.rows;
+    let n = a.cols;
+    // Work on columns of W (a copy of A); accumulate V.
+    let mut w = a.clone();
+    let mut v = Mat::eye(n);
+
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0f64;
+        for p in 0..n - 1 {
+            for q in (p + 1)..n {
+                // Gram entries for columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let wp = w.at(i, p);
+                    let wq = w.at(i, q);
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                if apq.abs() <= TOL * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = w.at(i, p);
+                    let wq = w.at(i, q);
+                    *w.at_mut(i, p) = c * wp - s * wq;
+                    *w.at_mut(i, q) = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v.at(i, p);
+                    let vq = v.at(i, q);
+                    *v.at_mut(i, p) = c * vp - s * vq;
+                    *v.at_mut(i, q) = s * vp + c * vq;
+                }
+            }
+        }
+        if off == 0.0 {
+            break;
+        }
+    }
+
+    // Column norms -> singular values; normalize columns of W into U.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sigmas = vec![0.0f64; n];
+    for (j, sig) in sigmas.iter_mut().enumerate() {
+        let mut nrm = 0.0;
+        for i in 0..m {
+            nrm += w.at(i, j) * w.at(i, j);
+        }
+        *sig = nrm.sqrt();
+    }
+    order.sort_by(|&x, &y| sigmas[y].partial_cmp(&sigmas[x]).unwrap());
+
+    let mut u = Mat::zeros(m, n);
+    let mut s = vec![0.0f64; n];
+    let mut vt = Mat::zeros(n, n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        let sig = sigmas[old_j];
+        s[new_j] = sig;
+        let inv = if sig > 0.0 { 1.0 / sig } else { 0.0 };
+        for i in 0..m {
+            *u.at_mut(i, new_j) = w.at(i, old_j) * inv;
+        }
+        for i in 0..n {
+            *vt.at_mut(new_j, i) = v.at(i, old_j);
+        }
+    }
+    Svd { u, s, vt }
+}
+
+/// Singular values only.
+pub fn singular_values(a: &Mat) -> Vec<f64> {
+    svd(a).s
+}
+
+/// Rank-k reconstruction U_k diag(s_k) Vt_k.
+pub fn truncated_product(f: &Svd, k: usize) -> Mat {
+    let k = k.min(f.s.len());
+    let m = f.u.rows;
+    let n = f.vt.cols;
+    let mut out = Mat::zeros(m, n);
+    for j in 0..k {
+        let sig = f.s[j];
+        for i in 0..m {
+            let uij = f.u.at(i, j) * sig;
+            if uij == 0.0 {
+                continue;
+            }
+            for c in 0..n {
+                out.data[i * n + c] += uij * f.vt.at(j, c);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_mat(m: usize, n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(m, n, (0..m * n).map(|_| rng.normal()).collect())
+    }
+
+    fn assert_reconstructs(a: &Mat, tol: f64) {
+        let f = svd(a);
+        let recon = truncated_product(&f, f.s.len());
+        assert!(
+            a.max_abs_diff(&recon) < tol,
+            "reconstruction err {} (shape {}x{})",
+            a.max_abs_diff(&recon),
+            a.rows,
+            a.cols
+        );
+    }
+
+    #[test]
+    fn reconstructs_small() {
+        assert_reconstructs(&random_mat(8, 5, 1), 1e-9);
+        assert_reconstructs(&random_mat(5, 8, 2), 1e-9);
+        assert_reconstructs(&random_mat(16, 16, 3), 1e-9);
+    }
+
+    #[test]
+    fn diag_matrix_svd_is_diag() {
+        let mut a = Mat::zeros(4, 4);
+        for (i, v) in [3.0, 7.0, 1.0, 5.0].iter().enumerate() {
+            a.data[i * 4 + i] = *v;
+        }
+        let s = singular_values(&a);
+        assert!((s[0] - 7.0).abs() < 1e-10);
+        assert!((s[1] - 5.0).abs() < 1e-10);
+        assert!((s[2] - 3.0).abs() < 1e-10);
+        assert!((s[3] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn values_sorted_and_nonnegative() {
+        let s = singular_values(&random_mat(20, 12, 4));
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(s.iter().all(|x| *x >= 0.0));
+    }
+
+    #[test]
+    fn u_and_v_orthonormal() {
+        let a = random_mat(12, 7, 5);
+        let f = svd(&a);
+        let utu = f.u.transpose().matmul(&f.u);
+        let vvt = f.vt.matmul(&f.vt.transpose());
+        assert!(utu.max_abs_diff(&Mat::eye(7)) < 1e-9, "U^T U != I");
+        assert!(vvt.max_abs_diff(&Mat::eye(7)) < 1e-9, "V V^T != I");
+    }
+
+    #[test]
+    fn rank_one_matrix() {
+        // outer product has exactly one nonzero singular value = |u||v|
+        let u = vec![1.0, 2.0, -1.0];
+        let v = vec![0.5, 1.5];
+        let mut a = Mat::zeros(3, 2);
+        for i in 0..3 {
+            for j in 0..2 {
+                a.data[i * 2 + j] = u[i] * v[j];
+            }
+        }
+        let s = singular_values(&a);
+        let expect = (6.0f64).sqrt() * (2.5f64).sqrt();
+        assert!((s[0] - expect).abs() < 1e-10);
+        assert!(s[1].abs() < 1e-10);
+    }
+
+    #[test]
+    fn truncation_error_equals_tail_energy() {
+        // ||A - A_k||_F^2 == sum of squared dropped singular values.
+        let a = random_mat(10, 6, 6);
+        let f = svd(&a);
+        for k in [1, 3, 5] {
+            let ak = truncated_product(&f, k);
+            let mut diff2 = 0.0;
+            for (x, y) in a.data.iter().zip(&ak.data) {
+                diff2 += (x - y) * (x - y);
+            }
+            let tail: f64 = f.s[k..].iter().map(|s| s * s).sum();
+            assert!(
+                (diff2 - tail).abs() < 1e-9 * (1.0 + tail),
+                "k={k}: {diff2} vs {tail}"
+            );
+        }
+    }
+
+    #[test]
+    fn frobenius_preserved() {
+        let a = random_mat(9, 9, 7);
+        let s = singular_values(&a);
+        let f2: f64 = s.iter().map(|x| x * x).sum();
+        assert!((f2.sqrt() - a.frobenius()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,367 @@
+//! `lqer` CLI — leader entrypoint for the L3 coordinator.
+//!
+//! Subcommands map one-to-one onto the paper's experiments:
+//!
+//! ```text
+//! lqer info                           artifact inventory
+//! lqer serve     --addr host:port     HTTP serving frontend
+//! lqer generate  --prompt "..."       serve one request end-to-end
+//! lqer serve-bench                    batched serving load test
+//! lqer eval-ppl  --model --method     WikiText-style perplexity (Tables 2/3/6)
+//! lqer eval-tasks --model --method    downstream accuracy (Table 4)
+//! lqer judge     --a --b              pairwise win rate (Table 5)
+//! lqer spectra                        Figure 1a singular-value series
+//! lqer rank-sweep                     Figure 3 perplexity vs rank
+//! lqer area      [--method ...]       circuit-area model (Tables 3/7/8/9)
+//! ```
+
+use anyhow::Result;
+use lqer::config::Manifest;
+use lqer::coordinator::{EngineConfig, EngineHandle, Request, Sampling};
+use lqer::runtime::{ModelRunner, Runtime};
+use lqer::util::argparse::Args;
+use lqer::util::bench::Table;
+use lqer::{analysis, eval, hwcost};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if std::env::var("LQER_DEBUG").is_ok() {
+        lqer::util::log::set_level(2);
+    }
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { &[] } else { &argv[1..] };
+    match cmd {
+        "info" => info(rest),
+        "serve" => serve(rest),
+        "generate" => generate(rest),
+        "serve-bench" => serve_bench(rest),
+        "eval-ppl" => eval_ppl(rest),
+        "eval-tasks" => eval_tasks(rest),
+        "judge" => judge(rest),
+        "spectra" => spectra(rest),
+        "rank-sweep" => rank_sweep(rest),
+        "area" => area(rest),
+        _ => {
+            println!(
+                "lqer — LQER (ICML 2024) reproduction CLI\n\n\
+                 subcommands: info serve generate serve-bench eval-ppl \
+                 eval-tasks judge spectra rank-sweep area\n\
+                 run `lqer <cmd> --help` for options"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn manifest() -> Result<Manifest> {
+    Manifest::load(&lqer::default_artifacts_dir())
+}
+
+fn info(argv: &[String]) -> Result<()> {
+    let _ = Args::new("info", "artifact inventory").parse(argv)?;
+    let m = manifest()?;
+    println!("artifacts: {}", m.dir.display());
+    let mut t = Table::new("models", &["name", "d", "layers", "heads",
+                                       "ffn", "params"]);
+    for mi in &m.models {
+        t.row(vec![
+            mi.name.clone(),
+            mi.d.to_string(),
+            mi.layers.to_string(),
+            mi.heads.to_string(),
+            mi.ffn.to_string(),
+            mi.n_params.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\n{} PTQ runs, {} lowered graphs", m.runs.len(),
+             m.graphs.len());
+    println!("serve model: {} (methods: {})", m.serve.model,
+             m.serve.methods.join(", "));
+    Ok(())
+}
+
+fn engine_cfg(m: &Manifest, model: &str, method: &str,
+              batch: usize) -> EngineConfig {
+    EngineConfig {
+        model: model.to_string(),
+        method: method.to_string(),
+        decode_batch: batch,
+        prefill_buckets: m
+            .serve
+            .prefill_shapes
+            .iter()
+            .map(|(_, t)| *t)
+            .collect(),
+        max_prefill_per_step: 2,
+    }
+}
+
+fn serve(argv: &[String]) -> Result<()> {
+    let m = manifest()?;
+    let a = Args::new("serve", "HTTP serving frontend")
+        .opt("model", &m.serve.model, "model name")
+        .opt("method", "l2qer-w4a8", "PTQ method")
+        .opt("addr", "127.0.0.1:8317", "listen address")
+        .opt("batch", "8", "decode batch bucket")
+        .parse(argv)?;
+    let tok = lqer::tokenizer::Tokenizer::from_file(
+        &m.data_dir().join("vocab.json"))?;
+    let engine = EngineHandle::spawn(
+        m.dir.clone(),
+        engine_cfg(&m, &a.get("model"), &a.get("method"),
+                   a.get_usize("batch")?),
+    )?;
+    println!("serving {} / {} on http://{}  (POST /generate, \
+              GET /metrics, GET /healthz)",
+             a.get("model"), a.get("method"), a.get("addr"));
+    lqer::coordinator::server::serve(&a.get("addr"), engine, tok)
+}
+
+fn generate(argv: &[String]) -> Result<()> {
+    let m = manifest()?;
+    let a = Args::new("generate", "serve one request end-to-end")
+        .opt("model", &m.serve.model, "model name")
+        .opt("method", "l2qer-w4a8", "PTQ method")
+        .opt("prompt", "the", "prompt text (corpus vocabulary)")
+        .opt("max-new", "24", "max generated tokens")
+        .opt("topk", "0", "top-k sampling (0 = greedy)")
+        .opt("batch", "4", "decode batch bucket")
+        .parse(argv)?;
+    let tok = lqer::tokenizer::Tokenizer::from_file(
+        &m.data_dir().join("vocab.json"))?;
+    let engine = EngineHandle::spawn(
+        m.dir.clone(),
+        engine_cfg(&m, &a.get("model"), &a.get("method"),
+                   a.get_usize("batch")?),
+    )?;
+    let sampling = match a.get_usize("topk")? {
+        0 => Sampling::Greedy,
+        k => Sampling::TopK { k, temperature: 0.8, seed: 17 },
+    };
+    let resp = engine.generate(Request {
+        id: 1,
+        prompt: tok.encode_prompt(&a.get("prompt")),
+        max_new_tokens: a.get_usize("max-new")?,
+        sampling,
+    })?;
+    println!("prompt : {}", a.get("prompt"));
+    println!("output : {}", tok.decode_clean(&resp.tokens));
+    println!(
+        "finish={:?} ttft={:.0}ms total={:.0}ms tokens={}",
+        resp.finish, resp.ttft_ms, resp.total_ms, resp.tokens.len()
+    );
+    engine.shutdown();
+    Ok(())
+}
+
+fn serve_bench(argv: &[String]) -> Result<()> {
+    let m = manifest()?;
+    let a = Args::new("serve-bench", "batched serving load test")
+        .opt("model", &m.serve.model, "model name")
+        .opt("method", "l2qer-w4a8", "PTQ method")
+        .opt("requests", "16", "number of requests")
+        .opt("max-new", "24", "tokens per request")
+        .opt("batch", "8", "decode batch bucket")
+        .parse(argv)?;
+    let stats = lqer::coordinator::loadtest::run_loadtest(
+        &m,
+        &engine_cfg(&m, &a.get("model"), &a.get("method"),
+                    a.get_usize("batch")?),
+        a.get_usize("requests")?,
+        a.get_usize("max-new")?,
+    )?;
+    println!("{}", stats.report());
+    Ok(())
+}
+
+fn eval_ppl(argv: &[String]) -> Result<()> {
+    let m = manifest()?;
+    let a = Args::new("eval-ppl", "perplexity on the held-out stream")
+        .opt("model", "opt-mini", "model name")
+        .opt("method", "", "method (empty = all runs for the model)")
+        .opt("windows", "16", "number of (B,T) windows (0 = all)")
+        .parse(argv)?;
+    let rt = Runtime::cpu()?;
+    let stream =
+        lqer::util::read_u16_file(&m.data_dir().join("test.u16"))?;
+    let methods = if a.get("method").is_empty() {
+        m.methods_for(&a.get("model"))
+    } else {
+        vec![a.get("method")]
+    };
+    let mut t = Table::new("perplexity", &["model", "method", "ppl",
+                                           "nll", "tokens"]);
+    for method in methods {
+        let runner = ModelRunner::new(&m, &a.get("model"), &method)?;
+        let r = eval::ppl::perplexity(&rt, &m, &runner, &stream,
+                                      a.get_usize("windows")?)?;
+        t.row(vec![
+            a.get("model"),
+            method,
+            format!("{:.3}", r.ppl),
+            format!("{:.4}", r.nll),
+            r.tokens.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn eval_tasks(argv: &[String]) -> Result<()> {
+    let m = manifest()?;
+    let a = Args::new("eval-tasks", "six downstream tasks")
+        .opt("model", "opt-mini", "model name")
+        .opt("method", "l2qer-w4a8", "method")
+        .opt("per-task", "32", "items per task (0 = all)")
+        .parse(argv)?;
+    let rt = Runtime::cpu()?;
+    let items =
+        eval::tasks::load_tasks(&m.data_dir().join("tasks.json"))?;
+    let runner = ModelRunner::new(&m, &a.get("model"), &a.get("method"))?;
+    let scores = eval::tasks::evaluate(&rt, &m, &runner, &items,
+                                       a.get_usize("per-task")?)?;
+    let mut t = Table::new("downstream accuracy",
+                           &["task", "accuracy", "items"]);
+    for (name, acc, n) in &scores.per_task {
+        t.row(vec![name.clone(), format!("{:.1}%", acc * 100.0),
+                   n.to_string()]);
+    }
+    t.row(vec!["AVERAGE".into(),
+               format!("{:.1}%", scores.average() * 100.0), "".into()]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn judge(argv: &[String]) -> Result<()> {
+    let m = manifest()?;
+    let a = Args::new("judge", "pairwise win rate, FP16 model as judge")
+        .opt("model", &m.serve.model, "model name")
+        .opt("a", "l2qer-w4a8", "generation method A")
+        .opt("b", "fp16", "generation method B (reference)")
+        .opt("n", "32", "number of prompts")
+        .opt("max-new", "16", "tokens per generation")
+        .parse(argv)?;
+    let result = lqer::coordinator::loadtest::run_judge(
+        &m, &a.get("model"), &a.get("a"), &a.get("b"),
+        a.get_usize("n")?, a.get_usize("max-new")?)?;
+    println!(
+        "{} vs {} on {}: win rate {:.1}%  length-controlled {:.1}%  \
+         (n={}, ties={})",
+        a.get("a"), a.get("b"), a.get("model"),
+        result.win_rate() * 100.0, result.lc_win_rate() * 100.0,
+        result.n, result.ties
+    );
+    Ok(())
+}
+
+fn spectra(argv: &[String]) -> Result<()> {
+    let _ = Args::new("spectra", "Figure 1a singular-value series")
+        .parse(argv)?;
+    let m = manifest()?;
+    let s = analysis::fig1a_spectra(&m.dir.join("fig1a"))?;
+    println!("layer: {} (W3 MXINT quantization error)", s.layer);
+    let mut t = Table::new("normalized singular values (Figure 1a)",
+                           &["i", "LQER sigma_i(E_q)",
+                             "L2QER sigma_i(S E_q)"]);
+    for i in (0..s.lqer.len()).step_by(8.max(s.lqer.len() / 24)) {
+        t.row(vec![i.to_string(), format!("{:.4}", s.lqer[i]),
+                   format!("{:.4}", s.l2qer[i])]);
+    }
+    print!("{}", t.render());
+    for k in [8, 16, 32, 64] {
+        println!(
+            "top-{k} energy: LQER {:.3}  L2QER {:.3}",
+            analysis::Spectra::energy_at(&s.lqer, k),
+            analysis::Spectra::energy_at(&s.l2qer, k)
+        );
+    }
+    Ok(())
+}
+
+fn rank_sweep(argv: &[String]) -> Result<()> {
+    let m = manifest()?;
+    let a = Args::new("rank-sweep", "Figure 3: perplexity vs rank")
+        .opt("windows", "8", "ppl windows per point")
+        .parse(argv)?;
+    let rt = Runtime::cpu()?;
+    let stream =
+        lqer::util::read_u16_file(&m.data_dir().join("test.u16"))?;
+    let model = m.fig3_model.clone();
+    let mut t = Table::new(
+        "Figure 3: W2A8 perplexity vs rank k",
+        &["k", "LQER ppl", "L2QER ppl"],
+    );
+    let windows = a.get_usize("windows")?;
+    for &k in &m.fig3_ranks {
+        let mut row = vec![k.to_string()];
+        for prefix in ["lqer", "l2qer"] {
+            let method = format!("{prefix}-w2a8-k{k}");
+            let runner = ModelRunner::new(&m, &model, &method)?;
+            let r = eval::ppl::perplexity(&rt, &m, &runner, &stream,
+                                          windows)?;
+            row.push(format!("{:.3}", r.ppl));
+        }
+        t.row(row);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn area(argv: &[String]) -> Result<()> {
+    let a = Args::new("area", "circuit-area model (Tables 3/7/8/9)")
+        .opt("method", "", "single method (empty = all)")
+        .parse(argv)?;
+    let methods: Vec<String> = if a.get("method").is_empty() {
+        vec![
+            "fp16", "gptq-w4", "awq-w4", "llmint4", "smoothquant-w8a8",
+            "clipq-w6a6", "mxint-w4a8", "l2qer-int-w4", "l2qer-int-w4a8",
+            "l2qer-w4a6", "l2qer-w4a8",
+        ]
+        .into_iter()
+        .map(str::to_string)
+        .collect()
+    } else {
+        vec![a.get("method")]
+    };
+    let mut t = Table::new("circuit area (16 MACs/cycle PE)",
+                           &["method", "LUTs", "vs FP16"]);
+    for method in &methods {
+        let pe = hwcost::area_for_method(method)
+            .ok_or_else(|| anyhow::anyhow!("no area model for {method}"))?;
+        t.row(vec![
+            method.clone(),
+            format!("{:.0}", pe.total),
+            format!("{:.2}x", pe.relative()),
+        ]);
+    }
+    print!("{}", t.render());
+    for method in &methods {
+        if let Some(pe) = hwcost::area_for_method(method) {
+            if matches!(method.as_str(),
+                        "llmint4" | "awq-w4" | "l2qer-w4a8") {
+                let mut bt = Table::new(
+                    &format!("area breakdown: {method}"),
+                    &["component", "LUTs", "share"]);
+                for (name, luts) in &pe.components {
+                    bt.row(vec![name.clone(), format!("{luts:.0}"),
+                                format!("{:.1}%",
+                                        luts / pe.total * 100.0)]);
+                }
+                print!("{}", bt.render());
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! IEEE 754 binary16 conversion (round-to-nearest-even), used to model the
+//! FP16 group scales of the INT-gG quantizers exactly as numpy's
+//! `astype(float16)` does.
+
+/// f32 -> f16 bit pattern with round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let frac = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        let nan = if frac != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | nan | ((frac >> 13) as u16 & 0x03FF);
+    }
+    // Re-bias: f32 bias 127, f16 bias 15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal half. Round mantissa 23 -> 10 bits, ties to even.
+        let mant = frac >> 13;
+        let rest = frac & 0x1FFF;
+        let half = 0x1000u32;
+        let mut h = sign as u32 | (((unbiased + 15) as u32) << 10) | mant;
+        if rest > half || (rest == half && (mant & 1) == 1) {
+            h += 1; // may carry into exponent: correct behaviour
+        }
+        return h as u16;
+    }
+    if unbiased >= -25 {
+        // Subnormal half.
+        let full = frac | 0x0080_0000; // implicit 1
+        let shift = (-14 - unbiased) as u32 + 13;
+        let mant = full >> shift;
+        let rest = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut h = sign as u32 | mant;
+        if rest > half || (rest == half && (mant & 1) == 1) {
+            h += 1;
+        }
+        return h as u16;
+    }
+    sign // underflow to zero
+}
+
+/// f16 bit pattern -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let frac = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign
+        } else {
+            // subnormal: value = frac * 2^-24; normalize so the top set
+            // bit (position p) becomes the implicit one.
+            let p = 31 - frac.leading_zeros(); // 0..=9
+            let frac_n = (frac << (10 - p)) & 0x03FF;
+            let exp_n = 103 + p; // (p - 24) + 127
+            sign | (exp_n << 23) | (frac_n << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (frac << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through f16 precision (numpy `x.astype(f16).astype(f32)`).
+pub fn round_via_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, 6.1035156e-5] {
+            assert_eq!(round_via_f16(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly between 1.0 and 1+2^-10: ties to even -> 1.0
+        let x = 1.0f32 + f32::powi(2.0, -11);
+        assert_eq!(round_via_f16(x), 1.0);
+        // slightly above the tie rounds up
+        let y = 1.0f32 + f32::powi(2.0, -11) + f32::powi(2.0, -13);
+        assert_eq!(round_via_f16(y), 1.0 + f32::powi(2.0, -10));
+    }
+
+    #[test]
+    fn overflow_and_underflow() {
+        assert!(round_via_f16(1e6).is_infinite());
+        assert_eq!(round_via_f16(1e-10), 0.0);
+        // subnormal half range
+        let sub = 2.0f32.powi(-24);
+        assert_eq!(round_via_f16(sub), sub);
+    }
+
+    #[test]
+    fn matches_native_reference_on_grid() {
+        // Cross-check against rust's own f32->f64 path by exhaustively
+        // round-tripping all f16 bit patterns: to_f32 then back must be id.
+        for h in 0u16..=0xFFFF {
+            let exp = (h >> 10) & 0x1F;
+            if exp == 0x1F {
+                continue; // skip inf/nan payload identity
+            }
+            let f = f16_bits_to_f32(h);
+            let back = f32_to_f16_bits(f);
+            assert_eq!(back, h, "h={h:#06x} f={f}");
+        }
+    }
+}

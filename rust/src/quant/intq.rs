@@ -1,0 +1,127 @@
+//! Symmetric fixed-point quantization (the INTb-gG weight grid and the
+//! per-token activation quantizer) — rust twin of
+//! `python/compile/quant/formats.py::int_quant_group / int_quant_per_token`.
+
+use super::f16::round_via_f16;
+
+/// Quantize-dequantize one group sharing an FP16 scale = amax / qmax.
+pub fn int_quant_group_slice(vals: &mut [f32], bits: u32, fp16_scale: bool) {
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    let qmin = -qmax - 1.0;
+    let amax = vals.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+    let mut scale = if amax > 0.0 { amax / qmax } else { 1.0 };
+    if fp16_scale {
+        scale = round_via_f16(scale);
+    }
+    for x in vals.iter_mut() {
+        let q = (*x / scale).round_ties_even().clamp(qmin, qmax);
+        *x = q * scale;
+    }
+}
+
+/// Group quantization along the *first* axis of a row-major (rows, cols)
+/// matrix (weight orientation, groups of `group` input features per
+/// output column).
+/// Largest divisor of n <= group (mirrors python's `effective_group`).
+pub fn effective_group(n: usize, group: usize) -> usize {
+    let mut g = group.min(n);
+    while n % g != 0 {
+        g -= 1;
+    }
+    g
+}
+
+pub fn int_quant_group_cols(
+    data: &mut [f32],
+    cols: usize,
+    bits: u32,
+    group: usize,
+) {
+    let rows = data.len() / cols;
+    assert_eq!(data.len() % cols, 0);
+    let g = effective_group(rows, group);
+    let mut buf = vec![0.0f32; g];
+    for c in 0..cols {
+        for g0 in (0..rows).step_by(g) {
+            for (i, slot) in buf.iter_mut().enumerate() {
+                *slot = data[(g0 + i) * cols + c];
+            }
+            int_quant_group_slice(&mut buf, bits, true);
+            for (i, v) in buf.iter().enumerate() {
+                data[(g0 + i) * cols + c] = *v;
+            }
+        }
+    }
+}
+
+/// Per-token (per-row) symmetric quantization; scale stays f32 (matches
+/// the python activation quantizer).
+pub fn int_quant_per_token(data: &mut [f32], cols: usize, bits: u32) {
+    assert_eq!(data.len() % cols, 0);
+    for row in data.chunks_exact_mut(cols) {
+        int_quant_group_slice_f32_scale(row, bits);
+    }
+}
+
+fn int_quant_group_slice_f32_scale(vals: &mut [f32], bits: u32) {
+    int_quant_group_slice(vals, bits, false);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, VecF32};
+
+    #[test]
+    fn grid_has_at_most_2b_levels() {
+        check("int-levels", 100,
+              &VecF32 { min_len: 8, max_len: 64, scale: 3.0 }, |v| {
+            let mut q = v.clone();
+            int_quant_group_slice(&mut q, 3, true);
+            let mut levels: Vec<i64> =
+                q.iter().map(|x| (x.to_bits() as i64)).collect();
+            levels.sort_unstable();
+            levels.dedup();
+            if levels.len() <= 8 {
+                Ok(())
+            } else {
+                Err(format!("{} distinct levels for 3 bits", levels.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn preserves_sign_and_bound() {
+        check("int-bound", 100,
+              &VecF32 { min_len: 4, max_len: 32, scale: 2.0 }, |v| {
+            let mut q = v.clone();
+            int_quant_group_slice(&mut q, 8, true);
+            let amax = v.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+            for (x, y) in v.iter().zip(&q) {
+                if x.abs() > 1e-3 && x.signum() != y.signum() && *y != 0.0 {
+                    return Err(format!("sign flip {x} -> {y}"));
+                }
+                if y.abs() > amax * 1.01 + 1e-6 {
+                    return Err(format!("|q|={} > amax={amax}", y.abs()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_group_unchanged() {
+        let mut v = vec![0.0f32; 16];
+        int_quant_group_slice(&mut v, 4, true);
+        assert!(v.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn per_token_rows_independent() {
+        let mut a = vec![1.0f32, -2.0, 0.5, 100.0, 50.0, -25.0];
+        int_quant_per_token(&mut a, 3, 8);
+        // first row small scale, second row large; both near-exact at 8 bits
+        assert!((a[0] - 1.0).abs() < 0.02);
+        assert!((a[3] - 100.0).abs() < 1.0);
+    }
+}

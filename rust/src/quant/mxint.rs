@@ -1,0 +1,225 @@
+//! MXINT block floating point (fake quantization) — the rust twin of
+//! `python/compile/quant/formats.py::mxint_quant` and of the L1 Pallas
+//! kernel.  Bit-exact with the python implementation (golden-tested).
+//!
+//! MXINT(e, m, B): B consecutive values share an e-bit exponent
+//! E = clamp(floor(log2 max|block|), -2^(e-1), 2^(e-1)-1); each element is
+//! an m-bit signed mantissa on the grid step = 2^(E - m + 2).
+
+/// floor(log2(x)) for finite x > 0, exact via the bit pattern
+/// (frexp semantics; handles subnormals).
+pub fn floor_log2(x: f32) -> i32 {
+    debug_assert!(x > 0.0 && x.is_finite());
+    let bits = x.to_bits();
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    if exp != 0 {
+        exp - 127
+    } else {
+        // subnormal: value = frac * 2^-149
+        let frac = bits & 0x007F_FFFF;
+        -149 + (31 - frac.leading_zeros() as i32)
+    }
+}
+
+/// Parameters of one MXINT format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MxFormat {
+    pub elem_bits: u32,
+    pub exp_bits: u32,
+    pub block: usize,
+}
+
+impl MxFormat {
+    /// Paper §4.1 weight format: e=4, block [16,1].
+    pub fn weight(elem_bits: u32) -> Self {
+        MxFormat { elem_bits, exp_bits: 4, block: 16 }
+    }
+
+    /// Paper §4.1 activation format: e=8, block [1,16].
+    pub fn act(elem_bits: u32) -> Self {
+        MxFormat { elem_bits, exp_bits: 8, block: 16 }
+    }
+
+    pub fn avg_bits(&self) -> f64 {
+        super::mxint_avg_bits(self.elem_bits, self.exp_bits, self.block)
+    }
+
+    fn exp_min(&self) -> i32 {
+        -(1 << (self.exp_bits - 1))
+    }
+
+    fn exp_max(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Quantize-dequantize one contiguous block in place.
+    pub fn quant_block(&self, block: &mut [f32]) {
+        let amax = block.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+        let e = if amax > 0.0 {
+            floor_log2(amax).clamp(self.exp_min(), self.exp_max())
+        } else {
+            self.exp_min()
+        };
+        let step = (e as f32 - (self.elem_bits as f32 - 2.0)).exp2();
+        let qmin = -((1i64 << (self.elem_bits - 1)) as f32);
+        let qmax = ((1i64 << (self.elem_bits - 1)) - 1) as f32;
+        for x in block.iter_mut() {
+            let q = (*x / step).round_ties_even().clamp(qmin, qmax);
+            *x = q * step;
+        }
+    }
+
+    /// Fake-quantize a (rows, cols) row-major matrix with blocks along the
+    /// last axis (activation orientation: [1, block]).
+    pub fn quant_rows(&self, data: &mut [f32], cols: usize) {
+        assert_eq!(data.len() % cols, 0);
+        assert_eq!(cols % self.block, 0, "cols {cols} % block {}", self.block);
+        for row in data.chunks_exact_mut(cols) {
+            for blk in row.chunks_exact_mut(self.block) {
+                self.quant_block(blk);
+            }
+        }
+    }
+
+    /// Fake-quantize a (rows, cols) row-major matrix with blocks along the
+    /// first axis (weight orientation: [block, 1] over input features).
+    pub fn quant_cols(&self, data: &mut [f32], cols: usize) {
+        let rows = data.len() / cols;
+        assert_eq!(data.len() % cols, 0);
+        assert_eq!(rows % self.block, 0, "rows {rows} % block {}", self.block);
+        let mut blk = vec![0.0f32; self.block];
+        for c in 0..cols {
+            for b0 in (0..rows).step_by(self.block) {
+                for (i, slot) in blk.iter_mut().enumerate() {
+                    *slot = data[(b0 + i) * cols + c];
+                }
+                self.quant_block(&mut blk);
+                for (i, v) in blk.iter().enumerate() {
+                    data[(b0 + i) * cols + c] = *v;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, VecF32};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn floor_log2_exact() {
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(2.0), 1);
+        assert_eq!(floor_log2(1.99), 0);
+        assert_eq!(floor_log2(0.5), -1);
+        assert_eq!(floor_log2(0.4999), -2);
+        assert_eq!(floor_log2(f32::MIN_POSITIVE), -126);
+        assert_eq!(floor_log2(f32::from_bits(1)), -149); // min subnormal
+    }
+
+    #[test]
+    fn requantization_drift_bounded() {
+        // Exact idempotence fails when a value hits -2^(m-1) (the block
+        // max doubles and the shared exponent shifts) — a property of
+        // the MXINT grid itself.  Drift is bounded by one coarse step.
+        let fmt = MxFormat::weight(4);
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let mut v: Vec<f32> =
+                (0..16).map(|_| rng.normal() as f32 * 0.3).collect();
+            fmt.quant_block(&mut v);
+            let once = v.clone();
+            fmt.quant_block(&mut v);
+            let amax = once.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+            if amax == 0.0 {
+                continue;
+            }
+            let step = (floor_log2(amax) as f32 - 2.0).exp2();
+            for (a, b) in once.iter().zip(&v) {
+                assert!((a - b).abs() <= step, "{a} -> {b} (step {step})");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_block_stays_zero() {
+        let fmt = MxFormat::weight(4);
+        let mut v = vec![0.0f32; 16];
+        fmt.quant_block(&mut v);
+        assert!(v.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn error_bounded_by_step() {
+        // |x - q(x)| <= step/2 when no clipping occurs (amax defines E, so
+        // elements <= amax < 2^(E+1) can clip only at the positive edge by
+        // at most one step).
+        let fmt = MxFormat::act(8);
+        check("mx-err-bound", 200,
+              &VecF32 { min_len: 16, max_len: 16, scale: 2.0 }, |v| {
+            let mut q = v.clone();
+            fmt.quant_block(&mut q);
+            let amax = v.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+            if amax == 0.0 {
+                return Ok(());
+            }
+            let e = floor_log2(amax).clamp(-128, 127);
+            let step = (e as f32 - 6.0).exp2();
+            for (x, y) in v.iter().zip(&q) {
+                if (x - y).abs() > step {
+                    return Err(format!("err {} > step {step}", (x - y).abs()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn more_bits_never_worse() {
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let v: Vec<f32> =
+                (0..16).map(|_| rng.normal() as f32).collect();
+            let mut err = Vec::new();
+            for bits in [2, 3, 4, 8] {
+                let fmt = MxFormat::weight(bits);
+                let mut q = v.clone();
+                fmt.quant_block(&mut q);
+                let e: f32 =
+                    v.iter().zip(&q).map(|(a, b)| (a - b).abs()).sum();
+                err.push(e);
+            }
+            for w in err.windows(2) {
+                assert!(w[1] <= w[0] + 1e-6, "{err:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn orientation_transpose_equivalence() {
+        // quant_cols on M == quant_rows on M^T.
+        let rows = 32;
+        let cols = 8;
+        let mut rng = Rng::new(11);
+        let m: Vec<f32> =
+            (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        let fmt = MxFormat::weight(4);
+        let mut a = m.clone();
+        fmt.quant_cols(&mut a, cols);
+        // transpose
+        let mut t = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                t[c * rows + r] = m[r * cols + c];
+            }
+        }
+        fmt.quant_rows(&mut t, rows);
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(a[r * cols + c], t[c * rows + r]);
+            }
+        }
+    }
+}

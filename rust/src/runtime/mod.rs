@@ -1,0 +1,348 @@
+//! PJRT runtime: loads AOT artifacts (HLO text + LQTW weights) and executes
+//! them on the CPU PJRT client.  This is the only module that touches the
+//! `xla` crate; everything above it (coordinator, eval) sees plain slices.
+//!
+//! Key decisions (see DESIGN.md §6 and /opt/xla-example/README.md):
+//! * HLO **text** interchange — `HloModuleProto::from_text_file` reassigns
+//!   the 64-bit instruction ids jax ≥ 0.5 emits that XLA 0.5.1 rejects.
+//! * Weights are HLO *parameters*, uploaded once as device buffers and
+//!   reused across every call (`execute_b`), so the request path never
+//!   re-serializes the model.
+//! * Graphs are lowered with `return_tuple=True`, so outputs arrive as one
+//!   tuple literal that we decompose.
+
+pub mod weights;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+pub use weights::WeightStore;
+
+/// Execution statistics for the perf pass (§Perf of EXPERIMENTS.md).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub exec_ns: u64,
+    pub upload_ns: u64,
+    pub download_ns: u64,
+}
+
+impl ExecStats {
+    pub fn merge(&mut self, other: &ExecStats) {
+        self.calls += other.calls;
+        self.exec_ns += other.exec_ns;
+        self.upload_ns += other.upload_ns;
+        self.download_ns += other.download_ns;
+    }
+}
+
+/// A compiled graph plus the device-resident weight buffers it closes over.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::PjRtBuffer>,
+    pub n_outputs: usize,
+    stats: Mutex<ExecStats>,
+}
+
+/// Dense f32 host tensor crossing the runtime boundary.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data }
+    }
+}
+
+/// Inputs that follow the weight parameters in a call.
+pub enum Arg<'a> {
+    I32(&'a [i32], Vec<usize>),
+    F32(&'a [f32], Vec<usize>),
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text file and bind the weight store's tensors as the
+    /// leading parameters.
+    pub fn load(
+        &self,
+        hlo_path: &Path,
+        store: &WeightStore,
+        n_outputs: usize,
+    ) -> Result<Executable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| {
+            anyhow::anyhow!("parsing {}: {e:?}", hlo_path.display())
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| {
+                anyhow::anyhow!("compiling {}: {e:?}", hlo_path.display())
+            })?;
+        let mut weights = Vec::with_capacity(store.tensors.len());
+        for t in &store.tensors {
+            weights.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                    .map_err(|e| {
+                        anyhow::anyhow!("uploading {}: {e:?}", t.name)
+                    })?,
+            );
+        }
+        crate::debug!(
+            "loaded {} ({} weight tensors) in {:.1}s",
+            hlo_path.file_name().unwrap_or_default().to_string_lossy(),
+            weights.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(Executable {
+            exe,
+            weights,
+            n_outputs,
+            stats: Mutex::new(ExecStats::default()),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with the bound weights plus `args`; returns the decomposed
+    /// output tuple as host tensors (f32; integer outputs are not used by
+    /// any of our graphs).
+    pub fn call(&self, rt: &Runtime, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let mut stats = ExecStats { calls: 1, ..Default::default() };
+        let t0 = Instant::now();
+        let mut bufs: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        let mut owned = Vec::with_capacity(args.len());
+        for arg in args {
+            let buf = match arg {
+                Arg::I32(data, dims) => rt
+                    .client
+                    .buffer_from_host_buffer::<i32>(data, dims, None),
+                Arg::F32(data, dims) => rt
+                    .client
+                    .buffer_from_host_buffer::<f32>(data, dims, None),
+            }
+            .map_err(|e| anyhow::anyhow!("arg upload: {e:?}"))?;
+            owned.push(buf);
+        }
+        bufs.extend(owned.iter());
+        stats.upload_ns = t0.elapsed().as_nanos() as u64;
+
+        let t1 = Instant::now();
+        let result = self
+            .exe
+            .execute_b(&bufs)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        stats.exec_ns = t1.elapsed().as_nanos() as u64;
+
+        let t2 = Instant::now();
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == self.n_outputs,
+            "expected {} outputs, got {}",
+            self.n_outputs,
+            parts.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for lit in parts {
+            let shape = lit
+                .array_shape()
+                .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+            let dims: Vec<usize> =
+                shape.dims().iter().map(|d| *d as usize).collect();
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+            out.push(HostTensor::new(dims, data));
+        }
+        stats.download_ns = t2.elapsed().as_nanos() as u64;
+        self.stats.lock().unwrap().merge(&stats);
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model runner: the three graphs of one (model, method) run.
+// ---------------------------------------------------------------------------
+
+/// Identifies one loadable graph for caching.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct GraphKey {
+    pub entry: String,
+    pub b: usize,
+    pub t: usize,
+}
+
+/// All executables of one PTQ run, loaded lazily per shape bucket.
+pub struct ModelRunner {
+    pub model: crate::config::ModelInfo,
+    pub method: String,
+    pub graph_tag: String,
+    store: WeightStore,
+    exes: Mutex<HashMap<GraphKey, std::sync::Arc<Executable>>>,
+}
+
+impl ModelRunner {
+    /// Load the weight store for a run (graphs attach lazily).
+    pub fn new(
+        manifest: &crate::config::Manifest,
+        model: &str,
+        method: &str,
+    ) -> Result<Self> {
+        let run = manifest.run(model, method)?;
+        let info = manifest.model(model)?.clone();
+        let store = WeightStore::load(&run.weights)?;
+        Ok(ModelRunner {
+            model: info,
+            method: method.to_string(),
+            graph_tag: run.graph.clone(),
+            store,
+            exes: Mutex::new(HashMap::new()),
+        })
+    }
+
+    fn outputs_for(entry: &str) -> usize {
+        match entry {
+            "score" => 1,
+            "prefill" | "decode" => 3,
+            _ => 1,
+        }
+    }
+
+    /// Get (compiling if needed) the executable for an entry point.
+    pub fn executable(
+        &self,
+        rt: &Runtime,
+        manifest: &crate::config::Manifest,
+        entry: &str,
+        b: usize,
+        t: usize,
+    ) -> Result<std::sync::Arc<Executable>> {
+        let key = GraphKey { entry: entry.to_string(), b, t };
+        if let Some(e) = self.exes.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let g = manifest.graph(&self.model.name, &self.graph_tag, entry, b, t)?;
+        let exe = std::sync::Arc::new(rt.load(
+            &g.path,
+            &self.store,
+            Self::outputs_for(entry),
+        )?);
+        self.exes.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Full-sequence logits: tokens (b*t) -> logits (b, t, vocab).
+    pub fn score(
+        &self,
+        rt: &Runtime,
+        manifest: &crate::config::Manifest,
+        tokens: &[i32],
+        b: usize,
+        t: usize,
+    ) -> Result<HostTensor> {
+        anyhow::ensure!(tokens.len() == b * t, "token count");
+        let exe = self.executable(rt, manifest, "score", b, t)?;
+        let mut out = exe.call(rt, &[Arg::I32(tokens, vec![b, t])])?;
+        Ok(out.remove(0))
+    }
+
+    /// Prefill: tokens (b*t) -> (logits (b,t,v), k (L,b,t,d), v (L,b,t,d)).
+    pub fn prefill(
+        &self,
+        rt: &Runtime,
+        manifest: &crate::config::Manifest,
+        tokens: &[i32],
+        b: usize,
+        t: usize,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let exe = self.executable(rt, manifest, "prefill", b, t)?;
+        let mut out = exe.call(rt, &[Arg::I32(tokens, vec![b, t])])?;
+        anyhow::ensure!(out.len() == 3);
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let logits = out.pop().unwrap();
+        Ok((logits, k, v))
+    }
+
+    /// One decode step over a batch bucket of size b.
+    ///
+    /// caches: (L, b, t_max, d) row-major; pos[b] marks the next position.
+    /// Returns (logits (b,v), k_new (L,b,d), v_new (L,b,d)).
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode(
+        &self,
+        rt: &Runtime,
+        manifest: &crate::config::Manifest,
+        token: &[i32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        pos: &[i32],
+        b: usize,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let m = &self.model;
+        let cache_dims = vec![m.layers, b, m.t_max, m.d];
+        let n: usize = cache_dims.iter().product();
+        anyhow::ensure!(k_cache.len() == n && v_cache.len() == n,
+                        "cache size");
+        let exe = self.executable(rt, manifest, "decode", b, 0)?;
+        let mut out = exe.call(
+            rt,
+            &[
+                Arg::I32(token, vec![b]),
+                Arg::F32(k_cache, cache_dims.clone()),
+                Arg::F32(v_cache, cache_dims),
+                Arg::I32(pos, vec![b]),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 3);
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let logits = out.pop().unwrap();
+        Ok((logits, k, v))
+    }
+
+    /// Aggregate stats across all loaded executables.
+    pub fn stats(&self) -> ExecStats {
+        let mut agg = ExecStats::default();
+        for exe in self.exes.lock().unwrap().values() {
+            agg.merge(&exe.stats());
+        }
+        agg
+    }
+}

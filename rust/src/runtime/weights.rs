@@ -1,0 +1,138 @@
+//! LQTW weight-file loader.
+//!
+//! Format (written by `python/compile/aot.py::write_lqtw`):
+//!
+//! ```text
+//! magic  b"LQTW0001"
+//! u32    manifest length (little endian)
+//! bytes  JSON manifest {"tensors": [{name, shape, offset, nbytes}...],
+//!                       "meta": {...}}
+//! pad    zero bytes to a 64-byte boundary
+//! data   raw f32 little-endian tensors, in manifest order
+//! ```
+//!
+//! Tensor order in the manifest is jax tree-flatten order, which is the
+//! HLO parameter order of every lowered graph for this run.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json;
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug)]
+pub struct WeightStore {
+    pub tensors: Vec<Tensor>,
+    pub meta: json::Value,
+}
+
+pub const MAGIC: &[u8; 8] = b"LQTW0001";
+
+impl WeightStore {
+    pub fn load(path: &Path) -> Result<WeightStore> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        anyhow::ensure!(bytes.len() > 12, "file too small");
+        anyhow::ensure!(&bytes[..8] == MAGIC, "bad magic in {}",
+                        path.display());
+        let mlen =
+            u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]])
+                as usize;
+        anyhow::ensure!(bytes.len() >= 12 + mlen, "truncated manifest");
+        let manifest: json::Value = json::parse(
+            std::str::from_utf8(&bytes[12..12 + mlen])
+                .context("manifest not utf-8")?,
+        )?;
+        let data_start = (12 + mlen).div_ceil(64) * 64;
+
+        let mut tensors = Vec::new();
+        for t in manifest.req("tensors")?.as_array().unwrap_or(&[]) {
+            let name = t.str_at("name")?;
+            let shape: Vec<usize> = t
+                .req("shape")?
+                .as_array()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect();
+            let offset = t.usize_at("offset")?;
+            let nbytes = t.usize_at("nbytes")?;
+            let n = shape.iter().product::<usize>();
+            anyhow::ensure!(nbytes == n * 4, "{name}: nbytes/shape mismatch");
+            let start = data_start + offset;
+            anyhow::ensure!(
+                start + nbytes <= bytes.len(),
+                "{name}: data out of range"
+            );
+            let data: Vec<f32> = bytes[start..start + nbytes]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push(Tensor { name, shape, data });
+        }
+        let meta = manifest
+            .get("meta")
+            .cloned()
+            .unwrap_or(json::Value::Obj(vec![]));
+        Ok(WeightStore { tensors, meta })
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.data.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_test_file(path: &Path) {
+        let manifest = r#"{"tensors": [
+            {"name": "a", "shape": [2, 2], "offset": 0, "nbytes": 16},
+            {"name": "b", "shape": [3], "offset": 16, "nbytes": 12}],
+            "meta": {"model": "m"}}"#;
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(manifest.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(manifest.as_bytes()).unwrap();
+        let pos = 12 + manifest.len();
+        f.write_all(&vec![0u8; pos.div_ceil(64) * 64 - pos]).unwrap();
+        for v in [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn loads_tensors_in_order() {
+        let path = std::env::temp_dir().join("lqtw_test.bin");
+        write_test_file(&path);
+        let ws = WeightStore::load(&path).unwrap();
+        assert_eq!(ws.tensors.len(), 2);
+        assert_eq!(ws.tensors[0].name, "a");
+        assert_eq!(ws.tensors[0].data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(ws.tensors[1].data, vec![5.0, 6.0, 7.0]);
+        assert_eq!(ws.total_params(), 7);
+        assert_eq!(ws.meta.str_at("model").unwrap(), "m");
+        assert!(ws.tensor("b").is_some());
+        assert!(ws.tensor("c").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join("lqtw_bad.bin");
+        std::fs::write(&path, b"NOTLQTW0____").unwrap();
+        assert!(WeightStore::load(&path).is_err());
+    }
+}

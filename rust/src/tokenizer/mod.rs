@@ -1,0 +1,144 @@
+//! Word-level tokenizer over the TinyPajama vocabulary
+//! (`artifacts/data/vocab.json`).  Whitespace-split words map to ids;
+//! unknown words to `<unk>`.  Mirrors `python/compile/data.py`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Specials {
+    pub pad: u32,
+    pub bos: u32,
+    pub eos: u32,
+    pub unk: u32,
+}
+
+#[derive(Debug)]
+pub struct Tokenizer {
+    words: Vec<String>,
+    ids: HashMap<String, u32>,
+    pub specials: Specials,
+}
+
+impl Tokenizer {
+    pub fn from_file(path: &Path) -> anyhow::Result<Self> {
+        let v = json::parse_file(path)?;
+        let words: Vec<String> = v
+            .req("words")?
+            .as_array()
+            .ok_or_else(|| anyhow::anyhow!("words not an array"))?
+            .iter()
+            .map(|w| {
+                w.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("non-string word"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let sp = v.req("specials")?;
+        let specials = Specials {
+            pad: sp.usize_at("pad")? as u32,
+            bos: sp.usize_at("bos")? as u32,
+            eos: sp.usize_at("eos")? as u32,
+            unk: sp.usize_at("unk")? as u32,
+        };
+        Ok(Self::new(words, specials))
+    }
+
+    pub fn new(words: Vec<String>, specials: Specials) -> Self {
+        let ids = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as u32))
+            .collect();
+        Tokenizer { words, ids, specials }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn token(&self, id: u32) -> &str {
+        self.words
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("<bad>")
+    }
+
+    pub fn id(&self, word: &str) -> u32 {
+        self.ids.get(word).copied().unwrap_or(self.specials.unk)
+    }
+
+    /// Whitespace-split encode (no BOS/EOS added).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+
+    /// Encode with a leading BOS.
+    pub fn encode_prompt(&self, text: &str) -> Vec<u32> {
+        let mut out = vec![self.specials.bos];
+        out.extend(self.encode(text));
+        out
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| self.token(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Decode, skipping special tokens.
+    pub fn decode_clean(&self, ids: &[u32]) -> String {
+        let sp = self.specials;
+        ids.iter()
+            .filter(|&&i| i != sp.pad && i != sp.bos && i != sp.eos)
+            .map(|&i| self.token(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Tokenizer {
+        let words = ["<pad>", "<bos>", "<eos>", "<unk>", "the", "cat",
+                     "sings"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        Tokenizer::new(words, Specials { pad: 0, bos: 1, eos: 2, unk: 3 })
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = toy();
+        let ids = t.encode("the cat sings");
+        assert_eq!(ids, vec![4, 5, 6]);
+        assert_eq!(t.decode(&ids), "the cat sings");
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let t = toy();
+        assert_eq!(t.encode("the dog"), vec![4, 3]);
+    }
+
+    #[test]
+    fn prompt_gets_bos_and_clean_strips() {
+        let t = toy();
+        let ids = t.encode_prompt("cat");
+        assert_eq!(ids, vec![1, 5]);
+        assert_eq!(t.decode_clean(&[1, 5, 2, 0]), "cat");
+    }
+
+    #[test]
+    fn whitespace_robust() {
+        let t = toy();
+        assert_eq!(t.encode("  the \n cat  "), vec![4, 5]);
+        assert_eq!(t.encode(""), Vec::<u32>::new());
+    }
+}

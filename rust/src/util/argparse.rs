@@ -1,0 +1,230 @@
+//! Tiny declarative CLI argument parser (clap is unreachable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument set for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    command: String,
+    about: String,
+    specs: Vec<Spec>,
+    positional: Vec<(String, String)>, // (name, help)
+    values: BTreeMap<String, String>,
+    pos_values: Vec<String>,
+}
+
+impl Args {
+    pub fn new(command: &str, about: &str) -> Self {
+        Args {
+            command: command.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn pos(mut self, name: &str, help: &str) -> Self {
+        self.positional.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nOPTIONS:\n", self.command, self.about);
+        for (name, help) in &self.positional {
+            out.push_str(&format!("  <{name}>  {help}\n"));
+        }
+        for s in &self.specs {
+            let d = match (&s.default, s.is_flag) {
+                (_, true) => String::new(),
+                (Some(d), _) if !d.is_empty() => format!(" [default: {d}]"),
+                _ => " (required)".to_string(),
+            };
+            out.push_str(&format!("  --{:<18} {}{}\n", s.name, s.help, d));
+        }
+        out
+    }
+
+    /// Parse a token list (without argv[0]/subcommand).
+    pub fn parse(mut self, argv: &[String]) -> anyhow::Result<Self> {
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("unknown option --{key}\n{}", self.usage())
+                    })?
+                    .clone();
+                let value = if spec.is_flag {
+                    anyhow::ensure!(inline.is_none(), "--{key} takes no value");
+                    "true".to_string()
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?
+                        .clone()
+                };
+                self.values.insert(key, value);
+            } else {
+                anyhow::ensure!(
+                    self.pos_values.len() < self.positional.len(),
+                    "unexpected positional argument '{tok}'\n{}",
+                    self.usage()
+                );
+                self.pos_values.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Required options present?
+        for s in &self.specs {
+            if s.default.is_none() && !s.is_flag && !self.values.contains_key(&s.name)
+            {
+                anyhow::bail!("missing required --{}\n{}", s.name, self.usage());
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+            .unwrap_or_default()
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name} must be a number"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get_pos(&self, idx: usize) -> Option<&str> {
+        self.pos_values.get(idx).map(|s| s.as_str())
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        let raw = self.get(name);
+        if raw.is_empty() {
+            return vec![];
+        }
+        raw.split(',').map(|s| s.trim().to_string()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(toks: &[&str]) -> Vec<String> {
+        toks.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::new("x", "")
+            .opt("model", "opt-mini", "")
+            .opt("batch", "4", "")
+            .parse(&argv(&["--batch", "8"]))
+            .unwrap();
+        assert_eq!(a.get("model"), "opt-mini");
+        assert_eq!(a.get_usize("batch").unwrap(), 8);
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = Args::new("x", "")
+            .opt("k", "1", "")
+            .flag("verbose", "")
+            .parse(&argv(&["--k=32", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_usize("k").unwrap(), 32);
+        assert!(a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn required_and_unknown() {
+        let spec = || Args::new("x", "").req("path", "");
+        assert!(spec().parse(&argv(&[])).is_err());
+        assert!(spec().parse(&argv(&["--nope", "1"])).is_err());
+        let ok = spec().parse(&argv(&["--path", "/tmp"])).unwrap();
+        assert_eq!(ok.get("path"), "/tmp");
+    }
+
+    #[test]
+    fn positionals_and_lists() {
+        let a = Args::new("x", "")
+            .pos("input", "")
+            .opt("models", "a,b", "")
+            .parse(&argv(&["file.txt", "--models", "m1, m2,m3"]))
+            .unwrap();
+        assert_eq!(a.get_pos(0), Some("file.txt"));
+        assert_eq!(a.get_list("models"), vec!["m1", "m2", "m3"]);
+    }
+}

@@ -1,0 +1,190 @@
+//! Micro-benchmark harness (criterion is unreachable offline).
+//!
+//! `Bench::run` measures a closure with warmup, adaptive iteration counts,
+//! and reports mean / p50 / p99 wall-clock.  Used by the `cargo bench`
+//! targets that regenerate the paper's tables and the serving-perf runs.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} {:>10.3} ms/iter  (p50 {:.3}, p99 {:.3}, min {:.3}; n={})",
+            self.name,
+            self.mean_ns / 1e6,
+            self.p50_ns / 1e6,
+            self.p99_ns / 1e6,
+            self.min_ns / 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Percentile of a sorted slice (nearest-rank).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub target_secs: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 3,
+            min_iters: 10,
+            target_secs: 1.0,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup_iters: 1,
+            min_iters: 3,
+            target_secs: 0.2,
+        }
+    }
+
+    /// Measure `f`, which should perform one unit of work per call.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        // Estimate per-iter cost from one timed call.
+        let t0 = Instant::now();
+        f();
+        let est = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_secs / est) as usize)
+            .clamp(self.min_iters, 100_000);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        Stats {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: percentile(&samples, 50.0),
+            p99_ns: percentile(&samples, 99.0),
+            min_ns: samples[0],
+        }
+    }
+}
+
+/// Pretty table printer for bench outputs (paper-style rows).
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<width$} ", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = format!("\n== {} ==\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders_percentiles() {
+        let b = Bench::quick();
+        let mut x = 0u64;
+        let s = b.run("noop", || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(s.iters >= 3);
+        assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.p99_ns);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["xxx".into(), "1".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("xxx"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,77 @@
+//! Leveled stderr logging + wall-clock timers.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(1); // 0=quiet 1=info 2=debug
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log::level() >= 1 {
+            eprintln!("[lqer] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log::level() >= 2 {
+            eprintln!("[lqer:debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// RAII section timer (debug level).
+pub struct Timer {
+    label: String,
+    start: Instant,
+}
+
+impl Timer {
+    pub fn new(label: &str) -> Self {
+        Timer {
+            label: label.to_string(),
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        crate::debug!("{}: {:.1} ms", self.label, self.elapsed_ms());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures() {
+        let t = Timer::new("t");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn levels() {
+        let old = level();
+        set_level(2);
+        assert_eq!(level(), 2);
+        set_level(old);
+    }
+}

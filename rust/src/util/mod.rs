@@ -1,0 +1,44 @@
+//! Zero-dependency substrates: JSON, argument parsing, RNG, logging,
+//! timing, and a miniature property-testing harness.
+//!
+//! The offline crate set reachable in this image is limited to the `xla`
+//! dependency tree, so everything usually pulled from crates.io
+//! (serde/clap/rand/proptest/criterion) is implemented here, sized to what
+//! the repo needs and fully unit-tested.
+
+pub mod argparse;
+pub mod bench;
+pub mod json;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+
+/// Read a whole file into a string with a path-annotated error.
+pub fn read_to_string(path: &std::path::Path) -> anyhow::Result<String> {
+    std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))
+}
+
+/// Read a little-endian f32 binary file (numpy `.tofile` output).
+pub fn read_f32_file(path: &std::path::Path) -> anyhow::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{}: not f32-aligned",
+                    path.display());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read a little-endian u16 binary file (token streams).
+pub fn read_u16_file(path: &std::path::Path) -> anyhow::Result<Vec<u16>> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    anyhow::ensure!(bytes.len() % 2 == 0, "{}: not u16-aligned",
+                    path.display());
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect())
+}

@@ -1,0 +1,166 @@
+//! Miniature property-testing harness (proptest is unreachable offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` over `cases` generated
+//! inputs; on failure it performs greedy shrinking via the generator's
+//! `shrink` hook and panics with the minimal counterexample, including the
+//! seed needed to replay deterministically.
+
+use super::rng::Rng;
+
+/// A generator of random values with an optional shrinker.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values; default = no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` random inputs.
+pub fn check<G, F>(name: &str, cases: usize, gen: &G, prop: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> Result<(), String>,
+{
+    let seed = std::env::var("LQER_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Greedy shrink.
+            let mut current = value;
+            let mut current_msg = msg;
+            'outer: loop {
+                for cand in gen.shrink(&current) {
+                    if let Err(m) = prop(&cand) {
+                        current = cand;
+                        current_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n  \
+                 counterexample: {current:?}\n  reason: {current_msg}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------------
+
+/// Vec<f32> of length in [min_len, max_len], values ~ scaled normal.
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub scale: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let len = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        (0..len)
+            .map(|_| (rng.normal() as f32) * self.scale)
+            .collect()
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..v.len() / 2.max(self.min_len)].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        // Zero out elements to simplify.
+        if v.iter().any(|x| *x != 0.0) {
+            out.push(v.iter().map(|_| 0.0).collect());
+        }
+        out.retain(|c| c.len() >= self.min_len);
+        out
+    }
+}
+
+/// usize in [lo, hi].
+pub struct USize {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for USize {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.lo + rng.below(self.hi - self.lo + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        if *v > self.lo {
+            vec![self.lo, (self.lo + v) / 2, v - 1]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Pair of independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("len", 50, &VecF32 { min_len: 1, max_len: 16, scale: 1.0 },
+              |v| {
+                  if v.len() >= 1 { Ok(()) } else { Err("empty".into()) }
+              });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_counterexample() {
+        check("always-fails", 5, &USize { lo: 0, hi: 100 }, |_| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn shrinking_reaches_minimal() {
+        // Property fails for any vec with len >= 3; shrinker should find
+        // exactly len 3 ... we just assert the panic message mentions a
+        // small length by catching the unwind.
+        let result = std::panic::catch_unwind(|| {
+            check("shrink", 50,
+                  &VecF32 { min_len: 1, max_len: 64, scale: 1.0 },
+                  |v| {
+                      if v.len() < 3 { Ok(()) } else { Err("too long".into()) }
+                  });
+        });
+        let err = *result.unwrap_err().downcast::<String>().unwrap();
+        // minimal counterexample should be exactly 3 zeros
+        assert!(err.contains("0.0, 0.0, 0.0") || err.contains("len"),
+                "unexpected: {err}");
+    }
+}

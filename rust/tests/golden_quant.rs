@@ -1,0 +1,106 @@
+//! Cross-language golden tests: the rust quantizers and SVD must match the
+//! python reference implementations on vectors exported by `make
+//! artifacts` (artifacts/golden/).  Bit-exactness here is what licenses
+//! reusing one set of HLO artifacts from both languages.
+
+use std::path::PathBuf;
+
+use lqer::linalg::{svd, Mat};
+use lqer::quant::{intq, mxint::MxFormat};
+use lqer::util::json;
+
+fn golden_dir() -> Option<PathBuf> {
+    let dir = lqer::default_artifacts_dir().join("golden");
+    if dir.join("golden.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+fn read(dir: &std::path::Path, spec: &json::Value) -> (Vec<usize>, Vec<f32>) {
+    let shape: Vec<usize> = spec
+        .req("shape")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    let data =
+        lqer::util::read_f32_file(&dir.join(spec.str_at("file").unwrap()))
+            .unwrap();
+    assert_eq!(data.len(), shape.iter().product::<usize>());
+    (shape, data)
+}
+
+#[test]
+fn golden_vectors_match_bit_exactly() {
+    let Some(dir) = golden_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let spec = json::parse_file(&dir.join("golden.json")).unwrap();
+    let mut n_checked = 0;
+    for case in spec.req("cases").unwrap().as_array().unwrap() {
+        let kind = case.str_at("kind").unwrap();
+        match kind.as_str() {
+            "mxint_weight" | "mxint_act" => {
+                let bits = case.usize_at("bits").unwrap() as u32;
+                let exp_bits = case.usize_at("exp_bits").unwrap() as u32;
+                let block = case.usize_at("block").unwrap();
+                let (shape, mut data) = read(&dir, case.req("input").unwrap());
+                let (_, want) = read(&dir, case.req("output").unwrap());
+                let fmt = MxFormat { elem_bits: bits, exp_bits, block };
+                let cols = shape[1];
+                if kind == "mxint_weight" {
+                    fmt.quant_cols(&mut data, cols);
+                } else {
+                    fmt.quant_rows(&mut data, cols);
+                }
+                for (i, (a, b)) in data.iter().zip(&want).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "{kind} bits={bits} idx={i}: {a} != {b}");
+                }
+            }
+            "int_group" => {
+                let bits = case.usize_at("bits").unwrap() as u32;
+                let group = case.usize_at("group").unwrap();
+                let (shape, mut data) = read(&dir, case.req("input").unwrap());
+                let (_, want) = read(&dir, case.req("output").unwrap());
+                intq::int_quant_group_cols(&mut data, shape[1], bits, group);
+                for (i, (a, b)) in data.iter().zip(&want).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "int_group idx={i}: {a} != {b}");
+                }
+            }
+            "int_per_token" => {
+                let bits = case.usize_at("bits").unwrap() as u32;
+                let (shape, mut data) = read(&dir, case.req("input").unwrap());
+                let (_, want) = read(&dir, case.req("output").unwrap());
+                intq::int_quant_per_token(&mut data, shape[1], bits);
+                for (i, (a, b)) in data.iter().zip(&want).enumerate() {
+                    // jnp may fuse the division differently; allow 1-ulp.
+                    assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0),
+                            "per_token idx={i}: {a} != {b}");
+                }
+            }
+            "svd" => {
+                let (shape, data) = read(&dir, case.req("input").unwrap());
+                let (_, want) =
+                    read(&dir, case.req("singular_values").unwrap());
+                let m = Mat::from_f32(shape[0], shape[1], &data);
+                let got = svd::singular_values(&m);
+                for (i, w) in want.iter().enumerate().take(got.len()) {
+                    let rel = (got[i] - *w as f64).abs()
+                        / (*w as f64).max(1e-9);
+                    assert!(rel < 1e-4,
+                            "svd sigma_{i}: {} vs {w} (rel {rel})", got[i]);
+                }
+            }
+            other => panic!("unknown golden kind {other}"),
+        }
+        n_checked += 1;
+    }
+    assert!(n_checked >= 10, "only {n_checked} golden cases found");
+}

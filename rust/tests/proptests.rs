@@ -1,0 +1,283 @@
+//! Property-based tests over the L3 substrates, using the in-repo mini
+//! proptest harness (rust/src/util/proptest.rs).
+//!
+//! Focus: coordinator invariants (KV slot accounting, batching), JSON
+//! round-trips, SVD mathematical properties, quantizer grid laws.
+
+use lqer::kvcache::KvCache;
+use lqer::linalg::{svd, Mat};
+use lqer::quant::mxint::MxFormat;
+use lqer::util::json::{self, Value};
+use lqer::util::proptest::{check, Gen, Pair, USize, VecF32};
+use lqer::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// KV cache: random alloc/free/append trace keeps accounting exact
+// ---------------------------------------------------------------------------
+
+struct OpTrace;
+
+impl Gen for OpTrace {
+    type Value = Vec<u8>; // opcode stream
+    fn generate(&self, rng: &mut Rng) -> Vec<u8> {
+        (0..rng.below(200) + 1).map(|_| rng.below(256) as u8).collect()
+    }
+    fn shrink(&self, v: &Vec<u8>) -> Vec<Vec<u8>> {
+        if v.len() > 1 {
+            vec![v[..v.len() / 2].to_vec(), v[..v.len() - 1].to_vec()]
+        } else {
+            vec![]
+        }
+    }
+}
+
+#[test]
+fn kvcache_slot_accounting_invariant() {
+    check("kvcache-accounting", 50, &OpTrace, |ops| {
+        let (layers, batch, t_max, d) = (2, 4, 6, 8);
+        let mut cache = KvCache::new(layers, batch, t_max, d);
+        let mut live: Vec<usize> = Vec::new();
+        let mut next_id = 1u64;
+        let k_new = vec![0.5f32; layers * batch * d];
+        for &op in ops {
+            match op % 3 {
+                0 => {
+                    if let Some(slot) = cache.alloc(next_id) {
+                        if live.contains(&slot) {
+                            return Err(format!("slot {slot} double-alloc"));
+                        }
+                        live.push(slot);
+                        next_id += 1;
+                    } else if live.len() != batch {
+                        return Err("alloc failed with free slots".into());
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let slot = live.remove((op as usize / 3) % live.len());
+                        cache.free(slot);
+                    }
+                }
+                _ => {
+                    let ok: Vec<usize> = live
+                        .iter()
+                        .copied()
+                        .filter(|&s| cache.pos(s) < t_max)
+                        .collect();
+                    if !ok.is_empty()
+                        && cache.append_rows(&ok, &k_new, &k_new).is_err()
+                    {
+                        return Err("append failed below t_max".into());
+                    }
+                }
+            }
+            if cache.free_count() + live.len() != batch {
+                return Err(format!(
+                    "accounting broken: free={} live={}",
+                    cache.free_count(),
+                    live.len()
+                ));
+            }
+            for &s in &live {
+                if cache.pos(s) > t_max {
+                    return Err(format!("slot {s} pos past t_max"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Batching: bucket choice is minimal and admissible
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bucket_choice_minimal_and_fits() {
+    let gen = Pair(USize { lo: 1, hi: 200 }, USize { lo: 1, hi: 4 });
+    check("bucket-minimal", 200, &gen, |&(len, nb)| {
+        let buckets: Vec<usize> = (1..=nb).map(|i| i * 48).collect();
+        match lqer::coordinator::batching::pick_bucket(&buckets, len) {
+            Some(b) => {
+                if b < len {
+                    return Err(format!("bucket {b} < len {len}"));
+                }
+                for &other in &buckets {
+                    if other >= len && other < b {
+                        return Err(format!("{other} smaller than {b}"));
+                    }
+                }
+                Ok(())
+            }
+            None => {
+                if len <= *buckets.iter().max().unwrap() {
+                    Err("no bucket despite fit".into())
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn packing_partitions_admissible_items() {
+    let gen = USize { lo: 1, hi: 60 };
+    check("packing-partition", 100, &gen, |&n| {
+        let mut rng = Rng::new(n as u64);
+        let lens: Vec<usize> =
+            (0..n).map(|_| rng.below(120) + 1).collect();
+        let buckets = [16usize, 96];
+        let groups =
+            lqer::coordinator::batching::pack_by_bucket(&buckets, &lens, 4);
+        let mut seen = std::collections::HashSet::new();
+        for (bucket, idxs) in &groups {
+            if idxs.len() > 4 {
+                return Err("group too large".into());
+            }
+            for &i in idxs {
+                if !seen.insert(i) {
+                    return Err(format!("index {i} in two groups"));
+                }
+                if lens[i] > *bucket {
+                    return Err(format!("len {} > bucket {bucket}", lens[i]));
+                }
+            }
+        }
+        let admissible =
+            lens.iter().filter(|&&l| l <= 96).count();
+        if seen.len() != admissible {
+            return Err(format!("packed {} of {admissible}", seen.len()));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON: writer output re-parses to the same value
+// ---------------------------------------------------------------------------
+
+struct JsonGen;
+
+fn random_json(rng: &mut Rng, depth: usize) -> Value {
+    match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.below(2) == 0),
+        2 => Value::Num((rng.range(-1_000_000, 1_000_000) as f64) / 64.0),
+        3 => {
+            let n = rng.below(8);
+            Value::Str(
+                (0..n)
+                    .map(|_| {
+                        *rng.choose(&['a', 'é', '"', '\\', '\n', 'z', '😀'])
+                    })
+                    .collect(),
+            )
+        }
+        4 => Value::Arr((0..rng.below(4))
+            .map(|_| random_json(rng, depth + 1))
+            .collect()),
+        _ => Value::Obj(
+            (0..rng.below(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth + 1)))
+                .collect(),
+        ),
+    }
+}
+
+impl Gen for JsonGen {
+    type Value = Value;
+    fn generate(&self, rng: &mut Rng) -> Value {
+        random_json(rng, 0)
+    }
+}
+
+#[test]
+fn json_roundtrip_property() {
+    check("json-roundtrip", 300, &JsonGen, |v| {
+        let text = v.to_string();
+        match json::parse(&text) {
+            Ok(back) if &back == v => Ok(()),
+            Ok(back) => Err(format!("{v} -> {text} -> {back}")),
+            Err(e) => Err(format!("reparse failed on {text}: {e}")),
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// SVD mathematical properties on random matrices
+// ---------------------------------------------------------------------------
+
+#[test]
+fn svd_reconstruction_property() {
+    let gen = Pair(USize { lo: 1, hi: 12 }, USize { lo: 1, hi: 12 });
+    check("svd-reconstruct", 40, &gen, |&(m, n)| {
+        let mut rng = Rng::new((m * 31 + n) as u64);
+        let a = Mat::from_vec(
+            m, n, (0..m * n).map(|_| rng.normal()).collect());
+        let f = svd::svd(&a);
+        // values sorted desc + nonnegative
+        for w in f.s.windows(2) {
+            if w[0] < w[1] - 1e-12 {
+                return Err(format!("unsorted {w:?}"));
+            }
+        }
+        if f.s.iter().any(|x| *x < 0.0) {
+            return Err("negative singular value".into());
+        }
+        let recon = svd::truncated_product(&f, f.s.len());
+        let err = a.max_abs_diff(&recon);
+        if err > 1e-8 {
+            return Err(format!("reconstruction err {err} for {m}x{n}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Quantizer laws across formats
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mxint_never_increases_block_max() {
+    let gen = VecF32 { min_len: 16, max_len: 16, scale: 10.0 };
+    check("mxint-max-bound", 200, &gen, |v| {
+        for bits in [2u32, 4, 8] {
+            let fmt = MxFormat::act(bits);
+            let mut q = v.clone();
+            fmt.quant_block(&mut q);
+            let amax = v.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+            let qmax = q.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+            // |q| can exceed amax by at most half a step (rounding up).
+            if qmax > amax * 1.6 + 1e-20 {
+                return Err(format!("bits={bits}: qmax {qmax} amax {amax}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tokenizer_roundtrip_property() {
+    let words: Vec<String> = ["<pad>", "<bos>", "<eos>", "<unk>"]
+        .iter()
+        .map(|s| s.to_string())
+        .chain((0..50).map(|i| format!("w{i}")))
+        .collect();
+    let tok = lqer::tokenizer::Tokenizer::new(
+        words,
+        lqer::tokenizer::Specials { pad: 0, bos: 1, eos: 2, unk: 3 },
+    );
+    let gen = USize { lo: 1, hi: 30 };
+    check("tokenizer-roundtrip", 100, &gen, |&n| {
+        let mut rng = Rng::new(n as u64 + 7);
+        let ids: Vec<u32> =
+            (0..n).map(|_| 4 + rng.below(50) as u32).collect();
+        let text = tok.decode(&ids);
+        if tok.encode(&text) == ids {
+            Ok(())
+        } else {
+            Err(format!("roundtrip failed for {text}"))
+        }
+    });
+}

@@ -1,0 +1,14 @@
+# Top-level drivers.  `make artifacts` runs the python AOT path once
+# (data -> train -> quant -> HLO -> golden); everything rust-side loads
+# the result.  `make tier1` is the CI gate (scripts/tier1.sh).
+
+.PHONY: artifacts tier1 test-python
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+tier1:
+	bash scripts/tier1.sh
+
+test-python:
+	cd python && python3 -m pytest tests -q

@@ -36,6 +36,9 @@ fn main() -> anyhow::Result<()> {
                 .map(|(_, t)| *t)
                 .collect(),
             max_prefill_per_step: 2,
+            // device-resident KV cache (set true for the legacy
+            // host round-trip oracle)
+            host_cache: false,
         },
     )?;
 

@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
                 .map(|(_, t)| *t)
                 .collect(),
             max_prefill_per_step: 2,
+            host_cache: false,
         };
         let t0 = std::time::Instant::now();
         let stats = loadtest::run_loadtest(&manifest, &cfg, requests,

@@ -223,14 +223,22 @@ def stage_hlo(out_dir: str, trained: dict, models: list[str],
                 for (b, t) in PREFILL_SHAPES:
                     needed[(SERVE_MODEL, tag, "prefill", b, t)] = gv
                 for b in DECODE_BATCHES:
+                    # legacy host-cache step + device-resident step
                     needed[(SERVE_MODEL, tag, "decode", b, 0)] = gv
+                    needed[(SERVE_MODEL, tag, "decode_dev", b, 0)] = gv
+                    # Prefill-slot scatter: parameter-free, so one graph
+                    # per (batch, bucket) under the fixed "cache" tag
+                    # serves every method (rust looks it up by that tag).
+                    for (_, t) in PREFILL_SHAPES:
+                        needed[(SERVE_MODEL, "cache", "kvwrite", b, t)] = gv
 
     for (name, tag, entry_kind, b, t), gv in sorted(needed.items()):
         cfg, params = trained[name]
         hdir = os.path.join(out_dir, "hlo", name)
         os.makedirs(hdir, exist_ok=True)
         fname = (f"{tag}_{entry_kind}_b{b}" +
-                 (f"_t{t}" if entry_kind != "decode" else "") + ".hlo.txt")
+                 (f"_t{t}" if entry_kind in ("score", "prefill", "kvwrite")
+                  else "") + ".hlo.txt")
         path = os.path.join(hdir, fname)
         graph_index.append({"model": name, "graph": tag,
                             "entry": entry_kind, "b": b, "t": t,
@@ -238,23 +246,33 @@ def stage_hlo(out_dir: str, trained: dict, models: list[str],
         if os.path.exists(path):
             continue
         t0 = time.time()
-        vparams = M.attach_variant_params(
-            jax.tree_util.tree_map(np.asarray, params), cfg, gv)
-        pspecs = M.param_specs(vparams)
-        if entry_kind == "score":
-            fn = lambda p, toks: (M.score(p, toks, cfg, gv),)
-            text = lower_graph(fn, pspecs, _tok_spec(b, t))
-        elif entry_kind == "prefill":
-            fn = lambda p, toks: M.prefill(p, toks, cfg, gv)
-            text = lower_graph(fn, pspecs, _tok_spec(b, t))
-        else:  # decode
-            fn = lambda p, tok, kc, vc, pos: M.decode(
-                p, tok, kc, vc, pos, cfg, gv)
-            tok = jax.ShapeDtypeStruct((b,), jnp.int32)
-            cache = jax.ShapeDtypeStruct(
-                (cfg.layers, b, cfg.t_max, cfg.d), jnp.float32)
-            pos = jax.ShapeDtypeStruct((b,), jnp.int32)
-            text = lower_graph(fn, pspecs, tok, cache, cache, pos)
+        cache = jax.ShapeDtypeStruct(
+            (cfg.layers, b, cfg.t_max, cfg.d), jnp.float32)
+        if entry_kind == "kvwrite":
+            # Pure cache scatter: no model parameters.
+            pre = jax.ShapeDtypeStruct(
+                (cfg.layers, 1, t, cfg.d), jnp.float32)
+            slot = jax.ShapeDtypeStruct((), jnp.int32)
+            text = lower_graph(M.kv_write_prefill, cache, cache, pre, pre,
+                               slot)
+        else:
+            vparams = M.attach_variant_params(
+                jax.tree_util.tree_map(np.asarray, params), cfg, gv)
+            pspecs = M.param_specs(vparams)
+            if entry_kind == "score":
+                fn = lambda p, toks: (M.score(p, toks, cfg, gv),)
+                text = lower_graph(fn, pspecs, _tok_spec(b, t))
+            elif entry_kind == "prefill":
+                fn = lambda p, toks: M.prefill(p, toks, cfg, gv)
+                text = lower_graph(fn, pspecs, _tok_spec(b, t))
+            else:  # decode | decode_dev
+                step = (M.decode_resident if entry_kind == "decode_dev"
+                        else M.decode)
+                fn = lambda p, tok, kc, vc, pos: step(
+                    p, tok, kc, vc, pos, cfg, gv)
+                tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+                pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+                text = lower_graph(fn, pspecs, tok, cache, cache, pos)
         with open(path, "w") as fh:
             fh.write(text)
         print(f"[aot] lowered {name}/{fname} "

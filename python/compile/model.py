@@ -12,15 +12,26 @@ lowered without the low-rank branch; the *weights are HLO parameters*, so
 one lowered graph serves every quantization method that shares
 (activation mode, rank) -- see DESIGN.md section 3.
 
-Three entry points are lowered to HLO text for the rust runtime:
+Entry points lowered to HLO text for the rust runtime:
 
   score(params, tokens[B,T])              -> logits[B,T,V]
   prefill(params, tokens[B,T])            -> logits[B,T,V], k/v caches
   decode(params, token[B], kc, vc, pos[B])-> logits[B,V], k_new, v_new
+  decode_resident(params, token[B], kc, vc, pos[B])
+                                          -> logits[B,V], kc', vc'
+  kv_write_prefill(kc, vc, k_pre, v_pre, slot)
+                                          -> kc', vc'
 
-The decode step is cache-stationary: rust owns the KV cache buffers and
-writes (k_new, v_new) into position pos after each step, so only the tiny
-per-step tensors cross the PJRT boundary as outputs.
+``decode`` is the legacy host-cache step: rust owns the KV cache arrays
+and writes (k_new, v_new) into position pos after each step, paying an
+O(L*B*T_max*d) cache upload per generated token.  ``decode_resident`` is
+the device-resident step (DESIGN.md section 6): the row append happens
+in-graph via dynamic-update-slice and the *updated full caches* are
+returned as outputs, so the runtime can re-feed the output buffers as the
+next step's inputs and only token ids / positions / logits ever cross the
+PJRT boundary.  ``kv_write_prefill`` scatters one prefilled sequence
+(shape (L, 1, t, d)) into batch slot ``slot`` of a resident cache; it
+takes no model parameters.
 
 Activation modes (``act``):
   "none"  : f32 activations (the FP16 baseline and w-only setups)
@@ -178,13 +189,22 @@ def param_specs(params):
         lambda x: jax.ShapeDtypeStruct(np.shape(x), jnp.float32), params)
 
 
+def _key_name(k) -> str:
+    """One path component as a bare name (jax.tree_util.keystr only grew
+    simple=/separator= in jax 0.5; this works on 0.4.x too)."""
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
 def flatten_with_names(params) -> list[tuple[str, np.ndarray]]:
     """Deterministic (name, array) list in jax tree-flatten order -- this
     exact order is the HLO parameter order recorded in weights.bin."""
     flat, _ = jax.tree_util.tree_flatten_with_path(params)
     out = []
     for path, leaf in flat:
-        name = jax.tree_util.keystr(path, simple=True, separator=".")
+        name = ".".join(_key_name(k) for k in path)
         out.append((name, np.asarray(leaf, np.float32)))
     return out
 
@@ -330,6 +350,62 @@ def decode(params, token, k_cache, v_cache, pos, cfg: ModelConfig,
     h = layer_norm(h, params["ln_f"]["scale"], params["ln_f"]["bias"])
     logits = jnp.einsum("btd,vd->btv", h, params["embed"])[:, 0, :]
     return logits, jnp.stack(k_news), jnp.stack(v_news)
+
+
+def _scatter_rows(cache, rows, pos):
+    """Write rows (L, B, d) into cache (L, B, T_max, d) at positions pos
+    (B,), one dynamic-update-slice per (layer, batch) cell.
+
+    The unrolled DUS lattice keeps every write a contiguous d-length row —
+    no gather/scatter over irregular memory, matching the paper's
+    hardware-friendliness argument.  Note rows are written for *every*
+    batch lane, including free slots (the host slot manager passes pos=0
+    for them); those rows are dead because attention masks positions
+    >= pos and admission overwrites positions 0..len before they become
+    visible.
+    """
+    n_layers, batch = rows.shape[0], rows.shape[1]
+    zero = jnp.int32(0)
+    for li in range(n_layers):
+        for bi in range(batch):
+            cache = jax.lax.dynamic_update_slice(
+                cache, rows[li, bi][None, None, None, :],
+                (jnp.int32(li), jnp.int32(bi), pos[bi], zero))
+    return cache
+
+
+def decode_resident(params, token, k_cache, v_cache, pos, cfg: ModelConfig,
+                    gv: GraphVariant):
+    """One decode step with the in-graph cache append (device-resident
+    serving path).
+
+    Same inputs as ``decode``; returns (logits (B, V), k_cache', v_cache')
+    where the primed caches contain this step's K/V rows at position
+    pos[b].  Bit-identical to running ``decode`` and appending the
+    returned rows host-side.
+    """
+    logits, k_new, v_new = decode(params, token, k_cache, v_cache, pos,
+                                  cfg, gv)
+    return (logits,
+            _scatter_rows(k_cache, k_new, pos),
+            _scatter_rows(v_cache, v_new, pos))
+
+
+def kv_write_prefill(k_cache, v_cache, k_pre, v_pre, slot):
+    """Scatter a prefilled sequence into batch slot ``slot`` of a resident
+    cache.
+
+    k/v_cache: (L, B, T_max, d); k/v_pre: (L, 1, t, d) with t <= T_max;
+    slot: scalar int32.  Writes the whole t-row block (including
+    right-padded prompt rows past the true length); rows at positions
+    >= len stay invisible until a decode step overwrites them, because
+    attention masks positions >= pos.  No model parameters: one lowered
+    graph per (B, t) serves every method.
+    """
+    zero = jnp.int32(0)
+    idx = (zero, slot, zero, zero)
+    return (jax.lax.dynamic_update_slice(k_cache, k_pre, idx),
+            jax.lax.dynamic_update_slice(v_cache, v_pre, idx))
 
 
 # ----------------------------------------------------------------------------

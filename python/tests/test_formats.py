@@ -3,6 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # not in every image; skip, do not break collection
 from hypothesis import given, settings, strategies as st
 
 from compile.quant import formats

@@ -7,6 +7,7 @@ sweeps shapes, bit widths, and value scales.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # not in every image; skip, do not break collection
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import (int_quant_per_token_pallas, lqer_linear,

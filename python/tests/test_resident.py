@@ -1,0 +1,114 @@
+"""Device-resident KV-cache graphs: the in-graph row append
+(``decode_resident``) and the prefill-slot scatter (``kv_write_prefill``)
+must be bit-identical to the host-side cache management they replace."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = M.ModelConfig(name="t", vocab=64, d=32, layers=2, heads=2,
+                        ffn=64, t_max=24)
+    params = M.init_params(cfg, seed=1)
+    return cfg, params
+
+
+def test_decode_resident_matches_host_append(setup):
+    """decode_resident == decode + host-side row write, bit for bit."""
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    rng = np.random.default_rng(3)
+    batch = 3
+    kc = rng.normal(size=(cfg.layers, batch, cfg.t_max, cfg.d)).astype(
+        np.float32)
+    vc = rng.normal(size=(cfg.layers, batch, cfg.t_max, cfg.d)).astype(
+        np.float32)
+    tok = np.array([5, 9, 11], np.int32)
+    pos = np.array([2, 7, 0], np.int32)
+
+    l_host, kn, vn = M.decode(params, tok, kc, vc, pos, cfg, gv)
+    kc_host, vc_host = kc.copy(), vc.copy()
+    for bi in range(batch):
+        kc_host[:, bi, pos[bi]] = np.asarray(kn)[:, bi]
+        vc_host[:, bi, pos[bi]] = np.asarray(vn)[:, bi]
+
+    l_dev, kc_dev, vc_dev = M.decode_resident(params, tok, kc, vc, pos,
+                                              cfg, gv)
+    np.testing.assert_array_equal(np.asarray(l_dev), np.asarray(l_host))
+    np.testing.assert_array_equal(np.asarray(kc_dev), kc_host)
+    np.testing.assert_array_equal(np.asarray(vc_dev), vc_host)
+
+
+def test_decode_resident_consistent_with_score(setup):
+    """Let the graph maintain the cache across steps: logits must still
+    reproduce full-sequence scoring (the serving-path invariant)."""
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    rng = np.random.default_rng(0)
+    seq = rng.integers(4, cfg.vocab, size=10).astype(np.int32)
+    t_pre = 6
+
+    full = np.asarray(M.score(params, seq[None, :], cfg, gv))[0]
+
+    _, k, v = M.prefill(params, seq[None, :t_pre], cfg, gv)
+    kc = jnp.zeros((cfg.layers, 1, cfg.t_max, cfg.d), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    kc, vc = M.kv_write_prefill(kc, vc, k, v, jnp.int32(0))
+    for i in range(t_pre, 10):
+        logits, kc, vc = M.decode_resident(
+            params, seq[i:i + 1], kc, vc, np.array([i], np.int32), cfg, gv)
+        np.testing.assert_allclose(
+            np.asarray(logits)[0], full[i], rtol=1e-4, atol=1e-4)
+
+
+def test_kv_write_prefill_targets_one_slot(setup):
+    cfg, _ = setup
+    batch, t = 4, 8
+    rng = np.random.default_rng(5)
+    kc = rng.normal(size=(cfg.layers, batch, cfg.t_max, cfg.d)).astype(
+        np.float32)
+    vc = kc * 0.5
+    kp = rng.normal(size=(cfg.layers, 1, t, cfg.d)).astype(np.float32)
+    vp = kp * 2.0
+    slot = 2
+    kc2, vc2 = M.kv_write_prefill(kc, vc, kp, vp, jnp.int32(slot))
+    kc2, vc2 = np.asarray(kc2), np.asarray(vc2)
+    # target slot: first t rows replaced, tail untouched
+    np.testing.assert_array_equal(kc2[:, slot, :t], kp[:, 0])
+    np.testing.assert_array_equal(vc2[:, slot, :t], vp[:, 0])
+    np.testing.assert_array_equal(kc2[:, slot, t:], kc[:, slot, t:])
+    # other slots untouched
+    for other in range(batch):
+        if other != slot:
+            np.testing.assert_array_equal(kc2[:, other], kc[:, other])
+            np.testing.assert_array_equal(vc2[:, other], vc[:, other])
+
+
+def test_lowered_graphs_have_dynamic_update_slice(setup):
+    """The resident entries must lower to HLO with in-graph DUS appends
+    and the full caches as outputs."""
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    b = 2
+    cache = jax.ShapeDtypeStruct((cfg.layers, b, cfg.t_max, cfg.d),
+                                 jnp.float32)
+    tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    text = aot.lower_graph(
+        lambda p, t_, kc, vc, p_: M.decode_resident(p, t_, kc, vc, p_,
+                                                    cfg, gv),
+        M.param_specs(params), tok, cache, cache, pos)
+    assert "HloModule" in text
+    assert "dynamic-update-slice" in text
+    # updated caches appear as full-shape outputs
+    assert "f32[%d,%d,%d,%d]" % (cfg.layers, b, cfg.t_max, cfg.d) in text
+
+    pre = jax.ShapeDtypeStruct((cfg.layers, 1, 6, cfg.d), jnp.float32)
+    slot = jax.ShapeDtypeStruct((), jnp.int32)
+    text = aot.lower_graph(M.kv_write_prefill, cache, cache, pre, pre, slot)
+    assert "dynamic-update-slice" in text

@@ -1,15 +1,32 @@
 //! Serving performance bench (the prompt-mandated end-to-end driver and
 //! the §Perf measurement base): batched load through the engine for the
-//! FP16 baseline vs L²QER-W4A8, across decode batch buckets.
+//! FP16 baseline vs L²QER-W4A8, across decode batch buckets — and for
+//! both KV-cache modes:
 //!
-//! Reports decode tokens/s, mean step latency, runtime-boundary overhead
-//! (upload/download vs execute), and batch-occupancy.
+//! * `device` — the resident-cache path: per decode step only O(B) token
+//!   ids/positions go up and O(B·vocab) logits come down;
+//! * `host` — the legacy oracle: the full (L, B, T_max, d) K/V caches
+//!   round-trip the PJRT boundary every step, O(L·B·T_max·d) per token.
+//!
+//! The `B/step` column is the *measured* per-decode-step host↔device
+//! traffic (ExecStats byte counters), the headline number of the
+//! device-resident refactor.
 //!
 //! Usage: `cargo bench --bench serving_perf [-- --fast]`
 
 use lqer::config::Manifest;
 use lqer::coordinator::{loadtest, EngineConfig};
 use lqer::util::bench::Table;
+
+fn fmt_bytes(b: f64) -> String {
+    if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1} KB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -26,61 +43,78 @@ fn main() {
             m.serve.model
         ),
         &[
-            "method", "batch", "decode tok/s", "step ms", "prefill ms",
-            "occupancy", "exec %", "upload %", "download %",
+            "method", "cache", "batch", "decode tok/s", "step ms",
+            "B/step", "prefill ms", "occupancy", "exec %", "upload %",
+            "download %",
         ],
     );
     for method in m.serve.methods.clone() {
         for &batch in &m.serve.decode_batches.clone() {
-            let cfg = EngineConfig {
-                model: m.serve.model.clone(),
-                method: method.clone(),
-                decode_batch: batch,
-                prefill_buckets: m
-                    .serve
-                    .prefill_shapes
-                    .iter()
-                    .map(|(_, tt)| *tt)
-                    .collect(),
-                max_prefill_per_step: 2,
-            };
-            let stats = loadtest::run_loadtest(&m, &cfg, requests, max_new)
-                .expect("loadtest");
-            let step_ms = if stats.decode_steps > 0 {
-                stats.decode_ns as f64 / stats.decode_steps as f64 / 1e6
-            } else {
-                0.0
-            };
-            let prefill_ms = if stats.prefill_steps > 0 {
-                stats.prefill_ns as f64 / stats.prefill_steps as f64 / 1e6
-            } else {
-                0.0
-            };
-            let total_ns = (stats.exec.exec_ns + stats.exec.upload_ns
-                + stats.exec.download_ns)
-                .max(1);
-            t.row(vec![
-                method.clone(),
-                batch.to_string(),
-                format!("{:.0}", stats.decode_tokens_per_sec()),
-                format!("{step_ms:.2}"),
-                format!("{prefill_ms:.1}"),
-                format!("{:.2}", stats.mean_batch_occupancy()),
-                format!("{:.0}%",
-                        stats.exec.exec_ns as f64 / total_ns as f64 * 100.0),
-                format!("{:.0}%",
+            for host_cache in [false, true] {
+                let cfg = EngineConfig {
+                    model: m.serve.model.clone(),
+                    method: method.clone(),
+                    decode_batch: batch,
+                    prefill_buckets: m
+                        .serve
+                        .prefill_shapes
+                        .iter()
+                        .map(|(_, tt)| *tt)
+                        .collect(),
+                    max_prefill_per_step: 2,
+                    host_cache,
+                };
+                let stats =
+                    loadtest::run_loadtest(&m, &cfg, requests, max_new)
+                        .expect("loadtest");
+                let step_ms = if stats.decode_steps > 0 {
+                    stats.decode_ns as f64 / stats.decode_steps as f64 / 1e6
+                } else {
+                    0.0
+                };
+                let prefill_ms = if stats.prefill_steps > 0 {
+                    stats.prefill_ns as f64 / stats.prefill_steps as f64
+                        / 1e6
+                } else {
+                    0.0
+                };
+                let total_ns = (stats.exec.exec_ns + stats.exec.upload_ns
+                    + stats.exec.download_ns)
+                    .max(1);
+                t.row(vec![
+                    method.clone(),
+                    if host_cache { "host" } else { "device" }.to_string(),
+                    batch.to_string(),
+                    format!("{:.0}", stats.decode_tokens_per_sec()),
+                    format!("{step_ms:.2}"),
+                    fmt_bytes(stats.decode_exec.bytes_per_call()),
+                    format!("{prefill_ms:.1}"),
+                    format!("{:.2}", stats.mean_batch_occupancy()),
+                    format!(
+                        "{:.0}%",
+                        stats.exec.exec_ns as f64 / total_ns as f64 * 100.0
+                    ),
+                    format!(
+                        "{:.0}%",
                         stats.exec.upload_ns as f64 / total_ns as f64
-                        * 100.0),
-                format!("{:.0}%",
+                            * 100.0
+                    ),
+                    format!(
+                        "{:.0}%",
                         stats.exec.download_ns as f64 / total_ns as f64
-                        * 100.0),
-            ]);
+                            * 100.0
+                    ),
+                ]);
+            }
         }
     }
     print!("{}", t.render());
     println!(
-        "\nnote: FP16 vs L2QER wall-clock is expected to be ~equal on the \
-         CPU PJRT backend (numerics are simulated in f32); the TPU-side \
-         win is analytic — see DESIGN.md §8 and EXPERIMENTS.md §Perf-L1."
+        "\nnote: `device` keeps the (L,B,T_max,d) K/V caches resident and \
+         re-feeds the decode outputs as next-step inputs — B/step drops \
+         from O(L*B*T_max*d) to O(B*(1+vocab)).  FP16 vs L2QER wall-clock \
+         is expected to be ~equal on the CPU PJRT backend (numerics are \
+         simulated in f32); the TPU-side win is analytic — see DESIGN.md \
+         §8 and EXPERIMENTS.md §Perf-L1."
     );
 }

@@ -34,7 +34,7 @@ pub struct RunInfo {
 pub struct GraphInfo {
     pub model: String,
     pub graph: String,
-    pub entry: String, // score | prefill | decode
+    pub entry: String, // score | prefill | decode | decode_dev | kvwrite
     pub b: usize,
     pub t: usize,
     pub path: PathBuf,

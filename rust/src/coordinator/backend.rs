@@ -1,0 +1,230 @@
+//! Decode backends: the engine schedules, a backend executes.
+//!
+//! [`DecodeBackend`] is the seam between the scheduler (slot accounting,
+//! sampling, finish detection — all host-side, backend-agnostic) and the
+//! model execution + cache storage.  Two implementations exist:
+//!
+//! * [`PjrtBackend`] — the real runtime.  Its cache backing is selected
+//!   by `EngineConfig::host_cache`:
+//!   - **device-resident** (default): a [`DeviceKvSession`] keeps the
+//!     `(L, B, T_max, d)` caches on the device; each step re-feeds the
+//!     previous step's cache outputs and moves only O(B) ids/positions
+//!     up and O(B·vocab) logits down (DESIGN.md §6);
+//!   - **host** (legacy oracle): a [`HostKvMirror`] round-trips the full
+//!     caches through the PJRT boundary every step, exactly as the
+//!     pre-refactor engine did.  Kept behind the flag as the
+//!     bit-exactness reference.
+//! * [`crate::coordinator::testbackend::FakeBackend`] — a deterministic
+//!   in-process model used by the golden equality and slot-leak tests; it
+//!   emulates both cache modes without PJRT.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::EngineConfig;
+use crate::config::Manifest;
+use crate::kvcache::HostKvMirror;
+use crate::runtime::{DeviceKvSession, ExecStats, ModelRunner, Runtime};
+
+/// Executes prefill/decode steps and owns the cache tensors; the engine
+/// owns the [`crate::kvcache::SlotMap`] and drives this trait with it.
+pub trait DecodeBackend {
+    fn vocab(&self) -> usize;
+    fn t_max(&self) -> usize;
+    fn batch(&self) -> usize;
+
+    /// Prefill `toks` (a prompt right-padded to `bucket`) and install its
+    /// cache rows into batch lane `slot` (`len` valid rows).  Returns the
+    /// prefill logits, `bucket * vocab` row-major.
+    fn prefill_into(
+        &mut self,
+        slot: usize,
+        toks: &[i32],
+        bucket: usize,
+        len: usize,
+    ) -> Result<Vec<f32>>;
+
+    /// One decode step over the whole batch bucket.  `pos` is the
+    /// per-lane position vector, `active` the occupied lanes.  Appends
+    /// this step's K/V rows to the backing cache (the engine advances the
+    /// slot positions afterwards).  Returns logits, `batch * vocab`
+    /// row-major.
+    fn decode(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        active: &[usize],
+    ) -> Result<Vec<f32>>;
+
+    /// Runtime-boundary statistics, when the backend measures them.
+    fn exec_stats(&self) -> ExecStats {
+        ExecStats::default()
+    }
+
+    /// Statistics for one graph entry (e.g. "decode" / "decode_dev").
+    fn entry_stats(&self, _entry: &str) -> ExecStats {
+        ExecStats::default()
+    }
+}
+
+/// Which cache backing a [`PjrtBackend`] runs with.
+enum CacheBacking {
+    Device(DeviceKvSession),
+    Host(HostKvMirror),
+}
+
+/// The real backend: PJRT runtime + lowered graphs of one (model, method).
+pub struct PjrtBackend {
+    manifest: Manifest,
+    rt: Runtime,
+    runner: ModelRunner,
+    backing: CacheBacking,
+    batch: usize,
+}
+
+impl PjrtBackend {
+    /// Build the runtime, pre-compile the serving graphs (so
+    /// first-request latency is honest), and allocate the cache backing.
+    /// Returns the backend plus the tokenizer's EOS id.
+    pub fn new(
+        artifacts: &Path,
+        cfg: &EngineConfig,
+    ) -> Result<(PjrtBackend, u32)> {
+        let manifest = Manifest::load(artifacts)?;
+        let rt = Runtime::cpu()?;
+        let runner = ModelRunner::new(&manifest, &cfg.model, &cfg.method)?;
+        let info = runner.model.clone();
+        let tok = crate::tokenizer::Tokenizer::from_file(
+            &manifest.data_dir().join("vocab.json"),
+        )?;
+        if cfg.host_cache {
+            runner.executable(&rt, &manifest, "decode", cfg.decode_batch,
+                              0)?;
+        } else {
+            runner.executable(&rt, &manifest, "decode_dev",
+                              cfg.decode_batch, 0)?;
+            for &t in &cfg.prefill_buckets {
+                runner.executable(&rt, &manifest, "kvwrite",
+                                  cfg.decode_batch, t)?;
+            }
+        }
+        for &t in &cfg.prefill_buckets {
+            runner.executable(&rt, &manifest, "prefill", 1, t)?;
+        }
+        let backing = if cfg.host_cache {
+            CacheBacking::Host(HostKvMirror::new(
+                info.layers, cfg.decode_batch, info.t_max, info.d,
+            ))
+        } else {
+            CacheBacking::Device(DeviceKvSession::new(
+                &rt, info.layers, cfg.decode_batch, info.t_max, info.d,
+            )?)
+        };
+        Ok((
+            PjrtBackend {
+                manifest,
+                rt,
+                runner,
+                backing,
+                batch: cfg.decode_batch,
+            },
+            tok.specials.eos,
+        ))
+    }
+
+    /// "device" or "host" — for logs and bench tables.
+    pub fn cache_mode(&self) -> &'static str {
+        match self.backing {
+            CacheBacking::Device(_) => "device",
+            CacheBacking::Host(_) => "host",
+        }
+    }
+}
+
+impl DecodeBackend for PjrtBackend {
+    fn vocab(&self) -> usize {
+        self.runner.model.vocab
+    }
+
+    fn t_max(&self) -> usize {
+        self.runner.model.t_max
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn prefill_into(
+        &mut self,
+        slot: usize,
+        toks: &[i32],
+        bucket: usize,
+        len: usize,
+    ) -> Result<Vec<f32>> {
+        match &mut self.backing {
+            CacheBacking::Device(session) => {
+                // K/V stay on device: scatter the retained prefill
+                // outputs straight into the resident cache.
+                let (logits, k, v) = self.runner.prefill_retained(
+                    &self.rt, &self.manifest, toks, 1, bucket,
+                )?;
+                self.runner.write_prefill_resident(
+                    &self.rt, &self.manifest, session, slot, &k, &v, bucket,
+                )?;
+                Ok(logits.data)
+            }
+            CacheBacking::Host(mirror) => {
+                let (logits, k, v) = self.runner.prefill(
+                    &self.rt, &self.manifest, toks, 1, bucket,
+                )?;
+                mirror.write_prefill(slot, &k.data, &v.data, bucket, len)?;
+                Ok(logits.data)
+            }
+        }
+    }
+
+    fn decode(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        active: &[usize],
+    ) -> Result<Vec<f32>> {
+        match &mut self.backing {
+            CacheBacking::Device(session) => {
+                // O(B) up, O(B·vocab) down; the cache append happens
+                // in-graph and the updated caches never leave the device.
+                let logits = self.runner.decode_resident(
+                    &self.rt, &self.manifest, session, tokens, pos,
+                )?;
+                Ok(logits.data)
+            }
+            CacheBacking::Host(mirror) => {
+                // Legacy oracle: O(L·B·T_max·d) cache upload per token.
+                let (logits, k_new, v_new) = self.runner.decode(
+                    &self.rt,
+                    &self.manifest,
+                    tokens,
+                    mirror.k_data(),
+                    mirror.v_data(),
+                    pos,
+                    self.batch,
+                )?;
+                let rows: Vec<(usize, usize)> = active
+                    .iter()
+                    .map(|&s| (s, pos[s] as usize))
+                    .collect();
+                mirror.append_rows(&rows, &k_new.data, &v_new.data)?;
+                Ok(logits.data)
+            }
+        }
+    }
+
+    fn exec_stats(&self) -> ExecStats {
+        self.runner.stats()
+    }
+
+    fn entry_stats(&self, entry: &str) -> ExecStats {
+        self.runner.entry_stats(entry)
+    }
+}

@@ -83,6 +83,14 @@ pub fn generate_all(
         let resp = rx
             .recv()
             .map_err(|_| anyhow::anyhow!("request dropped"))?;
+        // The judge path must not silently compare empty generations:
+        // an unservable prompt is a configuration error here.
+        anyhow::ensure!(
+            resp.finish != super::FinishReason::Rejected,
+            "request {} rejected at admission (prompt len {})",
+            resp.id,
+            resp.prompt_len
+        );
         by_id[(resp.id - 1) as usize] = resp.tokens;
     }
     engine.shutdown();
@@ -118,6 +126,7 @@ pub fn run_judge(
             .map(|(_, t)| *t)
             .collect(),
         max_prefill_per_step: 2,
+        host_cache: false,
     };
     let gens_a = generate_all(manifest, &mk_cfg(method_a), &prompts,
                               max_new)?;

@@ -88,6 +88,8 @@ impl LatencyHistogram {
 pub struct EngineMetrics {
     pub submitted: u64,
     pub completed: u64,
+    /// Requests answered with `FinishReason::Rejected` (admission failed).
+    pub rejected: u64,
     pub tokens_generated: u64,
     pub prefill_steps: u64,
     pub prefill_ns: u64,
@@ -97,6 +99,10 @@ pub struct EngineMetrics {
     pub total_ms: LatencyHistogram,
     pub batch_occupancy: LatencyHistogram,
     pub exec: ExecStats,
+    /// Runtime-boundary stats of the decode entry alone — its
+    /// `bytes_per_call()` is the per-decode-step host↔device traffic
+    /// (the number the device-resident cache refactor shrinks).
+    pub decode_exec: ExecStats,
 }
 
 impl EngineMetrics {
@@ -114,11 +120,13 @@ impl EngineMetrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests {}/{} done | tokens {} | prefill {} steps {:.1} ms avg \
+            "requests {}/{} done ({} rejected) | tokens {} | prefill {} \
+             steps {:.1} ms avg \
              | decode {} steps {:.2} ms avg | {:.1} tok/s decode | occupancy \
              {:.2} | ttft p50 {:.0} ms p99 {:.0} ms",
             self.completed,
             self.submitted,
+            self.rejected,
             self.tokens_generated,
             self.prefill_steps,
             if self.prefill_steps > 0 {

@@ -10,11 +10,18 @@
 //!                                                     │
 //!        ┌─────────── scheduler iteration ────────────┤
 //!        │ 1. admit waiting requests into free KV slots (prefill, b=1,
-//!        │    bucketed sequence lengths, right-padded)
+//!        │    bucketed sequence lengths, right-padded); failures free
+//!        │    the slot and answer with FinishReason::Rejected
 //!        │ 2. one batched decode step over all active slots
 //!        │ 3. sample, detect EOS/limits, free slots, send responses
 //!        └────────────────────────────────────────────┘
 //! ```
+//!
+//! The engine is generic over a [`backend::DecodeBackend`]: the scheduler
+//! (slot accounting via [`SlotMap`], sampling, finish detection) is pure
+//! host logic, while the backend executes the graphs and owns the cache
+//! tensors — device-resident by default, or the legacy host round-trip
+//! behind `EngineConfig::host_cache` (DESIGN.md §6).
 //!
 //! The PJRT client is not `Send`, so the engine thread constructs and owns
 //! the entire runtime; callers talk to it exclusively through channels
@@ -22,20 +29,22 @@
 //! new sequences join the decode batch as soon as a slot frees up, without
 //! draining the batch.
 
+pub mod backend;
 pub mod batching;
 pub mod loadtest;
 pub mod metrics;
 pub mod server;
+pub mod testbackend;
 
 use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::Manifest;
-use crate::kvcache::KvCache;
-use crate::runtime::{ModelRunner, Runtime};
+use crate::kvcache::SlotMap;
 use crate::util::rng::Rng;
+
+use backend::{DecodeBackend, PjrtBackend};
 
 pub use metrics::{EngineMetrics, LatencyHistogram};
 
@@ -60,6 +69,10 @@ pub enum FinishReason {
     Eos,
     Length,
     CacheFull,
+    /// The request could not be admitted (empty/over-long prompt, or
+    /// prefill failed); no tokens were generated.  Clients receive this
+    /// instead of a dropped reply channel.
+    Rejected,
 }
 
 #[derive(Debug, Clone)]
@@ -97,6 +110,10 @@ pub struct EngineConfig {
     pub prefill_buckets: Vec<usize>,
     /// Max prefills admitted per scheduler iteration (batching policy).
     pub max_prefill_per_step: usize,
+    /// Use the legacy host-side KV cache (full cache upload/download per
+    /// decode step) instead of the device-resident session.  Kept as the
+    /// bit-exactness oracle; `false` is the serving default.
+    pub host_cache: bool,
 }
 
 impl EngineHandle {
@@ -110,7 +127,7 @@ impl EngineHandle {
         let join = std::thread::Builder::new()
             .name("lqer-engine".into())
             .spawn(move || {
-                match Engine::new(&artifacts, &cfg) {
+                match Engine::from_artifacts(&artifacts, &cfg) {
                     Ok(mut engine) => {
                         let _ = ready_tx.send(Ok(()));
                         engine.run(rx);
@@ -161,7 +178,7 @@ impl Drop for EngineHandle {
 }
 
 // ---------------------------------------------------------------------------
-// Engine internals (runs on the engine thread)
+// Engine (runs on the engine thread; drivable directly in tests)
 // ---------------------------------------------------------------------------
 
 struct ActiveSeq {
@@ -180,11 +197,12 @@ struct Waiting {
     submitted: Instant,
 }
 
-struct Engine {
-    manifest: Manifest,
-    rt: Runtime,
-    runner: ModelRunner,
-    cache: KvCache,
+/// The scheduler: generic over the execution backend so tests can drive
+/// it with a deterministic in-process model
+/// ([`testbackend::FakeBackend`]).
+pub struct Engine<B: DecodeBackend> {
+    backend: B,
+    slots: SlotMap,
     cfg: EngineConfig,
     eos: u32,
     waiting: std::collections::VecDeque<Waiting>,
@@ -192,41 +210,76 @@ struct Engine {
     metrics: EngineMetrics,
 }
 
-impl Engine {
-    fn new(artifacts: &std::path::Path, cfg: &EngineConfig) -> Result<Engine> {
-        let manifest = Manifest::load(artifacts)?;
-        let rt = Runtime::cpu()?;
-        let runner = ModelRunner::new(&manifest, &cfg.model, &cfg.method)?;
-        let info = runner.model.clone();
-        let tok = crate::tokenizer::Tokenizer::from_file(
-            &manifest.data_dir().join("vocab.json"),
-        )?;
-        let cache = KvCache::new(info.layers, cfg.decode_batch, info.t_max,
-                                 info.d);
-        // Pre-compile the decode + prefill graphs so first-request latency
-        // is honest (XLA CPU compilation takes seconds per graph).
-        runner.executable(&rt, &manifest, "decode", cfg.decode_batch, 0)?;
-        for &t in &cfg.prefill_buckets {
-            runner.executable(&rt, &manifest, "prefill", 1, t)?;
-        }
-        Ok(Engine {
-            manifest,
-            rt,
-            runner,
-            cache,
-            cfg: cfg.clone(),
-            eos: tok.specials.eos,
+impl Engine<PjrtBackend> {
+    /// Build the real engine from an artifacts directory.
+    pub fn from_artifacts(
+        artifacts: &std::path::Path,
+        cfg: &EngineConfig,
+    ) -> Result<Engine<PjrtBackend>> {
+        let (backend, eos) = PjrtBackend::new(artifacts, cfg)?;
+        Ok(Engine::with_backend(backend, cfg.clone(), eos))
+    }
+}
+
+impl<B: DecodeBackend> Engine<B> {
+    /// Assemble an engine around any backend (tests construct this with a
+    /// [`testbackend::FakeBackend`] and drive [`Engine::tick`] directly).
+    pub fn with_backend(backend: B, cfg: EngineConfig, eos: u32) -> Engine<B> {
+        assert_eq!(
+            backend.batch(),
+            cfg.decode_batch,
+            "backend batch must match decode_batch"
+        );
+        let slots = SlotMap::new(cfg.decode_batch, backend.t_max());
+        let active = (0..cfg.decode_batch).map(|_| None).collect();
+        Engine {
+            backend,
+            slots,
+            cfg,
+            eos,
             waiting: Default::default(),
-            active: (0..cfg.decode_batch).map(|_| None).collect(),
+            active,
             metrics: EngineMetrics::default(),
-        })
+        }
+    }
+
+    /// Queue a request for admission (the threaded path does this from
+    /// `Msg::Submit`).
+    pub fn enqueue(&mut self, request: Request, reply: mpsc::Sender<Response>) {
+        self.metrics.submitted += 1;
+        self.waiting.push_back(Waiting {
+            request,
+            reply,
+            submitted: Instant::now(),
+        });
+    }
+
+    /// Anything queued or in flight?
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty()
+            || self.slots.free_count() != self.slots.batch()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.slots.free_count()
+    }
+
+    pub fn kv_batch(&self) -> usize {
+        self.slots.batch()
+    }
+
+    pub fn metrics_snapshot(&self) -> EngineMetrics {
+        let mut m = self.metrics.clone();
+        m.exec = self.backend.exec_stats();
+        m.decode_exec = self.backend.entry_stats("decode");
+        m.decode_exec.merge(&self.backend.entry_stats("decode_dev"));
+        m
     }
 
     fn run(&mut self, rx: mpsc::Receiver<Msg>) {
         loop {
             // 1. Drain control/submission messages (block only when idle).
-            let idle = self.waiting.is_empty() && self.cache.free_count()
-                == self.cache.batch;
+            let idle = !self.has_work();
             loop {
                 let msg = if idle && self.waiting.is_empty() {
                     match rx.recv() {
@@ -242,17 +295,10 @@ impl Engine {
                 };
                 match msg {
                     Msg::Submit(request, reply) => {
-                        self.metrics.submitted += 1;
-                        self.waiting.push_back(Waiting {
-                            request,
-                            reply,
-                            submitted: Instant::now(),
-                        });
+                        self.enqueue(request, reply);
                     }
                     Msg::Metrics(tx) => {
-                        let mut m = self.metrics.clone();
-                        m.exec = self.runner.stats();
-                        let _ = tx.send(m);
+                        let _ = tx.send(self.metrics_snapshot());
                     }
                     Msg::Shutdown => return,
                 }
@@ -262,44 +308,72 @@ impl Engine {
                 }
             }
 
-            // 2. Admit waiting requests into free slots (prefill).
-            let mut admitted = 0;
-            while admitted < self.cfg.max_prefill_per_step
-                && self.cache.free_count() > 0
-                && !self.waiting.is_empty()
-            {
-                let w = self.waiting.pop_front().unwrap();
-                if let Err(e) = self.admit(w) {
-                    crate::info!("admit failed: {e:#}");
-                }
-                admitted += 1;
-            }
+            // 2.+3. One scheduler iteration.
+            self.tick();
+        }
+    }
 
-            // 3. One batched decode step over all active slots.
-            if !self.cache.active_slots().is_empty() {
-                if let Err(e) = self.decode_step() {
-                    crate::info!("decode step failed: {e:#}");
-                }
+    /// One scheduler iteration: admit waiting requests into free slots,
+    /// then run one batched decode step over all active slots.
+    pub fn tick(&mut self) {
+        let mut admitted = 0;
+        while admitted < self.cfg.max_prefill_per_step
+            && self.slots.free_count() > 0
+            && !self.waiting.is_empty()
+        {
+            let w = self.waiting.pop_front().unwrap();
+            self.admit(w);
+            admitted += 1;
+        }
+
+        if !self.slots.active_slots().is_empty() {
+            if let Err(e) = self.decode_step() {
+                crate::info!("decode step failed: {e:#}");
             }
         }
     }
 
-    fn admit(&mut self, w: Waiting) -> Result<()> {
-        let info = &self.runner.model;
+    /// Answer a request that cannot be served; the slot (if any) has
+    /// already been freed by the caller.
+    fn reject(&mut self, w: Waiting, why: &str) {
+        crate::info!("request {} rejected: {why}", w.request.id);
+        self.metrics.rejected += 1;
+        let total_ms = w.submitted.elapsed().as_secs_f64() * 1e3;
+        let _ = w.reply.send(Response {
+            id: w.request.id,
+            prompt_len: w.request.prompt.len(),
+            tokens: Vec::new(),
+            finish: FinishReason::Rejected,
+            ttft_ms: total_ms,
+            total_ms,
+        });
+    }
+
+    fn admit(&mut self, w: Waiting) {
+        let vocab = self.backend.vocab();
+        let t_max = self.backend.t_max();
         let prompt: Vec<u32> = w
             .request
             .prompt
             .iter()
             .copied()
-            .filter(|&t| (t as usize) < info.vocab)
+            .filter(|&t| (t as usize) < vocab)
             .collect();
-        let len = prompt.len().min(info.t_max - 1);
-        let bucket = batching::pick_bucket(&self.cfg.prefill_buckets, len)
-            .ok_or_else(|| anyhow::anyhow!("prompt longer than buckets"))?;
-        let slot = self
-            .cache
-            .alloc(w.request.id)
-            .ok_or_else(|| anyhow::anyhow!("no free slot"))?;
+        let len = prompt.len().min(t_max - 1);
+        if len == 0 {
+            self.reject(w, "empty prompt");
+            return;
+        }
+        let Some(bucket) =
+            batching::pick_bucket(&self.cfg.prefill_buckets, len)
+        else {
+            self.reject(w, "prompt longer than any prefill bucket");
+            return;
+        };
+        let Some(slot) = self.slots.alloc(w.request.id) else {
+            self.reject(w, "no free KV slot");
+            return;
+        };
 
         // Right-pad the prompt to the bucket length.
         let mut toks = vec![0i32; bucket];
@@ -307,17 +381,33 @@ impl Engine {
             toks[i] = *t as i32;
         }
         let t0 = Instant::now();
-        let (logits, k, v) =
-            self.runner
-                .prefill(&self.rt, &self.manifest, &toks, 1, bucket)?;
+        let logits =
+            match self.backend.prefill_into(slot, &toks, bucket, len) {
+                Ok(l) => l,
+                Err(e) => {
+                    // Prefill failed after the slot was claimed: free it
+                    // (this used to leak) and answer with Rejected
+                    // instead of dropping the reply sender.
+                    self.slots.free(slot);
+                    self.reject(w, &format!("prefill failed: {e:#}"));
+                    return;
+                }
+            };
         self.metrics.prefill_steps += 1;
         self.metrics.prefill_ns += t0.elapsed().as_nanos() as u64;
-        self.cache
-            .write_prefill(slot, &k.data, &v.data, bucket, len)?;
+        if logits.len() < bucket * vocab {
+            self.slots.free(slot);
+            self.reject(w, "prefill returned short logits");
+            return;
+        }
+        if let Err(e) = self.slots.set_pos(slot, len) {
+            self.slots.free(slot);
+            self.reject(w, &format!("slot update failed: {e:#}"));
+            return;
+        }
 
         // Sample the first generated token from the last prompt position.
-        let vsize = info.vocab;
-        let row = &logits.data[(len - 1) * vsize..len * vsize];
+        let row = &logits[(len - 1) * vocab..len * vocab];
         let mut seq = ActiveSeq {
             rng: Rng::new(match w.request.sampling {
                 Sampling::TopK { seed, .. } => seed ^ w.request.id,
@@ -331,46 +421,39 @@ impl Engine {
             last_token: 0,
         };
         let first = sample(row, seq.request.sampling, &mut seq.rng);
-        seq.ttft_ms =
-            Some(seq.submitted.elapsed().as_secs_f64() * 1e3);
+        seq.ttft_ms = Some(seq.submitted.elapsed().as_secs_f64() * 1e3);
         seq.generated.push(first);
         seq.last_token = first;
         self.active[slot] = Some(seq);
         // The sampled token will be fed at position `len` by decode_step;
         // finish immediately if it is EOS or the request wants one token.
         self.maybe_finish(slot);
-        Ok(())
     }
 
     fn decode_step(&mut self) -> Result<()> {
-        let b = self.cfg.decode_batch;
-        let slots = self.cache.active_slots();
-        if slots.is_empty() {
+        let b = self.slots.batch();
+        let active = self.slots.active_slots();
+        if active.is_empty() {
             return Ok(());
         }
         let mut tokens = vec![0i32; b];
-        for &s in &slots {
+        for &s in &active {
             tokens[s] = self.active[s].as_ref().unwrap().last_token as i32;
         }
-        let pos = self.cache.pos_vector();
+        let pos = self.slots.pos_vector();
         let t0 = Instant::now();
-        let (logits, k_new, v_new) = self.runner.decode(
-            &self.rt,
-            &self.manifest,
-            &tokens,
-            self.cache.k_data(),
-            self.cache.v_data(),
-            &pos,
-            b,
-        )?;
+        let logits = self.backend.decode(&tokens, &pos, &active)?;
         self.metrics.decode_steps += 1;
         self.metrics.decode_ns += t0.elapsed().as_nanos() as u64;
-        self.metrics.batch_occupancy.record(slots.len() as f64);
+        self.metrics.batch_occupancy.record(active.len() as f64);
 
-        self.cache.append_rows(&slots, &k_new.data, &v_new.data)?;
-        let vsize = self.runner.model.vocab;
-        for &s in &slots {
-            let row = &logits.data[s * vsize..(s + 1) * vsize];
+        // The backend appended this step's K/V rows; account for them.
+        self.slots.advance(&active)?;
+
+        let vsize = self.backend.vocab();
+        anyhow::ensure!(logits.len() >= b * vsize, "decode logits size");
+        for &s in &active {
+            let row = &logits[s * vsize..(s + 1) * vsize];
             let seq = self.active[s].as_mut().unwrap();
             let tok = sample(row, seq.request.sampling, &mut seq.rng);
             seq.generated.push(tok);
@@ -382,15 +465,15 @@ impl Engine {
     }
 
     fn maybe_finish(&mut self, slot: usize) {
-        let info_tmax = self.runner.model.t_max;
-        let pos = self.cache.pos(slot);
+        let t_max = self.backend.t_max();
+        let pos = self.slots.pos(slot);
         let finish = {
             let seq = self.active[slot].as_ref().unwrap();
             if seq.generated.last() == Some(&self.eos) {
                 Some(FinishReason::Eos)
             } else if seq.generated.len() >= seq.request.max_new_tokens {
                 Some(FinishReason::Length)
-            } else if pos + 1 >= info_tmax {
+            } else if pos + 1 >= t_max {
                 Some(FinishReason::CacheFull)
             } else {
                 None
@@ -398,7 +481,7 @@ impl Engine {
         };
         if let Some(reason) = finish {
             let seq = self.active[slot].take().unwrap();
-            self.cache.free(slot);
+            self.slots.free(slot);
             let total_ms = seq.submitted.elapsed().as_secs_f64() * 1e3;
             self.metrics.completed += 1;
             self.metrics.ttft_ms.record(seq.ttft_ms.unwrap_or(total_ms));
@@ -422,17 +505,25 @@ pub fn sample(logits: &[f32], strategy: Sampling, rng: &mut Rng) -> u32 {
         Sampling::TopK { k, temperature, .. } => {
             let k = k.max(1).min(logits.len());
             let mut idx: Vec<usize> = (0..logits.len()).collect();
-            idx.sort_unstable_by(|&a, &b| {
-                logits[b].partial_cmp(&logits[a]).unwrap()
-            });
-            let top = &idx[..k];
+            if k < idx.len() {
+                // Partial selection: O(V) per token instead of the former
+                // full-vocab O(V log V) sort.  idx[..k] holds the k
+                // largest logits (unordered — softmax weights don't care).
+                idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                    logits[b].partial_cmp(&logits[a]).unwrap()
+                });
+                idx.truncate(k);
+            }
             let t = temperature.max(1e-3);
-            let mx = logits[top[0]];
-            let weights: Vec<f64> = top
+            let mx = idx
+                .iter()
+                .map(|&i| logits[i])
+                .fold(f32::NEG_INFINITY, f32::max);
+            let weights: Vec<f64> = idx
                 .iter()
                 .map(|&i| (((logits[i] - mx) / t) as f64).exp())
                 .collect();
-            top[rng.weighted(&weights)] as u32
+            idx[rng.weighted(&weights)] as u32
         }
     }
 }
@@ -488,5 +579,19 @@ mod tests {
             }
         }
         assert!(ones >= 99, "{ones}");
+    }
+
+    #[test]
+    fn topk_equals_full_vocab_is_safe() {
+        let mut rng = Rng::new(3);
+        let logits = vec![1.0, 2.0, 3.0];
+        for _ in 0..50 {
+            let t = sample(
+                &logits,
+                Sampling::TopK { k: 10, temperature: 0.5, seed: 4 },
+                &mut rng,
+            );
+            assert!(t < 3);
+        }
     }
 }

@@ -164,6 +164,7 @@ fn route(
                 &json::obj(vec![
                     ("submitted", json::num(m.submitted as f64)),
                     ("completed", json::num(m.completed as f64)),
+                    ("rejected", json::num(m.rejected as f64)),
                     ("tokens_generated",
                      json::num(m.tokens_generated as f64)),
                     ("decode_steps", json::num(m.decode_steps as f64)),

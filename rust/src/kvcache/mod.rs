@@ -1,12 +1,21 @@
-//! Slot-based KV-cache manager for batched decode.
+//! KV-cache management for batched decode, split into two concerns
+//! (DESIGN.md §6):
 //!
-//! The decode graph is shape-specialized to a batch bucket `B`; the engine
-//! owns one `KvCache` per bucket holding host-side key/value arrays of
-//! shape (L, B, T_max, d) plus per-slot occupancy.  Sequences claim a slot
-//! at admission, fill positions `0..len` from the prefill outputs, append
-//! one row per decode step, and release the slot at completion.
+//! * [`SlotMap`] — the pure slot/position manager.  It owns *no* tensor
+//!   data; it tracks which batch lane belongs to which request and how
+//!   many cache rows are valid per lane.  Both cache backings (the
+//!   device-resident [`crate::runtime::DeviceKvSession`] and the host
+//!   mirror below) are driven by one `SlotMap` on the engine thread.
+//! * [`HostKvMirror`] — host-side key/value arrays of shape
+//!   (L, B, T_max, d).  On the serving path this is only used when the
+//!   legacy host-cache mode is selected (`EngineConfig::host_cache`,
+//!   the bit-exactness oracle); eval and tests use it directly.
 //!
-//! Invariants (property-tested in rust/tests/proptests.rs):
+//! [`KvCache`] is the legacy façade combining both with the original
+//! API; existing tests and the microbench keep working against it.
+//!
+//! Invariants (property-tested in rust/tests/proptests.rs and
+//! rust/tests/device_cache.rs):
 //! * a slot is never double-allocated or double-freed,
 //! * `pos(slot) <= t_max` always; append past `t_max` is rejected,
 //! * freeing zeroes occupancy so the scheduler's accounting stays exact.
@@ -19,42 +28,27 @@ pub enum Slot {
     Active { request_id: u64, pos: usize },
 }
 
-#[derive(Debug)]
-pub struct KvCache {
-    pub layers: usize,
-    pub t_max: usize,
-    pub d: usize,
-    pub batch: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
+// ---------------------------------------------------------------------------
+// SlotMap: occupancy + positions, no tensor data
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct SlotMap {
+    t_max: usize,
     slots: Vec<Slot>,
 }
 
-impl KvCache {
-    pub fn new(layers: usize, batch: usize, t_max: usize, d: usize) -> Self {
-        let n = layers * batch * t_max * d;
-        KvCache {
-            layers,
-            t_max,
-            d,
-            batch,
-            k: vec![0.0; n],
-            v: vec![0.0; n],
-            slots: vec![Slot::Free; batch],
-        }
+impl SlotMap {
+    pub fn new(batch: usize, t_max: usize) -> Self {
+        SlotMap { t_max, slots: vec![Slot::Free; batch] }
     }
 
-    #[inline]
-    fn idx(&self, layer: usize, slot: usize, t: usize) -> usize {
-        ((layer * self.batch + slot) * self.t_max + t) * self.d
+    pub fn batch(&self) -> usize {
+        self.slots.len()
     }
 
-    pub fn k_data(&self) -> &[f32] {
-        &self.k
-    }
-
-    pub fn v_data(&self) -> &[f32] {
-        &self.v
+    pub fn t_max(&self) -> usize {
+        self.t_max
     }
 
     pub fn slots(&self) -> &[Slot] {
@@ -66,7 +60,7 @@ impl KvCache {
     }
 
     pub fn active_slots(&self) -> Vec<usize> {
-        (0..self.batch)
+        (0..self.slots.len())
             .filter(|&i| matches!(self.slots[i], Slot::Active { .. }))
             .collect()
     }
@@ -101,8 +95,79 @@ impl KvCache {
         self.slots[slot] = Slot::Free;
     }
 
-    /// Copy prefill K/V (shape (L, 1, t, d) row-major) into a slot and set
-    /// its position to `len` (`len <= t`: right-padded prefill).
+    /// Set a slot's position after prefill (`len` valid cache rows).
+    pub fn set_pos(&mut self, slot: usize, len: usize) -> Result<()> {
+        anyhow::ensure!(len <= self.t_max, "prefill len {len}");
+        match &mut self.slots[slot] {
+            Slot::Active { pos, .. } => *pos = len,
+            Slot::Free => anyhow::bail!("prefill into free slot"),
+        }
+        Ok(())
+    }
+
+    /// Advance each listed slot by one appended row.
+    pub fn advance(&mut self, slots: &[usize]) -> Result<()> {
+        for &slot in slots {
+            anyhow::ensure!(
+                self.pos(slot) < self.t_max,
+                "slot {slot} cache overflow"
+            );
+            match &mut self.slots[slot] {
+                Slot::Active { pos, .. } => *pos += 1,
+                Slot::Free => anyhow::bail!("append into free slot"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Position vector (length B) for the decode graphs.
+    pub fn pos_vector(&self) -> Vec<i32> {
+        (0..self.slots.len()).map(|i| self.pos(i) as i32).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HostKvMirror: host-side cache arrays (legacy serving path, eval, tests)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct HostKvMirror {
+    pub layers: usize,
+    pub t_max: usize,
+    pub d: usize,
+    pub batch: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl HostKvMirror {
+    pub fn new(layers: usize, batch: usize, t_max: usize, d: usize) -> Self {
+        let n = layers * batch * t_max * d;
+        HostKvMirror {
+            layers,
+            t_max,
+            d,
+            batch,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    #[inline]
+    fn idx(&self, layer: usize, slot: usize, t: usize) -> usize {
+        ((layer * self.batch + slot) * self.t_max + t) * self.d
+    }
+
+    pub fn k_data(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v_data(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Copy prefill K/V (shape (L, 1, t, d) row-major) into a slot
+    /// (positions `0..len`, `len <= t`: right-padded prefill).
     pub fn write_prefill(
         &mut self,
         slot: usize,
@@ -125,11 +190,113 @@ impl KvCache {
             self.k[dst..dst + n].copy_from_slice(&k_pre[src..src + n]);
             self.v[dst..dst + n].copy_from_slice(&v_pre[src..src + n]);
         }
-        match &mut self.slots[slot] {
-            Slot::Active { pos, .. } => *pos = len,
-            Slot::Free => anyhow::bail!("prefill into free slot"),
+        Ok(())
+    }
+
+    /// Write one decode step's K/V rows (shape (L, B, d)) at the given
+    /// (slot, position) pairs.
+    pub fn append_rows(
+        &mut self,
+        rows: &[(usize, usize)],
+        k_new: &[f32],
+        v_new: &[f32],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            k_new.len() == self.layers * self.batch * self.d
+                && v_new.len() == k_new.len(),
+            "k_new size"
+        );
+        for &(slot, pos) in rows {
+            anyhow::ensure!(pos < self.t_max, "slot {slot} cache overflow");
+            for l in 0..self.layers {
+                let src = (l * self.batch + slot) * self.d;
+                let dst = self.idx(l, slot, pos);
+                self.k[dst..dst + self.d]
+                    .copy_from_slice(&k_new[src..src + self.d]);
+                self.v[dst..dst + self.d]
+                    .copy_from_slice(&v_new[src..src + self.d]);
+            }
         }
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KvCache: legacy façade (SlotMap + HostKvMirror, original API)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct KvCache {
+    pub layers: usize,
+    pub t_max: usize,
+    pub d: usize,
+    pub batch: usize,
+    slots: SlotMap,
+    mirror: HostKvMirror,
+}
+
+impl KvCache {
+    pub fn new(layers: usize, batch: usize, t_max: usize, d: usize) -> Self {
+        KvCache {
+            layers,
+            t_max,
+            d,
+            batch,
+            slots: SlotMap::new(batch, t_max),
+            mirror: HostKvMirror::new(layers, batch, t_max, d),
+        }
+    }
+
+    pub fn k_data(&self) -> &[f32] {
+        self.mirror.k_data()
+    }
+
+    pub fn v_data(&self) -> &[f32] {
+        self.mirror.v_data()
+    }
+
+    pub fn slots(&self) -> &[Slot] {
+        self.slots.slots()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.slots.free_count()
+    }
+
+    pub fn active_slots(&self) -> Vec<usize> {
+        self.slots.active_slots()
+    }
+
+    pub fn pos(&self, slot: usize) -> usize {
+        self.slots.pos(slot)
+    }
+
+    pub fn request_id(&self, slot: usize) -> Option<u64> {
+        self.slots.request_id(slot)
+    }
+
+    /// Claim a free slot for a request.
+    pub fn alloc(&mut self, request_id: u64) -> Option<usize> {
+        self.slots.alloc(request_id)
+    }
+
+    /// Release a slot (panics on double-free: that is a scheduler bug).
+    pub fn free(&mut self, slot: usize) {
+        self.slots.free(slot);
+    }
+
+    /// Copy prefill K/V (shape (L, 1, t, d) row-major) into a slot and set
+    /// its position to `len` (`len <= t`: right-padded prefill).
+    pub fn write_prefill(
+        &mut self,
+        slot: usize,
+        k_pre: &[f32],
+        v_pre: &[f32],
+        t: usize,
+        len: usize,
+    ) -> Result<()> {
+        self.slots.set_pos(slot, len)?;
+        self.mirror.write_prefill(slot, k_pre, v_pre, t, len)
     }
 
     /// Append one decode step's K/V rows (shape (L, B, d)) for the given
@@ -141,31 +308,21 @@ impl KvCache {
         v_new: &[f32],
     ) -> Result<()> {
         anyhow::ensure!(
-            k_new.len() == self.layers * self.batch * self.d,
+            k_new.len() == self.layers * self.batch * self.d
+                && v_new.len() == k_new.len(),
             "k_new size"
         );
-        for &slot in slots {
-            let pos = self.pos(slot);
-            anyhow::ensure!(pos < self.t_max, "slot {slot} cache overflow");
-            for l in 0..self.layers {
-                let src = (l * self.batch + slot) * self.d;
-                let dst = self.idx(l, slot, pos);
-                self.k[dst..dst + self.d]
-                    .copy_from_slice(&k_new[src..src + self.d]);
-                self.v[dst..dst + self.d]
-                    .copy_from_slice(&v_new[src..src + self.d]);
-            }
-            match &mut self.slots[slot] {
-                Slot::Active { pos, .. } => *pos += 1,
-                Slot::Free => anyhow::bail!("append into free slot"),
-            }
-        }
-        Ok(())
+        let rows: Vec<(usize, usize)> =
+            slots.iter().map(|&s| (s, self.slots.pos(s))).collect();
+        // Validate occupancy/overflow first so a failed append leaves
+        // both halves untouched.
+        self.slots.advance(slots)?;
+        self.mirror.append_rows(&rows, k_new, v_new)
     }
 
     /// Position vector (length B) for the decode graph.
     pub fn pos_vector(&self) -> Vec<i32> {
-        (0..self.batch).map(|i| self.pos(i) as i32).collect()
+        self.slots.pos_vector()
     }
 }
 
@@ -212,10 +369,17 @@ mod tests {
         c.write_prefill(s, &k, &v, t, 3).unwrap();
         assert_eq!(c.pos(s), 3);
         // layer 1, position 2, feature 1:
-        let src = (1 * t + 2) * 4 + 1;
-        let dst = c.idx(1, s, 2) + 1;
-        assert_eq!(c.k[dst], k[src]);
-        assert_eq!(c.v[dst], v[src]);
+        let src = (t + 2) * 4 + 1;
+        let dst = ((c.batch + s) * c.t_max + 2) * c.d + 1; // idx(1, s, 2)+1
+        assert_eq!(c.k_data()[dst], k[src]);
+        assert_eq!(c.v_data()[dst], v[src]);
+    }
+
+    #[test]
+    fn prefill_into_free_slot_rejected() {
+        let mut c = cache();
+        let k = vec![0.0f32; 2 * 4 * 4];
+        assert!(c.write_prefill(0, &k, &k, 4, 2).is_err());
     }
 
     #[test]
@@ -240,5 +404,40 @@ mod tests {
         let pv = c.pos_vector();
         assert_eq!(pv.len(), 3);
         assert_eq!(pv[s], 1);
+    }
+
+    #[test]
+    fn slotmap_set_pos_and_advance_guard_bounds() {
+        let mut m = SlotMap::new(2, 4);
+        assert!(m.set_pos(0, 1).is_err(), "free slot");
+        let s = m.alloc(9).unwrap();
+        assert!(m.set_pos(s, 5).is_err(), "past t_max");
+        m.set_pos(s, 4).unwrap();
+        assert!(m.advance(&[s]).is_err(), "overflow");
+        m.set_pos(s, 3).unwrap();
+        m.advance(&[s]).unwrap();
+        assert_eq!(m.pos(s), 4);
+        assert_eq!(m.request_id(s), Some(9));
+    }
+
+    #[test]
+    fn mirror_append_rows_places_rows() {
+        let (layers, batch, t_max, d) = (2, 3, 8, 4);
+        let mut m = HostKvMirror::new(layers, batch, t_max, d);
+        let mut kn = vec![0.0f32; layers * batch * d];
+        // distinct values for slot 1's rows in both layers
+        for l in 0..layers {
+            for j in 0..d {
+                kn[(l * batch + 1) * d + j] = (10 * l + j) as f32 + 0.5;
+            }
+        }
+        m.append_rows(&[(1, 6)], &kn, &kn).unwrap();
+        for l in 0..layers {
+            for j in 0..d {
+                let at = ((l * batch + 1) * t_max + 6) * d + j;
+                assert_eq!(m.k_data()[at], (10 * l + j) as f32 + 0.5);
+            }
+        }
+        assert!(m.append_rows(&[(0, 8)], &kn, &kn).is_err(), "past t_max");
     }
 }

@@ -10,9 +10,12 @@
 //! this crate loads those artifacts through the PJRT CPU client and owns
 //! everything on the request path:
 //!
-//! * [`runtime`]     — PJRT client, HLO-text loader, weight store (LQTW)
+//! * [`runtime`]     — PJRT client, HLO-text loader, weight store (LQTW),
+//!   staged execution + device-resident KV sessions
+//! * [`xla`]         — offline build shim of the `xla` crate (DESIGN.md §7)
 //! * [`coordinator`] — request queue, continuous batcher, engine loop
-//! * [`kvcache`]     — slot-based KV cache manager for batched decode
+//!   (generic over a decode backend; device-resident cache by default)
+//! * [`kvcache`]     — slot/position manager + optional host cache mirror
 //! * [`tokenizer`]   — word-level tokenizer over the corpus vocabulary
 //! * [`eval`]        — perplexity / downstream-task / pairwise-judge evaluators
 //! * [`quant`]       — bit-exact MXINT + fixed-point twins of the L1 kernels
@@ -35,6 +38,7 @@ pub mod quant;
 pub mod runtime;
 pub mod tokenizer;
 pub mod util;
+pub mod xla;
 
 /// Repository-relative default artifacts directory.
 pub fn default_artifacts_dir() -> std::path::PathBuf {

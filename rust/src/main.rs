@@ -92,8 +92,8 @@ fn info(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn engine_cfg(m: &Manifest, model: &str, method: &str,
-              batch: usize) -> EngineConfig {
+fn engine_cfg(m: &Manifest, model: &str, method: &str, batch: usize,
+              host_cache: bool) -> EngineConfig {
     EngineConfig {
         model: model.to_string(),
         method: method.to_string(),
@@ -105,6 +105,7 @@ fn engine_cfg(m: &Manifest, model: &str, method: &str,
             .map(|(_, t)| *t)
             .collect(),
         max_prefill_per_step: 2,
+        host_cache,
     }
 }
 
@@ -115,13 +116,14 @@ fn serve(argv: &[String]) -> Result<()> {
         .opt("method", "l2qer-w4a8", "PTQ method")
         .opt("addr", "127.0.0.1:8317", "listen address")
         .opt("batch", "8", "decode batch bucket")
+        .flag("host-cache", "legacy host-side KV cache (oracle mode)")
         .parse(argv)?;
     let tok = lqer::tokenizer::Tokenizer::from_file(
         &m.data_dir().join("vocab.json"))?;
     let engine = EngineHandle::spawn(
         m.dir.clone(),
         engine_cfg(&m, &a.get("model"), &a.get("method"),
-                   a.get_usize("batch")?),
+                   a.get_usize("batch")?, a.get_flag("host-cache")),
     )?;
     println!("serving {} / {} on http://{}  (POST /generate, \
               GET /metrics, GET /healthz)",
@@ -138,13 +140,14 @@ fn generate(argv: &[String]) -> Result<()> {
         .opt("max-new", "24", "max generated tokens")
         .opt("topk", "0", "top-k sampling (0 = greedy)")
         .opt("batch", "4", "decode batch bucket")
+        .flag("host-cache", "legacy host-side KV cache (oracle mode)")
         .parse(argv)?;
     let tok = lqer::tokenizer::Tokenizer::from_file(
         &m.data_dir().join("vocab.json"))?;
     let engine = EngineHandle::spawn(
         m.dir.clone(),
         engine_cfg(&m, &a.get("model"), &a.get("method"),
-                   a.get_usize("batch")?),
+                   a.get_usize("batch")?, a.get_flag("host-cache")),
     )?;
     let sampling = match a.get_usize("topk")? {
         0 => Sampling::Greedy,
@@ -174,11 +177,12 @@ fn serve_bench(argv: &[String]) -> Result<()> {
         .opt("requests", "16", "number of requests")
         .opt("max-new", "24", "tokens per request")
         .opt("batch", "8", "decode batch bucket")
+        .flag("host-cache", "legacy host-side KV cache (oracle mode)")
         .parse(argv)?;
     let stats = lqer::coordinator::loadtest::run_loadtest(
         &m,
         &engine_cfg(&m, &a.get("model"), &a.get("method"),
-                    a.get_usize("batch")?),
+                    a.get_usize("batch")?, a.get_flag("host-cache")),
         a.get_usize("requests")?,
         a.get_usize("max-new")?,
     )?;

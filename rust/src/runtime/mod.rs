@@ -1,15 +1,23 @@
 //! PJRT runtime: loads AOT artifacts (HLO text + LQTW weights) and executes
-//! them on the CPU PJRT client.  This is the only module that touches the
-//! `xla` crate; everything above it (coordinator, eval) sees plain slices.
+//! them on the PJRT client.  This is the only module that touches the
+//! `xla` backend (stubbed offline — see [`crate::xla`]); everything above
+//! it (coordinator, eval) sees plain slices and opaque device handles.
 //!
-//! Key decisions (see DESIGN.md §6 and /opt/xla-example/README.md):
+//! Key decisions (see DESIGN.md §6 and §7):
 //! * HLO **text** interchange — `HloModuleProto::from_text_file` reassigns
 //!   the 64-bit instruction ids jax ≥ 0.5 emits that XLA 0.5.1 rejects.
 //! * Weights are HLO *parameters*, uploaded once as device buffers and
-//!   reused across every call (`execute_b`), so the request path never
-//!   re-serializes the model.
-//! * Graphs are lowered with `return_tuple=True`, so outputs arrive as one
-//!   tuple literal that we decompose.
+//!   reused across every call, so the request path never re-serializes
+//!   the model.
+//! * [`Executable::call_staged`] splits a call into upload / execute /
+//!   download stages: inputs may be host slices (uploaded, counted in
+//!   `upload_bytes`) or device-retained buffers from a previous step
+//!   (free), and each output is either downloaded or retained on device.
+//! * [`DeviceKvSession`] owns the persistent K/V cache buffers of one
+//!   decode batch and re-feeds each step's cache *outputs* as the next
+//!   step's cache *inputs*, so the steady-state decode path moves only
+//!   O(B) token ids/positions up and O(B·vocab) logits down — never the
+//!   O(L·B·T_max·d) caches (DESIGN.md §6).
 
 pub mod weights;
 
@@ -20,6 +28,8 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::xla;
+
 pub use weights::WeightStore;
 
 /// Execution statistics for the perf pass (§Perf of EXPERIMENTS.md).
@@ -29,6 +39,12 @@ pub struct ExecStats {
     pub exec_ns: u64,
     pub upload_ns: u64,
     pub download_ns: u64,
+    /// Host→device bytes actually uploaded (device-retained inputs are
+    /// free and not counted).
+    pub upload_bytes: u64,
+    /// Device→host bytes actually downloaded (retained outputs are not
+    /// counted).
+    pub download_bytes: u64,
 }
 
 impl ExecStats {
@@ -37,6 +53,18 @@ impl ExecStats {
         self.exec_ns += other.exec_ns;
         self.upload_ns += other.upload_ns;
         self.download_ns += other.download_ns;
+        self.upload_bytes += other.upload_bytes;
+        self.download_bytes += other.download_bytes;
+    }
+
+    /// Mean host↔device traffic per call, in bytes.
+    pub fn bytes_per_call(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            (self.upload_bytes + self.download_bytes) as f64
+                / self.calls as f64
+        }
     }
 }
 
@@ -62,10 +90,32 @@ impl HostTensor {
     }
 }
 
-/// Inputs that follow the weight parameters in a call.
-pub enum Arg<'a> {
+/// One input to a staged call: host data (uploaded per call) or a
+/// device-retained buffer from a previous call (no transfer).
+pub enum Input<'a> {
     I32(&'a [i32], Vec<usize>),
     F32(&'a [f32], Vec<usize>),
+    Device(&'a xla::PjRtBuffer),
+}
+
+/// One output of a staged call: downloaded to host or retained on device.
+pub enum Output {
+    Host(HostTensor),
+    Device(xla::PjRtBuffer),
+}
+
+fn expect_host(o: Option<Output>) -> Result<HostTensor> {
+    match o {
+        Some(Output::Host(t)) => Ok(t),
+        _ => anyhow::bail!("expected downloaded output"),
+    }
+}
+
+fn expect_device(o: Option<Output>) -> Result<xla::PjRtBuffer> {
+    match o {
+        Some(Output::Device(b)) => Ok(b),
+        _ => anyhow::bail!("expected device-retained output"),
+    }
 }
 
 pub struct Runtime {
@@ -91,6 +141,25 @@ impl Runtime {
         store: &WeightStore,
         n_outputs: usize,
     ) -> Result<Executable> {
+        self.load_impl(hlo_path, Some(store), n_outputs)
+    }
+
+    /// Compile an HLO-text file that takes no weight parameters (pure
+    /// data-movement graphs like the KV-cache prefill scatter).
+    pub fn load_unparameterized(
+        &self,
+        hlo_path: &Path,
+        n_outputs: usize,
+    ) -> Result<Executable> {
+        self.load_impl(hlo_path, None, n_outputs)
+    }
+
+    fn load_impl(
+        &self,
+        hlo_path: &Path,
+        store: Option<&WeightStore>,
+        n_outputs: usize,
+    ) -> Result<Executable> {
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             hlo_path.to_str().context("non-utf8 path")?,
@@ -105,15 +174,20 @@ impl Runtime {
             .map_err(|e| {
                 anyhow::anyhow!("compiling {}: {e:?}", hlo_path.display())
             })?;
-        let mut weights = Vec::with_capacity(store.tensors.len());
-        for t in &store.tensors {
-            weights.push(
-                self.client
-                    .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
-                    .map_err(|e| {
-                        anyhow::anyhow!("uploading {}: {e:?}", t.name)
-                    })?,
-            );
+        let mut weights = Vec::new();
+        if let Some(store) = store {
+            weights.reserve(store.tensors.len());
+            for t in &store.tensors {
+                weights.push(
+                    self.client
+                        .buffer_from_host_buffer::<f32>(
+                            &t.data, &t.shape, None,
+                        )
+                        .map_err(|e| {
+                            anyhow::anyhow!("uploading {}: {e:?}", t.name)
+                        })?,
+                );
+            }
         }
         crate::debug!(
             "loaded {} ({} weight tensors) in {:.1}s",
@@ -131,51 +205,103 @@ impl Runtime {
 }
 
 impl Executable {
-    /// Execute with the bound weights plus `args`; returns the decomposed
-    /// output tuple as host tensors (f32; integer outputs are not used by
-    /// any of our graphs).
-    pub fn call(&self, rt: &Runtime, args: &[Arg]) -> Result<Vec<HostTensor>> {
-        let mut stats = ExecStats { calls: 1, ..Default::default() };
-        let t0 = Instant::now();
-        let mut bufs: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
-        let mut owned = Vec::with_capacity(args.len());
-        for arg in args {
-            let buf = match arg {
-                Arg::I32(data, dims) => rt
-                    .client
-                    .buffer_from_host_buffer::<i32>(data, dims, None),
-                Arg::F32(data, dims) => rt
-                    .client
-                    .buffer_from_host_buffer::<f32>(data, dims, None),
-            }
-            .map_err(|e| anyhow::anyhow!("arg upload: {e:?}"))?;
-            owned.push(buf);
+    /// Execute with the bound weights plus `inputs`, downloading every
+    /// output (f32; integer outputs are not used by any of our graphs).
+    pub fn call(&self, rt: &Runtime, inputs: &[Input]) -> Result<Vec<HostTensor>> {
+        let retain = vec![false; self.n_outputs];
+        let outs = self.call_staged(rt, inputs, &retain)?;
+        let mut host = Vec::with_capacity(outs.len());
+        for o in outs {
+            host.push(expect_host(Some(o))?);
         }
-        bufs.extend(owned.iter());
+        Ok(host)
+    }
+
+    /// Staged execution: upload host inputs, execute, then download or
+    /// retain each output according to `retain` (length `n_outputs`;
+    /// `true` keeps the output on device as an [`Output::Device`] buffer
+    /// that later calls can re-feed via [`Input::Device`]).
+    pub fn call_staged(
+        &self,
+        rt: &Runtime,
+        inputs: &[Input],
+        retain: &[bool],
+    ) -> Result<Vec<Output>> {
+        anyhow::ensure!(
+            retain.len() == self.n_outputs,
+            "retain mask {} != outputs {}",
+            retain.len(),
+            self.n_outputs
+        );
+        let mut stats = ExecStats { calls: 1, ..Default::default() };
+
+        // Stage 1: upload host inputs (device inputs are free).
+        let t0 = Instant::now();
+        enum Slot<'a> {
+            Owned(usize),
+            Borrowed(&'a xla::PjRtBuffer),
+        }
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut slots: Vec<Slot> = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            match input {
+                Input::I32(data, dims) => {
+                    stats.upload_bytes += (data.len() * 4) as u64;
+                    let buf = rt
+                        .client
+                        .buffer_from_host_buffer::<i32>(data, dims, None)
+                        .map_err(|e| anyhow::anyhow!("arg upload: {e:?}"))?;
+                    slots.push(Slot::Owned(owned.len()));
+                    owned.push(buf);
+                }
+                Input::F32(data, dims) => {
+                    stats.upload_bytes += (data.len() * 4) as u64;
+                    let buf = rt
+                        .client
+                        .buffer_from_host_buffer::<f32>(data, dims, None)
+                        .map_err(|e| anyhow::anyhow!("arg upload: {e:?}"))?;
+                    slots.push(Slot::Owned(owned.len()));
+                    owned.push(buf);
+                }
+                Input::Device(b) => slots.push(Slot::Borrowed(*b)),
+            }
+        }
         stats.upload_ns = t0.elapsed().as_nanos() as u64;
 
+        // Stage 2: execute with weights + inputs in parameter order.
         let t1 = Instant::now();
-        let result = self
+        let mut bufs: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        for slot in &slots {
+            bufs.push(match slot {
+                Slot::Owned(i) => &owned[*i],
+                Slot::Borrowed(b) => *b,
+            });
+        }
+        let mut result = self
             .exe
             .execute_b(&bufs)
             .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
         stats.exec_ns = t1.elapsed().as_nanos() as u64;
-
-        let t2 = Instant::now();
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("download: {e:?}"))?;
-        let parts = tuple
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+        anyhow::ensure!(!result.is_empty(), "no device results");
+        let outs_dev = result.swap_remove(0);
         anyhow::ensure!(
-            parts.len() == self.n_outputs,
+            outs_dev.len() == self.n_outputs,
             "expected {} outputs, got {}",
             self.n_outputs,
-            parts.len()
+            outs_dev.len()
         );
-        let mut out = Vec::with_capacity(parts.len());
-        for lit in parts {
+
+        // Stage 3: download unretained outputs.
+        let t2 = Instant::now();
+        let mut out = Vec::with_capacity(outs_dev.len());
+        for (i, buf) in outs_dev.into_iter().enumerate() {
+            if retain[i] {
+                out.push(Output::Device(buf));
+                continue;
+            }
+            let lit = buf
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("download: {e:?}"))?;
             let shape = lit
                 .array_shape()
                 .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
@@ -184,7 +310,8 @@ impl Executable {
             let data = lit
                 .to_vec::<f32>()
                 .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
-            out.push(HostTensor::new(dims, data));
+            stats.download_bytes += (data.len() * 4) as u64;
+            out.push(Output::Host(HostTensor::new(dims, data)));
         }
         stats.download_ns = t2.elapsed().as_nanos() as u64;
         self.stats.lock().unwrap().merge(&stats);
@@ -197,7 +324,116 @@ impl Executable {
 }
 
 // ---------------------------------------------------------------------------
-// Model runner: the three graphs of one (model, method) run.
+// Device-resident KV session
+// ---------------------------------------------------------------------------
+
+/// Persistent device-side K/V cache of one decode batch (DESIGN.md §6).
+///
+/// The session owns the `(L, B, T_max, d)` cache buffers.  Each
+/// `decode_dev` step consumes them as inputs and produces *updated full
+/// caches* as retained outputs, which the session swaps in for the next
+/// step — the caches never cross the PJRT boundary after creation.  Slot
+/// occupancy/positions live in [`crate::kvcache::SlotMap`] on the host;
+/// this type is pure storage.
+pub struct DeviceKvSession {
+    k: xla::PjRtBuffer,
+    v: xla::PjRtBuffer,
+    pub layers: usize,
+    pub batch: usize,
+    pub t_max: usize,
+    pub d: usize,
+}
+
+impl DeviceKvSession {
+    /// Allocate zeroed resident caches (one-time O(L·B·T_max·d) upload).
+    pub fn new(
+        rt: &Runtime,
+        layers: usize,
+        batch: usize,
+        t_max: usize,
+        d: usize,
+    ) -> Result<DeviceKvSession> {
+        let dims = [layers, batch, t_max, d];
+        let zeros = vec![0.0f32; layers * batch * t_max * d];
+        let k = rt
+            .client
+            .buffer_from_host_buffer::<f32>(&zeros, &dims, None)
+            .map_err(|e| anyhow::anyhow!("k cache upload: {e:?}"))?;
+        let v = rt
+            .client
+            .buffer_from_host_buffer::<f32>(&zeros, &dims, None)
+            .map_err(|e| anyhow::anyhow!("v cache upload: {e:?}"))?;
+        Ok(DeviceKvSession { k, v, layers, batch, t_max, d })
+    }
+
+    /// Total resident cache footprint in bytes.
+    pub fn cache_bytes(&self) -> usize {
+        2 * self.layers * self.batch * self.t_max * self.d * 4
+    }
+
+    /// Scatter device-retained prefill outputs (`(L, 1, t, d)`) into batch
+    /// `slot` via the `kvwrite` graph; no host↔device tensor traffic
+    /// beyond the 4-byte slot index.
+    pub fn write_prefill(
+        &mut self,
+        rt: &Runtime,
+        exe: &Executable,
+        k_pre: &xla::PjRtBuffer,
+        v_pre: &xla::PjRtBuffer,
+        slot: usize,
+    ) -> Result<()> {
+        let slot_id = [slot as i32];
+        let outs = exe.call_staged(
+            rt,
+            &[
+                Input::Device(&self.k),
+                Input::Device(&self.v),
+                Input::Device(k_pre),
+                Input::Device(v_pre),
+                Input::I32(&slot_id, vec![]),
+            ],
+            &[true, true],
+        )?;
+        let mut it = outs.into_iter();
+        self.k = expect_device(it.next())?;
+        self.v = expect_device(it.next())?;
+        Ok(())
+    }
+
+    /// One `decode_dev` step: uploads O(B) token ids + positions,
+    /// downloads O(B·vocab) logits, retains the updated caches on device.
+    pub fn decode(
+        &mut self,
+        rt: &Runtime,
+        exe: &Executable,
+        token: &[i32],
+        pos: &[i32],
+    ) -> Result<HostTensor> {
+        let b = self.batch;
+        anyhow::ensure!(
+            token.len() == b && pos.len() == b,
+            "decode batch size"
+        );
+        let outs = exe.call_staged(
+            rt,
+            &[
+                Input::I32(token, vec![b]),
+                Input::Device(&self.k),
+                Input::Device(&self.v),
+                Input::I32(pos, vec![b]),
+            ],
+            &[false, true, true],
+        )?;
+        let mut it = outs.into_iter();
+        let logits = expect_host(it.next())?;
+        self.k = expect_device(it.next())?;
+        self.v = expect_device(it.next())?;
+        Ok(logits)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model runner: the lowered graphs of one (model, method) run.
 // ---------------------------------------------------------------------------
 
 /// Identifies one loadable graph for caching.
@@ -239,7 +475,8 @@ impl ModelRunner {
     fn outputs_for(entry: &str) -> usize {
         match entry {
             "score" => 1,
-            "prefill" | "decode" => 3,
+            "prefill" | "decode" | "decode_dev" => 3,
+            "kvwrite" => 2,
             _ => 1,
         }
     }
@@ -257,12 +494,16 @@ impl ModelRunner {
         if let Some(e) = self.exes.lock().unwrap().get(&key) {
             return Ok(e.clone());
         }
-        let g = manifest.graph(&self.model.name, &self.graph_tag, entry, b, t)?;
-        let exe = std::sync::Arc::new(rt.load(
-            &g.path,
-            &self.store,
-            Self::outputs_for(entry),
-        )?);
+        // kvwrite is pure data movement: lowered once without weight
+        // params under the fixed "cache" tag, shared by every method.
+        let tag = if entry == "kvwrite" { "cache" } else { &self.graph_tag };
+        let g = manifest.graph(&self.model.name, tag, entry, b, t)?;
+        let n_out = Self::outputs_for(entry);
+        let exe = std::sync::Arc::new(if entry == "kvwrite" {
+            rt.load_unparameterized(&g.path, n_out)?
+        } else {
+            rt.load(&g.path, &self.store, n_out)?
+        });
         self.exes.lock().unwrap().insert(key, exe.clone());
         Ok(exe)
     }
@@ -278,11 +519,12 @@ impl ModelRunner {
     ) -> Result<HostTensor> {
         anyhow::ensure!(tokens.len() == b * t, "token count");
         let exe = self.executable(rt, manifest, "score", b, t)?;
-        let mut out = exe.call(rt, &[Arg::I32(tokens, vec![b, t])])?;
+        let mut out = exe.call(rt, &[Input::I32(tokens, vec![b, t])])?;
         Ok(out.remove(0))
     }
 
-    /// Prefill: tokens (b*t) -> (logits (b,t,v), k (L,b,t,d), v (L,b,t,d)).
+    /// Prefill: tokens (b*t) -> (logits (b,t,v), k (L,b,t,d), v (L,b,t,d)),
+    /// all downloaded to host (legacy host-cache path, eval, tests).
     pub fn prefill(
         &self,
         rt: &Runtime,
@@ -291,8 +533,9 @@ impl ModelRunner {
         b: usize,
         t: usize,
     ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        anyhow::ensure!(tokens.len() == b * t, "token count");
         let exe = self.executable(rt, manifest, "prefill", b, t)?;
-        let mut out = exe.call(rt, &[Arg::I32(tokens, vec![b, t])])?;
+        let mut out = exe.call(rt, &[Input::I32(tokens, vec![b, t])])?;
         anyhow::ensure!(out.len() == 3);
         let v = out.pop().unwrap();
         let k = out.pop().unwrap();
@@ -300,10 +543,36 @@ impl ModelRunner {
         Ok((logits, k, v))
     }
 
-    /// One decode step over a batch bucket of size b.
+    /// Prefill with the K/V outputs retained on device for a
+    /// [`DeviceKvSession`] scatter; only the logits are downloaded.
+    pub fn prefill_retained(
+        &self,
+        rt: &Runtime,
+        manifest: &crate::config::Manifest,
+        tokens: &[i32],
+        b: usize,
+        t: usize,
+    ) -> Result<(HostTensor, xla::PjRtBuffer, xla::PjRtBuffer)> {
+        anyhow::ensure!(tokens.len() == b * t, "token count");
+        let exe = self.executable(rt, manifest, "prefill", b, t)?;
+        let outs = exe.call_staged(
+            rt,
+            &[Input::I32(tokens, vec![b, t])],
+            &[false, true, true],
+        )?;
+        let mut it = outs.into_iter();
+        let logits = expect_host(it.next())?;
+        let k = expect_device(it.next())?;
+        let v = expect_device(it.next())?;
+        Ok((logits, k, v))
+    }
+
+    /// One legacy host-cache decode step over a batch bucket of size b.
     ///
     /// caches: (L, b, t_max, d) row-major; pos[b] marks the next position.
-    /// Returns (logits (b,v), k_new (L,b,d), v_new (L,b,d)).
+    /// Returns (logits (b,v), k_new (L,b,d), v_new (L,b,d)).  Uploads the
+    /// full caches every step — kept as the bit-exactness oracle for the
+    /// device-resident path.
     #[allow(clippy::too_many_arguments)]
     pub fn decode(
         &self,
@@ -324,10 +593,10 @@ impl ModelRunner {
         let mut out = exe.call(
             rt,
             &[
-                Arg::I32(token, vec![b]),
-                Arg::F32(k_cache, cache_dims.clone()),
-                Arg::F32(v_cache, cache_dims),
-                Arg::I32(pos, vec![b]),
+                Input::I32(token, vec![b]),
+                Input::F32(k_cache, cache_dims.clone()),
+                Input::F32(v_cache, cache_dims),
+                Input::I32(pos, vec![b]),
             ],
         )?;
         anyhow::ensure!(out.len() == 3);
@@ -337,11 +606,56 @@ impl ModelRunner {
         Ok((logits, k, v))
     }
 
+    /// One device-resident decode step (`decode_dev` graph): the session's
+    /// cache buffers are re-fed as inputs and the updated caches are
+    /// retained on device.
+    pub fn decode_resident(
+        &self,
+        rt: &Runtime,
+        manifest: &crate::config::Manifest,
+        session: &mut DeviceKvSession,
+        token: &[i32],
+        pos: &[i32],
+    ) -> Result<HostTensor> {
+        let exe =
+            self.executable(rt, manifest, "decode_dev", session.batch, 0)?;
+        session.decode(rt, &exe, token, pos)
+    }
+
+    /// Scatter retained prefill outputs into a session slot (`kvwrite`
+    /// graph for this batch and prefill bucket `t`).
+    pub fn write_prefill_resident(
+        &self,
+        rt: &Runtime,
+        manifest: &crate::config::Manifest,
+        session: &mut DeviceKvSession,
+        slot: usize,
+        k_pre: &xla::PjRtBuffer,
+        v_pre: &xla::PjRtBuffer,
+        t: usize,
+    ) -> Result<()> {
+        let exe =
+            self.executable(rt, manifest, "kvwrite", session.batch, t)?;
+        session.write_prefill(rt, &exe, k_pre, v_pre, slot)
+    }
+
     /// Aggregate stats across all loaded executables.
     pub fn stats(&self) -> ExecStats {
         let mut agg = ExecStats::default();
         for exe in self.exes.lock().unwrap().values() {
             agg.merge(&exe.stats());
+        }
+        agg
+    }
+
+    /// Aggregate stats for one entry point (e.g. per-decode-step
+    /// host↔device traffic).
+    pub fn entry_stats(&self, entry: &str) -> ExecStats {
+        let mut agg = ExecStats::default();
+        for (key, exe) in self.exes.lock().unwrap().iter() {
+            if key.entry == entry {
+                agg.merge(&exe.stats());
+            }
         }
         agg
     }

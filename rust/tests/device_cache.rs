@@ -1,0 +1,299 @@
+//! Device-resident KV cache: golden equality with the legacy host path
+//! and slot-accounting properties of the scheduler.
+//!
+//! The golden test drives the *real* `Engine` scheduler over a
+//! deterministic in-process model (`FakeBackend`) twice — once with the
+//! host-mirror write pattern, once with the device DUS write pattern
+//! (including the padded-prefill and every-lane writes the lowered
+//! graphs perform) — and asserts identical token streams over a
+//! multi-request continuous-batching trace with slot reuse.  A second,
+//! artifacts-gated variant runs the same comparison through the PJRT
+//! runtime when artifacts and a real `xla` backend are available.
+
+use std::sync::mpsc;
+
+use lqer::coordinator::testbackend::{FakeBackend, FakeCacheMode};
+use lqer::coordinator::{
+    Engine, EngineConfig, FinishReason, Request, Response, Sampling,
+};
+use lqer::util::proptest::{check, Gen};
+use lqer::util::rng::Rng;
+
+const VOCAB: usize = 40;
+const LAYERS: usize = 2;
+const DIM: usize = 4;
+const T_MAX: usize = 32;
+const EOS: u32 = 2;
+const POISON: u32 = 7; // first-token value that makes FakeBackend fail
+
+fn cfg(batch: usize) -> EngineConfig {
+    EngineConfig {
+        model: "fake".into(),
+        method: "fake".into(),
+        decode_batch: batch,
+        prefill_buckets: vec![8, 16],
+        max_prefill_per_step: 2,
+        host_cache: false, // FakeBackend's mode is chosen directly
+    }
+}
+
+fn fake(mode: FakeCacheMode, batch: usize) -> FakeBackend {
+    FakeBackend::new(mode, VOCAB, LAYERS, DIM, T_MAX, batch)
+}
+
+fn drain<B: lqer::coordinator::backend::DecodeBackend>(
+    engine: &mut Engine<B>,
+) {
+    let mut guard = 0;
+    while engine.has_work() {
+        engine.tick();
+        guard += 1;
+        assert!(guard < 100_000, "engine did not drain");
+    }
+}
+
+fn run_trace(mode: FakeCacheMode, requests: &[Request]) -> Vec<Response> {
+    let batch = 3;
+    let mut engine = Engine::with_backend(fake(mode, batch), cfg(batch),
+                                          EOS);
+    let mut rxs = Vec::with_capacity(requests.len());
+    for r in requests {
+        let (tx, rx) = mpsc::channel();
+        engine.enqueue(r.clone(), tx);
+        rxs.push(rx);
+    }
+    drain(&mut engine);
+    assert_eq!(engine.free_slots(), engine.kv_batch(), "slot leak");
+    rxs.into_iter()
+        .map(|rx| rx.recv().expect("reply sender dropped"))
+        .collect()
+}
+
+/// A varied continuous-batching workload: prompt lengths spanning both
+/// prefill buckets, mixed greedy/top-k sampling, more requests than
+/// slots so lanes are reused.
+fn golden_requests() -> Vec<Request> {
+    let mut rng = Rng::new(42);
+    let mut requests = Vec::new();
+    for i in 0..12u64 {
+        let plen = 1 + rng.below(12);
+        let prompt: Vec<u32> =
+            (0..plen).map(|_| rng.below(VOCAB) as u32).collect();
+        requests.push(Request {
+            id: i + 1,
+            prompt,
+            max_new_tokens: 1 + rng.below(10),
+            sampling: if i % 3 == 0 {
+                Sampling::TopK { k: 5, temperature: 0.7, seed: 11 }
+            } else {
+                Sampling::Greedy
+            },
+        });
+    }
+    requests
+}
+
+#[test]
+fn device_path_bit_exact_with_host_path() {
+    let requests = golden_requests();
+    let host = run_trace(FakeCacheMode::Host, &requests);
+    let dev = run_trace(FakeCacheMode::Device, &requests);
+    assert_eq!(host.len(), dev.len());
+    let mut generated = 0;
+    for (h, d) in host.iter().zip(&dev) {
+        assert_eq!(h.id, d.id);
+        assert_eq!(h.tokens, d.tokens, "request {} diverged", h.id);
+        assert_eq!(h.finish, d.finish, "request {} finish", h.id);
+        generated += h.tokens.len();
+    }
+    assert!(generated > 12, "trace generated too little to be meaningful");
+}
+
+#[test]
+fn rejected_requests_get_a_response_not_a_dropped_channel() {
+    let batch = 2;
+    let mut backend = fake(FakeCacheMode::Device, batch);
+    backend.fail_prefill_token = Some(POISON as i32);
+    let mut engine = Engine::with_backend(backend, cfg(batch), EOS);
+
+    let mk = |id: u64, prompt: Vec<u32>| Request {
+        id,
+        prompt,
+        max_new_tokens: 4,
+        sampling: Sampling::Greedy,
+    };
+    let (tx1, rx1) = mpsc::channel();
+    engine.enqueue(mk(1, vec![POISON, 3, 4]), tx1); // prefill fails
+    let (tx2, rx2) = mpsc::channel();
+    engine.enqueue(mk(2, vec![]), tx2); // empty prompt
+    let (tx3, rx3) = mpsc::channel();
+    engine.enqueue(mk(3, (0..25).map(|i| (i % 5) as u32 + 10).collect()),
+                   tx3); // longer than any bucket
+    let (tx4, rx4) = mpsc::channel();
+    engine.enqueue(mk(4, vec![5, 6]), tx4); // healthy
+
+    drain(&mut engine);
+    for rx in [rx1, rx2, rx3] {
+        let resp = rx.recv().expect("rejected request must still answer");
+        assert_eq!(resp.finish, FinishReason::Rejected);
+        assert!(resp.tokens.is_empty());
+    }
+    let ok = rx4.recv().expect("healthy request served");
+    assert_ne!(ok.finish, FinishReason::Rejected);
+    assert!(!ok.tokens.is_empty());
+
+    // The failed admissions must not have leaked their slots.
+    assert_eq!(engine.free_slots(), batch);
+    let m = engine.metrics_snapshot();
+    assert_eq!(m.rejected, 3);
+    assert_eq!(m.completed, 1);
+}
+
+// ---------------------------------------------------------------------------
+// Property: no scheduler path leaks a KV slot
+// ---------------------------------------------------------------------------
+
+struct TraceGen;
+
+/// (prompt_len, max_new, poisoned) per request.  prompt_len spans 0
+/// (rejected: empty) through > largest bucket (rejected: too long);
+/// poisoned prompts fail *inside* prefill after the slot is claimed.
+impl Gen for TraceGen {
+    type Value = Vec<(usize, usize, bool)>;
+    fn generate(&self, rng: &mut Rng) -> Vec<(usize, usize, bool)> {
+        (0..rng.below(14) + 1)
+            .map(|_| {
+                (rng.below(30), rng.below(6) + 1, rng.below(4) == 0)
+            })
+            .collect()
+    }
+    fn shrink(&self, v: &Vec<(usize, usize, bool)>)
+        -> Vec<Vec<(usize, usize, bool)>> {
+        if v.len() > 1 {
+            vec![v[..v.len() / 2].to_vec(), v[..v.len() - 1].to_vec()]
+        } else {
+            vec![]
+        }
+    }
+}
+
+#[test]
+fn no_scheduler_path_leaks_a_slot() {
+    check("kv-slot-no-leak", 60, &TraceGen, |trace| {
+        let batch = 2;
+        let mut backend = fake(FakeCacheMode::Device, batch);
+        backend.fail_prefill_token = Some(POISON as i32);
+        let mut engine = Engine::with_backend(backend, cfg(batch), EOS);
+        let mut rxs = Vec::new();
+        for (i, &(plen, max_new, poison)) in trace.iter().enumerate() {
+            // Non-poisoned prompts draw tokens from 10..15 so they can
+            // never collide with the poison first-token.
+            let prompt: Vec<u32> = if poison {
+                std::iter::once(POISON)
+                    .chain((0..plen).map(|j| (j % 5) as u32 + 10))
+                    .collect()
+            } else {
+                (0..plen).map(|j| ((i + j) % 5) as u32 + 10).collect()
+            };
+            let (tx, rx) = mpsc::channel();
+            engine.enqueue(
+                Request {
+                    id: i as u64 + 1,
+                    prompt,
+                    max_new_tokens: max_new,
+                    sampling: Sampling::Greedy,
+                },
+                tx,
+            );
+            rxs.push(rx);
+        }
+        let mut guard = 0;
+        while engine.has_work() {
+            engine.tick();
+            guard += 1;
+            if guard >= 100_000 {
+                return Err("engine did not drain".into());
+            }
+        }
+        if engine.free_slots() != batch {
+            return Err(format!(
+                "slot leak: {}/{batch} free after drain",
+                engine.free_slots()
+            ));
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            match rx.recv() {
+                Ok(_) => {}
+                Err(_) => {
+                    return Err(format!(
+                        "request {} reply sender dropped",
+                        i + 1
+                    ))
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Artifacts-gated: the same golden comparison through the real runtime
+// ---------------------------------------------------------------------------
+
+#[test]
+fn real_runtime_device_host_bit_exact() {
+    let dir = lqer::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    if lqer::runtime::Runtime::cpu().is_err() {
+        eprintln!("skipping: PJRT backend unavailable (stubbed xla)");
+        return;
+    }
+    let m = lqer::config::Manifest::load(&dir).expect("manifest parses");
+    let prompts =
+        lqer::coordinator::loadtest::load_prompts(&m).expect("prompts");
+    let run = |host_cache: bool| -> Vec<Vec<u32>> {
+        let cfg = EngineConfig {
+            model: m.serve.model.clone(),
+            method: m.serve.methods[0].clone(),
+            decode_batch: *m.serve.decode_batches.iter().max().unwrap(),
+            prefill_buckets: m
+                .serve
+                .prefill_shapes
+                .iter()
+                .map(|(_, t)| *t)
+                .collect(),
+            max_prefill_per_step: 2,
+            host_cache,
+        };
+        let engine = lqer::coordinator::EngineHandle::spawn(
+            m.dir.clone(), cfg,
+        )
+        .expect("engine");
+        let rxs: Vec<_> = prompts
+            .iter()
+            .take(6)
+            .enumerate()
+            .map(|(i, p)| {
+                engine.submit(Request {
+                    id: i as u64 + 1,
+                    prompt: p.clone(),
+                    max_new_tokens: 8,
+                    sampling: Sampling::Greedy,
+                })
+            })
+            .collect();
+        let out = rxs
+            .into_iter()
+            .map(|rx| rx.recv().expect("reply").tokens)
+            .collect();
+        engine.shutdown();
+        out
+    };
+    let host = run(true);
+    let device = run(false);
+    assert_eq!(host, device,
+               "device-resident decode diverged from host oracle");
+}

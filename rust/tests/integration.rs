@@ -6,14 +6,25 @@ use lqer::config::Manifest;
 use lqer::coordinator::{EngineConfig, EngineHandle, Request, Sampling};
 use lqer::runtime::{ModelRunner, Runtime};
 
-fn manifest() -> Option<Manifest> {
+/// Artifacts-gated only (no PJRT needed).
+fn manifest_any() -> Option<Manifest> {
     let dir = lqer::default_artifacts_dir();
-    if dir.join("manifest.json").exists() {
-        Some(Manifest::load(&dir).expect("manifest parses"))
-    } else {
+    if !dir.join("manifest.json").exists() {
         eprintln!("skipping: run `make artifacts` first");
-        None
+        return None;
     }
+    Some(Manifest::load(&dir).expect("manifest parses"))
+}
+
+/// Artifacts + a real PJRT backend.  The offline image stubs the xla
+/// crate (DESIGN.md §7); end-to-end tests skip rather than panic there.
+fn manifest() -> Option<Manifest> {
+    let m = manifest_any()?;
+    if let Err(e) = Runtime::cpu() {
+        eprintln!("skipping: {e:#}");
+        return None;
+    }
+    Some(m)
 }
 
 fn test_stream(m: &Manifest) -> Vec<u16> {
@@ -22,7 +33,7 @@ fn test_stream(m: &Manifest) -> Vec<u16> {
 
 #[test]
 fn weight_stores_load_for_every_run() {
-    let Some(m) = manifest() else { return };
+    let Some(m) = manifest_any() else { return };
     for run in m.runs.iter().filter(|r| r.model == "opt-tiny") {
         let ws = lqer::runtime::WeightStore::load(&run.weights).unwrap();
         assert!(ws.total_params() > 0, "{}", run.method);
@@ -151,6 +162,7 @@ fn engine_serves_deterministically_and_batches() {
         prefill_buckets: m.serve.prefill_shapes.iter().map(|(_, t)| *t)
             .collect(),
         max_prefill_per_step: 2,
+        host_cache: false,
     };
     let engine = EngineHandle::spawn(m.dir.clone(), cfg).unwrap();
     let prompts =
@@ -198,7 +210,7 @@ fn tasks_eval_runs_and_beats_chance_on_fp16() {
 
 #[test]
 fn fig1a_rust_svd_matches_python_spectra() {
-    let Some(m) = manifest() else { return };
+    let Some(m) = manifest_any() else { return };
     let dir = m.dir.join("fig1a");
     if !dir.join("fig1a.json").exists() {
         return;

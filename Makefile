@@ -1,8 +1,10 @@
 # Top-level drivers.  `make artifacts` runs the python AOT path once
 # (data -> train -> quant -> HLO -> golden); everything rust-side loads
-# the result.  `make tier1` is the CI gate (scripts/tier1.sh).
+# the result.  `make tier1` is the CI gate (scripts/tier1.sh; includes
+# plan-check).  `make test-python` runs the python suite, including the
+# QuantSpec schema tests (tests/test_spec.py).
 
-.PHONY: artifacts tier1 test-python
+.PHONY: artifacts tier1 test-python plan-check
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -12,3 +14,9 @@ tier1:
 
 test-python:
 	cd python && python3 -m pytest tests -q
+
+# Validate the cross-language QuantSpec golden fixture (python side;
+# the rust side is rust/tests/plan_roundtrip.rs under `cargo test`).
+plan-check:
+	python3 python/compile/quant/spec.py check \
+	    rust/tests/fixtures/quantspec_golden.json

@@ -35,6 +35,7 @@ from jax._src.lib import xla_client as xc
 
 from . import calibration, data as D, model as M, pipeline, train
 from .quant import formats, lqer
+from .quant import spec as qspec
 
 # ----------------------------------------------------------------------------
 # Experiment grid
@@ -125,8 +126,8 @@ def stage_train(out_dir: str, ds: D.Dataset, models: list[str]) -> dict:
     return trained
 
 
-def _method_runs(models: list[str]) -> list[tuple[str, str, dict]]:
-    """(model, run_name, spec) for the full experiment grid."""
+def _method_runs(models: list[str]) -> list[tuple[str, str, qspec.QuantSpec]]:
+    """(model, run_name, plan) for the full experiment grid."""
     runs = []
     for name in models:
         for method, spec in pipeline.METHODS.items():
@@ -143,10 +144,10 @@ def _method_runs(models: list[str]) -> list[tuple[str, str, dict]]:
     return runs
 
 
-def _rank_pad_for(run_name: str, spec: dict) -> int:
-    if not spec["lowrank"]:
+def _rank_pad_for(run_name: str, spec) -> int:
+    k = qspec.QuantSpec.coerce(spec).max_rank()
+    if k == 0:
         return 0
-    k = spec["lowrank"]["k"]
     import re
     if re.search(r"-k\d+$", run_name):  # fig-3 sweep shares one K graph
         return max(FIG3_RANKS)
@@ -170,11 +171,12 @@ def stage_quant(out_dir: str, ds: D.Dataset, trained: dict,
             rank_pad = _rank_pad_for(run_name, spec)
             gv = pipeline.graph_variant_for(spec, rank_pad)
             entry = {"model": name, "method": run_name,
-                     "graph": gv.tag, "weights": wpath, "meta": mpath}
+                     "graph": gv.tag, "weights": wpath, "meta": mpath,
+                     "plan": spec.to_json_dict()}
             run_index.append(entry)
             if os.path.exists(mpath):
                 continue
-            if name not in stats_cache and spec["algo"] != "none":
+            if name not in stats_cache and spec.needs_calibration():
                 print(f"[aot] calibrating {name} (32 samples)")
                 stats_cache[name] = calibration.collect_stats(
                     params, ds.calib, cfg)
@@ -189,7 +191,8 @@ def stage_quant(out_dir: str, ds: D.Dataset, trained: dict,
             meta.update({"model": name, "method": run_name,
                          "model_cfg": dataclasses_dict(cfg)})
             write_lqtw(wpath, qparams, {"model": name, "method": run_name,
-                                        "graph": gv.tag})
+                                        "graph": gv.tag,
+                                        "plan": spec.to_json_dict()})
             with open(mpath, "w") as fh:
                 json.dump(meta, fh, indent=1)
     return run_index
@@ -354,7 +357,7 @@ def stage_fig1a(out_dir: str, ds: D.Dataset, trained: dict) -> dict | None:
     li = int(FIG1A_LAYER.split(".")[1])
     lname = FIG1A_LAYER.split(".")[2]
     w = np.asarray(params["layers"][li][lname]["w"], np.float32)
-    qfn = pipeline.weight_quant_fn(("mxint", 3))
+    qfn = pipeline.weight_quant_fn(qspec.Mxint(3))
     wq = qfn(w)
     eq = (w - wq).astype(np.float32)
     s_diag = lqer.calib_scale_matrix(stats[FIG1A_LAYER].a_bar)

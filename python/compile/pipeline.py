@@ -1,19 +1,28 @@
-"""PTQ pipeline: the method registry and the per-model quantization driver.
+"""PTQ pipeline: the per-model quantization driver over QuantSpec plans.
 
-A *method spec* fully determines how each linear layer of a model is
-quantized and which lowered graph variant serves it:
+A *plan* (``quant.spec.QuantSpec``) fully determines how each linear
+layer of a model is quantized and which lowered graph variant serves it:
+a model-wide default ``LayerSpec`` —
 
-  weight : ("mxint", bits) | ("int", bits, group) | ("fp",)
+  weight : Mxint(bits, exp_bits, block) | IntGroup(bits, group) | Fp16()
   act    : "none" | "mx8" | "mx6" | "int8" | "int6"
   algo   : how W_eff is produced  (rtn / gptq / awq / llmint4 /
            smoothquant / clipq)
-  lowrank: None or {"k": int, "scaled": bool}  -- LQER (scaled=False) or
+  lowrank: None or LowRank(k, scaled, bits)  -- LQER (scaled=False) or
            L2QER (scaled=True, uses the Appendix-A scale matrix S)
 
-``quantize_model`` walks every linear of a trained model, applies the
-method, and returns the parameter tree for the matching GraphVariant plus
-a metadata record (average weight bits, per-layer approximation error,
-optimization wall-time) consumed by the rust benches.
+— plus ordered per-layer-name overrides, so rank and weight format can
+vary layer by layer (mixed precision).  The legacy string-keyed method
+registry lives on as ``spec.METHODS`` (plan constructors) and every
+entry point accepts a method-name string or legacy dict via
+``QuantSpec.coerce``.
+
+``quantize_model`` walks every linear of a trained model, resolves the
+plan for that layer, applies it, and returns the parameter tree for the
+matching GraphVariant plus a metadata record (plan, per-layer
+plan-derived bits, average weight bits, per-layer approximation error,
+optimization wall-time) consumed by the rust benches and the
+``lqer plan`` CLI.
 """
 
 from __future__ import annotations
@@ -27,87 +36,25 @@ from . import model as M
 from .baselines import awq, clipq, gptq, llm_int4, rtn, smoothquant
 from .calibration import LinearStats
 from .quant import formats, lqer
+from .quant import spec as qspec
+from .quant.spec import Fp16, IntGroup, LayerSpec, Mxint, QuantSpec
 
-# ----------------------------------------------------------------------------
-# Method registry (the paper's Table 3/4/6 configurations)
-# ----------------------------------------------------------------------------
+# Legacy re-exports: the registry and sweep constructor are pure data and
+# live in quant/spec.py (shared contract with rust); this module remains
+# their historical import path.
+METHODS = qspec.METHODS
+rank_sweep_spec = qspec.rank_sweep_spec
 
-METHODS: dict[str, dict] = {
-    # name                    weight           act     algo        lowrank
-    "fp16": dict(weight=("fp",), act="none", algo="none", lowrank=None),
-    # Table 2: plain MXINT vs LQER vs L2QER (W4A8)
-    "mxint-w4a8": dict(weight=("mxint", 4), act="mx8", algo="rtn",
-                       lowrank=None),
-    "lqer-w4a8": dict(weight=("mxint", 4), act="mx8", algo="rtn",
-                      lowrank={"k": 16, "scaled": False}),
-    "l2qer-w4a8": dict(weight=("mxint", 4), act="mx8", algo="rtn",
-                       lowrank={"k": 16, "scaled": True}),
-    # Table 3 w&a: MXINT W4A6
-    "l2qer-w4a6": dict(weight=("mxint", 4), act="mx6", algo="rtn",
-                       lowrank={"k": 16, "scaled": True}),
-    # Table 3 w-only: L2QER-INT (INT4 g128 weights, FP16 acts)
-    "l2qer-int-w4": dict(weight=("int", 4, 128), act="none", algo="rtn",
-                         lowrank={"k": 16, "scaled": True}),
-    # Table 3 w&a: L2QER-INT W4A8 g128
-    "l2qer-int-w4a8": dict(weight=("int", 4, 128), act="int8", algo="rtn",
-                           lowrank={"k": 16, "scaled": True}),
-    # w-only baselines
-    "gptq-w4": dict(weight=("int", 4, 128), act="none", algo="gptq",
-                    lowrank=None),
-    "awq-w4": dict(weight=("int", 4, 128), act="none", algo="awq",
-                   lowrank=None),
-    "rtn-w4": dict(weight=("int", 4, 128), act="none", algo="rtn",
-                   lowrank=None),
-    # w&a baselines
-    "llmint4": dict(weight=("int", 4, 0), act="int8", algo="llmint4",
-                    lowrank=None),
-    "smoothquant-w8a8": dict(weight=("int", 8, 128), act="int8",
-                             algo="smoothquant", lowrank=None),
-    "clipq-w6a6": dict(weight=("int", 6, 128), act="int6", algo="clipq",
-                       lowrank=None),
-    # 2-bit setup (Table 6 / Table 10)
-    "awq-w2": dict(weight=("int", 2, 128), act="none", algo="awq",
-                   lowrank=None),
-    "clipq-w2": dict(weight=("int", 2, 128), act="none", algo="clipq",
-                     lowrank=None),
-    "l2qer-w2a8": dict(weight=("mxint", 2), act="mx8", algo="rtn",
-                       lowrank={"k": 64, "scaled": True}),
-    # Difficulty-matched Table-2 trio: at toy scale W4 is already lossless
-    # (EXPERIMENTS.md), so the paper's W4-on-7B regime maps to W2 here.
-    "mxint-w2a8": dict(weight=("mxint", 2), act="mx8", algo="rtn",
-                       lowrank=None),
-    "lqer-w2a8": dict(weight=("mxint", 2), act="mx8", algo="rtn",
-                      lowrank={"k": 64, "scaled": False}),
-    # Figure 3 rank-sweep baseline (W3, kept for the spectra figure).
-    "mxint-w3a8": dict(weight=("mxint", 3), act="mx8", algo="rtn",
-                       lowrank=None),
-    # Ablation: precision of the low-rank factors (paper stores them at
-    # b_h = 8; what do 4-bit or unquantized factors change?).
-    "l2qer-w2a8-lr4": dict(weight=("mxint", 2), act="mx8", algo="rtn",
-                           lowrank={"k": 64, "scaled": True, "bits": 4}),
-    "l2qer-w2a8-lrfp": dict(weight=("mxint", 2), act="mx8", algo="rtn",
-                            lowrank={"k": 64, "scaled": True,
-                                     "bits": None}),
-    # Ablation: LQER rank at fixed budget (k=16 vs 64 on W2).
-    "l2qer-w2a8-rank16": dict(weight=("mxint", 2), act="mx8", algo="rtn",
-                           lowrank={"k": 16, "scaled": True}),
-}
-
-# The low-rank factors are stored as 8-bit MXINT ([16,1] blocks) -- the
+# The low-rank factors default to 8-bit MXINT ([16,1] blocks) -- the
 # paper's b_h = 8.
-LOWRANK_BITS = 8
-LOWRANK_AVG_BITS = formats.mxint_avg_bits(LOWRANK_BITS, 4, 16)
+LOWRANK_BITS = qspec.LOWRANK_DEFAULT_BITS
+LOWRANK_AVG_BITS = qspec.mxint_avg_bits(LOWRANK_BITS, 4, 16)
 
 
-def rank_sweep_spec(k: int, scaled: bool, w_bits: int = 2) -> dict:
-    """Method spec for the Figure-3 perplexity-vs-rank sweep."""
-    return dict(weight=("mxint", w_bits), act="mx8", algo="rtn",
-                lowrank={"k": k, "scaled": scaled})
-
-
-def graph_variant_for(spec: dict, rank_pad: int) -> M.GraphVariant:
-    rank = rank_pad if spec["lowrank"] else 0
-    return M.GraphVariant(act=spec["act"], rank=rank)
+def graph_variant_for(plan, rank_pad: int) -> M.GraphVariant:
+    plan = QuantSpec.coerce(plan)
+    rank = rank_pad if plan.max_rank() > 0 else 0
+    return M.GraphVariant(act=plan.default.act, rank=rank)
 
 
 # ----------------------------------------------------------------------------
@@ -115,35 +62,29 @@ def graph_variant_for(spec: dict, rank_pad: int) -> M.GraphVariant:
 # ----------------------------------------------------------------------------
 
 
-def weight_quant_fn(weight_spec: tuple):
-    kind = weight_spec[0]
-    if kind == "fp":
+def weight_quant_fn(weight):
+    """Quantize-dequantize closure for a WeightFormat (legacy tuples
+    like ("mxint", 4) are accepted for compatibility)."""
+    w_fmt = qspec.weight_from_legacy(weight)
+    if isinstance(w_fmt, Fp16):
         return lambda w: np.asarray(w, np.float32)
-    if kind == "mxint":
-        bits = weight_spec[1]
+    if isinstance(w_fmt, Mxint):
         return lambda w: np.asarray(
-            formats.mxint_quant_weight(w, bits), np.float32)
-    if kind == "int":
-        bits, group = weight_spec[1], weight_spec[2]
-        if group == 0:  # vector-wise (LLM.int8 style)
-            return lambda w: np.asarray(
-                formats.int_quant_group(w, bits, w.shape[1], axis=1),
-                np.float32)
+            formats.mxint_quant_weight(w, w_fmt.bits, w_fmt.exp_bits,
+                                       w_fmt.block), np.float32)
+    if w_fmt.group == 0:  # vector-wise (LLM.int8 style)
         return lambda w: np.asarray(
-            formats.int_quant_group(w, bits, group, axis=0), np.float32)
-    raise ValueError(f"unknown weight spec {weight_spec}")
+            formats.int_quant_group(w, w_fmt.bits, w.shape[1], axis=1),
+            np.float32)
+    return lambda w: np.asarray(
+        formats.int_quant_group(w, w_fmt.bits, w_fmt.group, axis=0),
+        np.float32)
 
 
-def weight_avg_bits(weight_spec: tuple) -> float:
-    kind = weight_spec[0]
-    if kind == "fp":
-        return 16.0
-    if kind == "mxint":
-        return formats.mxint_avg_bits(weight_spec[1], 4, 16)
-    if kind == "int":
-        bits, group = weight_spec[1], weight_spec[2]
-        return formats.int_group_avg_bits(bits, group if group else 4096)
-    raise ValueError(weight_spec)
+def weight_avg_bits(weight) -> float:
+    """Plan-derived average bits of a weight format (legacy tuples
+    accepted).  Single source of truth: quant/spec.py."""
+    return qspec.weight_from_legacy(weight).avg_bits()
 
 
 # ----------------------------------------------------------------------------
@@ -151,23 +92,49 @@ def weight_avg_bits(weight_spec: tuple) -> float:
 # ----------------------------------------------------------------------------
 
 
-def quantize_model(params, cfg: M.ModelConfig, spec: dict,
+def _quantize_linear(w: np.ndarray, ls: LayerSpec,
+                     st: LinearStats | None) -> dict:
+    """Produce the effective low-precision weight for one linear."""
+    algo = ls.algo
+    if algo in ("none", "rtn"):
+        return {"w": weight_quant_fn(ls.weight)(w)}
+    assert st is not None, f"algo '{algo}' needs calibration stats"
+    assert isinstance(ls.weight, IntGroup), ls.weight
+    bits, group = ls.weight.bits, ls.weight.group
+    if algo == "gptq":
+        return gptq.quantize(w, st.h, bits=bits, group=group)
+    if algo == "awq":
+        return awq.quantize(w, st.a_max, st.x_sample, bits=bits,
+                            group=group)
+    if algo == "llmint4":
+        return llm_int4.quantize(w, st.a_max, bits=bits)
+    if algo == "smoothquant":
+        return smoothquant.quantize(w, st.a_max, bits=bits, group=group)
+    if algo == "clipq":
+        return clipq.quantize(w, st.x_sample, bits=bits, group=group)
+    raise ValueError(f"unknown algo {algo}")
+
+
+def quantize_model(params, cfg: M.ModelConfig, plan,
                    stats: dict[str, LinearStats] | None,
                    rank_pad: int | None = None,
                    spectra_layer: str | None = None) -> tuple[dict, dict]:
-    """Apply one method to every linear layer.
+    """Apply one plan to every linear layer, resolving per-layer specs.
 
-    Returns (variant_params, meta).  meta carries avg weight bits,
-    per-linear approximation errors (Figure 4), optional singular-value
-    spectra (Figure 1a) and the optimization wall-time (section 4.3's
+    ``plan`` may be a QuantSpec, a legacy method dict, or a method-name
+    string.  Returns (variant_params, meta).  meta carries the resolved
+    plan, per-layer plan-derived bits, avg weight bits, per-linear
+    approximation errors (Figure 4), optional singular-value spectra
+    (Figure 1a) and the optimization wall-time (section 4.3's
     optimization-cost comparison).
     """
     t0 = time.time()
-    lowrank = spec["lowrank"]
-    k = lowrank["k"] if lowrank else 0
-    rank_pad = rank_pad if rank_pad is not None else k
-    gv = graph_variant_for(spec, rank_pad)
-    qfn = weight_quant_fn(spec["weight"])
+    plan = QuantSpec.coerce(plan).validate()
+    max_k = plan.max_rank()
+    rank_pad = rank_pad if rank_pad is not None else max_k
+    assert rank_pad >= max_k, (
+        f"rank_pad {rank_pad} < plan max rank {max_k}")
+    gv = graph_variant_for(plan, rank_pad)
     out = M.attach_variant_params(
         jax.tree_util.tree_map(np.asarray, params), cfg, gv)
 
@@ -175,54 +142,36 @@ def quantize_model(params, cfg: M.ModelConfig, spec: dict,
     total_bits = 0.0
     approx_errs: dict[str, float] = {}
     spectra: dict[str, dict] = {}
+    plan_bits: dict[str, float] = {}
 
     for li, layer in enumerate(out["layers"]):
         for name in M.LINEAR_NAMES:
             key = f"layers.{li}.{name}"
+            ls = plan.resolve(key)
             lin = layer[name]
             w = np.asarray(lin["w"], np.float32)
             m, n = w.shape
             st = stats.get(key) if stats else None
-            algo = spec["algo"]
+            lowrank = ls.lowrank
 
-            if algo in ("none", "rtn"):
-                res = {"w": qfn(w)}
-            elif algo == "gptq":
-                assert st is not None
-                res = gptq.quantize(w, st.h, bits=spec["weight"][1],
-                                    group=spec["weight"][2])
-            elif algo == "awq":
-                assert st is not None
-                res = awq.quantize(w, st.a_max, st.x_sample,
-                                   bits=spec["weight"][1],
-                                   group=spec["weight"][2])
-            elif algo == "llmint4":
-                assert st is not None
-                res = llm_int4.quantize(w, st.a_max,
-                                        bits=spec["weight"][1])
-            elif algo == "smoothquant":
-                assert st is not None
-                res = smoothquant.quantize(w, st.a_max,
-                                           bits=spec["weight"][1],
-                                           group=spec["weight"][2])
-            elif algo == "clipq":
-                assert st is not None
-                res = clipq.quantize(w, st.x_sample,
-                                     bits=spec["weight"][1],
-                                     group=spec["weight"][2])
+            # With a low-rank term and plain rounding, W_q comes from
+            # lqer_quantize below — skip the redundant base pass.  Other
+            # algos still run for their side outputs (smooth/actmask),
+            # though lqer_quantize's grid likewise wins for w itself.
+            if lowrank is not None and ls.algo in ("none", "rtn"):
+                res = {}
             else:
-                raise ValueError(f"unknown algo {algo}")
-
-            w_eff = res["w"]
-            if lowrank:
+                res = _quantize_linear(w, ls, st)
+            w_eff = res.get("w")
+            if lowrank is not None:
                 s_diag = None
-                if lowrank["scaled"]:
+                if lowrank.scaled:
                     assert st is not None, "L2QER needs calibration"
                     s_diag = lqer.calib_scale_matrix(st.a_bar)
-                lr_bits = lowrank.get("bits", LOWRANK_BITS)
                 fac = lqer.lqer_quantize(
-                    w, qfn, k, s_diag=s_diag,
-                    lowrank_bits=lr_bits, pad_to=rank_pad)
+                    w, weight_quant_fn(ls.weight), lowrank.k,
+                    s_diag=s_diag, lowrank_bits=lowrank.bits,
+                    pad_to=rank_pad)
                 w_eff = fac.w_q
                 lin["a"] = fac.a_k
                 lin["b"] = fac.b_k
@@ -236,29 +185,31 @@ def quantize_model(params, cfg: M.ModelConfig, spec: dict,
             if "actmask" in res:
                 lin["actmask"] = res["actmask"]
 
-            bits = m * n * weight_avg_bits(spec["weight"])
-            if lowrank:
-                lr_bits = lowrank.get("bits", LOWRANK_BITS)
-                lr_avg = (32.0 if lr_bits is None
-                          else formats.mxint_avg_bits(lr_bits, 4, 16))
-                bits += (m + n) * k * lr_avg
-            if algo == "llmint4":
-                # outlier rows stay FP16 in memory-bits accounting
+            # Plan-derived bits (the cross-language contract: rust
+            # recomputes these from the plan and asserts equality).
+            plan_bits[key] = ls.avg_bits(m, n)
+            bits = m * n * plan_bits[key]
+            if ls.algo == "llmint4":
+                # outlier rows stay FP16 in memory-bits accounting — a
+                # data-dependent correction on top of the plan number
                 n_out = res.get("n_outliers", 0)
-                bits = ((m - n_out) * n * weight_avg_bits(spec["weight"])
+                bits = ((m - n_out) * n * ls.weight.avg_bits()
                         + n_out * n * 16.0)
             total_w += m * n
             total_bits += bits
 
+    shapes = qspec.layer_shapes(cfg.d, cfg.ffn, cfg.layers)
     meta = {
         "avg_w_bits": total_bits / max(total_w, 1),
+        "plan_avg_bits": plan.model_avg_bits(shapes),
+        "plan_bits": plan_bits,
+        "plan": plan.to_json_dict(),
         "approx_err": approx_errs,
         "spectra": spectra,
         "opt_seconds": time.time() - t0,
-        "rank": k,
+        "rank": max_k,
         "rank_pad": rank_pad,
         "graph": gv.tag,
-        "spec": {"weight": list(spec["weight"]), "act": spec["act"],
-                 "algo": spec["algo"], "lowrank": lowrank},
+        "spec": plan.default.to_legacy_dict(),
     }
     return out, meta

@@ -130,26 +130,13 @@ def int_quant_per_token(x: jnp.ndarray, bits: int) -> jnp.ndarray:
 
 
 # ----------------------------------------------------------------------------
-# Memory accounting (the "Avg. w bits" column of Table 3)
+# Memory accounting (the "Avg. w bits" column of Table 3).  The formulas
+# live in quant/spec.py — the QuantSpec contract shared with rust — and
+# are re-exported here for their historical import path.
 # ----------------------------------------------------------------------------
 
-
-def mxint_avg_bits(elem_bits: int, exp_bits: int, block: int) -> float:
-    """Average bits per element of an MXINT tensor."""
-    return elem_bits + exp_bits / block
-
-
-def int_group_avg_bits(bits: int, group: int, scale_bits: int = 16) -> float:
-    """Average bits per element of group-quantized fixed point."""
-    return bits + scale_bits / group
-
-
-def lqer_avg_bits(m: int, n: int, k: int, w_bits_avg: float,
-                  lowrank_bits_avg: float) -> float:
-    """Average weight bits of an LQER layer: the W_q matrix plus the two
-    rank-k factors, amortized over the m*n nominal weights (paper, App. D)."""
-    total = m * n * w_bits_avg + (m + n) * k * lowrank_bits_avg
-    return total / (m * n)
+from .spec import (int_group_avg_bits, lqer_avg_bits,  # noqa: E402,F401
+                   mxint_avg_bits)
 
 
 # ----------------------------------------------------------------------------

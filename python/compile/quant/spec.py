@@ -1,0 +1,771 @@
+"""QuantSpec: the typed, per-layer quantization-plan schema.
+
+This file is the *contract* between the python compiler and the rust
+runtime (rust/src/quant/spec.rs is its bit-for-bit mirror).  A plan is a
+model-wide default ``LayerSpec`` plus ordered per-layer-name overrides:
+
+    {"version": 1,
+     "default": {"weight": {"kind": "mxint", "bits": 4,
+                            "exp_bits": 4, "block": 16},
+                 "act": "mx8", "algo": "rtn",
+                 "lowrank": {"k": 16, "scaled": true, "bits": 8}},
+     "overrides": [{"match": "layers.*.fc1", "spec": {...LayerSpec...}}]}
+
+Weight formats: ``mxint`` (block floating point), ``int`` (fixed point
+with an FP16 group scale; ``group: 0`` means vector-wise, LLM.int8
+style), ``fp16`` (unquantized baseline).  ``lowrank`` is ``null`` or
+``{k, scaled, bits}`` — LQER (``scaled: false``) or L2QER (``scaled:
+true``); ``bits: null`` stores the factors unquantized (fp32 ablation).
+
+Override patterns match full layer keys (``layers.3.fc1``) literally
+except that ``*`` matches any run of characters; the first matching
+override wins, else the default applies.  ``act`` must be uniform across
+a plan because the activation mode is *graph structure* (one lowered HLO
+variant per act mode), whereas weights/rank are data.
+
+Canonical serialization is ``json.dumps(plan.to_json_dict(),
+separators=(",", ":"))`` — key order fixed, no whitespace, ints only —
+and is byte-identical to the rust emitter, which is what the golden
+fixture (rust/tests/fixtures/quantspec_golden.json) asserts.
+
+This module is deliberately pure standard library (no jax/numpy) so the
+tier-1 ``plan-check`` step can run it directly:
+
+    python3 python/compile/quant/spec.py check \
+        rust/tests/fixtures/quantspec_golden.json
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+import sys
+
+SCHEMA_VERSION = 1
+
+ACTS = ("none", "mx8", "mx6", "int8", "int6")
+ALGOS = ("none", "rtn", "gptq", "awq", "llmint4", "smoothquant", "clipq")
+ACT_BITS = {"none": 16, "mx8": 8, "mx6": 6, "int8": 8, "int6": 6}
+
+# Algorithms that operate on the INT grid (they take bits and, except
+# llmint4, a group size) and therefore require an IntGroup weight
+# format; plain rtn rounding works on any grid.
+INT_ONLY_ALGOS = ("gptq", "awq", "smoothquant", "clipq", "llmint4")
+
+# The low-rank factors default to the paper's b_h = 8 (8-bit MXINT,
+# [16, 1] blocks, 4-bit shared exponent).
+LOWRANK_DEFAULT_BITS = 8
+
+
+class SpecError(ValueError):
+    """A plan failed schema validation; the message is path-qualified."""
+
+
+# ----------------------------------------------------------------------------
+# Average-bits accounting — the single source of truth for "Avg. w bits"
+# (Table 3).  rust/src/quant/spec.rs mirrors these formulas exactly.
+# ----------------------------------------------------------------------------
+
+
+def mxint_avg_bits(elem_bits: int, exp_bits: int, block: int) -> float:
+    """Average bits per element of an MXINT tensor (shared exponent
+    amortized over the block)."""
+    return elem_bits + exp_bits / block
+
+
+def int_group_avg_bits(bits: int, group: int, scale_bits: int = 16) -> float:
+    """Average bits per element of group-quantized fixed point with an
+    FP16 scale per group."""
+    return bits + scale_bits / group
+
+
+def lqer_avg_bits(m: int, n: int, k: int, w_bits_avg: float,
+                  lowrank_bits_avg: float) -> float:
+    """Average weight bits of an LQER layer: W_q plus the rank-k factors
+    amortized over the m*n nominal weights (paper Appendix D)."""
+    total = m * n * w_bits_avg + (m + n) * k * lowrank_bits_avg
+    return total / (m * n)
+
+
+# ----------------------------------------------------------------------------
+# Weight formats
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Mxint:
+    """Block floating point: ``bits``-bit mantissas sharing an
+    ``exp_bits``-bit exponent per ``block`` input features."""
+    bits: int
+    exp_bits: int = 4
+    block: int = 16
+
+    def avg_bits(self) -> float:
+        return mxint_avg_bits(self.bits, self.exp_bits, self.block)
+
+    def describe(self) -> str:
+        return f"MXINT{self.bits}[e{self.exp_bits}/b{self.block}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class IntGroup:
+    """Fixed point with an FP16 scale per ``group`` input features;
+    ``group == 0`` is vector-wise (one scale per input row)."""
+    bits: int
+    group: int = 128
+
+    def avg_bits(self) -> float:
+        # Vector-wise scales amortize over the whole row; 4096 is the
+        # legacy accounting stand-in for "a full LLM row".
+        return int_group_avg_bits(self.bits, self.group or 4096)
+
+    def describe(self) -> str:
+        g = f"g{self.group}" if self.group else "vec"
+        return f"INT{self.bits} {g}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Fp16:
+    """Unquantized FP16 baseline weights."""
+
+    def avg_bits(self) -> float:
+        return 16.0
+
+    def describe(self) -> str:
+        return "FP16"
+
+
+WeightFormat = Mxint | IntGroup | Fp16
+
+
+@dataclasses.dataclass(frozen=True)
+class LowRank:
+    """LQER/L2QER error-reconstruction factors: rank ``k``, Appendix-A
+    scaling when ``scaled``, stored at ``bits``-bit MXINT (None = fp32)."""
+    k: int
+    scaled: bool = False
+    bits: int | None = LOWRANK_DEFAULT_BITS
+
+    def avg_bits(self) -> float:
+        if self.bits is None:
+            return 32.0
+        return mxint_avg_bits(self.bits, 4, 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """How one linear layer is quantized."""
+    weight: WeightFormat
+    act: str = "none"
+    algo: str = "rtn"
+    lowrank: LowRank | None = None
+
+    def avg_bits(self, m: int, n: int) -> float:
+        """Plan-derived average weight bits of an (m, n) linear."""
+        base = self.weight.avg_bits()
+        if self.lowrank is None:
+            return base
+        return lqer_avg_bits(m, n, self.lowrank.k, base,
+                             self.lowrank.avg_bits())
+
+    def to_json_dict(self) -> dict:
+        return {
+            "weight": _weight_to_json(self.weight),
+            "act": self.act,
+            "algo": self.algo,
+            "lowrank": None if self.lowrank is None else {
+                "k": self.lowrank.k,
+                "scaled": self.lowrank.scaled,
+                "bits": self.lowrank.bits,
+            },
+        }
+
+    def to_legacy_dict(self) -> dict:
+        """The pre-QuantSpec method-spec shape (kept in run metadata so
+        old readers keep working)."""
+        if isinstance(self.weight, Fp16):
+            weight: tuple = ("fp",)
+        elif isinstance(self.weight, Mxint):
+            weight = ("mxint", self.weight.bits)
+        else:
+            weight = ("int", self.weight.bits, self.weight.group)
+        lowrank = None
+        if self.lowrank is not None:
+            lowrank = {"k": self.lowrank.k, "scaled": self.lowrank.scaled}
+            if self.lowrank.bits != LOWRANK_DEFAULT_BITS:
+                lowrank["bits"] = self.lowrank.bits
+        return {"weight": list(weight), "act": self.act, "algo": self.algo,
+                "lowrank": lowrank}
+
+
+@dataclasses.dataclass(frozen=True)
+class Override:
+    """One per-layer-name override: full LayerSpec for matching layers."""
+    match: str
+    spec: LayerSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """A complete quantization plan: default + ordered overrides."""
+    default: LayerSpec
+    overrides: tuple[Override, ...] = ()
+
+    # -- resolution ---------------------------------------------------------
+
+    def resolve(self, layer_name: str) -> LayerSpec:
+        """First matching override wins; else the model-wide default."""
+        for ov in self.overrides:
+            if glob_match(ov.match, layer_name):
+                return ov.spec
+        return self.default
+
+    def layer_specs(self):
+        yield self.default
+        for ov in self.overrides:
+            yield ov.spec
+
+    def max_rank(self) -> int:
+        """Largest low-rank k any layer may use (the graph's pad rank)."""
+        return max((ls.lowrank.k for ls in self.layer_specs()
+                    if ls.lowrank is not None), default=0)
+
+    def needs_calibration(self) -> bool:
+        """True when quantizing consumes calibration stats: any algo
+        beyond plain rounding, or an Appendix-A-scaled low-rank term."""
+        return any(ls.algo not in ("none", "rtn")
+                   or (ls.lowrank is not None and ls.lowrank.scaled)
+                   for ls in self.layer_specs())
+
+    def model_avg_bits(self, shapes: dict[str, tuple[int, int]]) -> float:
+        """Plan-derived model average weight bits over named linears."""
+        total_w = 0
+        total_bits = 0.0
+        for name, (m, n) in shapes.items():
+            total_w += m * n
+            total_bits += m * n * self.resolve(name).avg_bits(m, n)
+        return total_bits / max(total_w, 1)
+
+    # -- validation ---------------------------------------------------------
+
+    def validate(self) -> "QuantSpec":
+        _validate_layer(self.default, "plan.default")
+        for i, ov in enumerate(self.overrides):
+            path = f"plan.overrides[{i}]"
+            if not ov.match:
+                raise SpecError(f"{path}.match: must be a non-empty string")
+            # Printable ASCII only: layer keys are ASCII, and this keeps
+            # the canonical JSON byte-identical across the two emitters
+            # (python escapes non-ASCII, the rust writer does not).
+            if not ov.match.isascii() or any(ord(c) < 0x20
+                                             for c in ov.match):
+                raise SpecError(
+                    f"{path}.match: must be printable ASCII")
+            _validate_layer(ov.spec, f"{path}.spec")
+            if ov.spec.act != self.default.act:
+                raise SpecError(
+                    f"{path}.spec.act: '{ov.spec.act}' differs from the "
+                    f"default act '{self.default.act}' — the activation "
+                    "mode is graph structure and must be uniform")
+        return self
+
+    # -- serialization ------------------------------------------------------
+
+    def to_json_dict(self) -> dict:
+        return {
+            "version": SCHEMA_VERSION,
+            "default": self.default.to_json_dict(),
+            "overrides": [{"match": ov.match,
+                           "spec": ov.spec.to_json_dict()}
+                          for ov in self.overrides],
+        }
+
+    def to_json(self) -> str:
+        """Canonical form: byte-identical to the rust emitter."""
+        return json.dumps(self.to_json_dict(), separators=(",", ":"))
+
+    @staticmethod
+    def from_json_dict(obj, path: str = "plan") -> "QuantSpec":
+        d = _obj(obj, path)
+        _check_keys(d, ("version", "default", "overrides"), path)
+        version = _int(_field(d, "version", path), f"{path}.version", 0)
+        if version != SCHEMA_VERSION:
+            raise SpecError(f"{path}.version: unsupported version "
+                            f"{version} (expected {SCHEMA_VERSION})")
+        default = _parse_layer(_field(d, "default", path), f"{path}.default")
+        ov_list = d.get("overrides", [])
+        if not isinstance(ov_list, list):
+            raise SpecError(f"{path}.overrides: expected an array")
+        overrides = []
+        for i, ov in enumerate(ov_list):
+            opath = f"{path}.overrides[{i}]"
+            od = _obj(ov, opath)
+            _check_keys(od, ("match", "spec"), opath)
+            overrides.append(Override(
+                match=_str(_field(od, "match", opath), f"{opath}.match"),
+                spec=_parse_layer(_field(od, "spec", opath),
+                                  f"{opath}.spec")))
+        return QuantSpec(default=default,
+                         overrides=tuple(overrides)).validate()
+
+    @staticmethod
+    def from_json(text: str) -> "QuantSpec":
+        try:
+            obj = json.loads(text)
+        except json.JSONDecodeError as e:
+            raise SpecError(f"plan: invalid JSON ({e})") from e
+        return QuantSpec.from_json_dict(obj)
+
+    @staticmethod
+    def coerce(value) -> "QuantSpec":
+        """Accept a QuantSpec, a legacy method-spec dict, a plan JSON
+        dict, or a method-name string — the compatibility shim."""
+        if isinstance(value, QuantSpec):
+            return value
+        if isinstance(value, str):
+            return from_method_name(value)
+        if isinstance(value, dict):
+            if "version" in value or "default" in value:
+                return QuantSpec.from_json_dict(value)
+            return from_legacy_dict(value)
+        raise SpecError(f"cannot build a QuantSpec from {type(value)!r}")
+
+
+# ----------------------------------------------------------------------------
+# Pattern matching (mirrored in rust — keep trivially simple)
+# ----------------------------------------------------------------------------
+
+
+def glob_match(pattern: str, name: str) -> bool:
+    """Literal match except '*' matches any (possibly empty) run."""
+    pi = si = 0
+    star = -1
+    mark = 0
+    while si < len(name):
+        if pi < len(pattern) and pattern[pi] == "*":
+            star = pi
+            mark = si
+            pi += 1
+        elif pi < len(pattern) and pattern[pi] == name[si]:
+            pi += 1
+            si += 1
+        elif star >= 0:
+            pi = star + 1
+            mark += 1
+            si = mark
+        else:
+            return False
+    while pi < len(pattern) and pattern[pi] == "*":
+        pi += 1
+    return pi == len(pattern)
+
+
+# ----------------------------------------------------------------------------
+# Strict parsing helpers (path-qualified errors)
+# ----------------------------------------------------------------------------
+
+
+def _obj(v, path: str) -> dict:
+    if not isinstance(v, dict):
+        raise SpecError(f"{path}: expected an object")
+    return v
+
+
+def _check_keys(d: dict, allowed: tuple, path: str) -> None:
+    for k in d:
+        if k not in allowed:
+            raise SpecError(f"{path}: unknown key '{k}'")
+
+
+def _field(d: dict, key: str, path: str):
+    if key not in d:
+        raise SpecError(f"{path}: missing key '{key}'")
+    return d[key]
+
+
+def _int(v, path: str, lo: int, hi: int | None = None) -> int:
+    # Integral floats (4.0) are accepted to match the rust parser, whose
+    # JSON numbers are all f64; canonical emitters only produce ints.
+    if isinstance(v, float) and v.is_integer():
+        v = int(v)
+    if isinstance(v, bool) or not isinstance(v, int):
+        raise SpecError(f"{path}: expected an integer")
+    if v < lo or (hi is not None and v > hi):
+        raise SpecError(f"{path}: {v} out of range "
+                        f"[{lo}, {hi if hi is not None else 'inf'}]")
+    return v
+
+
+def _bool(v, path: str) -> bool:
+    if not isinstance(v, bool):
+        raise SpecError(f"{path}: expected a boolean")
+    return v
+
+
+def _str(v, path: str) -> str:
+    if not isinstance(v, str):
+        raise SpecError(f"{path}: expected a string")
+    return v
+
+
+def _weight_to_json(w: WeightFormat) -> dict:
+    if isinstance(w, Fp16):
+        return {"kind": "fp16"}
+    if isinstance(w, Mxint):
+        return {"kind": "mxint", "bits": w.bits, "exp_bits": w.exp_bits,
+                "block": w.block}
+    return {"kind": "int", "bits": w.bits, "group": w.group}
+
+
+def _parse_weight(obj, path: str) -> WeightFormat:
+    d = _obj(obj, path)
+    kind = _str(_field(d, "kind", path), f"{path}.kind")
+    if kind == "fp16":
+        _check_keys(d, ("kind",), path)
+        return Fp16()
+    if kind == "mxint":
+        _check_keys(d, ("kind", "bits", "exp_bits", "block"), path)
+        return Mxint(
+            bits=_int(_field(d, "bits", path), f"{path}.bits", 2, 8),
+            exp_bits=_int(_field(d, "exp_bits", path),
+                          f"{path}.exp_bits", 1, 8),
+            block=_int(_field(d, "block", path), f"{path}.block", 1))
+    if kind == "int":
+        _check_keys(d, ("kind", "bits", "group"), path)
+        return IntGroup(
+            bits=_int(_field(d, "bits", path), f"{path}.bits", 2, 8),
+            group=_int(_field(d, "group", path), f"{path}.group", 0))
+    raise SpecError(f"{path}.kind: unknown weight format '{kind}'")
+
+
+def _parse_layer(obj, path: str) -> LayerSpec:
+    d = _obj(obj, path)
+    _check_keys(d, ("weight", "act", "algo", "lowrank"), path)
+    act = _str(_field(d, "act", path), f"{path}.act")
+    if act not in ACTS:
+        raise SpecError(f"{path}.act: unknown activation mode '{act}'")
+    algo = _str(_field(d, "algo", path), f"{path}.algo")
+    if algo not in ALGOS:
+        raise SpecError(f"{path}.algo: unknown algorithm '{algo}'")
+    lowrank = None
+    lr = _field(d, "lowrank", path)
+    if lr is not None:
+        lpath = f"{path}.lowrank"
+        ld = _obj(lr, lpath)
+        _check_keys(ld, ("k", "scaled", "bits"), lpath)
+        bits = _field(ld, "bits", lpath)
+        lowrank = LowRank(
+            k=_int(_field(ld, "k", lpath), f"{lpath}.k", 1),
+            scaled=_bool(_field(ld, "scaled", lpath), f"{lpath}.scaled"),
+            bits=None if bits is None else _int(bits, f"{lpath}.bits", 2, 8))
+    return LayerSpec(weight=_parse_weight(_field(d, "weight", path),
+                                          f"{path}.weight"),
+                     act=act, algo=algo, lowrank=lowrank)
+
+
+def _validate_layer(ls: LayerSpec, path: str) -> None:
+    if ls.algo in INT_ONLY_ALGOS and not isinstance(ls.weight, IntGroup):
+        raise SpecError(
+            f"{path}: algo '{ls.algo}' requires an int weight format, "
+            f"got '{ls.weight.describe()}'")
+    if ls.lowrank is not None:
+        if ls.lowrank.k < 1:
+            raise SpecError(f"{path}.lowrank.k: must be >= 1")
+        if ls.lowrank.bits is not None and not 2 <= ls.lowrank.bits <= 8:
+            raise SpecError(f"{path}.lowrank.bits: "
+                            f"{ls.lowrank.bits} out of range [2, 8]")
+
+
+# ----------------------------------------------------------------------------
+# Legacy compatibility shims
+# ----------------------------------------------------------------------------
+
+
+def weight_from_legacy(weight_spec) -> WeightFormat:
+    """('fp',) | ('mxint', bits) | ('int', bits, group) -> WeightFormat."""
+    if isinstance(weight_spec, (Mxint, IntGroup, Fp16)):
+        return weight_spec
+    kind = weight_spec[0]
+    if kind == "fp":
+        return Fp16()
+    if kind == "mxint":
+        return Mxint(bits=weight_spec[1])
+    if kind == "int":
+        return IntGroup(bits=weight_spec[1], group=weight_spec[2])
+    raise SpecError(f"unknown legacy weight spec {weight_spec!r}")
+
+
+def from_legacy_dict(d: dict) -> QuantSpec:
+    """The pre-QuantSpec method-spec dict -> a single-default plan."""
+    known = {"weight", "act", "algo", "lowrank"}
+    unknown = set(d) - known
+    if unknown:
+        raise SpecError(f"legacy spec: unknown key(s) {sorted(unknown)}")
+    lowrank = None
+    if d.get("lowrank"):
+        lr = d["lowrank"]
+        lowrank = LowRank(k=lr["k"], scaled=bool(lr.get("scaled", False)),
+                          bits=lr.get("bits", LOWRANK_DEFAULT_BITS))
+    return QuantSpec(default=LayerSpec(
+        weight=weight_from_legacy(tuple(d["weight"])),
+        act=d.get("act", "none"), algo=d.get("algo", "rtn"),
+        lowrank=lowrank)).validate()
+
+
+# ----------------------------------------------------------------------------
+# The method registry (the paper's Table 3/4/6 configurations), expressed
+# as QuantSpec constructors.  Names are the legacy string contract; the
+# rust shim (QuantSpec::from_method_name) mirrors this table exactly.
+# ----------------------------------------------------------------------------
+
+
+def _plan(weight: WeightFormat, act: str, algo: str,
+          lowrank: LowRank | None = None) -> QuantSpec:
+    return QuantSpec(default=LayerSpec(weight=weight, act=act, algo=algo,
+                                       lowrank=lowrank)).validate()
+
+
+METHODS: dict[str, QuantSpec] = {
+    "fp16": _plan(Fp16(), "none", "none"),
+    # Table 2: plain MXINT vs LQER vs L2QER (W4A8)
+    "mxint-w4a8": _plan(Mxint(4), "mx8", "rtn"),
+    "lqer-w4a8": _plan(Mxint(4), "mx8", "rtn", LowRank(16)),
+    "l2qer-w4a8": _plan(Mxint(4), "mx8", "rtn", LowRank(16, scaled=True)),
+    # Table 3 w&a: MXINT W4A6
+    "l2qer-w4a6": _plan(Mxint(4), "mx6", "rtn", LowRank(16, scaled=True)),
+    # Table 3 w-only: L2QER-INT (INT4 g128 weights, FP16 acts)
+    "l2qer-int-w4": _plan(IntGroup(4, 128), "none", "rtn",
+                          LowRank(16, scaled=True)),
+    # Table 3 w&a: L2QER-INT W4A8 g128
+    "l2qer-int-w4a8": _plan(IntGroup(4, 128), "int8", "rtn",
+                            LowRank(16, scaled=True)),
+    # w-only baselines
+    "gptq-w4": _plan(IntGroup(4, 128), "none", "gptq"),
+    "awq-w4": _plan(IntGroup(4, 128), "none", "awq"),
+    "rtn-w4": _plan(IntGroup(4, 128), "none", "rtn"),
+    # w&a baselines
+    "llmint4": _plan(IntGroup(4, 0), "int8", "llmint4"),
+    "smoothquant-w8a8": _plan(IntGroup(8, 128), "int8", "smoothquant"),
+    "clipq-w6a6": _plan(IntGroup(6, 128), "int6", "clipq"),
+    # 2-bit setup (Table 6 / Table 10)
+    "awq-w2": _plan(IntGroup(2, 128), "none", "awq"),
+    "clipq-w2": _plan(IntGroup(2, 128), "none", "clipq"),
+    "l2qer-w2a8": _plan(Mxint(2), "mx8", "rtn", LowRank(64, scaled=True)),
+    # Difficulty-matched Table-2 trio: at toy scale W4 is already lossless
+    # (EXPERIMENTS.md), so the paper's W4-on-7B regime maps to W2 here.
+    "mxint-w2a8": _plan(Mxint(2), "mx8", "rtn"),
+    "lqer-w2a8": _plan(Mxint(2), "mx8", "rtn", LowRank(64)),
+    # Figure 3 rank-sweep baseline (W3, kept for the spectra figure).
+    "mxint-w3a8": _plan(Mxint(3), "mx8", "rtn"),
+    # Ablation: precision of the low-rank factors (paper stores them at
+    # b_h = 8; what do 4-bit or unquantized factors change?).
+    "l2qer-w2a8-lr4": _plan(Mxint(2), "mx8", "rtn",
+                            LowRank(64, scaled=True, bits=4)),
+    "l2qer-w2a8-lrfp": _plan(Mxint(2), "mx8", "rtn",
+                             LowRank(64, scaled=True, bits=None)),
+    # Ablation: LQER rank at fixed budget (k=16 vs 64 on W2).
+    "l2qer-w2a8-rank16": _plan(Mxint(2), "mx8", "rtn",
+                               LowRank(16, scaled=True)),
+}
+
+_SWEEP_RE = re.compile(r"^(lqer|l2qer)-w2a8-k(\d+)$")
+
+
+def rank_sweep_spec(k: int, scaled: bool, w_bits: int = 2) -> QuantSpec:
+    """Plan for the Figure-3 perplexity-vs-rank sweep."""
+    return _plan(Mxint(w_bits), "mx8", "rtn", LowRank(k, scaled=scaled))
+
+
+def from_method_name(name: str) -> QuantSpec:
+    """Resolve a legacy method-name string to its plan."""
+    if name in METHODS:
+        return METHODS[name]
+    m = _SWEEP_RE.match(name)
+    if m and int(m.group(2)) >= 1:
+        return rank_sweep_spec(int(m.group(2)), scaled=m.group(1) == "l2qer")
+    raise SpecError(f"unknown method name '{name}'")
+
+
+# ----------------------------------------------------------------------------
+# Model layer shapes (mirrors model.LINEAR_NAMES without importing jax)
+# ----------------------------------------------------------------------------
+
+
+def layer_shapes(d: int, ffn: int, layers: int) -> dict[str, tuple[int, int]]:
+    """(in, out) shape of every linear key ``layers.{i}.{name}``."""
+    dims = {"wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+            "fc1": (d, ffn), "fc2": (ffn, d)}
+    return {f"layers.{li}.{name}": shape
+            for li in range(layers) for name, shape in dims.items()}
+
+
+# ----------------------------------------------------------------------------
+# Golden fixture: serialized by python, parsed by rust (and vice versa).
+# ----------------------------------------------------------------------------
+
+GOLDEN_DIMS = {"d": 64, "ffn": 256, "layers": 2}
+
+
+def heterogeneous_example() -> QuantSpec:
+    """The acceptance-criteria plan: rank k=32 on FFN linears, k=8
+    elsewhere, INT4 g128 on the output projection, MXINT4 default."""
+    base = LayerSpec(weight=Mxint(4), act="mx8", algo="rtn",
+                     lowrank=LowRank(8, scaled=True))
+    ffn = dataclasses.replace(base, lowrank=LowRank(32, scaled=True))
+    wo = dataclasses.replace(base, weight=IntGroup(4, 128),
+                             lowrank=LowRank(8, scaled=True))
+    return QuantSpec(default=base, overrides=(
+        Override("layers.*.fc1", ffn),
+        Override("layers.*.fc2", ffn),
+        Override("layers.*.wo", wo),
+    )).validate()
+
+
+GOLDEN_CASES = ["fp16", "mxint-w4a8", "l2qer-w4a8", "l2qer-int-w4a8",
+                "llmint4", "l2qer-w2a8-lrfp", "lqer-w2a8", "l2qer-w2a8-k4"]
+
+GOLDEN_REJECTS = [
+    ("top-level-unknown-key",
+     '{"version":1,"default":{"weight":{"kind":"fp16"},"act":"none",'
+     '"algo":"none","lowrank":null},"overrides":[],"extra":1}'),
+    ("bad-version",
+     '{"version":2,"default":{"weight":{"kind":"fp16"},"act":"none",'
+     '"algo":"none","lowrank":null},"overrides":[]}'),
+    ("unknown-weight-kind",
+     '{"version":1,"default":{"weight":{"kind":"fp8"},"act":"none",'
+     '"algo":"none","lowrank":null},"overrides":[]}'),
+    ("unknown-weight-key",
+     '{"version":1,"default":{"weight":{"kind":"mxint","bits":4,'
+     '"exp_bits":4,"block":16,"zero_point":true},"act":"mx8",'
+     '"algo":"rtn","lowrank":null},"overrides":[]}'),
+    ("unknown-act",
+     '{"version":1,"default":{"weight":{"kind":"mxint","bits":4,'
+     '"exp_bits":4,"block":16},"act":"fp8","algo":"rtn",'
+     '"lowrank":null},"overrides":[]}'),
+    ("unknown-algo",
+     '{"version":1,"default":{"weight":{"kind":"mxint","bits":4,'
+     '"exp_bits":4,"block":16},"act":"mx8","algo":"magic",'
+     '"lowrank":null},"overrides":[]}'),
+    ("lowrank-zero-rank",
+     '{"version":1,"default":{"weight":{"kind":"mxint","bits":4,'
+     '"exp_bits":4,"block":16},"act":"mx8","algo":"rtn",'
+     '"lowrank":{"k":0,"scaled":true,"bits":8}},"overrides":[]}'),
+    ("lowrank-unknown-key",
+     '{"version":1,"default":{"weight":{"kind":"mxint","bits":4,'
+     '"exp_bits":4,"block":16},"act":"mx8","algo":"rtn",'
+     '"lowrank":{"k":16,"scaled":true,"bits":8,"rank_pad":32}},'
+     '"overrides":[]}'),
+    ("weight-bits-out-of-range",
+     '{"version":1,"default":{"weight":{"kind":"mxint","bits":12,'
+     '"exp_bits":4,"block":16},"act":"mx8","algo":"rtn",'
+     '"lowrank":null},"overrides":[]}'),
+    ("override-mixed-act",
+     '{"version":1,"default":{"weight":{"kind":"mxint","bits":4,'
+     '"exp_bits":4,"block":16},"act":"mx8","algo":"rtn","lowrank":null},'
+     '"overrides":[{"match":"layers.*.fc1","spec":{"weight":'
+     '{"kind":"mxint","bits":4,"exp_bits":4,"block":16},"act":"int8",'
+     '"algo":"rtn","lowrank":null}}]}'),
+    ("missing-default",
+     '{"version":1,"overrides":[]}'),
+    ("int-algo-on-mxint-weight",
+     '{"version":1,"default":{"weight":{"kind":"mxint","bits":4,'
+     '"exp_bits":4,"block":16},"act":"none","algo":"gptq",'
+     '"lowrank":null},"overrides":[]}'),
+]
+
+
+def build_golden() -> dict:
+    """The cross-language fixture checked in at
+    rust/tests/fixtures/quantspec_golden.json."""
+    shapes = layer_shapes(**GOLDEN_DIMS)
+    cases = []
+    named = [(name, from_method_name(name), True) for name in GOLDEN_CASES]
+    named.append(("het-ffn-rank", heterogeneous_example(), False))
+    for name, plan, is_method in named:
+        cases.append({
+            "name": name,
+            "method": is_method,
+            "canonical": plan.to_json(),
+            "model_avg_bits": plan.model_avg_bits(shapes),
+            "layer_bits": {key: plan.resolve(key).avg_bits(m, n)
+                           for key, (m, n) in shapes.items()},
+        })
+    methods = {name: from_method_name(name).to_json()
+               for name in sorted(METHODS)}
+    return {
+        "dims": GOLDEN_DIMS,
+        "cases": cases,
+        "methods": methods,
+        "rejects": [{"name": n, "json": j} for n, j in GOLDEN_REJECTS],
+    }
+
+
+def check_golden(path: str) -> int:
+    """Validate a golden fixture against this implementation (the
+    tier-1 ``plan-check`` step).  Returns a process exit code."""
+    with open(path) as fh:
+        fixture = json.load(fh)
+    dims = fixture["dims"]
+    shapes = layer_shapes(d=dims["d"], ffn=dims["ffn"],
+                          layers=dims["layers"])
+    errors = []
+    for case in fixture["cases"]:
+        name = case["name"]
+        try:
+            plan = QuantSpec.from_json(case["canonical"])
+        except SpecError as e:
+            errors.append(f"{name}: failed to parse: {e}")
+            continue
+        if plan.to_json() != case["canonical"]:
+            errors.append(f"{name}: canonical serialization drifted")
+        if case["method"]:
+            if from_method_name(name) != plan:
+                errors.append(f"{name}: method-name shim disagrees")
+        got = plan.model_avg_bits(shapes)
+        if abs(got - case["model_avg_bits"]) > 1e-9:
+            errors.append(f"{name}: model_avg_bits {got} != "
+                          f"{case['model_avg_bits']}")
+        for key, want in case["layer_bits"].items():
+            m, n = shapes[key]
+            got = plan.resolve(key).avg_bits(m, n)
+            if abs(got - want) > 1e-9:
+                errors.append(f"{name}/{key}: layer bits {got} != {want}")
+    for name, canonical in fixture["methods"].items():
+        try:
+            if from_method_name(name).to_json() != canonical:
+                errors.append(f"methods/{name}: shim serialization drifted")
+        except SpecError as e:
+            errors.append(f"methods/{name}: {e}")
+    for rej in fixture["rejects"]:
+        try:
+            QuantSpec.from_json(rej["json"])
+            errors.append(f"rejects/{rej['name']}: parsed but must fail")
+        except SpecError:
+            pass
+    if errors:
+        for e in errors:
+            print(f"[plan-check] FAIL {e}", file=sys.stderr)
+        return 1
+    print(f"[plan-check] ok: {len(fixture['cases'])} plans, "
+          f"{len(fixture['methods'])} methods, "
+          f"{len(fixture['rejects'])} rejects")
+    return 0
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) >= 2 and argv[0] == "check":
+        return check_golden(argv[1])
+    if len(argv) >= 2 and argv[0] == "emit-golden":
+        with open(argv[1], "w") as fh:
+            json.dump(build_golden(), fh, indent=1)
+            fh.write("\n")
+        print(f"wrote {argv[1]}")
+        return 0
+    print("usage: spec.py check <fixture.json> | emit-golden <out.json>",
+          file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

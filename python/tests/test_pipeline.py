@@ -88,6 +88,58 @@ def test_graph_tags_stable(quant_setup):
     assert gv0.tag == "act-none_k0"
 
 
+def test_heterogeneous_plan_end_to_end(quant_setup):
+    """Acceptance plan: k=32 on FFN linears, k=8 elsewhere, INT4 on the
+    output projection, MXINT4 default — through quantize_model."""
+    from compile.quant import spec as qspec
+    cfg, params, stats = quant_setup
+    plan = qspec.heterogeneous_example()
+    qp, meta = pipeline.quantize_model(params, cfg, plan, stats)
+    gv = pipeline.graph_variant_for(plan, meta["rank_pad"])
+    assert meta["rank_pad"] == 32 and gv.tag == "act-mx8_k32"
+    lin_ffn = qp["layers"][0]["fc1"]
+    lin_att = qp["layers"][0]["wq"]
+    # One padded graph rank for every layer...
+    assert lin_ffn["a"].shape == (cfg.d, 32)
+    assert lin_att["a"].shape == (cfg.d, 32)
+    # ...but the k=8 layers only carry 8 live factor columns.
+    assert np.abs(lin_att["a"][:, 8:]).max() == 0
+    assert np.abs(lin_ffn["a"][:, 8:32]).max() > 0
+    # Mixed precision: plan-derived bits differ per layer and match the
+    # schema's own accounting (the rust side asserts the same numbers).
+    pb = meta["plan_bits"]
+    assert pb["layers.0.fc1"] > pb["layers.0.wq"]
+    m, n = cfg.d, cfg.ffn
+    assert pb["layers.0.fc1"] == pytest.approx(
+        plan.resolve("layers.0.fc1").avg_bits(m, n), abs=1e-12)
+    # The resolved plan is embedded in the meta and round-trips.
+    back = qspec.QuantSpec.from_json_dict(meta["plan"])
+    assert back == plan
+    assert meta["plan_avg_bits"] == pytest.approx(
+        plan.model_avg_bits(qspec.layer_shapes(cfg.d, cfg.ffn, cfg.layers)))
+    # The INT4 override actually changed the grid on wo: its effective
+    # weight equals the INT4-g128 quantization of the original weight,
+    # not the MXINT4 one the default would have produced.
+    from compile.quant.spec import IntGroup, Mxint
+    w_orig = np.asarray(params["layers"][0]["wo"]["w"], np.float32)
+    w_int4 = pipeline.weight_quant_fn(IntGroup(4, 128))(w_orig)
+    w_mx4 = pipeline.weight_quant_fn(Mxint(4))(w_orig)
+    w_got = np.asarray(qp["layers"][0]["wo"]["w"])
+    np.testing.assert_array_equal(w_got, w_int4)
+    assert not np.array_equal(w_got, w_mx4)
+    assert pb["layers.0.wo"] != pb["layers.0.wq"]
+    # meta keeps the legacy single-spec view of the *default*.
+    assert meta["spec"]["weight"] == ["mxint", 4]
+
+
+def test_method_name_string_still_accepted(quant_setup):
+    """Legacy compatibility shim: a bare method-name string quantizes."""
+    cfg, params, stats = quant_setup
+    _, meta = pipeline.quantize_model(params, cfg, "mxint-w4a8", stats)
+    assert meta["avg_w_bits"] == pytest.approx(4.25)
+    assert meta["plan"]["default"]["weight"]["kind"] == "mxint"
+
+
 def test_opt_cost_recorded(quant_setup):
     cfg, params, stats = quant_setup
     _, meta = pipeline.quantize_model(

@@ -1,0 +1,147 @@
+"""QuantSpec schema: round-tripping, overrides, rejection, golden fixture.
+
+Runs without PJRT or artifacts (quant/spec.py is pure standard library).
+"""
+
+import dataclasses
+import json
+import os
+
+import pytest
+
+from compile.quant import spec
+from compile.quant.spec import (Fp16, IntGroup, LayerSpec, LowRank, Mxint,
+                                Override, QuantSpec, SpecError)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "..", "..", "rust",
+                       "tests", "fixtures", "quantspec_golden.json")
+
+
+def test_every_method_roundtrips():
+    for name, plan in spec.METHODS.items():
+        back = QuantSpec.from_json(plan.to_json())
+        assert back == plan, name
+        assert spec.from_method_name(name) == plan
+
+
+def test_sweep_names_resolve():
+    p = spec.from_method_name("lqer-w2a8-k8")
+    assert p.default.lowrank == LowRank(8, scaled=False)
+    p = spec.from_method_name("l2qer-w2a8-k128")
+    assert p.default.lowrank == LowRank(128, scaled=True)
+    with pytest.raises(SpecError):
+        spec.from_method_name("nope")
+    # k=0 is not a valid rank (the rust shim rejects it identically).
+    with pytest.raises(SpecError):
+        spec.from_method_name("l2qer-w2a8-k0")
+
+
+def test_validate_rejects_zero_rank():
+    plan = QuantSpec(default=LayerSpec(weight=Mxint(4), act="mx8",
+                                       algo="rtn", lowrank=LowRank(0)))
+    with pytest.raises(SpecError, match="lowrank.k"):
+        plan.validate()
+
+
+def test_integral_floats_accepted_like_rust():
+    """The rust parser's JSON numbers are all f64, so 4.0 parses as 4
+    there; the python parser mirrors that."""
+    d = spec.METHODS["l2qer-w4a8"].to_json_dict()
+    d["default"]["weight"]["bits"] = 4.0
+    d["default"]["lowrank"]["k"] = 16.0
+    assert QuantSpec.from_json_dict(d) == spec.METHODS["l2qer-w4a8"]
+
+
+def test_override_resolution_first_match_wins():
+    plan = spec.heterogeneous_example()
+    assert plan.resolve("layers.0.fc1").lowrank.k == 32
+    assert plan.resolve("layers.7.fc2").lowrank.k == 32
+    assert plan.resolve("layers.0.wq").lowrank.k == 8
+    assert isinstance(plan.resolve("layers.0.wo").weight, IntGroup)
+    assert plan.max_rank() == 32
+    back = QuantSpec.from_json(plan.to_json())
+    assert back == plan
+
+
+def test_glob_match():
+    assert spec.glob_match("layers.*.fc1", "layers.12.fc1")
+    assert not spec.glob_match("layers.*.fc1", "layers.1.fc2")
+    assert spec.glob_match("*", "anything")
+    assert spec.glob_match("a*b*c", "axxbyyc")
+    assert not spec.glob_match("a*b*c", "axxbyy")
+    assert spec.glob_match("ab**", "ab")
+    assert not spec.glob_match("layers.0.wq", "layers.0.wqx")
+
+
+def test_rejects_unknown_fields_with_paths():
+    plan = spec.METHODS["l2qer-w4a8"].to_json_dict()
+    plan["default"]["weight"]["zero_point"] = True
+    with pytest.raises(SpecError, match=r"plan\.default\.weight.*zero_point"):
+        QuantSpec.from_json_dict(plan)
+
+
+def test_rejects_mixed_act():
+    base = spec.METHODS["l2qer-w4a8"].default
+    other = dataclasses.replace(base, act="int8")
+    plan = QuantSpec(default=base,
+                     overrides=(Override("layers.*.fc1", other),))
+    with pytest.raises(SpecError, match="uniform"):
+        plan.validate()
+
+
+def test_rejects_non_ascii_pattern():
+    base = spec.METHODS["l2qer-w4a8"].default
+    plan = QuantSpec(default=base,
+                     overrides=(Override("läyers.*", base),))
+    with pytest.raises(SpecError, match="printable ASCII"):
+        plan.validate()
+
+
+def test_rejects_int_algo_on_mxint():
+    with pytest.raises(SpecError, match="int weight format"):
+        QuantSpec(default=LayerSpec(weight=Mxint(4), act="none",
+                                    algo="gptq")).validate()
+
+
+def test_legacy_dict_coercion():
+    legacy = dict(weight=("mxint", 4), act="mx8", algo="rtn",
+                  lowrank={"k": 16, "scaled": True})
+    assert QuantSpec.coerce(legacy) == spec.METHODS["l2qer-w4a8"]
+    legacy_fp = dict(weight=("fp",), act="none", algo="none", lowrank=None)
+    assert QuantSpec.coerce(legacy_fp) == spec.METHODS["fp16"]
+    assert QuantSpec.coerce("l2qer-w4a8") == spec.METHODS["l2qer-w4a8"]
+    # lowrank "bits": None is the fp32-factor ablation, not the default.
+    legacy_lrfp = dict(weight=("mxint", 2), act="mx8", algo="rtn",
+                       lowrank={"k": 64, "scaled": True, "bits": None})
+    assert QuantSpec.coerce(legacy_lrfp) == spec.METHODS["l2qer-w2a8-lrfp"]
+
+
+def test_legacy_dict_view_roundtrips():
+    for name, plan in spec.METHODS.items():
+        assert QuantSpec.coerce(plan.default.to_legacy_dict()) == plan, name
+
+
+def test_avg_bits_formulas():
+    assert Fp16().avg_bits() == 16.0
+    assert Mxint(4).avg_bits() == 4.25
+    assert IntGroup(4, 128).avg_bits() == 4.125
+    ls = spec.METHODS["l2qer-w4a8"].default
+    want = spec.lqer_avg_bits(256, 256, 16, 4.25, 8.25)
+    assert ls.avg_bits(256, 256) == pytest.approx(want, abs=1e-12)
+    # fp32 factors cost 32 bits each.
+    lrfp = spec.METHODS["l2qer-w2a8-lrfp"].default
+    assert lrfp.lowrank.avg_bits() == 32.0
+
+
+def test_checked_in_fixture_validates():
+    assert os.path.exists(FIXTURE), "golden fixture missing"
+    assert spec.check_golden(FIXTURE) == 0
+
+
+def test_checked_in_fixture_is_current():
+    """The fixture must be regenerated whenever the schema changes."""
+    with open(FIXTURE) as fh:
+        on_disk = json.load(fh)
+    assert on_disk == spec.build_golden(), (
+        "fixture stale — rerun: python3 python/compile/quant/spec.py "
+        "emit-golden rust/tests/fixtures/quantspec_golden.json")

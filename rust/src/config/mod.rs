@@ -1,10 +1,34 @@
 //! Typed views over the artifact manifest (`artifacts/manifest.json`) and
 //! per-run metadata — the contract between the python AOT path and the
 //! rust runtime.
+//!
+//! Every run carries a typed [`QuantSpec`] plan (parsed from the
+//! manifest's `plan` object when present, else resolved from the legacy
+//! method-name string via the compatibility shim), so downstream modules
+//! consume structured per-layer quantization specs instead of re-parsing
+//! strings.  Parsing is *strict*: malformed fields fail at load time
+//! with a path-qualified error (`manifest.json: runs[3].plan...`)
+//! instead of silently defaulting and panicking at a later index.
 
 use std::path::{Path, PathBuf};
 
+use anyhow::{anyhow, Result};
+
+use crate::quant::spec::QuantSpec;
 use crate::util::json::{self, Value};
+
+/// Path-qualifying context for manifest errors: the vendored `anyhow`
+/// only implements `Context` for std errors, so qualify `anyhow::Result`
+/// values through `Error::context` directly.
+trait PathCtx<T> {
+    fn path_ctx(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T> PathCtx<T> for Result<T> {
+    fn path_ctx(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
 
 /// Architecture of one trained model.
 #[derive(Debug, Clone, PartialEq)]
@@ -19,12 +43,14 @@ pub struct ModelInfo {
     pub n_params: usize,
 }
 
-/// One PTQ run: a (model, method) pair with its weights + metadata.
+/// One PTQ run: a (model, method) pair with its weights + metadata and
+/// the typed quantization plan that produced it.
 #[derive(Debug, Clone)]
 pub struct RunInfo {
     pub model: String,
     pub method: String,
     pub graph: String, // graph-variant tag, e.g. "act-mx8_k16"
+    pub plan: QuantSpec,
     pub weights: PathBuf,
     pub meta: PathBuf,
 }
@@ -60,28 +86,62 @@ pub struct Manifest {
     pub fig3_ranks: Vec<usize>,
 }
 
-fn as_usize_list(v: &Value) -> Vec<usize> {
+/// Strict array-of-usize accessor: a malformed manifest fails here with
+/// the offending path, not as a later index panic.
+fn usize_list(v: &Value, path: &str) -> Result<Vec<usize>> {
+    let arr = v
+        .as_array()
+        .ok_or_else(|| anyhow!("{path}: expected an array"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, x)| {
+            x.as_usize().ok_or_else(|| {
+                anyhow!("{path}[{i}]: expected a non-negative integer")
+            })
+        })
+        .collect()
+}
+
+fn usize_pair(v: &Value, path: &str) -> Result<(usize, usize)> {
+    let l = usize_list(v, path)?;
+    anyhow::ensure!(l.len() == 2, "{path}: expected exactly 2 entries");
+    Ok((l[0], l[1]))
+}
+
+fn obj_entries<'a>(
+    v: &'a Value,
+    path: &str,
+) -> Result<&'a [(String, Value)]> {
+    v.as_object()
+        .ok_or_else(|| anyhow!("{path}: expected an object"))
+}
+
+fn arr_entries<'a>(v: &'a Value, path: &str) -> Result<&'a [Value]> {
     v.as_array()
-        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
-        .unwrap_or_default()
+        .ok_or_else(|| anyhow!("{path}: expected an array"))
 }
 
 impl Manifest {
-    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Manifest> {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
         let path = artifacts_dir.join("manifest.json");
         let v = json::parse_file(&path)?;
+        Self::from_value(&v, artifacts_dir)
+            .path_ctx(|| format!("{}", path.display()))
+    }
 
+    fn from_value(v: &Value, artifacts_dir: &Path) -> Result<Manifest> {
         let mut models = Vec::new();
-        for (name, m) in v.req("models")?.as_object().unwrap_or(&[]) {
+        for (name, m) in obj_entries(v.req("models")?, "models")? {
+            let ctx = || format!("models.{name}");
             models.push(ModelInfo {
                 name: name.clone(),
-                vocab: m.usize_at("vocab")?,
-                d: m.usize_at("d")?,
-                layers: m.usize_at("layers")?,
-                heads: m.usize_at("heads")?,
-                ffn: m.usize_at("ffn")?,
-                t_max: m.usize_at("t_max")?,
-                n_params: m.usize_at("n_params")?,
+                vocab: m.usize_at("vocab").path_ctx(ctx)?,
+                d: m.usize_at("d").path_ctx(ctx)?,
+                layers: m.usize_at("layers").path_ctx(ctx)?,
+                heads: m.usize_at("heads").path_ctx(ctx)?,
+                ffn: m.usize_at("ffn").path_ctx(ctx)?,
+                t_max: m.usize_at("t_max").path_ctx(ctx)?,
+                n_params: m.usize_at("n_params").path_ctx(ctx)?,
             });
         }
 
@@ -95,52 +155,78 @@ impl Manifest {
         };
 
         let mut runs = Vec::new();
-        for r in v.req("runs")?.as_array().unwrap_or(&[]) {
+        for (i, r) in arr_entries(v.req("runs")?, "runs")?.iter().enumerate() {
+            let ctx = || format!("runs[{i}]");
+            let method = r.str_at("method").path_ctx(ctx)?;
+            // Typed plan: prefer the embedded plan object; legacy
+            // manifests fall back to the method-name shim.
+            let plan = match r.get("plan") {
+                Some(p) => QuantSpec::parse(p, &format!("runs[{i}].plan"))?,
+                None => QuantSpec::from_method_name(&method).map_err(|e| {
+                    anyhow!(
+                        "runs[{i}]: no plan and the method name is not a \
+                         known legacy method: {e}"
+                    )
+                })?,
+            };
             runs.push(RunInfo {
-                model: r.str_at("model")?,
-                method: r.str_at("method")?,
-                graph: r.str_at("graph")?,
-                weights: fix_path(&r.str_at("weights")?),
-                meta: fix_path(&r.str_at("meta")?),
+                model: r.str_at("model").path_ctx(ctx)?,
+                method,
+                graph: r.str_at("graph").path_ctx(ctx)?,
+                plan,
+                weights: fix_path(&r.str_at("weights").path_ctx(ctx)?),
+                meta: fix_path(&r.str_at("meta").path_ctx(ctx)?),
             });
         }
 
         let mut graphs = Vec::new();
-        for g in v.req("graphs")?.as_array().unwrap_or(&[]) {
+        for (i, g) in
+            arr_entries(v.req("graphs")?, "graphs")?.iter().enumerate()
+        {
+            let ctx = || format!("graphs[{i}]");
             graphs.push(GraphInfo {
-                model: g.str_at("model")?,
-                graph: g.str_at("graph")?,
-                entry: g.str_at("entry")?,
-                b: g.usize_at("b")?,
-                t: g.usize_at("t")?,
-                path: fix_path(&g.str_at("path")?),
+                model: g.str_at("model").path_ctx(ctx)?,
+                graph: g.str_at("graph").path_ctx(ctx)?,
+                entry: g.str_at("entry").path_ctx(ctx)?,
+                b: g.usize_at("b").path_ctx(ctx)?,
+                t: g.usize_at("t").path_ctx(ctx)?,
+                path: fix_path(&g.str_at("path").path_ctx(ctx)?),
             });
         }
 
         let sv = v.req("serve")?;
+        let mut methods = Vec::new();
+        for (i, x) in
+            arr_entries(sv.req("methods")?, "serve.methods")?.iter().enumerate()
+        {
+            methods.push(
+                x.as_str()
+                    .ok_or_else(|| {
+                        anyhow!("serve.methods[{i}]: expected a string")
+                    })?
+                    .to_string(),
+            );
+        }
         let serve = ServeInfo {
-            model: sv.str_at("model")?,
-            methods: sv
-                .req("methods")?
-                .as_array()
-                .unwrap_or(&[])
-                .iter()
-                .filter_map(|x| x.as_str().map(str::to_string))
-                .collect(),
-            decode_batches: as_usize_list(sv.req("decode_batches")?),
-            prefill_shapes: sv
-                .req("prefill_shapes")?
-                .as_array()
-                .unwrap_or(&[])
-                .iter()
-                .map(|p| {
-                    let l = as_usize_list(p);
-                    (l[0], l[1])
-                })
-                .collect(),
+            model: sv.str_at("model").path_ctx(|| "serve".to_string())?,
+            methods,
+            decode_batches: usize_list(
+                sv.req("decode_batches").path_ctx(|| "serve".to_string())?,
+                "serve.decode_batches",
+            )?,
+            prefill_shapes: arr_entries(
+                sv.req("prefill_shapes").path_ctx(|| "serve".to_string())?,
+                "serve.prefill_shapes",
+            )?
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                usize_pair(p, &format!("serve.prefill_shapes[{i}]"))
+            })
+            .collect::<Result<Vec<_>>>()?,
         };
 
-        let ss = as_usize_list(v.req("score_shape")?);
+        let score_shape = usize_pair(v.req("score_shape")?, "score_shape")?;
         let fig3 = v.req("fig3")?;
         Ok(Manifest {
             dir: artifacts_dir.to_path_buf(),
@@ -148,25 +234,25 @@ impl Manifest {
             runs,
             graphs,
             serve,
-            score_shape: (ss[0], ss[1]),
-            fig3_model: fig3.str_at("model")?,
-            fig3_ranks: as_usize_list(fig3.req("ranks")?),
+            score_shape,
+            fig3_model: fig3.str_at("model").path_ctx(|| "fig3".to_string())?,
+            fig3_ranks: usize_list(fig3.req("ranks")?, "fig3.ranks")?,
         })
     }
 
-    pub fn model(&self, name: &str) -> anyhow::Result<&ModelInfo> {
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
         self.models
             .iter()
             .find(|m| m.name == name)
-            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))
+            .ok_or_else(|| anyhow!("unknown model '{name}'"))
     }
 
-    pub fn run(&self, model: &str, method: &str) -> anyhow::Result<&RunInfo> {
+    pub fn run(&self, model: &str, method: &str) -> Result<&RunInfo> {
         self.runs
             .iter()
             .find(|r| r.model == model && r.method == method)
             .ok_or_else(|| {
-                anyhow::anyhow!("no run for model={model} method={method}")
+                anyhow!("no run for model={model} method={method}")
             })
     }
 
@@ -177,7 +263,7 @@ impl Manifest {
         entry: &str,
         b: usize,
         t: usize,
-    ) -> anyhow::Result<&GraphInfo> {
+    ) -> Result<&GraphInfo> {
         self.graphs
             .iter()
             .find(|g| {
@@ -188,7 +274,7 @@ impl Manifest {
                     && (entry == "decode" || g.t == t)
             })
             .ok_or_else(|| {
-                anyhow::anyhow!(
+                anyhow!(
                     "no graph model={model} tag={graph} entry={entry} b={b} t={t}"
                 )
             })
@@ -207,7 +293,7 @@ impl Manifest {
     }
 
     /// Per-run metadata (avg bits, approximation errors, opt seconds).
-    pub fn run_meta(&self, run: &RunInfo) -> anyhow::Result<Value> {
+    pub fn run_meta(&self, run: &RunInfo) -> Result<Value> {
         json::parse_file(&run.meta)
     }
 }
@@ -216,35 +302,117 @@ impl Manifest {
 mod tests {
     use super::*;
 
+    const MINIMAL: &str = r#"{
+      "models": {"opt-x": {"vocab": 440, "d": 64, "layers": 2,
+                           "heads": 2, "ffn": 256, "t_max": 160,
+                           "n_params": 1000, "name": "opt-x"}},
+      "runs": [{"model": "opt-x", "method": "fp16",
+                "graph": "act-none_k0", "weights": "runs/w.bin",
+                "meta": "runs/meta.json"}],
+      "graphs": [{"model": "opt-x", "graph": "act-none_k0",
+                  "entry": "score", "b": 4, "t": 96,
+                  "path": "hlo/x.hlo.txt"}],
+      "serve": {"model": "opt-x", "methods": ["fp16"],
+                "decode_batches": [1, 4],
+                "prefill_shapes": [[1, 16]]},
+      "score_shape": [4, 96],
+      "fig3": {"model": "opt-x", "ranks": [1, 2]}
+    }"#;
+
+    fn write_manifest(tag: &str, body: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lqer_cfg_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+        dir
+    }
+
     #[test]
     fn parses_minimal_manifest() {
-        let dir = std::env::temp_dir().join("lqer_cfg_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let manifest = r#"{
-          "models": {"opt-x": {"vocab": 440, "d": 64, "layers": 2,
-                               "heads": 2, "ffn": 256, "t_max": 160,
-                               "n_params": 1000, "name": "opt-x"}},
-          "runs": [{"model": "opt-x", "method": "fp16",
-                    "graph": "act-none_k0", "weights": "runs/w.bin",
-                    "meta": "runs/meta.json"}],
-          "graphs": [{"model": "opt-x", "graph": "act-none_k0",
-                      "entry": "score", "b": 4, "t": 96,
-                      "path": "hlo/x.hlo.txt"}],
-          "serve": {"model": "opt-x", "methods": ["fp16"],
-                    "decode_batches": [1, 4],
-                    "prefill_shapes": [[1, 16]]},
-          "score_shape": [4, 96],
-          "fig3": {"model": "opt-x", "ranks": [1, 2]}
-        }"#;
-        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let dir = write_manifest("minimal", MINIMAL);
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.model("opt-x").unwrap().d, 64);
         assert!(m.model("nope").is_err());
         let r = m.run("opt-x", "fp16").unwrap();
         assert!(r.weights.ends_with("runs/w.bin"));
+        // Legacy run without an embedded plan resolves via the shim.
+        assert_eq!(r.plan, QuantSpec::from_method_name("fp16").unwrap());
         assert!(m.graph("opt-x", "act-none_k0", "score", 4, 96).is_ok());
         assert!(m.graph("opt-x", "act-none_k0", "score", 8, 96).is_err());
         assert_eq!(m.serve.decode_batches, vec![1, 4]);
         assert_eq!(m.fig3_ranks, vec![1, 2]);
+    }
+
+    #[test]
+    fn parses_embedded_plan() {
+        let body = MINIMAL.replace(
+            "\"meta\": \"runs/meta.json\"",
+            "\"meta\": \"runs/meta.json\",
+             \"plan\": {\"version\": 1, \"default\": {
+                \"weight\": {\"kind\": \"mxint\", \"bits\": 4,
+                             \"exp_bits\": 4, \"block\": 16},
+                \"act\": \"mx8\", \"algo\": \"rtn\",
+                \"lowrank\": {\"k\": 16, \"scaled\": true, \"bits\": 8}},
+              \"overrides\": []}",
+        );
+        let dir = write_manifest("plan", &body);
+        let m = Manifest::load(&dir).unwrap();
+        let r = m.run("opt-x", "fp16").unwrap();
+        assert_eq!(r.plan,
+                   QuantSpec::from_method_name("l2qer-w4a8").unwrap());
+    }
+
+    #[test]
+    fn unknown_method_without_plan_is_an_error() {
+        let body = MINIMAL.replace("\"method\": \"fp16\"",
+                                   "\"method\": \"mystery-w4\"");
+        let dir = write_manifest("nomethod", &body);
+        let err = Manifest::load(&dir).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("runs[0]") && msg.contains("mystery-w4"),
+                "{msg}");
+    }
+
+    #[test]
+    fn malformed_arrays_fail_with_path() {
+        // decode_batches with a non-integer entry.
+        let body = MINIMAL.replace("\"decode_batches\": [1, 4]",
+                                   "\"decode_batches\": [1, \"four\"]");
+        let dir = write_manifest("badlist", &body);
+        let msg = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(msg.contains("serve.decode_batches[1]"), "{msg}");
+
+        // prefill shape with the wrong arity.
+        let body = MINIMAL.replace("\"prefill_shapes\": [[1, 16]]",
+                                   "\"prefill_shapes\": [[1]]");
+        let dir = write_manifest("badshape", &body);
+        let msg = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(msg.contains("serve.prefill_shapes[0]"), "{msg}");
+
+        // fig3.ranks not an array at all.
+        let body = MINIMAL.replace("\"ranks\": [1, 2]", "\"ranks\": 2");
+        let dir = write_manifest("badranks", &body);
+        let msg = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(msg.contains("fig3.ranks"), "{msg}");
+
+        // models not an object (checked before anything else).
+        let dir = write_manifest("badmodels", r#"{"models": []}"#);
+        let msg = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(msg.contains("models"), "{msg}");
+    }
+
+    #[test]
+    fn malformed_plan_fails_with_path() {
+        let body = MINIMAL.replace(
+            "\"meta\": \"runs/meta.json\"",
+            "\"meta\": \"runs/meta.json\",
+             \"plan\": {\"version\": 1, \"default\": {
+                \"weight\": {\"kind\": \"warp\"},
+                \"act\": \"mx8\", \"algo\": \"rtn\", \"lowrank\": null},
+              \"overrides\": []}",
+        );
+        let dir = write_manifest("badplan", &body);
+        let msg = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(msg.contains("runs[0].plan.default.weight"), "{msg}");
+        assert!(msg.contains("warp"), "{msg}");
     }
 }

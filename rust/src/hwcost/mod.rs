@@ -52,6 +52,8 @@ pub const MATMUL3_DUTY: f64 = 0.6;
 
 pub const LANES: usize = 16; // matched throughput: 16 MACs/cycle
 
+use crate::quant::spec::{Algo, LayerSpec, QuantSpec, WeightFormat};
+
 /// Per-method "other" share (control/FIFO/AXI), from Tables 7-9.
 fn other_frac(method: &str) -> f64 {
     if method.starts_with("llmint4") {
@@ -67,6 +69,21 @@ fn other_frac(method: &str) -> f64 {
     }
 }
 
+/// Plan-derived "other" share: the same three buckets, discriminated by
+/// what the PE actually contains instead of by method-name prefix.
+fn other_frac_for(ls: &LayerSpec) -> f64 {
+    if ls.algo == Algo::Llmint4 {
+        0.103
+    } else if ls.act.bits() == 16
+        && ls.lowrank.is_none()
+        && !matches!(ls.weight, WeightFormat::Fp16)
+    {
+        0.130 // w-only runtime-dequant engine
+    } else {
+        0.264
+    }
+}
+
 /// A processing engine area report.
 #[derive(Debug, Clone)]
 pub struct PeArea {
@@ -77,8 +94,16 @@ pub struct PeArea {
 
 impl PeArea {
     fn build(method: &str, comps: Vec<(&str, f64)>) -> PeArea {
+        PeArea::build_frac(method, other_frac(method), comps)
+    }
+
+    fn build_frac(
+        method: &str,
+        frac: f64,
+        comps: Vec<(&str, f64)>,
+    ) -> PeArea {
         let subtotal: f64 = comps.iter().map(|(_, v)| v).sum();
-        let other = subtotal * other_frac(method) / (1.0 - other_frac(method));
+        let other = subtotal * frac / (1.0 - frac);
         let mut components: Vec<(String, f64)> = comps
             .into_iter()
             .map(|(k, v)| (k.to_string(), v))
@@ -179,24 +204,100 @@ pub fn l2qer_pe(method: &str, w_bits: u32, a_bits: u32, mx: bool) -> PeArea {
     )
 }
 
-/// Area for a named experiment method (Table 3 rows).
-pub fn area_for_method(method: &str) -> Option<PeArea> {
-    Some(match method {
-        "fp16" => fp16_pe(),
-        "gptq-w4" | "awq-w4" | "rtn-w4" | "awq-w2" | "clipq-w2" => {
-            dequant_pe(method)
-        }
-        "llmint4" => llmint4_pe(),
-        "smoothquant-w8a8" => int_wa_pe(method, 8, 8),
-        "clipq-w6a6" => int_wa_pe(method, 6, 6),
-        "mxint-w4a8" => mxint_pe(method, 4, 8),
-        "mxint-w3a8" => mxint_pe(method, 3, 8),
-        "lqer-w4a8" | "l2qer-w4a8" => l2qer_pe(method, 4, 8, true),
-        "l2qer-w4a6" => l2qer_pe(method, 4, 6, true),
-        "l2qer-w2a8" => l2qer_pe(method, 2, 8, true),
-        "l2qer-int-w4" | "l2qer-int-w4a8" => l2qer_pe(method, 4, 8, false),
-        _ => return None,
+/// Area for one layer's quantization spec — the processing engine the
+/// plan implies, derived from the typed spec instead of a method-name
+/// match.  This is what the plan-aware paths (`lqer plan`, per-layer
+/// mixed-precision costing) use; [`area_for_method`] is the legacy shim
+/// over it.  Returns `None` for configurations the analytic model has
+/// no primitives for (fp32 low-rank factors, `lowrank.bits: null`).
+pub fn area_for_layer(label: &str, ls: &LayerSpec) -> Option<PeArea> {
+    let frac = other_frac_for(ls);
+    let w_bits = ls.weight.elem_bits();
+    // w-only setups run their skinny GEMMs at the paper's A8 operating
+    // point (Table 3's L2QER-INT w-only row).
+    let a_bits = if ls.act.bits() == 16 { 8 } else { ls.act.bits() };
+    let mx = matches!(ls.weight, WeightFormat::Mxint { .. });
+
+    if ls.algo == Algo::Llmint4 {
+        return Some(PeArea::build_frac(
+            label,
+            frac,
+            vec![
+                ("gemm_l+cast", LLMINT4_GEMM_CAST_LUTS),
+                ("scatter+gather", SCATTER_GATHER_LUTS),
+                ("gemm_h", LLMINT4_GEMM_H_LUTS),
+            ],
+        ));
+    }
+    if let Some(lr) = ls.lowrank {
+        // Three parallel GEMM blocks (paper Table 9), MXINT or INT; the
+        // factor GEMMs run at the plan's b_h (fp32 factors have no
+        // integer-MAC model).
+        let h_bits = lr.bits?;
+        let exp = if mx { MX_EXP_ALIGN_LUTS } else { 0.0 };
+        let actq = if mx { MX_ACT_QUANT_LUTS } else { INT_ACT_RESCALE_LUTS };
+        let m1 = LANES as f64 * int_mac_luts(w_bits, a_bits) + exp;
+        let m2 = LANES as f64 * int_mac_luts(h_bits, a_bits) + exp + actq;
+        let m3 = LANES as f64 * int_mac_luts(h_bits, h_bits) * MATMUL3_DUTY;
+        return Some(PeArea::build_frac(
+            label,
+            frac,
+            vec![("matmul2", m2), ("matmul1", m1), ("matmul3", m3)],
+        ));
+    }
+    Some(match ls.weight {
+        WeightFormat::Fp16 => PeArea::build_frac(
+            label,
+            frac,
+            vec![("fp16_gemm", LANES as f64 * FP16_MAC_LUTS)],
+        ),
+        _ if ls.act.bits() == 16 => PeArea::build_frac(
+            label,
+            frac,
+            vec![
+                ("dequantize", LANES as f64 * DEQUANT_LANE_LUTS),
+                ("fp16_gemm", LANES as f64 * FP16_MAC_LUTS),
+            ],
+        ),
+        WeightFormat::Mxint { .. } => PeArea::build_frac(
+            label,
+            frac,
+            vec![
+                (
+                    "mx_gemm",
+                    LANES as f64 * int_mac_luts(w_bits, a_bits)
+                        + MX_EXP_ALIGN_LUTS,
+                ),
+                ("act_quant", MX_ACT_QUANT_LUTS),
+            ],
+        ),
+        WeightFormat::IntGroup { .. } => PeArea::build_frac(
+            label,
+            frac,
+            vec![
+                ("int_gemm", LANES as f64 * int_mac_luts(w_bits, a_bits)),
+                ("act_quant+rescale", INT_ACT_RESCALE_LUTS),
+            ],
+        ),
     })
+}
+
+/// Model-level area: the maximum per-layer PE of a plan (a serving
+/// engine must instantiate the widest datapath any layer needs).
+/// `None` if any layer's configuration is un-modeled.
+pub fn area_for_plan(label: &str, plan: &QuantSpec) -> Option<PeArea> {
+    plan.layer_specs()
+        .map(|ls| area_for_layer(label, ls))
+        .collect::<Option<Vec<_>>>()?
+        .into_iter()
+        .max_by(|a, b| a.total.total_cmp(&b.total))
+}
+
+/// Area for a named experiment method (Table 3 rows) — the legacy
+/// string shim over [`area_for_layer`].
+pub fn area_for_method(method: &str) -> Option<PeArea> {
+    let plan = QuantSpec::from_method_name(method).ok()?;
+    area_for_layer(method, &plan.default)
 }
 
 #[cfg(test)]
@@ -263,6 +364,72 @@ mod tests {
         assert!(int_mac_luts(4, 8) < int_mac_luts(8, 8));
         assert!(int_mac_luts(2, 8) < int_mac_luts(4, 8));
         assert!(int_mac_luts(6, 6) < int_mac_luts(8, 8));
+    }
+
+    #[test]
+    fn plan_derived_area_matches_legacy_builders() {
+        // The typed-spec path must reproduce the method-name builders
+        // exactly for every registry configuration.
+        let legacy: Vec<(&str, PeArea)> = vec![
+            ("fp16", fp16_pe()),
+            ("gptq-w4", dequant_pe("gptq-w4")),
+            ("awq-w4", dequant_pe("awq-w4")),
+            ("rtn-w4", dequant_pe("rtn-w4")),
+            ("awq-w2", dequant_pe("awq-w2")),
+            ("clipq-w2", dequant_pe("clipq-w2")),
+            ("llmint4", llmint4_pe()),
+            ("smoothquant-w8a8", int_wa_pe("smoothquant-w8a8", 8, 8)),
+            ("clipq-w6a6", int_wa_pe("clipq-w6a6", 6, 6)),
+            ("mxint-w4a8", mxint_pe("mxint-w4a8", 4, 8)),
+            ("mxint-w3a8", mxint_pe("mxint-w3a8", 3, 8)),
+            ("lqer-w4a8", l2qer_pe("lqer-w4a8", 4, 8, true)),
+            ("l2qer-w4a8", l2qer_pe("l2qer-w4a8", 4, 8, true)),
+            ("l2qer-w4a6", l2qer_pe("l2qer-w4a6", 4, 6, true)),
+            ("l2qer-w2a8", l2qer_pe("l2qer-w2a8", 2, 8, true)),
+            ("l2qer-int-w4", l2qer_pe("l2qer-int-w4", 4, 8, false)),
+            ("l2qer-int-w4a8", l2qer_pe("l2qer-int-w4a8", 4, 8, false)),
+        ];
+        for (name, want) in legacy {
+            let got = area_for_method(name).unwrap();
+            assert!(
+                (got.total - want.total).abs() < 1e-9,
+                "{name}: plan-derived {} != legacy {}",
+                got.total,
+                want.total
+            );
+            assert_eq!(got.components.len(), want.components.len(), "{name}");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_plan_prices_widest_layer() {
+        // A plan mixing MXINT4 (k=8) with an INT4 override must cost at
+        // least as much as its widest per-layer engine.
+        let mut plan = QuantSpec::from_method_name("l2qer-w4a8").unwrap();
+        let mut int_ls = plan.default;
+        int_ls.weight = WeightFormat::IntGroup { bits: 4, group: 128 };
+        plan.overrides.push(crate::quant::spec::Override {
+            pattern: "layers.*.wo".into(),
+            spec: int_ls,
+        });
+        let whole = area_for_plan("het", &plan).unwrap();
+        let mx_only = area_for_layer("mx", &plan.default).unwrap();
+        let int_only = area_for_layer("int", &int_ls).unwrap();
+        assert!((whole.total - mx_only.total.max(int_only.total)).abs()
+                    < 1e-9);
+        // INT arithmetic without the shared-exponent trick is larger.
+        assert!(int_only.total > mx_only.total);
+    }
+
+    #[test]
+    fn lowrank_factor_bits_change_the_engine() {
+        // The factor GEMMs run at the plan's b_h: 4-bit factors shrink
+        // matmul2/matmul3 vs the default 8-bit engine, and fp32 factors
+        // have no integer-MAC model at all.
+        let b8 = area_for_method("l2qer-w2a8").unwrap();
+        let b4 = area_for_method("l2qer-w2a8-lr4").unwrap();
+        assert!(b4.total < b8.total, "b4 {} !< b8 {}", b4.total, b8.total);
+        assert!(area_for_method("l2qer-w2a8-lrfp").is_none());
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! lqer spectra                        Figure 1a singular-value series
 //! lqer rank-sweep                     Figure 3 perplexity vs rank
 //! lqer area      [--method ...]       circuit-area model (Tables 3/7/8/9)
+//! lqer plan      --model --method     per-layer quantization plan + bits
 //! ```
 
 use anyhow::Result;
@@ -52,11 +53,12 @@ fn run(argv: &[String]) -> Result<()> {
         "spectra" => spectra(rest),
         "rank-sweep" => rank_sweep(rest),
         "area" => area(rest),
+        "plan" => plan_cmd(rest),
         _ => {
             println!(
                 "lqer — LQER (ICML 2024) reproduction CLI\n\n\
                  subcommands: info serve generate serve-bench eval-ppl \
-                 eval-tasks judge spectra rank-sweep area\n\
+                 eval-tasks judge spectra rank-sweep area plan\n\
                  run `lqer <cmd> --help` for options"
             );
             Ok(())
@@ -320,6 +322,90 @@ fn rank_sweep(argv: &[String]) -> Result<()> {
         t.row(row);
     }
     print!("{}", t.render());
+    Ok(())
+}
+
+fn plan_cmd(argv: &[String]) -> Result<()> {
+    let m = manifest()?;
+    let a = Args::new("plan", "inspect a run's quantization plan")
+        .opt("model", &m.serve.model, "model name")
+        .opt("method", "l2qer-w4a8", "PTQ method / run name")
+        .flag("json", "print the canonical plan JSON and exit")
+        .parse(argv)?;
+    let model = a.get("model");
+    let method = a.get("method");
+    let run = m.run(&model, &method)?;
+    if a.get_flag("json") {
+        println!("{}", run.plan.to_canonical_json());
+        return Ok(());
+    }
+    let mi = m.model(&model)?;
+    let shapes = lqer::quant::spec::layer_shapes(mi.d, mi.ffn, mi.layers);
+    let mut t = Table::new(
+        &format!("quantization plan: {model} / {method}"),
+        &["layer", "weight", "act", "algo", "k", "bits/elem", "overhead",
+          "PE LUTs"],
+    );
+    for (name, (mw, nw)) in &shapes {
+        let ls = run.plan.resolve(name);
+        let bits = ls.avg_bits(*mw, *nw);
+        let base = ls.weight.avg_bits();
+        t.row(vec![
+            name.clone(),
+            ls.weight.to_string(),
+            ls.act.as_str().to_string(),
+            ls.algo.as_str().to_string(),
+            ls.lowrank
+                .map(|lr| lr.k.to_string())
+                .unwrap_or_else(|| "-".into()),
+            format!("{bits:.4}"),
+            format!("+{:.1}%", (bits / base - 1.0) * 100.0),
+            hwcost::area_for_layer(&method, ls)
+                .map(|pe| format!("{:.0}", pe.total))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "model avg weight bits: {:.4}  graph: {}  overrides: {}",
+        run.plan.model_avg_bits(&shapes),
+        run.graph,
+        run.plan.overrides.len()
+    );
+    // Cross-check the plan-derived numbers against the python-side meta
+    // (the acceptance contract: both languages derive identical bits
+    // from one plan).
+    match m.run_meta(run) {
+        Ok(meta) => {
+            let pb = meta.get("plan_bits").ok_or_else(|| {
+                anyhow::anyhow!(
+                    "meta {} has no plan_bits (rebuild artifacts)",
+                    run.meta.display()
+                )
+            })?;
+            let mut checked = 0;
+            for (name, (mw, nw)) in &shapes {
+                let want = pb.f64_at(name)?;
+                let got = run.plan.resolve(name).avg_bits(*mw, *nw);
+                anyhow::ensure!(
+                    (got - want).abs() < 1e-9,
+                    "{name}: rust plan bits {got} != python meta {want}"
+                );
+                checked += 1;
+            }
+            let py_avg = meta.f64_at("plan_avg_bits")?;
+            let rs_avg = run.plan.model_avg_bits(&shapes);
+            anyhow::ensure!(
+                (py_avg - rs_avg).abs() < 1e-9,
+                "model avg bits: rust {rs_avg} != python meta {py_avg}"
+            );
+            println!("python meta agreement: OK ({checked} layers)");
+        }
+        Err(_) => println!(
+            "(meta not built — run `make artifacts` for the python \
+             cross-check)"
+        ),
+    }
     Ok(())
 }
 

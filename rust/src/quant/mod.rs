@@ -1,40 +1,25 @@
-//! Bit-exact rust twins of the L1/L2 quantizers, plus memory-footprint
-//! accounting (the "Avg. w bits" column of Table 3).
+//! Bit-exact rust twins of the L1/L2 quantizers, plus the QuantSpec
+//! plan schema and memory-footprint accounting (the "Avg. w bits"
+//! column of Table 3).
 //!
-//! These mirror `python/compile/quant/formats.py` exactly — same
-//! floor(log2) via the f32 bit pattern, same round-half-to-even, same
-//! clamping — and are verified against cross-language golden vectors in
-//! `rust/tests/golden_quant.rs`.
+//! The number-grid modules mirror `python/compile/quant/formats.py`
+//! exactly — same floor(log2) via the f32 bit pattern, same
+//! round-half-to-even, same clamping — and are verified against
+//! cross-language golden vectors in `rust/tests/golden_quant.rs`.
+//! [`spec`] mirrors `python/compile/quant/spec.py` (the typed
+//! quantization-plan contract) and owns the avg-bits formulas as the
+//! single source of truth; the historical free functions below re-export
+//! from it.  The [`spec::Quantizer`] trait unifies the grids behind one
+//! object-safe API.
 
 pub mod f16;
 pub mod intq;
 pub mod mxint;
+pub mod spec;
 
-/// Average bits per element of an MXINT tensor: the shared exponent is
-/// amortized over the block.
-pub fn mxint_avg_bits(elem_bits: u32, exp_bits: u32, block: usize) -> f64 {
-    elem_bits as f64 + exp_bits as f64 / block as f64
-}
-
-/// Average bits per element of group-quantized fixed point with an FP16
-/// scale per group.
-pub fn int_group_avg_bits(bits: u32, group: usize) -> f64 {
-    bits as f64 + 16.0 / group as f64
-}
-
-/// Average weight bits of an LQER layer: W_q plus the rank-k factors
-/// amortized over the m*n nominal weights (paper Appendix D).
-pub fn lqer_avg_bits(
-    m: usize,
-    n: usize,
-    k: usize,
-    w_bits_avg: f64,
-    lowrank_bits_avg: f64,
-) -> f64 {
-    let total =
-        (m * n) as f64 * w_bits_avg + ((m + n) * k) as f64 * lowrank_bits_avg;
-    total / (m * n) as f64
-}
+pub use spec::{
+    int_group_avg_bits, lqer_avg_bits, mxint_avg_bits, QuantSpec, Quantizer,
+};
 
 #[cfg(test)]
 mod tests {

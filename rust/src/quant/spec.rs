@@ -1,0 +1,1090 @@
+//! QuantSpec: the typed, per-layer quantization-plan schema — the rust
+//! mirror of `python/compile/quant/spec.py`, kept bit-for-bit identical
+//! (canonical JSON serialization, validation rules, avg-bits formulas,
+//! override matching) and asserted so by the cross-language golden
+//! fixture `rust/tests/fixtures/quantspec_golden.json`.
+//!
+//! A plan is a model-wide default [`LayerSpec`] plus ordered
+//! per-layer-name overrides:
+//!
+//! ```json
+//! {"version": 1,
+//!  "default": {"weight": {"kind": "mxint", "bits": 4,
+//!                         "exp_bits": 4, "block": 16},
+//!              "act": "mx8", "algo": "rtn",
+//!              "lowrank": {"k": 16, "scaled": true, "bits": 8}},
+//!  "overrides": [{"match": "layers.*.fc1", "spec": {...}}]}
+//! ```
+//!
+//! Override patterns match full layer keys (`layers.3.fc1`) literally
+//! except that `*` matches any run of characters; the first matching
+//! override wins.  `act` must be uniform across a plan (the activation
+//! mode is graph structure — one lowered HLO variant per act mode).
+//!
+//! Legacy method-name strings (`"l2qer-w4a8"`, the fig-3 sweep names
+//! `"lqer-w2a8-k8"`) resolve through [`QuantSpec::from_method_name`],
+//! which mirrors the python `METHODS` registry exactly.
+
+use std::fmt;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::f16::round_via_f16;
+use super::{intq, mxint::MxFormat};
+use crate::util::json::{self, Value};
+
+pub const SCHEMA_VERSION: i64 = 1;
+
+// ---------------------------------------------------------------------------
+// Average-bits accounting — single source of truth for "Avg. w bits"
+// (Table 3), mirrored in python/compile/quant/spec.py.
+// ---------------------------------------------------------------------------
+
+/// Average bits per element of an MXINT tensor: the shared exponent is
+/// amortized over the block.
+pub fn mxint_avg_bits(elem_bits: u32, exp_bits: u32, block: usize) -> f64 {
+    elem_bits as f64 + exp_bits as f64 / block as f64
+}
+
+/// Average bits per element of group-quantized fixed point with an FP16
+/// scale per group.
+pub fn int_group_avg_bits(bits: u32, group: usize) -> f64 {
+    bits as f64 + 16.0 / group as f64
+}
+
+/// Average weight bits of an LQER layer: W_q plus the rank-k factors
+/// amortized over the m*n nominal weights (paper Appendix D).
+pub fn lqer_avg_bits(
+    m: usize,
+    n: usize,
+    k: usize,
+    w_bits_avg: f64,
+    lowrank_bits_avg: f64,
+) -> f64 {
+    let total =
+        (m * n) as f64 * w_bits_avg + ((m + n) * k) as f64 * lowrank_bits_avg;
+    total / (m * n) as f64
+}
+
+// ---------------------------------------------------------------------------
+// The object-safe quantizer API unifying the f16 / intq / mxint modules
+// ---------------------------------------------------------------------------
+
+/// One number format's fake-quantizer: every weight/activation grid in
+/// the repo behind a single object-safe interface.
+pub trait Quantizer {
+    /// Human-readable format label (e.g. `MXINT4[e4/b16]`).
+    fn describe(&self) -> String;
+    /// Average storage bits per element.
+    fn avg_bits(&self) -> f64;
+    /// Fake-quantize a row-major (rows x cols) matrix in place.
+    fn quantize(&self, data: &mut [f32], cols: usize);
+}
+
+/// FP16 baseline weights: stored unquantized (identity grid, 16 bits).
+struct Fp16Identity;
+
+impl Quantizer for Fp16Identity {
+    fn describe(&self) -> String {
+        "FP16".to_string()
+    }
+    fn avg_bits(&self) -> f64 {
+        16.0
+    }
+    fn quantize(&self, _data: &mut [f32], _cols: usize) {}
+}
+
+/// MXINT weights: blocks along the first axis ([block, 1]).
+struct MxintWeight(MxFormat);
+
+impl Quantizer for MxintWeight {
+    fn describe(&self) -> String {
+        format!("MXINT{}[e{}/b{}]", self.0.elem_bits, self.0.exp_bits,
+                self.0.block)
+    }
+    fn avg_bits(&self) -> f64 {
+        self.0.avg_bits()
+    }
+    fn quantize(&self, data: &mut [f32], cols: usize) {
+        self.0.quant_cols(data, cols);
+    }
+}
+
+/// MXINT activations: blocks along the last axis ([1, block]).
+struct MxintAct(MxFormat);
+
+impl Quantizer for MxintAct {
+    fn describe(&self) -> String {
+        format!("MXINT{}[e{}/b{}] act", self.0.elem_bits, self.0.exp_bits,
+                self.0.block)
+    }
+    fn avg_bits(&self) -> f64 {
+        self.0.avg_bits()
+    }
+    fn quantize(&self, data: &mut [f32], cols: usize) {
+        self.0.quant_rows(data, cols);
+    }
+}
+
+/// INT-gG weights: FP16 group scales along the first axis; `group == 0`
+/// is vector-wise (one FP16 scale per input row, LLM.int8 style).
+struct IntGroupWeight {
+    bits: u32,
+    group: usize,
+}
+
+impl Quantizer for IntGroupWeight {
+    fn describe(&self) -> String {
+        if self.group == 0 {
+            format!("INT{} vec", self.bits)
+        } else {
+            format!("INT{} g{}", self.bits, self.group)
+        }
+    }
+    fn avg_bits(&self) -> f64 {
+        int_group_avg_bits(self.bits, if self.group == 0 { 4096 }
+                           else { self.group })
+    }
+    fn quantize(&self, data: &mut [f32], cols: usize) {
+        if self.group == 0 {
+            for row in data.chunks_exact_mut(cols) {
+                intq::int_quant_group_slice(row, self.bits, true);
+            }
+        } else {
+            intq::int_quant_group_cols(data, cols, self.bits, self.group);
+        }
+    }
+}
+
+/// Per-token symmetric INT activations (f32 scale).
+struct IntPerToken {
+    bits: u32,
+}
+
+impl Quantizer for IntPerToken {
+    fn describe(&self) -> String {
+        format!("INT{} per-token", self.bits)
+    }
+    fn avg_bits(&self) -> f64 {
+        self.bits as f64
+    }
+    fn quantize(&self, data: &mut [f32], cols: usize) {
+        intq::int_quant_per_token(data, cols, self.bits);
+    }
+}
+
+/// Full-precision activations: no quantization.
+struct NoopAct;
+
+impl Quantizer for NoopAct {
+    fn describe(&self) -> String {
+        "f32".to_string()
+    }
+    fn avg_bits(&self) -> f64 {
+        32.0
+    }
+    fn quantize(&self, _data: &mut [f32], _cols: usize) {}
+}
+
+/// FP16 rounding quantizer (numpy `astype(f16).astype(f32)`) — exposed
+/// for completeness; the FP16 *weight* grid is identity by convention.
+pub struct F16Round;
+
+impl Quantizer for F16Round {
+    fn describe(&self) -> String {
+        "f16-round".to_string()
+    }
+    fn avg_bits(&self) -> f64 {
+        16.0
+    }
+    fn quantize(&self, data: &mut [f32], _cols: usize) {
+        for x in data.iter_mut() {
+            *x = round_via_f16(*x);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Schema types
+// ---------------------------------------------------------------------------
+
+/// Weight number format of one linear layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightFormat {
+    /// Unquantized FP16 baseline.
+    Fp16,
+    /// Block floating point: `bits`-bit mantissas sharing an
+    /// `exp_bits`-bit exponent per `block` input features.
+    Mxint { bits: u32, exp_bits: u32, block: usize },
+    /// Fixed point with an FP16 scale per `group` input features;
+    /// `group == 0` is vector-wise (LLM.int8 style).
+    IntGroup { bits: u32, group: usize },
+}
+
+impl WeightFormat {
+    pub fn avg_bits(&self) -> f64 {
+        match *self {
+            WeightFormat::Fp16 => 16.0,
+            WeightFormat::Mxint { bits, exp_bits, block } => {
+                mxint_avg_bits(bits, exp_bits, block)
+            }
+            // Vector-wise scales amortize over the whole row; 4096 is
+            // the legacy accounting stand-in for "a full LLM row".
+            WeightFormat::IntGroup { bits, group } => {
+                int_group_avg_bits(bits, if group == 0 { 4096 } else { group })
+            }
+        }
+    }
+
+    /// Element (mantissa) width, the `Wx` of "WxAy".
+    pub fn elem_bits(&self) -> u32 {
+        match *self {
+            WeightFormat::Fp16 => 16,
+            WeightFormat::Mxint { bits, .. }
+            | WeightFormat::IntGroup { bits, .. } => bits,
+        }
+    }
+
+    /// The matching fake-quantizer (weight orientation).
+    pub fn quantizer(&self) -> Box<dyn Quantizer> {
+        match *self {
+            WeightFormat::Fp16 => Box::new(Fp16Identity),
+            WeightFormat::Mxint { bits, exp_bits, block } => {
+                Box::new(MxintWeight(MxFormat {
+                    elem_bits: bits,
+                    exp_bits,
+                    block,
+                }))
+            }
+            WeightFormat::IntGroup { bits, group } => {
+                Box::new(IntGroupWeight { bits, group })
+            }
+        }
+    }
+
+    fn to_value(self) -> Value {
+        match self {
+            WeightFormat::Fp16 => json::obj(vec![("kind", json::s("fp16"))]),
+            WeightFormat::Mxint { bits, exp_bits, block } => json::obj(vec![
+                ("kind", json::s("mxint")),
+                ("bits", json::num(bits as f64)),
+                ("exp_bits", json::num(exp_bits as f64)),
+                ("block", json::num(block as f64)),
+            ]),
+            WeightFormat::IntGroup { bits, group } => json::obj(vec![
+                ("kind", json::s("int")),
+                ("bits", json::num(bits as f64)),
+                ("group", json::num(group as f64)),
+            ]),
+        }
+    }
+
+    fn parse(v: &Value, path: &str) -> Result<Self> {
+        let o = as_obj(v, path)?;
+        let kind = str_field(v, "kind", path)?;
+        match kind.as_str() {
+            "fp16" => {
+                check_keys(o, &["kind"], path)?;
+                Ok(WeightFormat::Fp16)
+            }
+            "mxint" => {
+                check_keys(o, &["kind", "bits", "exp_bits", "block"], path)?;
+                Ok(WeightFormat::Mxint {
+                    bits: int_field(v, "bits", path, 2, 8)? as u32,
+                    exp_bits: int_field(v, "exp_bits", path, 1, 8)? as u32,
+                    block: int_field(v, "block", path, 1, i64::MAX)? as usize,
+                })
+            }
+            "int" => {
+                check_keys(o, &["kind", "bits", "group"], path)?;
+                Ok(WeightFormat::IntGroup {
+                    bits: int_field(v, "bits", path, 2, 8)? as u32,
+                    group: int_field(v, "group", path, 0, i64::MAX)? as usize,
+                })
+            }
+            other => bail!("{path}.kind: unknown weight format '{other}'"),
+        }
+    }
+}
+
+impl fmt::Display for WeightFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.quantizer().describe())
+    }
+}
+
+/// Activation number format (graph structure: one lowered HLO variant
+/// per act mode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActFormat {
+    None,
+    Mx8,
+    Mx6,
+    Int8,
+    Int6,
+}
+
+impl ActFormat {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ActFormat::None => "none",
+            ActFormat::Mx8 => "mx8",
+            ActFormat::Mx6 => "mx6",
+            ActFormat::Int8 => "int8",
+            ActFormat::Int6 => "int6",
+        }
+    }
+
+    pub fn from_str(s: &str, path: &str) -> Result<Self> {
+        Ok(match s {
+            "none" => ActFormat::None,
+            "mx8" => ActFormat::Mx8,
+            "mx6" => ActFormat::Mx6,
+            "int8" => ActFormat::Int8,
+            "int6" => ActFormat::Int6,
+            other => bail!("{path}: unknown activation mode '{other}'"),
+        })
+    }
+
+    /// The `Ay` of "WxAy" (16 = full precision).
+    pub fn bits(&self) -> u32 {
+        match self {
+            ActFormat::None => 16,
+            ActFormat::Mx8 | ActFormat::Int8 => 8,
+            ActFormat::Mx6 | ActFormat::Int6 => 6,
+        }
+    }
+
+    /// The matching fake-quantizer (activation orientation).
+    pub fn quantizer(&self) -> Box<dyn Quantizer> {
+        match self {
+            ActFormat::None => Box::new(NoopAct),
+            ActFormat::Mx8 => Box::new(MxintAct(MxFormat::act(8))),
+            ActFormat::Mx6 => Box::new(MxintAct(MxFormat::act(6))),
+            ActFormat::Int8 => Box::new(IntPerToken { bits: 8 }),
+            ActFormat::Int6 => Box::new(IntPerToken { bits: 6 }),
+        }
+    }
+}
+
+/// Weight-optimization algorithm producing W_eff.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    None,
+    Rtn,
+    Gptq,
+    Awq,
+    Llmint4,
+    Smoothquant,
+    Clipq,
+}
+
+impl Algo {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Algo::None => "none",
+            Algo::Rtn => "rtn",
+            Algo::Gptq => "gptq",
+            Algo::Awq => "awq",
+            Algo::Llmint4 => "llmint4",
+            Algo::Smoothquant => "smoothquant",
+            Algo::Clipq => "clipq",
+        }
+    }
+
+    pub fn from_str(s: &str, path: &str) -> Result<Self> {
+        Ok(match s {
+            "none" => Algo::None,
+            "rtn" => Algo::Rtn,
+            "gptq" => Algo::Gptq,
+            "awq" => Algo::Awq,
+            "llmint4" => Algo::Llmint4,
+            "smoothquant" => Algo::Smoothquant,
+            "clipq" => Algo::Clipq,
+            other => bail!("{path}: unknown algorithm '{other}'"),
+        })
+    }
+
+    /// Algorithms that operate on the INT grid (they take bits and,
+    /// except llmint4, a group size) and therefore require an IntGroup
+    /// weight format; plain rtn rounding works on any grid.
+    pub fn needs_int_weights(&self) -> bool {
+        matches!(
+            self,
+            Algo::Gptq | Algo::Awq | Algo::Smoothquant | Algo::Clipq
+                | Algo::Llmint4
+        )
+    }
+}
+
+/// LQER/L2QER error-reconstruction factors: rank `k`, Appendix-A scaling
+/// when `scaled`, stored at `bits`-bit MXINT (`None` = fp32 factors).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LowRank {
+    pub k: usize,
+    pub scaled: bool,
+    pub bits: Option<u32>,
+}
+
+pub const LOWRANK_DEFAULT_BITS: u32 = 8;
+
+impl LowRank {
+    pub fn avg_bits(&self) -> f64 {
+        match self.bits {
+            None => 32.0,
+            Some(b) => mxint_avg_bits(b, 4, 16),
+        }
+    }
+}
+
+/// How one linear layer is quantized.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerSpec {
+    pub weight: WeightFormat,
+    pub act: ActFormat,
+    pub algo: Algo,
+    pub lowrank: Option<LowRank>,
+}
+
+impl LayerSpec {
+    /// Plan-derived average weight bits of an (m, n) linear.
+    pub fn avg_bits(&self, m: usize, n: usize) -> f64 {
+        let base = self.weight.avg_bits();
+        match self.lowrank {
+            None => base,
+            Some(lr) => lqer_avg_bits(m, n, lr.k, base, lr.avg_bits()),
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        let lowrank = match self.lowrank {
+            None => Value::Null,
+            Some(lr) => json::obj(vec![
+                ("k", json::num(lr.k as f64)),
+                ("scaled", Value::Bool(lr.scaled)),
+                ("bits", match lr.bits {
+                    None => Value::Null,
+                    Some(b) => json::num(b as f64),
+                }),
+            ]),
+        };
+        json::obj(vec![
+            ("weight", self.weight.to_value()),
+            ("act", json::s(self.act.as_str())),
+            ("algo", json::s(self.algo.as_str())),
+            ("lowrank", lowrank),
+        ])
+    }
+
+    pub fn parse(v: &Value, path: &str) -> Result<Self> {
+        let o = as_obj(v, path)?;
+        check_keys(o, &["weight", "act", "algo", "lowrank"], path)?;
+        let act = ActFormat::from_str(&str_field(v, "act", path)?,
+                                      &format!("{path}.act"))?;
+        let algo = Algo::from_str(&str_field(v, "algo", path)?,
+                                  &format!("{path}.algo"))?;
+        let lr_v = field(v, "lowrank", path)?;
+        let lowrank = match lr_v {
+            Value::Null => None,
+            other => {
+                let lpath = format!("{path}.lowrank");
+                let lo = as_obj(other, &lpath)?;
+                check_keys(lo, &["k", "scaled", "bits"], &lpath)?;
+                let bits = match field(other, "bits", &lpath)? {
+                    Value::Null => None,
+                    _ => Some(int_field(other, "bits", &lpath, 2, 8)? as u32),
+                };
+                Some(LowRank {
+                    k: int_field(other, "k", &lpath, 1, i64::MAX)? as usize,
+                    scaled: bool_field(other, "scaled", &lpath)?,
+                    bits,
+                })
+            }
+        };
+        let weight = WeightFormat::parse(field(v, "weight", path)?,
+                                         &format!("{path}.weight"))?;
+        Ok(LayerSpec { weight, act, algo, lowrank })
+    }
+
+    fn validate(&self, path: &str) -> Result<()> {
+        if self.algo.needs_int_weights()
+            && !matches!(self.weight, WeightFormat::IntGroup { .. })
+        {
+            bail!(
+                "{path}: algo '{}' requires an int weight format, got '{}'",
+                self.algo.as_str(),
+                self.weight
+            );
+        }
+        if let Some(lr) = self.lowrank {
+            if lr.k < 1 {
+                bail!("{path}.lowrank.k: must be >= 1");
+            }
+            if let Some(b) = lr.bits {
+                if !(2..=8).contains(&b) {
+                    bail!("{path}.lowrank.bits: {b} out of range [2, 8]");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One per-layer-name override: a full LayerSpec for matching layers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Override {
+    /// Layer-key pattern; `*` matches any run of characters.
+    pub pattern: String,
+    pub spec: LayerSpec,
+}
+
+/// A complete quantization plan: default + ordered overrides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantSpec {
+    pub default: LayerSpec,
+    pub overrides: Vec<Override>,
+}
+
+impl QuantSpec {
+    /// First matching override wins; else the model-wide default.
+    pub fn resolve(&self, layer_name: &str) -> &LayerSpec {
+        for ov in &self.overrides {
+            if glob_match(&ov.pattern, layer_name) {
+                return &ov.spec;
+            }
+        }
+        &self.default
+    }
+
+    pub fn layer_specs(&self) -> impl Iterator<Item = &LayerSpec> {
+        std::iter::once(&self.default)
+            .chain(self.overrides.iter().map(|ov| &ov.spec))
+    }
+
+    /// Largest low-rank k any layer may use (the graph's pad rank).
+    pub fn max_rank(&self) -> usize {
+        self.layer_specs()
+            .filter_map(|ls| ls.lowrank.map(|lr| lr.k))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Plan-derived model average weight bits over named linears.
+    pub fn model_avg_bits(
+        &self,
+        shapes: &[(String, (usize, usize))],
+    ) -> f64 {
+        let mut total_w = 0usize;
+        let mut total_bits = 0.0f64;
+        for (name, (m, n)) in shapes {
+            total_w += m * n;
+            total_bits += (m * n) as f64 * self.resolve(name).avg_bits(*m, *n);
+        }
+        total_bits / total_w.max(1) as f64
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.default.validate("plan.default")?;
+        for (i, ov) in self.overrides.iter().enumerate() {
+            let path = format!("plan.overrides[{i}]");
+            if ov.pattern.is_empty() {
+                bail!("{path}.match: must be a non-empty string");
+            }
+            // Printable ASCII only: layer keys are ASCII, and this
+            // keeps the canonical JSON byte-identical across the two
+            // emitters (python escapes non-ASCII, this writer does not).
+            if !ov.pattern.is_ascii() || ov.pattern.bytes().any(|b| b < 0x20)
+            {
+                bail!("{path}.match: must be printable ASCII");
+            }
+            ov.spec.validate(&format!("{path}.spec"))?;
+            if ov.spec.act != self.default.act {
+                bail!(
+                    "{path}.spec.act: '{}' differs from the default act \
+                     '{}' — the activation mode is graph structure and \
+                     must be uniform",
+                    ov.spec.act.as_str(),
+                    self.default.act.as_str()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    // -- serialization ------------------------------------------------------
+
+    pub fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("version", json::num(SCHEMA_VERSION as f64)),
+            ("default", self.default.to_value()),
+            (
+                "overrides",
+                json::arr(self.overrides.iter().map(|ov| {
+                    json::obj(vec![
+                        ("match", json::s(&ov.pattern)),
+                        ("spec", ov.spec.to_value()),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Canonical form: byte-identical to the python emitter
+    /// (`json.dumps(plan.to_json_dict(), separators=(",", ":"))`).
+    pub fn to_canonical_json(&self) -> String {
+        self.to_value().to_string()
+    }
+
+    pub fn parse(v: &Value, path: &str) -> Result<Self> {
+        let o = as_obj(v, path)?;
+        check_keys(o, &["version", "default", "overrides"], path)?;
+        let version = int_field(v, "version", path, 0, i64::MAX)?;
+        if version != SCHEMA_VERSION {
+            bail!(
+                "{path}.version: unsupported version {version} \
+                 (expected {SCHEMA_VERSION})"
+            );
+        }
+        let default = LayerSpec::parse(field(v, "default", path)?,
+                                       &format!("{path}.default"))?;
+        let mut overrides = Vec::new();
+        if let Some(ovs) = v.get("overrides") {
+            let opath = format!("{path}.overrides");
+            let arr = ovs
+                .as_array()
+                .ok_or_else(|| anyhow!("{opath}: expected an array"))?;
+            for (i, ov) in arr.iter().enumerate() {
+                let ipath = format!("{opath}[{i}]");
+                let oo = as_obj(ov, &ipath)?;
+                check_keys(oo, &["match", "spec"], &ipath)?;
+                overrides.push(Override {
+                    pattern: str_field(ov, "match", &ipath)?,
+                    spec: LayerSpec::parse(field(ov, "spec", &ipath)?,
+                                           &format!("{ipath}.spec"))?,
+                });
+            }
+        }
+        let plan = QuantSpec { default, overrides };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow!("plan: {e}"))?;
+        QuantSpec::parse(&v, "plan")
+    }
+
+    // -- legacy compatibility shim ------------------------------------------
+
+    /// Resolve a legacy method-name string (the pre-QuantSpec contract)
+    /// to its plan.  Mirrors the python `METHODS` registry and the
+    /// fig-3 sweep names (`lqer-w2a8-k8`) exactly.
+    pub fn from_method_name(name: &str) -> Result<QuantSpec> {
+        if let Some(plan) = method_registry(name) {
+            return Ok(plan);
+        }
+        if let Some(plan) = sweep_plan(name) {
+            return Ok(plan);
+        }
+        bail!("unknown method name '{name}'")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The method registry (mirror of python spec.METHODS)
+// ---------------------------------------------------------------------------
+
+fn mx(bits: u32) -> WeightFormat {
+    WeightFormat::Mxint { bits, exp_bits: 4, block: 16 }
+}
+
+fn ig(bits: u32, group: usize) -> WeightFormat {
+    WeightFormat::IntGroup { bits, group }
+}
+
+fn lr(k: usize, scaled: bool) -> Option<LowRank> {
+    Some(LowRank { k, scaled, bits: Some(LOWRANK_DEFAULT_BITS) })
+}
+
+fn plan(
+    weight: WeightFormat,
+    act: ActFormat,
+    algo: Algo,
+    lowrank: Option<LowRank>,
+) -> QuantSpec {
+    QuantSpec {
+        default: LayerSpec { weight, act, algo, lowrank },
+        overrides: Vec::new(),
+    }
+}
+
+fn method_registry(name: &str) -> Option<QuantSpec> {
+    use ActFormat::{Int6, Int8, Mx6, Mx8, None as ANone};
+    use Algo::{Awq, Clipq, Gptq, Llmint4, None as GNone, Rtn, Smoothquant};
+    Some(match name {
+        "fp16" => plan(WeightFormat::Fp16, ANone, GNone, None),
+        "mxint-w4a8" => plan(mx(4), Mx8, Rtn, None),
+        "lqer-w4a8" => plan(mx(4), Mx8, Rtn, lr(16, false)),
+        "l2qer-w4a8" => plan(mx(4), Mx8, Rtn, lr(16, true)),
+        "l2qer-w4a6" => plan(mx(4), Mx6, Rtn, lr(16, true)),
+        "l2qer-int-w4" => plan(ig(4, 128), ANone, Rtn, lr(16, true)),
+        "l2qer-int-w4a8" => plan(ig(4, 128), Int8, Rtn, lr(16, true)),
+        "gptq-w4" => plan(ig(4, 128), ANone, Gptq, None),
+        "awq-w4" => plan(ig(4, 128), ANone, Awq, None),
+        "rtn-w4" => plan(ig(4, 128), ANone, Rtn, None),
+        "llmint4" => plan(ig(4, 0), Int8, Llmint4, None),
+        "smoothquant-w8a8" => plan(ig(8, 128), Int8, Smoothquant, None),
+        "clipq-w6a6" => plan(ig(6, 128), Int6, Clipq, None),
+        "awq-w2" => plan(ig(2, 128), ANone, Awq, None),
+        "clipq-w2" => plan(ig(2, 128), ANone, Clipq, None),
+        "l2qer-w2a8" => plan(mx(2), Mx8, Rtn, lr(64, true)),
+        "mxint-w2a8" => plan(mx(2), Mx8, Rtn, None),
+        "lqer-w2a8" => plan(mx(2), Mx8, Rtn, lr(64, false)),
+        "mxint-w3a8" => plan(mx(3), Mx8, Rtn, None),
+        "l2qer-w2a8-lr4" => plan(
+            mx(2),
+            Mx8,
+            Rtn,
+            Some(LowRank { k: 64, scaled: true, bits: Some(4) }),
+        ),
+        "l2qer-w2a8-lrfp" => plan(
+            mx(2),
+            Mx8,
+            Rtn,
+            Some(LowRank { k: 64, scaled: true, bits: None }),
+        ),
+        "l2qer-w2a8-rank16" => plan(mx(2), Mx8, Rtn, lr(16, true)),
+        _ => return None,
+    })
+}
+
+/// The fig-3 sweep names: `lqer-w2a8-k{N}` / `l2qer-w2a8-k{N}`.
+fn sweep_plan(name: &str) -> Option<QuantSpec> {
+    let (scaled, rest) = if let Some(r) = name.strip_prefix("l2qer-w2a8-k") {
+        (true, r)
+    } else if let Some(r) = name.strip_prefix("lqer-w2a8-k") {
+        (false, r)
+    } else {
+        return None;
+    };
+    if rest.is_empty() || !rest.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    let k: usize = rest.parse().ok()?;
+    if k == 0 {
+        return None;
+    }
+    Some(plan(mx(2), ActFormat::Mx8, Algo::Rtn, lr(k, scaled)))
+}
+
+// ---------------------------------------------------------------------------
+// Pattern matching (mirror of python glob_match — keep trivially simple)
+// ---------------------------------------------------------------------------
+
+/// Literal match except `*` matches any (possibly empty) run.
+pub fn glob_match(pattern: &str, name: &str) -> bool {
+    let p = pattern.as_bytes();
+    let s = name.as_bytes();
+    let (mut pi, mut si) = (0usize, 0usize);
+    let mut star: Option<usize> = None;
+    let mut mark = 0usize;
+    while si < s.len() {
+        if pi < p.len() && p[pi] == b'*' {
+            star = Some(pi);
+            mark = si;
+            pi += 1;
+        } else if pi < p.len() && p[pi] == s[si] {
+            pi += 1;
+            si += 1;
+        } else if let Some(st) = star {
+            pi = st + 1;
+            mark += 1;
+            si = mark;
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == b'*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+// ---------------------------------------------------------------------------
+// Model layer shapes (mirror of python spec.layer_shapes / model.py's
+// LINEAR_NAMES)
+// ---------------------------------------------------------------------------
+
+/// (in, out) shape of every linear key `layers.{i}.{name}`, in model
+/// walk order.
+pub fn layer_shapes(
+    d: usize,
+    ffn: usize,
+    layers: usize,
+) -> Vec<(String, (usize, usize))> {
+    let dims: [(&str, (usize, usize)); 6] = [
+        ("wq", (d, d)),
+        ("wk", (d, d)),
+        ("wv", (d, d)),
+        ("wo", (d, d)),
+        ("fc1", (d, ffn)),
+        ("fc2", (ffn, d)),
+    ];
+    let mut out = Vec::with_capacity(layers * dims.len());
+    for li in 0..layers {
+        for (name, shape) in dims {
+            out.push((format!("layers.{li}.{name}"), shape));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Strict parsing helpers (path-qualified errors)
+// ---------------------------------------------------------------------------
+
+fn as_obj<'a>(v: &'a Value, path: &str) -> Result<&'a [(String, Value)]> {
+    v.as_object()
+        .ok_or_else(|| anyhow!("{path}: expected an object"))
+}
+
+fn check_keys(
+    o: &[(String, Value)],
+    allowed: &[&str],
+    path: &str,
+) -> Result<()> {
+    for (k, _) in o {
+        if !allowed.contains(&k.as_str()) {
+            bail!("{path}: unknown key '{k}'");
+        }
+    }
+    Ok(())
+}
+
+fn field<'a>(v: &'a Value, key: &str, path: &str) -> Result<&'a Value> {
+    v.get(key)
+        .ok_or_else(|| anyhow!("{path}: missing key '{key}'"))
+}
+
+fn str_field(v: &Value, key: &str, path: &str) -> Result<String> {
+    Ok(field(v, key, path)?
+        .as_str()
+        .ok_or_else(|| anyhow!("{path}.{key}: expected a string"))?
+        .to_string())
+}
+
+fn bool_field(v: &Value, key: &str, path: &str) -> Result<bool> {
+    field(v, key, path)?
+        .as_bool()
+        .ok_or_else(|| anyhow!("{path}.{key}: expected a boolean"))
+}
+
+fn int_field(v: &Value, key: &str, path: &str, lo: i64, hi: i64) -> Result<i64> {
+    let f = field(v, key, path)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("{path}.{key}: expected an integer"))?;
+    if f.fract() != 0.0 {
+        bail!("{path}.{key}: expected an integer");
+    }
+    let n = f as i64;
+    if n < lo || n > hi {
+        bail!("{path}.{key}: {n} out of range [{lo}, {hi}]");
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn l2qer_w4a8() -> QuantSpec {
+        QuantSpec::from_method_name("l2qer-w4a8").unwrap()
+    }
+
+    #[test]
+    fn canonical_roundtrip() {
+        let plan = l2qer_w4a8();
+        let text = plan.to_canonical_json();
+        assert_eq!(
+            text,
+            "{\"version\":1,\"default\":{\"weight\":{\"kind\":\"mxint\",\
+             \"bits\":4,\"exp_bits\":4,\"block\":16},\"act\":\"mx8\",\
+             \"algo\":\"rtn\",\"lowrank\":{\"k\":16,\"scaled\":true,\
+             \"bits\":8}},\"overrides\":[]}"
+        );
+        let back = QuantSpec::from_json(&text).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn overrides_first_match_wins() {
+        let mut plan = l2qer_w4a8();
+        let mut ffn = plan.default;
+        ffn.lowrank = Some(LowRank { k: 32, scaled: true, bits: Some(8) });
+        plan.overrides.push(Override {
+            pattern: "layers.*.fc1".into(),
+            spec: ffn,
+        });
+        let mut shadow = plan.default;
+        shadow.lowrank = None;
+        plan.overrides.push(Override {
+            pattern: "layers.0.*".into(),
+            spec: shadow,
+        });
+        // fc1 hits the first override even in layer 0.
+        assert_eq!(plan.resolve("layers.0.fc1").lowrank.unwrap().k, 32);
+        assert_eq!(plan.resolve("layers.0.wq").lowrank, None);
+        assert_eq!(plan.resolve("layers.3.wq").lowrank.unwrap().k, 16);
+        assert_eq!(plan.max_rank(), 32);
+        // Round-trips with overrides intact.
+        let back = QuantSpec::from_json(&plan.to_canonical_json()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn glob_match_semantics() {
+        assert!(glob_match("layers.*.fc1", "layers.12.fc1"));
+        assert!(!glob_match("layers.*.fc1", "layers.1.fc2"));
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("layers.0.wq", "layers.0.wq"));
+        assert!(!glob_match("layers.0.wq", "layers.0.wqx"));
+        assert!(glob_match("*.fc*", "layers.3.fc2"));
+        assert!(glob_match("a*b*c", "axxbyyc"));
+        assert!(!glob_match("a*b*c", "axxbyy"));
+        assert!(glob_match("ab**", "ab"));
+    }
+
+    #[test]
+    fn rejects_with_path_qualified_errors() {
+        let cases: &[(&str, &str)] = &[
+            (
+                "{\"version\":1,\"default\":{\"weight\":{\"kind\":\"fp8\"},\
+                 \"act\":\"none\",\"algo\":\"none\",\"lowrank\":null},\
+                 \"overrides\":[]}",
+                "plan.default.weight.kind",
+            ),
+            (
+                "{\"version\":1,\"default\":{\"weight\":{\"kind\":\"fp16\",\
+                 \"zero\":1},\"act\":\"none\",\"algo\":\"none\",\
+                 \"lowrank\":null},\"overrides\":[]}",
+                "unknown key 'zero'",
+            ),
+            (
+                "{\"version\":3,\"default\":{\"weight\":{\"kind\":\"fp16\"},\
+                 \"act\":\"none\",\"algo\":\"none\",\"lowrank\":null},\
+                 \"overrides\":[]}",
+                "version",
+            ),
+            (
+                "{\"version\":1,\"default\":{\"weight\":{\"kind\":\"mxint\",\
+                 \"bits\":4,\"exp_bits\":4,\"block\":16},\"act\":\"none\",\
+                 \"algo\":\"gptq\",\"lowrank\":null},\"overrides\":[]}",
+                "requires an int weight format",
+            ),
+        ];
+        for (text, needle) in cases {
+            let err = QuantSpec::from_json(text).unwrap_err().to_string();
+            assert!(err.contains(needle), "'{err}' missing '{needle}'");
+        }
+    }
+
+    #[test]
+    fn rejects_non_ascii_override_pattern() {
+        let mut plan = l2qer_w4a8();
+        plan.overrides.push(Override {
+            pattern: "läyers.*".into(),
+            spec: plan.default,
+        });
+        let err = plan.validate().unwrap_err().to_string();
+        assert!(err.contains("printable ASCII"), "{err}");
+    }
+
+    #[test]
+    fn sweep_names_resolve() {
+        let p = QuantSpec::from_method_name("lqer-w2a8-k8").unwrap();
+        let lr = p.default.lowrank.unwrap();
+        assert_eq!((lr.k, lr.scaled), (8, false));
+        let p = QuantSpec::from_method_name("l2qer-w2a8-k128").unwrap();
+        let lr = p.default.lowrank.unwrap();
+        assert_eq!((lr.k, lr.scaled), (128, true));
+        assert!(QuantSpec::from_method_name("l2qer-w2a8-k").is_err());
+        assert!(QuantSpec::from_method_name("l2qer-w2a8-kx4").is_err());
+        assert!(QuantSpec::from_method_name("nope").is_err());
+    }
+
+    #[test]
+    fn avg_bits_formulas() {
+        // MXINT4 with 4-bit exponent over block 16 = 4.25 bits (paper 4.1).
+        assert!((mxint_avg_bits(4, 4, 16) - 4.25).abs() < 1e-12);
+        // INT4 g128 = 4.125 (paper's "4.1" column).
+        assert!((int_group_avg_bits(4, 128) - 4.125).abs() < 1e-12);
+        assert_eq!(mx(4).avg_bits(), 4.25);
+        assert_eq!(ig(4, 128).avg_bits(), 4.125);
+        assert_eq!(WeightFormat::Fp16.avg_bits(), 16.0);
+        // Plan-level: l2qer-w4a8 on a square layer.
+        let ls = l2qer_w4a8().default;
+        let want = lqer_avg_bits(256, 256, 16, 4.25, 8.25);
+        assert!((ls.avg_bits(256, 256) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn model_avg_bits_weights_by_layer_size() {
+        let shapes = layer_shapes(64, 256, 2);
+        assert_eq!(shapes.len(), 12);
+        let fp = QuantSpec::from_method_name("fp16").unwrap();
+        assert_eq!(fp.model_avg_bits(&shapes), 16.0);
+        let mx4 = QuantSpec::from_method_name("mxint-w4a8").unwrap();
+        assert!((mx4.model_avg_bits(&shapes) - 4.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantizer_trait_matches_direct_calls() {
+        let mut rng = Rng::new(7);
+        let cols = 32;
+        let data: Vec<f32> =
+            (0..64 * cols).map(|_| rng.normal() as f32 * 0.4).collect();
+
+        // MXINT weight orientation.
+        let mut via_trait = data.clone();
+        mx(4).quantizer().quantize(&mut via_trait, cols);
+        let mut direct = data.clone();
+        MxFormat::weight(4).quant_cols(&mut direct, cols);
+        assert_eq!(via_trait, direct);
+
+        // INT-g128 weight orientation.
+        let mut via_trait = data.clone();
+        ig(4, 16).quantizer().quantize(&mut via_trait, cols);
+        let mut direct = data.clone();
+        intq::int_quant_group_cols(&mut direct, cols, 4, 16);
+        assert_eq!(via_trait, direct);
+
+        // Per-token int8 activations.
+        let mut via_trait = data.clone();
+        ActFormat::Int8.quantizer().quantize(&mut via_trait, cols);
+        let mut direct = data.clone();
+        intq::int_quant_per_token(&mut direct, cols, 8);
+        assert_eq!(via_trait, direct);
+
+        // FP16 weights are identity; "none" acts are identity.
+        let mut w = data.clone();
+        WeightFormat::Fp16.quantizer().quantize(&mut w, cols);
+        assert_eq!(w, data);
+        let mut a = data.clone();
+        ActFormat::None.quantizer().quantize(&mut a, cols);
+        assert_eq!(a, data);
+    }
+
+    #[test]
+    fn vector_wise_int_is_per_row_fp16_scale() {
+        let cols = 8;
+        let data: Vec<f32> = (0..2 * cols).map(|i| i as f32 - 3.0).collect();
+        let mut via_trait = data.clone();
+        ig(4, 0).quantizer().quantize(&mut via_trait, cols);
+        let mut direct = data.clone();
+        for row in direct.chunks_exact_mut(cols) {
+            intq::int_quant_group_slice(row, 4, true);
+        }
+        assert_eq!(via_trait, direct);
+    }
+}

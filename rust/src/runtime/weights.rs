@@ -14,6 +14,7 @@
 //! Tensor order in the manifest is jax tree-flatten order, which is the
 //! HLO parameter order of every lowered graph for this run.
 
+use std::collections::HashMap;
 use std::path::Path;
 
 use anyhow::{Context, Result};
@@ -31,6 +32,9 @@ pub struct Tensor {
 pub struct WeightStore {
     pub tensors: Vec<Tensor>,
     pub meta: json::Value,
+    /// name -> index into `tensors`, built once at load so per-tensor
+    /// lookups are O(1) instead of a linear scan.
+    index: HashMap<String, usize>,
 }
 
 pub const MAGIC: &[u8; 8] = b"LQTW0001";
@@ -81,11 +85,20 @@ impl WeightStore {
             .get("meta")
             .cloned()
             .unwrap_or(json::Value::Obj(vec![]));
-        Ok(WeightStore { tensors, meta })
+        let mut index = HashMap::with_capacity(tensors.len());
+        for (i, t) in tensors.iter().enumerate() {
+            anyhow::ensure!(
+                index.insert(t.name.clone(), i).is_none(),
+                "duplicate tensor name '{}' in {}",
+                t.name,
+                path.display()
+            );
+        }
+        Ok(WeightStore { tensors, meta, index })
     }
 
     pub fn tensor(&self, name: &str) -> Option<&Tensor> {
-        self.tensors.iter().find(|t| t.name == name)
+        self.index.get(name).map(|&i| &self.tensors[i])
     }
 
     pub fn total_params(&self) -> usize {
@@ -127,6 +140,27 @@ mod tests {
         assert_eq!(ws.meta.str_at("model").unwrap(), "m");
         assert!(ws.tensor("b").is_some());
         assert!(ws.tensor("c").is_none());
+    }
+
+    #[test]
+    fn rejects_duplicate_tensor_names() {
+        let path = std::env::temp_dir().join("lqtw_dup.bin");
+        let manifest = r#"{"tensors": [
+            {"name": "a", "shape": [2], "offset": 0, "nbytes": 8},
+            {"name": "a", "shape": [2], "offset": 8, "nbytes": 8}],
+            "meta": {}}"#;
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(manifest.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(manifest.as_bytes()).unwrap();
+        let pos = 12 + manifest.len();
+        f.write_all(&vec![0u8; pos.div_ceil(64) * 64 - pos]).unwrap();
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        drop(f);
+        let err = WeightStore::load(&path).unwrap_err().to_string();
+        assert!(err.contains("duplicate tensor name"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,136 @@
+//! Cross-language QuantSpec golden tests against the checked-in fixture
+//! `rust/tests/fixtures/quantspec_golden.json` (emitted by
+//! `python/compile/quant/spec.py emit-golden`, validated python-side by
+//! the tier-1 `plan-check` step).  Runs without PJRT or artifacts.
+//!
+//! What "bit-for-bit mirror" means operationally:
+//!   * every python-serialized plan parses in rust and re-serializes to
+//!     the *identical byte string* (canonical form equality);
+//!   * the legacy method-name shim resolves to the same plan on both
+//!     sides;
+//!   * plan-derived avg-bits (per layer and model-wide) agree to 1e-9 —
+//!     the cross-language "Avg. w bits" dedup assertion;
+//!   * every malformed plan the python validator rejects is rejected
+//!     here too.
+
+use std::path::PathBuf;
+
+use lqer::quant::spec::{layer_shapes, QuantSpec};
+use lqer::util::json;
+
+fn fixture() -> json::Value {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/quantspec_golden.json");
+    json::parse_file(&path).expect("checked-in fixture must parse")
+}
+
+fn fixture_shapes(fx: &json::Value) -> Vec<(String, (usize, usize))> {
+    let dims = fx.req("dims").unwrap();
+    layer_shapes(
+        dims.usize_at("d").unwrap(),
+        dims.usize_at("ffn").unwrap(),
+        dims.usize_at("layers").unwrap(),
+    )
+}
+
+#[test]
+fn python_serialized_plans_roundtrip_byte_exactly() {
+    let fx = fixture();
+    let shapes = fixture_shapes(&fx);
+    let cases = fx.req("cases").unwrap().as_array().unwrap();
+    assert!(cases.len() >= 8, "fixture unexpectedly small");
+    for case in cases {
+        let name = case.str_at("name").unwrap();
+        let canonical = case.str_at("canonical").unwrap();
+        let plan = QuantSpec::from_json(&canonical)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        // Byte-identical canonical serialization across languages.
+        assert_eq!(plan.to_canonical_json(), canonical, "{name}");
+        // Legacy method names resolve to the same plan via the shim.
+        if case.req("method").unwrap().as_bool().unwrap() {
+            let shimmed = QuantSpec::from_method_name(&name)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(shimmed, plan, "{name}: shim disagrees");
+        }
+        // Cross-language avg-bits equality (the Table-3 column is
+        // derived from the plan identically on both sides).
+        let want_model = case.f64_at("model_avg_bits").unwrap();
+        let got_model = plan.model_avg_bits(&shapes);
+        assert!(
+            (got_model - want_model).abs() < 1e-9,
+            "{name}: model avg bits {got_model} != {want_model}"
+        );
+        let layer_bits = case.req("layer_bits").unwrap();
+        let mut checked = 0;
+        for (key, (m, n)) in &shapes {
+            let want = layer_bits.f64_at(key).unwrap();
+            let got = plan.resolve(key).avg_bits(*m, *n);
+            assert!(
+                (got - want).abs() < 1e-9,
+                "{name}/{key}: layer bits {got} != {want}"
+            );
+            checked += 1;
+        }
+        assert_eq!(checked, shapes.len(), "{name}");
+    }
+}
+
+#[test]
+fn heterogeneous_case_resolves_per_layer() {
+    // The acceptance-criteria plan: k=32 on FFN linears, k=8 elsewhere,
+    // INT4 on the output projection, MXINT4 default.
+    let fx = fixture();
+    let case = fx
+        .req("cases")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .find(|c| c.str_at("name").unwrap() == "het-ffn-rank")
+        .expect("fixture must carry the heterogeneous example");
+    let plan = QuantSpec::from_json(&case.str_at("canonical").unwrap())
+        .unwrap();
+    assert_eq!(plan.overrides.len(), 3);
+    assert_eq!(plan.resolve("layers.0.fc1").lowrank.unwrap().k, 32);
+    assert_eq!(plan.resolve("layers.1.fc2").lowrank.unwrap().k, 32);
+    assert_eq!(plan.resolve("layers.0.wq").lowrank.unwrap().k, 8);
+    let wo = plan.resolve("layers.0.wo");
+    assert!(matches!(
+        wo.weight,
+        lqer::quant::spec::WeightFormat::IntGroup { bits: 4, group: 128 }
+    ));
+    assert_eq!(plan.max_rank(), 32);
+    // Mixed precision shows up in the per-layer bits: the FFN linears
+    // pay more low-rank overhead than the k=8 attention projections.
+    let (m, n) = (64, 256);
+    assert!(plan.resolve("layers.0.fc1").avg_bits(m, n)
+            > plan.resolve("layers.0.wq").avg_bits(64, 64));
+}
+
+#[test]
+fn every_legacy_method_name_matches_python_serialization() {
+    let fx = fixture();
+    let methods = fx.req("methods").unwrap().as_object().unwrap();
+    assert!(methods.len() >= 20, "registry shrank?");
+    for (name, canonical) in methods {
+        let want = canonical.as_str().unwrap();
+        let plan = QuantSpec::from_method_name(name)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(plan.to_canonical_json(), want, "{name}");
+    }
+}
+
+#[test]
+fn python_rejects_are_rejected_here_too() {
+    let fx = fixture();
+    let rejects = fx.req("rejects").unwrap().as_array().unwrap();
+    assert!(rejects.len() >= 10);
+    for rej in rejects {
+        let name = rej.str_at("name").unwrap();
+        let text = rej.str_at("json").unwrap();
+        assert!(
+            QuantSpec::from_json(&text).is_err(),
+            "{name}: parsed but must be rejected"
+        );
+    }
+}

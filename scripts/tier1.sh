@@ -13,6 +13,13 @@ cd "$(dirname "$0")/.."
 cargo build --release
 cargo test -q
 
+# plan-check: the checked-in QuantSpec golden fixtures must validate on
+# both sides of the language boundary.  The rust side ran above inside
+# `cargo test` (rust/tests/plan_roundtrip.rs); the python validator is
+# pure stdlib, so it runs everywhere (no jax needed).
+python3 python/compile/quant/spec.py check \
+    rust/tests/fixtures/quantspec_golden.json
+
 if [[ "${1:-}" != "--fast" ]]; then
     cargo fmt --check
     cargo clippy --all-targets -- -D warnings

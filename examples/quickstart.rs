@@ -39,6 +39,10 @@ fn main() -> anyhow::Result<()> {
             // device-resident KV cache (set true for the legacy
             // host round-trip oracle)
             host_cache: false,
+            // flat per-lane cache; see `lqer bench kv` / DESIGN.md §10
+            // for the paged allocator
+            paged: None,
+            admission: Default::default(),
         },
     )?;
 

@@ -38,6 +38,8 @@ fn main() -> anyhow::Result<()> {
                 .collect(),
             max_prefill_per_step: 2,
             host_cache: false,
+            paged: None,
+            admission: Default::default(),
         };
         let t0 = std::time::Instant::now();
         let stats = loadtest::run_loadtest(&manifest, &cfg, requests,

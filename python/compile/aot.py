@@ -50,6 +50,18 @@ FIG1A_LAYER = "layers.2.fc1"     # of opt-mini
 SCORE_B, SCORE_T = 4, 96
 PREFILL_SHAPES = [(1, 16), (1, 96)]
 DECODE_BATCHES = [1, 4, 8]
+# Paged-KV geometry (DESIGN.md §10): token rows per block.  Must divide
+# every prefill bucket and t_max; a decode batch b pairs with a pool of
+# b * (t_max // PAGED_BLOCK_SIZE) + 1 blocks (block 0 is the sentinel
+# that absorbs dead writes of free lanes), i.e. the same memory as the
+# flat (b, t_max) cache plus one block.
+PAGED_BLOCK_SIZE = 16
+
+
+def paged_num_blocks(batch: int, t_max: int) -> int:
+    """Pool size (incl. sentinel) the paged graphs are lowered with."""
+    assert t_max % PAGED_BLOCK_SIZE == 0, (t_max, PAGED_BLOCK_SIZE)
+    return batch * (t_max // PAGED_BLOCK_SIZE) + 1
 
 TRAIN_STEPS = {"opt-tiny": 400, "opt-micro": 500, "opt-mini": 500,
                "opt-small": 500}
@@ -225,22 +237,31 @@ def stage_hlo(out_dir: str, trained: dict, models: list[str],
                 gv = M.GraphVariant(act=act, rank=rank)
                 for (b, t) in PREFILL_SHAPES:
                     needed[(SERVE_MODEL, tag, "prefill", b, t)] = gv
+                serve_t_max = trained[SERVE_MODEL][0].t_max
                 for b in DECODE_BATCHES:
                     # legacy host-cache step + device-resident step
                     needed[(SERVE_MODEL, tag, "decode", b, 0)] = gv
                     needed[(SERVE_MODEL, tag, "decode_dev", b, 0)] = gv
+                    # paged device-resident step (block-table operand)
+                    needed[(SERVE_MODEL, tag, "decode_paged", b, 0)] = gv
                     # Prefill-slot scatter: parameter-free, so one graph
                     # per (batch, bucket) under the fixed "cache" tag
                     # serves every method (rust looks it up by that tag).
+                    # The paged variant is keyed by its *pool size* NB —
+                    # that is what the rust runner knows at lookup time.
+                    nb = paged_num_blocks(b, serve_t_max)
                     for (_, t) in PREFILL_SHAPES:
                         needed[(SERVE_MODEL, "cache", "kvwrite", b, t)] = gv
+                        needed[(SERVE_MODEL, "cache", "kvwrite_paged",
+                                nb, t)] = gv
 
     for (name, tag, entry_kind, b, t), gv in sorted(needed.items()):
         cfg, params = trained[name]
         hdir = os.path.join(out_dir, "hlo", name)
         os.makedirs(hdir, exist_ok=True)
         fname = (f"{tag}_{entry_kind}_b{b}" +
-                 (f"_t{t}" if entry_kind in ("score", "prefill", "kvwrite")
+                 (f"_t{t}" if entry_kind in ("score", "prefill", "kvwrite",
+                                             "kvwrite_paged")
                   else "") + ".hlo.txt")
         path = os.path.join(hdir, fname)
         graph_index.append({"model": name, "graph": tag,
@@ -258,6 +279,31 @@ def stage_hlo(out_dir: str, trained: dict, models: list[str],
             slot = jax.ShapeDtypeStruct((), jnp.int32)
             text = lower_graph(M.kv_write_prefill, cache, cache, pre, pre,
                                slot)
+        elif entry_kind == "kvwrite_paged":
+            # Pure block scatter; `b` IS the pool size here (see the
+            # `needed` construction above).
+            pcache = jax.ShapeDtypeStruct(
+                (cfg.layers, b, PAGED_BLOCK_SIZE, cfg.d), jnp.float32)
+            pre = jax.ShapeDtypeStruct(
+                (cfg.layers, 1, t, cfg.d), jnp.float32)
+            ids = jax.ShapeDtypeStruct((t // PAGED_BLOCK_SIZE,),
+                                       jnp.int32)
+            text = lower_graph(M.kv_write_prefill_paged, pcache, pcache,
+                               pre, pre, ids)
+        elif entry_kind == "decode_paged":
+            vparams = M.attach_variant_params(
+                jax.tree_util.tree_map(np.asarray, params), cfg, gv)
+            pspecs = M.param_specs(vparams)
+            nb = paged_num_blocks(b, cfg.t_max)
+            pcache = jax.ShapeDtypeStruct(
+                (cfg.layers, nb, PAGED_BLOCK_SIZE, cfg.d), jnp.float32)
+            tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+            pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+            tbl = jax.ShapeDtypeStruct(
+                (b, cfg.t_max // PAGED_BLOCK_SIZE), jnp.int32)
+            fn = lambda p, tok_, kc, vc, pos_, bt: M.decode_paged(
+                p, tok_, kc, vc, pos_, bt, cfg, gv)
+            text = lower_graph(fn, pspecs, tok, pcache, pcache, pos, tbl)
         else:
             vparams = M.attach_variant_params(
                 jax.tree_util.tree_map(np.asarray, params), cfg, gv)
@@ -412,6 +458,17 @@ def main() -> None:
     fig1a = stage_fig1a(out_dir, ds, trained) if args.stage == "all" else None
 
     if args.stage == "all":
+        serve = {"model": SERVE_MODEL, "methods": SERVE_METHODS,
+                 "prefill_shapes": PREFILL_SHAPES,
+                 "decode_batches": DECODE_BATCHES}
+        if SERVE_MODEL in trained:
+            # Geometry the paged graphs were lowered with; rust derives
+            # num_blocks = batch * blocks_per_lane + 1 from this.
+            serve["paged"] = {
+                "block_size": PAGED_BLOCK_SIZE,
+                "blocks_per_lane":
+                    trained[SERVE_MODEL][0].t_max // PAGED_BLOCK_SIZE,
+            }
         manifest = {
             "created": time.strftime("%Y-%m-%d %H:%M:%S"),
             "models": {
@@ -421,9 +478,7 @@ def main() -> None:
             "runs": run_index,
             "graphs": graph_index,
             "score_shape": [SCORE_B, SCORE_T],
-            "serve": {"model": SERVE_MODEL, "methods": SERVE_METHODS,
-                      "prefill_shapes": PREFILL_SHAPES,
-                      "decode_batches": DECODE_BATCHES},
+            "serve": serve,
             "fig3": {"model": FIG3_MODEL, "ranks": FIG3_RANKS},
             "fig1a": fig1a and {"layer": fig1a["layer"],
                                 "shape": fig1a["shape"]},

@@ -391,6 +391,90 @@ def decode_resident(params, token, k_cache, v_cache, pos, cfg: ModelConfig,
             _scatter_rows(v_cache, v_new, pos))
 
 
+def _gather_paged(cache, tables, b, t_view):
+    """Gather per-lane contiguous cache views from a paged pool.
+
+    cache:  (L, NB, bs, d) block pool; tables: (B, M) int32 block ids.
+    Returns (L, B, M*bs, d) — lane b's logical rows 0..M*bs in order.
+    Table entries past a sequence's allocated blocks may point anywhere
+    (the engine pads with the sentinel); those rows sit at positions
+    >= pos and are masked by attention, exactly like right-padding in
+    the flat cache.
+    """
+    L, _, bs, d = cache.shape
+    g = cache[:, tables]                    # (L, B, M, bs, d)
+    return g.reshape(L, b, t_view, d)
+
+
+def _scatter_rows_paged(cache, rows, pos, tables):
+    """Write rows (L, B, d) into the block pool at each lane's logical
+    position ``pos[b]``: physical block ``tables[b, pos[b] // bs]``,
+    offset ``pos[b] % bs``.
+
+    Same unrolled DUS lattice as :func:`_scatter_rows` — one contiguous
+    d-length row per (layer, lane) — with the row index resolved through
+    the block table.  A row is written for *every* lane; the engine
+    points free lanes at the sentinel block (id 0) with pos 0, so their
+    dead writes land in storage no live sequence owns.
+    """
+    n_layers, batch = rows.shape[0], rows.shape[1]
+    bs = cache.shape[2]
+    zero = jnp.int32(0)
+    for li in range(n_layers):
+        for bi in range(batch):
+            chunk = pos[bi] // bs
+            off = pos[bi] - chunk * bs
+            blk = tables[bi, chunk]
+            cache = jax.lax.dynamic_update_slice(
+                cache, rows[li, bi][None, None, None, :],
+                (jnp.int32(li), blk, off, zero))
+    return cache
+
+
+def decode_paged(params, token, k_cache, v_cache, pos, tables,
+                 cfg: ModelConfig, gv: GraphVariant):
+    """One decode step over a *paged* resident cache (DESIGN.md §10).
+
+    k/v_cache: (L, NB, bs, d) block pools; tables: (B, M) int32 block
+    ids with M * bs == t_max; pos: (B,) int32.  Returns
+    (logits (B, V), k_cache', v_cache') with this step's K/V rows
+    written through the tables.  Bit-identical to ``decode_resident``
+    on the gathered flat view: the gathered lanes have exactly the
+    flat (L, B, t_max, d) shape, so the attention computation is the
+    same graph.
+    """
+    b = token.shape[0]
+    t_view = tables.shape[1] * k_cache.shape[2]
+    kc = _gather_paged(k_cache, tables, b, t_view)
+    vc = _gather_paged(v_cache, tables, b, t_view)
+    logits, k_new, v_new = decode(params, token, kc, vc, pos, cfg, gv)
+    return (logits,
+            _scatter_rows_paged(k_cache, k_new, pos, tables),
+            _scatter_rows_paged(v_cache, v_new, pos, tables))
+
+
+def kv_write_prefill_paged(k_cache, v_cache, k_pre, v_pre, block_ids):
+    """Scatter a prefilled sequence into pool blocks.
+
+    k/v_cache: (L, NB, bs, d); k/v_pre: (L, 1, t, d) with
+    t == len(block_ids) * bs; block_ids: (n_chunks,) int32.  Chunk c
+    (rows c*bs..(c+1)*bs of the right-padded prefill) lands in block
+    ``block_ids[c]``; fully-padded chunks carry the sentinel id so the
+    padding is parked in storage no sequence reads.  No model
+    parameters: one lowered graph per (NB, t) serves every method.
+    """
+    bs = k_cache.shape[2]
+    n_chunks = k_pre.shape[2] // bs
+    zero = jnp.int32(0)
+    for c in range(n_chunks):
+        idx = (zero, block_ids[c], zero, zero)
+        k_chunk = k_pre[:, :, c * bs:(c + 1) * bs, :]
+        v_chunk = v_pre[:, :, c * bs:(c + 1) * bs, :]
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k_chunk, idx)
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v_chunk, idx)
+    return k_cache, v_cache
+
+
 def kv_write_prefill(k_cache, v_cache, k_pre, v_pre, slot):
     """Scatter a prefilled sequence into batch slot ``slot`` of a resident
     cache.

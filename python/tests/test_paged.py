@@ -1,0 +1,154 @@
+"""Paged KV-cache graphs (DESIGN.md §10): ``decode_paged`` must equal
+the flat ``decode`` on the gathered view, ``kv_write_prefill_paged``
+must scatter bucket-chunks into the listed blocks, and dead writes of
+free lanes must park in the sentinel block (id 0)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+BS = 8  # block rows used by these tests (aot uses PAGED_BLOCK_SIZE)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = M.ModelConfig(name="t", vocab=64, d=32, layers=2, heads=2,
+                        ffn=64, t_max=24)
+    params = M.init_params(cfg, seed=1)
+    return cfg, params
+
+
+def gather_numpy(pool, tables):
+    """Reference gather: (L, NB, bs, d) x (B, M) -> (L, B, M*bs, d)."""
+    L, _, bs, d = pool.shape
+    b, m = tables.shape
+    out = np.zeros((L, b, m * bs, d), pool.dtype)
+    for bi in range(b):
+        for c in range(m):
+            out[:, bi, c * bs:(c + 1) * bs] = pool[:, tables[bi, c]]
+    return out
+
+
+def test_decode_paged_matches_flat_decode_on_gathered_view(setup):
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    rng = np.random.default_rng(7)
+    batch, nb = 3, 10
+    m_blocks = cfg.t_max // BS
+    kc = rng.normal(size=(cfg.layers, nb, BS, cfg.d)).astype(np.float32)
+    vc = rng.normal(size=(cfg.layers, nb, BS, cfg.d)).astype(np.float32)
+    # lanes 0/1 own scrambled non-sentinel blocks; lane 2 is a free lane
+    # (empty table -> all-sentinel padding, pos 0)
+    tables = np.array([[1, 4, 2], [3, 5, 7], [0, 0, 0]], np.int32)
+    assert tables.shape == (batch, m_blocks)
+    tok = np.array([5, 9, 0], np.int32)
+    pos = np.array([2, 17, 0], np.int32)
+
+    kc_flat = gather_numpy(kc, tables)
+    vc_flat = gather_numpy(vc, tables)
+    ref_logits, kn, vn = M.decode(params, tok, kc_flat, vc_flat, pos,
+                                  cfg, gv)
+    out_logits, kc2, vc2 = M.decode_paged(params, tok, kc, vc, pos,
+                                          tables, cfg, gv)
+    np.testing.assert_array_equal(np.asarray(out_logits),
+                                  np.asarray(ref_logits))
+
+    # Expected pool: every lane's new row written through its table;
+    # the free lane's dead row lands in the sentinel block at offset 0.
+    kc_want, vc_want = kc.copy(), vc.copy()
+    for bi in range(batch):
+        blk = tables[bi, pos[bi] // BS]
+        off = pos[bi] % BS
+        kc_want[:, blk, off] = np.asarray(kn)[:, bi]
+        vc_want[:, blk, off] = np.asarray(vn)[:, bi]
+    np.testing.assert_array_equal(np.asarray(kc2), kc_want)
+    np.testing.assert_array_equal(np.asarray(vc2), vc_want)
+    # the sentinel write really happened (free lane parked there)
+    assert not np.array_equal(kc_want[:, 0, 0], kc[:, 0, 0])
+
+
+def test_kv_write_prefill_paged_places_chunks(setup):
+    cfg, _ = setup
+    nb, t = 6, 2 * BS
+    rng = np.random.default_rng(5)
+    kc = rng.normal(size=(cfg.layers, nb, BS, cfg.d)).astype(np.float32)
+    vc = kc * 0.5
+    kp = rng.normal(size=(cfg.layers, 1, t, cfg.d)).astype(np.float32)
+    vp = kp * 2.0
+    ids = np.array([4, 2], np.int32)
+    kc2, vc2 = M.kv_write_prefill_paged(kc, vc, kp, vp, ids)
+    kc2, vc2 = np.asarray(kc2), np.asarray(vc2)
+    np.testing.assert_array_equal(kc2[:, 4], kp[:, 0, :BS])
+    np.testing.assert_array_equal(kc2[:, 2], kp[:, 0, BS:])
+    np.testing.assert_array_equal(vc2[:, 4], vp[:, 0, :BS])
+    np.testing.assert_array_equal(vc2[:, 2], vp[:, 0, BS:])
+    for other in range(nb):
+        if other not in (2, 4):
+            np.testing.assert_array_equal(kc2[:, other], kc[:, other])
+            np.testing.assert_array_equal(vc2[:, other], vc[:, other])
+
+
+def test_decode_paged_consistent_with_score(setup):
+    """Maintain the cache across steps through the paged graphs: logits
+    must still reproduce full-sequence scoring (the serving-path
+    invariant, like the flat decode_resident test)."""
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    rng = np.random.default_rng(0)
+    seq = rng.integers(4, cfg.vocab, size=12).astype(np.int32)
+    t_pre = BS  # one full block, a valid prefill bucket
+
+    full = np.asarray(M.score(params, seq[None, :], cfg, gv))[0]
+
+    nb = 8
+    m_blocks = cfg.t_max // BS
+    kc = jnp.zeros((cfg.layers, nb, BS, cfg.d), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    _, k, v = M.prefill(params, seq[None, :t_pre], cfg, gv)
+    # the sequence owns blocks [5, 3, 6]; prefill fills the first chunk
+    table = np.array([[5, 3, 6]], np.int32)
+    assert table.shape[1] == m_blocks
+    kc, vc = M.kv_write_prefill_paged(kc, vc, k, v,
+                                      np.array([5], np.int32))
+    for i in range(t_pre, 12):
+        logits, kc, vc = M.decode_paged(
+            params, seq[i:i + 1], kc, vc, np.array([i], np.int32),
+            table, cfg, gv)
+        np.testing.assert_allclose(
+            np.asarray(logits)[0], full[i], rtol=1e-4, atol=1e-4)
+
+
+def test_lowered_paged_graphs_have_dus_and_pool_outputs(setup):
+    """The paged entries must lower to HLO with table-indexed DUS
+    appends and the full block pools as outputs."""
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    b = 2
+    bs = aot.PAGED_BLOCK_SIZE
+    cfg16 = M.ModelConfig(name="t16", vocab=cfg.vocab, d=cfg.d,
+                          layers=cfg.layers, heads=cfg.heads,
+                          ffn=cfg.ffn, t_max=2 * bs)
+    params16 = M.init_params(cfg16, seed=2)
+    nb = aot.paged_num_blocks(b, cfg16.t_max)
+    pool = jax.ShapeDtypeStruct((cfg16.layers, nb, bs, cfg16.d),
+                                jnp.float32)
+    tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    tbl = jax.ShapeDtypeStruct((b, cfg16.t_max // bs), jnp.int32)
+    text = aot.lower_graph(
+        lambda p, t_, kc, vc, p_, bt: M.decode_paged(p, t_, kc, vc, p_,
+                                                     bt, cfg16, gv),
+        M.param_specs(params16), tok, pool, pool, pos, tbl)
+    assert "HloModule" in text
+    assert "dynamic-update-slice" in text
+    assert "f32[%d,%d,%d,%d]" % (cfg16.layers, nb, bs, cfg16.d) in text
+
+    pre = jax.ShapeDtypeStruct((cfg16.layers, 1, bs, cfg16.d),
+                               jnp.float32)
+    ids = jax.ShapeDtypeStruct((1,), jnp.int32)
+    text = aot.lower_graph(M.kv_write_prefill_paged, pool, pool, pre,
+                           pre, ids)
+    assert "dynamic-update-slice" in text

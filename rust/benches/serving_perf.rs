@@ -63,6 +63,8 @@ fn main() {
                         .collect(),
                     max_prefill_per_step: 2,
                     host_cache,
+                    paged: None,
+                    admission: Default::default(),
                 };
                 let stats =
                     loadtest::run_loadtest(&m, &cfg, requests, max_new)

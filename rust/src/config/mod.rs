@@ -66,12 +66,32 @@ pub struct GraphInfo {
     pub path: PathBuf,
 }
 
+/// Paged-KV geometry the AOT path lowered the paged graphs with
+/// (DESIGN.md §10).  A decode batch `b` pairs with a pool of
+/// `b * blocks_per_lane + 1` blocks (the `+1` is the sentinel), the same
+/// memory as the flat `(b, t_max)` cache.
+#[derive(Debug, Clone)]
+pub struct PagedServeInfo {
+    pub block_size: usize,
+    pub blocks_per_lane: usize,
+}
+
+impl PagedServeInfo {
+    /// Pool size (including the sentinel) for one decode batch.
+    pub fn num_blocks(&self, decode_batch: usize) -> usize {
+        decode_batch * self.blocks_per_lane + 1
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ServeInfo {
     pub model: String,
     pub methods: Vec<String>,
     pub decode_batches: Vec<usize>,
     pub prefill_shapes: Vec<(usize, usize)>,
+    /// Present when the artifacts carry paged graphs
+    /// (`decode_paged` / `kvwrite_paged`).
+    pub paged: Option<PagedServeInfo>,
 }
 
 #[derive(Debug)]
@@ -224,6 +244,17 @@ impl Manifest {
                 usize_pair(p, &format!("serve.prefill_shapes[{i}]"))
             })
             .collect::<Result<Vec<_>>>()?,
+            paged: match sv.get("paged") {
+                Some(p) => Some(PagedServeInfo {
+                    block_size: p
+                        .usize_at("block_size")
+                        .path_ctx(|| "serve.paged".to_string())?,
+                    blocks_per_lane: p
+                        .usize_at("blocks_per_lane")
+                        .path_ctx(|| "serve.paged".to_string())?,
+                }),
+                None => None,
+            },
         };
 
         let score_shape = usize_pair(v.req("score_shape")?, "score_shape")?;
@@ -340,6 +371,24 @@ mod tests {
         assert!(m.graph("opt-x", "act-none_k0", "score", 8, 96).is_err());
         assert_eq!(m.serve.decode_batches, vec![1, 4]);
         assert_eq!(m.fig3_ranks, vec![1, 2]);
+    }
+
+    #[test]
+    fn parses_paged_serve_info() {
+        let body = MINIMAL.replace(
+            "\"prefill_shapes\": [[1, 16]]",
+            "\"prefill_shapes\": [[1, 16]],
+             \"paged\": {\"block_size\": 16, \"blocks_per_lane\": 10}",
+        );
+        let dir = write_manifest("paged", &body);
+        let m = Manifest::load(&dir).unwrap();
+        let p = m.serve.paged.as_ref().unwrap();
+        assert_eq!(p.block_size, 16);
+        assert_eq!(p.num_blocks(4), 41, "4 lanes x 10 blocks + sentinel");
+        // absent on legacy manifests
+        let m0 =
+            Manifest::load(&write_manifest("paged_none", MINIMAL)).unwrap();
+        assert!(m0.serve.paged.is_none());
     }
 
     #[test]

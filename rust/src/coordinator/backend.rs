@@ -24,6 +24,7 @@ use anyhow::Result;
 
 use super::EngineConfig;
 use crate::config::Manifest;
+use crate::kvcache::paged::{BlockTable, PagedHostKv};
 use crate::kvcache::HostKvMirror;
 use crate::runtime::{DeviceKvSession, ExecStats, ModelRunner, Runtime};
 
@@ -57,6 +58,46 @@ pub trait DecodeBackend {
         active: &[usize],
     ) -> Result<Vec<f32>>;
 
+    // --- paged-KV variants (DESIGN.md §10) -------------------------------
+    //
+    // The engine owns the `BlockAllocator` and per-lane `BlockTable`s;
+    // backends that store their cache block-granularly implement these
+    // and address rows through the tables.  Backends without paged
+    // storage keep the defaults and the engine refuses paged configs.
+
+    /// Whether the backend's cache backing is block-granular.
+    fn supports_paged(&self) -> bool {
+        false
+    }
+
+    /// Paged prefill: like [`Self::prefill_into`], but cache rows land in
+    /// the blocks mapped by `table` (which must cover `len` rows) instead
+    /// of a flat lane.
+    fn prefill_into_paged(
+        &mut self,
+        _slot: usize,
+        _table: &BlockTable,
+        _toks: &[i32],
+        _bucket: usize,
+        _len: usize,
+    ) -> Result<Vec<f32>> {
+        anyhow::bail!("backend has no paged KV backing")
+    }
+
+    /// Paged decode step: `tables` is indexed by lane (free lanes hold an
+    /// empty table).  Appended K/V rows go to
+    /// `tables[lane].physical(pos[lane])`; dead writes of free lanes park
+    /// in the sentinel block.
+    fn decode_paged(
+        &mut self,
+        _tokens: &[i32],
+        _pos: &[i32],
+        _active: &[usize],
+        _tables: &[BlockTable],
+    ) -> Result<Vec<f32>> {
+        anyhow::bail!("backend has no paged KV backing")
+    }
+
     /// Runtime-boundary statistics, when the backend measures them.
     fn exec_stats(&self) -> ExecStats {
         ExecStats::default()
@@ -72,6 +113,19 @@ pub trait DecodeBackend {
 enum CacheBacking {
     Device(DeviceKvSession),
     Host(HostKvMirror),
+    /// Block-pool host storage + the legacy flat `decode` graph as the
+    /// execution oracle: each step gathers the active lanes' rows into
+    /// flat scratch caches, so the paged path is fully working (and
+    /// bit-exact) without PJRT-side paged graphs.
+    PagedHost {
+        kv: PagedHostKv,
+        scratch_k: Vec<f32>,
+        scratch_v: Vec<f32>,
+    },
+    /// Device-resident block pool driven by the `decode_paged` /
+    /// `kvwrite_paged` graphs (block-table index operands); activates
+    /// with a real PJRT backend per ROADMAP.md.
+    PagedDevice(DeviceKvSession),
 }
 
 /// The real backend: PJRT runtime + lowered graphs of one (model, method).
@@ -98,28 +152,57 @@ impl PjrtBackend {
         let tok = crate::tokenizer::Tokenizer::from_file(
             &manifest.data_dir().join("vocab.json"),
         )?;
-        if cfg.host_cache {
-            runner.executable(&rt, &manifest, "decode", cfg.decode_batch,
-                              0)?;
-        } else {
-            runner.executable(&rt, &manifest, "decode_dev",
-                              cfg.decode_batch, 0)?;
-            for &t in &cfg.prefill_buckets {
-                runner.executable(&rt, &manifest, "kvwrite",
-                                  cfg.decode_batch, t)?;
+        match (cfg.host_cache, &cfg.paged) {
+            (true, _) => {
+                runner.executable(&rt, &manifest, "decode",
+                                  cfg.decode_batch, 0)?;
+            }
+            (false, None) => {
+                runner.executable(&rt, &manifest, "decode_dev",
+                                  cfg.decode_batch, 0)?;
+                for &t in &cfg.prefill_buckets {
+                    runner.executable(&rt, &manifest, "kvwrite",
+                                      cfg.decode_batch, t)?;
+                }
+            }
+            (false, Some(p)) => {
+                runner.executable(&rt, &manifest, "decode_paged",
+                                  cfg.decode_batch, 0)?;
+                // kvwrite_paged graphs are keyed by *pool size* in the
+                // manifest (what the runtime knows at lookup time), not
+                // by decode batch.
+                for &t in &cfg.prefill_buckets {
+                    runner.executable(&rt, &manifest, "kvwrite_paged",
+                                      p.num_blocks, t)?;
+                }
             }
         }
         for &t in &cfg.prefill_buckets {
             runner.executable(&rt, &manifest, "prefill", 1, t)?;
         }
-        let backing = if cfg.host_cache {
-            CacheBacking::Host(HostKvMirror::new(
+        let backing = match (cfg.host_cache, &cfg.paged) {
+            (true, None) => CacheBacking::Host(HostKvMirror::new(
                 info.layers, cfg.decode_batch, info.t_max, info.d,
-            ))
-        } else {
-            CacheBacking::Device(DeviceKvSession::new(
+            )),
+            (false, None) => CacheBacking::Device(DeviceKvSession::new(
                 &rt, info.layers, cfg.decode_batch, info.t_max, info.d,
-            )?)
+            )?),
+            (true, Some(p)) => {
+                let n = info.layers * cfg.decode_batch * info.t_max
+                    * info.d;
+                CacheBacking::PagedHost {
+                    kv: PagedHostKv::new(
+                        info.layers, p.num_blocks, p.block_size, info.d,
+                    ),
+                    scratch_k: vec![0.0; n],
+                    scratch_v: vec![0.0; n],
+                }
+            }
+            (false, Some(p)) => {
+                CacheBacking::PagedDevice(DeviceKvSession::new_paged(
+                    &rt, info.layers, p.num_blocks, p.block_size, info.d,
+                )?)
+            }
         };
         Ok((
             PjrtBackend {
@@ -133,11 +216,14 @@ impl PjrtBackend {
         ))
     }
 
-    /// "device" or "host" — for logs and bench tables.
+    /// "device" / "host" / "paged-host" / "paged-device" — for logs and
+    /// bench tables.
     pub fn cache_mode(&self) -> &'static str {
         match self.backing {
             CacheBacking::Device(_) => "device",
             CacheBacking::Host(_) => "host",
+            CacheBacking::PagedHost { .. } => "paged-host",
+            CacheBacking::PagedDevice(_) => "paged-device",
         }
     }
 }
@@ -181,6 +267,10 @@ impl DecodeBackend for PjrtBackend {
                 mirror.write_prefill(slot, &k.data, &v.data, bucket, len)?;
                 Ok(logits.data)
             }
+            CacheBacking::PagedHost { .. }
+            | CacheBacking::PagedDevice(_) => {
+                anyhow::bail!("paged backing requires prefill_into_paged")
+            }
         }
     }
 
@@ -217,6 +307,93 @@ impl DecodeBackend for PjrtBackend {
                 mirror.append_rows(&rows, &k_new.data, &v_new.data)?;
                 Ok(logits.data)
             }
+            CacheBacking::PagedHost { .. }
+            | CacheBacking::PagedDevice(_) => {
+                anyhow::bail!("paged backing requires decode_paged")
+            }
+        }
+    }
+
+    fn supports_paged(&self) -> bool {
+        matches!(
+            self.backing,
+            CacheBacking::PagedHost { .. } | CacheBacking::PagedDevice(_)
+        )
+    }
+
+    fn prefill_into_paged(
+        &mut self,
+        _slot: usize,
+        table: &BlockTable,
+        toks: &[i32],
+        bucket: usize,
+        len: usize,
+    ) -> Result<Vec<f32>> {
+        match &mut self.backing {
+            CacheBacking::PagedHost { kv, .. } => {
+                let (logits, k, v) = self.runner.prefill(
+                    &self.rt, &self.manifest, toks, 1, bucket,
+                )?;
+                kv.write_prefill(table, &k.data, &v.data, bucket, len)?;
+                Ok(logits.data)
+            }
+            CacheBacking::PagedDevice(session) => {
+                // Prefill K/V stay on device; the kvwrite_paged graph
+                // scatters each bucket-chunk into its table block
+                // (padding chunks park in the sentinel).
+                let (logits, k, v) = self.runner.prefill_retained(
+                    &self.rt, &self.manifest, toks, 1, bucket,
+                )?;
+                self.runner.write_prefill_resident_paged(
+                    &self.rt, &self.manifest, session, table, &k, &v,
+                    bucket,
+                )?;
+                Ok(logits.data)
+            }
+            _ => anyhow::bail!("flat backing has no prefill_into_paged"),
+        }
+    }
+
+    fn decode_paged(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        active: &[usize],
+        tables: &[BlockTable],
+    ) -> Result<Vec<f32>> {
+        let t_max = self.runner.model.t_max;
+        match &mut self.backing {
+            CacheBacking::PagedHost { kv, scratch_k, scratch_v } => {
+                // Oracle bridge: gather each active lane's valid rows
+                // into the flat scratch caches and run the legacy flat
+                // decode graph.  Rows at positions >= pos are masked by
+                // the graph, so stale scratch contents are invisible.
+                for &s in active {
+                    kv.gather_lane(
+                        &tables[s], pos[s] as usize, s, self.batch, t_max,
+                        scratch_k, scratch_v,
+                    )?;
+                }
+                let (logits, k_new, v_new) = self.runner.decode(
+                    &self.rt, &self.manifest, tokens, scratch_k,
+                    scratch_v, pos, self.batch,
+                )?;
+                for &s in active {
+                    kv.append_row(
+                        &tables[s], pos[s] as usize, s, self.batch,
+                        &k_new.data, &v_new.data,
+                    )?;
+                }
+                Ok(logits.data)
+            }
+            CacheBacking::PagedDevice(session) => {
+                let logits = self.runner.decode_resident_paged(
+                    &self.rt, &self.manifest, session, tokens, pos,
+                    tables, t_max,
+                )?;
+                Ok(logits.data)
+            }
+            _ => anyhow::bail!("flat backing has no decode_paged"),
         }
     }
 

@@ -127,6 +127,8 @@ pub fn run_judge(
             .collect(),
         max_prefill_per_step: 2,
         host_cache: false,
+        paged: None,
+        admission: super::AdmissionPolicy::default(),
     };
     let gens_a = generate_all(manifest, &mk_cfg(method_a), &prompts,
                               max_new)?;

@@ -90,6 +90,20 @@ pub struct EngineMetrics {
     pub completed: u64,
     /// Requests answered with `FinishReason::Rejected` (admission failed).
     pub rejected: u64,
+    /// Requests answered with `FinishReason::Expired` (admission
+    /// deadline passed while waiting in the queue).
+    pub expired: u64,
+    /// Running sequences evicted to reclaim KV blocks (each is requeued
+    /// and re-prefilled, so one request can be preempted several times).
+    pub preemptions: u64,
+    /// Queue depth at the last metrics snapshot.
+    pub waiting: u64,
+    /// Paged-KV gauges at the last snapshot (0 when the engine runs the
+    /// flat per-lane cache).
+    pub kv_block_size: u64,
+    pub kv_blocks_total: u64,
+    pub kv_blocks_in_use: u64,
+    pub kv_utilization: f64,
     pub tokens_generated: u64,
     pub prefill_steps: u64,
     pub prefill_ns: u64,
@@ -98,6 +112,9 @@ pub struct EngineMetrics {
     pub ttft_ms: LatencyHistogram,
     pub total_ms: LatencyHistogram,
     pub batch_occupancy: LatencyHistogram,
+    /// Pool utilization (percent) sampled at every decode step; its max
+    /// is the peak block pressure of the run.
+    pub kv_util: LatencyHistogram,
     pub exec: ExecStats,
     /// Runtime-boundary stats of the decode entry alone — its
     /// `bytes_per_call()` is the per-decode-step host↔device traffic
@@ -119,14 +136,29 @@ impl EngineMetrics {
     }
 
     pub fn report(&self) -> String {
+        let paged = if self.kv_blocks_total > 0 {
+            format!(
+                " | kv {}/{} blocks ({:.0}% now, {:.0}% peak) | {} \
+                 preempted",
+                self.kv_blocks_in_use,
+                self.kv_blocks_total,
+                self.kv_utilization * 100.0,
+                self.kv_util.max(),
+                self.preemptions,
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "requests {}/{} done ({} rejected) | tokens {} | prefill {} \
+            "requests {}/{} done ({} rejected, {} expired) | tokens {} \
+             | prefill {} \
              steps {:.1} ms avg \
              | decode {} steps {:.2} ms avg | {:.1} tok/s decode | occupancy \
-             {:.2} | ttft p50 {:.0} ms p99 {:.0} ms",
+             {:.2} | ttft p50 {:.0} ms p99 {:.0} ms{paged}",
             self.completed,
             self.submitted,
             self.rejected,
+            self.expired,
             self.tokens_generated,
             self.prefill_steps,
             if self.prefill_steps > 0 {

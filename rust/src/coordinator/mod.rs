@@ -4,24 +4,33 @@
 //! Architecture (vLLM-style, scaled to this testbed):
 //!
 //! ```text
-//!  clients ── submit(Request + reply Sender) ──► admission queue (FIFO)
+//!  clients ── submit(Request + reply Sender) ──► admission queue
+//!                                          (bounded FIFO + deadline)
 //!                                                     │
 //!                                  engine thread (owns PJRT runtime)
 //!                                                     │
 //!        ┌─────────── scheduler iteration ────────────┤
-//!        │ 1. admit waiting requests into free KV slots (prefill, b=1,
-//!        │    bucketed sequence lengths, right-padded); failures free
-//!        │    the slot and answer with FinishReason::Rejected
-//!        │ 2. one batched decode step over all active slots
-//!        │ 3. sample, detect EOS/limits, free slots, send responses
+//!        │ 0. expire waiters past their deadline (FinishReason::Expired)
+//!        │ 1. admit while capacity lasts — a free lane AND (paged mode)
+//!        │    enough free KV blocks; the head otherwise waits (or is
+//!        │    instantly rejected under AdmissionPolicy::RejectOnFull);
+//!        │    failures release lane + blocks and answer Rejected
+//!        │ 2. grow block tables for the next append; if the pool is dry,
+//!        │    preempt the youngest-by-tokens sequence (blocks returned,
+//!        │    request requeued for deterministic re-prefill)
+//!        │ 3. one batched decode step over all active slots
+//!        │ 4. sample, detect EOS/limits, free lanes + blocks, respond
 //!        └────────────────────────────────────────────┘
 //! ```
 //!
 //! The engine is generic over a [`backend::DecodeBackend`]: the scheduler
-//! (slot accounting via [`SlotMap`], sampling, finish detection) is pure
+//! (slot accounting via [`SlotMap`], block accounting via
+//! [`crate::kvcache::paged::BlockAllocator`] + per-lane
+//! [`BlockTable`]s in paged mode, sampling, finish detection) is pure
 //! host logic, while the backend executes the graphs and owns the cache
-//! tensors — device-resident by default, or the legacy host round-trip
-//! behind `EngineConfig::host_cache` (DESIGN.md §6).
+//! tensors — device-resident by default, the legacy host round-trip
+//! behind `EngineConfig::host_cache` (DESIGN.md §6), or the paged block
+//! pool behind `EngineConfig::paged` (DESIGN.md §10).
 //!
 //! The PJRT client is not `Send`, so the engine thread constructs and owns
 //! the entire runtime; callers talk to it exclusively through channels
@@ -41,6 +50,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::kvcache::paged::{BlockAllocator, BlockTable};
 use crate::kvcache::SlotMap;
 use crate::util::rng::Rng;
 
@@ -69,10 +79,14 @@ pub enum FinishReason {
     Eos,
     Length,
     CacheFull,
-    /// The request could not be admitted (empty/over-long prompt, or
-    /// prefill failed); no tokens were generated.  Clients receive this
+    /// The request could not be admitted (empty/over-long prompt,
+    /// prefill failed, or — under [`AdmissionPolicy::RejectOnFull`] —
+    /// no capacity); no tokens were generated.  Clients receive this
     /// instead of a dropped reply channel.
     Rejected,
+    /// The request waited in the admission queue past its deadline
+    /// ([`AdmissionPolicy::Wait`]); no tokens were generated.
+    Expired,
 }
 
 #[derive(Debug, Clone)]
@@ -99,6 +113,42 @@ pub struct EngineHandle {
     join: Option<std::thread::JoinHandle<()>>,
 }
 
+/// Paged-KV geometry (DESIGN.md §10): cache rows live in fixed-size
+/// blocks acquired on demand instead of a flat `T_max`-row lane per
+/// sequence.
+#[derive(Debug, Clone)]
+pub struct PagedKvConfig {
+    /// Token rows per block; must divide every prefill bucket and the
+    /// model's `t_max` (the device DUS lattice writes whole chunks).
+    pub block_size: usize,
+    /// Total pool size including the reserved sentinel block 0, so
+    /// usable capacity is `num_blocks - 1` blocks.
+    pub num_blocks: usize,
+}
+
+/// What happens to a request that does not fit right now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Answer `FinishReason::Rejected` immediately when no lane / KV
+    /// blocks are free — an instant-shed baseline for A/B comparison
+    /// against the paged waiting queue.  (The pre-paging engine held
+    /// over-capacity requests in an *unbounded* queue; that behavior
+    /// is `Wait` with a large depth and no deadline, the default.)
+    RejectOnFull,
+    /// Hold up to `queue_depth` requests in the admission queue (beyond
+    /// that, reject at submit); each may wait up to `deadline_ms`
+    /// (0 = forever) before being answered `FinishReason::Expired`.
+    /// Preempted sequences re-enter at the queue head and may
+    /// transiently exceed `queue_depth`.
+    Wait { queue_depth: usize, deadline_ms: u64 },
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy::Wait { queue_depth: 4096, deadline_ms: 0 }
+    }
+}
+
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -114,6 +164,11 @@ pub struct EngineConfig {
     /// decode step) instead of the device-resident session.  Kept as the
     /// bit-exactness oracle; `false` is the serving default.
     pub host_cache: bool,
+    /// Block-granular KV allocation; `None` keeps the flat per-lane
+    /// reservation.
+    pub paged: Option<PagedKvConfig>,
+    /// Overload behavior of the admission queue.
+    pub admission: AdmissionPolicy,
 }
 
 impl EngineHandle {
@@ -195,6 +250,28 @@ struct Waiting {
     request: Request,
     reply: mpsc::Sender<Response>,
     submitted: Instant,
+    /// True for requests put back by preemption: they were already
+    /// admitted once, so the admission deadline no longer applies
+    /// (expiring them would turn preemption into request loss and
+    /// break the "preemption never changes output" guarantee).
+    preempted: bool,
+}
+
+/// Block accounting of the paged engine: the allocator plus one block
+/// table per decode lane (empty while the lane is free).  The cache
+/// *storage* lives in the backend; this is pure bookkeeping, like
+/// [`SlotMap`].
+struct PagedState {
+    alloc: BlockAllocator,
+    tables: Vec<BlockTable>,
+}
+
+/// Admission plan for the queue head: what admitting it would cost.
+struct AdmitPlan {
+    prompt: Vec<u32>,
+    len: usize,
+    bucket: usize,
+    blocks: usize,
 }
 
 /// The scheduler: generic over the execution backend so tests can drive
@@ -207,6 +284,12 @@ pub struct Engine<B: DecodeBackend> {
     eos: u32,
     waiting: std::collections::VecDeque<Waiting>,
     active: Vec<Option<ActiveSeq>>, // indexed by KV slot
+    paged: Option<PagedState>,
+    /// Reused across ticks so the hot path stops allocating fresh
+    /// active-slot / token / position `Vec`s per decode step.
+    scratch_active: Vec<usize>,
+    scratch_tokens: Vec<i32>,
+    scratch_pos: Vec<i32>,
     metrics: EngineMetrics,
 }
 
@@ -230,6 +313,26 @@ impl<B: DecodeBackend> Engine<B> {
             cfg.decode_batch,
             "backend batch must match decode_batch"
         );
+        let paged = cfg.paged.as_ref().map(|p| {
+            assert!(
+                backend.supports_paged(),
+                "paged engine config over a backend without paged KV"
+            );
+            assert!(p.num_blocks >= 2,
+                    "paged pool needs >= 2 blocks (block 0 is the sentinel)");
+            assert_eq!(backend.t_max() % p.block_size, 0,
+                       "block_size must divide t_max");
+            for &b in &cfg.prefill_buckets {
+                assert_eq!(b % p.block_size, 0,
+                           "block_size must divide prefill bucket {b}");
+            }
+            PagedState {
+                alloc: BlockAllocator::new(p.num_blocks, p.block_size),
+                tables: (0..cfg.decode_batch)
+                    .map(|_| BlockTable::new())
+                    .collect(),
+            }
+        });
         let slots = SlotMap::new(cfg.decode_batch, backend.t_max());
         let active = (0..cfg.decode_batch).map(|_| None).collect();
         Engine {
@@ -239,19 +342,36 @@ impl<B: DecodeBackend> Engine<B> {
             eos,
             waiting: Default::default(),
             active,
+            paged,
+            scratch_active: Vec::new(),
+            scratch_tokens: Vec::new(),
+            scratch_pos: Vec::new(),
             metrics: EngineMetrics::default(),
         }
     }
 
     /// Queue a request for admission (the threaded path does this from
-    /// `Msg::Submit`).
+    /// `Msg::Submit`).  Under [`AdmissionPolicy::Wait`] the queue is
+    /// bounded: overflow is answered `Rejected` immediately rather than
+    /// queued forever.
     pub fn enqueue(&mut self, request: Request, reply: mpsc::Sender<Response>) {
         self.metrics.submitted += 1;
-        self.waiting.push_back(Waiting {
+        let w = Waiting {
             request,
             reply,
             submitted: Instant::now(),
-        });
+            preempted: false,
+        };
+        if let AdmissionPolicy::Wait { queue_depth, .. } =
+            self.cfg.admission
+        {
+            if self.waiting.len() >= queue_depth {
+                self.reject(w, "admission queue full",
+                            FinishReason::Rejected);
+                return;
+            }
+        }
+        self.waiting.push_back(w);
     }
 
     /// Anything queued or in flight?
@@ -268,11 +388,28 @@ impl<B: DecodeBackend> Engine<B> {
         self.slots.batch()
     }
 
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Free blocks in the paged pool (0 when flat).
+    pub fn free_blocks(&self) -> usize {
+        self.paged.as_ref().map(|p| p.alloc.free_count()).unwrap_or(0)
+    }
+
     pub fn metrics_snapshot(&self) -> EngineMetrics {
         let mut m = self.metrics.clone();
         m.exec = self.backend.exec_stats();
         m.decode_exec = self.backend.entry_stats("decode");
         m.decode_exec.merge(&self.backend.entry_stats("decode_dev"));
+        m.decode_exec.merge(&self.backend.entry_stats("decode_paged"));
+        m.waiting = self.waiting.len() as u64;
+        if let Some(p) = &self.paged {
+            m.kv_block_size = p.alloc.block_size() as u64;
+            m.kv_blocks_total = p.alloc.capacity() as u64;
+            m.kv_blocks_in_use = p.alloc.in_use() as u64;
+            m.kv_utilization = p.alloc.utilization();
+        }
         m
     }
 
@@ -313,47 +450,90 @@ impl<B: DecodeBackend> Engine<B> {
         }
     }
 
-    /// One scheduler iteration: admit waiting requests into free slots,
-    /// then run one batched decode step over all active slots.
+    /// One scheduler iteration: expire overdue waiters, admit queued
+    /// requests while capacity (lanes *and* KV blocks) lasts, then run
+    /// one batched decode step over all active slots.
     pub fn tick(&mut self) {
+        self.expire_waiting();
         let mut admitted = 0;
         while admitted < self.cfg.max_prefill_per_step
-            && self.slots.free_count() > 0
             && !self.waiting.is_empty()
         {
-            let w = self.waiting.pop_front().unwrap();
-            self.admit(w);
-            admitted += 1;
+            if self.slots.free_count() == 0
+                && matches!(self.cfg.admission,
+                            AdmissionPolicy::Wait { .. })
+            {
+                // No lane: the head waits.  Checked before planning so
+                // a blocked head is not re-planned (prompt re-filtered
+                // and re-allocated) on every decode tick.
+                break;
+            }
+            match self.plan_admission(&self.waiting[0].request) {
+                Err(why) => {
+                    // Permanently unservable regardless of capacity.
+                    let w = self.waiting.pop_front().unwrap();
+                    self.reject(w, &why, FinishReason::Rejected);
+                }
+                Ok(plan) if self.has_capacity(&plan) => {
+                    let w = self.waiting.pop_front().unwrap();
+                    self.admit(w, plan);
+                    admitted += 1;
+                }
+                // Capacity miss.  Preempted entries always wait — they
+                // were already admitted once, and shedding them would
+                // turn preemption into request loss even under
+                // RejectOnFull.
+                Ok(_) => match self.cfg.admission {
+                    AdmissionPolicy::RejectOnFull
+                        if !self.waiting[0].preempted =>
+                    {
+                        let w = self.waiting.pop_front().unwrap();
+                        self.reject(w, "no free KV capacity",
+                                    FinishReason::Rejected);
+                    }
+                    _ => break, // head waits
+                },
+            }
         }
 
-        if !self.slots.active_slots().is_empty() {
+        if self.slots.any_active() {
             if let Err(e) = self.decode_step() {
                 crate::info!("decode step failed: {e:#}");
             }
         }
     }
 
-    /// Answer a request that cannot be served; the slot (if any) has
-    /// already been freed by the caller.
-    fn reject(&mut self, w: Waiting, why: &str) {
-        crate::info!("request {} rejected: {why}", w.request.id);
-        self.metrics.rejected += 1;
-        let total_ms = w.submitted.elapsed().as_secs_f64() * 1e3;
-        let _ = w.reply.send(Response {
-            id: w.request.id,
-            prompt_len: w.request.prompt.len(),
-            tokens: Vec::new(),
-            finish: FinishReason::Rejected,
-            ttft_ms: total_ms,
-            total_ms,
-        });
+    /// Drop queue entries whose admission deadline has passed, answering
+    /// each with `FinishReason::Expired`.
+    fn expire_waiting(&mut self) {
+        let AdmissionPolicy::Wait { deadline_ms, .. } = self.cfg.admission
+        else {
+            return;
+        };
+        if deadline_ms == 0 {
+            return;
+        }
+        let deadline = std::time::Duration::from_millis(deadline_ms);
+        let mut i = 0;
+        while i < self.waiting.len() {
+            if !self.waiting[i].preempted
+                && self.waiting[i].submitted.elapsed() >= deadline
+            {
+                let w = self.waiting.remove(i).unwrap();
+                self.reject(w, "admission deadline exceeded",
+                            FinishReason::Expired);
+            } else {
+                i += 1;
+            }
+        }
     }
 
-    fn admit(&mut self, w: Waiting) {
+    /// What admitting this request costs, or why it can never be served.
+    fn plan_admission(&self, request: &Request)
+        -> Result<AdmitPlan, String> {
         let vocab = self.backend.vocab();
         let t_max = self.backend.t_max();
-        let prompt: Vec<u32> = w
-            .request
+        let prompt: Vec<u32> = request
             .prompt
             .iter()
             .copied()
@@ -361,19 +541,96 @@ impl<B: DecodeBackend> Engine<B> {
             .collect();
         let len = prompt.len().min(t_max - 1);
         if len == 0 {
-            self.reject(w, "empty prompt");
-            return;
+            return Err("empty prompt".into());
         }
         let Some(bucket) =
             batching::pick_bucket(&self.cfg.prefill_buckets, len)
         else {
-            self.reject(w, "prompt longer than any prefill bucket");
-            return;
+            return Err("prompt longer than any prefill bucket".into());
         };
+        let blocks = match &self.paged {
+            Some(p) => {
+                let need = p.alloc.blocks_for_rows(len);
+                if need > p.alloc.capacity() {
+                    return Err(format!(
+                        "prompt needs {need} blocks, pool holds only {}",
+                        p.alloc.capacity()
+                    ));
+                }
+                need
+            }
+            None => 0,
+        };
+        Ok(AdmitPlan { prompt, len, bucket, blocks })
+    }
+
+    /// Can the queue head be admitted *now*?  Flat mode counts lanes;
+    /// paged mode additionally counts free blocks.
+    fn has_capacity(&self, plan: &AdmitPlan) -> bool {
+        if self.slots.free_count() == 0 {
+            return false;
+        }
+        match &self.paged {
+            Some(p) => p.alloc.free_count() >= plan.blocks,
+            None => true,
+        }
+    }
+
+    /// Return a lane's blocks (if paged) and the lane itself.
+    fn release_slot(&mut self, slot: usize) {
+        if let Some(p) = &mut self.paged {
+            for id in p.tables[slot].take_blocks() {
+                p.alloc.free(id);
+            }
+        }
+        self.slots.free(slot);
+    }
+
+    /// Answer a request that will not be served; the slot (if any) has
+    /// already been released by the caller.  Every terminal outcome —
+    /// rejected or expired — records a latency sample so the p50/p99
+    /// histograms are not survivorship-biased toward served requests.
+    fn reject(&mut self, w: Waiting, why: &str, finish: FinishReason) {
+        crate::info!("request {} {:?}: {why}", w.request.id, finish);
+        match finish {
+            FinishReason::Expired => self.metrics.expired += 1,
+            _ => self.metrics.rejected += 1,
+        }
+        let total_ms = w.submitted.elapsed().as_secs_f64() * 1e3;
+        self.metrics.ttft_ms.record(total_ms);
+        self.metrics.total_ms.record(total_ms);
+        let _ = w.reply.send(Response {
+            id: w.request.id,
+            prompt_len: w.request.prompt.len(),
+            tokens: Vec::new(),
+            finish,
+            ttft_ms: total_ms,
+            total_ms,
+        });
+    }
+
+    fn admit(&mut self, w: Waiting, plan: AdmitPlan) {
+        let vocab = self.backend.vocab();
+        let AdmitPlan { prompt, len, bucket, blocks } = plan;
         let Some(slot) = self.slots.alloc(w.request.id) else {
-            self.reject(w, "no free KV slot");
+            self.reject(w, "no free KV slot", FinishReason::Rejected);
             return;
         };
+        if let Some(p) = &mut self.paged {
+            debug_assert!(p.tables[slot].is_empty(), "stale block table");
+            for _ in 0..blocks {
+                match p.alloc.alloc() {
+                    Some(id) => p.tables[slot].push(id),
+                    None => {
+                        // has_capacity checked free blocks; defensive.
+                        self.release_slot(slot);
+                        self.reject(w, "block pool exhausted",
+                                    FinishReason::Rejected);
+                        return;
+                    }
+                }
+            }
+        }
 
         // Right-pad the prompt to the bucket length.
         let mut toks = vec![0i32; bucket];
@@ -381,28 +638,36 @@ impl<B: DecodeBackend> Engine<B> {
             toks[i] = *t as i32;
         }
         let t0 = Instant::now();
-        let logits =
-            match self.backend.prefill_into(slot, &toks, bucket, len) {
-                Ok(l) => l,
-                Err(e) => {
-                    // Prefill failed after the slot was claimed: free it
-                    // (this used to leak) and answer with Rejected
-                    // instead of dropping the reply sender.
-                    self.slots.free(slot);
-                    self.reject(w, &format!("prefill failed: {e:#}"));
-                    return;
-                }
-            };
+        let prefilled = match &self.paged {
+            Some(p) => self.backend.prefill_into_paged(
+                slot, &p.tables[slot], &toks, bucket, len,
+            ),
+            None => self.backend.prefill_into(slot, &toks, bucket, len),
+        };
+        let logits = match prefilled {
+            Ok(l) => l,
+            Err(e) => {
+                // Prefill failed after the slot was claimed: release it
+                // (this used to leak) and answer with Rejected instead
+                // of dropping the reply sender.
+                self.release_slot(slot);
+                self.reject(w, &format!("prefill failed: {e:#}"),
+                            FinishReason::Rejected);
+                return;
+            }
+        };
         self.metrics.prefill_steps += 1;
         self.metrics.prefill_ns += t0.elapsed().as_nanos() as u64;
         if logits.len() < bucket * vocab {
-            self.slots.free(slot);
-            self.reject(w, "prefill returned short logits");
+            self.release_slot(slot);
+            self.reject(w, "prefill returned short logits",
+                        FinishReason::Rejected);
             return;
         }
         if let Err(e) = self.slots.set_pos(slot, len) {
-            self.slots.free(slot);
-            self.reject(w, &format!("slot update failed: {e:#}"));
+            self.release_slot(slot);
+            self.reject(w, &format!("slot update failed: {e:#}"),
+                        FinishReason::Rejected);
             return;
         }
 
@@ -430,29 +695,118 @@ impl<B: DecodeBackend> Engine<B> {
         self.maybe_finish(slot);
     }
 
+    /// Grow each active lane's block table to cover the row its next
+    /// append will write.  When the pool runs dry, evict the
+    /// youngest-by-tokens running sequence — its blocks return to the
+    /// pool and the request re-enters the queue head for re-prefill
+    /// (deterministic sampling replays the same stream) — so throughput
+    /// degrades gracefully instead of failing requests.
+    fn ensure_paged_capacity(&mut self) {
+        let Some(p) = &self.paged else { return };
+        let bs = p.alloc.block_size();
+        loop {
+            let needy = {
+                let p = self.paged.as_ref().unwrap();
+                self.slots.active_iter().find(|&s| {
+                    self.slots.pos(s) >= p.tables[s].capacity_rows(bs)
+                })
+            };
+            let Some(s) = needy else { return };
+            let p = self.paged.as_mut().unwrap();
+            if let Some(id) = p.alloc.alloc() {
+                p.tables[s].push(id);
+                continue;
+            }
+            let victim = self
+                .slots
+                .active_iter()
+                .min_by_key(|&x| (self.slots.pos(x), x))
+                .expect("needy lane implies an active lane");
+            if victim == s && self.slots.active_iter().count() == 1 {
+                // Alone and out of memory: evicting itself would replay
+                // straight into the same wall, so finish with what fits.
+                crate::info!(
+                    "request {} hit the block pool ceiling",
+                    self.active[s].as_ref().unwrap().request.id
+                );
+                self.finish(s, FinishReason::CacheFull);
+                return;
+            }
+            self.preempt(victim);
+        }
+    }
+
+    /// Evict a running sequence: return its blocks, free its lane, and
+    /// requeue the original request at the queue head for re-prefill.
+    fn preempt(&mut self, slot: usize) {
+        let seq = self.active[slot].take().expect("preempt of free lane");
+        crate::info!(
+            "preempting request {} (slot {slot}, {} cache rows): pool dry",
+            seq.request.id,
+            self.slots.pos(slot)
+        );
+        self.release_slot(slot);
+        self.metrics.preemptions += 1;
+        // Generated tokens are discarded; greedy and seeded top-k both
+        // replay identically after re-prefill, and the original submit
+        // time is kept so latency metrics stay honest.  `preempted`
+        // exempts the entry from the admission deadline — it was
+        // already admitted once.
+        self.waiting.push_front(Waiting {
+            request: seq.request,
+            reply: seq.reply,
+            submitted: seq.submitted,
+            preempted: true,
+        });
+    }
+
     fn decode_step(&mut self) -> Result<()> {
         let b = self.slots.batch();
-        let active = self.slots.active_slots();
-        if active.is_empty() {
+        if self.paged.is_some() {
+            self.ensure_paged_capacity();
+        }
+        self.slots.active_into(&mut self.scratch_active);
+        if self.scratch_active.is_empty() {
             return Ok(());
         }
-        let mut tokens = vec![0i32; b];
-        for &s in &active {
-            tokens[s] = self.active[s].as_ref().unwrap().last_token as i32;
+        self.scratch_tokens.clear();
+        self.scratch_tokens.resize(b, 0);
+        for i in 0..self.scratch_active.len() {
+            let s = self.scratch_active[i];
+            self.scratch_tokens[s] =
+                self.active[s].as_ref().unwrap().last_token as i32;
         }
-        let pos = self.slots.pos_vector();
+        self.slots.pos_into(&mut self.scratch_pos);
         let t0 = Instant::now();
-        let logits = self.backend.decode(&tokens, &pos, &active)?;
+        let logits = match &self.paged {
+            Some(p) => self.backend.decode_paged(
+                &self.scratch_tokens,
+                &self.scratch_pos,
+                &self.scratch_active,
+                &p.tables,
+            )?,
+            None => self.backend.decode(
+                &self.scratch_tokens,
+                &self.scratch_pos,
+                &self.scratch_active,
+            )?,
+        };
         self.metrics.decode_steps += 1;
         self.metrics.decode_ns += t0.elapsed().as_nanos() as u64;
-        self.metrics.batch_occupancy.record(active.len() as f64);
+        self.metrics
+            .batch_occupancy
+            .record(self.scratch_active.len() as f64);
+        if let Some(p) = &self.paged {
+            self.metrics.kv_util.record(p.alloc.utilization() * 100.0);
+        }
 
         // The backend appended this step's K/V rows; account for them.
-        self.slots.advance(&active)?;
+        self.slots.advance(&self.scratch_active)?;
 
         let vsize = self.backend.vocab();
         anyhow::ensure!(logits.len() >= b * vsize, "decode logits size");
-        for &s in &active {
+        for i in 0..self.scratch_active.len() {
+            let s = self.scratch_active[i];
             let row = &logits[s * vsize..(s + 1) * vsize];
             let seq = self.active[s].as_mut().unwrap();
             let tok = sample(row, seq.request.sampling, &mut seq.rng);
@@ -480,21 +834,27 @@ impl<B: DecodeBackend> Engine<B> {
             }
         };
         if let Some(reason) = finish {
-            let seq = self.active[slot].take().unwrap();
-            self.slots.free(slot);
-            let total_ms = seq.submitted.elapsed().as_secs_f64() * 1e3;
-            self.metrics.completed += 1;
-            self.metrics.ttft_ms.record(seq.ttft_ms.unwrap_or(total_ms));
-            self.metrics.total_ms.record(total_ms);
-            let _ = seq.reply.send(Response {
-                id: seq.request.id,
-                prompt_len: seq.request.prompt.len(),
-                tokens: seq.generated,
-                finish: reason,
-                ttft_ms: seq.ttft_ms.unwrap_or(total_ms),
-                total_ms,
-            });
+            self.finish(slot, reason);
         }
+    }
+
+    /// Complete a running sequence: release its lane + blocks and send
+    /// the response.
+    fn finish(&mut self, slot: usize, reason: FinishReason) {
+        let seq = self.active[slot].take().unwrap();
+        self.release_slot(slot);
+        let total_ms = seq.submitted.elapsed().as_secs_f64() * 1e3;
+        self.metrics.completed += 1;
+        self.metrics.ttft_ms.record(seq.ttft_ms.unwrap_or(total_ms));
+        self.metrics.total_ms.record(total_ms);
+        let _ = seq.reply.send(Response {
+            id: seq.request.id,
+            prompt_len: seq.request.prompt.len(),
+            tokens: seq.generated,
+            finish: reason,
+            ttft_ms: seq.ttft_ms.unwrap_or(total_ms),
+            total_ms,
+        });
     }
 }
 

@@ -165,6 +165,14 @@ fn route(
                     ("submitted", json::num(m.submitted as f64)),
                     ("completed", json::num(m.completed as f64)),
                     ("rejected", json::num(m.rejected as f64)),
+                    ("expired", json::num(m.expired as f64)),
+                    ("waiting", json::num(m.waiting as f64)),
+                    ("preemptions", json::num(m.preemptions as f64)),
+                    ("kv_blocks_in_use",
+                     json::num(m.kv_blocks_in_use as f64)),
+                    ("kv_blocks_total",
+                     json::num(m.kv_blocks_total as f64)),
+                    ("kv_utilization", json::num(m.kv_utilization)),
                     ("tokens_generated",
                      json::num(m.tokens_generated as f64)),
                     ("decode_steps", json::num(m.decode_steps as f64)),

@@ -26,10 +26,19 @@
 //! over a multi-request continuous-batching trace, which is the same
 //! masking argument that makes the real device path bit-exact with the
 //! host oracle.
+//!
+//! [`FakeBackend::new_paged`] builds the paged twin (DESIGN.md §10): a
+//! `(L, num_blocks, block_size, d)` block pool addressed through the
+//! engine's block tables, emulating both paged write patterns (host:
+//! valid rows of active lanes only; device: every lane each step +
+//! whole padded prefill, with dead writes parked in the sentinel
+//! block).  rust/tests/paged_kv.rs drives the same golden argument
+//! across flat and paged engines.
 
 use anyhow::Result;
 
 use super::backend::DecodeBackend;
+use crate::kvcache::paged::{BlockTable, PagedHostKv, SENTINEL_BLOCK};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FakeCacheMode {
@@ -46,6 +55,10 @@ pub struct FakeBackend {
     mode: FakeCacheMode,
     k: Vec<f32>, // (L, B, T_max, d)
     v: Vec<f32>,
+    /// Block-pool backing of the paged variant — the *real*
+    /// [`PagedHostKv`] store, so the golden tests exercise its layout
+    /// rather than a re-implementation.
+    paged: Option<(PagedHostKv, usize)>, // (pool, block_size)
     /// Fail `prefill_into` when the prompt's first token equals this —
     /// lets tests exercise the admission-failure path after slot alloc.
     pub fail_prefill_token: Option<i32>,
@@ -70,8 +83,32 @@ impl FakeBackend {
             mode,
             k: vec![0.0; n],
             v: vec![0.0; n],
+            paged: None,
             fail_prefill_token: None,
         }
+    }
+
+    /// A paged twin: cache rows live in a `(L, num_blocks, block_size,
+    /// d)` pool addressed through the engine's block tables, emulating
+    /// the paged write patterns of both cache modes (`Host`: only valid
+    /// rows of active lanes; `Device`: every lane + whole padded
+    /// prefill, dead writes parked in the sentinel block).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_paged(
+        mode: FakeCacheMode,
+        vocab: usize,
+        layers: usize,
+        d: usize,
+        t_max: usize,
+        batch: usize,
+        num_blocks: usize,
+        block_size: usize,
+    ) -> FakeBackend {
+        let mut be = Self::new(mode, vocab, layers, d, t_max, batch);
+        be.paged =
+            Some((PagedHostKv::new(layers, num_blocks, block_size, d),
+                  block_size));
+        be
     }
 
     pub fn mode(&self) -> FakeCacheMode {
@@ -124,6 +161,92 @@ impl FakeBackend {
             }
         }
     }
+
+    // --- paged-pool variants --------------------------------------------
+
+    /// Physical (block, offset) of logical row `p`; rows beyond the
+    /// table park in the sentinel block — exactly the dead-write rule of
+    /// the `decode_paged`/`kvwrite_paged` DUS lattice.
+    fn physical_or_sentinel(table: &BlockTable, p: usize, bs: usize)
+        -> (u32, usize) {
+        table
+            .physical(p, bs)
+            .unwrap_or((SENTINEL_BLOCK, p % bs))
+    }
+
+    /// Logits of the lane mapped by `table` with `pos_now` visible rows —
+    /// same accumulation order as [`Self::lane_logits`], reading the
+    /// block pool through the table, so flat and paged runs produce
+    /// bit-identical values.
+    fn lane_logits_paged(&self, table: &BlockTable, pos_now: usize,
+                         tok: i32) -> Vec<f32> {
+        let (store, bs) = self.paged.as_ref().expect("paged store");
+        let mut s = 0.0f64;
+        for l in 0..self.layers {
+            for p in 0..pos_now.min(self.t_max) {
+                let (block, off) =
+                    Self::physical_or_sentinel(table, p, *bs);
+                let (kr, vr) = store.rows_at(l, block, off);
+                for j in 0..self.d {
+                    let w = ((l + 3 * p + 7 * j) % 13 + 1) as f64;
+                    s += kr[j] as f64 * w + vr[j] as f64 * (w + 0.5);
+                }
+            }
+        }
+        s += tok as f64 * 0.618;
+        (0..self.vocab)
+            .map(|vv| ((s * (vv as f64 + 1.0)).sin()) as f32)
+            .collect()
+    }
+
+    fn write_row_paged(&mut self, table: &BlockTable, tok: i32, p: usize) {
+        let layers = self.layers;
+        let d = self.d;
+        let (store, bs) = self.paged.as_mut().expect("paged store");
+        let (block, off) = Self::physical_or_sentinel(table, p, *bs);
+        for l in 0..layers {
+            let (kr, vr) = store.rows_at_mut(l, block, off);
+            for j in 0..d {
+                let (kv, vv) = Self::kv_row(l, tok, p, j);
+                kr[j] = kv;
+                vr[j] = vv;
+            }
+        }
+    }
+
+    /// Staged prefill shared by the flat and paged entry points:
+    /// per-position logits plus the K/V rows the prompt produces
+    /// (cache-independent, like the real prefill graph).
+    fn staged_prefill(&self, toks: &[i32], bucket: usize)
+        -> (Vec<f32>, Vec<(f32, f32)>) {
+        let mut logits = Vec::with_capacity(bucket * self.vocab);
+        let mut rows: Vec<(f32, f32)> =
+            vec![(0.0, 0.0); self.layers * bucket * self.d];
+        for (p, &tok) in toks.iter().enumerate() {
+            let mut s = 0.0f64;
+            for l in 0..self.layers {
+                for q in 0..p {
+                    for j in 0..self.d {
+                        let w = ((l + 3 * q + 7 * j) % 13 + 1) as f64;
+                        let (kv, vv) = rows[(l * bucket + q) * self.d + j];
+                        s += kv as f64 * w + vv as f64 * (w + 0.5);
+                    }
+                }
+            }
+            s += tok as f64 * 0.618;
+            logits.extend(
+                (0..self.vocab)
+                    .map(|vv| ((s * (vv as f64 + 1.0)).sin()) as f32),
+            );
+            for l in 0..self.layers {
+                for j in 0..self.d {
+                    rows[(l * bucket + p) * self.d + j] =
+                        Self::kv_row(l, tok, p, j);
+                }
+            }
+        }
+        (logits, rows)
+    }
 }
 
 impl DecodeBackend for FakeBackend {
@@ -150,37 +273,7 @@ impl DecodeBackend for FakeBackend {
         if self.fail_prefill_token == Some(toks[0]) {
             anyhow::bail!("injected prefill failure");
         }
-        // Stage the prefill rows (cache-independent, like the real
-        // prefill graph), computing logits per position as we go.
-        let mut logits = Vec::with_capacity(bucket * self.vocab);
-        let mut rows: Vec<(f32, f32)> =
-            vec![(0.0, 0.0); self.layers * bucket * self.d];
-        for (p, &tok) in toks.iter().enumerate() {
-            // logits at position p: rows < p + current token.  Reuse
-            // lane_logits by temporarily not touching the main cache:
-            // compute from the staging rows directly.
-            let mut s = 0.0f64;
-            for l in 0..self.layers {
-                for q in 0..p {
-                    for j in 0..self.d {
-                        let w = ((l + 3 * q + 7 * j) % 13 + 1) as f64;
-                        let (kv, vv) = rows[(l * bucket + q) * self.d + j];
-                        s += kv as f64 * w + vv as f64 * (w + 0.5);
-                    }
-                }
-            }
-            s += tok as f64 * 0.618;
-            logits.extend(
-                (0..self.vocab)
-                    .map(|vv| ((s * (vv as f64 + 1.0)).sin()) as f32),
-            );
-            for l in 0..self.layers {
-                for j in 0..self.d {
-                    rows[(l * bucket + p) * self.d + j] =
-                        Self::kv_row(l, tok, p, j);
-                }
-            }
-        }
+        let (logits, rows) = self.staged_prefill(toks, bucket);
         // Install into the backing cache with the mode's write pattern.
         let copy_rows = match self.mode {
             FakeCacheMode::Host => len,      // only valid rows
@@ -193,6 +286,99 @@ impl DecodeBackend for FakeBackend {
                     let idx = self.at(l, slot, p, j);
                     self.k[idx] = kv;
                     self.v[idx] = vv;
+                }
+            }
+        }
+        Ok(logits)
+    }
+
+    fn supports_paged(&self) -> bool {
+        self.paged.is_some()
+    }
+
+    fn prefill_into_paged(
+        &mut self,
+        _slot: usize,
+        table: &BlockTable,
+        toks: &[i32],
+        bucket: usize,
+        len: usize,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(toks.len() == bucket, "prefill bucket");
+        anyhow::ensure!(self.paged.is_some(), "not a paged backend");
+        if self.fail_prefill_token == Some(toks[0]) {
+            anyhow::bail!("injected prefill failure");
+        }
+        let (logits, rows) = self.staged_prefill(toks, bucket);
+        // Same per-mode write pattern as the flat path, but addressed
+        // through the block table; Device-mode padding chunks beyond the
+        // table land in the sentinel block (kvwrite_paged contract).
+        let copy_rows = match self.mode {
+            FakeCacheMode::Host => len,
+            FakeCacheMode::Device => bucket,
+        };
+        let (layers, d, mode) = (self.layers, self.d, self.mode);
+        let (store, bs) = self.paged.as_mut().unwrap();
+        for p in 0..copy_rows.min(self.t_max) {
+            anyhow::ensure!(
+                mode == FakeCacheMode::Device
+                    || table.physical(p, *bs).is_some(),
+                "prefill row {p} beyond table"
+            );
+            let (block, off) = Self::physical_or_sentinel(table, p, *bs);
+            for l in 0..layers {
+                let (kr, vr) = store.rows_at_mut(l, block, off);
+                for j in 0..d {
+                    let (kv, vv) = rows[(l * bucket + p) * d + j];
+                    kr[j] = kv;
+                    vr[j] = vv;
+                }
+            }
+        }
+        Ok(logits)
+    }
+
+    fn decode_paged(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        active: &[usize],
+        tables: &[BlockTable],
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            tokens.len() == self.batch
+                && pos.len() == self.batch
+                && tables.len() == self.batch,
+            "decode batch"
+        );
+        anyhow::ensure!(self.paged.is_some(), "not a paged backend");
+        let mut logits = vec![0.0f32; self.batch * self.vocab];
+        for b in 0..self.batch {
+            let row = self.lane_logits_paged(
+                &tables[b], pos[b] as usize, tokens[b]);
+            logits[b * self.vocab..(b + 1) * self.vocab]
+                .copy_from_slice(&row);
+        }
+        match self.mode {
+            FakeCacheMode::Device => {
+                // The paged DUS lattice writes a row for every lane;
+                // free lanes (empty tables, pos 0) park in the sentinel.
+                for b in 0..self.batch {
+                    self.write_row_paged(&tables[b], tokens[b],
+                                         pos[b] as usize);
+                }
+            }
+            FakeCacheMode::Host => {
+                let bs = self.paged.as_ref().unwrap().1;
+                for &s in active {
+                    anyhow::ensure!(
+                        tables[s]
+                            .physical(pos[s] as usize, bs)
+                            .is_some(),
+                        "append row beyond table for lane {s}"
+                    );
+                    self.write_row_paged(&tables[s], tokens[s],
+                                         pos[s] as usize);
                 }
             }
         }

@@ -20,6 +20,8 @@
 //! * `pos(slot) <= t_max` always; append past `t_max` is rejected,
 //! * freeing zeroes occupancy so the scheduler's accounting stays exact.
 
+pub mod paged;
+
 use anyhow::Result;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,9 +62,28 @@ impl SlotMap {
     }
 
     pub fn active_slots(&self) -> Vec<usize> {
-        (0..self.slots.len())
-            .filter(|&i| matches!(self.slots[i], Slot::Active { .. }))
-            .collect()
+        self.active_iter().collect()
+    }
+
+    /// Active slot indices without allocating (hot path: `Engine::tick`
+    /// used to build a fresh `Vec` per tick via [`Self::active_slots`]).
+    pub fn active_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s, Slot::Active { .. }))
+            .map(|(i, _)| i)
+    }
+
+    /// Fill a caller-owned scratch buffer with the active slot indices
+    /// (cleared first), reusing its capacity across ticks.
+    pub fn active_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(self.active_iter());
+    }
+
+    pub fn any_active(&self) -> bool {
+        self.slots.iter().any(|s| matches!(s, Slot::Active { .. }))
     }
 
     pub fn pos(&self, slot: usize) -> usize {
@@ -122,7 +143,16 @@ impl SlotMap {
 
     /// Position vector (length B) for the decode graphs.
     pub fn pos_vector(&self) -> Vec<i32> {
-        (0..self.slots.len()).map(|i| self.pos(i) as i32).collect()
+        let mut out = Vec::new();
+        self.pos_into(&mut out);
+        out
+    }
+
+    /// Fill a caller-owned position vector (cleared first), reusing its
+    /// capacity across decode steps.
+    pub fn pos_into(&self, out: &mut Vec<i32>) {
+        out.clear();
+        out.extend((0..self.slots.len()).map(|i| self.pos(i) as i32));
     }
 }
 
@@ -418,6 +448,21 @@ mod tests {
         m.advance(&[s]).unwrap();
         assert_eq!(m.pos(s), 4);
         assert_eq!(m.request_id(s), Some(9));
+    }
+
+    #[test]
+    fn active_into_reuses_buffer_and_matches_active_slots() {
+        let mut m = SlotMap::new(3, 4);
+        assert!(!m.any_active());
+        let a = m.alloc(1).unwrap();
+        let b = m.alloc(2).unwrap();
+        assert!(m.any_active());
+        let mut buf = vec![99usize; 8]; // stale contents must be cleared
+        m.active_into(&mut buf);
+        assert_eq!(buf, m.active_slots());
+        m.free(a);
+        m.active_into(&mut buf);
+        assert_eq!(buf, vec![b]);
     }
 
     #[test]

@@ -1,0 +1,473 @@
+//! Paged KV cache: block-granular allocation over a shared pool
+//! (DESIGN.md §10).
+//!
+//! The flat [`super::HostKvMirror`] reserves a full `T_max`-row lane per
+//! sequence, so a 12-token decode strands `T_max - 12` rows and admission
+//! capacity is `batch`, not memory.  This module splits storage into
+//! fixed-size blocks of `block_size` token rows (vLLM-style):
+//!
+//! * [`BlockAllocator`] — free-list over the block pool.  Block 0 is the
+//!   **sentinel**: never handed out, it is where the device DUS lattice
+//!   parks the dead writes of free lanes (the flat `decode_dev` graph
+//!   wrote those into the lane's own region; a paged graph needs a
+//!   harmless physical target).  Usable capacity is `num_blocks - 1`.
+//! * [`BlockTable`] — one sequence's ordered block list.  Logical row
+//!   `r` lives at `(blocks[r / block_size], r % block_size)`.
+//! * [`PagedHostKv`] — host K/V arrays of shape
+//!   `(L, num_blocks, block_size, d)` addressed through block tables;
+//!   the paged twin of `HostKvMirror`.
+//!
+//! Invariants (property-tested in rust/tests/proptests.rs):
+//! * a block is never double-allocated and never handed out twice
+//!   without an intervening free,
+//! * the sentinel is never allocated,
+//! * freeing every table returns the allocator to full capacity,
+//! * every table row maps to a block owned by that table.
+
+use anyhow::Result;
+
+/// Physical block id reserved for dead writes (never allocated).
+pub const SENTINEL_BLOCK: u32 = 0;
+
+// ---------------------------------------------------------------------------
+// BlockAllocator: free-list over the block pool
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    block_size: usize,
+    /// Free-list (stack). Never contains the sentinel.
+    free: Vec<u32>,
+    /// Occupancy by block id; the sentinel reads as allocated forever.
+    allocated: Vec<bool>,
+}
+
+impl BlockAllocator {
+    /// Pool of `num_blocks` blocks of `block_size` rows each.  Block 0 is
+    /// reserved as the sentinel, so usable capacity is `num_blocks - 1`.
+    pub fn new(num_blocks: usize, block_size: usize) -> Self {
+        assert!(num_blocks >= 2, "need at least one usable block");
+        assert!(block_size >= 1, "block_size must be positive");
+        let mut allocated = vec![false; num_blocks];
+        allocated[SENTINEL_BLOCK as usize] = true;
+        // LIFO over descending ids => first alloc returns block 1.
+        let free: Vec<u32> = (1..num_blocks as u32).rev().collect();
+        BlockAllocator { block_size, free, allocated }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Total pool size including the sentinel.
+    pub fn num_blocks(&self) -> usize {
+        self.allocated.len()
+    }
+
+    /// Usable blocks (excludes the sentinel).
+    pub fn capacity(&self) -> usize {
+        self.allocated.len() - 1
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.capacity() - self.free.len()
+    }
+
+    /// Fraction of usable blocks currently allocated.
+    pub fn utilization(&self) -> f64 {
+        if self.capacity() == 0 {
+            0.0
+        } else {
+            self.in_use() as f64 / self.capacity() as f64
+        }
+    }
+
+    /// Blocks needed to hold `rows` token rows.
+    pub fn blocks_for_rows(&self, rows: usize) -> usize {
+        rows.div_ceil(self.block_size)
+    }
+
+    /// Usable capacity in token rows.
+    pub fn capacity_rows(&self) -> usize {
+        self.capacity() * self.block_size
+    }
+
+    pub fn alloc(&mut self) -> Option<u32> {
+        let id = self.free.pop()?;
+        debug_assert!(!self.allocated[id as usize], "free-list corruption");
+        self.allocated[id as usize] = true;
+        Some(id)
+    }
+
+    /// Return a block (panics on double-free or sentinel: scheduler bug).
+    pub fn free(&mut self, id: u32) {
+        assert_ne!(id, SENTINEL_BLOCK, "freed the sentinel block");
+        assert!(
+            self.allocated[id as usize],
+            "double free of block {id}"
+        );
+        self.allocated[id as usize] = false;
+        self.free.push(id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BlockTable: one sequence's logical-row -> physical-block mapping
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    blocks: Vec<u32>,
+}
+
+impl BlockTable {
+    pub fn new() -> Self {
+        BlockTable { blocks: Vec::new() }
+    }
+
+    pub fn blocks(&self) -> &[u32] {
+        &self.blocks
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    pub fn push(&mut self, id: u32) {
+        self.blocks.push(id);
+    }
+
+    /// Rows addressable through this table.
+    pub fn capacity_rows(&self, block_size: usize) -> usize {
+        self.blocks.len() * block_size
+    }
+
+    /// Physical (block, offset) of logical row `row`, if mapped.
+    pub fn physical(&self, row: usize, block_size: usize)
+        -> Option<(u32, usize)> {
+        self.blocks
+            .get(row / block_size)
+            .map(|&b| (b, row % block_size))
+    }
+
+    /// Drain the table for freeing (the caller returns each id to the
+    /// allocator); leaves an empty table behind.
+    pub fn take_blocks(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.blocks)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PagedHostKv: block-pool K/V storage addressed through tables
+// ---------------------------------------------------------------------------
+
+/// Host K/V arrays of shape `(L, num_blocks, block_size, d)`.  The paged
+/// twin of [`super::HostKvMirror`]: rows are addressed through a
+/// [`BlockTable`] instead of a flat `(lane, t)` pair.  Pure storage —
+/// allocation policy lives in [`BlockAllocator`], scheduling in the
+/// engine.
+#[derive(Debug)]
+pub struct PagedHostKv {
+    pub layers: usize,
+    pub d: usize,
+    block_size: usize,
+    num_blocks: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl PagedHostKv {
+    pub fn new(
+        layers: usize,
+        num_blocks: usize,
+        block_size: usize,
+        d: usize,
+    ) -> Self {
+        let n = layers * num_blocks * block_size * d;
+        PagedHostKv {
+            layers,
+            d,
+            block_size,
+            num_blocks,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+
+    pub fn k_data(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v_data(&self) -> &[f32] {
+        &self.v
+    }
+
+    #[inline]
+    fn idx(&self, layer: usize, block: u32, off: usize) -> usize {
+        ((layer * self.num_blocks + block as usize) * self.block_size
+            + off)
+            * self.d
+    }
+
+    /// Raw K/V rows at a physical (layer, block, offset) — lets test
+    /// backends share this pool's layout instead of re-implementing
+    /// the index math.
+    pub fn rows_at(&self, layer: usize, block: u32, off: usize)
+        -> (&[f32], &[f32]) {
+        let i = self.idx(layer, block, off);
+        (&self.k[i..i + self.d], &self.v[i..i + self.d])
+    }
+
+    /// Mutable twin of [`Self::rows_at`].
+    pub fn rows_at_mut(&mut self, layer: usize, block: u32, off: usize)
+        -> (&mut [f32], &mut [f32]) {
+        let i = self.idx(layer, block, off);
+        let d = self.d;
+        (&mut self.k[i..i + d], &mut self.v[i..i + d])
+    }
+
+    fn physical(&self, table: &BlockTable, row: usize)
+        -> Result<(u32, usize)> {
+        table.physical(row, self.block_size).ok_or_else(|| {
+            anyhow::anyhow!(
+                "row {row} beyond table capacity {}",
+                table.capacity_rows(self.block_size)
+            )
+        })
+    }
+
+    /// Copy prefill K/V (shape (L, 1, t, d) row-major) into a sequence's
+    /// blocks (logical rows `0..len`, `len <= t`: right-padded prefill).
+    pub fn write_prefill(
+        &mut self,
+        table: &BlockTable,
+        k_pre: &[f32],
+        v_pre: &[f32],
+        t: usize,
+        len: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(len <= t, "prefill len {len} > bucket {t}");
+        anyhow::ensure!(
+            k_pre.len() == self.layers * t * self.d
+                && v_pre.len() == k_pre.len(),
+            "prefill kv size {} != {}",
+            k_pre.len(),
+            self.layers * t * self.d
+        );
+        for row in 0..len {
+            let (block, off) = self.physical(table, row)?;
+            for l in 0..self.layers {
+                let src = (l * t + row) * self.d;
+                let dst = self.idx(l, block, off);
+                self.k[dst..dst + self.d]
+                    .copy_from_slice(&k_pre[src..src + self.d]);
+                self.v[dst..dst + self.d]
+                    .copy_from_slice(&v_pre[src..src + self.d]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Write one decode step's K/V row for batch lane `lane` (out of
+    /// `batch`; `k_new`/`v_new` are (L, batch, d)) at logical row `row`
+    /// of the sequence mapped by `table`.
+    pub fn append_row(
+        &mut self,
+        table: &BlockTable,
+        row: usize,
+        lane: usize,
+        batch: usize,
+        k_new: &[f32],
+        v_new: &[f32],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            k_new.len() == self.layers * batch * self.d
+                && v_new.len() == k_new.len(),
+            "k_new size"
+        );
+        let (block, off) = self.physical(table, row)?;
+        for l in 0..self.layers {
+            let src = (l * batch + lane) * self.d;
+            let dst = self.idx(l, block, off);
+            self.k[dst..dst + self.d]
+                .copy_from_slice(&k_new[src..src + self.d]);
+            self.v[dst..dst + self.d]
+                .copy_from_slice(&v_new[src..src + self.d]);
+        }
+        Ok(())
+    }
+
+    /// Gather a sequence's first `rows` logical rows into flat
+    /// `(L, batch, t_max, d)` buffers at lane `lane` — the bridge that
+    /// lets the legacy flat decode graph (the bit-exactness oracle) run
+    /// on paged storage.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gather_lane(
+        &self,
+        table: &BlockTable,
+        rows: usize,
+        lane: usize,
+        batch: usize,
+        t_max: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) -> Result<()> {
+        anyhow::ensure!(rows <= t_max, "gather rows {rows} > t_max");
+        anyhow::ensure!(
+            k_out.len() == self.layers * batch * t_max * self.d
+                && v_out.len() == k_out.len(),
+            "gather output size"
+        );
+        for row in 0..rows {
+            let (block, off) = self.physical(table, row)?;
+            for l in 0..self.layers {
+                let src = self.idx(l, block, off);
+                let dst = ((l * batch + lane) * t_max + row) * self.d;
+                k_out[dst..dst + self.d]
+                    .copy_from_slice(&self.k[src..src + self.d]);
+                v_out[dst..dst + self.d]
+                    .copy_from_slice(&self.v[src..src + self.d]);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocator_reserves_sentinel_and_tracks_counts() {
+        let mut a = BlockAllocator::new(4, 8);
+        assert_eq!(a.capacity(), 3);
+        assert_eq!(a.free_count(), 3);
+        assert_eq!(a.in_use(), 0);
+        let b1 = a.alloc().unwrap();
+        let b2 = a.alloc().unwrap();
+        let b3 = a.alloc().unwrap();
+        assert!(a.alloc().is_none(), "pool exhausted");
+        for b in [b1, b2, b3] {
+            assert_ne!(b, SENTINEL_BLOCK);
+        }
+        assert_eq!(a.in_use(), 3);
+        assert!((a.utilization() - 1.0).abs() < 1e-12);
+        a.free(b2);
+        assert_eq!(a.alloc().unwrap(), b2, "LIFO reuse");
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn allocator_double_free_panics() {
+        let mut a = BlockAllocator::new(3, 4);
+        let b = a.alloc().unwrap();
+        a.free(b);
+        a.free(b);
+    }
+
+    #[test]
+    #[should_panic(expected = "sentinel")]
+    fn allocator_rejects_sentinel_free() {
+        let mut a = BlockAllocator::new(3, 4);
+        a.free(SENTINEL_BLOCK);
+    }
+
+    #[test]
+    fn blocks_for_rows_is_ceil() {
+        let a = BlockAllocator::new(8, 4);
+        assert_eq!(a.blocks_for_rows(0), 0);
+        assert_eq!(a.blocks_for_rows(1), 1);
+        assert_eq!(a.blocks_for_rows(4), 1);
+        assert_eq!(a.blocks_for_rows(5), 2);
+    }
+
+    #[test]
+    fn table_maps_rows_to_block_offsets() {
+        let mut t = BlockTable::new();
+        t.push(3);
+        t.push(7);
+        assert_eq!(t.capacity_rows(4), 8);
+        assert_eq!(t.physical(0, 4), Some((3, 0)));
+        assert_eq!(t.physical(3, 4), Some((3, 3)));
+        assert_eq!(t.physical(4, 4), Some((7, 0)));
+        assert_eq!(t.physical(8, 4), None);
+        let drained = t.take_blocks();
+        assert_eq!(drained, vec![3, 7]);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn paged_store_roundtrips_against_flat_mirror() {
+        // Write the same prefill + appended rows into the flat mirror and
+        // the paged store (through a non-trivial table), then gather the
+        // paged lane back: both must hold identical bytes.
+        let (layers, batch, t_max, d, bs) = (2, 3, 8, 4, 4);
+        let mut flat = super::super::HostKvMirror::new(
+            layers, batch, t_max, d);
+        let mut paged = PagedHostKv::new(layers, 6, bs, d);
+        let mut table = BlockTable::new();
+        table.push(4); // deliberately out-of-order physical blocks
+        table.push(2);
+
+        let t = 6;
+        let len = 5;
+        let n = layers * t * d;
+        let k_pre: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+        let v_pre: Vec<f32> = (0..n).map(|i| i as f32 - 7.0).collect();
+        let lane = 1;
+        flat.write_prefill(lane, &k_pre, &v_pre, t, len).unwrap();
+        paged.write_prefill(&table, &k_pre, &v_pre, t, len).unwrap();
+
+        let m = layers * batch * d;
+        let k_new: Vec<f32> = (0..m).map(|i| 100.0 + i as f32).collect();
+        let v_new: Vec<f32> = (0..m).map(|i| -(i as f32)).collect();
+        flat.append_rows(&[(lane, len)], &k_new, &v_new).unwrap();
+        paged
+            .append_row(&table, len, lane, batch, &k_new, &v_new)
+            .unwrap();
+
+        let sz = layers * batch * t_max * d;
+        let (mut gk, mut gv) = (vec![0.0f32; sz], vec![0.0f32; sz]);
+        paged
+            .gather_lane(&table, len + 1, lane, batch, t_max, &mut gk,
+                         &mut gv)
+            .unwrap();
+        for l in 0..layers {
+            for row in 0..len + 1 {
+                for j in 0..d {
+                    let at = ((l * batch + lane) * t_max + row) * d + j;
+                    assert_eq!(gk[at], flat.k_data()[at], "k l{l} r{row}");
+                    assert_eq!(gv[at], flat.v_data()[at], "v l{l} r{row}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paged_store_rejects_unmapped_rows() {
+        let mut p = PagedHostKv::new(1, 3, 4, 2);
+        let mut table = BlockTable::new();
+        table.push(1);
+        let k = vec![0.0f32; 8 * 2];
+        // prefill longer than the table's 4 rows
+        assert!(p.write_prefill(&table, &k, &k, 8, 5).is_err());
+        let row = vec![0.0f32; 2 * 2];
+        assert!(p.append_row(&table, 4, 0, 2, &row, &row).is_err());
+    }
+}

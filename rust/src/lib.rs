@@ -13,9 +13,11 @@
 //! * [`runtime`]     — PJRT client, HLO-text loader, weight store (LQTW),
 //!   staged execution + device-resident KV sessions
 //! * [`xla`]         — offline build shim of the `xla` crate (DESIGN.md §7)
-//! * [`coordinator`] — request queue, continuous batcher, engine loop
-//!   (generic over a decode backend; device-resident cache by default)
-//! * [`kvcache`]     — slot/position manager + optional host cache mirror
+//! * [`coordinator`] — bounded admission queue, continuous batcher,
+//!   engine loop with block accounting + preemption (generic over a
+//!   decode backend; device-resident cache by default)
+//! * [`kvcache`]     — slot/position manager, host cache mirror, and the
+//!   paged block allocator/tables/pool (DESIGN.md §10)
 //! * [`tokenizer`]   — word-level tokenizer over the corpus vocabulary
 //! * [`eval`]        — perplexity / downstream-task / pairwise-judge evaluators
 //! * [`quant`]       — bit-exact MXINT + fixed-point twins of the L1 kernels

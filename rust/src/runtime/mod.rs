@@ -28,6 +28,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::kvcache::paged::{BlockTable, SENTINEL_BLOCK};
 use crate::xla;
 
 pub use weights::WeightStore;
@@ -342,6 +343,10 @@ pub struct DeviceKvSession {
     pub batch: usize,
     pub t_max: usize,
     pub d: usize,
+    /// Block rows per block when the session is paged
+    /// (`(L, num_blocks, block_size, d)` layout, DESIGN.md §10);
+    /// 0 for the flat per-lane layout.
+    pub block_size: usize,
 }
 
 impl DeviceKvSession {
@@ -363,7 +368,30 @@ impl DeviceKvSession {
             .client
             .buffer_from_host_buffer::<f32>(&zeros, &dims, None)
             .map_err(|e| anyhow::anyhow!("v cache upload: {e:?}"))?;
-        Ok(DeviceKvSession { k, v, layers, batch, t_max, d })
+        Ok(DeviceKvSession { k, v, layers, batch, t_max, d,
+                             block_size: 0 })
+    }
+
+    /// Allocate a zeroed *paged* resident cache: `(L, num_blocks,
+    /// block_size, d)`, a block pool addressed through block-table
+    /// operands by the `decode_paged` / `kvwrite_paged` graphs.  The
+    /// pool's second/third dims reuse the `batch`/`t_max` fields (same
+    /// roles: rows = dim2 × dim3).
+    pub fn new_paged(
+        rt: &Runtime,
+        layers: usize,
+        num_blocks: usize,
+        block_size: usize,
+        d: usize,
+    ) -> Result<DeviceKvSession> {
+        let mut s = Self::new(rt, layers, num_blocks, block_size, d)?;
+        s.block_size = block_size;
+        Ok(s)
+    }
+
+    /// Number of pool blocks of a paged session.
+    pub fn num_blocks(&self) -> usize {
+        self.batch
     }
 
     /// Total resident cache footprint in bytes.
@@ -430,6 +458,76 @@ impl DeviceKvSession {
         self.v = expect_device(it.next())?;
         Ok(logits)
     }
+
+    /// One `decode_paged` step: like [`Self::decode`], plus the flattened
+    /// `(b, max_blocks)` block-table operand that turns the in-graph DUS
+    /// append into a table-indexed write (free lanes point at the
+    /// sentinel block).
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_paged(
+        &mut self,
+        rt: &Runtime,
+        exe: &Executable,
+        token: &[i32],
+        pos: &[i32],
+        tables_flat: &[i32],
+        b: usize,
+        max_blocks: usize,
+    ) -> Result<HostTensor> {
+        anyhow::ensure!(self.block_size > 0, "session is not paged");
+        anyhow::ensure!(
+            token.len() == b
+                && pos.len() == b
+                && tables_flat.len() == b * max_blocks,
+            "paged decode operand sizes"
+        );
+        let outs = exe.call_staged(
+            rt,
+            &[
+                Input::I32(token, vec![b]),
+                Input::Device(&self.k),
+                Input::Device(&self.v),
+                Input::I32(pos, vec![b]),
+                Input::I32(tables_flat, vec![b, max_blocks]),
+            ],
+            &[false, true, true],
+        )?;
+        let mut it = outs.into_iter();
+        let logits = expect_host(it.next())?;
+        self.k = expect_device(it.next())?;
+        self.v = expect_device(it.next())?;
+        Ok(logits)
+    }
+
+    /// Scatter device-retained prefill outputs (`(L, 1, t, d)`) into the
+    /// pool blocks listed in `block_ids` (one id per `block_size`-row
+    /// chunk; padding chunks carry the sentinel id) via the
+    /// `kvwrite_paged` graph.
+    pub fn write_prefill_paged(
+        &mut self,
+        rt: &Runtime,
+        exe: &Executable,
+        k_pre: &xla::PjRtBuffer,
+        v_pre: &xla::PjRtBuffer,
+        block_ids: &[i32],
+    ) -> Result<()> {
+        anyhow::ensure!(self.block_size > 0, "session is not paged");
+        let outs = exe.call_staged(
+            rt,
+            &[
+                Input::Device(&self.k),
+                Input::Device(&self.v),
+                Input::Device(k_pre),
+                Input::Device(v_pre),
+                Input::I32(block_ids, vec![block_ids.len()]),
+            ],
+            &[true, true],
+        )?;
+        let mut it = outs.into_iter();
+        self.k = expect_device(it.next())?;
+        self.v = expect_device(it.next())?;
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -475,8 +573,8 @@ impl ModelRunner {
     fn outputs_for(entry: &str) -> usize {
         match entry {
             "score" => 1,
-            "prefill" | "decode" | "decode_dev" => 3,
-            "kvwrite" => 2,
+            "prefill" | "decode" | "decode_dev" | "decode_paged" => 3,
+            "kvwrite" | "kvwrite_paged" => 2,
             _ => 1,
         }
     }
@@ -494,12 +592,15 @@ impl ModelRunner {
         if let Some(e) = self.exes.lock().unwrap().get(&key) {
             return Ok(e.clone());
         }
-        // kvwrite is pure data movement: lowered once without weight
-        // params under the fixed "cache" tag, shared by every method.
-        let tag = if entry == "kvwrite" { "cache" } else { &self.graph_tag };
+        // kvwrite/kvwrite_paged are pure data movement: lowered once
+        // without weight params under the fixed "cache" tag, shared by
+        // every method.
+        let unparameterized =
+            entry == "kvwrite" || entry == "kvwrite_paged";
+        let tag = if unparameterized { "cache" } else { &self.graph_tag };
         let g = manifest.graph(&self.model.name, tag, entry, b, t)?;
         let n_out = Self::outputs_for(entry);
-        let exe = std::sync::Arc::new(if entry == "kvwrite" {
+        let exe = std::sync::Arc::new(if unparameterized {
             rt.load_unparameterized(&g.path, n_out)?
         } else {
             rt.load(&g.path, &self.store, n_out)?
@@ -637,6 +738,82 @@ impl ModelRunner {
         let exe =
             self.executable(rt, manifest, "kvwrite", session.batch, t)?;
         session.write_prefill(rt, &exe, k_pre, v_pre, slot)
+    }
+
+    /// One paged device-resident decode step (`decode_paged` graph):
+    /// `tables` is indexed by lane; each lane's table is padded to
+    /// `t_max / block_size` entries with the sentinel block id (free
+    /// lanes are all-sentinel, which is where their dead DUS write
+    /// parks).
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_resident_paged(
+        &self,
+        rt: &Runtime,
+        manifest: &crate::config::Manifest,
+        session: &mut DeviceKvSession,
+        token: &[i32],
+        pos: &[i32],
+        tables: &[BlockTable],
+        t_max: usize,
+    ) -> Result<HostTensor> {
+        let b = token.len();
+        anyhow::ensure!(session.block_size > 0, "session is not paged");
+        anyhow::ensure!(
+            t_max % session.block_size == 0,
+            "t_max {t_max} not a multiple of block_size {}",
+            session.block_size
+        );
+        let max_blocks = t_max / session.block_size;
+        let mut flat = vec![SENTINEL_BLOCK as i32; b * max_blocks];
+        for (lane, table) in tables.iter().enumerate() {
+            anyhow::ensure!(
+                table.len() <= max_blocks,
+                "lane {lane} table longer than t_max/block_size"
+            );
+            for (c, &id) in table.blocks().iter().enumerate() {
+                flat[lane * max_blocks + c] = id as i32;
+            }
+        }
+        let exe =
+            self.executable(rt, manifest, "decode_paged", b, 0)?;
+        session.decode_paged(rt, &exe, token, pos, &flat, b, max_blocks)
+    }
+
+    /// Scatter retained prefill outputs into pool blocks
+    /// (`kvwrite_paged` graph for prefill bucket `t`): one block id per
+    /// `block_size`-row chunk, padding chunks parked in the sentinel.
+    #[allow(clippy::too_many_arguments)]
+    pub fn write_prefill_resident_paged(
+        &self,
+        rt: &Runtime,
+        manifest: &crate::config::Manifest,
+        session: &mut DeviceKvSession,
+        table: &BlockTable,
+        k_pre: &xla::PjRtBuffer,
+        v_pre: &xla::PjRtBuffer,
+        t: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(session.block_size > 0, "session is not paged");
+        anyhow::ensure!(
+            t % session.block_size == 0,
+            "prefill bucket {t} not a multiple of block_size {}",
+            session.block_size
+        );
+        let n_chunks = t / session.block_size;
+        let ids: Vec<i32> = (0..n_chunks)
+            .map(|c| {
+                table
+                    .blocks()
+                    .get(c)
+                    .map(|&id| id as i32)
+                    .unwrap_or(SENTINEL_BLOCK as i32)
+            })
+            .collect();
+        let exe = self.executable(
+            rt, manifest, "kvwrite_paged",
+            session.num_blocks(), t,
+        )?;
+        session.write_prefill_paged(rt, &exe, k_pre, v_pre, &ids)
     }
 
     /// Aggregate stats across all loaded executables.

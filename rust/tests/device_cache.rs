@@ -34,6 +34,8 @@ fn cfg(batch: usize) -> EngineConfig {
         prefill_buckets: vec![8, 16],
         max_prefill_per_step: 2,
         host_cache: false, // FakeBackend's mode is chosen directly
+        paged: None,
+        admission: Default::default(),
     }
 }
 
@@ -267,6 +269,8 @@ fn real_runtime_device_host_bit_exact() {
                 .collect(),
             max_prefill_per_step: 2,
             host_cache,
+            paged: None,
+            admission: Default::default(),
         };
         let engine = lqer::coordinator::EngineHandle::spawn(
             m.dir.clone(), cfg,

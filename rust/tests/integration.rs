@@ -163,6 +163,8 @@ fn engine_serves_deterministically_and_batches() {
             .collect(),
         max_prefill_per_step: 2,
         host_cache: false,
+        paged: None,
+        admission: Default::default(),
     };
     let engine = EngineHandle::spawn(m.dir.clone(), cfg).unwrap();
     let prompts =

@@ -4,6 +4,7 @@
 //! Focus: coordinator invariants (KV slot accounting, batching), JSON
 //! round-trips, SVD mathematical properties, quantizer grid laws.
 
+use lqer::kvcache::paged::{BlockAllocator, BlockTable, SENTINEL_BLOCK};
 use lqer::kvcache::KvCache;
 use lqer::linalg::{svd, Mat};
 use lqer::quant::mxint::MxFormat;
@@ -83,6 +84,98 @@ fn kvcache_slot_accounting_invariant() {
                     return Err(format!("slot {s} pos past t_max"));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Paged KV: allocator/table invariants over random grow/free traces
+// ---------------------------------------------------------------------------
+
+#[test]
+fn block_allocator_and_tables_keep_invariants() {
+    check("paged-block-accounting", 60, &OpTrace, |ops| {
+        let (num_blocks, bs) = (9usize, 4usize);
+        let mut alloc = BlockAllocator::new(num_blocks, bs);
+        let mut tables: Vec<BlockTable> =
+            (0..3).map(|_| BlockTable::new()).collect();
+        let mut owned = std::collections::HashSet::new();
+        for &op in ops {
+            let t = (op as usize / 3) % tables.len();
+            match op % 3 {
+                0 => {
+                    // grow one table by a block
+                    if let Some(id) = alloc.alloc() {
+                        if id == SENTINEL_BLOCK {
+                            return Err("allocated the sentinel".into());
+                        }
+                        if !owned.insert(id) {
+                            return Err(format!(
+                                "block {id} double-allocated"
+                            ));
+                        }
+                        tables[t].push(id);
+                    } else if alloc.free_count() != 0 {
+                        return Err("alloc failed with free blocks".into());
+                    }
+                }
+                1 => {
+                    // release one table entirely
+                    for id in tables[t].take_blocks() {
+                        if !owned.remove(&id) {
+                            return Err(format!("freed unowned {id}"));
+                        }
+                        alloc.free(id);
+                    }
+                }
+                _ => {
+                    // every row below capacity maps into an owned block
+                    // of *this* table; the row past capacity is unmapped
+                    let cap = tables[t].capacity_rows(bs);
+                    for row in 0..cap {
+                        let Some((blk, off)) = tables[t].physical(row, bs)
+                        else {
+                            return Err(format!("row {row} unmapped"));
+                        };
+                        if off >= bs {
+                            return Err("offset escapes block".into());
+                        }
+                        if !tables[t].blocks().contains(&blk) {
+                            return Err("row maps to foreign block".into());
+                        }
+                        if !owned.contains(&blk) {
+                            return Err("row maps to unowned block".into());
+                        }
+                    }
+                    if tables[t].physical(cap, bs).is_some() {
+                        return Err("row past capacity mapped".into());
+                    }
+                }
+            }
+            if alloc.in_use() != owned.len() {
+                return Err(format!(
+                    "in_use {} != owned {}",
+                    alloc.in_use(),
+                    owned.len()
+                ));
+            }
+            if alloc.in_use() + alloc.free_count() != alloc.capacity() {
+                return Err("capacity accounting broken".into());
+            }
+        }
+        // Returning every table must restore full capacity (no leaks).
+        for table in &mut tables {
+            for id in table.take_blocks() {
+                alloc.free(id);
+            }
+        }
+        if alloc.free_count() != alloc.capacity() {
+            return Err(format!(
+                "leaked blocks: {}/{} free after releasing all tables",
+                alloc.free_count(),
+                alloc.capacity()
+            ));
         }
         Ok(())
     });

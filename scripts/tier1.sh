@@ -13,6 +13,12 @@ cd "$(dirname "$0")/.."
 cargo build --release
 cargo test -q
 
+# Paged-KV gate: the allocator/table proptests and the golden
+# paged-vs-flat engine equality must pass on their own (they also run
+# inside `cargo test` above; this pins them as a named tier-1 step).
+cargo test -q --test paged_kv
+cargo test -q --test proptests block_allocator_and_tables_keep_invariants
+
 # plan-check: the checked-in QuantSpec golden fixtures must validate on
 # both sides of the language boundary.  The rust side ran above inside
 # `cargo test` (rust/tests/plan_roundtrip.rs); the python validator is

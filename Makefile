@@ -1,16 +1,22 @@
 # Top-level drivers.  `make artifacts` runs the python AOT path once
 # (data -> train -> quant -> HLO -> golden); everything rust-side loads
 # the result.  `make tier1` is the CI gate (scripts/tier1.sh; includes
-# plan-check).  `make test-python` runs the python suite, including the
-# QuantSpec schema tests (tests/test_spec.py).
+# plan-check and — when jax/pytest are present — the python suite).
+# `make tier1-bench` additionally runs the paged-KV benches against the
+# committed baseline (scripts/bench_guard.py).  `make test-python` runs
+# the python suite on its own.  .github/workflows/ci.yml runs these same
+# targets so local and CI gates cannot drift.
 
-.PHONY: artifacts tier1 test-python plan-check
+.PHONY: artifacts tier1 tier1-bench test-python plan-check bench-guard
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
 
 tier1:
 	bash scripts/tier1.sh
+
+tier1-bench:
+	bash scripts/tier1.sh --bench
 
 test-python:
 	cd python && python3 -m pytest tests -q
@@ -20,3 +26,9 @@ test-python:
 plan-check:
 	python3 python/compile/quant/spec.py check \
 	    rust/tests/fixtures/quantspec_golden.json
+
+# Re-check the last bench run against the committed baseline without
+# re-running the bench.
+bench-guard:
+	python3 scripts/bench_guard.py --bench BENCH_kvpaged.json \
+	    --baseline BENCH_baseline.json

@@ -58,6 +58,7 @@ fn main() -> anyhow::Result<()> {
             } else {
                 Sampling::TopK { k: 8, temperature: 0.8, seed: 7 }
             },
+            priority: Default::default(),
         })?;
         println!("\nprompt {} : {}", i + 1,
                  tok.decode_clean(&prompt[1..].to_vec()));

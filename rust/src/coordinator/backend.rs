@@ -24,7 +24,7 @@ use anyhow::Result;
 
 use super::EngineConfig;
 use crate::config::Manifest;
-use crate::kvcache::paged::{BlockTable, PagedHostKv};
+use crate::kvcache::paged::{BlockTable, PagedHostKv, SwappedBlock};
 use crate::kvcache::HostKvMirror;
 use crate::runtime::{DeviceKvSession, ExecStats, ModelRunner, Runtime};
 
@@ -58,7 +58,7 @@ pub trait DecodeBackend {
         active: &[usize],
     ) -> Result<Vec<f32>>;
 
-    // --- paged-KV variants (DESIGN.md §10) -------------------------------
+    // --- paged-KV variants (DESIGN.md §10, §11) --------------------------
     //
     // The engine owns the `BlockAllocator` and per-lane `BlockTable`s;
     // backends that store their cache block-granularly implement these
@@ -70,9 +70,21 @@ pub trait DecodeBackend {
         false
     }
 
+    /// Whether the backend can copy/export/import whole blocks — the
+    /// primitives behind copy-on-write forks and block-level swap
+    /// (DESIGN.md §11).  The engine refuses prefix-sharing / swap
+    /// configs over a backend without them (the device-paged path is
+    /// gated here until the real PJRT bindings land).
+    fn supports_block_ops(&self) -> bool {
+        false
+    }
+
     /// Paged prefill: like [`Self::prefill_into`], but cache rows land in
     /// the blocks mapped by `table` (which must cover `len` rows) instead
-    /// of a flat lane.
+    /// of a flat lane.  The first `shared_blocks` table entries are
+    /// **read-only** (prefix-shared; they already hold exactly the rows
+    /// this prompt would write): the backend must not write any row
+    /// living in them.
     fn prefill_into_paged(
         &mut self,
         _slot: usize,
@@ -80,8 +92,31 @@ pub trait DecodeBackend {
         _toks: &[i32],
         _bucket: usize,
         _len: usize,
+        _shared_blocks: usize,
     ) -> Result<Vec<f32>> {
         anyhow::bail!("backend has no paged KV backing")
+    }
+
+    /// Copy block `src`'s K/V rows over block `dst` (COW fork).
+    fn copy_block(&mut self, _src: u32, _dst: u32) -> Result<()> {
+        anyhow::bail!("backend has no block copy")
+    }
+
+    /// Copy block `id`'s K/V rows out for the host swap area.
+    fn export_block(&self, _id: u32) -> Result<SwappedBlock> {
+        anyhow::bail!("backend has no block export")
+    }
+
+    /// Copy swapped-out rows back into block `id` (swap-in).
+    fn import_block(&mut self, _id: u32, _blk: &SwappedBlock)
+        -> Result<()> {
+        anyhow::bail!("backend has no block import")
+    }
+
+    /// Bytes of K/V payload one block holds (0 when not paged) — used
+    /// for the bytes-saved metric.
+    fn block_bytes(&self) -> usize {
+        0
     }
 
     /// Paged decode step: `tables` is indexed by lane (free lanes hold an
@@ -321,6 +356,13 @@ impl DecodeBackend for PjrtBackend {
         )
     }
 
+    fn supports_block_ops(&self) -> bool {
+        // The device-paged session would need block-copy graphs (or a
+        // host round-trip) for COW/swap; gated with the real PJRT
+        // bindings (ROADMAP).
+        matches!(self.backing, CacheBacking::PagedHost { .. })
+    }
+
     fn prefill_into_paged(
         &mut self,
         _slot: usize,
@@ -328,16 +370,27 @@ impl DecodeBackend for PjrtBackend {
         toks: &[i32],
         bucket: usize,
         len: usize,
+        shared_blocks: usize,
     ) -> Result<Vec<f32>> {
         match &mut self.backing {
             CacheBacking::PagedHost { kv, .. } => {
                 let (logits, k, v) = self.runner.prefill(
                     &self.rt, &self.manifest, toks, 1, bucket,
                 )?;
-                kv.write_prefill(table, &k.data, &v.data, bucket, len)?;
+                // Rows in the shared prefix blocks are read-only and
+                // already hold exactly these values; start past them.
+                let start = shared_blocks * kv.block_size();
+                kv.write_prefill_from(
+                    table, &k.data, &v.data, bucket, len, start,
+                )?;
                 Ok(logits.data)
             }
             CacheBacking::PagedDevice(session) => {
+                anyhow::ensure!(
+                    shared_blocks == 0,
+                    "prefix sharing is gated off on the device-paged \
+                     path (no block ops yet)"
+                );
                 // Prefill K/V stay on device; the kvwrite_paged graph
                 // scatters each bucket-chunk into its table block
                 // (padding chunks park in the sentinel).
@@ -394,6 +447,34 @@ impl DecodeBackend for PjrtBackend {
                 Ok(logits.data)
             }
             _ => anyhow::bail!("flat backing has no decode_paged"),
+        }
+    }
+
+    fn copy_block(&mut self, src: u32, dst: u32) -> Result<()> {
+        match &mut self.backing {
+            CacheBacking::PagedHost { kv, .. } => kv.copy_block(src, dst),
+            _ => anyhow::bail!("no block copy on this backing"),
+        }
+    }
+
+    fn export_block(&self, id: u32) -> Result<SwappedBlock> {
+        match &self.backing {
+            CacheBacking::PagedHost { kv, .. } => kv.export_block(id),
+            _ => anyhow::bail!("no block export on this backing"),
+        }
+    }
+
+    fn import_block(&mut self, id: u32, blk: &SwappedBlock) -> Result<()> {
+        match &mut self.backing {
+            CacheBacking::PagedHost { kv, .. } => kv.import_block(id, blk),
+            _ => anyhow::bail!("no block import on this backing"),
+        }
+    }
+
+    fn block_bytes(&self) -> usize {
+        match &self.backing {
+            CacheBacking::PagedHost { kv, .. } => kv.block_bytes(),
+            _ => 0,
         }
     }
 

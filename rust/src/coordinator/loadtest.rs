@@ -47,6 +47,7 @@ pub fn run_loadtest(
             prompt: prompts[i % prompts.len()].clone(),
             max_new_tokens: max_new,
             sampling: Sampling::Greedy,
+            priority: super::Priority::Normal,
         }));
     }
     for rx in rxs {
@@ -75,6 +76,7 @@ pub fn generate_all(
                 prompt: p.clone(),
                 max_new_tokens: max_new,
                 sampling: Sampling::Greedy,
+                priority: super::Priority::Normal,
             })
         })
         .collect();

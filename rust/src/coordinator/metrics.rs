@@ -93,17 +93,43 @@ pub struct EngineMetrics {
     /// Requests answered with `FinishReason::Expired` (admission
     /// deadline passed while waiting in the queue).
     pub expired: u64,
-    /// Running sequences evicted to reclaim KV blocks (each is requeued
-    /// and re-prefilled, so one request can be preempted several times).
+    /// Running sequences evicted to reclaim KV blocks (swapped out or
+    /// requeued for re-prefill; one request can be preempted several
+    /// times).
     pub preemptions: u64,
+    /// Preemptions resolved by block-level swap-out to the host pool
+    /// (sequence state preserved) instead of re-prefill.
+    pub swap_outs: u64,
+    /// Swapped sequences resumed (blocks re-allocated, bytes imported).
+    pub swap_ins: u64,
+    /// Preemptions that wanted to swap but fell back to re-prefill
+    /// (swap pool full or backend export failed).
+    pub swap_fallbacks: u64,
+    /// Copy-on-write forks: a sequence about to write a shared block got
+    /// a private copy first (the shared block is never mutated).
+    pub cow_copies: u64,
+    /// Prompt blocks served read-only from the prefix index instead of
+    /// being recomputed and re-stored (cumulative).
+    pub prefix_hit_blocks: u64,
+    /// KV bytes those prefix hits did not duplicate (cumulative).
+    pub prefix_bytes_saved: u64,
     /// Queue depth at the last metrics snapshot.
     pub waiting: u64,
+    /// Sequences parked in the swap pool at the last snapshot.
+    pub swapped_seqs: u64,
     /// Paged-KV gauges at the last snapshot (0 when the engine runs the
     /// flat per-lane cache).
     pub kv_block_size: u64,
     pub kv_blocks_total: u64,
     pub kv_blocks_in_use: u64,
     pub kv_utilization: f64,
+    /// Usable blocks currently mapped into more than one table.
+    pub kv_shared_blocks: u64,
+    /// References beyond the first across all blocks — block copies the
+    /// prefix sharing is saving right now.
+    pub kv_shared_refs: u64,
+    pub swap_blocks_in_use: u64,
+    pub swap_blocks_total: u64,
     pub tokens_generated: u64,
     pub prefill_steps: u64,
     pub prefill_ns: u64,
@@ -139,12 +165,19 @@ impl EngineMetrics {
         let paged = if self.kv_blocks_total > 0 {
             format!(
                 " | kv {}/{} blocks ({:.0}% now, {:.0}% peak) | {} \
-                 preempted",
+                 preempted ({} swapped out, {} back in) | {} shared \
+                 blocks, {} cow, {} prefix hits ({} B saved)",
                 self.kv_blocks_in_use,
                 self.kv_blocks_total,
                 self.kv_utilization * 100.0,
                 self.kv_util.max(),
                 self.preemptions,
+                self.swap_outs,
+                self.swap_ins,
+                self.kv_shared_blocks,
+                self.cow_copies,
+                self.prefix_hit_blocks,
+                self.prefix_bytes_saved,
             )
         } else {
             String::new()

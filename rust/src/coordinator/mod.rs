@@ -50,7 +50,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::kvcache::paged::{BlockAllocator, BlockTable};
+use crate::kvcache::paged::{
+    chain_hash, BlockAllocator, BlockTable, PrefixIndex, SwapPool,
+    SwappedBlock, PREFIX_SEED,
+};
 use crate::kvcache::SlotMap;
 use crate::util::rng::Rng;
 
@@ -66,12 +69,38 @@ pub enum Sampling {
     TopK { k: usize, temperature: f32, seed: u64 },
 }
 
+/// Eviction class of a request: when the block pool runs dry the engine
+/// preempts the lowest-priority (then youngest-by-tokens) running
+/// sequence first (DESIGN.md §11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Evicted first under memory pressure (batch / best-effort work).
+    Low,
+    #[default]
+    Normal,
+    /// Evicted only when no lower-priority victim exists.
+    High,
+}
+
+impl Priority {
+    /// Parse "low" / "normal" / "high" (the HTTP API's spelling).
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "low" => Some(Priority::Low),
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<u32>,
     pub max_new_tokens: usize,
     pub sampling: Sampling,
+    pub priority: Priority,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -95,10 +124,16 @@ pub struct Response {
     pub prompt_len: usize,
     pub tokens: Vec<u32>,
     pub finish: FinishReason,
-    /// Wall-clock from submit to first generated token (ms).
+    /// Wall-clock from submit to first generated token (ms).  Recorded
+    /// when the token is sampled, so time spent swapped out later never
+    /// inflates it (the generated stream survives a swap).
     pub ttft_ms: f64,
-    /// Wall-clock from submit to completion (ms).
+    /// Wall-clock from submit to completion (ms); includes any time
+    /// spent swapped out.
     pub total_ms: f64,
+    /// Wall-clock this sequence spent swapped out to the host pool (ms);
+    /// part of `total_ms`, never of `ttft_ms`.
+    pub swapped_ms: f64,
 }
 
 enum Msg {
@@ -124,6 +159,17 @@ pub struct PagedKvConfig {
     /// Total pool size including the reserved sentinel block 0, so
     /// usable capacity is `num_blocks - 1` blocks.
     pub num_blocks: usize,
+    /// Map block-aligned shared prompt prefixes read-only into new
+    /// requests' tables (copy-on-write on first divergent write) instead
+    /// of re-storing them per sequence (DESIGN.md §11).  Requires a
+    /// backend with block ops (host-paged backings; the device path is
+    /// gated).
+    pub prefix_sharing: bool,
+    /// Host swap pool size in blocks: preemption copies a victim's
+    /// blocks out and resumes it later instead of discarding the
+    /// sequence for re-prefill.  0 disables swapping (re-prefill
+    /// fallback only).
+    pub swap_blocks: usize,
 }
 
 /// What happens to a request that does not fit right now.
@@ -241,6 +287,9 @@ struct ActiveSeq {
     reply: mpsc::Sender<Response>,
     submitted: Instant,
     ttft_ms: Option<f64>,
+    /// Accumulated wall-clock spent swapped out (ms): counts into total
+    /// latency, never into TTFT (the first token predates any swap).
+    swapped_ms: f64,
     generated: Vec<u32>,
     last_token: u32,
     rng: Rng,
@@ -264,6 +313,35 @@ struct Waiting {
 struct PagedState {
     alloc: BlockAllocator,
     tables: Vec<BlockTable>,
+    /// Content-addressed prompt-prefix index (empty when
+    /// `prefix_sharing` is off).
+    index: PrefixIndex,
+    /// Bounded accounting for host-swapped blocks (`max_blocks` 0 when
+    /// swapping is off).
+    swap: SwapPool,
+    sharing: bool,
+}
+
+impl PagedState {
+    /// Allocate a block for *new* content: whatever prefix its old bytes
+    /// backed is gone the moment someone writes to it, so drop its index
+    /// entry.
+    fn alloc_fresh(&mut self) -> Option<u32> {
+        let id = self.alloc.alloc()?;
+        self.index.forget_block(id);
+        Some(id)
+    }
+}
+
+/// A preempted sequence living in the host swap pool: the full decode
+/// state plus its blocks' bytes, restored verbatim on swap-in
+/// (DESIGN.md §11).
+struct SwappedSeq {
+    seq: ActiveSeq,
+    /// Valid cache rows at swap-out (the slot position to restore).
+    pos: usize,
+    data: Vec<SwappedBlock>,
+    swapped_at: Instant,
 }
 
 /// Admission plan for the queue head: what admitting it would cost.
@@ -271,7 +349,20 @@ struct AdmitPlan {
     prompt: Vec<u32>,
     len: usize,
     bucket: usize,
+    /// Blocks to allocate fresh (beyond the shared prefix hits).
     blocks: usize,
+    /// Prefix-index hits to map read-only, in logical order:
+    /// `(block id, needs revival from the free list)`.
+    shared: Vec<(u32, bool)>,
+}
+
+impl AdmitPlan {
+    /// Free-list draw of this plan: fresh blocks plus revivals (a
+    /// revived block leaves the free list too).
+    fn free_blocks_needed(&self) -> usize {
+        self.blocks
+            + self.shared.iter().filter(|&&(_, revive)| revive).count()
+    }
 }
 
 /// The scheduler: generic over the execution backend so tests can drive
@@ -285,6 +376,9 @@ pub struct Engine<B: DecodeBackend> {
     waiting: std::collections::VecDeque<Waiting>,
     active: Vec<Option<ActiveSeq>>, // indexed by KV slot
     paged: Option<PagedState>,
+    /// Preempted sequences parked in the host swap pool, oldest first;
+    /// swap-in resumes them before any new admission.
+    swapped: std::collections::VecDeque<SwappedSeq>,
     /// Reused across ticks so the hot path stops allocating fresh
     /// active-slot / token / position `Vec`s per decode step.
     scratch_active: Vec<usize>,
@@ -326,11 +420,20 @@ impl<B: DecodeBackend> Engine<B> {
                 assert_eq!(b % p.block_size, 0,
                            "block_size must divide prefill bucket {b}");
             }
+            assert!(
+                (!p.prefix_sharing && p.swap_blocks == 0)
+                    || backend.supports_block_ops(),
+                "prefix sharing / swap need backend block ops (the \
+                 device-paged path is gated, see ROADMAP)"
+            );
             PagedState {
                 alloc: BlockAllocator::new(p.num_blocks, p.block_size),
                 tables: (0..cfg.decode_batch)
                     .map(|_| BlockTable::new())
                     .collect(),
+                index: PrefixIndex::new(),
+                swap: SwapPool::new(p.swap_blocks),
+                sharing: p.prefix_sharing,
             }
         });
         let slots = SlotMap::new(cfg.decode_batch, backend.t_max());
@@ -343,6 +446,7 @@ impl<B: DecodeBackend> Engine<B> {
             waiting: Default::default(),
             active,
             paged,
+            swapped: Default::default(),
             scratch_active: Vec::new(),
             scratch_tokens: Vec::new(),
             scratch_pos: Vec::new(),
@@ -374,10 +478,16 @@ impl<B: DecodeBackend> Engine<B> {
         self.waiting.push_back(w);
     }
 
-    /// Anything queued or in flight?
+    /// Anything queued, swapped out, or in flight?
     pub fn has_work(&self) -> bool {
         !self.waiting.is_empty()
+            || !self.swapped.is_empty()
             || self.slots.free_count() != self.slots.batch()
+    }
+
+    /// Sequences currently parked in the swap pool.
+    pub fn swapped_len(&self) -> usize {
+        self.swapped.len()
     }
 
     pub fn free_slots(&self) -> usize {
@@ -409,6 +519,11 @@ impl<B: DecodeBackend> Engine<B> {
             m.kv_blocks_total = p.alloc.capacity() as u64;
             m.kv_blocks_in_use = p.alloc.in_use() as u64;
             m.kv_utilization = p.alloc.utilization();
+            m.kv_shared_blocks = p.alloc.shared_blocks() as u64;
+            m.kv_shared_refs = p.alloc.shared_refs();
+            m.swapped_seqs = self.swapped.len() as u64;
+            m.swap_blocks_in_use = p.swap.blocks_in_use() as u64;
+            m.swap_blocks_total = p.swap.max_blocks() as u64;
         }
         m
     }
@@ -450,15 +565,39 @@ impl<B: DecodeBackend> Engine<B> {
         }
     }
 
-    /// One scheduler iteration: expire overdue waiters, admit queued
-    /// requests while capacity (lanes *and* KV blocks) lasts, then run
-    /// one batched decode step over all active slots.
+    /// One scheduler iteration: expire overdue waiters, swap preempted
+    /// sequences back in, admit queued requests while capacity (lanes
+    /// *and* KV blocks) lasts, then run one batched decode step over all
+    /// active slots.
     pub fn tick(&mut self) {
         self.expire_waiting();
+        self.swap_in_ready();
         let mut admitted = 0;
         while admitted < self.cfg.max_prefill_per_step
             && !self.waiting.is_empty()
         {
+            // Swapped-out sequences are older than anything in the
+            // waiting queue; while any is parked, new admissions hold
+            // back so the blocks they would take go to resumption
+            // instead.  RejectOnFull keeps its instant accept-or-shed
+            // contract: non-preempted heads are rejected rather than
+            // silently queued behind the parked sequences.
+            if !self.swapped.is_empty() {
+                match self.cfg.admission {
+                    AdmissionPolicy::RejectOnFull
+                        if !self.waiting[0].preempted =>
+                    {
+                        let w = self.waiting.pop_front().unwrap();
+                        self.reject(
+                            w,
+                            "capacity reserved for swapped sequences",
+                            FinishReason::Rejected,
+                        );
+                        continue;
+                    }
+                    _ => break, // heads wait for resumption
+                }
+            }
             if self.slots.free_count() == 0
                 && matches!(self.cfg.admission,
                             AdmissionPolicy::Wait { .. })
@@ -528,6 +667,20 @@ impl<B: DecodeBackend> Engine<B> {
         }
     }
 
+    /// The vocab-filtered, `t_max`-capped form of a prompt — exactly
+    /// what [`Self::plan_admission`] serves and what the prefix index
+    /// was keyed on at registration.
+    fn canonical_prompt(&self, prompt: &[u32]) -> Vec<u32> {
+        let vocab = self.backend.vocab();
+        let mut p: Vec<u32> = prompt
+            .iter()
+            .copied()
+            .filter(|&t| (t as usize) < vocab)
+            .collect();
+        p.truncate(self.backend.t_max() - 1);
+        p
+    }
+
     /// What admitting this request costs, or why it can never be served.
     fn plan_admission(&self, request: &Request)
         -> Result<AdmitPlan, String> {
@@ -548,6 +701,7 @@ impl<B: DecodeBackend> Engine<B> {
         else {
             return Err("prompt longer than any prefill bucket".into());
         };
+        let mut shared = Vec::new();
         let blocks = match &self.paged {
             Some(p) => {
                 let need = p.alloc.blocks_for_rows(len);
@@ -557,21 +711,52 @@ impl<B: DecodeBackend> Engine<B> {
                         p.alloc.capacity()
                     ));
                 }
-                need
+                if p.sharing {
+                    shared = Self::match_prefix(p, &prompt, len);
+                }
+                need - shared.len()
             }
             None => 0,
         };
-        Ok(AdmitPlan { prompt, len, bucket, blocks })
+        Ok(AdmitPlan { prompt, len, bucket, blocks, shared })
+    }
+
+    /// Longest prefix-index match for a prompt: full blocks along the
+    /// chain, then — only when every full block hit — the whole-prompt
+    /// tail entry covering the trailing partial block.  Each hit is
+    /// `(block, needs_revive)`: a hit on a live block is retained (one
+    /// more reference), a hit on a recently-freed block is revived out
+    /// of the free list.
+    fn match_prefix(p: &PagedState, prompt: &[u32], len: usize)
+        -> Vec<(u32, bool)> {
+        let bs = p.alloc.block_size();
+        let full = len / bs;
+        let mut shared = Vec::new();
+        let mut parent = PREFIX_SEED;
+        for i in 0..full {
+            let span = &prompt[i * bs..(i + 1) * bs];
+            let Some(b) = p.index.lookup(parent, span) else { break };
+            shared.push((b, p.alloc.ref_count(b) == 0));
+            parent = chain_hash(parent, span);
+        }
+        if shared.len() == full && len % bs != 0 {
+            if let Some(b) = p.index.lookup(parent, &prompt[full * bs..len])
+            {
+                shared.push((b, p.alloc.ref_count(b) == 0));
+            }
+        }
+        shared
     }
 
     /// Can the queue head be admitted *now*?  Flat mode counts lanes;
-    /// paged mode additionally counts free blocks.
+    /// paged mode additionally counts the free-list draw (fresh blocks
+    /// plus revived prefix hits).
     fn has_capacity(&self, plan: &AdmitPlan) -> bool {
         if self.slots.free_count() == 0 {
             return false;
         }
         match &self.paged {
-            Some(p) => p.alloc.free_count() >= plan.blocks,
+            Some(p) => p.alloc.free_count() >= plan.free_blocks_needed(),
             None => true,
         }
     }
@@ -606,20 +791,34 @@ impl<B: DecodeBackend> Engine<B> {
             finish,
             ttft_ms: total_ms,
             total_ms,
+            swapped_ms: 0.0,
         });
     }
 
     fn admit(&mut self, w: Waiting, plan: AdmitPlan) {
         let vocab = self.backend.vocab();
-        let AdmitPlan { prompt, len, bucket, blocks } = plan;
+        let block_bytes = self.backend.block_bytes() as u64;
+        let AdmitPlan { prompt, len, bucket, blocks, shared } = plan;
         let Some(slot) = self.slots.alloc(w.request.id) else {
             self.reject(w, "no free KV slot", FinishReason::Rejected);
             return;
         };
         if let Some(p) = &mut self.paged {
             debug_assert!(p.tables[slot].is_empty(), "stale block table");
+            // Map the prefix hits first (read-only): live blocks gain a
+            // reference, recently-freed ones are revived with their
+            // bytes intact.  Plans are made and applied back-to-back on
+            // the engine thread, so a planned revival cannot race.
+            for &(id, revive) in &shared {
+                if revive {
+                    assert!(p.alloc.revive(id), "planned revival raced");
+                } else {
+                    p.alloc.retain(id);
+                }
+                p.tables[slot].push(id);
+            }
             for _ in 0..blocks {
-                match p.alloc.alloc() {
+                match p.alloc_fresh() {
                     Some(id) => p.tables[slot].push(id),
                     None => {
                         // has_capacity checked free blocks; defensive.
@@ -640,7 +839,7 @@ impl<B: DecodeBackend> Engine<B> {
         let t0 = Instant::now();
         let prefilled = match &self.paged {
             Some(p) => self.backend.prefill_into_paged(
-                slot, &p.tables[slot], &toks, bucket, len,
+                slot, &p.tables[slot], &toks, bucket, len, shared.len(),
             ),
             None => self.backend.prefill_into(slot, &toks, bucket, len),
         };
@@ -671,6 +870,32 @@ impl<B: DecodeBackend> Engine<B> {
             return;
         }
 
+        // Prefill succeeded: account the sharing win and register this
+        // prompt's freshly-written blocks in the prefix index (only now
+        // — a failed admission must never index garbage blocks).
+        if let Some(p) = &mut self.paged {
+            if p.sharing {
+                self.metrics.prefix_hit_blocks += shared.len() as u64;
+                self.metrics.prefix_bytes_saved +=
+                    shared.len() as u64 * block_bytes;
+                let bs = p.alloc.block_size();
+                let full = len / bs;
+                let mut parent = PREFIX_SEED;
+                for i in 0..full {
+                    let span = &prompt[i * bs..(i + 1) * bs];
+                    if i >= shared.len() {
+                        p.index.insert(parent, span,
+                                       p.tables[slot].blocks()[i]);
+                    }
+                    parent = chain_hash(parent, span);
+                }
+                if len % bs != 0 && shared.len() <= full {
+                    p.index.insert(parent, &prompt[full * bs..len],
+                                   p.tables[slot].blocks()[full]);
+                }
+            }
+        }
+
         // Sample the first generated token from the last prompt position.
         let row = &logits[(len - 1) * vocab..len * vocab];
         let mut seq = ActiveSeq {
@@ -682,6 +907,7 @@ impl<B: DecodeBackend> Engine<B> {
             reply: w.reply,
             submitted: w.submitted,
             ttft_ms: None,
+            swapped_ms: 0.0,
             generated: Vec::new(),
             last_token: 0,
         };
@@ -695,32 +921,74 @@ impl<B: DecodeBackend> Engine<B> {
         self.maybe_finish(slot);
     }
 
-    /// Grow each active lane's block table to cover the row its next
-    /// append will write.  When the pool runs dry, evict the
-    /// youngest-by-tokens running sequence — its blocks return to the
-    /// pool and the request re-enters the queue head for re-prefill
-    /// (deterministic sampling replays the same stream) — so throughput
-    /// degrades gracefully instead of failing requests.
-    fn ensure_paged_capacity(&mut self) {
-        let Some(p) = &self.paged else { return };
-        let bs = p.alloc.block_size();
+    /// Make every active lane's next append writable: grow its table
+    /// when `pos` crosses a block boundary, and copy-on-write fork the
+    /// target block when it is shared (prefix hit still mapped by
+    /// someone else) — a shared block is never mutated in place.  When
+    /// the pool runs dry, evict the lowest-priority-then-youngest
+    /// running sequence: its blocks are swapped out to the host pool
+    /// (state preserved, resumed later) or — when the swap pool is full
+    /// or disabled — the request re-enters the queue head for
+    /// re-prefill (deterministic sampling replays the same stream).
+    fn ensure_paged_capacity(&mut self) -> Result<()> {
+        if self.paged.is_none() {
+            return Ok(());
+        }
+        let bs = self.paged.as_ref().unwrap().alloc.block_size();
         loop {
-            let needy = {
+            // What does some active lane need before this step's append?
+            // `None` cow = grow; `Some((idx, old))` = fork table entry
+            // `idx` away from shared block `old`.
+            let need = {
                 let p = self.paged.as_ref().unwrap();
-                self.slots.active_iter().find(|&s| {
-                    self.slots.pos(s) >= p.tables[s].capacity_rows(bs)
+                self.slots.active_iter().find_map(|s| {
+                    let pos = self.slots.pos(s);
+                    if pos >= p.tables[s].capacity_rows(bs) {
+                        return Some((s, None));
+                    }
+                    let (blk, _) =
+                        p.tables[s].physical(pos, bs).unwrap();
+                    if p.alloc.is_shared(blk) {
+                        return Some((s, Some((pos / bs, blk))));
+                    }
+                    None
                 })
             };
-            let Some(s) = needy else { return };
-            let p = self.paged.as_mut().unwrap();
-            if let Some(id) = p.alloc.alloc() {
-                p.tables[s].push(id);
+            let Some((s, cow)) = need else { return Ok(()) };
+            if let Some(id) = self.paged.as_mut().unwrap().alloc_fresh() {
+                match cow {
+                    None => {
+                        self.paged.as_mut().unwrap().tables[s].push(id);
+                    }
+                    Some((idx, old)) => {
+                        if let Err(e) = self.backend.copy_block(old, id) {
+                            // Don't leak the fork target on a broken
+                            // backend path.
+                            self.paged.as_mut().unwrap().alloc.free(id);
+                            return Err(e);
+                        }
+                        let p = self.paged.as_mut().unwrap();
+                        let prev = p.tables[s].replace(idx, id);
+                        debug_assert_eq!(prev, old, "COW table drift");
+                        // Drop this lane's reference to the original;
+                        // the other holders (and the prefix index) keep
+                        // it untouched.
+                        p.alloc.free(old);
+                        self.metrics.cow_copies += 1;
+                    }
+                }
                 continue;
             }
             let victim = self
                 .slots
                 .active_iter()
-                .min_by_key(|&x| (self.slots.pos(x), x))
+                .min_by_key(|&x| {
+                    (
+                        self.active[x].as_ref().unwrap().request.priority,
+                        self.slots.pos(x),
+                        x,
+                    )
+                })
                 .expect("needy lane implies an active lane");
             if victim == s && self.slots.active_iter().count() == 1 {
                 // Alone and out of memory: evicting itself would replay
@@ -730,15 +998,20 @@ impl<B: DecodeBackend> Engine<B> {
                     self.active[s].as_ref().unwrap().request.id
                 );
                 self.finish(s, FinishReason::CacheFull);
-                return;
+                return Ok(());
             }
             self.preempt(victim);
         }
     }
 
-    /// Evict a running sequence: return its blocks, free its lane, and
-    /// requeue the original request at the queue head for re-prefill.
+    /// Evict a running sequence to reclaim KV blocks: block-level
+    /// swap-out when the host pool has room, full re-prefill requeue as
+    /// the fallback.
     fn preempt(&mut self, slot: usize) {
+        self.metrics.preemptions += 1;
+        if self.try_swap_out(slot) {
+            return;
+        }
         let seq = self.active[slot].take().expect("preempt of free lane");
         crate::info!(
             "preempting request {} (slot {slot}, {} cache rows): pool dry",
@@ -746,7 +1019,6 @@ impl<B: DecodeBackend> Engine<B> {
             self.slots.pos(slot)
         );
         self.release_slot(slot);
-        self.metrics.preemptions += 1;
         // Generated tokens are discarded; greedy and seeded top-k both
         // replay identically after re-prefill, and the original submit
         // time is kept so latency metrics stay honest.  `preempted`
@@ -760,10 +1032,164 @@ impl<B: DecodeBackend> Engine<B> {
         });
     }
 
+    /// Copy a victim's blocks out to the bounded host swap pool and park
+    /// the full decode state for later resumption.  Returns false (and
+    /// counts a fallback) when swapping is off, the pool is full, or the
+    /// backend cannot export — the caller then requeues for re-prefill.
+    fn try_swap_out(&mut self, slot: usize) -> bool {
+        let Some(p) = &self.paged else { return false };
+        if p.swap.max_blocks() == 0 {
+            return false;
+        }
+        let n = p.tables[slot].len();
+        if !p.swap.fits(n) {
+            self.metrics.swap_fallbacks += 1;
+            return false;
+        }
+        // Shared blocks are copied out like private ones; their other
+        // holders keep the originals.
+        let mut data = Vec::with_capacity(n);
+        for &b in p.tables[slot].blocks() {
+            match self.backend.export_block(b) {
+                Ok(blk) => data.push(blk),
+                Err(e) => {
+                    crate::info!("swap-out export failed: {e:#}");
+                    self.metrics.swap_fallbacks += 1;
+                    return false;
+                }
+            }
+        }
+        let pos = self.slots.pos(slot);
+        let seq = self.active[slot].take().expect("swap of free lane");
+        crate::info!(
+            "swapping out request {} (slot {slot}, {n} blocks, {} rows)",
+            seq.request.id,
+            pos
+        );
+        self.release_slot(slot);
+        self.paged.as_mut().unwrap().swap.reserve(n);
+        self.metrics.swap_outs += 1;
+        self.swapped.push_back(SwappedSeq {
+            seq,
+            pos,
+            data,
+            swapped_at: Instant::now(),
+        });
+        true
+    }
+
+    /// Resume swapped-out sequences (oldest first) while a lane and
+    /// enough blocks are free: fresh blocks are allocated, the swapped
+    /// bytes imported verbatim, and decode continues exactly where it
+    /// stopped — generated tokens, RNG state, and TTFT all survive; only
+    /// total latency absorbs the time parked.
+    fn swap_in_ready(&mut self) {
+        loop {
+            let Some(head) = self.swapped.front() else { return };
+            let n = head.data.len();
+            // Re-map still-indexed *full prompt* blocks (live or
+            // revivable) instead of importing private copies: that
+            // restores the sharing the eviction broke and shrinks the
+            // free-list draw needed to resume.  Tail/growth blocks hold
+            // generated rows and always come back from the swapped
+            // bytes.
+            let hits = {
+                let Some(p) = &self.paged else { return };
+                if p.sharing {
+                    let prompt =
+                        self.canonical_prompt(&head.seq.request.prompt);
+                    let full = prompt.len() / p.alloc.block_size();
+                    let mut hits =
+                        Self::match_prefix(p, &prompt, prompt.len());
+                    hits.truncate(full.min(n));
+                    hits
+                } else {
+                    Vec::new()
+                }
+            };
+            let draw = n - hits.len()
+                + hits.iter().filter(|&&(_, revive)| revive).count();
+            {
+                let p = self.paged.as_ref().unwrap();
+                if self.slots.free_count() == 0
+                    || p.alloc.free_count() < draw
+                {
+                    return;
+                }
+            }
+            let entry = self.swapped.pop_front().unwrap();
+            let slot = self
+                .slots
+                .alloc(entry.seq.request.id)
+                .expect("free lane was checked");
+            if let Some(p) = &mut self.paged {
+                for &(id, revive) in &hits {
+                    if revive {
+                        assert!(p.alloc.revive(id),
+                                "planned revival raced");
+                    } else {
+                        p.alloc.retain(id);
+                    }
+                    p.tables[slot].push(id);
+                }
+            }
+            let block_bytes = self.backend.block_bytes() as u64;
+            self.metrics.prefix_hit_blocks += hits.len() as u64;
+            self.metrics.prefix_bytes_saved +=
+                hits.len() as u64 * block_bytes;
+            let mut ok = true;
+            for blk in entry.data.iter().skip(hits.len()) {
+                let id = self
+                    .paged
+                    .as_mut()
+                    .unwrap()
+                    .alloc_fresh()
+                    .expect("free blocks were checked");
+                self.paged.as_mut().unwrap().tables[slot].push(id);
+                if let Err(e) = self.backend.import_block(id, blk) {
+                    crate::info!("swap-in import failed: {e:#}");
+                    ok = false;
+                    break;
+                }
+            }
+            self.paged.as_mut().unwrap().swap.release(n);
+            let mut seq = entry.seq;
+            seq.swapped_ms +=
+                entry.swapped_at.elapsed().as_secs_f64() * 1e3;
+            if !ok || self.slots.set_pos(slot, entry.pos).is_err() {
+                // Broken backend path: fail the request cleanly instead
+                // of resuming over a half-imported cache.
+                self.release_slot(slot);
+                self.metrics.rejected += 1;
+                let total_ms =
+                    seq.submitted.elapsed().as_secs_f64() * 1e3;
+                let ttft = seq.ttft_ms.unwrap_or(total_ms);
+                self.metrics.ttft_ms.record(ttft);
+                self.metrics.total_ms.record(total_ms);
+                let _ = seq.reply.send(Response {
+                    id: seq.request.id,
+                    prompt_len: seq.request.prompt.len(),
+                    tokens: Vec::new(),
+                    finish: FinishReason::Rejected,
+                    ttft_ms: ttft,
+                    total_ms,
+                    swapped_ms: seq.swapped_ms,
+                });
+                continue;
+            }
+            crate::info!(
+                "swapped request {} back in (slot {slot}, {n} blocks)",
+                seq.request.id
+            );
+            self.metrics.swap_ins += 1;
+            self.active[slot] = Some(seq);
+        }
+    }
+
     fn decode_step(&mut self) -> Result<()> {
         let b = self.slots.batch();
         if self.paged.is_some() {
-            self.ensure_paged_capacity();
+            self.ensure_paged_capacity()?;
         }
         self.slots.active_into(&mut self.scratch_active);
         if self.scratch_active.is_empty() {
@@ -854,6 +1280,7 @@ impl<B: DecodeBackend> Engine<B> {
             finish: reason,
             ttft_ms: seq.ttft_ms.unwrap_or(total_ms),
             total_ms,
+            swapped_ms: seq.swapped_ms,
         });
     }
 }

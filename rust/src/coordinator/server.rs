@@ -168,6 +168,24 @@ fn route(
                     ("expired", json::num(m.expired as f64)),
                     ("waiting", json::num(m.waiting as f64)),
                     ("preemptions", json::num(m.preemptions as f64)),
+                    ("swap_outs", json::num(m.swap_outs as f64)),
+                    ("swap_ins", json::num(m.swap_ins as f64)),
+                    ("swap_fallbacks",
+                     json::num(m.swap_fallbacks as f64)),
+                    ("swapped_seqs", json::num(m.swapped_seqs as f64)),
+                    ("swap_blocks_in_use",
+                     json::num(m.swap_blocks_in_use as f64)),
+                    ("swap_blocks_total",
+                     json::num(m.swap_blocks_total as f64)),
+                    ("cow_copies", json::num(m.cow_copies as f64)),
+                    ("prefix_hit_blocks",
+                     json::num(m.prefix_hit_blocks as f64)),
+                    ("prefix_bytes_saved",
+                     json::num(m.prefix_bytes_saved as f64)),
+                    ("kv_shared_blocks",
+                     json::num(m.kv_shared_blocks as f64)),
+                    ("kv_shared_refs",
+                     json::num(m.kv_shared_refs as f64)),
                     ("kv_blocks_in_use",
                      json::num(m.kv_blocks_in_use as f64)),
                     ("kv_blocks_total",
@@ -226,12 +244,31 @@ fn generate(
         },
         _ => Sampling::Greedy,
     };
+    // Optional eviction class: "low" | "normal" | "high" (an unknown
+    // string or a non-string value is a client error, not a silent
+    // Normal).
+    let priority = match parsed.get("priority") {
+        None => super::Priority::Normal,
+        Some(v) => {
+            match v.as_str().and_then(super::Priority::parse) {
+                Some(p) => p,
+                None => {
+                    return http_response(
+                        400,
+                        "text/plain",
+                        "priority must be low|normal|high",
+                    )
+                }
+            }
+        }
+    };
     let id = next_id.fetch_add(1, Ordering::Relaxed);
     match engine.generate(Request {
         id,
         prompt: tokenizer.encode_prompt(prompt),
         max_new_tokens: max_new.min(256),
         sampling,
+        priority,
     }) {
         Ok(resp) => http_response(
             200,
@@ -243,6 +280,7 @@ fn generate(
                 ("finish", json::s(&format!("{:?}", resp.finish))),
                 ("ttft_ms", json::num(resp.ttft_ms)),
                 ("total_ms", json::num(resp.total_ms)),
+                ("swapped_ms", json::num(resp.swapped_ms)),
             ])
             .to_string(),
         ),

@@ -38,7 +38,9 @@
 use anyhow::Result;
 
 use super::backend::DecodeBackend;
-use crate::kvcache::paged::{BlockTable, PagedHostKv, SENTINEL_BLOCK};
+use crate::kvcache::paged::{
+    BlockTable, PagedHostKv, SwappedBlock, SENTINEL_BLOCK,
+};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FakeCacheMode {
@@ -303,6 +305,7 @@ impl DecodeBackend for FakeBackend {
         toks: &[i32],
         bucket: usize,
         len: usize,
+        shared_blocks: usize,
     ) -> Result<Vec<f32>> {
         anyhow::ensure!(toks.len() == bucket, "prefill bucket");
         anyhow::ensure!(self.paged.is_some(), "not a paged backend");
@@ -313,6 +316,10 @@ impl DecodeBackend for FakeBackend {
         // Same per-mode write pattern as the flat path, but addressed
         // through the block table; Device-mode padding chunks beyond the
         // table land in the sentinel block (kvwrite_paged contract).
+        // The first `shared_blocks` table entries are read-only prefix
+        // hits: Host mode skips their rows (the bytes are already
+        // there), Device mode parks the whole chunk's writes in the
+        // sentinel — either way a shared block is never mutated.
         let copy_rows = match self.mode {
             FakeCacheMode::Host => len,
             FakeCacheMode::Device => bucket,
@@ -320,6 +327,22 @@ impl DecodeBackend for FakeBackend {
         let (layers, d, mode) = (self.layers, self.d, self.mode);
         let (store, bs) = self.paged.as_mut().unwrap();
         for p in 0..copy_rows.min(self.t_max) {
+            if p / *bs < shared_blocks {
+                if mode == FakeCacheMode::Host {
+                    continue; // row already present in the shared block
+                }
+                // Device DUS lattice: dead write parked in the sentinel.
+                for l in 0..layers {
+                    let (kr, vr) =
+                        store.rows_at_mut(l, SENTINEL_BLOCK, p % *bs);
+                    for j in 0..d {
+                        let (kv, vv) = rows[(l * bucket + p) * d + j];
+                        kr[j] = kv;
+                        vr[j] = vv;
+                    }
+                }
+                continue;
+            }
             anyhow::ensure!(
                 mode == FakeCacheMode::Device
                     || table.physical(p, *bs).is_some(),
@@ -336,6 +359,32 @@ impl DecodeBackend for FakeBackend {
             }
         }
         Ok(logits)
+    }
+
+    fn supports_block_ops(&self) -> bool {
+        self.paged.is_some()
+    }
+
+    fn copy_block(&mut self, src: u32, dst: u32) -> Result<()> {
+        let (store, _) = self.paged.as_mut().expect("paged store");
+        store.copy_block(src, dst)
+    }
+
+    fn export_block(&self, id: u32) -> Result<SwappedBlock> {
+        let (store, _) = self.paged.as_ref().expect("paged store");
+        store.export_block(id)
+    }
+
+    fn import_block(&mut self, id: u32, blk: &SwappedBlock) -> Result<()> {
+        let (store, _) = self.paged.as_mut().expect("paged store");
+        store.import_block(id, blk)
+    }
+
+    fn block_bytes(&self) -> usize {
+        self.paged
+            .as_ref()
+            .map(|(s, _)| s.block_bytes())
+            .unwrap_or(0)
     }
 
     fn decode_paged(

@@ -1,28 +1,48 @@
 //! Paged KV cache: block-granular allocation over a shared pool
-//! (DESIGN.md §10).
+//! (DESIGN.md §10), plus the shared-block policies layered on top of it
+//! (DESIGN.md §11).
 //!
 //! The flat [`super::HostKvMirror`] reserves a full `T_max`-row lane per
 //! sequence, so a 12-token decode strands `T_max - 12` rows and admission
 //! capacity is `batch`, not memory.  This module splits storage into
 //! fixed-size blocks of `block_size` token rows (vLLM-style):
 //!
-//! * [`BlockAllocator`] — free-list over the block pool.  Block 0 is the
-//!   **sentinel**: never handed out, it is where the device DUS lattice
-//!   parks the dead writes of free lanes (the flat `decode_dev` graph
-//!   wrote those into the lane's own region; a paged graph needs a
-//!   harmless physical target).  Usable capacity is `num_blocks - 1`.
+//! * [`BlockAllocator`] — **refcounted** free-list over the block pool.
+//!   Block 0 is the **sentinel**: never handed out, it is where the
+//!   device DUS lattice parks the dead writes of free lanes (the flat
+//!   `decode_dev` graph wrote those into the lane's own region; a paged
+//!   graph needs a harmless physical target).  Usable capacity is
+//!   `num_blocks - 1`.  A block with refcount > 1 is *shared*: mapped
+//!   read-only into several tables; writers must copy-on-write first.
 //! * [`BlockTable`] — one sequence's ordered block list.  Logical row
 //!   `r` lives at `(blocks[r / block_size], r % block_size)`.
+//! * [`PrefixIndex`] — content-addressed map from token prefixes to the
+//!   block holding their K/V rows, so admission can map a block-aligned
+//!   shared prompt prefix instead of recomputing and re-storing it.
+//!   Entries survive the owning sequence (recently-freed blocks are
+//!   *revived* from the free list on a hit) until the block is
+//!   reallocated for new content.
 //! * [`PagedHostKv`] — host K/V arrays of shape
 //!   `(L, num_blocks, block_size, d)` addressed through block tables;
-//!   the paged twin of `HostKvMirror`.
+//!   the paged twin of `HostKvMirror`.  Also provides the whole-block
+//!   copy/export/import primitives behind COW forks and block-level
+//!   swap.
+//! * [`SwapPool`] — accounting for a bounded host-side swap area:
+//!   preemption copies a sequence's blocks out instead of discarding
+//!   them for re-prefill (the engine stores the bytes, this tracks the
+//!   bound).
 //!
 //! Invariants (property-tested in rust/tests/proptests.rs):
 //! * a block is never double-allocated and never handed out twice
 //!   without an intervening free,
+//! * a block is never returned to the free list while its refcount is
+//!   nonzero; copy-on-write never mutates a shared block,
 //! * the sentinel is never allocated,
 //! * freeing every table returns the allocator to full capacity,
-//! * every table row maps to a block owned by that table.
+//! * every table row maps to a block owned by that table,
+//! * block export/import round-trips bytes exactly.
+
+use std::collections::HashMap;
 
 use anyhow::Result;
 
@@ -33,13 +53,24 @@ pub const SENTINEL_BLOCK: u32 = 0;
 // BlockAllocator: free-list over the block pool
 // ---------------------------------------------------------------------------
 
+/// `pos_in_free` marker for "not in the free list".
+const NOT_FREE: u32 = u32::MAX;
+
 #[derive(Debug, Clone)]
 pub struct BlockAllocator {
     block_size: usize,
-    /// Free-list (stack). Never contains the sentinel.
+    /// Free-list (stack) of refcount-0 blocks. Never contains the
+    /// sentinel.
     free: Vec<u32>,
-    /// Occupancy by block id; the sentinel reads as allocated forever.
-    allocated: Vec<bool>,
+    /// Reference count by block id; the sentinel is pinned at 1 forever.
+    /// `alloc` hands a block out at refcount 1, [`Self::retain`] maps it
+    /// into another table (prefix sharing), [`Self::free`] drops one
+    /// reference and only returns the block to the free list at zero.
+    refcount: Vec<u32>,
+    /// Index of each block inside `free` ([`NOT_FREE`] when allocated) —
+    /// keeps [`Self::revive`] O(1) instead of scanning the free list
+    /// per prefix hit on the admission path.
+    pos_in_free: Vec<u32>,
 }
 
 impl BlockAllocator {
@@ -48,11 +79,15 @@ impl BlockAllocator {
     pub fn new(num_blocks: usize, block_size: usize) -> Self {
         assert!(num_blocks >= 2, "need at least one usable block");
         assert!(block_size >= 1, "block_size must be positive");
-        let mut allocated = vec![false; num_blocks];
-        allocated[SENTINEL_BLOCK as usize] = true;
+        let mut refcount = vec![0u32; num_blocks];
+        refcount[SENTINEL_BLOCK as usize] = 1;
         // LIFO over descending ids => first alloc returns block 1.
         let free: Vec<u32> = (1..num_blocks as u32).rev().collect();
-        BlockAllocator { block_size, free, allocated }
+        let mut pos_in_free = vec![NOT_FREE; num_blocks];
+        for (at, &id) in free.iter().enumerate() {
+            pos_in_free[id as usize] = at as u32;
+        }
+        BlockAllocator { block_size, free, refcount, pos_in_free }
     }
 
     pub fn block_size(&self) -> usize {
@@ -61,12 +96,12 @@ impl BlockAllocator {
 
     /// Total pool size including the sentinel.
     pub fn num_blocks(&self) -> usize {
-        self.allocated.len()
+        self.refcount.len()
     }
 
     /// Usable blocks (excludes the sentinel).
     pub fn capacity(&self) -> usize {
-        self.allocated.len() - 1
+        self.refcount.len() - 1
     }
 
     pub fn free_count(&self) -> usize {
@@ -98,20 +133,91 @@ impl BlockAllocator {
 
     pub fn alloc(&mut self) -> Option<u32> {
         let id = self.free.pop()?;
-        debug_assert!(!self.allocated[id as usize], "free-list corruption");
-        self.allocated[id as usize] = true;
+        debug_assert_eq!(
+            self.refcount[id as usize], 0,
+            "free-list corruption"
+        );
+        self.refcount[id as usize] = 1;
+        self.pos_in_free[id as usize] = NOT_FREE;
         Some(id)
     }
 
-    /// Return a block (panics on double-free or sentinel: scheduler bug).
+    /// Drop one reference to a block; it returns to the free list only
+    /// when the last reference is gone (panics on refcount underflow or
+    /// sentinel: scheduler bug).
     pub fn free(&mut self, id: u32) {
         assert_ne!(id, SENTINEL_BLOCK, "freed the sentinel block");
         assert!(
-            self.allocated[id as usize],
+            self.refcount[id as usize] > 0,
             "double free of block {id}"
         );
-        self.allocated[id as usize] = false;
-        self.free.push(id);
+        self.refcount[id as usize] -= 1;
+        if self.refcount[id as usize] == 0 {
+            self.pos_in_free[id as usize] = self.free.len() as u32;
+            self.free.push(id);
+        }
+    }
+
+    /// Map a live block into one more table (prefix sharing / COW fork
+    /// source).  Panics on the sentinel or a free block: the caller must
+    /// [`Self::revive`] those instead.
+    pub fn retain(&mut self, id: u32) {
+        assert_ne!(id, SENTINEL_BLOCK, "retained the sentinel block");
+        assert!(
+            self.refcount[id as usize] > 0,
+            "retain of free block {id}"
+        );
+        self.refcount[id as usize] += 1;
+    }
+
+    /// Pull a *recently-freed* block (refcount 0, still holding its old
+    /// contents) back out of the free list at refcount 1 — the prefix
+    /// index hit path for blocks whose owner already finished.  Returns
+    /// false if the block is not currently free.  O(1): the free list
+    /// tracks each member's slot, and the swap-removed tail member is
+    /// re-pointed.
+    pub fn revive(&mut self, id: u32) -> bool {
+        if id == SENTINEL_BLOCK || self.refcount[id as usize] != 0 {
+            return false;
+        }
+        let at = self.pos_in_free[id as usize];
+        if at == NOT_FREE {
+            return false;
+        }
+        let at = at as usize;
+        debug_assert_eq!(self.free[at], id, "free-list position drift");
+        self.free.swap_remove(at);
+        if at < self.free.len() {
+            self.pos_in_free[self.free[at] as usize] = at as u32;
+        }
+        self.pos_in_free[id as usize] = NOT_FREE;
+        self.refcount[id as usize] = 1;
+        true
+    }
+
+    /// Current reference count of a block (sentinel reads as 1).
+    pub fn ref_count(&self, id: u32) -> u32 {
+        self.refcount[id as usize]
+    }
+
+    /// A shared block is mapped into more than one table: read-only, a
+    /// writer must copy-on-write first.
+    pub fn is_shared(&self, id: u32) -> bool {
+        self.refcount[id as usize] > 1
+    }
+
+    /// Number of usable blocks currently mapped into >1 table.
+    pub fn shared_blocks(&self) -> usize {
+        self.refcount[1..].iter().filter(|&&c| c > 1).count()
+    }
+
+    /// References beyond the first across all usable blocks — the number
+    /// of block copies prefix sharing is currently saving.
+    pub fn shared_refs(&self) -> u64 {
+        self.refcount[1..]
+            .iter()
+            .map(|&c| u64::from(c.saturating_sub(1)))
+            .sum()
     }
 }
 
@@ -158,10 +264,168 @@ impl BlockTable {
             .map(|&b| (b, row % block_size))
     }
 
+    /// Swap the block backing one table entry (copy-on-write fork):
+    /// returns the id previously mapped there.
+    pub fn replace(&mut self, idx: usize, id: u32) -> u32 {
+        std::mem::replace(&mut self.blocks[idx], id)
+    }
+
     /// Drain the table for freeing (the caller returns each id to the
     /// allocator); leaves an empty table behind.
     pub fn take_blocks(&mut self) -> Vec<u32> {
         std::mem::take(&mut self.blocks)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PrefixIndex: content-addressed prompt-prefix -> block map
+// ---------------------------------------------------------------------------
+
+/// Seed of the prefix hash chain (FNV-1a offset basis).
+pub const PREFIX_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Extend a prefix chain hash over one span of tokens (FNV-1a).
+pub fn chain_hash(parent: u64, toks: &[u32]) -> u64 {
+    let mut h = parent;
+    for &t in toks {
+        for b in t.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// One registered prefix: the chain hash of everything before the span,
+/// the exact tokens the span covers, and the block holding their rows.
+/// Storing the tokens makes every hit an *equality* check — a hash
+/// collision can cause a miss, never aliasing.
+#[derive(Debug)]
+struct PrefixEntry {
+    parent: u64,
+    toks: Vec<u32>,
+    block: u32,
+}
+
+/// Maps token prefixes to the physical block holding their K/V rows
+/// (DESIGN.md §11).  Full prompt blocks are registered under their
+/// block-aligned prefix; a trailing partial block is registered under
+/// the whole-prompt prefix, which is what lets identical prompts share
+/// their tail (and is the write target that makes copy-on-write real).
+///
+/// Entries outlive their sequence: a freed block keeps its entry — and
+/// its bytes — until the allocator hands the block out for *new*
+/// content, at which point the engine calls [`Self::forget_block`].
+/// Lookups are allocation-free (they run per block per admission plan,
+/// re-planned every tick while a queue head is capacity-blocked): the
+/// probe hashes the span and verifies token equality against the
+/// stored entry.
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    by_hash: HashMap<u64, PrefixEntry>,
+    by_block: HashMap<u32, u64>,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_hash.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_hash.is_empty()
+    }
+
+    /// Block registered for `(parent, toks)`, if any.
+    pub fn lookup(&self, parent: u64, toks: &[u32]) -> Option<u32> {
+        let e = self.by_hash.get(&chain_hash(parent, toks))?;
+        (e.parent == parent && e.toks == toks).then_some(e.block)
+    }
+
+    /// Register `block` as holding the rows of `(parent, toks)`.  First
+    /// writer wins: an existing entry under the same hash is kept (its
+    /// block already serves sharers — and on the astronomically rare
+    /// collision, keeping the old entry only costs the newcomer a
+    /// miss), and a stale entry for this block is dropped first.
+    pub fn insert(&mut self, parent: u64, toks: &[u32], block: u32) {
+        debug_assert_ne!(block, SENTINEL_BLOCK, "indexed the sentinel");
+        let h = chain_hash(parent, toks);
+        if self.by_hash.contains_key(&h) {
+            return;
+        }
+        self.forget_block(block);
+        self.by_block.insert(block, h);
+        self.by_hash.insert(
+            h,
+            PrefixEntry { parent, toks: toks.to_vec(), block },
+        );
+    }
+
+    /// Drop whatever prefix `block` was registered under — called when
+    /// the allocator reuses the block for new content (its old bytes are
+    /// about to be overwritten).
+    pub fn forget_block(&mut self, block: u32) {
+        if let Some(h) = self.by_block.remove(&block) {
+            self.by_hash.remove(&h);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SwapPool: bounded accounting for host-swapped blocks
+// ---------------------------------------------------------------------------
+
+/// One block's worth of swapped-out K/V bytes (layer-major, as produced
+/// by [`PagedHostKv::export_block`] / the backend's `export_block`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwappedBlock {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// Bounded accounting for the host swap area (DESIGN.md §11).  The
+/// engine owns the swapped bytes (they travel with the preempted
+/// sequence); this tracks the bound so swap-out degrades to re-prefill
+/// instead of growing host memory without limit.
+#[derive(Debug, Clone, Default)]
+pub struct SwapPool {
+    max_blocks: usize,
+    in_use: usize,
+}
+
+impl SwapPool {
+    /// A pool admitting at most `max_blocks` swapped blocks (0 disables
+    /// swapping entirely).
+    pub fn new(max_blocks: usize) -> Self {
+        SwapPool { max_blocks, in_use: 0 }
+    }
+
+    pub fn max_blocks(&self) -> usize {
+        self.max_blocks
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// Would `n` more blocks fit?
+    pub fn fits(&self, n: usize) -> bool {
+        self.in_use + n <= self.max_blocks
+    }
+
+    /// Account `n` blocks swapped out (the caller checked [`Self::fits`]).
+    pub fn reserve(&mut self, n: usize) {
+        assert!(self.fits(n), "swap pool overflow");
+        self.in_use += n;
+    }
+
+    /// Account `n` blocks swapped back in.
+    pub fn release(&mut self, n: usize) {
+        assert!(self.in_use >= n, "swap pool underflow");
+        self.in_use -= n;
     }
 }
 
@@ -252,6 +516,80 @@ impl PagedHostKv {
         })
     }
 
+    /// Floats per block per K (or V) array across all layers.
+    pub fn block_len(&self) -> usize {
+        self.layers * self.block_size * self.d
+    }
+
+    /// Bytes of K/V payload one block holds (both arrays).
+    pub fn block_bytes(&self) -> usize {
+        self.block_len() * 2 * std::mem::size_of::<f32>()
+    }
+
+    fn check_block(&self, id: u32) -> Result<()> {
+        anyhow::ensure!(
+            (id as usize) < self.num_blocks,
+            "block {id} out of pool ({})",
+            self.num_blocks
+        );
+        Ok(())
+    }
+
+    /// Copy every layer's rows of block `src` over block `dst`
+    /// (copy-on-write fork).  The sentinel is never a valid destination.
+    pub fn copy_block(&mut self, src: u32, dst: u32) -> Result<()> {
+        self.check_block(src)?;
+        self.check_block(dst)?;
+        anyhow::ensure!(dst != SENTINEL_BLOCK, "COW into the sentinel");
+        if src == dst {
+            return Ok(());
+        }
+        let n = self.block_size * self.d;
+        for l in 0..self.layers {
+            let s = self.idx(l, src, 0);
+            let d = self.idx(l, dst, 0);
+            self.k.copy_within(s..s + n, d);
+            self.v.copy_within(s..s + n, d);
+        }
+        Ok(())
+    }
+
+    /// Copy a block's K/V rows out (layer-major contiguous) — the
+    /// swap-out primitive.
+    pub fn export_block(&self, id: u32) -> Result<SwappedBlock> {
+        self.check_block(id)?;
+        let n = self.block_size * self.d;
+        let mut k = Vec::with_capacity(self.layers * n);
+        let mut v = Vec::with_capacity(self.layers * n);
+        for l in 0..self.layers {
+            let s = self.idx(l, id, 0);
+            k.extend_from_slice(&self.k[s..s + n]);
+            v.extend_from_slice(&self.v[s..s + n]);
+        }
+        Ok(SwappedBlock { k, v })
+    }
+
+    /// Copy swapped-out rows back into a (fresh) block — the swap-in
+    /// primitive; the exact inverse of [`Self::export_block`].
+    pub fn import_block(&mut self, id: u32, blk: &SwappedBlock)
+        -> Result<()> {
+        self.check_block(id)?;
+        anyhow::ensure!(id != SENTINEL_BLOCK, "swap-in into the sentinel");
+        let n = self.block_size * self.d;
+        anyhow::ensure!(
+            blk.k.len() == self.layers * n && blk.v.len() == blk.k.len(),
+            "swapped block size {} != {}",
+            blk.k.len(),
+            self.layers * n
+        );
+        for l in 0..self.layers {
+            let s = self.idx(l, id, 0);
+            self.k[s..s + n].copy_from_slice(&blk.k[l * n..(l + 1) * n]);
+            self.v[s..s + n].copy_from_slice(&blk.v[l * n..(l + 1) * n]);
+        }
+        Ok(())
+    }
+
     /// Copy prefill K/V (shape (L, 1, t, d) row-major) into a sequence's
     /// blocks (logical rows `0..len`, `len <= t`: right-padded prefill).
     pub fn write_prefill(
@@ -262,6 +600,22 @@ impl PagedHostKv {
         t: usize,
         len: usize,
     ) -> Result<()> {
+        self.write_prefill_from(table, k_pre, v_pre, t, len, 0)
+    }
+
+    /// Like [`Self::write_prefill`], but rows `0..start_row` are left
+    /// untouched: they live in shared read-only blocks already holding
+    /// exactly this content (prefix sharing, DESIGN.md §11).
+    #[allow(clippy::too_many_arguments)]
+    pub fn write_prefill_from(
+        &mut self,
+        table: &BlockTable,
+        k_pre: &[f32],
+        v_pre: &[f32],
+        t: usize,
+        len: usize,
+        start_row: usize,
+    ) -> Result<()> {
         anyhow::ensure!(len <= t, "prefill len {len} > bucket {t}");
         anyhow::ensure!(
             k_pre.len() == self.layers * t * self.d
@@ -270,7 +624,7 @@ impl PagedHostKv {
             k_pre.len(),
             self.layers * t * self.d
         );
-        for row in 0..len {
+        for row in start_row.min(len)..len {
             let (block, off) = self.physical(table, row)?;
             for l in 0..self.layers {
                 let src = (l * t + row) * self.d;
@@ -457,6 +811,116 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn refcounts_share_and_release() {
+        let mut a = BlockAllocator::new(4, 8);
+        let b = a.alloc().unwrap();
+        assert_eq!(a.ref_count(b), 1);
+        assert!(!a.is_shared(b));
+        a.retain(b);
+        assert!(a.is_shared(b));
+        assert_eq!(a.shared_blocks(), 1);
+        assert_eq!(a.shared_refs(), 1);
+        a.free(b);
+        // One reference left: still allocated, no longer shared.
+        assert_eq!(a.ref_count(b), 1);
+        assert!(!a.is_shared(b));
+        assert_eq!(a.free_count(), 2);
+        a.free(b);
+        assert_eq!(a.ref_count(b), 0);
+        assert_eq!(a.free_count(), 3, "block returned at refcount 0");
+    }
+
+    #[test]
+    #[should_panic(expected = "retain of free block")]
+    fn retain_of_free_block_panics() {
+        let mut a = BlockAllocator::new(3, 4);
+        a.retain(2);
+    }
+
+    #[test]
+    fn revive_pulls_a_freed_block_back() {
+        let mut a = BlockAllocator::new(4, 8);
+        let b = a.alloc().unwrap();
+        a.free(b);
+        assert_eq!(a.free_count(), 3);
+        assert!(a.revive(b), "freed block revivable");
+        assert_eq!(a.ref_count(b), 1);
+        assert_eq!(a.free_count(), 2);
+        assert!(!a.revive(b), "live block is retained, not revived");
+        assert!(!a.revive(SENTINEL_BLOCK));
+        // The revived block is out of the free list: allocs skip it.
+        while let Some(x) = a.alloc() {
+            assert_ne!(x, b);
+        }
+    }
+
+    #[test]
+    fn prefix_index_registers_looks_up_and_forgets() {
+        let mut idx = PrefixIndex::new();
+        let toks: Vec<u32> = (0..8).collect();
+        let h1 = chain_hash(PREFIX_SEED, &toks);
+        idx.insert(PREFIX_SEED, &toks, 3);
+        assert_eq!(idx.lookup(PREFIX_SEED, &toks), Some(3));
+        // Different parent or tokens: miss (exact equality, no aliasing).
+        assert_eq!(idx.lookup(h1, &toks), None);
+        assert_eq!(idx.lookup(PREFIX_SEED, &toks[..7]), None);
+        // First writer wins for an identical prefix.
+        idx.insert(PREFIX_SEED, &toks, 5);
+        assert_eq!(idx.lookup(PREFIX_SEED, &toks), Some(3));
+        // Chained second level.
+        idx.insert(h1, &[9, 9], 4);
+        assert_eq!(idx.lookup(h1, &[9, 9]), Some(4));
+        assert_eq!(idx.len(), 2);
+        // Reallocation of block 3 drops only its entry.
+        idx.forget_block(3);
+        assert_eq!(idx.lookup(PREFIX_SEED, &toks), None);
+        assert_eq!(idx.lookup(h1, &[9, 9]), Some(4));
+    }
+
+    #[test]
+    fn block_export_import_roundtrip_and_cow_copy() {
+        let (layers, nb, bs, d) = (2, 4, 4, 3);
+        let mut p = PagedHostKv::new(layers, nb, bs, d);
+        let mut table = BlockTable::new();
+        table.push(2);
+        let n = layers * bs * d;
+        let k: Vec<f32> = (0..n).map(|i| i as f32 + 0.25).collect();
+        let v: Vec<f32> = (0..n).map(|i| -(i as f32)).collect();
+        p.write_prefill(&table, &k, &v, bs, bs).unwrap();
+
+        let blk = p.export_block(2).unwrap();
+        assert_eq!(blk.k.len(), p.block_len());
+        p.import_block(3, &blk).unwrap();
+        for l in 0..layers {
+            for off in 0..bs {
+                assert_eq!(p.rows_at(l, 2, off), p.rows_at(l, 3, off));
+            }
+        }
+        // COW copy: the fork matches, then diverges without touching the
+        // original.
+        p.copy_block(2, 1).unwrap();
+        let (kr, _) = p.rows_at_mut(0, 1, 0);
+        kr[0] = 999.0;
+        assert_eq!(p.rows_at(0, 2, 0).0[0], blk.k[0], "original intact");
+        assert!(p.copy_block(2, SENTINEL_BLOCK).is_err());
+        assert!(p.import_block(SENTINEL_BLOCK, &blk).is_err());
+        assert!(p.export_block(99).is_err());
+    }
+
+    #[test]
+    fn swap_pool_bounds_accounting() {
+        let mut s = SwapPool::new(4);
+        assert!(s.fits(4));
+        s.reserve(3);
+        assert_eq!(s.blocks_in_use(), 3);
+        assert!(!s.fits(2));
+        s.release(2);
+        assert!(s.fits(3));
+        let none = SwapPool::new(0);
+        assert!(!none.fits(1), "zero-size pool disables swap");
     }
 
     #[test]

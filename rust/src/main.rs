@@ -8,6 +8,7 @@
 //! lqer generate  --prompt "..."       serve one request end-to-end
 //! lqer serve-bench                    batched serving load test
 //! lqer bench kv                       paged-KV engine bench (no PJRT)
+//! lqer bench kvshared                 prefix-sharing / swap bench (no PJRT)
 //! lqer eval-ppl  --model --method     WikiText-style perplexity (Tables 2/3/6)
 //! lqer eval-tasks --model --method    downstream accuracy (Table 4)
 //! lqer judge     --a --b              pairwise win rate (Table 5)
@@ -20,8 +21,8 @@
 use anyhow::Result;
 use lqer::config::Manifest;
 use lqer::coordinator::{
-    AdmissionPolicy, EngineConfig, EngineHandle, PagedKvConfig, Request,
-    Sampling,
+    AdmissionPolicy, EngineConfig, EngineHandle, PagedKvConfig, Priority,
+    Request, Sampling,
 };
 use lqer::runtime::{ModelRunner, Runtime};
 use lqer::util::argparse::Args;
@@ -99,8 +100,20 @@ fn info(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn engine_cfg(m: &Manifest, model: &str, method: &str, batch: usize,
-              host_cache: bool, paged: bool) -> Result<EngineConfig> {
+              host_cache: bool, paged: bool, prefix_share: bool,
+              swap_blocks: usize) -> Result<EngineConfig> {
+    anyhow::ensure!(
+        paged || (!prefix_share && swap_blocks == 0),
+        "--prefix-share / --swap-blocks require --paged"
+    );
+    anyhow::ensure!(
+        !(prefix_share || swap_blocks > 0) || host_cache,
+        "--prefix-share / --swap-blocks need the host-paged backing \
+         (--host-cache); the device-paged path has no block ops yet \
+         (ROADMAP)"
+    );
     let paged_cfg = if paged {
         let info = m.model(model)?;
         let geometry = match &m.serve.paged {
@@ -123,6 +136,8 @@ fn engine_cfg(m: &Manifest, model: &str, method: &str, batch: usize,
         Some(PagedKvConfig {
             block_size: geometry.block_size,
             num_blocks: geometry.num_blocks(batch),
+            prefix_sharing: prefix_share,
+            swap_blocks,
         })
     } else {
         None
@@ -153,6 +168,12 @@ fn serve(argv: &[String]) -> Result<()> {
         .opt("batch", "8", "decode batch bucket")
         .flag("host-cache", "legacy host-side KV cache (oracle mode)")
         .flag("paged", "block-granular KV allocation (DESIGN.md §10)")
+        .flag("prefix-share",
+              "share block-aligned prompt prefixes copy-on-write \
+               (DESIGN.md §11; needs --paged --host-cache)")
+        .opt("swap-blocks", "0",
+             "host swap pool size in blocks (0 = re-prefill on \
+              preemption; needs --paged --host-cache)")
         .parse(argv)?;
     let tok = lqer::tokenizer::Tokenizer::from_file(
         &m.data_dir().join("vocab.json"))?;
@@ -160,7 +181,8 @@ fn serve(argv: &[String]) -> Result<()> {
         m.dir.clone(),
         engine_cfg(&m, &a.get("model"), &a.get("method"),
                    a.get_usize("batch")?, a.get_flag("host-cache"),
-                   a.get_flag("paged"))?,
+                   a.get_flag("paged"), a.get_flag("prefix-share"),
+                   a.get_usize("swap-blocks")?)?,
     )?;
     println!("serving {} / {} on http://{}  (POST /generate, \
               GET /metrics, GET /healthz)",
@@ -179,6 +201,13 @@ fn generate(argv: &[String]) -> Result<()> {
         .opt("batch", "4", "decode batch bucket")
         .flag("host-cache", "legacy host-side KV cache (oracle mode)")
         .flag("paged", "block-granular KV allocation (DESIGN.md §10)")
+        .flag("prefix-share",
+              "share block-aligned prompt prefixes copy-on-write \
+               (DESIGN.md §11; needs --paged --host-cache)")
+        .opt("swap-blocks", "0",
+             "host swap pool size in blocks (0 = re-prefill on \
+              preemption; needs --paged --host-cache)")
+        .opt("priority", "normal", "eviction class: low|normal|high")
         .parse(argv)?;
     let tok = lqer::tokenizer::Tokenizer::from_file(
         &m.data_dir().join("vocab.json"))?;
@@ -186,17 +215,22 @@ fn generate(argv: &[String]) -> Result<()> {
         m.dir.clone(),
         engine_cfg(&m, &a.get("model"), &a.get("method"),
                    a.get_usize("batch")?, a.get_flag("host-cache"),
-                   a.get_flag("paged"))?,
+                   a.get_flag("paged"), a.get_flag("prefix-share"),
+                   a.get_usize("swap-blocks")?)?,
     )?;
     let sampling = match a.get_usize("topk")? {
         0 => Sampling::Greedy,
         k => Sampling::TopK { k, temperature: 0.8, seed: 17 },
     };
+    let priority = Priority::parse(&a.get("priority")).ok_or_else(|| {
+        anyhow::anyhow!("--priority must be low|normal|high")
+    })?;
     let resp = engine.generate(Request {
         id: 1,
         prompt: tok.encode_prompt(&a.get("prompt")),
         max_new_tokens: a.get_usize("max-new")?,
         sampling,
+        priority,
     })?;
     println!("prompt : {}", a.get("prompt"));
     println!("output : {}", tok.decode_clean(&resp.tokens));
@@ -218,12 +252,19 @@ fn serve_bench(argv: &[String]) -> Result<()> {
         .opt("batch", "8", "decode batch bucket")
         .flag("host-cache", "legacy host-side KV cache (oracle mode)")
         .flag("paged", "block-granular KV allocation (DESIGN.md §10)")
+        .flag("prefix-share",
+              "share block-aligned prompt prefixes copy-on-write \
+               (DESIGN.md §11; needs --paged --host-cache)")
+        .opt("swap-blocks", "0",
+             "host swap pool size in blocks (0 = re-prefill on \
+              preemption; needs --paged --host-cache)")
         .parse(argv)?;
     let stats = lqer::coordinator::loadtest::run_loadtest(
         &m,
         &engine_cfg(&m, &a.get("model"), &a.get("method"),
                     a.get_usize("batch")?, a.get_flag("host-cache"),
-                    a.get_flag("paged"))?,
+                    a.get_flag("paged"), a.get_flag("prefix-share"),
+                    a.get_usize("swap-blocks")?)?,
         a.get_usize("requests")?,
         a.get_usize("max-new")?,
     )?;
@@ -235,18 +276,19 @@ fn serve_bench(argv: &[String]) -> Result<()> {
 /// artifacts or PJRT (they drive the deterministic FakeBackend).
 fn bench(argv: &[String]) -> Result<()> {
     let a = Args::new("bench", "synthetic engine benchmarks")
-        .pos("suite", "bench suite: kv")
+        .pos("suite", "bench suite: kv | kvshared")
         .opt("batch", "4", "decode lanes")
         .opt("requests", "16", "concurrent requests (4x lanes default)")
         .opt("max-new", "12", "max tokens per request")
         .opt("block-size", "8", "paged block size (token rows)")
         .opt("blocks", "0", "usable pool blocks (0 = lanes * t_max / bs)")
-        .opt("out", "BENCH_kvpaged.json", "output JSON path")
+        .opt("out", "", "output JSON path (default per suite)")
         .parse(argv)?;
     match a.get_pos(0) {
         Some("kv") => bench_kv(&a),
+        Some("kvshared") => bench_kvshared(&a),
         other => anyhow::bail!(
-            "unknown bench suite {:?} (expected: kv)", other
+            "unknown bench suite {:?} (expected: kv, kvshared)", other
         ),
     }
 }
@@ -293,6 +335,7 @@ fn bench_kv(a: &Args) -> Result<()> {
                         .collect(),
                     max_new_tokens: 1 + rng.below(max_new),
                     sampling: Sampling::Greedy,
+                    priority: Priority::Normal,
                 }
             })
             .collect()
@@ -334,6 +377,8 @@ fn bench_kv(a: &Args) -> Result<()> {
         paged: Some(PagedKvConfig {
             block_size: bs,
             num_blocks: blocks + 1,
+            prefix_sharing: false,
+            swap_blocks: 0,
         }),
         admission: AdmissionPolicy::Wait {
             queue_depth: requests.max(16),
@@ -386,7 +431,10 @@ fn bench_kv(a: &Args) -> Result<()> {
         ("paged", side(&paged_m)),
         ("flat_reject_on_full", side(&shed_m)),
     ]);
-    let path = a.get("out");
+    let path = match a.get("out").as_str() {
+        "" => "BENCH_kvpaged.json".to_string(),
+        p => p.to_string(),
+    };
     std::fs::write(&path, out.to_string())?;
 
     let mut t = Table::new(
@@ -411,6 +459,225 @@ fn bench_kv(a: &Args) -> Result<()> {
         ]);
     }
     print!("{}", t.render());
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Shared-prefix overload + preemption-recovery bench (DESIGN.md §11),
+/// on the deterministic FakeBackend:
+///
+/// * **overload** — N requests with one identical prompt against an
+///   instant-shed (`RejectOnFull`) paged engine at equal pool size,
+///   prefix sharing on vs off.  Sharing maps the prompt's blocks once,
+///   so admission capacity is bounded by private decode blocks instead
+///   of full prompt copies; the JSON records both `completed` counts
+///   and their ratio (the acceptance bar is >= 2x).
+/// * **recovery** — a starved pool that must preempt, with the host
+///   swap pool on vs off.  Swap preserves the sequence (no re-prefill,
+///   no token recompute); the JSON records preemption counters and mean
+///   total latency of both engines.
+fn bench_kvshared(a: &Args) -> Result<()> {
+    use lqer::coordinator::testbackend::{FakeBackend, FakeCacheMode};
+    use lqer::coordinator::{Engine, EngineMetrics};
+    use lqer::util::json;
+
+    const VOCAB: usize = 48;
+    const LAYERS: usize = 2;
+    const DIM: usize = 8;
+    const T_MAX: usize = 64;
+    const BS: usize = 8;
+    // EOS outside the vocab: streams never end early by chance, so the
+    // block arithmetic below is exact.
+    const NO_EOS: u32 = VOCAB as u32 + 1;
+    let buckets = vec![8usize, 32];
+
+    let requests = a.get_usize("requests")?.clamp(4, 16);
+    // One identical 3-block prompt (24 tokens) per request; 6 decode
+    // tokens spill into one private block each.  8 usable blocks hold
+    // two unshared copies — or one shared copy plus 5 private tails.
+    let prompt: Vec<u32> = (0..24).map(|i| (i % 7) as u32 + 10).collect();
+    let usable = 8usize;
+    let mk_requests = |n: usize| -> Vec<Request> {
+        (0..n as u64)
+            .map(|i| Request {
+                id: i + 1,
+                prompt: prompt.clone(),
+                max_new_tokens: 6,
+                sampling: Sampling::Greedy,
+                priority: Priority::Normal,
+            })
+            .collect()
+    };
+
+    let drive = |mut engine: Engine<FakeBackend>, reqs: Vec<Request>|
+        -> Result<EngineMetrics> {
+        let mut rxs = Vec::new();
+        for r in reqs {
+            let (tx, rx) = std::sync::mpsc::channel();
+            engine.enqueue(r, tx);
+            rxs.push(rx);
+        }
+        let mut guard = 0;
+        while engine.has_work() {
+            engine.tick();
+            guard += 1;
+            anyhow::ensure!(guard < 1_000_000, "engine did not drain");
+        }
+        for rx in rxs {
+            rx.recv().map_err(|_| anyhow::anyhow!("reply dropped"))?;
+        }
+        Ok(engine.metrics_snapshot())
+    };
+
+    let cfg = |sharing: bool, swap: usize, admission: AdmissionPolicy|
+        -> EngineConfig {
+        EngineConfig {
+            model: "fake".into(),
+            method: "fake".into(),
+            decode_batch: requests,
+            prefill_buckets: buckets.clone(),
+            max_prefill_per_step: 2,
+            host_cache: false,
+            paged: Some(PagedKvConfig {
+                block_size: BS,
+                num_blocks: usable + 1,
+                prefix_sharing: sharing,
+                swap_blocks: swap,
+            }),
+            admission,
+        }
+    };
+    let backend = || {
+        FakeBackend::new_paged(
+            FakeCacheMode::Host, VOCAB, LAYERS, DIM, T_MAX, requests,
+            usable + 1, BS,
+        )
+    };
+
+    // --- overload: admission capacity, sharing on vs off --------------
+    let shared_m = drive(
+        Engine::with_backend(
+            backend(),
+            cfg(true, 0, AdmissionPolicy::RejectOnFull),
+            NO_EOS,
+        ),
+        mk_requests(requests),
+    )?;
+    let unshared_m = drive(
+        Engine::with_backend(
+            backend(),
+            cfg(false, 0, AdmissionPolicy::RejectOnFull),
+            NO_EOS,
+        ),
+        mk_requests(requests),
+    )?;
+    let ratio =
+        shared_m.completed as f64 / (unshared_m.completed.max(1) as f64);
+
+    // --- recovery: starved pool, swap vs re-prefill -------------------
+    let starved = |swap: usize| -> Result<EngineMetrics> {
+        let wait =
+            AdmissionPolicy::Wait { queue_depth: 64, deadline_ms: 0 };
+        let mut cfg = cfg(false, swap, wait);
+        cfg.decode_batch = 2;
+        cfg.paged = Some(PagedKvConfig {
+            block_size: BS,
+            num_blocks: 5 + 1,
+            prefix_sharing: false,
+            swap_blocks: swap,
+        });
+        let reqs: Vec<Request> = (1..=2u64)
+            .map(|id| Request {
+                id,
+                prompt: (0..14)
+                    .map(|j| ((id as usize + j) % 5) as u32 + 10)
+                    .collect(),
+                max_new_tokens: 12,
+                sampling: Sampling::Greedy,
+                priority: Priority::Normal,
+            })
+            .collect();
+        drive(
+            Engine::with_backend(
+                FakeBackend::new_paged(
+                    FakeCacheMode::Host, VOCAB, LAYERS, DIM, T_MAX, 2,
+                    5 + 1, BS,
+                ),
+                cfg,
+                NO_EOS,
+            ),
+            reqs,
+        )
+    };
+    let swap_m = starved(8)?;
+    let reprefill_m = starved(0)?;
+
+    let side = |m: &EngineMetrics| {
+        json::obj(vec![
+            ("completed", json::num(m.completed as f64)),
+            ("rejected", json::num(m.rejected as f64)),
+            ("preemptions", json::num(m.preemptions as f64)),
+            ("swap_outs", json::num(m.swap_outs as f64)),
+            ("swap_ins", json::num(m.swap_ins as f64)),
+            ("cow_copies", json::num(m.cow_copies as f64)),
+            ("prefix_hit_blocks",
+             json::num(m.prefix_hit_blocks as f64)),
+            ("prefix_bytes_saved",
+             json::num(m.prefix_bytes_saved as f64)),
+            ("tokens", json::num(m.tokens_generated as f64)),
+            ("tokens_per_sec", json::num(m.decode_tokens_per_sec())),
+            ("total_ms_mean", json::num(m.total_ms.mean())),
+            ("kv_utilization_peak_pct", json::num(m.kv_util.max())),
+        ])
+    };
+    let out = json::obj(vec![
+        ("suite", json::s("kvshared")),
+        ("lanes", json::num(requests as f64)),
+        ("requests", json::num(requests as f64)),
+        ("block_size", json::num(BS as f64)),
+        ("usable_blocks", json::num(usable as f64)),
+        ("prompt_blocks", json::num((prompt.len() / BS) as f64)),
+        ("shared", side(&shared_m)),
+        ("unshared", side(&unshared_m)),
+        ("capacity_ratio", json::num(ratio)),
+        ("recovery_swap", side(&swap_m)),
+        ("recovery_reprefill", side(&reprefill_m)),
+    ]);
+    let path = match a.get("out").as_str() {
+        "" => "BENCH_kvshared.json".to_string(),
+        p => p.to_string(),
+    };
+    std::fs::write(&path, out.to_string())?;
+
+    let mut t = Table::new(
+        &format!(
+            "shared-prefix KV bench — {requests} identical prompts, \
+             {usable} blocks (block {BS} rows)"
+        ),
+        &["engine", "done", "rejected", "preempted", "swap out/in",
+          "cow", "prefix hits"],
+    );
+    for (name, m) in [
+        ("paged+shared", &shared_m),
+        ("paged", &unshared_m),
+        ("starved+swap", &swap_m),
+        ("starved", &reprefill_m),
+    ] {
+        t.row(vec![
+            name.into(),
+            format!("{}/{}", m.completed, m.submitted),
+            m.rejected.to_string(),
+            m.preemptions.to_string(),
+            format!("{}/{}", m.swap_outs, m.swap_ins),
+            m.cow_copies.to_string(),
+            m.prefix_hit_blocks.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "admission capacity: shared {} vs unshared {} ({ratio:.1}x)",
+        shared_m.completed, unshared_m.completed
+    );
     println!("wrote {path}");
     Ok(())
 }

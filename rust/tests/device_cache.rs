@@ -90,6 +90,7 @@ fn golden_requests() -> Vec<Request> {
             } else {
                 Sampling::Greedy
             },
+            priority: Default::default(),
         });
     }
     requests
@@ -123,6 +124,7 @@ fn rejected_requests_get_a_response_not_a_dropped_channel() {
         prompt,
         max_new_tokens: 4,
         sampling: Sampling::Greedy,
+        priority: Default::default(),
     };
     let (tx1, rx1) = mpsc::channel();
     engine.enqueue(mk(1, vec![POISON, 3, 4]), tx1); // prefill fails
@@ -204,6 +206,7 @@ fn no_scheduler_path_leaks_a_slot() {
                     prompt,
                     max_new_tokens: max_new,
                     sampling: Sampling::Greedy,
+                    priority: Default::default(),
                 },
                 tx,
             );
@@ -286,6 +289,7 @@ fn real_runtime_device_host_bit_exact() {
                     prompt: p.clone(),
                     max_new_tokens: 8,
                     sampling: Sampling::Greedy,
+                    priority: Default::default(),
                 })
             })
             .collect();

@@ -177,6 +177,7 @@ fn engine_serves_deterministically_and_batches() {
         prompt: p.to_vec(),
         max_new_tokens: 8,
         sampling: Sampling::Greedy,
+        priority: Default::default(),
     };
     let rx1 = engine.submit(mk(1, &prompts[0]));
     let rx2 = engine.submit(mk(2, &prompts[1]));

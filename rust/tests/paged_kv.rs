@@ -49,6 +49,8 @@ fn cfg(
         paged: usable_blocks.map(|n| PagedKvConfig {
             block_size: BS,
             num_blocks: n + 1, // + sentinel
+            prefix_sharing: false,
+            swap_blocks: 0,
         }),
         admission,
     }
@@ -115,6 +117,7 @@ fn golden_requests(n: u64) -> Vec<Request> {
                 } else {
                     Sampling::Greedy
                 },
+                priority: Default::default(),
             }
         })
         .collect()
@@ -245,6 +248,7 @@ fn preemption_requeues_and_replays_identically() {
             .collect(),
         max_new_tokens: 12,
         sampling: Sampling::Greedy,
+        priority: Default::default(),
     };
     let requests: Vec<Request> = (1..=2).map(mk).collect();
 
@@ -285,6 +289,7 @@ fn preempted_requests_survive_the_admission_deadline() {
             .collect(),
         max_new_tokens: 12,
         sampling: Sampling::Greedy,
+        priority: Default::default(),
     };
     let mut engine = Engine::with_backend(
         paged(FakeCacheMode::Host, batch, 5),
@@ -340,6 +345,7 @@ fn lone_sequence_hitting_pool_ceiling_finishes_cache_full() {
         prompt: (0..10).map(|j| (j % 5) as u32 + 10).collect(),
         max_new_tokens: 20,
         sampling: Sampling::Greedy,
+        priority: Default::default(),
     }];
     let (resp, m) = run_requests(
         Engine::with_backend(
@@ -376,6 +382,7 @@ fn queue_overflow_and_deadline_answer_with_latency_samples() {
         prompt: vec![10, 11, 12],
         max_new_tokens: 4,
         sampling: Sampling::Greedy,
+        priority: Default::default(),
     };
     let mut rxs = Vec::new();
     for id in 1..=4 {
@@ -430,6 +437,7 @@ fn overlong_prompt_rejection_records_latency_sample() {
             prompt: (0..25).map(|i| (i % 5) as u32 + 10).collect(),
             max_new_tokens: 4,
             sampling: Sampling::Greedy,
+            priority: Default::default(),
         },
         tx,
     );
@@ -502,6 +510,7 @@ fn no_paged_scheduler_path_leaks_lanes_or_blocks() {
                     prompt,
                     max_new_tokens: max_new,
                     sampling: Sampling::Greedy,
+                    priority: Default::default(),
                 },
                 tx,
             );

@@ -182,6 +182,171 @@ fn block_allocator_and_tables_keep_invariants() {
 }
 
 // ---------------------------------------------------------------------------
+// Paged KV: refcount/revive invariants over random share traces
+// ---------------------------------------------------------------------------
+
+#[test]
+fn block_refcounts_keep_invariants_under_share_free_revive() {
+    check("paged-refcounts", 60, &OpTrace, |ops| {
+        let (num_blocks, bs) = (7usize, 4usize);
+        let mut alloc = BlockAllocator::new(num_blocks, bs);
+        // Model: refcount per block (0 = in the free list).
+        let mut model = vec![0u32; num_blocks];
+        let mut rng = Rng::new(ops.len() as u64 + 1);
+        for &op in ops {
+            match op % 4 {
+                0 => {
+                    if let Some(id) = alloc.alloc() {
+                        if id == SENTINEL_BLOCK {
+                            return Err("allocated the sentinel".into());
+                        }
+                        if model[id as usize] != 0 {
+                            return Err(format!(
+                                "alloc of live block {id}"
+                            ));
+                        }
+                        model[id as usize] = 1;
+                    } else if model[1..].iter().any(|&c| c == 0) {
+                        return Err("alloc failed with free blocks".into());
+                    }
+                }
+                1 => {
+                    // retain a random live block (share it once more)
+                    let live: Vec<u32> = (1..num_blocks as u32)
+                        .filter(|&b| model[b as usize] > 0)
+                        .collect();
+                    if let Some(&b) =
+                        (!live.is_empty()).then(|| rng.choose(&live))
+                    {
+                        alloc.retain(b);
+                        model[b as usize] += 1;
+                    }
+                }
+                2 => {
+                    // drop one reference of a random live block
+                    let live: Vec<u32> = (1..num_blocks as u32)
+                        .filter(|&b| model[b as usize] > 0)
+                        .collect();
+                    if let Some(&b) =
+                        (!live.is_empty()).then(|| rng.choose(&live))
+                    {
+                        alloc.free(b);
+                        model[b as usize] -= 1;
+                    }
+                }
+                _ => {
+                    // revive a random recently-freed block
+                    let freed: Vec<u32> = (1..num_blocks as u32)
+                        .filter(|&b| model[b as usize] == 0)
+                        .collect();
+                    if let Some(&b) =
+                        (!freed.is_empty()).then(|| rng.choose(&freed))
+                    {
+                        if !alloc.revive(b) {
+                            return Err(format!(
+                                "freed block {b} not revivable"
+                            ));
+                        }
+                        model[b as usize] = 1;
+                    }
+                }
+            }
+            // A block is free iff its refcount is 0 — "no block freed
+            // while refcount > 0" in allocator terms.
+            for b in 1..num_blocks as u32 {
+                if alloc.ref_count(b) != model[b as usize] {
+                    return Err(format!(
+                        "refcount drift on {b}: {} != {}",
+                        alloc.ref_count(b),
+                        model[b as usize]
+                    ));
+                }
+            }
+            let live = model[1..].iter().filter(|&&c| c > 0).count();
+            if alloc.in_use() != live {
+                return Err(format!(
+                    "in_use {} != live {live}",
+                    alloc.in_use()
+                ));
+            }
+            if alloc.in_use() + alloc.free_count() != alloc.capacity() {
+                return Err("capacity accounting broken".into());
+            }
+            let want_shared: u64 = model[1..]
+                .iter()
+                .map(|&c| u64::from(c.saturating_sub(1)))
+                .sum();
+            if alloc.shared_refs() != want_shared {
+                return Err("shared_refs drift".into());
+            }
+        }
+        // Dropping every remaining reference must restore full capacity.
+        for b in 1..num_blocks as u32 {
+            for _ in 0..model[b as usize] {
+                alloc.free(b);
+            }
+        }
+        if alloc.free_count() != alloc.capacity() {
+            return Err("leaked blocks after releasing all refs".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Paged KV: COW copies diverge and swap export/import round-trips bytes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn block_copy_and_swap_roundtrip_preserve_bytes() {
+    use lqer::kvcache::paged::PagedHostKv;
+    let gen = Pair(USize { lo: 1, hi: 3 }, USize { lo: 1, hi: 6 });
+    check("paged-block-bytes", 60, &gen, |&(layers, d)| {
+        let (nb, bs) = (5usize, 4usize);
+        let mut p = PagedHostKv::new(layers, nb, bs, d);
+        let mut rng = Rng::new((layers * 17 + d) as u64);
+        // Fill blocks 1 and 2 with random rows.
+        for block in [1u32, 2] {
+            for l in 0..layers {
+                for off in 0..bs {
+                    let (kr, vr) = p.rows_at_mut(l, block, off);
+                    for j in 0..d {
+                        kr[j] = rng.normal() as f32;
+                        vr[j] = rng.normal() as f32;
+                    }
+                }
+            }
+        }
+        let b1 = p.export_block(1).unwrap();
+        let b2 = p.export_block(2).unwrap();
+        // Swap round-trip into fresh blocks preserves every byte.
+        p.import_block(3, &b1).unwrap();
+        p.import_block(4, &b2).unwrap();
+        if p.export_block(3).unwrap() != b1
+            || p.export_block(4).unwrap() != b2
+        {
+            return Err("swap round-trip changed bytes".into());
+        }
+        // COW: fork block 1, mutate the fork; the original (still
+        // "shared" from the other holder's view) must not change.
+        p.copy_block(1, 4).unwrap();
+        for l in 0..layers {
+            for off in 0..bs {
+                let (kr, vr) = p.rows_at_mut(l, 4, off);
+                for j in 0..d {
+                    kr[j] += 1.0;
+                    vr[j] -= 1.0;
+                }
+            }
+        }
+        if p.export_block(1).unwrap() != b1 {
+            return Err("COW mutated the shared source block".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Batching: bucket choice is minimal and admissible
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,496 @@
+//! Shared-block policies (DESIGN.md §11) driven end-to-end through the
+//! real `Engine` scheduler over the deterministic `FakeBackend` (no
+//! PJRT needed):
+//!
+//! * golden equality: the engine with prefix sharing + copy-on-write +
+//!   block-level swap enabled is bit-identical to the flat
+//!   `HostKvMirror` oracle path on traces that exercise every new
+//!   policy (COW forks, swap-out/in, prefix revival);
+//! * capacity: N requests with a common prompt complete in a pool that
+//!   rejects most of them unshared (the >= 2x acceptance bar);
+//! * priority: eviction picks the lowest-priority sequence before the
+//!   youngest one;
+//! * latency: time spent swapped out lands in `total_ms`, never in
+//!   `ttft_ms` (the swap twin of the PR 3 survivorship-bias fix);
+//! * property: no scheduler path (incl. sharing, COW, swap, revival)
+//!   leaks a lane, a block, or swap-pool accounting.
+
+use std::sync::mpsc;
+
+use lqer::coordinator::testbackend::{FakeBackend, FakeCacheMode};
+use lqer::coordinator::{
+    AdmissionPolicy, Engine, EngineConfig, EngineMetrics, FinishReason,
+    PagedKvConfig, Priority, Request, Response, Sampling,
+};
+use lqer::util::proptest::{check, Gen};
+use lqer::util::rng::Rng;
+
+const VOCAB: usize = 40;
+const LAYERS: usize = 2;
+const DIM: usize = 4;
+const T_MAX: usize = 32;
+/// EOS outside the vocab: streams never end early by chance.
+const NO_EOS: u32 = VOCAB as u32 + 1;
+const POISON: u32 = 7;
+/// Block size: divides both prefill buckets (8, 16) and T_MAX.
+const BS: usize = 8;
+
+fn cfg(
+    batch: usize,
+    usable_blocks: Option<usize>,
+    sharing: bool,
+    swap_blocks: usize,
+    admission: AdmissionPolicy,
+) -> EngineConfig {
+    EngineConfig {
+        model: "fake".into(),
+        method: "fake".into(),
+        decode_batch: batch,
+        prefill_buckets: vec![8, 16],
+        max_prefill_per_step: 2,
+        host_cache: false, // FakeBackend's mode is chosen directly
+        paged: usable_blocks.map(|n| PagedKvConfig {
+            block_size: BS,
+            num_blocks: n + 1, // + sentinel
+            prefix_sharing: sharing,
+            swap_blocks,
+        }),
+        admission,
+    }
+}
+
+fn flat(mode: FakeCacheMode, batch: usize) -> FakeBackend {
+    FakeBackend::new(mode, VOCAB, LAYERS, DIM, T_MAX, batch)
+}
+
+fn paged(mode: FakeCacheMode, batch: usize, usable: usize) -> FakeBackend {
+    FakeBackend::new_paged(
+        mode, VOCAB, LAYERS, DIM, T_MAX, batch, usable + 1, BS,
+    )
+}
+
+fn drain(engine: &mut Engine<FakeBackend>) {
+    let mut guard = 0;
+    while engine.has_work() {
+        engine.tick();
+        guard += 1;
+        assert!(guard < 200_000, "engine did not drain");
+    }
+}
+
+/// Drive all requests to completion and verify nothing leaked: every
+/// lane free, every block back (so no shared refcount was stranded),
+/// and the swap pool empty.
+fn run_requests(
+    mut engine: Engine<FakeBackend>,
+    requests: &[Request],
+) -> (Vec<Response>, EngineMetrics) {
+    let mut rxs = Vec::with_capacity(requests.len());
+    for r in requests {
+        let (tx, rx) = mpsc::channel();
+        engine.enqueue(r.clone(), tx);
+        rxs.push(rx);
+    }
+    drain(&mut engine);
+    assert_eq!(engine.free_slots(), engine.kv_batch(), "lane leak");
+    assert_eq!(engine.swapped_len(), 0, "swapped sequence stranded");
+    let m = engine.metrics_snapshot();
+    if m.kv_blocks_total > 0 {
+        assert_eq!(engine.free_blocks() as u64, m.kv_blocks_total,
+                   "block leak (refcount stranded?)");
+        assert_eq!(m.swap_blocks_in_use, 0, "swap accounting leak");
+        assert_eq!(m.kv_shared_refs, 0, "shared refs survived drain");
+    }
+    let responses = rxs
+        .into_iter()
+        .map(|rx| rx.recv().expect("reply sender dropped"))
+        .collect();
+    (responses, engine.metrics_snapshot())
+}
+
+fn mk(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
+    Request {
+        id,
+        prompt,
+        max_new_tokens: max_new,
+        sampling: Sampling::Greedy,
+        priority: Priority::Normal,
+    }
+}
+
+/// Workload with real prefix structure: two groups of identical prompts
+/// (12 tokens: tail-block sharing and the COW fork on divergence;
+/// 16 tokens: pure block-aligned sharing) plus distinct fillers and a
+/// top-k stream, interleaved so groups overlap in the batch.
+fn prefix_requests() -> Vec<Request> {
+    let tail_prompt: Vec<u32> =
+        (0..12).map(|j| (j % 6) as u32 + 10).collect();
+    let aligned_prompt: Vec<u32> =
+        (0..16).map(|j| (j % 5) as u32 + 20).collect();
+    let mut reqs = vec![
+        mk(1, tail_prompt.clone(), 6),
+        mk(2, aligned_prompt.clone(), 5),
+        mk(3, tail_prompt.clone(), 7),
+        mk(4, (0..5).map(|j| (j % 3) as u32 + 30).collect(), 4),
+        mk(5, tail_prompt.clone(), 3),
+        mk(6, aligned_prompt.clone(), 6),
+        mk(7, (0..9).map(|j| (j % 4) as u32 + 12).collect(), 5),
+    ];
+    reqs[3].sampling =
+        Sampling::TopK { k: 5, temperature: 0.7, seed: 11 };
+    reqs
+}
+
+fn assert_same_outputs(a: &[Response], b: &[Response], what: &str) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.tokens, y.tokens, "{what}: request {} diverged", x.id);
+        assert_eq!(x.finish, y.finish, "{what}: request {} finish", x.id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden: sharing + COW is bit-identical to the flat oracle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shared_cow_engine_bit_identical_to_flat_oracle() {
+    let batch = 3;
+    let ample = batch * T_MAX / BS;
+    let wait = AdmissionPolicy::Wait { queue_depth: 64, deadline_ms: 0 };
+    let requests = prefix_requests();
+
+    let (oracle, _) = run_requests(
+        Engine::with_backend(
+            flat(FakeCacheMode::Host, batch),
+            cfg(batch, None, false, 0, wait),
+            NO_EOS,
+        ),
+        &requests,
+    );
+    for mode in [FakeCacheMode::Host, FakeCacheMode::Device] {
+        let (shared, m) = run_requests(
+            Engine::with_backend(
+                paged(mode, batch, ample),
+                cfg(batch, Some(ample), true, 0, wait),
+                NO_EOS,
+            ),
+            &requests,
+        );
+        assert_same_outputs(&oracle, &shared, "shared vs flat");
+        assert!(m.prefix_hit_blocks > 0, "{mode:?}: no prefix hits");
+        assert!(m.cow_copies > 0, "{mode:?}: COW never fired");
+        assert!(m.prefix_bytes_saved > 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden: starved pool with swap enabled still matches the oracle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn swap_engine_bit_identical_to_flat_oracle() {
+    // Two *identical* long prompts: the second maps the first's blocks
+    // (prefix sharing), the first append forks the shared tail (COW),
+    // and the starved pool then evicts into the swap pool — all three
+    // §11 policies active in one engine, pinned bit-exact against the
+    // flat oracle.
+    let batch = 2;
+    let wait = AdmissionPolicy::Wait { queue_depth: 64, deadline_ms: 0 };
+    let prompt: Vec<u32> = (0..14).map(|j| (j % 5) as u32 + 10).collect();
+    let requests: Vec<Request> =
+        (1..=2).map(|id| mk(id, prompt.clone(), 12)).collect();
+
+    let (oracle, _) = run_requests(
+        Engine::with_backend(
+            flat(FakeCacheMode::Host, batch),
+            cfg(batch, None, false, 0, wait),
+            NO_EOS,
+        ),
+        &requests,
+    );
+    for mode in [FakeCacheMode::Host, FakeCacheMode::Device] {
+        // 5 usable blocks force preemption mid-decode; an 8-block swap
+        // pool absorbs it without re-prefill.
+        let (swapped, m) = run_requests(
+            Engine::with_backend(
+                paged(mode, batch, 5),
+                cfg(batch, Some(5), true, 8, wait),
+                NO_EOS,
+            ),
+            &requests,
+        );
+        assert_same_outputs(&oracle, &swapped, "shared+cow+swap vs flat");
+        assert!(m.prefix_hit_blocks > 0, "{mode:?}: no prefix hits");
+        assert!(m.cow_copies > 0, "{mode:?}: COW never fired");
+        assert!(m.preemptions > 0, "{mode:?}: pool of 5 must preempt");
+        assert!(m.swap_outs > 0, "{mode:?}: swap never engaged");
+        assert_eq!(m.swap_outs, m.swap_ins, "every swap-out resumed");
+        assert_eq!(m.completed, 2);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Capacity: shared admission completes where unshared sheds (>= 2x)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shared_prompts_fit_where_unshared_pool_rejects() {
+    // 8 identical 16-token prompts (2 blocks each) + 6 decode tokens
+    // (1 private block each) against 7 usable blocks, instant-shed
+    // admission.  Unshared: three prompt copies fit.  Shared: one copy
+    // plus private tails serve everyone.
+    let n = 8usize;
+    let usable = 7usize;
+    let prompt: Vec<u32> = (0..16).map(|j| (j % 7) as u32 + 10).collect();
+    let requests: Vec<Request> = (0..n as u64)
+        .map(|i| mk(i + 1, prompt.clone(), 6))
+        .collect();
+
+    let run = |sharing: bool| {
+        run_requests(
+            Engine::with_backend(
+                paged(FakeCacheMode::Host, n, usable),
+                cfg(n, Some(usable), sharing, 0,
+                    AdmissionPolicy::RejectOnFull),
+                NO_EOS,
+            ),
+            &requests,
+        )
+    };
+    let (_, unshared) = run(false);
+    let (shared_resp, shared) = run(true);
+
+    assert!(unshared.rejected > 0, "unshared pool must shed load");
+    assert!(
+        shared.completed >= 2 * unshared.completed,
+        "sharing admitted {}x (shared {} vs unshared {}), need >= 2x",
+        shared.completed as f64 / unshared.completed.max(1) as f64,
+        shared.completed,
+        unshared.completed,
+    );
+    assert_eq!(shared.completed as usize, n, "sharing served everyone");
+    assert!(shared.prefix_hit_blocks >= ((n - 1) * 2) as u64);
+    // All streams are identical: same prompt, greedy sampling.
+    for w in shared_resp.windows(2) {
+        assert_eq!(w[0].tokens, w[1].tokens);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recently-freed revival: a finished prompt's blocks serve a newcomer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prefix_hits_revive_blocks_of_finished_sequences() {
+    let batch = 2;
+    let wait = AdmissionPolicy::Wait { queue_depth: 8, deadline_ms: 0 };
+    let prompt: Vec<u32> = (0..16).map(|j| (j % 6) as u32 + 10).collect();
+    let mut engine = Engine::with_backend(
+        paged(FakeCacheMode::Host, batch, batch * T_MAX / BS),
+        cfg(batch, Some(batch * T_MAX / BS), true, 0, wait),
+        NO_EOS,
+    );
+    let (tx1, rx1) = mpsc::channel();
+    engine.enqueue(mk(1, prompt.clone(), 5), tx1);
+    drain(&mut engine);
+    let r1 = rx1.recv().unwrap();
+    assert_eq!(engine.metrics_snapshot().prefix_hit_blocks, 0);
+
+    // First sequence is gone; its blocks sit in the free list but stay
+    // indexed.  The identical prompt must revive them, not recompute.
+    let (tx2, rx2) = mpsc::channel();
+    engine.enqueue(mk(2, prompt.clone(), 5), tx2);
+    drain(&mut engine);
+    let r2 = rx2.recv().unwrap();
+    let m = engine.metrics_snapshot();
+    assert_eq!(m.prefix_hit_blocks, 2, "both full prompt blocks revived");
+    assert_eq!(r1.tokens, r2.tokens, "revived prefix changed the output");
+    assert_eq!(engine.free_blocks() as u64, m.kv_blocks_total);
+}
+
+// ---------------------------------------------------------------------------
+// Priority: eviction takes the lowest class first, not the youngest
+// ---------------------------------------------------------------------------
+
+#[test]
+fn eviction_prefers_low_priority_over_youngest() {
+    let batch = 2;
+    let wait = AdmissionPolicy::Wait { queue_depth: 8, deadline_ms: 0 };
+    // Both sequences want 4 blocks; 5 usable blocks force one eviction.
+    // The Low request sits in slot 0 (admitted first, so it is *older*
+    // by tokens whenever positions differ — the youngest-only policy
+    // would never pick it while slot 1 exists).
+    let mut low = mk(1, (0..14).map(|j| (j % 5) as u32 + 10).collect(), 12);
+    low.priority = Priority::Low;
+    let normal =
+        mk(2, (0..14).map(|j| (j % 5) as u32 + 15).collect(), 12);
+
+    let (resp, m) = run_requests(
+        Engine::with_backend(
+            paged(FakeCacheMode::Host, batch, 5),
+            cfg(batch, Some(5), false, 8, wait),
+            NO_EOS,
+        ),
+        &[low, normal],
+    );
+    assert!(m.preemptions > 0, "starved pool must preempt");
+    assert_eq!(m.preemptions, m.swap_outs, "swap pool absorbed evictions");
+    let by_id = |id: u64| resp.iter().find(|r| r.id == id).unwrap();
+    assert!(by_id(1).swapped_ms > 0.0, "Low request was never evicted");
+    assert_eq!(by_id(2).swapped_ms, 0.0,
+               "Normal request evicted despite a Low victim");
+    for r in &resp {
+        assert_eq!(r.finish, FinishReason::Length);
+        assert_eq!(r.tokens.len(), 12);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Latency: swapped-out time counts into total, never into TTFT
+// ---------------------------------------------------------------------------
+
+#[test]
+fn swap_time_lands_in_total_latency_but_not_ttft() {
+    let batch = 2;
+    let wait = AdmissionPolicy::Wait { queue_depth: 8, deadline_ms: 0 };
+    let mut low = mk(1, (0..14).map(|j| (j % 5) as u32 + 10).collect(), 12);
+    low.priority = Priority::Low;
+    let normal =
+        mk(2, (0..14).map(|j| (j % 5) as u32 + 15).collect(), 12);
+
+    let mut engine = Engine::with_backend(
+        paged(FakeCacheMode::Host, batch, 5),
+        cfg(batch, Some(5), false, 8, wait),
+        NO_EOS,
+    );
+    let (tx1, rx1) = mpsc::channel();
+    engine.enqueue(low, tx1);
+    let (tx2, rx2) = mpsc::channel();
+    engine.enqueue(normal, tx2);
+    // Tick until the Low sequence is parked in the swap pool, then let
+    // wall-clock pass while it is swapped out.
+    let mut guard = 0;
+    while engine.metrics_snapshot().swap_outs == 0 {
+        engine.tick();
+        guard += 1;
+        assert!(guard < 10_000, "starved pool never swapped");
+    }
+    assert_eq!(engine.swapped_len(), 1);
+    std::thread::sleep(std::time::Duration::from_millis(25));
+    drain(&mut engine);
+
+    let r1 = rx1.recv().unwrap();
+    let r2 = rx2.recv().unwrap();
+    assert!(r1.swapped_ms >= 20.0, "swap wait not accounted: {r1:?}");
+    assert_eq!(r2.swapped_ms, 0.0);
+    // The first token was sampled before the swap, so TTFT must exclude
+    // the parked time while total latency includes it.
+    assert!(r1.total_ms >= r1.swapped_ms);
+    assert!(
+        r1.ttft_ms + r1.swapped_ms <= r1.total_ms + 1.0,
+        "TTFT absorbed the swap wait: ttft {} swapped {} total {}",
+        r1.ttft_ms, r1.swapped_ms, r1.total_ms
+    );
+    assert_eq!(r1.tokens.len(), 12, "swapped sequence kept its tokens");
+}
+
+// ---------------------------------------------------------------------------
+// Property: no sharing/COW/swap path leaks lanes, blocks, or swap space
+// ---------------------------------------------------------------------------
+
+struct TraceGen;
+
+/// (prompt_group, max_new, poisoned) per request: a small prompt-group
+/// id gives the trace real shared prefixes (identical prompts), so
+/// admission sharing, COW forks, revival, swap, and the re-prefill
+/// fallback all fire across runs.
+impl Gen for TraceGen {
+    type Value = Vec<(usize, usize, bool)>;
+    fn generate(&self, rng: &mut Rng) -> Vec<(usize, usize, bool)> {
+        (0..rng.below(12) + 1)
+            .map(|_| (rng.below(4), rng.below(8) + 1, rng.below(5) == 0))
+            .collect()
+    }
+    fn shrink(
+        &self,
+        v: &Vec<(usize, usize, bool)>,
+    ) -> Vec<Vec<(usize, usize, bool)>> {
+        if v.len() > 1 {
+            vec![v[..v.len() / 2].to_vec(), v[..v.len() - 1].to_vec()]
+        } else {
+            vec![]
+        }
+    }
+}
+
+#[test]
+fn no_shared_scheduler_path_leaks_lanes_blocks_or_swap() {
+    check("shared-no-leak", 50, &TraceGen, |trace| {
+        let batch = 2;
+        let usable = 5; // starved: forces COW + swap + fallback paths
+        let mut backend = paged(FakeCacheMode::Host, batch, usable);
+        backend.fail_prefill_token = Some(POISON as i32);
+        let mut engine = Engine::with_backend(
+            backend,
+            cfg(
+                batch,
+                Some(usable),
+                true,
+                3, // tiny swap pool: fallback re-prefill also fires
+                AdmissionPolicy::Wait { queue_depth: 32, deadline_ms: 0 },
+            ),
+            NO_EOS,
+        );
+        let mut rxs = Vec::new();
+        for (i, &(group, max_new, poison)) in trace.iter().enumerate() {
+            // Group prompts are identical within a group (lengths 6, 9,
+            // 12, 14 — both partial-tail and longer-than-bucket cases).
+            let plen = 6 + group * 3 - group / 3;
+            let prompt: Vec<u32> = if poison {
+                std::iter::once(POISON)
+                    .chain((0..plen).map(|j| (j % 5) as u32 + 10))
+                    .collect()
+            } else {
+                (0..plen).map(|j| ((group + j) % 5) as u32 + 10).collect()
+            };
+            let (tx, rx) = mpsc::channel();
+            engine.enqueue(mk(i as u64 + 1, prompt, max_new), tx);
+            rxs.push(rx);
+        }
+        let mut guard = 0;
+        while engine.has_work() {
+            engine.tick();
+            guard += 1;
+            if guard >= 200_000 {
+                return Err("engine did not drain".into());
+            }
+        }
+        if engine.free_slots() != batch {
+            return Err(format!(
+                "lane leak: {}/{batch} free after drain",
+                engine.free_slots()
+            ));
+        }
+        if engine.free_blocks() != usable {
+            return Err(format!(
+                "block leak: {}/{usable} free after drain",
+                engine.free_blocks()
+            ));
+        }
+        let m = engine.metrics_snapshot();
+        if m.swap_blocks_in_use != 0 || engine.swapped_len() != 0 {
+            return Err("swap accounting leak".into());
+        }
+        if m.kv_shared_refs != 0 {
+            return Err("shared refs survived drain".into());
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            if rx.recv().is_err() {
+                return Err(format!("request {} reply dropped", i + 1));
+            }
+        }
+        Ok(())
+    });
+}

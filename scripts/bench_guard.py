@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""Bench-regression guard for the paged-KV serving bench.
+
+Compares a fresh ``lqer bench kv`` JSON against the committed baseline
+(``BENCH_baseline.json``) and fails on a >10% regression in any guarded
+metric: throughput (``tokens_per_sec``), shed/preemption counters
+(``rejected``, ``expired``, ``preemptions``), and pool efficiency
+(``kv_utilization_*``, ``completed``, ``mean_batch_occupancy``).
+
+Usage::
+
+    python3 scripts/bench_guard.py [--bench BENCH_kvpaged.json]
+                                   [--baseline BENCH_baseline.json]
+                                   [--tolerance-pct 10] [--update]
+
+``--update`` rewrites the baseline from the current bench output (run it
+on the reference machine after an intentional perf change).  A baseline
+marked ``"provisional": true`` was written without a reference run (e.g.
+authored in an image without a rust toolchain): the comparison still
+runs and prints every delta, but failures only warn until someone
+regenerates it with ``--update``.
+
+Wiring: ``scripts/tier1.sh --bench`` locally; a non-blocking CI job
+(.github/workflows/ci.yml) that uploads both JSONs as artifacts.
+
+Stdlib only — no pip dependencies.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+
+# Direction of "better" per metric leaf.  Anything not listed is
+# informational (recorded, never gated) — e.g. block geometry.
+HIGHER_IS_BETTER = {
+    "completed",
+    "tokens",
+    "tokens_per_sec",
+    "mean_batch_occupancy",
+    "kv_utilization_mean_pct",
+    "kv_utilization_peak_pct",
+}
+LOWER_IS_BETTER = {
+    "rejected",
+    "expired",
+    "preemptions",
+    "swap_fallbacks",
+}
+# Counters where tiny absolute jitter on a near-zero baseline must not
+# trip the percentage gate.
+ABS_SLACK = 1.0
+
+
+def flatten(obj):
+    """Map dotted-path -> (leaf_name, value) for numeric leaves."""
+    out = {}
+    for path, leaf, value in _walk(obj, ""):
+        out[path] = (leaf, value)
+    return out
+
+
+def _walk(obj, prefix):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            sub = f"{prefix}.{k}" if prefix else k
+            yield from _walk(v, sub)
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        yield prefix, prefix.rsplit(".", 1)[-1], float(obj)
+
+
+def compare(bench, base, tol_pct):
+    """Return (failures, checked) comparing bench to baseline."""
+    tol = tol_pct / 100.0
+    failures = []
+    checked = 0
+    flat_bench = flatten(bench)
+    for path, (leaf, want) in sorted(flatten(base).items()):
+        if leaf not in HIGHER_IS_BETTER and leaf not in LOWER_IS_BETTER:
+            continue
+        got = flat_bench.get(path)
+        if got is None:
+            failures.append(f"{path}: missing from bench output")
+            continue
+        got = got[1]
+        checked += 1
+        if leaf in HIGHER_IS_BETTER:
+            floor = want * (1.0 - tol) - 1e-9
+            if got < floor:
+                failures.append(
+                    f"{path}: {got:.3f} < {floor:.3f} "
+                    f"(baseline {want:.3f}, -{tol_pct:g}%)"
+                )
+        else:
+            ceil = want * (1.0 + tol) + ABS_SLACK
+            if got > ceil:
+                failures.append(
+                    f"{path}: {got:.3f} > {ceil:.3f} "
+                    f"(baseline {want:.3f}, +{tol_pct:g}% "
+                    f"+{ABS_SLACK:g})"
+                )
+    return failures, checked
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", default="BENCH_kvpaged.json",
+                    help="fresh `lqer bench kv` output")
+    ap.add_argument("--baseline", default="BENCH_baseline.json",
+                    help="committed reference values")
+    ap.add_argument("--tolerance-pct", type=float, default=10.0,
+                    help="max tolerated regression (default 10)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the bench output")
+    args = ap.parse_args(argv)
+
+    with open(args.bench) as f:
+        bench = json.load(f)
+
+    if args.update:
+        baseline = {
+            "note": "reference values for scripts/bench_guard.py; "
+                    "regenerate with --update after intentional "
+                    "perf changes",
+            "machine": platform.machine() or "unknown",
+            "provisional": False,
+            "bench": bench,
+        }
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"bench_guard: baseline {args.baseline} updated")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    provisional = bool(baseline.get("provisional", False))
+    failures, checked = compare(
+        bench, baseline.get("bench", baseline), args.tolerance_pct
+    )
+    if failures:
+        kind = "warning (provisional baseline)" if provisional \
+            else "FAIL"
+        print(f"bench_guard: {kind} — {len(failures)} regression(s) "
+              f"past {args.tolerance_pct}% over {checked} metrics:")
+        for f_ in failures:
+            print(f"  {f_}")
+        if provisional:
+            print("bench_guard: baseline is provisional — run "
+                  "`python3 scripts/bench_guard.py --update` on the "
+                  "reference machine to arm the gate")
+            return 0
+        return 1
+    print(f"bench_guard: OK ({checked} metrics within "
+          f"{args.tolerance_pct}% of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,23 +1,43 @@
 #!/usr/bin/env bash
 # Tier-1 gate (referenced from ROADMAP.md).
 #
-#   bash scripts/tier1.sh [--fast]
+#   bash scripts/tier1.sh [--fast] [--bench]
+#
+#   --fast   skip the style gates (fmt, clippy)
+#   --bench  also run `lqer bench kv` and check it against the committed
+#            baseline (scripts/bench_guard.py, >10% regression fails)
 #
 # Order matters: the build+test gate is the hard requirement; formatting
 # and lints run after so a style regression never masks a real failure.
 # PJRT-dependent tests self-skip when `make artifacts` has not run or the
-# xla backend is the offline shim (DESIGN.md §7).
+# xla backend is the offline shim (DESIGN.md §7); the python suite
+# self-skips when jax/pytest are not in the image (same policy).
+# .github/workflows/ci.yml runs this same script so the local and CI
+# gates cannot drift.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+FAST=0
+BENCH=0
+for arg in "$@"; do
+    case "$arg" in
+        --fast) FAST=1 ;;
+        --bench) BENCH=1 ;;
+        *) echo "unknown flag: $arg" >&2; exit 2 ;;
+    esac
+done
 
 cargo build --release
 cargo test -q
 
-# Paged-KV gate: the allocator/table proptests and the golden
-# paged-vs-flat engine equality must pass on their own (they also run
-# inside `cargo test` above; this pins them as a named tier-1 step).
+# Paged-KV gate: the allocator/table/refcount proptests and the golden
+# paged/shared-vs-flat engine equality must pass on their own (they also
+# run inside `cargo test` above; this pins them as named tier-1 steps).
 cargo test -q --test paged_kv
+cargo test -q --test shared_kv
 cargo test -q --test proptests block_allocator_and_tables_keep_invariants
+cargo test -q --test proptests \
+    block_refcounts_keep_invariants_under_share_free_revive
 
 # plan-check: the checked-in QuantSpec golden fixtures must validate on
 # both sides of the language boundary.  The rust side ran above inside
@@ -26,7 +46,23 @@ cargo test -q --test proptests block_allocator_and_tables_keep_invariants
 python3 python/compile/quant/spec.py check \
     rust/tests/fixtures/quantspec_golden.json
 
-if [[ "${1:-}" != "--fast" ]]; then
+# Python suite: one `make tier1` runs the whole gate.  Self-skips when
+# the image carries no jax/pytest (the suite imports jax at collection
+# time, so it cannot partially run without it).
+if python3 -c "import jax, pytest" >/dev/null 2>&1; then
+    make test-python
+else
+    echo "tier1: jax/pytest not in this image — skipping python suite"
+fi
+
+if [[ "$BENCH" == 1 ]]; then
+    ./target/release/lqer bench kv --out BENCH_kvpaged.json
+    ./target/release/lqer bench kvshared --out BENCH_kvshared.json
+    python3 scripts/bench_guard.py --bench BENCH_kvpaged.json \
+        --baseline BENCH_baseline.json
+fi
+
+if [[ "$FAST" != 1 ]]; then
     cargo fmt --check
     cargo clippy --all-targets -- -D warnings
 fi

@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
                 .iter()
                 .map(|(_, t)| *t)
                 .collect(),
-            max_prefill_per_step: 2,
+            tokens_per_step: 0, // engine default: batch + largest bucket
             // device-resident KV cache (set true for the legacy
             // host round-trip oracle)
             host_cache: false,

@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
                 .iter()
                 .map(|(_, t)| *t)
                 .collect(),
-            max_prefill_per_step: 2,
+            tokens_per_step: 0, // engine default: batch + largest bucket
             host_cache: false,
             paged: None,
             admission: Default::default(),

@@ -254,6 +254,11 @@ def stage_hlo(out_dir: str, trained: dict, models: list[str],
                         needed[(SERVE_MODEL, "cache", "kvwrite", b, t)] = gv
                         needed[(SERVE_MODEL, "cache", "kvwrite_paged",
                                 nb, t)] = gv
+                        # Fused chunked-prefill step (DESIGN.md §12):
+                        # prefill + per-chunk block scatter in one
+                        # graph, keyed by pool size like kvwrite_paged.
+                        needed[(SERVE_MODEL, tag, "prefill_chunk",
+                                nb, t)] = gv
 
     for (name, tag, entry_kind, b, t), gv in sorted(needed.items()):
         cfg, params = trained[name]
@@ -261,7 +266,8 @@ def stage_hlo(out_dir: str, trained: dict, models: list[str],
         os.makedirs(hdir, exist_ok=True)
         fname = (f"{tag}_{entry_kind}_b{b}" +
                  (f"_t{t}" if entry_kind in ("score", "prefill", "kvwrite",
-                                             "kvwrite_paged")
+                                             "kvwrite_paged",
+                                             "prefill_chunk")
                   else "") + ".hlo.txt")
         path = os.path.join(hdir, fname)
         graph_index.append({"model": name, "graph": tag,
@@ -290,6 +296,20 @@ def stage_hlo(out_dir: str, trained: dict, models: list[str],
                                        jnp.int32)
             text = lower_graph(M.kv_write_prefill_paged, pcache, pcache,
                                pre, pre, ids)
+        elif entry_kind == "prefill_chunk":
+            # Fused prefill + chunk scatter; `b` IS the pool size here
+            # (see the `needed` construction above).
+            vparams = M.attach_variant_params(
+                jax.tree_util.tree_map(np.asarray, params), cfg, gv)
+            pspecs = M.param_specs(vparams)
+            pcache = jax.ShapeDtypeStruct(
+                (cfg.layers, b, PAGED_BLOCK_SIZE, cfg.d), jnp.float32)
+            ids = jax.ShapeDtypeStruct((t // PAGED_BLOCK_SIZE,),
+                                       jnp.int32)
+            fn = lambda p, tok_, kc, vc, bi: M.prefill_chunk(
+                p, tok_, kc, vc, bi, cfg, gv)
+            text = lower_graph(fn, pspecs, _tok_spec(1, t), pcache,
+                               pcache, ids)
         elif entry_kind == "decode_paged":
             vparams = M.attach_variant_params(
                 jax.tree_util.tree_map(np.asarray, params), cfg, gv)
@@ -468,6 +488,12 @@ def main() -> None:
                 "block_size": PAGED_BLOCK_SIZE,
                 "blocks_per_lane":
                     trained[SERVE_MODEL][0].t_max // PAGED_BLOCK_SIZE,
+            }
+            # Fused chunked-prefill graphs (DESIGN.md §12): their
+            # presence gates the device-paged chunk path in rust.
+            serve["chunk"] = {
+                "block_size": PAGED_BLOCK_SIZE,
+                "buckets": [t for _, t in PREFILL_SHAPES],
             }
         manifest = {
             "created": time.strftime("%Y-%m-%d %H:%M:%S"),

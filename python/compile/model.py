@@ -475,6 +475,30 @@ def kv_write_prefill_paged(k_cache, v_cache, k_pre, v_pre, block_ids):
     return k_cache, v_cache
 
 
+def prefill_chunk(params, tokens, k_cache, v_cache, block_ids,
+                  cfg: ModelConfig, gv: GraphVariant):
+    """One fused chunked-prefill step over a paged pool (DESIGN.md §12).
+
+    tokens: (1, t) right-padded prefix (t a prefill bucket, multiple of
+    the pool's block size); k/v_cache: (L, NB, bs, d) block pools;
+    block_ids: (t // bs,) int32.  Computes the full-prefix prefill and
+    scatters each ``bs``-row chunk of its K/V into ``block_ids[c]`` —
+    the engine passes the sentinel id for chunks earlier ticks already
+    installed and for right-padding, so a slice write never re-touches
+    finalized blocks.  Returns (logits (1, t, V), k_cache', v_cache').
+
+    Bit-exactness: the prefill compute is position-causal, so the
+    logits and the scattered rows of the final chunk are identical to a
+    monolithic ``prefill`` + ``kv_write_prefill_paged`` of the whole
+    prompt — chunking only changes *when* rows land, never their
+    values.
+    """
+    logits, k_pre, v_pre = prefill(params, tokens, cfg, gv)
+    k_cache, v_cache = kv_write_prefill_paged(
+        k_cache, v_cache, k_pre, v_pre, block_ids)
+    return logits, k_cache, v_cache
+
+
 def kv_write_prefill(k_cache, v_cache, k_pre, v_pre, slot):
     """Scatter a prefilled sequence into batch slot ``slot`` of a resident
     cache.

@@ -1,0 +1,95 @@
+"""Chunked prefill (DESIGN.md §12): streaming a prompt through
+``prefill_chunk`` slices — each computing its prefix at the slice's own
+bucket and scattering only its blocks — must reproduce the monolithic
+``prefill`` + ``kv_write_prefill_paged`` pool and final-row logits."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+BS = 8      # block rows used by these tests (aot uses PAGED_BLOCK_SIZE)
+SENT = 0    # sentinel block id
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = M.ModelConfig(name="t", vocab=64, d=32, layers=2, heads=2,
+                        ffn=64, t_max=24)
+    params = M.init_params(cfg, seed=1)
+    return cfg, params
+
+
+def pad(toks, t):
+    out = np.zeros((1, t), np.int32)
+    out[0, :len(toks)] = toks
+    return out
+
+
+def test_prefill_chunk_stream_matches_monolithic(setup):
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    rng = np.random.default_rng(11)
+    nb, plen = 8, 20
+    prompt = rng.integers(4, cfg.vocab, size=plen).astype(np.int32)
+    blocks = [3, 1, 5]  # deliberately out-of-order physical blocks
+
+    kc0 = rng.normal(size=(cfg.layers, nb, BS, cfg.d)).astype(np.float32)
+    vc0 = rng.normal(size=(cfg.layers, nb, BS, cfg.d)).astype(np.float32)
+
+    # Monolithic reference: one bucket-24 prefill scattered whole.
+    ref_logits, k_pre, v_pre = M.prefill(params, pad(prompt, 24), cfg, gv)
+    kc_ref, vc_ref = M.kv_write_prefill_paged(
+        jnp.asarray(kc0), jnp.asarray(vc0), k_pre, v_pre,
+        np.array(blocks, np.int32))
+
+    # Chunked: rows [0,8) at bucket 8, [8,16) at bucket 16, [16,20) at
+    # bucket 24 — already-installed chunks park in the sentinel, exactly
+    # as the engine masks them.
+    kc, vc = jnp.asarray(kc0), jnp.asarray(vc0)
+    logits = None
+    for end, bucket, ids in [
+        (8, 8, [blocks[0]]),
+        (16, 16, [SENT, blocks[1]]),
+        (20, 24, [SENT, SENT, blocks[2]]),
+    ]:
+        logits, kc, vc = M.prefill_chunk(
+            params, pad(prompt[:end], bucket), kc, vc,
+            np.array(ids, np.int32), cfg, gv)
+
+    # The final chunk runs the same bucket as the monolithic prefill, so
+    # the sampled row is bit-identical.
+    np.testing.assert_array_equal(
+        np.asarray(logits)[0, plen - 1],
+        np.asarray(ref_logits)[0, plen - 1])
+    # The prompt's blocks hold the monolithic rows (causal prefill: a
+    # position's K/V is independent of right-padding, so each chunk's
+    # bucket reproduces the same rows).
+    np.testing.assert_array_equal(np.asarray(kc)[:, blocks],
+                                  np.asarray(kc_ref)[:, blocks])
+    np.testing.assert_array_equal(np.asarray(vc)[:, blocks],
+                                  np.asarray(vc_ref)[:, blocks])
+    # Blocks no chunk listed (beyond the sentinel scribble pad) are
+    # untouched.
+    others = [b for b in range(1, nb) if b not in blocks]
+    np.testing.assert_array_equal(np.asarray(kc)[:, others],
+                                  kc0[:, others])
+
+
+def test_prefill_chunk_sentinel_masks_earlier_chunks(setup):
+    """A re-scatter with all-sentinel ids must leave every non-sentinel
+    block untouched — the contract that lets the engine re-drive a
+    prefix without re-touching finalized blocks."""
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    rng = np.random.default_rng(3)
+    nb = 5
+    prompt = rng.integers(4, cfg.vocab, size=2 * BS).astype(np.int32)
+    kc0 = rng.normal(size=(cfg.layers, nb, BS, cfg.d)).astype(np.float32)
+    vc0 = rng.normal(size=(cfg.layers, nb, BS, cfg.d)).astype(np.float32)
+    _, kc, vc = M.prefill_chunk(
+        params, pad(prompt, 2 * BS), jnp.asarray(kc0), jnp.asarray(vc0),
+        np.array([SENT, SENT], np.int32), cfg, gv)
+    np.testing.assert_array_equal(np.asarray(kc)[:, 1:], kc0[:, 1:])
+    np.testing.assert_array_equal(np.asarray(vc)[:, 1:], vc0[:, 1:])

@@ -61,7 +61,7 @@ fn main() {
                         .iter()
                         .map(|(_, tt)| *tt)
                         .collect(),
-                    max_prefill_per_step: 2,
+                    tokens_per_step: 0, // engine default: batch + largest bucket
                     host_cache,
                     paged: None,
                     admission: Default::default(),

@@ -83,6 +83,17 @@ impl PagedServeInfo {
     }
 }
 
+/// Chunked-prefill graph contract (DESIGN.md §12): the artifacts carry
+/// fused `prefill_chunk` graphs — prefill + per-chunk block scatter in
+/// one call — lowered for these buckets at this block size.
+#[derive(Debug, Clone)]
+pub struct ChunkServeInfo {
+    pub block_size: usize,
+    /// Prefill buckets the `prefill_chunk` graphs were lowered with
+    /// (each a multiple of `block_size`).
+    pub buckets: Vec<usize>,
+}
+
 #[derive(Debug, Clone)]
 pub struct ServeInfo {
     pub model: String,
@@ -92,6 +103,10 @@ pub struct ServeInfo {
     /// Present when the artifacts carry paged graphs
     /// (`decode_paged` / `kvwrite_paged`).
     pub paged: Option<PagedServeInfo>,
+    /// Present when the artifacts carry fused `prefill_chunk` graphs;
+    /// absent (legacy artifacts) makes the device-paged backend fall
+    /// back to prefill + `kvwrite_paged` per chunk.
+    pub chunk: Option<ChunkServeInfo>,
 }
 
 #[derive(Debug)]
@@ -255,6 +270,33 @@ impl Manifest {
                 }),
                 None => None,
             },
+            chunk: match sv.get("chunk") {
+                Some(c) => {
+                    let info = ChunkServeInfo {
+                        block_size: c
+                            .usize_at("block_size")
+                            .path_ctx(|| "serve.chunk".to_string())?,
+                        buckets: usize_list(
+                            c.req("buckets")
+                                .path_ctx(|| "serve.chunk".to_string())?,
+                            "serve.chunk.buckets",
+                        )?,
+                    };
+                    anyhow::ensure!(
+                        info.block_size > 0
+                            && info
+                                .buckets
+                                .iter()
+                                .all(|b| b % info.block_size == 0),
+                        "serve.chunk: buckets {:?} must be positive \
+                         multiples of block_size {}",
+                        info.buckets,
+                        info.block_size
+                    );
+                    Some(info)
+                }
+                None => None,
+            },
         };
 
         let score_shape = usize_pair(v.req("score_shape")?, "score_shape")?;
@@ -389,6 +431,31 @@ mod tests {
         let m0 =
             Manifest::load(&write_manifest("paged_none", MINIMAL)).unwrap();
         assert!(m0.serve.paged.is_none());
+        assert!(m0.serve.chunk.is_none());
+    }
+
+    #[test]
+    fn parses_chunk_serve_info() {
+        let body = MINIMAL.replace(
+            "\"prefill_shapes\": [[1, 16]]",
+            "\"prefill_shapes\": [[1, 16]],
+             \"chunk\": {\"block_size\": 16, \"buckets\": [16, 96]}",
+        );
+        let dir = write_manifest("chunk", &body);
+        let m = Manifest::load(&dir).unwrap();
+        let c = m.serve.chunk.as_ref().unwrap();
+        assert_eq!(c.block_size, 16);
+        assert_eq!(c.buckets, vec![16, 96]);
+
+        // Unaligned buckets are a manifest bug, caught at load.
+        let body = MINIMAL.replace(
+            "\"prefill_shapes\": [[1, 16]]",
+            "\"prefill_shapes\": [[1, 16]],
+             \"chunk\": {\"block_size\": 16, \"buckets\": [16, 20]}",
+        );
+        let dir = write_manifest("chunk_bad", &body);
+        let msg = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(msg.contains("serve.chunk"), "{msg}");
     }
 
     #[test]

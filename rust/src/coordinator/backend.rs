@@ -35,15 +35,28 @@ pub trait DecodeBackend {
     fn t_max(&self) -> usize;
     fn batch(&self) -> usize;
 
-    /// Prefill `toks` (a prompt right-padded to `bucket`) and install its
-    /// cache rows into batch lane `slot` (`len` valid rows).  Returns the
-    /// prefill logits, `bucket * vocab` row-major.
-    fn prefill_into(
+    /// One chunked-prefill slice (DESIGN.md §12): `toks` is the
+    /// prompt's first `len` tokens right-padded to `bucket` (a prefill
+    /// bucket, `bucket >= len`), and rows `[row_offset, len)` are the
+    /// slice to install into batch lane `slot` — earlier rows are
+    /// already in the cache from previous chunks.  The backend
+    /// recomputes the whole prefix (the shape-specialized b=1 prefill
+    /// graphs are the oracle; a dedicated chunk graph may skip the
+    /// redundant compute) but must only (re-)write rows with the values
+    /// the monolithic prefill would produce — re-scattering an earlier
+    /// row with its identical recomputed bytes is allowed, which is
+    /// exactly what the whole-slice `kvwrite` device path does.
+    /// Returns the prefix logits, `bucket * vocab` row-major; the
+    /// engine samples from row `len - 1` after the final chunk.  A
+    /// monolithic prefill is the special case `row_offset == 0` with
+    /// `len` the full prompt.
+    fn prefill_chunk(
         &mut self,
         slot: usize,
         toks: &[i32],
         bucket: usize,
         len: usize,
+        row_offset: usize,
     ) -> Result<Vec<f32>>;
 
     /// One decode step over the whole batch bucket.  `pos` is the
@@ -79,19 +92,22 @@ pub trait DecodeBackend {
         false
     }
 
-    /// Paged prefill: like [`Self::prefill_into`], but cache rows land in
-    /// the blocks mapped by `table` (which must cover `len` rows) instead
-    /// of a flat lane.  The first `shared_blocks` table entries are
-    /// **read-only** (prefix-shared; they already hold exactly the rows
-    /// this prompt would write): the backend must not write any row
-    /// living in them.
-    fn prefill_into_paged(
+    /// Paged twin of [`Self::prefill_chunk`]: the slice's cache rows
+    /// land in the blocks mapped by `table` (which must cover `len`
+    /// rows) instead of a flat lane.  The first `shared_blocks` table
+    /// entries are **read-only** (prefix-shared; they already hold
+    /// exactly the rows this prompt would write): the backend must not
+    /// write any row living in them — skip those rows, or park the
+    /// device DUS chunk in the sentinel block.
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_chunk_paged(
         &mut self,
         _slot: usize,
         _table: &BlockTable,
         _toks: &[i32],
         _bucket: usize,
         _len: usize,
+        _row_offset: usize,
         _shared_blocks: usize,
     ) -> Result<Vec<f32>> {
         anyhow::bail!("backend has no paged KV backing")
@@ -203,12 +219,17 @@ impl PjrtBackend {
             (false, Some(p)) => {
                 runner.executable(&rt, &manifest, "decode_paged",
                                   cfg.decode_batch, 0)?;
-                // kvwrite_paged graphs are keyed by *pool size* in the
-                // manifest (what the runtime knows at lookup time), not
-                // by decode batch.
+                // kvwrite_paged / prefill_chunk graphs are keyed by
+                // *pool size* in the manifest (what the runtime knows
+                // at lookup time), not by decode batch.
                 for &t in &cfg.prefill_buckets {
                     runner.executable(&rt, &manifest, "kvwrite_paged",
                                       p.num_blocks, t)?;
+                    if manifest.serve.chunk.is_some() {
+                        runner.executable(&rt, &manifest,
+                                          "prefill_chunk",
+                                          p.num_blocks, t)?;
+                    }
                 }
             }
         }
@@ -276,13 +297,19 @@ impl DecodeBackend for PjrtBackend {
         self.batch
     }
 
-    fn prefill_into(
+    fn prefill_chunk(
         &mut self,
         slot: usize,
         toks: &[i32],
         bucket: usize,
         len: usize,
+        _row_offset: usize,
     ) -> Result<Vec<f32>> {
+        // Both flat backings re-drive the existing bucketed write path
+        // over the whole prefix: rows below `row_offset` are re-written
+        // with their identical recomputed bytes (prefill is
+        // deterministic), which keeps chunked and monolithic cache
+        // states bit-equal without new graphs.
         match &mut self.backing {
             CacheBacking::Device(session) => {
                 // K/V stay on device: scatter the retained prefill
@@ -304,7 +331,7 @@ impl DecodeBackend for PjrtBackend {
             }
             CacheBacking::PagedHost { .. }
             | CacheBacking::PagedDevice(_) => {
-                anyhow::bail!("paged backing requires prefill_into_paged")
+                anyhow::bail!("paged backing requires prefill_chunk_paged")
             }
         }
     }
@@ -363,13 +390,15 @@ impl DecodeBackend for PjrtBackend {
         matches!(self.backing, CacheBacking::PagedHost { .. })
     }
 
-    fn prefill_into_paged(
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_chunk_paged(
         &mut self,
         _slot: usize,
         table: &BlockTable,
         toks: &[i32],
         bucket: usize,
         len: usize,
+        row_offset: usize,
         shared_blocks: usize,
     ) -> Result<Vec<f32>> {
         match &mut self.backing {
@@ -377,9 +406,11 @@ impl DecodeBackend for PjrtBackend {
                 let (logits, k, v) = self.runner.prefill(
                     &self.rt, &self.manifest, toks, 1, bucket,
                 )?;
-                // Rows in the shared prefix blocks are read-only and
-                // already hold exactly these values; start past them.
-                let start = shared_blocks * kv.block_size();
+                // Rows below the chunk are already installed, and rows
+                // in the shared prefix blocks are read-only (they
+                // already hold exactly these values); start past both.
+                let start =
+                    row_offset.max(shared_blocks * kv.block_size());
                 kv.write_prefill_from(
                     table, &k.data, &v.data, bucket, len, start,
                 )?;
@@ -391,19 +422,30 @@ impl DecodeBackend for PjrtBackend {
                     "prefix sharing is gated off on the device-paged \
                      path (no block ops yet)"
                 );
-                // Prefill K/V stay on device; the kvwrite_paged graph
-                // scatters each bucket-chunk into its table block
-                // (padding chunks park in the sentinel).
+                // Prefill K/V stay on device.  With new artifacts the
+                // fused `prefill_chunk` graph computes the prefix and
+                // scatters only this chunk's blocks in one call
+                // (manifest `serve.chunk`); legacy artifacts fall back
+                // to prefill + the `kvwrite_paged` scatter, with chunks
+                // below `row_offset` parked in the sentinel so earlier
+                // blocks are never re-touched.
+                if self.manifest.serve.chunk.is_some() {
+                    let logits = self.runner.prefill_chunk_resident_paged(
+                        &self.rt, &self.manifest, session, table, toks,
+                        bucket, row_offset,
+                    )?;
+                    return Ok(logits.data);
+                }
                 let (logits, k, v) = self.runner.prefill_retained(
                     &self.rt, &self.manifest, toks, 1, bucket,
                 )?;
                 self.runner.write_prefill_resident_paged(
                     &self.rt, &self.manifest, session, table, &k, &v,
-                    bucket,
+                    bucket, row_offset,
                 )?;
                 Ok(logits.data)
             }
-            _ => anyhow::bail!("flat backing has no prefill_into_paged"),
+            _ => anyhow::bail!("flat backing has no prefill_chunk_paged"),
         }
     }
 

@@ -19,6 +19,37 @@ pub fn padding_waste(buckets: &[usize], len: usize) -> Option<f64> {
     pick_bucket(buckets, len).map(|b| (b - len) as f64 / b as f64)
 }
 
+/// Chunked-prefill slice size (DESIGN.md §12, Sarathi-style stall-free
+/// batching): how many new prompt rows a Prefilling sequence may
+/// process this tick.  `len` is the full prompt length, `next_row` the
+/// rows already present, `budget` the tick's remaining token budget,
+/// and `align` the slice alignment — the paged block size (so chunk
+/// writes stay whole-block for the `kvwrite_paged` / `prefill_chunk`
+/// scatter graphs), 1 on a flat cache.
+///
+/// The final slice (everything left fits the budget) may end unaligned
+/// — the prompt tail is what it is; intermediate slices end on an
+/// alignment boundary, which also keeps `next_row` aligned for the
+/// next call.  Returns 0 when the budget cannot fit one aligned slice;
+/// the engine guarantees `tokens_per_step >= decode_batch + align`, so
+/// the first Prefilling lane the packer visits always progresses.
+/// Chunk *shapes* come from the existing prefill bucket set (each
+/// chunk re-drives the bucketed b=1 prefill of its prefix), so no new
+/// lowered graphs are needed.
+pub fn chunk_len(
+    len: usize,
+    next_row: usize,
+    budget: usize,
+    align: usize,
+) -> usize {
+    let remaining = len.saturating_sub(next_row);
+    if remaining <= budget {
+        return remaining;
+    }
+    let a = align.max(1);
+    (budget / a) * a
+}
+
 /// Greedy micro-batch packing: group waiting prompt lengths so each group
 /// shares a bucket (used by the batched-scoring evaluator, which *can*
 /// batch prefills, unlike the b=1 serving prefill graphs).
@@ -61,6 +92,24 @@ mod tests {
         let buckets = [16];
         assert_eq!(padding_waste(&buckets, 16), Some(0.0));
         assert_eq!(padding_waste(&buckets, 8), Some(0.5));
+    }
+
+    #[test]
+    fn chunk_len_takes_the_tail_whole_and_aligns_the_middle() {
+        // Whatever remains fits the budget: take it all, even unaligned.
+        assert_eq!(chunk_len(20, 16, 100, 8), 4);
+        assert_eq!(chunk_len(20, 0, 20, 8), 20);
+        // Budget smaller than the remainder: align down.
+        assert_eq!(chunk_len(40, 0, 20, 8), 16);
+        assert_eq!(chunk_len(40, 16, 20, 8), 16);
+        // Budget below one aligned slice: no progress this tick.
+        assert_eq!(chunk_len(40, 0, 7, 8), 0);
+        // Flat cache (align 1): the budget is the slice.
+        assert_eq!(chunk_len(40, 10, 7, 1), 7);
+        // Nothing left to do.
+        assert_eq!(chunk_len(20, 20, 50, 8), 0);
+        // Degenerate align treated as 1.
+        assert_eq!(chunk_len(40, 0, 7, 0), 7);
     }
 
     #[test]

@@ -127,7 +127,7 @@ pub fn run_judge(
             .iter()
             .map(|(_, t)| *t)
             .collect(),
-        max_prefill_per_step: 2,
+        tokens_per_step: 0, // engine default: batch + largest bucket
         host_cache: false,
         paged: None,
         admission: super::AdmissionPolicy::default(),

@@ -97,6 +97,9 @@ pub struct EngineMetrics {
     /// requeued for re-prefill; one request can be preempted several
     /// times).
     pub preemptions: u64,
+    /// Of those, victims evicted *mid-prefill* (Prefilling phase,
+    /// DESIGN.md §12): requeued outright, no state to swap.
+    pub preempted_prefills: u64,
     /// Preemptions resolved by block-level swap-out to the host pool
     /// (sequence state preserved) instead of re-prefill.
     pub swap_outs: u64,
@@ -115,6 +118,11 @@ pub struct EngineMetrics {
     pub prefix_bytes_saved: u64,
     /// Queue depth at the last metrics snapshot.
     pub waiting: u64,
+    /// Lanes streaming their prompt in (Prefilling phase) at the last
+    /// snapshot.
+    pub prefilling: u64,
+    /// The engine's resolved per-tick token budget (DESIGN.md §12).
+    pub tokens_per_step: u64,
     /// Sequences parked in the swap pool at the last snapshot.
     pub swapped_seqs: u64,
     /// Paged-KV gauges at the last snapshot (0 when the engine runs the
@@ -135,8 +143,25 @@ pub struct EngineMetrics {
     pub prefill_ns: u64,
     pub decode_steps: u64,
     pub decode_ns: u64,
+    /// Wall-clock spent executing prefill chunks in ticks that also had
+    /// at least one decoding lane — the head-of-line-blocking tax a
+    /// whole-prompt prefill levies on running decodes.  Chunking keeps
+    /// each tick's share bounded by `tokens_per_step`; the monolithic
+    /// configuration (a budget covering the largest bucket) shows the
+    /// old stall here.
+    pub decode_stall_ns: u64,
     pub ttft_ms: LatencyHistogram,
     pub total_ms: LatencyHistogram,
+    /// Gap between consecutive sampled tokens of a sequence (ms) — the
+    /// p99 of this is what stall-free chunked prefill protects.  Time a
+    /// sequence spent swapped out counts: the client experienced it.
+    pub itl_ms: LatencyHistogram,
+    /// Tokens of work packed per tick (decode lanes + prefill chunk
+    /// rows); its max never exceeds `tokens_per_step`
+    /// (property-tested).
+    pub packed_tokens: LatencyHistogram,
+    /// The prefill-chunk share of each tick's packed tokens.
+    pub packed_prefill_tokens: LatencyHistogram,
     pub batch_occupancy: LatencyHistogram,
     /// Pool utilization (percent) sampled at every decode step; its max
     /// is the peak block pressure of the run.
@@ -159,6 +184,12 @@ impl EngineMetrics {
 
     pub fn mean_batch_occupancy(&self) -> f64 {
         self.batch_occupancy.mean()
+    }
+
+    /// Cumulative decode-stall time in milliseconds (see
+    /// [`Self::decode_stall_ns`]).
+    pub fn decode_stall_ms(&self) -> f64 {
+        self.decode_stall_ns as f64 / 1e6
     }
 
     pub fn report(&self) -> String {
@@ -187,7 +218,9 @@ impl EngineMetrics {
              | prefill {} \
              steps {:.1} ms avg \
              | decode {} steps {:.2} ms avg | {:.1} tok/s decode | occupancy \
-             {:.2} | ttft p50 {:.0} ms p99 {:.0} ms{paged}",
+             {:.2} | ttft p50 {:.0} ms p99 {:.0} ms | itl p50 {:.2} ms \
+             p99 {:.2} ms | budget {}/tick (packed mean {:.1}, max {:.0}) \
+             | decode stalled {:.1} ms{paged}",
             self.completed,
             self.submitted,
             self.rejected,
@@ -209,6 +242,12 @@ impl EngineMetrics {
             self.mean_batch_occupancy(),
             self.ttft_ms.percentile(50.0),
             self.ttft_ms.percentile(99.0),
+            self.itl_ms.percentile(50.0),
+            self.itl_ms.percentile(99.0),
+            self.tokens_per_step,
+            self.packed_tokens.mean(),
+            self.packed_tokens.max(),
+            self.decode_stall_ms(),
         )
     }
 }

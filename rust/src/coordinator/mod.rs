@@ -9,17 +9,26 @@
 //!                                                     │
 //!                                  engine thread (owns PJRT runtime)
 //!                                                     │
-//!        ┌─────────── scheduler iteration ────────────┤
+//!        ┌──── token-budget step (DESIGN.md §12) ────────────┤
 //!        │ 0. expire waiters past their deadline (FinishReason::Expired)
-//!        │ 1. admit while capacity lasts — a free lane AND (paged mode)
-//!        │    enough free KV blocks; the head otherwise waits (or is
-//!        │    instantly rejected under AdmissionPolicy::RejectOnFull);
-//!        │    failures release lane + blocks and answer Rejected
-//!        │ 2. grow block tables for the next append; if the pool is dry,
-//!        │    preempt the youngest-by-tokens sequence (blocks returned,
-//!        │    request requeued for deterministic re-prefill)
-//!        │ 3. one batched decode step over all active slots
-//!        │ 4. sample, detect EOS/limits, free lanes + blocks, respond
+//!        │ 1. reserve 1 budget token per decoding lane (decode steps
+//!        │    are never stalled behind whole-prompt prefills)
+//!        │ 2. pack the remaining budget with chunked-prefill slices,
+//!        │    round-robin over the Prefilling lanes; a sequence whose
+//!        │    final chunk lands samples its first token (TTFT) and
+//!        │    becomes Decoding
+//!        │ 3. admit while capacity lasts — a free lane AND (paged mode)
+//!        │    enough free KV blocks for the whole prompt; admission is
+//!        │    bookkeeping only: the lane enters the Prefilling phase
+//!        │    and streams in chunk slices from the next tick (a prompt
+//!        │    fully resident via the prefix index completes now,
+//!        │    charged against the leftover budget)
+//!        │ 4. grow block tables for the next append; if the pool is dry,
+//!        │    preempt the lowest-priority-then-youngest sequence
+//!        │    (mid-prefill victims requeue, decoding victims swap out
+//!        │    or requeue for deterministic re-prefill)
+//!        │ 5. one batched decode step over the lanes that were decoding
+//!        │    at the top of the tick; sample, detect EOS/limits, respond
 //!        └────────────────────────────────────────────┘
 //! ```
 //!
@@ -204,8 +213,16 @@ pub struct EngineConfig {
     pub decode_batch: usize,
     /// Prefill length buckets (must have lowered prefill graphs, b=1).
     pub prefill_buckets: Vec<usize>,
-    /// Max prefills admitted per scheduler iteration (batching policy).
-    pub max_prefill_per_step: usize,
+    /// Per-tick token budget (DESIGN.md §12): every decoding lane takes
+    /// 1 token off the top, and the remainder is packed with
+    /// chunked-prefill slices — the Sarathi-style stall-free schedule
+    /// that replaced the old whole-prompt `max_prefill_per_step`
+    /// admission.  0 resolves to `decode_batch + max(prefill_buckets)`
+    /// (one full prefill bucket per tick, the closest analogue of the
+    /// legacy behavior); the engine requires the resolved value to be
+    /// at least `decode_batch + chunk alignment` so a prefilling lane
+    /// can always make progress.
+    pub tokens_per_step: usize,
     /// Use the legacy host-side KV cache (full cache upload/download per
     /// decode step) instead of the device-resident session.  Kept as the
     /// bit-exactness oracle; `false` is the serving default.
@@ -292,7 +309,65 @@ struct ActiveSeq {
     swapped_ms: f64,
     generated: Vec<u32>,
     last_token: u32,
+    /// When the previous token was sampled — feeds the inter-token
+    /// latency histogram (the metric chunked prefill exists to protect).
+    /// Time spent swapped out counts: the client experienced the gap.
+    last_token_at: Instant,
     rng: Rng,
+}
+
+/// A sequence in the Prefilling phase (DESIGN.md §12): its lane and KV
+/// blocks are committed, but the prompt is still streaming into the
+/// cache in chunk-sized, block-aligned slices across ticks.  No token
+/// has been sampled yet; TTFT starts when the final chunk lands.
+struct PrefillSeq {
+    request: Request,
+    reply: mpsc::Sender<Response>,
+    submitted: Instant,
+    /// Canonical (vocab-filtered, `t_max`-capped) prompt being
+    /// streamed; its length is the prefill target.
+    prompt: Vec<u32>,
+    /// Rows already present in the cache: the shared prefix hits mapped
+    /// at admission plus every chunk written so far.  Mirrors
+    /// `SlotMap::pos` for this lane, so the device DUS lattice's dead
+    /// write for a mid-prefill lane lands on the next unwritten row —
+    /// storage the following chunk overwrites before anyone reads it.
+    next_row: usize,
+    /// Leading prefix-index hits mapped read-only at admission (paged);
+    /// chunk writes skip (or sentinel-park) rows inside them.
+    shared_blocks: usize,
+}
+
+/// One decode lane's scheduling phase.  `Waiting` lives in the queue
+/// and `Decoding` in the batch; `Prefilling` is the third phase in
+/// between, introduced by the chunked-prefill scheduler.
+enum Lane {
+    Idle,
+    Prefilling(PrefillSeq),
+    Decoding(ActiveSeq),
+}
+
+impl Lane {
+    fn take(&mut self) -> Lane {
+        std::mem::replace(self, Lane::Idle)
+    }
+
+    fn is_decoding(&self) -> bool {
+        matches!(self, Lane::Decoding(_))
+    }
+
+    fn is_prefilling(&self) -> bool {
+        matches!(self, Lane::Prefilling(_))
+    }
+
+    /// The owning request, in either live phase.
+    fn request(&self) -> Option<&Request> {
+        match self {
+            Lane::Idle => None,
+            Lane::Prefilling(p) => Some(&p.request),
+            Lane::Decoding(a) => Some(&a.request),
+        }
+    }
 }
 
 struct Waiting {
@@ -346,9 +421,10 @@ struct SwappedSeq {
 
 /// Admission plan for the queue head: what admitting it would cost.
 struct AdmitPlan {
+    /// Canonical prompt ([`Engine::canonical_prompt`]) — the one
+    /// truncation/filter rule shared with the prefix index and the
+    /// chunk stream, so chunking can never diverge from planning.
     prompt: Vec<u32>,
-    len: usize,
-    bucket: usize,
     /// Blocks to allocate fresh (beyond the shared prefix hits).
     blocks: usize,
     /// Prefix-index hits to map read-only, in logical order:
@@ -374,16 +450,24 @@ pub struct Engine<B: DecodeBackend> {
     cfg: EngineConfig,
     eos: u32,
     waiting: std::collections::VecDeque<Waiting>,
-    active: Vec<Option<ActiveSeq>>, // indexed by KV slot
+    lanes: Vec<Lane>, // indexed by KV slot
     paged: Option<PagedState>,
     /// Preempted sequences parked in the host swap pool, oldest first;
     /// swap-in resumes them before any new admission.
     swapped: std::collections::VecDeque<SwappedSeq>,
+    /// Round-robin start of the chunk packer, so one long prompt cannot
+    /// monopolize the prefill budget tick after tick.
+    prefill_cursor: usize,
     /// Reused across ticks so the hot path stops allocating fresh
     /// active-slot / token / position `Vec`s per decode step.
     scratch_active: Vec<usize>,
     scratch_tokens: Vec<i32>,
     scratch_pos: Vec<i32>,
+    /// Lanes decoding at the top of the current tick — the set the
+    /// budget reserved for and the decode step serves (sequences whose
+    /// final chunk lands mid-tick join the batch next tick, keeping the
+    /// packed-token count under the budget).
+    tick_decode: Vec<usize>,
     metrics: EngineMetrics,
 }
 
@@ -401,11 +485,34 @@ impl Engine<PjrtBackend> {
 impl<B: DecodeBackend> Engine<B> {
     /// Assemble an engine around any backend (tests construct this with a
     /// [`testbackend::FakeBackend`] and drive [`Engine::tick`] directly).
-    pub fn with_backend(backend: B, cfg: EngineConfig, eos: u32) -> Engine<B> {
+    pub fn with_backend(
+        backend: B,
+        mut cfg: EngineConfig,
+        eos: u32,
+    ) -> Engine<B> {
         assert_eq!(
             backend.batch(),
             cfg.decode_batch,
             "backend batch must match decode_batch"
+        );
+        // Resolve the token budget.  The chunk alignment is the paged
+        // block size (chunk writes stay whole-block for the device
+        // scatter graphs) or 1 on a flat cache; requiring the budget to
+        // cover every lane decoding *plus* one aligned slice guarantees
+        // the first prefilling lane the packer visits always makes
+        // progress — no starvation (property-tested).
+        let align =
+            cfg.paged.as_ref().map(|p| p.block_size).unwrap_or(1);
+        if cfg.tokens_per_step == 0 {
+            cfg.tokens_per_step = cfg.decode_batch
+                + cfg.prefill_buckets.iter().copied().max().unwrap_or(1);
+        }
+        assert!(
+            cfg.tokens_per_step >= cfg.decode_batch + align,
+            "tokens_per_step {} must be >= decode_batch {} + chunk \
+             alignment {align}",
+            cfg.tokens_per_step,
+            cfg.decode_batch
         );
         let paged = cfg.paged.as_ref().map(|p| {
             assert!(
@@ -437,19 +544,21 @@ impl<B: DecodeBackend> Engine<B> {
             }
         });
         let slots = SlotMap::new(cfg.decode_batch, backend.t_max());
-        let active = (0..cfg.decode_batch).map(|_| None).collect();
+        let lanes = (0..cfg.decode_batch).map(|_| Lane::Idle).collect();
         Engine {
             backend,
             slots,
             cfg,
             eos,
             waiting: Default::default(),
-            active,
+            lanes,
             paged,
             swapped: Default::default(),
+            prefill_cursor: 0,
             scratch_active: Vec::new(),
             scratch_tokens: Vec::new(),
             scratch_pos: Vec::new(),
+            tick_decode: Vec::new(),
             metrics: EngineMetrics::default(),
         }
     }
@@ -502,6 +611,31 @@ impl<B: DecodeBackend> Engine<B> {
         self.waiting.len()
     }
 
+    /// Lanes currently streaming their prompt in (Prefilling phase).
+    pub fn prefilling_len(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_prefilling()).count()
+    }
+
+    /// `(request id, rows present, prompt length)` of every Prefilling
+    /// lane — the chunk-progress view the no-starvation property test
+    /// watches.
+    pub fn prefill_progress(&self) -> Vec<(u64, usize, usize)> {
+        self.lanes
+            .iter()
+            .filter_map(|l| match l {
+                Lane::Prefilling(p) => {
+                    Some((p.request.id, p.next_row, p.prompt.len()))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The resolved per-tick token budget.
+    pub fn tokens_per_step(&self) -> usize {
+        self.cfg.tokens_per_step
+    }
+
     /// Free blocks in the paged pool (0 when flat).
     pub fn free_blocks(&self) -> usize {
         self.paged.as_ref().map(|p| p.alloc.free_count()).unwrap_or(0)
@@ -514,6 +648,8 @@ impl<B: DecodeBackend> Engine<B> {
         m.decode_exec.merge(&self.backend.entry_stats("decode_dev"));
         m.decode_exec.merge(&self.backend.entry_stats("decode_paged"));
         m.waiting = self.waiting.len() as u64;
+        m.tokens_per_step = self.cfg.tokens_per_step as u64;
+        m.prefilling = self.prefilling_len() as u64;
         if let Some(p) = &self.paged {
             m.kv_block_size = p.alloc.block_size() as u64;
             m.kv_blocks_total = p.alloc.capacity() as u64;
@@ -565,17 +701,72 @@ impl<B: DecodeBackend> Engine<B> {
         }
     }
 
-    /// One scheduler iteration: expire overdue waiters, swap preempted
-    /// sequences back in, admit queued requests while capacity (lanes
-    /// *and* KV blocks) lasts, then run one batched decode step over all
-    /// active slots.
+    /// One token-budget step (DESIGN.md §12): expire overdue waiters,
+    /// swap preempted sequences back in, reserve one budget token per
+    /// decoding lane, pack the remaining budget with chunked-prefill
+    /// slices, admit queued requests into the Prefilling phase while
+    /// capacity (lanes *and* KV blocks) lasts, then run one batched
+    /// decode step over the lanes that were decoding at the top of the
+    /// tick.
     pub fn tick(&mut self) {
         self.expire_waiting();
         self.swap_in_ready();
-        let mut admitted = 0;
-        while admitted < self.cfg.max_prefill_per_step
-            && !self.waiting.is_empty()
-        {
+        // Snapshot the decode set.  Sequences completing their final
+        // chunk mid-tick join the batch next tick, so decode + chunk
+        // tokens can never exceed the budget.
+        self.tick_decode.clear();
+        for s in 0..self.lanes.len() {
+            if self.lanes[s].is_decoding() {
+                self.tick_decode.push(s);
+            }
+        }
+        let decode_tokens = self.tick_decode.len();
+        let budget = self.cfg.tokens_per_step;
+        let chunk_budget = budget.saturating_sub(decode_tokens);
+        // In-flight Prefilling lanes pack first — the no-starvation
+        // guarantee (first-visited lane always gets an aligned slice)
+        // holds no matter what admission does with the leftovers.
+        let prefill_tokens = self.prefill_chunks(chunk_budget);
+        let admit_spent = self
+            .admit_waiting(chunk_budget.saturating_sub(prefill_tokens));
+        self.metrics
+            .packed_prefill_tokens
+            .record((admit_spent + prefill_tokens) as f64);
+        self.metrics.packed_tokens.record(
+            (decode_tokens + admit_spent + prefill_tokens) as f64,
+        );
+        if !self.tick_decode.is_empty() {
+            if let Err(e) = self.decode_step() {
+                crate::info!("decode step failed: {e:#}");
+            }
+        }
+    }
+
+    /// Admit queue heads while capacity lasts.  Admission commits the
+    /// lane and every KV block the whole prompt needs up front, but
+    /// processes no prompt tokens — those stream in chunk slices, so an
+    /// arriving 2k-token prompt no longer stalls running decodes by a
+    /// full prefill.  The one exception is a prompt *fully resident*
+    /// via the prefix index: its zero-row final chunk must run at
+    /// admission (a Prefilling lane may not sit with its position
+    /// inside a shared block — see [`PrefillSeq`]), and that forward
+    /// still costs a whole-prefix prefill execution on the graphs
+    /// (they recompute; only a future incremental-attention chunk
+    /// graph would not — ROADMAP).  Each such admission is therefore
+    /// charged its full prompt length against `chunk_budget`, clamped
+    /// to what remains so an over-budget prompt is not starved
+    /// forever; at most one clamped execution lands per tick, the same
+    /// per-tick bound the packer gives regular chunks.  A fully-shared
+    /// head waits for the next tick once the budget is spent.  Returns
+    /// the tokens charged.
+    fn admit_waiting(&mut self, mut chunk_budget: usize) -> usize {
+        let bs = self
+            .paged
+            .as_ref()
+            .map(|p| p.alloc.block_size())
+            .unwrap_or(1);
+        let mut spent = 0usize;
+        while !self.waiting.is_empty() {
             // Swapped-out sequences are older than anything in the
             // waiting queue; while any is parked, new admissions hold
             // back so the blocks they would take go to resumption
@@ -614,9 +805,21 @@ impl<B: DecodeBackend> Engine<B> {
                     self.reject(w, &why, FinishReason::Rejected);
                 }
                 Ok(plan) if self.has_capacity(&plan) => {
+                    let len = plan.prompt.len();
+                    let fully_shared = plan.shared.len() * bs >= len;
+                    if fully_shared && chunk_budget == 0 {
+                        // Its immediate final chunk would bust the
+                        // tick's budget; the head keeps its queue spot
+                        // until the next tick.
+                        break;
+                    }
                     let w = self.waiting.pop_front().unwrap();
                     self.admit(w, plan);
-                    admitted += 1;
+                    if fully_shared {
+                        let charge = len.min(chunk_budget);
+                        chunk_budget -= charge;
+                        spent += charge;
+                    }
                 }
                 // Capacity miss.  Preempted entries always wait — they
                 // were already admitted once, and shedding them would
@@ -634,12 +837,7 @@ impl<B: DecodeBackend> Engine<B> {
                 },
             }
         }
-
-        if self.slots.any_active() {
-            if let Err(e) = self.decode_step() {
-                crate::info!("decode step failed: {e:#}");
-            }
-        }
+        spent
     }
 
     /// Drop queue entries whose admission deadline has passed, answering
@@ -682,25 +880,20 @@ impl<B: DecodeBackend> Engine<B> {
     }
 
     /// What admitting this request costs, or why it can never be served.
+    /// The prompt served is exactly [`Self::canonical_prompt`] — one
+    /// truncation/filter rule shared with the chunk stream and the
+    /// prefix index, so they cannot diverge.
     fn plan_admission(&self, request: &Request)
         -> Result<AdmitPlan, String> {
-        let vocab = self.backend.vocab();
-        let t_max = self.backend.t_max();
-        let prompt: Vec<u32> = request
-            .prompt
-            .iter()
-            .copied()
-            .filter(|&t| (t as usize) < vocab)
-            .collect();
-        let len = prompt.len().min(t_max - 1);
+        let prompt = self.canonical_prompt(&request.prompt);
+        let len = prompt.len();
         if len == 0 {
             return Err("empty prompt".into());
         }
-        let Some(bucket) =
-            batching::pick_bucket(&self.cfg.prefill_buckets, len)
-        else {
+        if batching::pick_bucket(&self.cfg.prefill_buckets, len).is_none()
+        {
             return Err("prompt longer than any prefill bucket".into());
-        };
+        }
         let mut shared = Vec::new();
         let blocks = match &self.paged {
             Some(p) => {
@@ -712,23 +905,23 @@ impl<B: DecodeBackend> Engine<B> {
                     ));
                 }
                 if p.sharing {
-                    shared = Self::match_prefix(p, &prompt, len);
+                    shared = Self::match_prefix(p, &prompt);
                 }
                 need - shared.len()
             }
             None => 0,
         };
-        Ok(AdmitPlan { prompt, len, bucket, blocks, shared })
+        Ok(AdmitPlan { prompt, blocks, shared })
     }
 
-    /// Longest prefix-index match for a prompt: full blocks along the
-    /// chain, then — only when every full block hit — the whole-prompt
-    /// tail entry covering the trailing partial block.  Each hit is
-    /// `(block, needs_revive)`: a hit on a live block is retained (one
-    /// more reference), a hit on a recently-freed block is revived out
-    /// of the free list.
-    fn match_prefix(p: &PagedState, prompt: &[u32], len: usize)
-        -> Vec<(u32, bool)> {
+    /// Longest prefix-index match for a (canonical) prompt: full blocks
+    /// along the chain, then — only when every full block hit — the
+    /// whole-prompt tail entry covering the trailing partial block.
+    /// Each hit is `(block, needs_revive)`: a hit on a live block is
+    /// retained (one more reference), a hit on a recently-freed block
+    /// is revived out of the free list.
+    fn match_prefix(p: &PagedState, prompt: &[u32]) -> Vec<(u32, bool)> {
+        let len = prompt.len();
         let bs = p.alloc.block_size();
         let full = len / bs;
         let mut shared = Vec::new();
@@ -795,10 +988,14 @@ impl<B: DecodeBackend> Engine<B> {
         });
     }
 
+    /// Commit a lane plus every KV block the prompt needs and park the
+    /// sequence in the Prefilling phase; no prompt token is processed
+    /// here.  A prompt fully served by the prefix index (every row
+    /// already resident) runs its zero-row final chunk immediately — it
+    /// has no prefill work to spread over ticks, only logits to fetch.
     fn admit(&mut self, w: Waiting, plan: AdmitPlan) {
-        let vocab = self.backend.vocab();
-        let block_bytes = self.backend.block_bytes() as u64;
-        let AdmitPlan { prompt, len, bucket, blocks, shared } = plan;
+        let AdmitPlan { prompt, blocks, shared } = plan;
+        let len = prompt.len();
         let Some(slot) = self.slots.alloc(w.request.id) else {
             self.reject(w, "no free KV slot", FinishReason::Rejected);
             return;
@@ -831,65 +1028,227 @@ impl<B: DecodeBackend> Engine<B> {
             }
         }
 
-        // Right-pad the prompt to the bucket length.
-        let mut toks = vec![0i32; bucket];
-        for (i, t) in prompt.iter().take(len).enumerate() {
-            toks[i] = *t as i32;
+        // Rows already resident via the read-only prefix hits.  Hits
+        // are a leading run of full blocks, plus — only when every full
+        // block hit — the whole-prompt tail, in which case the entire
+        // prompt is present and `shared.len() * bs` overshoots `len`.
+        let bs = self
+            .paged
+            .as_ref()
+            .map(|p| p.alloc.block_size())
+            .unwrap_or(1);
+        let shared_rows = (shared.len() * bs).min(len);
+        if self.slots.set_pos(slot, shared_rows).is_err() {
+            self.release_slot(slot);
+            self.reject(w, "slot update failed", FinishReason::Rejected);
+            return;
         }
-        let t0 = Instant::now();
-        let prefilled = match &self.paged {
-            Some(p) => self.backend.prefill_into_paged(
-                slot, &p.tables[slot], &toks, bucket, len, shared.len(),
-            ),
-            None => self.backend.prefill_into(slot, &toks, bucket, len),
+        self.lanes[slot] = Lane::Prefilling(PrefillSeq {
+            request: w.request,
+            reply: w.reply,
+            submitted: w.submitted,
+            prompt,
+            next_row: shared_rows,
+            shared_blocks: shared.len(),
+        });
+        if shared_rows == len {
+            // Whole prompt already resident: the final chunk processes
+            // zero new rows, so run it now for its logits rather than
+            // holding a lane through a no-op Prefilling tick.  (This
+            // also keeps a mid-prefill lane's position out of shared
+            // blocks — see the dead-write note on [`PrefillSeq`].)
+            // Its wall-clock stalls live decodes exactly like a packed
+            // chunk, so it feeds the same gauge.
+            let t0 = Instant::now();
+            self.run_chunk(slot, len);
+            if !self.tick_decode.is_empty() {
+                self.metrics.decode_stall_ns +=
+                    t0.elapsed().as_nanos() as u64;
+            }
+        }
+    }
+
+    /// Fill the tick's remaining token budget with chunked-prefill
+    /// slices, round-robin from a rotating cursor so every Prefilling
+    /// lane keeps making progress.  Returns the prompt rows processed;
+    /// wall-clock spent here while decode lanes were waiting feeds the
+    /// decode-stall gauge.
+    fn prefill_chunks(&mut self, mut left: usize) -> usize {
+        let b = self.lanes.len();
+        if b == 0 || left == 0 {
+            return 0;
+        }
+        let align = self
+            .paged
+            .as_ref()
+            .map(|p| p.alloc.block_size())
+            .unwrap_or(1);
+        let stall_t0 = Instant::now();
+        let decoding = !self.tick_decode.is_empty();
+        let start = self.prefill_cursor % b;
+        let mut packed = 0usize;
+        for off in 0..b {
+            if left == 0 {
+                break;
+            }
+            let slot = (start + off) % b;
+            let Lane::Prefilling(seq) = &self.lanes[slot] else {
+                continue;
+            };
+            let take = batching::chunk_len(
+                seq.prompt.len(),
+                seq.next_row,
+                left,
+                align,
+            );
+            if take == 0 {
+                continue;
+            }
+            let chunk_end = seq.next_row + take;
+            let done = self.run_chunk(slot, chunk_end);
+            packed += done;
+            left = left.saturating_sub(done);
+        }
+        self.prefill_cursor = self.prefill_cursor.wrapping_add(1);
+        if decoding && packed > 0 {
+            self.metrics.decode_stall_ns +=
+                stall_t0.elapsed().as_nanos() as u64;
+        }
+        packed
+    }
+
+    /// Execute one prefill chunk for a Prefilling lane: process prompt
+    /// rows `[next_row, chunk_end)`.  The backend recomputes the whole
+    /// prefix through the existing bucketed b=1 prefill path (the
+    /// bit-exactness oracle; the gated device `prefill_chunk` graph
+    /// fuses it) but installs only rows earlier chunks have not
+    /// finalized.  On the final chunk the first token is sampled (TTFT)
+    /// and the lane transitions to Decoding.  Returns the new rows
+    /// processed; a backend failure releases the lane and answers
+    /// `Rejected`.
+    fn run_chunk(&mut self, slot: usize, chunk_end: usize) -> usize {
+        let vocab = self.backend.vocab();
+        let Some(bucket) =
+            batching::pick_bucket(&self.cfg.prefill_buckets, chunk_end)
+        else {
+            // plan_admission proved the full prompt fits a bucket, and
+            // chunk_end <= len; defensive.
+            self.fail_prefill(slot, "no prefill bucket for chunk");
+            return 0;
         };
-        let logits = match prefilled {
+        let (len, row_offset, shared_blocks, toks) = {
+            let Lane::Prefilling(seq) = &self.lanes[slot] else {
+                unreachable!("chunk on a non-prefilling lane");
+            };
+            debug_assert!(
+                seq.next_row <= chunk_end
+                    && chunk_end <= seq.prompt.len()
+            );
+            // Right-pad the prefix to the chunk's bucket.
+            let mut toks = vec![0i32; bucket];
+            for (i, t) in seq.prompt.iter().take(chunk_end).enumerate()
+            {
+                toks[i] = *t as i32;
+            }
+            (seq.prompt.len(), seq.next_row, seq.shared_blocks, toks)
+        };
+        let t0 = Instant::now();
+        let result = match &self.paged {
+            Some(p) => self.backend.prefill_chunk_paged(
+                slot, &p.tables[slot], &toks, bucket, chunk_end,
+                row_offset, shared_blocks,
+            ),
+            None => self.backend.prefill_chunk(
+                slot, &toks, bucket, chunk_end, row_offset,
+            ),
+        };
+        let logits = match result {
             Ok(l) => l,
             Err(e) => {
-                // Prefill failed after the slot was claimed: release it
-                // (this used to leak) and answer with Rejected instead
-                // of dropping the reply sender.
-                self.release_slot(slot);
-                self.reject(w, &format!("prefill failed: {e:#}"),
-                            FinishReason::Rejected);
-                return;
+                self.fail_prefill(
+                    slot,
+                    &format!("prefill chunk failed: {e:#}"),
+                );
+                return 0;
             }
         };
         self.metrics.prefill_steps += 1;
         self.metrics.prefill_ns += t0.elapsed().as_nanos() as u64;
         if logits.len() < bucket * vocab {
-            self.release_slot(slot);
-            self.reject(w, "prefill returned short logits",
-                        FinishReason::Rejected);
-            return;
+            self.fail_prefill(slot, "prefill returned short logits");
+            return 0;
         }
-        if let Err(e) = self.slots.set_pos(slot, len) {
-            self.release_slot(slot);
-            self.reject(w, &format!("slot update failed: {e:#}"),
-                        FinishReason::Rejected);
-            return;
+        if self.slots.set_pos(slot, chunk_end).is_err() {
+            self.fail_prefill(slot, "slot update failed");
+            return 0;
         }
+        let processed = chunk_end - row_offset;
+        if chunk_end < len {
+            let Lane::Prefilling(seq) = &mut self.lanes[slot] else {
+                unreachable!();
+            };
+            seq.next_row = chunk_end;
+        } else {
+            self.complete_prefill(slot, &logits);
+        }
+        processed
+    }
 
-        // Prefill succeeded: account the sharing win and register this
-        // prompt's freshly-written blocks in the prefix index (only now
-        // — a failed admission must never index garbage blocks).
+    /// A backend error mid-prefill: release the lane + blocks and
+    /// answer `Rejected` (nothing was generated yet).
+    fn fail_prefill(&mut self, slot: usize, why: &str) {
+        let Lane::Prefilling(seq) = self.lanes[slot].take() else {
+            unreachable!("prefill failure on a non-prefilling lane");
+        };
+        self.release_slot(slot);
+        self.reject(
+            Waiting {
+                request: seq.request,
+                reply: seq.reply,
+                submitted: seq.submitted,
+                preempted: false,
+            },
+            why,
+            FinishReason::Rejected,
+        );
+    }
+
+    /// The final chunk landed: account the sharing win, register the
+    /// prompt's freshly-written blocks in the prefix index (only now —
+    /// a partially-prefilled or failed prompt must never be shared),
+    /// sample the first token (TTFT), and move the lane to Decoding.
+    fn complete_prefill(&mut self, slot: usize, logits: &[f32]) {
+        let vocab = self.backend.vocab();
+        let block_bytes = self.backend.block_bytes() as u64;
+        let Lane::Prefilling(pre) = self.lanes[slot].take() else {
+            unreachable!("completion of a non-prefilling lane");
+        };
+        let PrefillSeq {
+            request,
+            reply,
+            submitted,
+            prompt,
+            shared_blocks,
+            ..
+        } = pre;
+        let len = prompt.len();
         if let Some(p) = &mut self.paged {
             if p.sharing {
-                self.metrics.prefix_hit_blocks += shared.len() as u64;
+                self.metrics.prefix_hit_blocks += shared_blocks as u64;
                 self.metrics.prefix_bytes_saved +=
-                    shared.len() as u64 * block_bytes;
+                    shared_blocks as u64 * block_bytes;
                 let bs = p.alloc.block_size();
                 let full = len / bs;
                 let mut parent = PREFIX_SEED;
                 for i in 0..full {
                     let span = &prompt[i * bs..(i + 1) * bs];
-                    if i >= shared.len() {
+                    if i >= shared_blocks {
                         p.index.insert(parent, span,
                                        p.tables[slot].blocks()[i]);
                     }
                     parent = chain_hash(parent, span);
                 }
-                if len % bs != 0 && shared.len() <= full {
+                if len % bs != 0 && shared_blocks <= full {
                     p.index.insert(parent, &prompt[full * bs..len],
                                    p.tables[slot].blocks()[full]);
                 }
@@ -899,49 +1258,58 @@ impl<B: DecodeBackend> Engine<B> {
         // Sample the first generated token from the last prompt position.
         let row = &logits[(len - 1) * vocab..len * vocab];
         let mut seq = ActiveSeq {
-            rng: Rng::new(match w.request.sampling {
-                Sampling::TopK { seed, .. } => seed ^ w.request.id,
-                Sampling::Greedy => w.request.id,
+            rng: Rng::new(match request.sampling {
+                Sampling::TopK { seed, .. } => seed ^ request.id,
+                Sampling::Greedy => request.id,
             }),
-            request: w.request,
-            reply: w.reply,
-            submitted: w.submitted,
+            request,
+            reply,
+            submitted,
             ttft_ms: None,
             swapped_ms: 0.0,
             generated: Vec::new(),
             last_token: 0,
+            last_token_at: Instant::now(),
         };
         let first = sample(row, seq.request.sampling, &mut seq.rng);
         seq.ttft_ms = Some(seq.submitted.elapsed().as_secs_f64() * 1e3);
         seq.generated.push(first);
         seq.last_token = first;
-        self.active[slot] = Some(seq);
+        seq.last_token_at = Instant::now();
+        self.lanes[slot] = Lane::Decoding(seq);
         // The sampled token will be fed at position `len` by decode_step;
         // finish immediately if it is EOS or the request wants one token.
         self.maybe_finish(slot);
     }
 
-    /// Make every active lane's next append writable: grow its table
+    /// Make every decoding lane's next append writable: grow its table
     /// when `pos` crosses a block boundary, and copy-on-write fork the
     /// target block when it is shared (prefix hit still mapped by
-    /// someone else) — a shared block is never mutated in place.  When
+    /// someone else) — a shared block is never mutated in place.
+    /// Prefilling lanes are skipped: their blocks were committed at
+    /// admission and their chunk writes never touch shared rows.  When
     /// the pool runs dry, evict the lowest-priority-then-youngest
-    /// running sequence: its blocks are swapped out to the host pool
-    /// (state preserved, resumed later) or — when the swap pool is full
-    /// or disabled — the request re-enters the queue head for
-    /// re-prefill (deterministic sampling replays the same stream).
+    /// sequence — Prefilling lanes included: a mid-prefill victim is
+    /// requeued (nothing sampled yet), a decoding victim's blocks are
+    /// swapped out to the host pool (state preserved, resumed later)
+    /// or — when the swap pool is full or disabled — the request
+    /// re-enters the queue head for re-prefill (deterministic sampling
+    /// replays the same stream).
     fn ensure_paged_capacity(&mut self) -> Result<()> {
         if self.paged.is_none() {
             return Ok(());
         }
         let bs = self.paged.as_ref().unwrap().alloc.block_size();
         loop {
-            // What does some active lane need before this step's append?
-            // `None` cow = grow; `Some((idx, old))` = fork table entry
-            // `idx` away from shared block `old`.
+            // What does some decoding lane need before this step's
+            // append?  `None` cow = grow; `Some((idx, old))` = fork
+            // table entry `idx` away from shared block `old`.
             let need = {
                 let p = self.paged.as_ref().unwrap();
                 self.slots.active_iter().find_map(|s| {
+                    if !self.lanes[s].is_decoding() {
+                        return None;
+                    }
                     let pos = self.slots.pos(s);
                     if pos >= p.tables[s].capacity_rows(bs) {
                         return Some((s, None));
@@ -983,11 +1351,10 @@ impl<B: DecodeBackend> Engine<B> {
                 .slots
                 .active_iter()
                 .min_by_key(|&x| {
-                    (
-                        self.active[x].as_ref().unwrap().request.priority,
-                        self.slots.pos(x),
-                        x,
-                    )
+                    let r = self.lanes[x]
+                        .request()
+                        .expect("allocated lane has a sequence");
+                    (r.priority, self.slots.pos(x), x)
                 })
                 .expect("needy lane implies an active lane");
             if victim == s && self.slots.active_iter().count() == 1 {
@@ -995,7 +1362,7 @@ impl<B: DecodeBackend> Engine<B> {
                 // straight into the same wall, so finish with what fits.
                 crate::info!(
                     "request {} hit the block pool ceiling",
-                    self.active[s].as_ref().unwrap().request.id
+                    self.lanes[s].request().unwrap().id
                 );
                 self.finish(s, FinishReason::CacheFull);
                 return Ok(());
@@ -1004,15 +1371,40 @@ impl<B: DecodeBackend> Engine<B> {
         }
     }
 
-    /// Evict a running sequence to reclaim KV blocks: block-level
-    /// swap-out when the host pool has room, full re-prefill requeue as
-    /// the fallback.
+    /// Evict a sequence to reclaim KV blocks.  A mid-prefill victim is
+    /// requeued outright (no sampled state exists to preserve — the
+    /// replay is trivially identical); a decoding victim tries a
+    /// block-level swap-out first, with full re-prefill requeue as the
+    /// fallback.
     fn preempt(&mut self, slot: usize) {
         self.metrics.preemptions += 1;
+        if self.lanes[slot].is_prefilling() {
+            let Lane::Prefilling(seq) = self.lanes[slot].take() else {
+                unreachable!();
+            };
+            self.metrics.preempted_prefills += 1;
+            crate::info!(
+                "preempting request {} mid-prefill (slot {slot}, {} of \
+                 {} rows): pool dry",
+                seq.request.id,
+                seq.next_row,
+                seq.prompt.len()
+            );
+            self.release_slot(slot);
+            self.waiting.push_front(Waiting {
+                request: seq.request,
+                reply: seq.reply,
+                submitted: seq.submitted,
+                preempted: true,
+            });
+            return;
+        }
         if self.try_swap_out(slot) {
             return;
         }
-        let seq = self.active[slot].take().expect("preempt of free lane");
+        let Lane::Decoding(seq) = self.lanes[slot].take() else {
+            unreachable!("preempt of free lane");
+        };
         crate::info!(
             "preempting request {} (slot {slot}, {} cache rows): pool dry",
             seq.request.id,
@@ -1060,7 +1452,9 @@ impl<B: DecodeBackend> Engine<B> {
             }
         }
         let pos = self.slots.pos(slot);
-        let seq = self.active[slot].take().expect("swap of free lane");
+        let Lane::Decoding(seq) = self.lanes[slot].take() else {
+            unreachable!("swap of a non-decoding lane");
+        };
         crate::info!(
             "swapping out request {} (slot {slot}, {n} blocks, {} rows)",
             seq.request.id,
@@ -1099,8 +1493,7 @@ impl<B: DecodeBackend> Engine<B> {
                     let prompt =
                         self.canonical_prompt(&head.seq.request.prompt);
                     let full = prompt.len() / p.alloc.block_size();
-                    let mut hits =
-                        Self::match_prefix(p, &prompt, prompt.len());
+                    let mut hits = Self::match_prefix(p, &prompt);
                     hits.truncate(full.min(n));
                     hits
                 } else {
@@ -1182,7 +1575,7 @@ impl<B: DecodeBackend> Engine<B> {
                 seq.request.id
             );
             self.metrics.swap_ins += 1;
-            self.active[slot] = Some(seq);
+            self.lanes[slot] = Lane::Decoding(seq);
         }
     }
 
@@ -1191,7 +1584,18 @@ impl<B: DecodeBackend> Engine<B> {
         if self.paged.is_some() {
             self.ensure_paged_capacity()?;
         }
-        self.slots.active_into(&mut self.scratch_active);
+        // Serve the tick-start snapshot, minus lanes preemption just
+        // evicted (ensure_paged_capacity may swap out or requeue a
+        // snapshotted lane).  Lanes whose final chunk landed this tick
+        // are *not* in the snapshot: they decode from the next tick, so
+        // the budget the snapshot reserved stays exact.
+        self.scratch_active.clear();
+        for i in 0..self.tick_decode.len() {
+            let s = self.tick_decode[i];
+            if self.lanes[s].is_decoding() {
+                self.scratch_active.push(s);
+            }
+        }
         if self.scratch_active.is_empty() {
             return Ok(());
         }
@@ -1199,8 +1603,10 @@ impl<B: DecodeBackend> Engine<B> {
         self.scratch_tokens.resize(b, 0);
         for i in 0..self.scratch_active.len() {
             let s = self.scratch_active[i];
-            self.scratch_tokens[s] =
-                self.active[s].as_ref().unwrap().last_token as i32;
+            let Lane::Decoding(seq) = &self.lanes[s] else {
+                unreachable!();
+            };
+            self.scratch_tokens[s] = seq.last_token as i32;
         }
         self.slots.pos_into(&mut self.scratch_pos);
         let t0 = Instant::now();
@@ -1234,10 +1640,18 @@ impl<B: DecodeBackend> Engine<B> {
         for i in 0..self.scratch_active.len() {
             let s = self.scratch_active[i];
             let row = &logits[s * vsize..(s + 1) * vsize];
-            let seq = self.active[s].as_mut().unwrap();
+            let Lane::Decoding(seq) = &mut self.lanes[s] else {
+                unreachable!();
+            };
             let tok = sample(row, seq.request.sampling, &mut seq.rng);
             seq.generated.push(tok);
             seq.last_token = tok;
+            let now = Instant::now();
+            self.metrics.itl_ms.record(
+                now.duration_since(seq.last_token_at).as_secs_f64()
+                    * 1e3,
+            );
+            seq.last_token_at = now;
             self.metrics.tokens_generated += 1;
             self.maybe_finish(s);
         }
@@ -1248,7 +1662,9 @@ impl<B: DecodeBackend> Engine<B> {
         let t_max = self.backend.t_max();
         let pos = self.slots.pos(slot);
         let finish = {
-            let seq = self.active[slot].as_ref().unwrap();
+            let Lane::Decoding(seq) = &self.lanes[slot] else {
+                unreachable!("finish check on a non-decoding lane");
+            };
             if seq.generated.last() == Some(&self.eos) {
                 Some(FinishReason::Eos)
             } else if seq.generated.len() >= seq.request.max_new_tokens {
@@ -1267,7 +1683,9 @@ impl<B: DecodeBackend> Engine<B> {
     /// Complete a running sequence: release its lane + blocks and send
     /// the response.
     fn finish(&mut self, slot: usize, reason: FinishReason) {
-        let seq = self.active[slot].take().unwrap();
+        let Lane::Decoding(seq) = self.lanes[slot].take() else {
+            unreachable!("finish of a non-decoding lane");
+        };
         self.release_slot(slot);
         let total_ms = seq.submitted.elapsed().as_secs_f64() * 1e3;
         self.metrics.completed += 1;

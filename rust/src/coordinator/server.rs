@@ -167,7 +167,19 @@ fn route(
                     ("rejected", json::num(m.rejected as f64)),
                     ("expired", json::num(m.expired as f64)),
                     ("waiting", json::num(m.waiting as f64)),
+                    ("prefilling", json::num(m.prefilling as f64)),
+                    ("tokens_per_step",
+                     json::num(m.tokens_per_step as f64)),
+                    ("packed_tokens_mean",
+                     json::num(m.packed_tokens.mean())),
+                    ("packed_tokens_max",
+                     json::num(m.packed_tokens.max())),
+                    ("packed_prefill_tokens_mean",
+                     json::num(m.packed_prefill_tokens.mean())),
+                    ("decode_stall_ms", json::num(m.decode_stall_ms())),
                     ("preemptions", json::num(m.preemptions as f64)),
+                    ("preempted_prefills",
+                     json::num(m.preempted_prefills as f64)),
                     ("swap_outs", json::num(m.swap_outs as f64)),
                     ("swap_ins", json::num(m.swap_ins as f64)),
                     ("swap_fallbacks",
@@ -200,6 +212,8 @@ fn route(
                      json::num(m.mean_batch_occupancy())),
                     ("ttft_ms_p50", json::num(m.ttft_ms.percentile(50.0))),
                     ("ttft_ms_p99", json::num(m.ttft_ms.percentile(99.0))),
+                    ("itl_ms_p50", json::num(m.itl_ms.percentile(50.0))),
+                    ("itl_ms_p99", json::num(m.itl_ms.percentile(99.0))),
                 ])
                 .to_string(),
             ),

@@ -17,10 +17,18 @@
 //! * `Host` appends rows only for active lanes and copies only the `len`
 //!   valid prefill rows — like the legacy [`crate::kvcache::HostKvMirror`]
 //!   path;
-//! * `Device` writes a row for **every** lane each step (free lanes get a
-//!   dead row at their position 0, as the lowered `decode_dev`
-//!   dynamic-update-slice lattice does) and scatters the **whole**
-//!   right-padded prefill block — like the `kvwrite` graph.
+//! * `Device` writes a row for **every** lane each step (free and
+//!   mid-prefill lanes get a dead row at their position, as the lowered
+//!   `decode_dev` dynamic-update-slice lattice does) and scatters the
+//!   **whole** right-padded slice of each prefill chunk — like the
+//!   `kvwrite` graph.
+//!
+//! Prefill arrives in chunks (DESIGN.md §12): each
+//! [`DecodeBackend::prefill_chunk`] computes only its slice's logits,
+//! *reading* rows earlier chunks installed out of the backing cache —
+//! the cost shape of a real chunk graph, and a stronger oracle than
+//! recomputation, since corrupting an installed row now changes every
+//! later chunk.  A monolithic prefill is just the single-chunk case.
 //!
 //! The golden test asserts both modes produce identical token streams
 //! over a multi-request continuous-batching trace, which is the same
@@ -61,7 +69,7 @@ pub struct FakeBackend {
     /// [`PagedHostKv`] store, so the golden tests exercise its layout
     /// rather than a re-implementation.
     paged: Option<(PagedHostKv, usize)>, // (pool, block_size)
-    /// Fail `prefill_into` when the prompt's first token equals this —
+    /// Fail `prefill_chunk` when the prompt's first token equals this —
     /// lets tests exercise the admission-failure path after slot alloc.
     pub fail_prefill_token: Option<i32>,
 }
@@ -216,38 +224,75 @@ impl FakeBackend {
         }
     }
 
-    /// Staged prefill shared by the flat and paged entry points:
-    /// per-position logits plus the K/V rows the prompt produces
-    /// (cache-independent, like the real prefill graph).
-    fn staged_prefill(&self, toks: &[i32], bucket: usize)
-        -> (Vec<f32>, Vec<(f32, f32)>) {
-        let mut logits = Vec::with_capacity(bucket * self.vocab);
-        let mut rows: Vec<(f32, f32)> =
-            vec![(0.0, 0.0); self.layers * bucket * self.d];
-        for (p, &tok) in toks.iter().enumerate() {
+    /// One cached K/V element of the lane: the flat `(slot, q)` cell, or
+    /// the block pool through the lane's table.
+    fn cache_row(
+        &self,
+        slot: usize,
+        table: Option<&BlockTable>,
+        l: usize,
+        q: usize,
+        j: usize,
+    ) -> (f32, f32) {
+        match table {
+            None => {
+                let idx = self.at(l, slot, q, j);
+                (self.k[idx], self.v[idx])
+            }
+            Some(t) => {
+                let (store, bs) = self.paged.as_ref().expect("paged");
+                let (block, off) = Self::physical_or_sentinel(t, q, *bs);
+                let (kr, vr) = store.rows_at(l, block, off);
+                (kr[j], vr[j])
+            }
+        }
+    }
+
+    /// Logits of a chunked-prefill slice: positions `[row_offset, len)`
+    /// (clamped so the final zero-row chunk of a fully-shared prompt
+    /// still yields row `len - 1`), each attending to rows below
+    /// `row_offset` *read out of the backing cache* and to the slice's
+    /// own freshly derived rows.  This is the true cost shape of a
+    /// chunk graph — O(slice × prefix) instead of `O(prefix²)` — and it
+    /// makes every later chunk *read* what earlier chunks wrote, so a
+    /// scheduler bug that corrupts installed rows changes the stream.
+    /// The accumulation order matches `lane_logits`/the monolithic
+    /// prefill exactly, so chunked and monolithic logits are
+    /// bit-identical.  Rows outside the slice are left zero; the engine
+    /// only samples from row `len - 1` of the final chunk.
+    fn chunk_logits(
+        &self,
+        slot: usize,
+        table: Option<&BlockTable>,
+        toks: &[i32],
+        bucket: usize,
+        len: usize,
+        row_offset: usize,
+    ) -> Vec<f32> {
+        let mut logits = vec![0.0f32; bucket * self.vocab];
+        let start = row_offset.min(len.saturating_sub(1));
+        for p in start..len {
             let mut s = 0.0f64;
             for l in 0..self.layers {
                 for q in 0..p {
                     for j in 0..self.d {
                         let w = ((l + 3 * q + 7 * j) % 13 + 1) as f64;
-                        let (kv, vv) = rows[(l * bucket + q) * self.d + j];
-                        s += kv as f64 * w + vv as f64 * (w + 0.5);
+                        let (kq, vq) = if q < row_offset {
+                            self.cache_row(slot, table, l, q, j)
+                        } else {
+                            Self::kv_row(l, toks[q], q, j)
+                        };
+                        s += kq as f64 * w + vq as f64 * (w + 0.5);
                     }
                 }
             }
-            s += tok as f64 * 0.618;
-            logits.extend(
-                (0..self.vocab)
-                    .map(|vv| ((s * (vv as f64 + 1.0)).sin()) as f32),
-            );
-            for l in 0..self.layers {
-                for j in 0..self.d {
-                    rows[(l * bucket + p) * self.d + j] =
-                        Self::kv_row(l, tok, p, j);
-                }
+            s += toks[p] as f64 * 0.618;
+            for vv in 0..self.vocab {
+                logits[p * self.vocab + vv] =
+                    ((s * (vv as f64 + 1.0)).sin()) as f32;
             }
         }
-        (logits, rows)
+        logits
     }
 }
 
@@ -264,27 +309,34 @@ impl DecodeBackend for FakeBackend {
         self.batch
     }
 
-    fn prefill_into(
+    fn prefill_chunk(
         &mut self,
         slot: usize,
         toks: &[i32],
         bucket: usize,
         len: usize,
+        row_offset: usize,
     ) -> Result<Vec<f32>> {
         anyhow::ensure!(toks.len() == bucket, "prefill bucket");
+        anyhow::ensure!(row_offset <= len, "chunk offset past len");
         if self.fail_prefill_token == Some(toks[0]) {
             anyhow::bail!("injected prefill failure");
         }
-        let (logits, rows) = self.staged_prefill(toks, bucket);
-        // Install into the backing cache with the mode's write pattern.
+        let logits =
+            self.chunk_logits(slot, None, toks, bucket, len, row_offset);
+        // Install the slice with the mode's write pattern.  Unlike the
+        // real `kvwrite` path (which re-scatters the whole padded block
+        // each chunk), the fake emulates a *true* chunk graph and only
+        // writes from `row_offset` — the stricter discipline, so a
+        // scheduler bug that depends on re-writes shows up here.
         let copy_rows = match self.mode {
             FakeCacheMode::Host => len,      // only valid rows
-            FakeCacheMode::Device => bucket, // whole padded block (DUS)
+            FakeCacheMode::Device => bucket, // whole padded slice (DUS)
         };
-        for p in 0..copy_rows.min(self.t_max) {
+        for p in row_offset..copy_rows.min(self.t_max) {
             for l in 0..self.layers {
                 for j in 0..self.d {
-                    let (kv, vv) = rows[(l * bucket + p) * self.d + j];
+                    let (kv, vv) = Self::kv_row(l, toks[p], p, j);
                     let idx = self.at(l, slot, p, j);
                     self.k[idx] = kv;
                     self.v[idx] = vv;
@@ -298,35 +350,43 @@ impl DecodeBackend for FakeBackend {
         self.paged.is_some()
     }
 
-    fn prefill_into_paged(
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_chunk_paged(
         &mut self,
         _slot: usize,
         table: &BlockTable,
         toks: &[i32],
         bucket: usize,
         len: usize,
+        row_offset: usize,
         shared_blocks: usize,
     ) -> Result<Vec<f32>> {
         anyhow::ensure!(toks.len() == bucket, "prefill bucket");
+        anyhow::ensure!(row_offset <= len, "chunk offset past len");
         anyhow::ensure!(self.paged.is_some(), "not a paged backend");
         if self.fail_prefill_token == Some(toks[0]) {
             anyhow::bail!("injected prefill failure");
         }
-        let (logits, rows) = self.staged_prefill(toks, bucket);
+        let logits = self.chunk_logits(
+            _slot, Some(table), toks, bucket, len, row_offset,
+        );
         // Same per-mode write pattern as the flat path, but addressed
-        // through the block table; Device-mode padding chunks beyond the
-        // table land in the sentinel block (kvwrite_paged contract).
-        // The first `shared_blocks` table entries are read-only prefix
-        // hits: Host mode skips their rows (the bytes are already
-        // there), Device mode parks the whole chunk's writes in the
-        // sentinel — either way a shared block is never mutated.
+        // through the block table and starting at the chunk offset
+        // (earlier rows belong to previous chunks and are never
+        // re-touched — the true-chunk-graph discipline); Device-mode
+        // padding rows beyond the table land in the sentinel block
+        // (kvwrite_paged contract).  The first `shared_blocks` table
+        // entries are read-only prefix hits: Host mode skips their rows
+        // (the bytes are already there), Device mode parks the whole
+        // chunk's writes in the sentinel — either way a shared block is
+        // never mutated.
         let copy_rows = match self.mode {
             FakeCacheMode::Host => len,
             FakeCacheMode::Device => bucket,
         };
         let (layers, d, mode) = (self.layers, self.d, self.mode);
         let (store, bs) = self.paged.as_mut().unwrap();
-        for p in 0..copy_rows.min(self.t_max) {
+        for p in row_offset..copy_rows.min(self.t_max) {
             if p / *bs < shared_blocks {
                 if mode == FakeCacheMode::Host {
                     continue; // row already present in the shared block
@@ -336,7 +396,7 @@ impl DecodeBackend for FakeBackend {
                     let (kr, vr) =
                         store.rows_at_mut(l, SENTINEL_BLOCK, p % *bs);
                     for j in 0..d {
-                        let (kv, vv) = rows[(l * bucket + p) * d + j];
+                        let (kv, vv) = Self::kv_row(l, toks[p], p, j);
                         kr[j] = kv;
                         vr[j] = vv;
                     }
@@ -352,7 +412,7 @@ impl DecodeBackend for FakeBackend {
             for l in 0..layers {
                 let (kr, vr) = store.rows_at_mut(l, block, off);
                 for j in 0..d {
-                    let (kv, vv) = rows[(l * bucket + p) * d + j];
+                    let (kv, vv) = Self::kv_row(l, toks[p], p, j);
                     kr[j] = kv;
                     vr[j] = vv;
                 }

@@ -9,6 +9,7 @@
 //! lqer serve-bench                    batched serving load test
 //! lqer bench kv                       paged-KV engine bench (no PJRT)
 //! lqer bench kvshared                 prefix-sharing / swap bench (no PJRT)
+//! lqer bench chunked                  chunked-prefill ITL bench (no PJRT)
 //! lqer eval-ppl  --model --method     WikiText-style perplexity (Tables 2/3/6)
 //! lqer eval-tasks --model --method    downstream accuracy (Table 4)
 //! lqer judge     --a --b              pairwise win rate (Table 5)
@@ -100,10 +101,49 @@ fn info(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the per-tick token budget from the CLI.  `--tokens-per-step`
+/// is the real knob (0 = engine default: batch + largest prefill
+/// bucket); the deprecated `--max-prefill-per-step N` is kept as a
+/// parsed alias — N whole prefills of the largest bucket per tick, its
+/// legacy unit — so existing scripts and CI invocations keep working,
+/// with a one-time warning.
+fn tokens_per_step_arg(a: &Args, m: &Manifest, batch: usize)
+    -> Result<usize> {
+    let legacy = a.get("max-prefill-per-step");
+    if legacy.is_empty() {
+        return a.get_usize("tokens-per-step");
+    }
+    anyhow::ensure!(
+        a.get_usize("tokens-per-step")? == 0,
+        "--max-prefill-per-step (deprecated) conflicts with \
+         --tokens-per-step; set only the latter"
+    );
+    static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+    WARN_ONCE.call_once(|| {
+        eprintln!(
+            "warning: --max-prefill-per-step is deprecated; use \
+             --tokens-per-step (per-tick token budget, DESIGN.md §12). \
+             Mapping N whole-bucket prefills to an equivalent budget."
+        );
+    });
+    let n: usize = legacy.parse().map_err(|_| {
+        anyhow::anyhow!("--max-prefill-per-step must be an integer")
+    })?;
+    let max_bucket = m
+        .serve
+        .prefill_shapes
+        .iter()
+        .map(|(_, t)| *t)
+        .max()
+        .unwrap_or(1);
+    Ok(batch + n.max(1) * max_bucket)
+}
+
 #[allow(clippy::too_many_arguments)]
 fn engine_cfg(m: &Manifest, model: &str, method: &str, batch: usize,
-              host_cache: bool, paged: bool, prefix_share: bool,
-              swap_blocks: usize) -> Result<EngineConfig> {
+              tokens_per_step: usize, host_cache: bool, paged: bool,
+              prefix_share: bool, swap_blocks: usize)
+              -> Result<EngineConfig> {
     anyhow::ensure!(
         paged || (!prefix_share && swap_blocks == 0),
         "--prefix-share / --swap-blocks require --paged"
@@ -152,7 +192,7 @@ fn engine_cfg(m: &Manifest, model: &str, method: &str, batch: usize,
             .iter()
             .map(|(_, t)| *t)
             .collect(),
-        max_prefill_per_step: 2,
+        tokens_per_step,
         host_cache,
         paged: paged_cfg,
         admission: AdmissionPolicy::default(),
@@ -166,6 +206,13 @@ fn serve(argv: &[String]) -> Result<()> {
         .opt("method", "l2qer-w4a8", "PTQ method")
         .opt("addr", "127.0.0.1:8317", "listen address")
         .opt("batch", "8", "decode batch bucket")
+        .opt("tokens-per-step", "0",
+             "per-tick token budget (DESIGN.md \u{a7}12): decoding lanes \
+              first, the rest packed with chunked-prefill slices \
+              (0 = batch + largest prefill bucket)")
+        .opt("max-prefill-per-step", "",
+             "deprecated alias: N whole-bucket prefills per tick \
+              (mapped to a token budget; prefer --tokens-per-step)")
         .flag("host-cache", "legacy host-side KV cache (oracle mode)")
         .flag("paged", "block-granular KV allocation (DESIGN.md §10)")
         .flag("prefix-share",
@@ -177,10 +224,12 @@ fn serve(argv: &[String]) -> Result<()> {
         .parse(argv)?;
     let tok = lqer::tokenizer::Tokenizer::from_file(
         &m.data_dir().join("vocab.json"))?;
+    let batch = a.get_usize("batch")?;
     let engine = EngineHandle::spawn(
         m.dir.clone(),
-        engine_cfg(&m, &a.get("model"), &a.get("method"),
-                   a.get_usize("batch")?, a.get_flag("host-cache"),
+        engine_cfg(&m, &a.get("model"), &a.get("method"), batch,
+                   tokens_per_step_arg(&a, &m, batch)?,
+                   a.get_flag("host-cache"),
                    a.get_flag("paged"), a.get_flag("prefix-share"),
                    a.get_usize("swap-blocks")?)?,
     )?;
@@ -199,6 +248,13 @@ fn generate(argv: &[String]) -> Result<()> {
         .opt("max-new", "24", "max generated tokens")
         .opt("topk", "0", "top-k sampling (0 = greedy)")
         .opt("batch", "4", "decode batch bucket")
+        .opt("tokens-per-step", "0",
+             "per-tick token budget (DESIGN.md \u{a7}12): decoding lanes \
+              first, the rest packed with chunked-prefill slices \
+              (0 = batch + largest prefill bucket)")
+        .opt("max-prefill-per-step", "",
+             "deprecated alias: N whole-bucket prefills per tick \
+              (mapped to a token budget; prefer --tokens-per-step)")
         .flag("host-cache", "legacy host-side KV cache (oracle mode)")
         .flag("paged", "block-granular KV allocation (DESIGN.md §10)")
         .flag("prefix-share",
@@ -211,10 +267,12 @@ fn generate(argv: &[String]) -> Result<()> {
         .parse(argv)?;
     let tok = lqer::tokenizer::Tokenizer::from_file(
         &m.data_dir().join("vocab.json"))?;
+    let batch = a.get_usize("batch")?;
     let engine = EngineHandle::spawn(
         m.dir.clone(),
-        engine_cfg(&m, &a.get("model"), &a.get("method"),
-                   a.get_usize("batch")?, a.get_flag("host-cache"),
+        engine_cfg(&m, &a.get("model"), &a.get("method"), batch,
+                   tokens_per_step_arg(&a, &m, batch)?,
+                   a.get_flag("host-cache"),
                    a.get_flag("paged"), a.get_flag("prefix-share"),
                    a.get_usize("swap-blocks")?)?,
     )?;
@@ -250,6 +308,13 @@ fn serve_bench(argv: &[String]) -> Result<()> {
         .opt("requests", "16", "number of requests")
         .opt("max-new", "24", "tokens per request")
         .opt("batch", "8", "decode batch bucket")
+        .opt("tokens-per-step", "0",
+             "per-tick token budget (DESIGN.md \u{a7}12): decoding lanes \
+              first, the rest packed with chunked-prefill slices \
+              (0 = batch + largest prefill bucket)")
+        .opt("max-prefill-per-step", "",
+             "deprecated alias: N whole-bucket prefills per tick \
+              (mapped to a token budget; prefer --tokens-per-step)")
         .flag("host-cache", "legacy host-side KV cache (oracle mode)")
         .flag("paged", "block-granular KV allocation (DESIGN.md §10)")
         .flag("prefix-share",
@@ -259,10 +324,12 @@ fn serve_bench(argv: &[String]) -> Result<()> {
              "host swap pool size in blocks (0 = re-prefill on \
               preemption; needs --paged --host-cache)")
         .parse(argv)?;
+    let batch = a.get_usize("batch")?;
     let stats = lqer::coordinator::loadtest::run_loadtest(
         &m,
-        &engine_cfg(&m, &a.get("model"), &a.get("method"),
-                    a.get_usize("batch")?, a.get_flag("host-cache"),
+        &engine_cfg(&m, &a.get("model"), &a.get("method"), batch,
+                    tokens_per_step_arg(&a, &m, batch)?,
+                    a.get_flag("host-cache"),
                     a.get_flag("paged"), a.get_flag("prefix-share"),
                     a.get_usize("swap-blocks")?)?,
         a.get_usize("requests")?,
@@ -276,7 +343,7 @@ fn serve_bench(argv: &[String]) -> Result<()> {
 /// artifacts or PJRT (they drive the deterministic FakeBackend).
 fn bench(argv: &[String]) -> Result<()> {
     let a = Args::new("bench", "synthetic engine benchmarks")
-        .pos("suite", "bench suite: kv | kvshared")
+        .pos("suite", "bench suite: kv | kvshared | chunked")
         .opt("batch", "4", "decode lanes")
         .opt("requests", "16", "concurrent requests (4x lanes default)")
         .opt("max-new", "12", "max tokens per request")
@@ -287,8 +354,10 @@ fn bench(argv: &[String]) -> Result<()> {
     match a.get_pos(0) {
         Some("kv") => bench_kv(&a),
         Some("kvshared") => bench_kvshared(&a),
+        Some("chunked") => bench_chunked(&a),
         other => anyhow::bail!(
-            "unknown bench suite {:?} (expected: kv, kvshared)", other
+            "unknown bench suite {:?} (expected: kv, kvshared, chunked)",
+            other
         ),
     }
 }
@@ -366,7 +435,7 @@ fn bench_kv(a: &Args) -> Result<()> {
         method: "fake".into(),
         decode_batch: batch,
         prefill_buckets: buckets.clone(),
-        max_prefill_per_step: 2,
+        tokens_per_step: 0, // auto: batch + largest bucket
         host_cache: true,
         paged: None,
         admission: AdmissionPolicy::default(),
@@ -536,7 +605,7 @@ fn bench_kvshared(a: &Args) -> Result<()> {
             method: "fake".into(),
             decode_batch: requests,
             prefill_buckets: buckets.clone(),
-            max_prefill_per_step: 2,
+            tokens_per_step: 0, // auto: batch + largest bucket
             host_cache: false,
             paged: Some(PagedKvConfig {
                 block_size: BS,
@@ -677,6 +746,189 @@ fn bench_kvshared(a: &Args) -> Result<()> {
     println!(
         "admission capacity: shared {} vs unshared {} ({ratio:.1}x)",
         shared_m.completed, unshared_m.completed
+    );
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Chunked-prefill inter-token-latency bench (DESIGN.md §12), on the
+/// deterministic FakeBackend under a mixed long-prompt/short-decode
+/// overload: long prompts keep being admitted while short sequences
+/// decode.  Two identical paged engines differ only in the per-tick
+/// token budget —
+///
+/// * **chunked**: `batch + block_size`, so a long prompt streams in
+///   block-sized slices and each tick's prefill work is bounded;
+/// * **monolithic**: `batch + largest bucket`, so a whole prompt
+///   prefills inside one tick (the legacy admit-then-decode behavior)
+///   and every running decode stalls behind it.
+///
+/// The headline number is the p99 inter-token latency of the decode
+/// stream (`itl_ms`); the JSON also records the decode-stall gauge and
+/// per-tick packed-token stats.  `itl_p99_speedup` (monolithic p99 /
+/// chunked p99) is the guarded ratio — wall-clock based, so the CI
+/// guard treats it like the other machine-dependent bench metrics.
+fn bench_chunked(a: &Args) -> Result<()> {
+    use lqer::coordinator::testbackend::{FakeBackend, FakeCacheMode};
+    use lqer::coordinator::{Engine, EngineMetrics};
+    use lqer::util::json;
+    use lqer::util::rng::Rng;
+
+    // A model big enough that a 96-token prefill costs real wall-clock
+    // on the fake backend (the stall being measured), while one decode
+    // step stays cheap.
+    const VOCAB: usize = 48;
+    const LAYERS: usize = 4;
+    const DIM: usize = 32;
+    const T_MAX: usize = 128;
+    const BS: usize = 16;
+    // EOS outside the vocab: streams run to max_new_tokens, so both
+    // engines sample identical ITL counts.
+    const NO_EOS: u32 = VOCAB as u32 + 1;
+    let buckets = vec![16usize, 96];
+
+    let batch = a.get_usize("batch")?;
+    let requests = a.get_usize("requests")?.max(12);
+    let usable = batch * T_MAX / BS; // same memory as a flat cache
+
+    // Mixed overload: every 4th request is a long prompt (~5 blocks),
+    // the rest are short prompts that decode for a while — their token
+    // gaps are what the long prefills stall.
+    let mk_requests = || -> Vec<Request> {
+        let mut rng = Rng::new(7);
+        (0..requests as u64)
+            .map(|i| {
+                let long = i % 4 == 2;
+                let plen = if long {
+                    80 + rng.below(11)
+                } else {
+                    2 + rng.below(5)
+                };
+                Request {
+                    id: i + 1,
+                    prompt: (0..plen)
+                        .map(|_| rng.below(VOCAB) as u32)
+                        .collect(),
+                    max_new_tokens: if long { 4 } else { 24 },
+                    sampling: Sampling::Greedy,
+                    priority: Priority::Normal,
+                }
+            })
+            .collect()
+    };
+
+    let drive = |tokens_per_step: usize| -> Result<EngineMetrics> {
+        let cfg = EngineConfig {
+            model: "fake".into(),
+            method: "fake".into(),
+            decode_batch: batch,
+            prefill_buckets: buckets.clone(),
+            tokens_per_step,
+            host_cache: false,
+            paged: Some(PagedKvConfig {
+                block_size: BS,
+                num_blocks: usable + 1,
+                prefix_sharing: false,
+                swap_blocks: 0,
+            }),
+            admission: AdmissionPolicy::Wait {
+                queue_depth: requests.max(16),
+                deadline_ms: 0,
+            },
+        };
+        let mut engine = Engine::with_backend(
+            FakeBackend::new_paged(
+                FakeCacheMode::Host, VOCAB, LAYERS, DIM, T_MAX, batch,
+                usable + 1, BS,
+            ),
+            cfg,
+            NO_EOS,
+        );
+        let mut rxs = Vec::new();
+        for r in mk_requests() {
+            let (tx, rx) = std::sync::mpsc::channel();
+            engine.enqueue(r, tx);
+            rxs.push(rx);
+        }
+        let mut guard = 0;
+        while engine.has_work() {
+            engine.tick();
+            guard += 1;
+            anyhow::ensure!(guard < 1_000_000, "engine did not drain");
+        }
+        for rx in rxs {
+            rx.recv().map_err(|_| anyhow::anyhow!("reply dropped"))?;
+        }
+        Ok(engine.metrics_snapshot())
+    };
+
+    let chunked_budget = batch + BS;
+    let mono_budget = batch + buckets.iter().max().copied().unwrap();
+    let chunked_m = drive(chunked_budget)?;
+    let mono_m = drive(mono_budget)?;
+    let speedup = mono_m.itl_ms.percentile(99.0)
+        / chunked_m.itl_ms.percentile(99.0).max(1e-9);
+
+    let side = |m: &EngineMetrics| {
+        json::obj(vec![
+            ("completed", json::num(m.completed as f64)),
+            ("tokens", json::num(m.tokens_generated as f64)),
+            ("itl_ms_p50", json::num(m.itl_ms.percentile(50.0))),
+            ("itl_ms_p99", json::num(m.itl_ms.percentile(99.0))),
+            ("itl_ms_max", json::num(m.itl_ms.max())),
+            ("ttft_ms_p99", json::num(m.ttft_ms.percentile(99.0))),
+            ("decode_stall_ms", json::num(m.decode_stall_ms())),
+            ("packed_tokens_mean", json::num(m.packed_tokens.mean())),
+            ("packed_tokens_max", json::num(m.packed_tokens.max())),
+            ("prefill_chunks", json::num(m.prefill_steps as f64)),
+            ("tokens_per_sec", json::num(m.decode_tokens_per_sec())),
+        ])
+    };
+    let out = json::obj(vec![
+        ("suite", json::s("chunked")),
+        ("lanes", json::num(batch as f64)),
+        ("requests", json::num(requests as f64)),
+        ("block_size", json::num(BS as f64)),
+        ("chunked_tokens_per_step", json::num(chunked_budget as f64)),
+        ("monolithic_tokens_per_step", json::num(mono_budget as f64)),
+        ("chunked", side(&chunked_m)),
+        ("monolithic", side(&mono_m)),
+        ("itl_p99_speedup", json::num(speedup)),
+    ]);
+    let path = match a.get("out").as_str() {
+        "" => "BENCH_chunked.json".to_string(),
+        p => p.to_string(),
+    };
+    std::fs::write(&path, out.to_string())?;
+
+    let mut t = Table::new(
+        &format!(
+            "chunked-prefill ITL bench — {requests} requests x {batch} \
+             lanes (block {BS} rows)"
+        ),
+        &["engine", "budget/tick", "itl p50", "itl p99", "itl max",
+          "stall ms", "chunks"],
+    );
+    for (name, budget, m) in [
+        ("chunked", chunked_budget, &chunked_m),
+        ("monolithic", mono_budget, &mono_m),
+    ] {
+        t.row(vec![
+            name.into(),
+            budget.to_string(),
+            format!("{:.2}", m.itl_ms.percentile(50.0)),
+            format!("{:.2}", m.itl_ms.percentile(99.0)),
+            format!("{:.2}", m.itl_ms.max()),
+            format!("{:.1}", m.decode_stall_ms()),
+            m.prefill_steps.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "p99 inter-token latency: monolithic {:.2} ms vs chunked \
+         {:.2} ms ({speedup:.2}x)",
+        mono_m.itl_ms.percentile(99.0),
+        chunked_m.itl_ms.percentile(99.0)
     );
     println!("wrote {path}");
     Ok(())

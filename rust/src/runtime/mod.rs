@@ -499,6 +499,38 @@ impl DeviceKvSession {
         Ok(logits)
     }
 
+    /// One fused chunked-prefill step (`prefill_chunk` graph,
+    /// DESIGN.md §12): uploads the prefix tokens, computes the prefill
+    /// in-graph, scatters the listed chunks' K/V into their pool blocks
+    /// (sentinel ids mark chunks earlier ticks already installed, plus
+    /// right-padding), retains the updated caches on device, and
+    /// downloads only the `(1, t, vocab)` logits.
+    pub fn prefill_chunk_paged(
+        &mut self,
+        rt: &Runtime,
+        exe: &Executable,
+        toks: &[i32],
+        block_ids: &[i32],
+    ) -> Result<HostTensor> {
+        anyhow::ensure!(self.block_size > 0, "session is not paged");
+        let t = toks.len();
+        let outs = exe.call_staged(
+            rt,
+            &[
+                Input::I32(toks, vec![1, t]),
+                Input::Device(&self.k),
+                Input::Device(&self.v),
+                Input::I32(block_ids, vec![block_ids.len()]),
+            ],
+            &[false, true, true],
+        )?;
+        let mut it = outs.into_iter();
+        let logits = expect_host(it.next())?;
+        self.k = expect_device(it.next())?;
+        self.v = expect_device(it.next())?;
+        Ok(logits)
+    }
+
     /// Scatter device-retained prefill outputs (`(L, 1, t, d)`) into the
     /// pool blocks listed in `block_ids` (one id per `block_size`-row
     /// chunk; padding chunks carry the sentinel id) via the
@@ -573,7 +605,8 @@ impl ModelRunner {
     fn outputs_for(entry: &str) -> usize {
         match entry {
             "score" => 1,
-            "prefill" | "decode" | "decode_dev" | "decode_paged" => 3,
+            "prefill" | "decode" | "decode_dev" | "decode_paged"
+            | "prefill_chunk" => 3,
             "kvwrite" | "kvwrite_paged" => 2,
             _ => 1,
         }
@@ -779,9 +812,36 @@ impl ModelRunner {
         session.decode_paged(rt, &exe, token, pos, &flat, b, max_blocks)
     }
 
+    /// Block-id operand of a chunked paged prefill scatter: one id per
+    /// `block_size`-row chunk of the `t`-row bucket.  Chunks fully
+    /// below `from_row` were installed by earlier ticks and chunks past
+    /// the table are right-padding — both park in the sentinel, so a
+    /// chunk write never re-touches finalized blocks.
+    fn chunk_block_ids(
+        table: &BlockTable,
+        t: usize,
+        block_size: usize,
+        from_row: usize,
+    ) -> Vec<i32> {
+        (0..t / block_size)
+            .map(|c| {
+                if (c + 1) * block_size <= from_row {
+                    return SENTINEL_BLOCK as i32;
+                }
+                table
+                    .blocks()
+                    .get(c)
+                    .map(|&id| id as i32)
+                    .unwrap_or(SENTINEL_BLOCK as i32)
+            })
+            .collect()
+    }
+
     /// Scatter retained prefill outputs into pool blocks
     /// (`kvwrite_paged` graph for prefill bucket `t`): one block id per
-    /// `block_size`-row chunk, padding chunks parked in the sentinel.
+    /// `block_size`-row chunk, with chunks below `from_row` (already
+    /// installed by earlier prefill chunks) and padding chunks parked
+    /// in the sentinel.  A monolithic prefill passes `from_row == 0`.
     #[allow(clippy::too_many_arguments)]
     pub fn write_prefill_resident_paged(
         &self,
@@ -792,6 +852,7 @@ impl ModelRunner {
         k_pre: &xla::PjRtBuffer,
         v_pre: &xla::PjRtBuffer,
         t: usize,
+        from_row: usize,
     ) -> Result<()> {
         anyhow::ensure!(session.block_size > 0, "session is not paged");
         anyhow::ensure!(
@@ -799,21 +860,45 @@ impl ModelRunner {
             "prefill bucket {t} not a multiple of block_size {}",
             session.block_size
         );
-        let n_chunks = t / session.block_size;
-        let ids: Vec<i32> = (0..n_chunks)
-            .map(|c| {
-                table
-                    .blocks()
-                    .get(c)
-                    .map(|&id| id as i32)
-                    .unwrap_or(SENTINEL_BLOCK as i32)
-            })
-            .collect();
+        let ids =
+            Self::chunk_block_ids(table, t, session.block_size, from_row);
         let exe = self.executable(
             rt, manifest, "kvwrite_paged",
             session.num_blocks(), t,
         )?;
         session.write_prefill_paged(rt, &exe, k_pre, v_pre, &ids)
+    }
+
+    /// One fused chunked-prefill step (`prefill_chunk` graph, gated on
+    /// artifacts carrying manifest `serve.chunk`): computes the
+    /// `t`-bucket prefill of `toks` and scatters only the chunks at or
+    /// above `from_row` into their table blocks, caches staying
+    /// resident.  Returns the prefill logits.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill_chunk_resident_paged(
+        &self,
+        rt: &Runtime,
+        manifest: &crate::config::Manifest,
+        session: &mut DeviceKvSession,
+        table: &BlockTable,
+        toks: &[i32],
+        t: usize,
+        from_row: usize,
+    ) -> Result<HostTensor> {
+        anyhow::ensure!(session.block_size > 0, "session is not paged");
+        anyhow::ensure!(toks.len() == t, "token count");
+        anyhow::ensure!(
+            t % session.block_size == 0,
+            "prefill bucket {t} not a multiple of block_size {}",
+            session.block_size
+        );
+        let ids =
+            Self::chunk_block_ids(table, t, session.block_size, from_row);
+        let exe = self.executable(
+            rt, manifest, "prefill_chunk",
+            session.num_blocks(), t,
+        )?;
+        session.prefill_chunk_paged(rt, &exe, toks, &ids)
     }
 
     /// Aggregate stats across all loaded executables.

@@ -32,7 +32,7 @@ fn cfg(batch: usize) -> EngineConfig {
         method: "fake".into(),
         decode_batch: batch,
         prefill_buckets: vec![8, 16],
-        max_prefill_per_step: 2,
+        tokens_per_step: 0, // engine default: batch + largest bucket
         host_cache: false, // FakeBackend's mode is chosen directly
         paged: None,
         admission: Default::default(),
@@ -270,7 +270,7 @@ fn real_runtime_device_host_bit_exact() {
                 .iter()
                 .map(|(_, t)| *t)
                 .collect(),
-            max_prefill_per_step: 2,
+            tokens_per_step: 0, // engine default: batch + largest bucket
             host_cache,
             paged: None,
             admission: Default::default(),

@@ -161,7 +161,7 @@ fn engine_serves_deterministically_and_batches() {
         decode_batch: *m.serve.decode_batches.iter().max().unwrap(),
         prefill_buckets: m.serve.prefill_shapes.iter().map(|(_, t)| *t)
             .collect(),
-        max_prefill_per_step: 2,
+        tokens_per_step: 0, // engine default: batch + largest bucket
         host_cache: false,
         paged: None,
         admission: Default::default(),

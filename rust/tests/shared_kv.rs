@@ -47,7 +47,7 @@ fn cfg(
         method: "fake".into(),
         decode_batch: batch,
         prefill_buckets: vec![8, 16],
-        max_prefill_per_step: 2,
+        tokens_per_step: 0, // engine default: batch + largest bucket
         host_cache: false, // FakeBackend's mode is chosen directly
         paged: usable_blocks.map(|n| PagedKvConfig {
             block_size: BS,

@@ -42,12 +42,19 @@ HIGHER_IS_BETTER = {
     "mean_batch_occupancy",
     "kv_utilization_mean_pct",
     "kv_utilization_peak_pct",
+    # chunked-prefill bench: monolithic p99 ITL / chunked p99 ITL —
+    # the stall-free-batching win itself.
+    "itl_p99_speedup",
 }
 LOWER_IS_BETTER = {
     "rejected",
     "expired",
     "preemptions",
     "swap_fallbacks",
+    # chunked-prefill bench: per-stream token-gap tail and the
+    # decode-stall gauge.
+    "itl_ms_p99",
+    "decode_stall_ms",
 }
 # Counters where tiny absolute jitter on a near-zero baseline must not
 # trip the percentage gate.

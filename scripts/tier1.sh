@@ -27,6 +27,12 @@ for arg in "$@"; do
     esac
 done
 
+# Structural guard before anything builds: every rust/tests/*.rs file
+# must be registered as a [[test]] in Cargo.toml (non-standard layout,
+# no auto-discovery — an unregistered file silently never runs; this
+# bit PR 3 and was hand-fixed in PR 4).
+python3 scripts/check_test_registry.py
+
 cargo build --release
 cargo test -q
 
@@ -38,6 +44,11 @@ cargo test -q --test shared_kv
 cargo test -q --test proptests block_allocator_and_tables_keep_invariants
 cargo test -q --test proptests \
     block_refcounts_keep_invariants_under_share_free_revive
+
+# Chunked-prefill gate (DESIGN.md §12): chunked-vs-monolithic golden
+# equality, token-budget/no-starvation properties, and the mid-prefill
+# preemption replay.
+cargo test -q --test chunked_prefill
 
 # plan-check: the checked-in QuantSpec golden fixtures must validate on
 # both sides of the language boundary.  The rust side ran above inside
@@ -58,8 +69,11 @@ fi
 if [[ "$BENCH" == 1 ]]; then
     ./target/release/lqer bench kv --out BENCH_kvpaged.json
     ./target/release/lqer bench kvshared --out BENCH_kvshared.json
+    ./target/release/lqer bench chunked --out BENCH_chunked.json
     python3 scripts/bench_guard.py --bench BENCH_kvpaged.json \
         --baseline BENCH_baseline.json
+    python3 scripts/bench_guard.py --bench BENCH_chunked.json \
+        --baseline BENCH_baseline_chunked.json
 fi
 
 if [[ "$FAST" != 1 ]]; then

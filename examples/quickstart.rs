@@ -42,6 +42,9 @@ fn main() -> anyhow::Result<()> {
             // flat per-lane cache; see `lqer bench kv` / DESIGN.md §10
             // for the paged allocator
             paged: None,
+            // speculative decode is opt-in; see `lqer generate
+            // --speculate` / DESIGN.md §13
+            spec: None,
             admission: Default::default(),
         },
     )?;

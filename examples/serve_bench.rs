@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
             tokens_per_step: 0, // engine default: batch + largest bucket
             host_cache: false,
             paged: None,
+            spec: None,
             admission: Default::default(),
         };
         let t0 = std::time::Instant::now();

@@ -56,6 +56,10 @@ DECODE_BATCHES = [1, 4, 8]
 # that absorbs dead writes of free lanes), i.e. the same memory as the
 # flat (b, t_max) cache plus one block.
 PAGED_BLOCK_SIZE = 16
+# Self-speculative decoding (DESIGN.md §13): default max draft length.
+# The verify graph is lowered at its widest shape, S = SPEC_GAMMA + 1
+# (gamma drafted tokens plus the carried last-sampled token).
+SPEC_GAMMA = 4
 
 
 def paged_num_blocks(batch: int, t_max: int) -> int:
@@ -259,6 +263,20 @@ def stage_hlo(out_dir: str, trained: dict, models: list[str],
                         # graph, keyed by pool size like kvwrite_paged.
                         needed[(SERVE_MODEL, tag, "prefill_chunk",
                                 nb, t)] = gv
+                # Self-speculative decoding (DESIGN.md §13): the draft
+                # graph is the same quantized backbone with the low-rank
+                # correction clamped off (rank-0 variant, the manifest
+                # plan's draft_of); the verify graph replays the drafted
+                # tokens through the corrected model in one pass.  Only
+                # lowered for methods that carry a low-rank term —
+                # drafting with the full model would verify itself.
+                if rank > 0:
+                    draft_gv = M.GraphVariant(act=act, rank=0)
+                    for b in DECODE_BATCHES:
+                        needed[(SERVE_MODEL, draft_gv.tag,
+                                "decode_draft", b, 0)] = draft_gv
+                    needed[(SERVE_MODEL, tag, "verify_batch",
+                            1, SPEC_GAMMA + 1)] = gv
 
     for (name, tag, entry_kind, b, t), gv in sorted(needed.items()):
         cfg, params = trained[name]
@@ -267,7 +285,8 @@ def stage_hlo(out_dir: str, trained: dict, models: list[str],
         fname = (f"{tag}_{entry_kind}_b{b}" +
                  (f"_t{t}" if entry_kind in ("score", "prefill", "kvwrite",
                                              "kvwrite_paged",
-                                             "prefill_chunk")
+                                             "prefill_chunk",
+                                             "verify_batch")
                   else "") + ".hlo.txt")
         path = os.path.join(hdir, fname)
         graph_index.append({"model": name, "graph": tag,
@@ -334,9 +353,17 @@ def stage_hlo(out_dir: str, trained: dict, models: list[str],
             elif entry_kind == "prefill":
                 fn = lambda p, toks: M.prefill(p, toks, cfg, gv)
                 text = lower_graph(fn, pspecs, _tok_spec(b, t))
-            else:  # decode | decode_dev
-                step = (M.decode_resident if entry_kind == "decode_dev"
-                        else M.decode)
+            elif entry_kind == "verify_batch":
+                # Speculation verify pass (DESIGN.md §13): `t` is the
+                # token-window width S = gamma + 1.
+                fn = lambda p, toks, kc, vc, pos: M.verify_batch(
+                    p, toks, kc, vc, pos, cfg, gv)
+                pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+                text = lower_graph(fn, pspecs, _tok_spec(b, t), cache,
+                                   cache, pos)
+            else:  # decode | decode_dev | decode_draft
+                step = (M.decode
+                        if entry_kind == "decode" else M.decode_resident)
                 fn = lambda p, tok, kc, vc, pos: step(
                     p, tok, kc, vc, pos, cfg, gv)
                 tok = jax.ShapeDtypeStruct((b,), jnp.int32)
@@ -495,6 +522,9 @@ def main() -> None:
                 "block_size": PAGED_BLOCK_SIZE,
                 "buckets": [t for _, t in PREFILL_SHAPES],
             }
+            # Self-speculative decoding (DESIGN.md §13): default draft
+            # window for `--speculate` when the CLI passes --gamma 0.
+            serve["spec"] = {"gamma": SPEC_GAMMA}
         manifest = {
             "created": time.strftime("%Y-%m-%d %H:%M:%S"),
             "models": {

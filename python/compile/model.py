@@ -499,6 +499,33 @@ def prefill_chunk(params, tokens, k_cache, v_cache, block_ids,
     return logits, k_cache, v_cache
 
 
+def verify_batch(params, tokens, k_cache, v_cache, pos, cfg: ModelConfig,
+                 gv: GraphVariant):
+    """Speculative-decode verify pass (DESIGN.md §13): score S
+    consecutive tokens per lane in one graph.
+
+    tokens: (B, S) int32 — lane b's tokens at logical positions
+    ``pos[b] .. pos[b] + S - 1`` (the sampled-last token followed by the
+    draft's proposals); k/v_cache: (L, B, T_max, d); pos: (B,) int32.
+    Returns (logits (B, S, V), k_cache', v_cache') with all S K/V rows
+    appended.
+
+    Lowered as S unrolled ``decode_resident`` steps so position j's
+    logits see rows < pos + j plus its own K/V — *bit-identical* to
+    feeding the same tokens through S sequential decode steps, which is
+    what makes speculative acceptance exact rather than approximate:
+    one fused parameter load (the corrected model's W_q, A_k, B_k)
+    scores all S positions.
+    """
+    s = tokens.shape[1]
+    outs = []
+    for j in range(s):
+        logits, k_cache, v_cache = decode_resident(
+            params, tokens[:, j], k_cache, v_cache, pos + j, cfg, gv)
+        outs.append(logits)
+    return jnp.stack(outs, axis=1), k_cache, v_cache
+
+
 def kv_write_prefill(k_cache, v_cache, k_pre, v_pre, slot):
     """Scatter a prefilled sequence into batch slot ``slot`` of a resident
     cache.

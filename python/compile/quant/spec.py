@@ -305,7 +305,7 @@ class QuantSpec:
             overrides.append(Override(
                 match=_str(_field(od, "match", opath), f"{opath}.match"),
                 spec=_parse_layer(_field(od, "spec", opath),
-                                  f"{opath}.spec")))
+                                  f"{opath}.spec", base=default)))
         return QuantSpec(default=default,
                          overrides=tuple(overrides)).validate()
 
@@ -330,6 +330,21 @@ class QuantSpec:
                 return QuantSpec.from_json_dict(value)
             return from_legacy_dict(value)
         raise SpecError(f"cannot build a QuantSpec from {type(value)!r}")
+
+
+def draft_of(plan: QuantSpec) -> QuantSpec:
+    """The self-speculative draft plan (DESIGN.md §13): the same
+    quantized backbone with every low-rank error-reconstruction term
+    clamped to ``null`` — default and overrides alike.  The draft
+    shares W_q with the corrected model, so drafting streams only the
+    backbone weights; the ``(m + n) * k`` low-rank traffic is paid once
+    per *verify* pass instead of once per token.  Mirrored by
+    ``quant::spec::draft_of`` in rust/src/quant/spec.rs."""
+    default = dataclasses.replace(plan.default, lowrank=None)
+    overrides = tuple(
+        Override(ov.match, dataclasses.replace(ov.spec, lowrank=None))
+        for ov in plan.overrides)
+    return QuantSpec(default=default, overrides=overrides).validate()
 
 
 # ----------------------------------------------------------------------------
@@ -439,29 +454,56 @@ def _parse_weight(obj, path: str) -> WeightFormat:
     raise SpecError(f"{path}.kind: unknown weight format '{kind}'")
 
 
-def _parse_layer(obj, path: str) -> LayerSpec:
+def _parse_layer(obj, path: str,
+                 base: LayerSpec | None = None) -> LayerSpec:
+    """Parse a LayerSpec.  With ``base`` (override specs), keys may be
+    omitted and inherit from the plan default — so an override of
+    ``{"lowrank": null}`` alone cleanly strips the low-rank term of the
+    matching layers (the draft-plan idiom, DESIGN.md §13).  The default
+    spec (``base is None``) must be complete.  Canonical emission is
+    always the full form, so partial input round-trips semantically,
+    not byte-identically."""
     d = _obj(obj, path)
     _check_keys(d, ("weight", "act", "algo", "lowrank"), path)
-    act = _str(_field(d, "act", path), f"{path}.act")
-    if act not in ACTS:
-        raise SpecError(f"{path}.act: unknown activation mode '{act}'")
-    algo = _str(_field(d, "algo", path), f"{path}.algo")
-    if algo not in ALGOS:
-        raise SpecError(f"{path}.algo: unknown algorithm '{algo}'")
-    lowrank = None
-    lr = _field(d, "lowrank", path)
-    if lr is not None:
-        lpath = f"{path}.lowrank"
-        ld = _obj(lr, lpath)
-        _check_keys(ld, ("k", "scaled", "bits"), lpath)
-        bits = _field(ld, "bits", lpath)
-        lowrank = LowRank(
-            k=_int(_field(ld, "k", lpath), f"{lpath}.k", 1),
-            scaled=_bool(_field(ld, "scaled", lpath), f"{lpath}.scaled"),
-            bits=None if bits is None else _int(bits, f"{lpath}.bits", 2, 8))
-    return LayerSpec(weight=_parse_weight(_field(d, "weight", path),
-                                          f"{path}.weight"),
-                     act=act, algo=algo, lowrank=lowrank)
+
+    def _base_or(key: str) -> LayerSpec:
+        if base is None:
+            raise SpecError(f"{path}: missing key '{key}'")
+        return base
+
+    if "act" in d:
+        act = _str(d["act"], f"{path}.act")
+        if act not in ACTS:
+            raise SpecError(f"{path}.act: unknown activation mode '{act}'")
+    else:
+        act = _base_or("act").act
+    if "algo" in d:
+        algo = _str(d["algo"], f"{path}.algo")
+        if algo not in ALGOS:
+            raise SpecError(f"{path}.algo: unknown algorithm '{algo}'")
+    else:
+        algo = _base_or("algo").algo
+    if "lowrank" in d:
+        lowrank = None
+        lr = d["lowrank"]
+        if lr is not None:
+            lpath = f"{path}.lowrank"
+            ld = _obj(lr, lpath)
+            _check_keys(ld, ("k", "scaled", "bits"), lpath)
+            bits = _field(ld, "bits", lpath)
+            lowrank = LowRank(
+                k=_int(_field(ld, "k", lpath), f"{lpath}.k", 1),
+                scaled=_bool(_field(ld, "scaled", lpath),
+                             f"{lpath}.scaled"),
+                bits=None if bits is None
+                else _int(bits, f"{lpath}.bits", 2, 8))
+    else:
+        lowrank = _base_or("lowrank").lowrank
+    if "weight" in d:
+        weight = _parse_weight(d["weight"], f"{path}.weight")
+    else:
+        weight = _base_or("weight").weight
+    return LayerSpec(weight=weight, act=act, algo=algo, lowrank=lowrank)
 
 
 def _validate_layer(ls: LayerSpec, path: str) -> None:

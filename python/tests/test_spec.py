@@ -133,6 +133,48 @@ def test_avg_bits_formulas():
     assert lrfp.lowrank.avg_bits() == 32.0
 
 
+def test_partial_override_inherits_default():
+    """An override carrying only ``lowrank: null`` strips the low-rank
+    term and inherits weight/act/algo from the default (DESIGN.md §13,
+    the draft-plan idiom)."""
+    d = spec.METHODS["l2qer-w4a8"].to_json_dict()
+    d["overrides"] = [{"match": "layers.*.fc2", "spec": {"lowrank": None}}]
+    plan = QuantSpec.from_json_dict(d)
+    ov = plan.resolve("layers.1.fc2")
+    assert ov.lowrank is None
+    assert ov.weight == plan.default.weight
+    assert ov.act == plan.default.act
+    assert ov.algo == plan.default.algo
+    # Canonical emission is the full form; round-trips semantically.
+    assert QuantSpec.from_json(plan.to_json()) == plan
+    # The default itself must still be complete.
+    with pytest.raises(SpecError, match="missing key"):
+        QuantSpec.from_json_dict(
+            {"version": 1, "default": {"lowrank": None}, "overrides": []})
+
+
+def test_draft_of_clamps_all_lowrank():
+    base = spec.METHODS["l2qer-w4a8"]
+    plan = QuantSpec(
+        default=base.default,
+        overrides=(Override(
+            "layers.*.fc1",
+            dataclasses.replace(base.default,
+                                lowrank=LowRank(32, scaled=True))),),
+    ).validate()
+    draft = spec.draft_of(plan)
+    assert all(ls.lowrank is None for ls in draft.layer_specs())
+    assert draft.max_rank() == 0
+    assert draft.default.weight == plan.default.weight
+    assert draft.overrides[0].match == "layers.*.fc1"
+    # The draft streams strictly fewer weight bits.
+    shapes = spec.layer_shapes(64, 256, 2)
+    assert draft.model_avg_bits(shapes) < plan.model_avg_bits(shapes)
+    # Idempotent; a no-op on plans without low-rank terms.
+    assert spec.draft_of(draft) == draft
+    assert spec.draft_of(spec.METHODS["fp16"]) == spec.METHODS["fp16"]
+
+
 def test_checked_in_fixture_validates():
     assert os.path.exists(FIXTURE), "golden fixture missing"
     assert spec.check_golden(FIXTURE) == 0

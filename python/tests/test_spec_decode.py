@@ -1,0 +1,76 @@
+"""Speculative verify graph (DESIGN.md §13): ``verify_batch`` scores S
+consecutive tokens per lane in one graph and must be *bit-identical* to
+feeding the same tokens through S sequential ``decode_resident`` steps —
+the property that makes speculative acceptance exact rather than
+approximate."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = M.ModelConfig(name="t", vocab=64, d=32, layers=2, heads=2,
+                        ffn=64, t_max=24)
+    params = M.init_params(cfg, seed=1)
+    return cfg, params
+
+
+def test_verify_batch_matches_sequential_decode(setup):
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    rng = np.random.default_rng(7)
+    b, s = 2, 4
+    # Lanes at different depths; rows < pos are "prefilled" (random —
+    # decode only reads them, it never checks how they got there).
+    pos = np.array([5, 9], np.int32)
+    kc0 = rng.normal(size=(cfg.layers, b, cfg.t_max, cfg.d))
+    vc0 = rng.normal(size=(cfg.layers, b, cfg.t_max, cfg.d))
+    kc0, vc0 = kc0.astype(np.float32), vc0.astype(np.float32)
+    tokens = rng.integers(0, cfg.vocab, size=(b, s)).astype(np.int32)
+
+    # Sequential reference: S decode_resident steps, one token at a time.
+    kc, vc = jnp.asarray(kc0), jnp.asarray(vc0)
+    ref = []
+    for j in range(s):
+        logits, kc, vc = M.decode_resident(
+            params, tokens[:, j], kc, vc, pos + j, cfg, gv)
+        ref.append(np.asarray(logits))
+
+    out, kc_v, vc_v = M.verify_batch(
+        params, tokens, jnp.asarray(kc0), jnp.asarray(vc0), pos, cfg, gv)
+
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.stack(ref, axis=1))
+    np.testing.assert_array_equal(np.asarray(kc_v), np.asarray(kc))
+    np.testing.assert_array_equal(np.asarray(vc_v), np.asarray(vc))
+    # All S K/V rows landed; rows outside [pos, pos+S) are untouched.
+    for lane in range(b):
+        changed = np.any(np.asarray(kc_v)[:, lane] != kc0[:, lane],
+                         axis=(0, 2))
+        assert not changed[:pos[lane]].any()
+        assert changed[pos[lane]:pos[lane] + s].all()
+        assert not changed[pos[lane] + s:].any()
+
+
+def test_verify_batch_s1_is_one_decode_step(setup):
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    rng = np.random.default_rng(13)
+    kc0 = rng.normal(size=(cfg.layers, 1, cfg.t_max, cfg.d))
+    kc0 = kc0.astype(np.float32)
+    vc0 = np.zeros_like(kc0)
+    pos = np.array([3], np.int32)
+    tok = np.array([[17]], np.int32)
+
+    ref, kc, vc = M.decode_resident(
+        params, tok[:, 0], jnp.asarray(kc0), jnp.asarray(vc0), pos,
+        cfg, gv)
+    out, kc_v, vc_v = M.verify_batch(
+        params, tok, jnp.asarray(kc0), jnp.asarray(vc0), pos, cfg, gv)
+    np.testing.assert_array_equal(np.asarray(out)[:, 0], np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(kc_v), np.asarray(kc))
+    np.testing.assert_array_equal(np.asarray(vc_v), np.asarray(vc))

@@ -64,6 +64,7 @@ fn main() {
                     tokens_per_step: 0, // engine default: batch + largest bucket
                     host_cache,
                     paged: None,
+                    spec: None,
                     admission: Default::default(),
                 };
                 let stats =

@@ -94,6 +94,15 @@ pub struct ChunkServeInfo {
     pub buckets: Vec<usize>,
 }
 
+/// Self-speculative decoding contract (DESIGN.md §13): the artifacts
+/// carry `decode_draft` (rank-0 backbone) and `verify_batch` graphs,
+/// and this is the default draft window `--speculate` uses when the CLI
+/// does not pin one with `--gamma`.
+#[derive(Debug, Clone)]
+pub struct SpecServeInfo {
+    pub gamma: usize,
+}
+
 #[derive(Debug, Clone)]
 pub struct ServeInfo {
     pub model: String,
@@ -107,6 +116,11 @@ pub struct ServeInfo {
     /// absent (legacy artifacts) makes the device-paged backend fall
     /// back to prefill + `kvwrite_paged` per chunk.
     pub chunk: Option<ChunkServeInfo>,
+    /// Present when the artifacts carry speculation graphs
+    /// (`decode_draft` / `verify_batch`); absent on legacy artifacts,
+    /// where `--speculate` without an explicit `--gamma` falls back to
+    /// the built-in default.
+    pub spec: Option<SpecServeInfo>,
 }
 
 #[derive(Debug)]
@@ -297,6 +311,22 @@ impl Manifest {
                 }
                 None => None,
             },
+            spec: match sv.get("spec") {
+                Some(s) => {
+                    let info = SpecServeInfo {
+                        gamma: s
+                            .usize_at("gamma")
+                            .path_ctx(|| "serve.spec".to_string())?,
+                    };
+                    anyhow::ensure!(
+                        info.gamma >= 1,
+                        "serve.spec: gamma must be >= 1, got {}",
+                        info.gamma
+                    );
+                    Some(info)
+                }
+                None => None,
+            },
         };
 
         let score_shape = usize_pair(v.req("score_shape")?, "score_shape")?;
@@ -456,6 +486,32 @@ mod tests {
         let dir = write_manifest("chunk_bad", &body);
         let msg = format!("{:#}", Manifest::load(&dir).unwrap_err());
         assert!(msg.contains("serve.chunk"), "{msg}");
+    }
+
+    #[test]
+    fn parses_spec_serve_info() {
+        let body = MINIMAL.replace(
+            "\"prefill_shapes\": [[1, 16]]",
+            "\"prefill_shapes\": [[1, 16]],
+             \"spec\": {\"gamma\": 4}",
+        );
+        let dir = write_manifest("spec", &body);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.serve.spec.as_ref().unwrap().gamma, 4);
+        // absent on legacy manifests
+        let m0 =
+            Manifest::load(&write_manifest("spec_none", MINIMAL)).unwrap();
+        assert!(m0.serve.spec.is_none());
+
+        // gamma 0 is a manifest bug, caught at load.
+        let body = MINIMAL.replace(
+            "\"prefill_shapes\": [[1, 16]]",
+            "\"prefill_shapes\": [[1, 16]],
+             \"spec\": {\"gamma\": 0}",
+        );
+        let dir = write_manifest("spec_bad", &body);
+        let msg = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(msg.contains("serve.spec"), "{msg}");
     }
 
     #[test]

@@ -149,6 +149,56 @@ pub trait DecodeBackend {
         anyhow::bail!("backend has no paged KV backing")
     }
 
+    // --- self-speculative decoding (DESIGN.md §13) -----------------------
+    //
+    // LQER's decomposition `W ≈ W_q + A@B` gives every corrected model a
+    // free draft model: the same quantized backbone *without* the
+    // low-rank term (`draft_of(plan)` in the quant spec).  The engine
+    // drafts γ tokens per lane with the cheap pass, then verifies them
+    // in one multi-token corrected pass; backends without lowered draft
+    // graphs keep the defaults and the engine refuses `spec` configs.
+
+    /// Whether the backend implements the speculative draft/verify
+    /// passes.  The PJRT path is gated until the `decode_draft` /
+    /// `verify_batch` graphs are wired through the real bindings
+    /// (ROADMAP); the FakeBackend implements both.
+    fn supports_speculation(&self) -> bool {
+        false
+    }
+
+    /// One draft-model decode step for a single lane: feed `tok` at row
+    /// `pos` (flat lane `slot`, or through `table` when paged), append
+    /// the K/V row, and return the draft logits (`vocab` floats).  The
+    /// draft model is the quantized backbone without the low-rank
+    /// correction, so this pass skips the `(m+n)·k` weight stream.
+    fn draft_step(
+        &mut self,
+        _slot: usize,
+        _table: Option<&BlockTable>,
+        _pos: usize,
+        _tok: i32,
+    ) -> Result<Vec<f32>> {
+        anyhow::bail!("backend has no speculative draft pass")
+    }
+
+    /// Corrected verify pass over one lane: feed `tokens[i]` at row
+    /// `start_pos + i`, writing each position's K/V row exactly as
+    /// sequential decode would, and return `tokens.len() * vocab`
+    /// logits row-major — row `i` is the corrected next-token
+    /// distribution after feeding `tokens[i]`.  One call streams the
+    /// corrected weights once for all positions, which is the
+    /// speculation win; the engine samples the agreeing prefix from
+    /// these rows and rewinds the rest.
+    fn verify_tokens(
+        &mut self,
+        _slot: usize,
+        _table: Option<&BlockTable>,
+        _start_pos: usize,
+        _tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        anyhow::bail!("backend has no speculative verify pass")
+    }
+
     /// Runtime-boundary statistics, when the backend measures them.
     fn exec_stats(&self) -> ExecStats {
         ExecStats::default()

@@ -130,6 +130,7 @@ pub fn run_judge(
         tokens_per_step: 0, // engine default: batch + largest bucket
         host_cache: false,
         paged: None,
+        spec: None,
         admission: super::AdmissionPolicy::default(),
     };
     let gens_a = generate_all(manifest, &mk_cfg(method_a), &prompts,

@@ -139,6 +139,15 @@ pub struct EngineMetrics {
     pub swap_blocks_in_use: u64,
     pub swap_blocks_total: u64,
     pub tokens_generated: u64,
+    /// Speculative decoding (DESIGN.md §13): tokens proposed by the
+    /// draft (backbone-only) passes.
+    pub draft_tokens: u64,
+    /// Draft tokens the corrected verify pass agreed with (each saved
+    /// one full corrected decode step).
+    pub accepted_tokens: u64,
+    /// Whole KV blocks released by speculative rewinds (rejected-tail
+    /// truncation of lane block tables).
+    pub rewind_blocks: u64,
     pub prefill_steps: u64,
     pub prefill_ns: u64,
     pub decode_steps: u64,
@@ -186,6 +195,16 @@ impl EngineMetrics {
         self.batch_occupancy.mean()
     }
 
+    /// Fraction of drafted tokens the verify pass accepted (0.0 with
+    /// speculation off or before the first round).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.draft_tokens == 0 {
+            0.0
+        } else {
+            self.accepted_tokens as f64 / self.draft_tokens as f64
+        }
+    }
+
     /// Cumulative decode-stall time in milliseconds (see
     /// [`Self::decode_stall_ns`]).
     pub fn decode_stall_ms(&self) -> f64 {
@@ -193,6 +212,18 @@ impl EngineMetrics {
     }
 
     pub fn report(&self) -> String {
+        let spec = if self.draft_tokens > 0 {
+            format!(
+                " | spec {} drafted, {} accepted ({:.0}%), {} blocks \
+                 rewound",
+                self.draft_tokens,
+                self.accepted_tokens,
+                self.acceptance_rate() * 100.0,
+                self.rewind_blocks,
+            )
+        } else {
+            String::new()
+        };
         let paged = if self.kv_blocks_total > 0 {
             format!(
                 " | kv {}/{} blocks ({:.0}% now, {:.0}% peak) | {} \
@@ -220,7 +251,7 @@ impl EngineMetrics {
              | decode {} steps {:.2} ms avg | {:.1} tok/s decode | occupancy \
              {:.2} | ttft p50 {:.0} ms p99 {:.0} ms | itl p50 {:.2} ms \
              p99 {:.2} ms | budget {}/tick (packed mean {:.1}, max {:.0}) \
-             | decode stalled {:.1} ms{paged}",
+             | decode stalled {:.1} ms{spec}{paged}",
             self.completed,
             self.submitted,
             self.rejected,

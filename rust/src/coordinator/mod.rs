@@ -181,6 +181,19 @@ pub struct PagedKvConfig {
     pub swap_blocks: usize,
 }
 
+/// Self-speculative decoding (DESIGN.md §13): the quantized backbone
+/// (the serving plan with its low-rank correction clamped off —
+/// `draft_of(plan)`) drafts tokens cheaply and the corrected model
+/// verifies them in one multi-token pass per lane.
+#[derive(Debug, Clone)]
+pub struct SpecConfig {
+    /// Maximum draft tokens per lane per round.  Each lane adapts its
+    /// own depth within `[1, gamma]` from a running acceptance-rate
+    /// EWMA; a round is charged `γ + 1` tokens against
+    /// `tokens_per_step`.
+    pub gamma: usize,
+}
+
 /// What happens to a request that does not fit right now.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AdmissionPolicy {
@@ -230,6 +243,11 @@ pub struct EngineConfig {
     /// Block-granular KV allocation; `None` keeps the flat per-lane
     /// reservation.
     pub paged: Option<PagedKvConfig>,
+    /// Self-speculative decoding; `None` keeps plain one-token decode
+    /// steps.  Requires a backend with draft/verify passes, and the
+    /// emitted stream is bit-identical to non-speculative decoding
+    /// (golden-tested in rust/tests/spec_decode.rs).
+    pub spec: Option<SpecConfig>,
     /// Overload behavior of the admission queue.
     pub admission: AdmissionPolicy,
 }
@@ -314,6 +332,15 @@ struct ActiveSeq {
     /// Time spent swapped out counts: the client experienced the gap.
     last_token_at: Instant,
     rng: Rng,
+    /// Current speculation depth (DESIGN.md §13), adapted per round
+    /// within `[1, SpecConfig::gamma]`; unused when speculation is off.
+    /// Travels with the sequence through swap-out/in, so a resumed
+    /// lane keeps its learned depth.
+    gamma: usize,
+    /// Acceptance-rate EWMA driving the γ adaptation.  Starts
+    /// optimistic (1.0): the first rounds run at full depth and the
+    /// depth backs off only on observed rejections.
+    accept_ewma: f64,
 }
 
 /// A sequence in the Prefilling phase (DESIGN.md §12): its lane and KV
@@ -468,6 +495,11 @@ pub struct Engine<B: DecodeBackend> {
     /// final chunk lands mid-tick join the batch next tick, keeping the
     /// packed-token count under the budget).
     tick_decode: Vec<usize>,
+    /// Per-slot speculation depth planned at the top of the tick
+    /// (DESIGN.md §13): each decoding lane's round is charged `γ + 1`
+    /// budget tokens, so the chunk packer sees the real reservation.
+    /// All zeros when speculation is off.
+    tick_gamma: Vec<usize>,
     metrics: EngineMetrics,
 }
 
@@ -514,6 +546,14 @@ impl<B: DecodeBackend> Engine<B> {
             cfg.tokens_per_step,
             cfg.decode_batch
         );
+        if let Some(sc) = &cfg.spec {
+            assert!(sc.gamma >= 1, "speculation needs gamma >= 1");
+            assert!(
+                backend.supports_speculation(),
+                "speculative config over a backend without draft/verify \
+                 passes (the PJRT draft graphs are gated, see ROADMAP)"
+            );
+        }
         let paged = cfg.paged.as_ref().map(|p| {
             assert!(
                 backend.supports_paged(),
@@ -559,6 +599,7 @@ impl<B: DecodeBackend> Engine<B> {
             scratch_tokens: Vec::new(),
             scratch_pos: Vec::new(),
             tick_decode: Vec::new(),
+            tick_gamma: Vec::new(),
             metrics: EngineMetrics::default(),
         }
     }
@@ -720,8 +761,41 @@ impl<B: DecodeBackend> Engine<B> {
                 self.tick_decode.push(s);
             }
         }
-        let decode_tokens = self.tick_decode.len();
         let budget = self.cfg.tokens_per_step;
+        // With speculation each decoding lane reserves γ + 1 tokens (γ
+        // drafts + the verify's bonus position) instead of 1; the depth
+        // is planned here, at the top of the tick, so the chunk packer
+        // and the decode phase agree on the reservation.
+        self.tick_gamma.clear();
+        self.tick_gamma.resize(self.lanes.len(), 0);
+        let mut decode_tokens = self.tick_decode.len();
+        if self.cfg.spec.is_some() {
+            let mut extra = budget.saturating_sub(decode_tokens);
+            let t_max = self.backend.t_max();
+            for i in 0..self.tick_decode.len() {
+                let s = self.tick_decode[i];
+                let Lane::Decoding(seq) = &self.lanes[s] else {
+                    unreachable!();
+                };
+                let pos = self.slots.pos(s);
+                // Drafting past the cache or the request's token limit
+                // is pure waste: rows pos..pos+γ must all be writable
+                // (non-speculative decode never writes past t_max - 2),
+                // and at most `remaining - 1` drafts can be accepted.
+                let cache_cap =
+                    t_max.saturating_sub(2).saturating_sub(pos);
+                let len_cap = seq
+                    .request
+                    .max_new_tokens
+                    .saturating_sub(seq.generated.len())
+                    .saturating_sub(1);
+                let g =
+                    seq.gamma.min(cache_cap).min(len_cap).min(extra);
+                self.tick_gamma[s] = g;
+                extra -= g;
+                decode_tokens += g;
+            }
+        }
         let chunk_budget = budget.saturating_sub(decode_tokens);
         // In-flight Prefilling lanes pack first — the no-starvation
         // guarantee (first-visited lane always gets an aligned slice)
@@ -736,7 +810,12 @@ impl<B: DecodeBackend> Engine<B> {
             (decode_tokens + admit_spent + prefill_tokens) as f64,
         );
         if !self.tick_decode.is_empty() {
-            if let Err(e) = self.decode_step() {
+            let r = if self.cfg.spec.is_some() {
+                self.decode_step_spec()
+            } else {
+                self.decode_step()
+            };
+            if let Err(e) = r {
                 crate::info!("decode step failed: {e:#}");
             }
         }
@@ -1270,6 +1349,13 @@ impl<B: DecodeBackend> Engine<B> {
             generated: Vec::new(),
             last_token: 0,
             last_token_at: Instant::now(),
+            gamma: self
+                .cfg
+                .spec
+                .as_ref()
+                .map(|sc| sc.gamma)
+                .unwrap_or(0),
+            accept_ewma: 1.0,
         };
         let first = sample(row, seq.request.sampling, &mut seq.rng);
         seq.ttft_ms = Some(seq.submitted.elapsed().as_secs_f64() * 1e3);
@@ -1654,6 +1740,191 @@ impl<B: DecodeBackend> Engine<B> {
             seq.last_token_at = now;
             self.metrics.tokens_generated += 1;
             self.maybe_finish(s);
+        }
+        Ok(())
+    }
+
+    /// Grow lane `s`'s block table to cover the speculative write range
+    /// `[pos, pos + gamma]`.  Unlike the base capacity guarantee
+    /// ([`Self::ensure_paged_capacity`], which already ran and COWed /
+    /// grew row `pos`), this never preempts: a dry pool just shrinks
+    /// the round's depth to the rows already covered — speculation
+    /// degrades before it displaces anyone.  Rows past `pos` only ever
+    /// live in the (now private) block holding row `pos` or in blocks
+    /// pushed fresh here, so the write range is never shared and the
+    /// rewind can free the tail without touching prefix/COW refcounts.
+    fn grow_for_speculation(&mut self, s: usize, gamma: usize) -> usize {
+        let pos = self.slots.pos(s);
+        let Some(p) = &mut self.paged else {
+            return gamma;
+        };
+        let bs = p.alloc.block_size();
+        let mut gamma = gamma;
+        while p.tables[s].capacity_rows(bs) < pos + gamma + 1 {
+            if let Some(id) = p.alloc_fresh() {
+                p.tables[s].push(id);
+            } else {
+                gamma = p.tables[s]
+                    .capacity_rows(bs)
+                    .saturating_sub(pos + 1);
+                break;
+            }
+        }
+        gamma
+    }
+
+    /// Speculative decode phase (DESIGN.md §13): one draft/verify round
+    /// per decoding lane instead of the single batched decode step.
+    ///
+    /// Per lane: draft `γ` tokens with the backbone-only pass (sampling
+    /// from a *clone* of the lane RNG, so the real stream state only
+    /// ever advances for emitted tokens), verify the `γ + 1` fed tokens
+    /// in one corrected pass, emit the agreeing prefix by sampling each
+    /// verify row with the real RNG, then rewind the rejected rows by
+    /// truncating the lane's block table (flat lanes just keep `pos`
+    /// short of the stale rows — nothing reads at or past `pos`).
+    ///
+    /// Bit-exactness with sequential decoding: verify row `j` is
+    /// computed from exactly the cache rows and fed token sequential
+    /// decode would have seen *provided* every earlier draft was
+    /// accepted — and the accept loop stops at the first divergence, so
+    /// every sample actually consumed matches its sequential
+    /// counterpart, including the RNG draw order (one draw per emitted
+    /// token, none for rejected drafts).
+    fn decode_step_spec(&mut self) -> Result<()> {
+        if self.paged.is_some() {
+            self.ensure_paged_capacity()?;
+        }
+        self.scratch_active.clear();
+        for i in 0..self.tick_decode.len() {
+            let s = self.tick_decode[i];
+            if self.lanes[s].is_decoding() {
+                self.scratch_active.push(s);
+            }
+        }
+        if self.scratch_active.is_empty() {
+            return Ok(());
+        }
+        let vsize = self.backend.vocab();
+        for i in 0..self.scratch_active.len() {
+            let s = self.scratch_active[i];
+            if !self.lanes[s].is_decoding() {
+                continue;
+            }
+            let gamma = self.grow_for_speculation(s, self.tick_gamma[s]);
+            let pos = self.slots.pos(s);
+            let (sampling, mut draft_rng, last_token) = {
+                let Lane::Decoding(seq) = &self.lanes[s] else {
+                    unreachable!();
+                };
+                (seq.request.sampling, seq.rng.clone(), seq.last_token)
+            };
+            let t0 = Instant::now();
+            // Draft phase: the backbone proposes the next γ tokens.
+            let mut fed: Vec<i32> = Vec::with_capacity(gamma + 1);
+            fed.push(last_token as i32);
+            for r in 0..gamma {
+                let logits = match &self.paged {
+                    Some(p) => self.backend.draft_step(
+                        s, Some(&p.tables[s]), pos + r, fed[r],
+                    )?,
+                    None => self
+                        .backend
+                        .draft_step(s, None, pos + r, fed[r])?,
+                };
+                let d = sample(&logits, sampling, &mut draft_rng);
+                fed.push(d as i32);
+            }
+            self.metrics.draft_tokens += gamma as u64;
+            // Verify phase: one corrected pass over all fed tokens.
+            let logits = match &self.paged {
+                Some(p) => self.backend.verify_tokens(
+                    s, Some(&p.tables[s]), pos, &fed,
+                )?,
+                None => {
+                    self.backend.verify_tokens(s, None, pos, &fed)?
+                }
+            };
+            self.metrics.decode_steps += 1;
+            self.metrics.decode_ns += t0.elapsed().as_nanos() as u64;
+            anyhow::ensure!(
+                logits.len() >= fed.len() * vsize,
+                "verify logits size"
+            );
+            // Accept phase: emit until the first divergence (whose
+            // corrected sample is itself emitted — the "free" token),
+            // EOS, or the length limit.
+            let mut emitted = 0usize;
+            {
+                let Lane::Decoding(seq) = &mut self.lanes[s] else {
+                    unreachable!();
+                };
+                let mut accepted = 0usize;
+                for j in 0..fed.len() {
+                    let row = &logits[j * vsize..(j + 1) * vsize];
+                    let tok = sample(row, sampling, &mut seq.rng);
+                    seq.generated.push(tok);
+                    seq.last_token = tok;
+                    emitted += 1;
+                    let now = Instant::now();
+                    self.metrics.itl_ms.record(
+                        now.duration_since(seq.last_token_at)
+                            .as_secs_f64()
+                            * 1e3,
+                    );
+                    seq.last_token_at = now;
+                    self.metrics.tokens_generated += 1;
+                    if tok == self.eos
+                        || seq.generated.len()
+                            >= seq.request.max_new_tokens
+                    {
+                        break;
+                    }
+                    if j + 1 < fed.len() {
+                        if tok as i32 != fed[j + 1] {
+                            break;
+                        }
+                        accepted += 1;
+                    }
+                }
+                self.metrics.accepted_tokens += accepted as u64;
+                // γ adaptation: lean into lanes whose drafts stick,
+                // back off where the backbone keeps being corrected.
+                if gamma > 0 {
+                    let rate = accepted as f64 / gamma as f64;
+                    seq.accept_ewma =
+                        0.7 * seq.accept_ewma + 0.3 * rate;
+                    let max_gamma =
+                        self.cfg.spec.as_ref().unwrap().gamma;
+                    if seq.accept_ewma > 0.8 {
+                        seq.gamma = (seq.gamma + 1).min(max_gamma);
+                    } else if seq.accept_ewma < 0.5 {
+                        seq.gamma = seq.gamma.saturating_sub(1).max(1);
+                    }
+                }
+            }
+            // Commit: keep exactly the rows feeding the emitted stream
+            // (`fed[..emitted]` at rows `pos..pos+emitted`), rewind the
+            // rejected tail.  Freed tail blocks were allocated fresh
+            // for this round or a previous one — never prefix-shared —
+            // so a plain `free` is refcount-correct.
+            let new_pos = pos + emitted;
+            self.slots.set_pos(s, new_pos)?;
+            if let Some(p) = &mut self.paged {
+                let bs = p.alloc.block_size();
+                let freed = p.tables[s].truncate_rows(new_pos, bs);
+                self.metrics.rewind_blocks += freed.len() as u64;
+                for id in freed {
+                    p.alloc.free(id);
+                }
+            }
+            self.maybe_finish(s);
+        }
+        self.metrics
+            .batch_occupancy
+            .record(self.scratch_active.len() as f64);
+        if let Some(p) = &self.paged {
+            self.metrics.kv_util.record(p.alloc.utilization() * 100.0);
         }
         Ok(())
     }

@@ -205,6 +205,14 @@ fn route(
                     ("kv_utilization", json::num(m.kv_utilization)),
                     ("tokens_generated",
                      json::num(m.tokens_generated as f64)),
+                    ("draft_tokens",
+                     json::num(m.draft_tokens as f64)),
+                    ("accepted_tokens",
+                     json::num(m.accepted_tokens as f64)),
+                    ("acceptance_rate",
+                     json::num(m.acceptance_rate())),
+                    ("rewind_blocks",
+                     json::num(m.rewind_blocks as f64)),
                     ("decode_steps", json::num(m.decode_steps as f64)),
                     ("decode_tok_per_sec",
                      json::num(m.decode_tokens_per_sec())),

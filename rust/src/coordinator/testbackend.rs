@@ -224,6 +224,39 @@ impl FakeBackend {
         }
     }
 
+    /// Deterministic draft-model divergence (DESIGN.md §13): the draft
+    /// backbone (quantized weights without the low-rank correction)
+    /// agrees with the corrected model on most steps but over-scores a
+    /// hash-derived vocab entry on ~10% of (position, token) pairs —
+    /// the quantization error the correction would have fixed.
+    /// Hash-based so flat/paged and host/device runs diverge at
+    /// identical points, keeping the golden cross-mode equality tests
+    /// meaningful under speculation.
+    fn draft_skew(&self, pos: usize, tok: i32) -> Option<usize> {
+        let mut z = ((pos as u64) << 32) ^ u64::from(tok as u32);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z % 10 == 0).then(|| ((z / 10) % self.vocab as u64) as usize)
+    }
+
+    /// Row bounds shared by the draft and verify passes: speculative
+    /// rows must be *really* writable — unlike the decode paths there
+    /// is no dead-write story, so a row beyond the lane/table is an
+    /// engine capacity bug, not something to park in the sentinel.
+    fn check_spec_row(&self, table: Option<&BlockTable>, p: usize)
+        -> Result<()> {
+        anyhow::ensure!(p < self.t_max, "speculative row {p} >= t_max");
+        if let Some(t) = table {
+            let bs = self.paged.as_ref().expect("paged store").1;
+            anyhow::ensure!(
+                t.physical(p, bs).is_some(),
+                "speculative row {p} beyond table"
+            );
+        }
+        Ok(())
+    }
+
     /// One cached K/V element of the lane: the flat `(slot, q)` cell, or
     /// the block pool through the lane's table.
     fn cache_row(
@@ -423,6 +456,68 @@ impl DecodeBackend for FakeBackend {
 
     fn supports_block_ops(&self) -> bool {
         self.paged.is_some()
+    }
+
+    fn supports_speculation(&self) -> bool {
+        true
+    }
+
+    fn draft_step(
+        &mut self,
+        slot: usize,
+        table: Option<&BlockTable>,
+        pos: usize,
+        tok: i32,
+    ) -> Result<Vec<f32>> {
+        self.check_spec_row(table, pos)?;
+        let mut logits = match table {
+            Some(t) => self.lane_logits_paged(t, pos, tok),
+            None => self.lane_logits(slot, pos, tok),
+        };
+        // The backbone's quantization error: on divergent steps one
+        // vocab entry is pushed past every sin-bounded logit, flipping
+        // the argmax (and dominating top-k weights).
+        if let Some(idx) = self.draft_skew(pos, tok) {
+            logits[idx] = 2.0;
+        }
+        // The draft K/V row: `kv_row` is a pure function of (token,
+        // position), which models the LQER structure — the backbone and
+        // the corrected model share W_q, so re-processing the same
+        // token at the same position lands the same cache row, and the
+        // verify pass's re-write is idempotent.
+        match table {
+            Some(t) => self.write_row_paged(t, tok, pos),
+            None => self.write_row(slot, tok, pos),
+        }
+        Ok(logits)
+    }
+
+    fn verify_tokens(
+        &mut self,
+        slot: usize,
+        table: Option<&BlockTable>,
+        start_pos: usize,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let mut logits = vec![0.0f32; tokens.len() * self.vocab];
+        for (i, &tok) in tokens.iter().enumerate() {
+            let p = start_pos + i;
+            self.check_spec_row(table, p)?;
+            // Row i reads everything below p — including the rows this
+            // very pass wrote for tokens[..i] — and excludes row p
+            // itself, exactly like sequential decode.
+            let row = match table {
+                Some(t) => self.lane_logits_paged(t, p, tok),
+                None => self.lane_logits(slot, p, tok),
+            };
+            logits[i * self.vocab..(i + 1) * self.vocab]
+                .copy_from_slice(&row);
+            match table {
+                Some(t) => self.write_row_paged(t, tok, p),
+                None => self.write_row(slot, tok, p),
+            }
+        }
+        Ok(logits)
     }
 
     fn copy_block(&mut self, src: u32, dst: u32) -> Result<()> {

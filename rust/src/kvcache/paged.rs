@@ -275,6 +275,25 @@ impl BlockTable {
     pub fn take_blocks(&mut self) -> Vec<u32> {
         std::mem::take(&mut self.blocks)
     }
+
+    /// Shrink the table to the minimum number of blocks that still hold
+    /// `rows` logical rows, returning the drained tail block ids for the
+    /// caller to release (speculative-decode rewind, DESIGN.md §13).
+    /// A block containing any kept row survives even when the rewind
+    /// lands mid-block: its tail rows are logically dead but stay
+    /// physically parked until overwritten by the next append.  No-op
+    /// (empty return) when the table already fits in that many blocks.
+    pub fn truncate_rows(
+        &mut self,
+        rows: usize,
+        block_size: usize,
+    ) -> Vec<u32> {
+        let keep = rows.div_ceil(block_size);
+        if keep >= self.blocks.len() {
+            return Vec::new();
+        }
+        self.blocks.split_off(keep)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -763,6 +782,28 @@ mod tests {
         assert_eq!(t.physical(8, 4), None);
         let drained = t.take_blocks();
         assert_eq!(drained, vec![3, 7]);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn table_truncate_rows_frees_only_whole_tail_blocks() {
+        let bs = 4;
+        let mut t = BlockTable::new();
+        for id in [3u32, 7, 9] {
+            t.push(id);
+        }
+        // Rewind to 5 rows: rows 0..5 span blocks 3 (rows 0..4) and 7
+        // (row 4), so only block 9 drains; the partial block stays.
+        assert_eq!(t.truncate_rows(5, bs), vec![9]);
+        assert_eq!(t.blocks(), &[3, 7]);
+        assert_eq!(t.physical(4, bs), Some((7, 0)));
+        // Already fits: no-op.
+        assert!(t.truncate_rows(8, bs).is_empty());
+        assert!(t.truncate_rows(5, bs).is_empty());
+        // Block-aligned rewind drains the exact tail.
+        assert_eq!(t.truncate_rows(4, bs), vec![7]);
+        // Rewind to zero rows drains everything.
+        assert_eq!(t.truncate_rows(0, bs), vec![3]);
         assert!(t.is_empty());
     }
 

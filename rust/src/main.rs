@@ -23,7 +23,7 @@ use anyhow::Result;
 use lqer::config::Manifest;
 use lqer::coordinator::{
     AdmissionPolicy, EngineConfig, EngineHandle, PagedKvConfig, Priority,
-    Request, Sampling,
+    Request, Sampling, SpecConfig,
 };
 use lqer::runtime::{ModelRunner, Runtime};
 use lqer::util::argparse::Args;
@@ -139,15 +139,49 @@ fn tokens_per_step_arg(a: &Args, m: &Manifest, batch: usize)
     Ok(batch + n.max(1) * max_bucket)
 }
 
+/// `--speculate` / `--gamma` → the engine's speculative-decode knob:
+/// `None` = off, `Some(0)` = on with the manifest's compiled gamma,
+/// `Some(g)` = on with an explicit override.
+fn spec_arg(a: &Args) -> Result<Option<usize>> {
+    let gamma = a.get_usize("gamma")?;
+    if a.get_flag("speculate") {
+        Ok(Some(gamma))
+    } else {
+        anyhow::ensure!(gamma == 0, "--gamma needs --speculate");
+        Ok(None)
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn engine_cfg(m: &Manifest, model: &str, method: &str, batch: usize,
               tokens_per_step: usize, host_cache: bool, paged: bool,
-              prefix_share: bool, swap_blocks: usize)
+              prefix_share: bool, swap_blocks: usize,
+              spec_gamma: Option<usize>)
               -> Result<EngineConfig> {
     anyhow::ensure!(
         paged || (!prefix_share && swap_blocks == 0),
         "--prefix-share / --swap-blocks require --paged"
     );
+    // --gamma 0 defers to the manifest's serve.spec section (compiled
+    // next to the decode graphs), falling back to 4 for legacy
+    // artifacts without one.
+    let spec = match spec_gamma {
+        None => None,
+        Some(g) => {
+            anyhow::ensure!(
+                host_cache,
+                "--speculate needs the host-cache oracle backend for \
+                 now: the PJRT decode_draft / verify_batch graphs are \
+                 compiled into the manifest but the device execution \
+                 path is gated (ROADMAP)"
+            );
+            let gamma = match g {
+                0 => m.serve.spec.as_ref().map(|s| s.gamma).unwrap_or(4),
+                g => g,
+            };
+            Some(SpecConfig { gamma })
+        }
+    };
     anyhow::ensure!(
         !(prefix_share || swap_blocks > 0) || host_cache,
         "--prefix-share / --swap-blocks need the host-paged backing \
@@ -195,6 +229,7 @@ fn engine_cfg(m: &Manifest, model: &str, method: &str, batch: usize,
         tokens_per_step,
         host_cache,
         paged: paged_cfg,
+        spec,
         admission: AdmissionPolicy::default(),
     })
 }
@@ -221,6 +256,13 @@ fn serve(argv: &[String]) -> Result<()> {
         .opt("swap-blocks", "0",
              "host swap pool size in blocks (0 = re-prefill on \
               preemption; needs --paged --host-cache)")
+        .flag("speculate",
+              "self-speculative decode (DESIGN.md §13): the \
+               lowrank-free backbone drafts, the corrected model \
+               verifies (needs --host-cache)")
+        .opt("gamma", "0",
+             "max draft tokens per lane per speculation round \
+              (0 = manifest serve.spec gamma; needs --speculate)")
         .parse(argv)?;
     let tok = lqer::tokenizer::Tokenizer::from_file(
         &m.data_dir().join("vocab.json"))?;
@@ -231,7 +273,7 @@ fn serve(argv: &[String]) -> Result<()> {
                    tokens_per_step_arg(&a, &m, batch)?,
                    a.get_flag("host-cache"),
                    a.get_flag("paged"), a.get_flag("prefix-share"),
-                   a.get_usize("swap-blocks")?)?,
+                   a.get_usize("swap-blocks")?, spec_arg(&a)?)?,
     )?;
     println!("serving {} / {} on http://{}  (POST /generate, \
               GET /metrics, GET /healthz)",
@@ -263,6 +305,13 @@ fn generate(argv: &[String]) -> Result<()> {
         .opt("swap-blocks", "0",
              "host swap pool size in blocks (0 = re-prefill on \
               preemption; needs --paged --host-cache)")
+        .flag("speculate",
+              "self-speculative decode (DESIGN.md §13): the \
+               lowrank-free backbone drafts, the corrected model \
+               verifies (needs --host-cache)")
+        .opt("gamma", "0",
+             "max draft tokens per lane per speculation round \
+              (0 = manifest serve.spec gamma; needs --speculate)")
         .opt("priority", "normal", "eviction class: low|normal|high")
         .parse(argv)?;
     let tok = lqer::tokenizer::Tokenizer::from_file(
@@ -274,7 +323,7 @@ fn generate(argv: &[String]) -> Result<()> {
                    tokens_per_step_arg(&a, &m, batch)?,
                    a.get_flag("host-cache"),
                    a.get_flag("paged"), a.get_flag("prefix-share"),
-                   a.get_usize("swap-blocks")?)?,
+                   a.get_usize("swap-blocks")?, spec_arg(&a)?)?,
     )?;
     let sampling = match a.get_usize("topk")? {
         0 => Sampling::Greedy,
@@ -323,6 +372,13 @@ fn serve_bench(argv: &[String]) -> Result<()> {
         .opt("swap-blocks", "0",
              "host swap pool size in blocks (0 = re-prefill on \
               preemption; needs --paged --host-cache)")
+        .flag("speculate",
+              "self-speculative decode (DESIGN.md §13): the \
+               lowrank-free backbone drafts, the corrected model \
+               verifies (needs --host-cache)")
+        .opt("gamma", "0",
+             "max draft tokens per lane per speculation round \
+              (0 = manifest serve.spec gamma; needs --speculate)")
         .parse(argv)?;
     let batch = a.get_usize("batch")?;
     let stats = lqer::coordinator::loadtest::run_loadtest(
@@ -331,7 +387,7 @@ fn serve_bench(argv: &[String]) -> Result<()> {
                     tokens_per_step_arg(&a, &m, batch)?,
                     a.get_flag("host-cache"),
                     a.get_flag("paged"), a.get_flag("prefix-share"),
-                    a.get_usize("swap-blocks")?)?,
+                    a.get_usize("swap-blocks")?, spec_arg(&a)?)?,
         a.get_usize("requests")?,
         a.get_usize("max-new")?,
     )?;
@@ -343,20 +399,23 @@ fn serve_bench(argv: &[String]) -> Result<()> {
 /// artifacts or PJRT (they drive the deterministic FakeBackend).
 fn bench(argv: &[String]) -> Result<()> {
     let a = Args::new("bench", "synthetic engine benchmarks")
-        .pos("suite", "bench suite: kv | kvshared | chunked")
+        .pos("suite", "bench suite: kv | kvshared | chunked | spec")
         .opt("batch", "4", "decode lanes")
         .opt("requests", "16", "concurrent requests (4x lanes default)")
         .opt("max-new", "12", "max tokens per request")
         .opt("block-size", "8", "paged block size (token rows)")
         .opt("blocks", "0", "usable pool blocks (0 = lanes * t_max / bs)")
+        .opt("gamma", "4", "spec suite: max draft tokens per round")
         .opt("out", "", "output JSON path (default per suite)")
         .parse(argv)?;
     match a.get_pos(0) {
         Some("kv") => bench_kv(&a),
         Some("kvshared") => bench_kvshared(&a),
         Some("chunked") => bench_chunked(&a),
+        Some("spec") => bench_spec(&a),
         other => anyhow::bail!(
-            "unknown bench suite {:?} (expected: kv, kvshared, chunked)",
+            "unknown bench suite {:?} (expected: kv, kvshared, chunked, \
+             spec)",
             other
         ),
     }
@@ -438,6 +497,7 @@ fn bench_kv(a: &Args) -> Result<()> {
         tokens_per_step: 0, // auto: batch + largest bucket
         host_cache: true,
         paged: None,
+        spec: None,
         admission: AdmissionPolicy::default(),
     };
 
@@ -613,6 +673,7 @@ fn bench_kvshared(a: &Args) -> Result<()> {
                 prefix_sharing: sharing,
                 swap_blocks: swap,
             }),
+            spec: None,
             admission,
         }
     };
@@ -831,6 +892,7 @@ fn bench_chunked(a: &Args) -> Result<()> {
                 prefix_sharing: false,
                 swap_blocks: 0,
             }),
+            spec: None,
             admission: AdmissionPolicy::Wait {
                 queue_depth: requests.max(16),
                 deadline_ms: 0,
@@ -929,6 +991,203 @@ fn bench_chunked(a: &Args) -> Result<()> {
          {:.2} ms ({speedup:.2}x)",
         mono_m.itl_ms.percentile(99.0),
         chunked_m.itl_ms.percentile(99.0)
+    );
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Self-speculative decoding bench (DESIGN.md §13) on the deterministic
+/// FakeBackend: the same workload runs through a plain engine and a
+/// speculating one, the token streams are asserted bit-identical, and
+/// throughput is compared under a *modeled* per-step cost — the weight
+/// bits each pass streams, derived from a real serving plan
+/// (`l2qer-w2a8`) and its `draft_of` clamp.  The draft pass skips the
+/// `(m+n)k` low-rank term, so one draft step costs `draft_bits /
+/// full_bits` of a corrected step; a speculation round of `g` drafts +
+/// one verify emits `accepted + 1` tokens for `g * C_draft + C_full`
+/// units, vs one token per `C_full` without speculation.
+fn bench_spec(a: &Args) -> Result<()> {
+    use lqer::coordinator::testbackend::{FakeBackend, FakeCacheMode};
+    use lqer::coordinator::{Engine, EngineMetrics};
+    use lqer::util::json;
+    use lqer::util::rng::Rng;
+
+    const VOCAB: usize = 48;
+    const LAYERS: usize = 2;
+    const DIM: usize = 8;
+    const T_MAX: usize = 64;
+    // EOS outside the vocab: every request runs to max_new_tokens, so
+    // both engines generate identical token counts by construction.
+    const NO_EOS: u32 = VOCAB as u32 + 1;
+    let buckets = vec![8usize, 32];
+
+    let requests = a.get_usize("requests")?;
+    let max_new = a.get_usize("max-new")?.max(8);
+    let gamma = a.get_usize("gamma")?;
+    anyhow::ensure!(gamma >= 1, "--gamma must be >= 1");
+
+    let mk_requests = || -> Vec<Request> {
+        let mut rng = Rng::new(99);
+        (0..requests as u64)
+            .map(|i| {
+                let plen = 1 + rng.below(16);
+                Request {
+                    id: i + 1,
+                    prompt: (0..plen)
+                        .map(|_| rng.below(VOCAB) as u32)
+                        .collect(),
+                    max_new_tokens: max_new,
+                    sampling: Sampling::Greedy,
+                    priority: Priority::Normal,
+                }
+            })
+            .collect()
+    };
+
+    // One lane: a decode step streams the weights for exactly one
+    // token (baseline) or one per-lane speculation round, so the
+    // modeled units below map 1:1 onto metric counters.
+    let drive = |spec: Option<SpecConfig>|
+        -> Result<(EngineMetrics, Vec<Vec<u32>>)> {
+        let cfg = EngineConfig {
+            model: "fake".into(),
+            method: "fake".into(),
+            decode_batch: 1,
+            prefill_buckets: buckets.clone(),
+            tokens_per_step: 0, // auto: batch + largest bucket
+            host_cache: true,
+            paged: None,
+            spec,
+            admission: AdmissionPolicy::default(),
+        };
+        let mut engine = Engine::with_backend(
+            FakeBackend::new(FakeCacheMode::Host, VOCAB, LAYERS, DIM,
+                             T_MAX, 1),
+            cfg,
+            NO_EOS,
+        );
+        let mut rxs = Vec::new();
+        for r in mk_requests() {
+            let (tx, rx) = std::sync::mpsc::channel();
+            engine.enqueue(r, tx);
+            rxs.push(rx);
+        }
+        let mut guard = 0;
+        while engine.has_work() {
+            engine.tick();
+            guard += 1;
+            anyhow::ensure!(guard < 1_000_000, "engine did not drain");
+        }
+        let mut streams = Vec::new();
+        for rx in rxs {
+            let r = rx.recv().map_err(|_| anyhow::anyhow!("reply dropped"))?;
+            streams.push(r.tokens);
+        }
+        Ok((engine.metrics_snapshot(), streams))
+    };
+
+    let (base_m, base_streams) = drive(None)?;
+    let (spec_m, spec_streams) = drive(Some(SpecConfig { gamma }))?;
+    anyhow::ensure!(
+        spec_streams == base_streams,
+        "speculative token streams diverged from the baseline \
+         (the golden invariant — see rust/tests/spec_decode.rs)"
+    );
+
+    // Modeled per-pass costs: avg streamed weight bits of the serving
+    // plan vs its lowrank-clamped draft, on serve-class layer shapes.
+    let plan = lqer::quant::spec::QuantSpec::from_method_name(
+        "l2qer-w2a8",
+    )?;
+    let draft_plan = lqer::quant::spec::draft_of(&plan);
+    let shapes = lqer::quant::spec::layer_shapes(256, 1024, 4);
+    let c_full = plan.model_avg_bits(&shapes);
+    let c_draft = draft_plan.model_avg_bits(&shapes);
+    let units_spec = spec_m.draft_tokens as f64 * c_draft
+        + spec_m.decode_steps as f64 * c_full;
+    let units_base = base_m.decode_steps as f64 * c_full;
+    anyhow::ensure!(
+        spec_m.tokens_generated == base_m.tokens_generated,
+        "token counts diverged: spec {} vs baseline {}",
+        spec_m.tokens_generated,
+        base_m.tokens_generated
+    );
+    let tokens = base_m.tokens_generated as f64;
+    let speedup = units_base / units_spec.max(1e-9);
+
+    let out = json::obj(vec![
+        ("suite", json::s("spec")),
+        ("requests", json::num(requests as f64)),
+        ("max_new", json::num(max_new as f64)),
+        ("gamma", json::num(gamma as f64)),
+        ("cost_model", json::obj(vec![
+            ("method", json::s("l2qer-w2a8")),
+            ("full_bits", json::num(c_full)),
+            ("draft_bits", json::num(c_draft)),
+            ("cost_ratio", json::num(c_full / c_draft)),
+        ])),
+        ("speculative", json::obj(vec![
+            ("completed", json::num(spec_m.completed as f64)),
+            ("tokens", json::num(spec_m.tokens_generated as f64)),
+            ("draft_tokens", json::num(spec_m.draft_tokens as f64)),
+            ("accepted_tokens",
+             json::num(spec_m.accepted_tokens as f64)),
+            ("acceptance_rate", json::num(spec_m.acceptance_rate())),
+            ("rewind_blocks", json::num(spec_m.rewind_blocks as f64)),
+            ("verify_steps", json::num(spec_m.decode_steps as f64)),
+            ("modeled_units", json::num(units_spec)),
+            ("modeled_tokens_per_kunit",
+             json::num(1e3 * tokens / units_spec.max(1e-9))),
+        ])),
+        ("baseline", json::obj(vec![
+            ("completed", json::num(base_m.completed as f64)),
+            ("tokens", json::num(base_m.tokens_generated as f64)),
+            ("decode_steps", json::num(base_m.decode_steps as f64)),
+            ("modeled_units", json::num(units_base)),
+            ("modeled_tokens_per_kunit",
+             json::num(1e3 * tokens / units_base.max(1e-9))),
+        ])),
+        ("spec_speedup", json::num(speedup)),
+    ]);
+    let path = match a.get("out").as_str() {
+        "" => "BENCH_spec.json".to_string(),
+        p => p.to_string(),
+    };
+    std::fs::write(&path, out.to_string())?;
+
+    let mut t = Table::new(
+        &format!(
+            "self-speculative decode bench — {requests} requests x \
+             {max_new} tokens (gamma {gamma}, cost ratio {:.2})",
+            c_full / c_draft
+        ),
+        &["engine", "tokens", "drafted", "accepted", "accept %",
+          "steps", "units", "tok/kunit"],
+    );
+    for (name, m, units) in [
+        ("speculative", &spec_m, units_spec),
+        ("baseline", &base_m, units_base),
+    ] {
+        t.row(vec![
+            name.into(),
+            m.tokens_generated.to_string(),
+            m.draft_tokens.to_string(),
+            m.accepted_tokens.to_string(),
+            if m.draft_tokens > 0 {
+                format!("{:.0}", 100.0 * m.acceptance_rate())
+            } else {
+                "-".into()
+            },
+            m.decode_steps.to_string(),
+            format!("{units:.0}"),
+            format!("{:.2}", 1e3 * tokens / units.max(1e-9)),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "modeled decode speedup: {speedup:.2}x at {:.0}% acceptance \
+         (streams bit-identical)",
+        100.0 * spec_m.acceptance_rate()
     );
     println!("wrote {path}");
     Ok(())
@@ -1114,6 +1373,30 @@ fn plan_cmd(argv: &[String]) -> Result<()> {
         run.graph,
         run.plan.overrides.len()
     );
+    // The speculation draft plan (DESIGN.md §13): lowrank clamped off.
+    let draft = lqer::quant::spec::draft_of(&run.plan);
+    if draft != run.plan {
+        let full_bits = run.plan.model_avg_bits(&shapes);
+        let draft_bits = draft.model_avg_bits(&shapes);
+        let area = match (
+            hwcost::area_for_plan(&method, &run.plan),
+            hwcost::area_for_plan(&method, &draft),
+        ) {
+            (Some(f), Some(d)) => format!(
+                "  PE LUTs: {:.0} -> {:.0} ({:+.1}%)",
+                f.total,
+                d.total,
+                (d.total / f.total - 1.0) * 100.0
+            ),
+            _ => String::new(),
+        };
+        println!(
+            "draft plan (lowrank off): {draft_bits:.4} bits \
+             ({:+.4} vs full, {:.2}x cheaper stream){area}",
+            draft_bits - full_bits,
+            full_bits / draft_bits
+        );
+    }
     // Cross-check the plan-derived numbers against the python-side meta
     // (the acceptance contract: both languages derive identical bits
     // from one plan).

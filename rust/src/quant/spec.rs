@@ -477,16 +477,40 @@ impl LayerSpec {
     }
 
     pub fn parse(v: &Value, path: &str) -> Result<Self> {
+        Self::parse_with_base(v, path, None)
+    }
+
+    /// Parse a layer spec.  With `base` (override specs), keys may be
+    /// omitted and inherit from the plan default — so an override of
+    /// `{"lowrank": null}` alone cleanly strips the low-rank term of
+    /// the matching layers (the draft-plan idiom, DESIGN.md §13).
+    /// The default spec (`base == None`) must be complete.  Canonical
+    /// emission is always the full form, so partial input does not
+    /// round-trip byte-identically — only semantically.
+    pub fn parse_with_base(
+        v: &Value,
+        path: &str,
+        base: Option<&LayerSpec>,
+    ) -> Result<Self> {
         let o = as_obj(v, path)?;
         check_keys(o, &["weight", "act", "algo", "lowrank"], path)?;
-        let act = ActFormat::from_str(&str_field(v, "act", path)?,
-                                      &format!("{path}.act"))?;
-        let algo = Algo::from_str(&str_field(v, "algo", path)?,
-                                  &format!("{path}.algo"))?;
-        let lr_v = field(v, "lowrank", path)?;
-        let lowrank = match lr_v {
-            Value::Null => None,
-            other => {
+        let base_or = |key: &str| -> Result<&LayerSpec> {
+            base.ok_or_else(|| anyhow!("{path}: missing key '{key}'"))
+        };
+        let act = match v.get("act") {
+            None => base_or("act")?.act,
+            Some(_) => ActFormat::from_str(&str_field(v, "act", path)?,
+                                           &format!("{path}.act"))?,
+        };
+        let algo = match v.get("algo") {
+            None => base_or("algo")?.algo,
+            Some(_) => Algo::from_str(&str_field(v, "algo", path)?,
+                                      &format!("{path}.algo"))?,
+        };
+        let lowrank = match v.get("lowrank") {
+            None => base_or("lowrank")?.lowrank,
+            Some(Value::Null) => None,
+            Some(other) => {
                 let lpath = format!("{path}.lowrank");
                 let lo = as_obj(other, &lpath)?;
                 check_keys(lo, &["k", "scaled", "bits"], &lpath)?;
@@ -501,8 +525,12 @@ impl LayerSpec {
                 })
             }
         };
-        let weight = WeightFormat::parse(field(v, "weight", path)?,
-                                         &format!("{path}.weight"))?;
+        let weight = match v.get("weight") {
+            None => base_or("weight")?.weight,
+            Some(val) => {
+                WeightFormat::parse(val, &format!("{path}.weight"))?
+            }
+        };
         Ok(LayerSpec { weight, act, algo, lowrank })
     }
 
@@ -659,8 +687,11 @@ impl QuantSpec {
                 check_keys(oo, &["match", "spec"], &ipath)?;
                 overrides.push(Override {
                     pattern: str_field(ov, "match", &ipath)?,
-                    spec: LayerSpec::parse(field(ov, "spec", &ipath)?,
-                                           &format!("{ipath}.spec"))?,
+                    spec: LayerSpec::parse_with_base(
+                        field(ov, "spec", &ipath)?,
+                        &format!("{ipath}.spec"),
+                        Some(&default),
+                    )?,
                 });
             }
         }
@@ -688,6 +719,22 @@ impl QuantSpec {
         }
         bail!("unknown method name '{name}'")
     }
+}
+
+/// The self-speculative draft plan (DESIGN.md §13): the same quantized
+/// backbone with every low-rank error-reconstruction term clamped to
+/// `null` — default and overrides alike.  The draft shares W_q with the
+/// corrected model, so drafting streams only the backbone weights; the
+/// `(m + n) * k` low-rank traffic is paid once per *verify* pass
+/// instead of once per token.  Mirrors `spec.draft_of` in
+/// python/compile/quant/spec.py.
+pub fn draft_of(plan: &QuantSpec) -> QuantSpec {
+    let mut draft = plan.clone();
+    draft.default.lowrank = None;
+    for ov in &mut draft.overrides {
+        ov.spec.lowrank = None;
+    }
+    draft
 }
 
 // ---------------------------------------------------------------------------
@@ -940,6 +987,62 @@ mod tests {
         // Round-trips with overrides intact.
         let back = QuantSpec::from_json(&plan.to_canonical_json()).unwrap();
         assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn partial_override_inherits_default() {
+        // An override carrying only `lowrank: null` strips the
+        // low-rank term and inherits weight/act/algo from the default.
+        let text = "{\"version\":1,\"default\":{\"weight\":{\"kind\":\
+                    \"mxint\",\"bits\":4,\"exp_bits\":4,\"block\":16},\
+                    \"act\":\"mx8\",\"algo\":\"rtn\",\"lowrank\":\
+                    {\"k\":16,\"scaled\":true,\"bits\":8}},\"overrides\":\
+                    [{\"match\":\"layers.*.fc2\",\"spec\":\
+                    {\"lowrank\":null}}]}";
+        let plan = QuantSpec::from_json(text).unwrap();
+        let ov = plan.resolve("layers.1.fc2");
+        assert_eq!(ov.lowrank, None);
+        assert_eq!(ov.weight, plan.default.weight);
+        assert_eq!(ov.act, plan.default.act);
+        assert_eq!(ov.algo, plan.default.algo);
+        // Canonical emission is the full form; it round-trips to the
+        // same plan even though the input was partial.
+        let back =
+            QuantSpec::from_json(&plan.to_canonical_json()).unwrap();
+        assert_eq!(back, plan);
+        // The default itself must still be complete.
+        let err = QuantSpec::from_json(
+            "{\"version\":1,\"default\":{\"lowrank\":null},\
+             \"overrides\":[]}",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("missing key"), "{err}");
+    }
+
+    #[test]
+    fn draft_of_clamps_all_lowrank() {
+        let mut plan = l2qer_w4a8();
+        let mut ffn = plan.default;
+        ffn.lowrank = Some(LowRank { k: 32, scaled: true, bits: Some(8) });
+        plan.overrides.push(Override {
+            pattern: "layers.*.fc1".into(),
+            spec: ffn,
+        });
+        let draft = draft_of(&plan);
+        assert!(draft.layer_specs().all(|ls| ls.lowrank.is_none()));
+        assert_eq!(draft.max_rank(), 0);
+        // Structure untouched: same weight grid, act, algo, patterns.
+        assert_eq!(draft.default.weight, plan.default.weight);
+        assert_eq!(draft.overrides.len(), 1);
+        assert_eq!(draft.overrides[0].pattern, "layers.*.fc1");
+        draft.validate().unwrap();
+        // The draft streams strictly fewer weight bits.
+        let shapes = layer_shapes(64, 256, 2);
+        assert!(draft.model_avg_bits(&shapes)
+                < plan.model_avg_bits(&shapes));
+        // Idempotent, and a no-op on plans without low-rank terms.
+        assert_eq!(draft_of(&draft), draft);
     }
 
     #[test]

@@ -53,6 +53,7 @@ fn cfg(
             prefix_sharing: sharing,
             swap_blocks: 0,
         }),
+        spec: None,
         admission,
     }
 }

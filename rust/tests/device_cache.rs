@@ -35,6 +35,7 @@ fn cfg(batch: usize) -> EngineConfig {
         tokens_per_step: 0, // engine default: batch + largest bucket
         host_cache: false, // FakeBackend's mode is chosen directly
         paged: None,
+        spec: None,
         admission: Default::default(),
     }
 }
@@ -273,6 +274,7 @@ fn real_runtime_device_host_bit_exact() {
             tokens_per_step: 0, // engine default: batch + largest bucket
             host_cache,
             paged: None,
+            spec: None,
             admission: Default::default(),
         };
         let engine = lqer::coordinator::EngineHandle::spawn(

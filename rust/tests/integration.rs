@@ -164,6 +164,7 @@ fn engine_serves_deterministically_and_batches() {
         tokens_per_step: 0, // engine default: batch + largest bucket
         host_cache: false,
         paged: None,
+        spec: None,
         admission: Default::default(),
     };
     let engine = EngineHandle::spawn(m.dir.clone(), cfg).unwrap();

@@ -52,6 +52,7 @@ fn cfg(
             prefix_sharing: false,
             swap_blocks: 0,
         }),
+        spec: None,
         admission,
     }
 }
@@ -274,6 +275,54 @@ fn preemption_requeues_and_replays_identically() {
     );
     assert_eq!(rm.preemptions, 0);
     assert_same_outputs(&reference, &starved, "preempted vs ample pool");
+}
+
+#[test]
+fn preemption_mid_speculation_replays_identically() {
+    // Same starved-pool scenario, but the running lanes are inside
+    // speculative draft/verify rounds (DESIGN.md §13) when the
+    // eviction lands: the rewind must leave the victim's block table
+    // consistent enough that requeue + replay reproduces the exact
+    // ample-pool, non-speculative outputs.
+    let batch = 2;
+    let wait = AdmissionPolicy::Wait { queue_depth: 64, deadline_ms: 0 };
+    let no_eos = VOCAB as u32 + 1;
+    let mk = |id: u64| Request {
+        id,
+        prompt: (0..14).map(|j| ((id as usize + j) % 5) as u32 + 10)
+            .collect(),
+        max_new_tokens: 12,
+        sampling: Sampling::Greedy,
+        priority: Default::default(),
+    };
+    let requests: Vec<Request> = (1..=2).map(mk).collect();
+
+    let spec = lqer::coordinator::SpecConfig { gamma: 4 };
+    let starved_cfg = EngineConfig {
+        spec: Some(spec),
+        ..cfg(batch, Some(5), wait)
+    };
+    let (starved, sm) = run_requests(
+        Engine::with_backend(paged(FakeCacheMode::Host, batch, 5),
+                             starved_cfg, no_eos),
+        &requests,
+    );
+    assert!(sm.preemptions > 0, "pool of 5 blocks must preempt");
+    assert!(sm.draft_tokens > 0, "speculation must have run");
+    assert_eq!(sm.completed, 2);
+
+    let ample = batch * T_MAX / BS;
+    let (reference, rm) = run_requests(
+        Engine::with_backend(
+            paged(FakeCacheMode::Host, batch, ample),
+            cfg(batch, Some(ample), wait),
+            no_eos,
+        ),
+        &requests,
+    );
+    assert_eq!(rm.preemptions, 0);
+    assert_same_outputs(&reference, &starved,
+                        "mid-speculation preemption vs ample pool");
 }
 
 #[test]

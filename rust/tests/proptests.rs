@@ -182,6 +182,124 @@ fn block_allocator_and_tables_keep_invariants() {
 }
 
 // ---------------------------------------------------------------------------
+// Paged KV: speculative rewind never leaks, double-frees, or unshares
+// ---------------------------------------------------------------------------
+
+#[test]
+fn block_table_rewind_keeps_allocator_invariants() {
+    check("paged-rewind", 60, &OpTrace, |ops| {
+        let (num_blocks, bs) = (9usize, 4usize);
+        let mut alloc = BlockAllocator::new(num_blocks, bs);
+        let mut table = BlockTable::new();
+        // Model refcount per block (0 = free); extra refs simulate a
+        // prefix-sharing peer still holding the block.
+        let mut model = vec![0u32; num_blocks];
+        let mut peer_refs: Vec<u32> = Vec::new();
+        for &op in ops {
+            match op % 3 {
+                0 => {
+                    // grow the table by a freshly-allocated block (what
+                    // grow_for_speculation does before a draft round)
+                    if let Some(id) = alloc.alloc() {
+                        if model[id as usize] != 0 {
+                            return Err(format!(
+                                "alloc handed out live block {id}"
+                            ));
+                        }
+                        model[id as usize] = 1;
+                        table.push(id);
+                    }
+                }
+                1 => {
+                    // a peer shares one of the table's blocks
+                    if !table.is_empty() {
+                        let idx = (op as usize / 3) % table.len();
+                        let id = table.blocks()[idx];
+                        alloc.retain(id);
+                        model[id as usize] += 1;
+                        peer_refs.push(id);
+                    }
+                }
+                _ => {
+                    // rewind to a random row count, freeing the tail
+                    let cap = table.capacity_rows(bs);
+                    let rows = (op as usize / 3) % (cap + 1);
+                    let before = table.blocks().to_vec();
+                    let keep = rows.div_ceil(bs);
+                    let freed = table.truncate_rows(rows, bs);
+                    // the tail and only the tail came back, in order
+                    if table.blocks()
+                        != &before[..before.len() - freed.len()]
+                    {
+                        return Err("rewind disturbed the kept prefix"
+                            .into());
+                    }
+                    if !freed.is_empty()
+                        && (freed != before[keep..]
+                            || table.capacity_rows(bs) < rows)
+                    {
+                        return Err(format!(
+                            "rewind to {rows} rows freed wrong tail: \
+                             {freed:?} of {before:?}"
+                        ));
+                    }
+                    for id in freed {
+                        // never a double-free: the block must be live
+                        if alloc.ref_count(id) == 0
+                            || model[id as usize] == 0
+                        {
+                            return Err(format!(
+                                "double-free of block {id}"
+                            ));
+                        }
+                        alloc.free(id);
+                        model[id as usize] -= 1;
+                        // a shared block survives the rewind: the
+                        // peer's reference keeps it out of the free
+                        // list
+                        if model[id as usize] > 0
+                            && alloc.ref_count(id) == 0
+                        {
+                            return Err(format!(
+                                "rewind freed shared block {id} from \
+                                 under its peer"
+                            ));
+                        }
+                    }
+                }
+            }
+            for b in 1..num_blocks as u32 {
+                if alloc.ref_count(b) != model[b as usize] {
+                    return Err(format!(
+                        "refcount drift on {b}: {} != {}",
+                        alloc.ref_count(b),
+                        model[b as usize]
+                    ));
+                }
+            }
+            if alloc.in_use() + alloc.free_count() != alloc.capacity() {
+                return Err("capacity accounting broken".into());
+            }
+        }
+        // Releasing the table and every peer ref restores the pool.
+        for id in table.take_blocks() {
+            alloc.free(id);
+        }
+        for id in peer_refs {
+            alloc.free(id);
+        }
+        if alloc.free_count() != alloc.capacity() {
+            return Err(format!(
+                "leaked blocks: {}/{} free after full release",
+                alloc.free_count(),
+                alloc.capacity()
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Paged KV: refcount/revive invariants over random share traces
 // ---------------------------------------------------------------------------
 

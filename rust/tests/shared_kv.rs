@@ -55,6 +55,7 @@ fn cfg(
             prefix_sharing: sharing,
             swap_blocks,
         }),
+        spec: None,
         admission,
     }
 }

@@ -50,6 +50,13 @@ cargo test -q --test proptests \
 # preemption replay.
 cargo test -q --test chunked_prefill
 
+# Speculative-decode gate (DESIGN.md §13): speculative-vs-sequential
+# golden equality (flat + paged, greedy + seeded top-k), the
+# mid-speculation preemption replay, the rewind proptest, and the
+# modeled >=1.3x speedup bar.
+cargo test -q --test spec_decode
+cargo test -q --test proptests block_table_rewind_keeps_allocator_invariants
+
 # plan-check: the checked-in QuantSpec golden fixtures must validate on
 # both sides of the language boundary.  The rust side ran above inside
 # `cargo test` (rust/tests/plan_roundtrip.rs); the python validator is
@@ -70,10 +77,13 @@ if [[ "$BENCH" == 1 ]]; then
     ./target/release/lqer bench kv --out BENCH_kvpaged.json
     ./target/release/lqer bench kvshared --out BENCH_kvshared.json
     ./target/release/lqer bench chunked --out BENCH_chunked.json
+    ./target/release/lqer bench spec --out BENCH_spec.json
     python3 scripts/bench_guard.py --bench BENCH_kvpaged.json \
         --baseline BENCH_baseline.json
     python3 scripts/bench_guard.py --bench BENCH_chunked.json \
         --baseline BENCH_baseline_chunked.json
+    python3 scripts/bench_guard.py --bench BENCH_spec.json \
+        --baseline BENCH_baseline_spec.json
 fi
 
 if [[ "$FAST" != 1 ]]; then

@@ -7,7 +7,8 @@
 # the python suite on its own.  .github/workflows/ci.yml runs these same
 # targets so local and CI gates cannot drift.
 
-.PHONY: artifacts tier1 tier1-bench test-python plan-check bench-guard
+.PHONY: artifacts tier1 tier1-bench test-python plan-check bench-guard \
+	staticcheck
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -26,6 +27,13 @@ test-python:
 plan-check:
 	python3 python/compile/quant/spec.py check \
 	    rust/tests/fixtures/quantspec_golden.json
+
+# Cross-language consistency analyzer (DESIGN.md §14): six passes over
+# the mirrored surfaces (spec.py<->spec.rs, manifest keys, metrics,
+# CLI flags, backend gating, test registry).  Pure stdlib, no cargo —
+# also the first tier1.sh step.
+staticcheck:
+	python3 scripts/staticcheck
 
 # Re-check the last bench run against the committed baseline without
 # re-running the bench.

@@ -1,0 +1,612 @@
+"""Tests for scripts/staticcheck (DESIGN.md §14).
+
+Strategy: build a *synthetic fixture tree* that replicates the repo
+layout with minimal internally-consistent surfaces, assert every pass
+reports zero findings on it, then inject one known drift per pass and
+assert the documented finding code fires.  The fixtures are
+deliberately tiny — they prove the extraction logic, while the runner
+test at the bottom proves the passes hold on the real repo.
+"""
+
+import os
+import json
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+SC_DIR = os.path.join(REPO, "scripts", "staticcheck")
+if SC_DIR not in sys.path:
+    sys.path.insert(0, SC_DIR)
+
+import p1_mirror  # noqa: E402
+import p2_manifest  # noqa: E402
+import p3_metrics  # noqa: E402
+import p4_cli  # noqa: E402
+import p5_backend  # noqa: E402
+import p6_registry  # noqa: E402
+import sccore  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# fixture tree
+# ---------------------------------------------------------------------------
+
+PY_SPEC = '''\
+LOWRANK_DEFAULT_BITS = 8
+ACTS = ("none", "mx8")
+ALGOS = ("none", "rtn", "gptq")
+INT_ONLY_ALGOS = ("gptq",)
+
+
+class Fp16:
+    pass
+
+
+class Mxint:
+    bits: int
+    exp_bits: int = 4
+    block: int = 16
+
+
+class LowRank:
+    k: int
+    scaled: bool = False
+    bits: int | None = LOWRANK_DEFAULT_BITS
+
+
+class SpecError(ValueError):
+    pass
+
+
+def _parse_weight(obj, path):
+    _check_keys(obj, ("kind", "bits"), path)
+    bits = _int(_field(obj, "bits", path), f"{path}.bits", 2, 8)
+    if bits is None:
+        raise SpecError(f"{path}: expected an integer in [2, 8]")
+    return bits
+
+
+def from_method_name(name):
+    if name not in METHODS:
+        raise SpecError(f"unknown method name '{name}'")
+    return METHODS[name]
+
+
+METHODS: dict = {
+    "fp16": _plan(Fp16(), "none", "none"),
+    "mxint-w4a8": _plan(Mxint(4), "mx8", "rtn"),
+    "l2qer-w4a8": _plan(Mxint(4), "mx8", "rtn",
+                        LowRank(16, scaled=True)),
+}
+'''
+
+RS_SPEC = '''\
+pub const LOWRANK_DEFAULT_BITS: u32 = 8;
+
+pub enum ActFormat { None, Mx8 }
+
+impl ActFormat {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ActFormat::None => "none",
+            ActFormat::Mx8 => "mx8",
+        }
+    }
+}
+
+pub enum Algo { None, Rtn, Gptq }
+
+impl Algo {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Algo::None => "none",
+            Algo::Rtn => "rtn",
+            Algo::Gptq => "gptq",
+        }
+    }
+
+    pub fn needs_int_weights(&self) -> bool {
+        matches!(self, Algo::Gptq)
+    }
+}
+
+fn mx(bits: u32) -> WeightFormat {
+    WeightFormat::Mxint { bits, exp_bits: 4, block: 16 }
+}
+
+fn lr(k: u32, scaled: bool) -> Option<LowRank> {
+    Some(LowRank { k, scaled, bits: Some(LOWRANK_DEFAULT_BITS) })
+}
+
+fn parse_weight(v: &Value, path: &str) -> Result<i64> {
+    check_keys(v, &["kind", "bits"], path)?;
+    let bits = int_field(v, "bits", path, 2, 8)?;
+    if bits < 0 {
+        bail!("{path}: expected an integer in [2, 8]");
+    }
+    Ok(bits)
+}
+
+pub fn method_registry(name: &str) -> Result<Plan> {
+    use ActFormat::{Mx8, None as ANone};
+    use Algo::{None as GNone, Rtn};
+    Ok(match name {
+        "fp16" => plan(WeightFormat::Fp16, ANone, GNone, None),
+        "mxint-w4a8" => plan(mx(4), Mx8, Rtn, None),
+        "l2qer-w4a8" => plan(mx(4), Mx8, Rtn, lr(16, true)),
+        _ => bail!("unknown method name '{name}'"),
+    })
+}
+'''
+
+PY_AOT = '''\
+def dataclasses_dict(cfg):
+    return {"name": cfg.name, "vocab": cfg.vocab, "t_max": cfg.t_max}
+
+
+def stage_quant(run_index):
+    entry = {"model": "m", "method": "fp16", "weights": "w.bin"}
+    run_index.append(entry)
+
+
+def stage_hlo(graph_index):
+    needed = {}
+    needed[("m", "tag", "score", 4, 96)] = 1
+    needed[("m", "tag", "decode", 4, 0)] = 1
+    for key in sorted(needed):
+        graph_index.append({"model": "m", "entry": key[2], "b": key[3],
+                            "t": key[4], "path": "x.hlo"})
+
+
+def main(trained, models, run_index, graph_index):
+    serve = {"model": "m", "methods": ["fp16"]}
+    serve["paged"] = {"block_size": 16}
+    manifest = {
+        "created": "now",
+        "models": {name: {**dataclasses_dict(trained[name]),
+                          "n_params": 10} for name in models},
+        "runs": run_index,
+        "graphs": graph_index,
+        "serve": serve,
+    }
+    return manifest
+'''
+
+RS_CONFIG = '''\
+impl Manifest {
+    fn from_value(v: &Value) -> Result<Manifest> {
+        let created = v.get("created");
+        for (name, m) in obj_entries(v.req("models")?, "models")? {
+            let _ = m.get("name");
+            let _ = m.usize_at("vocab")?;
+            let _ = m.usize_at("t_max")?;
+            let _ = m.usize_at("n_params")?;
+        }
+        for r in arr_entries(v.req("runs")?, "runs")? {
+            let _ = r.str_at("model")?;
+            let _ = r.str_at("method")?;
+            let _ = r.str_at("weights")?;
+        }
+        for g in arr_entries(v.req("graphs")?, "graphs")? {
+            let _ = g.str_at("entry")?;
+            let _ = g.usize_at("b")?;
+            let _ = g.usize_at("t")?;
+            let _ = g.str_at("path")?;
+        }
+        let sv = v.req("serve")?;
+        let _ = sv.str_at("model")?;
+        let _ = sv.req("methods")?;
+        if let Some(p) = sv.get("paged") {
+            let _ = p.usize_at("block_size")?;
+        }
+        Ok(Manifest)
+    }
+}
+'''
+
+RS_RUNTIME = '''\
+impl ModelRunner {
+    fn outputs_for(entry: &str) -> usize {
+        match entry {
+            "score" => 1,
+            "decode" => 3,
+            _ => 1,
+        }
+    }
+}
+'''
+
+RS_METRICS = '''\
+pub struct EngineMetrics {
+    pub completed: u64,
+    pub decode_ns: u64,
+    pub ttft_ms: LatencyHistogram,
+    pub exec: ExecStats,
+}
+
+impl EngineMetrics {
+    pub fn report(&self) -> String {
+        format!("done {} | {:.1} tok/s | ttft p50 {:.0}",
+                self.completed, self.decode_tokens_per_sec(),
+                self.ttft_ms.percentile(50.0))
+    }
+}
+'''
+
+RS_SERVER = '''\
+fn route(req: &HttpRequest) -> String {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/metrics") => http_response(
+            &json::obj(vec![
+                ("completed", json::num(m.completed as f64)),
+                ("decode_tok_per_sec",
+                 json::num(m.decode_tokens_per_sec())),
+                ("ttft_ms_p50", json::num(m.ttft_ms.percentile(50.0))),
+            ])
+            .to_string(),
+        ),
+        _ => http_response(404),
+    }
+}
+'''
+
+RS_MAIN = '''\
+fn serve(argv: &[String]) -> Result<()> {
+    let a = Args::new("serve", "HTTP serving frontend")
+        .opt("model", "m", "model name")
+        .opt("max-prefill-per-step", "", "deprecated alias for budget")
+        .flag("paged", "paged KV")
+        .parse(argv)?;
+    Ok(())
+}
+
+fn generate(argv: &[String]) -> Result<()> {
+    let a = Args::new("generate", "one request")
+        .opt("model", "m", "model name")
+        .opt("prompt", "the", "prompt text")
+        .opt("max-prefill-per-step", "", "deprecated alias for budget")
+        .flag("paged", "paged KV")
+        .parse(argv)?;
+    Ok(())
+}
+
+fn serve_bench(argv: &[String]) -> Result<()> {
+    let a = Args::new("serve-bench", "load test")
+        .opt("model", "m", "model name")
+        .opt("max-prefill-per-step", "", "deprecated alias for budget")
+        .flag("paged", "paged KV")
+        .parse(argv)?;
+    Ok(())
+}
+
+fn bench_kv(a: &Args) -> Result<()> {
+    let out = json::obj(vec![
+        ("completed", json::num(1.0)),
+        ("rejected", json::num(0.0)),
+        ("tokens_per_sec", json::num(1.0)),
+    ]);
+    Ok(())
+}
+'''
+
+RS_BACKEND = '''\
+pub trait DecodeBackend {
+    fn vocab(&self) -> usize;
+    fn decode(&mut self) -> Result<Vec<f32>>;
+    fn supports_paged(&self) -> bool {
+        false
+    }
+    fn supports_block_ops(&self) -> bool {
+        false
+    }
+    fn supports_speculation(&self) -> bool {
+        false
+    }
+    fn prefill_chunk_paged(&mut self) -> Result<()> {
+        bail!("backend has no paged KV backing")
+    }
+    fn decode_paged(&mut self) -> Result<Vec<f32>> {
+        bail!("backend has no paged KV backing")
+    }
+    fn copy_block(&mut self) -> Result<()> {
+        bail!("backend has no block ops")
+    }
+    fn export_block(&mut self) -> Result<()> {
+        bail!("backend has no block ops")
+    }
+    fn import_block(&mut self) -> Result<()> {
+        bail!("backend has no block ops")
+    }
+    fn draft_step(&mut self) -> Result<()> {
+        bail!("backend has no speculation")
+    }
+    fn verify_tokens(&mut self) -> Result<()> {
+        bail!("backend has no speculation")
+    }
+}
+
+pub struct FakeBackend;
+
+impl DecodeBackend for FakeBackend {
+    fn vocab(&self) -> usize {
+        7
+    }
+    fn decode(&mut self) -> Result<Vec<f32>> {
+        Ok(vec![])
+    }
+    fn supports_paged(&self) -> bool {
+        true
+    }
+    fn prefill_chunk_paged(&mut self) -> Result<()> {
+        Ok(())
+    }
+    fn decode_paged(&mut self) -> Result<Vec<f32>> {
+        Ok(vec![])
+    }
+}
+'''
+
+BENCH_GUARD = '''\
+HIGHER_IS_BETTER = {"completed", "tokens_per_sec"}
+LOWER_IS_BETTER = {"rejected"}
+'''
+
+CARGO_TOML = '''\
+[package]
+name = "fixture"
+
+[[test]]
+name = "integration"
+path = "rust/tests/integration.rs"
+'''
+
+TREE = {
+    "python/compile/quant/spec.py": PY_SPEC,
+    "python/compile/aot.py": PY_AOT,
+    "rust/src/quant/spec.rs": RS_SPEC,
+    "rust/src/config/mod.rs": RS_CONFIG,
+    "rust/src/runtime/mod.rs": RS_RUNTIME,
+    "rust/src/coordinator/metrics.rs": RS_METRICS,
+    "rust/src/coordinator/server.rs": RS_SERVER,
+    "rust/src/coordinator/backend.rs": RS_BACKEND,
+    "rust/src/main.rs": RS_MAIN,
+    "scripts/bench_guard.py": BENCH_GUARD,
+    "Cargo.toml": CARGO_TOML,
+    "rust/tests/integration.rs": "fn main() {}\n",
+    "BENCH_baseline.json": json.dumps(
+        {"bench": {"paged": {"completed": 4, "rejected": 0,
+                             "tokens_per_sec": 0.0}}}),
+}
+
+ALL_PASSES = [p1_mirror, p2_manifest, p3_metrics, p4_cli, p5_backend,
+              p6_registry]
+
+
+@pytest.fixture()
+def tree(tmp_path):
+    for rel, content in TREE.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(content)
+    return tmp_path
+
+
+def mutate(tree, rel, old, new):
+    p = tree / rel
+    text = p.read_text()
+    assert old in text, f"mutation anchor missing in {rel}: {old!r}"
+    p.write_text(text.replace(old, new))
+
+
+def codes(findings):
+    return sorted(f.code for f in findings)
+
+
+def keys(findings):
+    return sorted(f.key for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# clean tree: zero findings everywhere
+# ---------------------------------------------------------------------------
+
+
+def test_clean_tree_has_zero_findings(tree):
+    for mod in ALL_PASSES:
+        found = mod.run(str(tree))
+        assert found == [], (
+            f"{mod.PASS_ID} on the clean fixture: "
+            + "; ".join(f.render() for f in found))
+
+
+# ---------------------------------------------------------------------------
+# one injected drift per pass -> the documented code fires
+# ---------------------------------------------------------------------------
+
+
+def test_p1_renamed_enum_variant_fires_sc101(tree):
+    # rust renames the mx8 act format: drift on both sides of the set.
+    mutate(tree, "rust/src/quant/spec.rs",
+           'ActFormat::Mx8 => "mx8",', 'ActFormat::Mx8 => "mx9",')
+    found = p1_mirror.run(str(tree))
+    assert "SC101:acts:mx8" in keys(found)
+    assert "SC101:acts:mx9" in keys(found)
+    assert codes(found) == ["SC101", "SC101"]
+
+
+def test_p1_dropped_method_fires_sc104(tree):
+    mutate(tree, "rust/src/quant/spec.rs",
+           '"mxint-w4a8" => plan(mx(4), Mx8, Rtn, None),', "")
+    assert "SC104:py:mxint-w4a8" in keys(p1_mirror.run(str(tree)))
+
+
+def test_p1_default_drift_fires_sc104_plan(tree):
+    # rust changes the Mxint block default: every mx() method drifts.
+    mutate(tree, "rust/src/quant/spec.rs", "block: 16", "block: 32")
+    found = keys(p1_mirror.run(str(tree)))
+    assert "SC104:plan:mxint-w4a8" in found
+    assert "SC104:plan:l2qer-w4a8" in found
+
+
+def test_p1_message_drift_fires_sc105(tree):
+    mutate(tree, "rust/src/quant/spec.rs",
+           'bail!("{path}: expected an integer in [2, 8]")',
+           'bail!("{path}: expected an int in [2, 8]")')
+    found = codes(p1_mirror.run(str(tree)))
+    assert found == ["SC105", "SC105"], found
+
+
+def test_p1_constant_drift_fires_sc106(tree):
+    mutate(tree, "python/compile/quant/spec.py",
+           "LOWRANK_DEFAULT_BITS = 8", "LOWRANK_DEFAULT_BITS = 6")
+    found = p1_mirror.run(str(tree))
+    assert "SC106:LOWRANK_DEFAULT_BITS" in keys(found)
+
+
+def test_p2_dropped_consumer_fires_sc201(tree):
+    mutate(tree, "rust/src/config/mod.rs",
+           'let created = v.get("created");', "")
+    assert "SC201:created" in keys(p2_manifest.run(str(tree)))
+
+
+def test_p2_orphan_consumer_fires_sc202(tree):
+    mutate(tree, "rust/src/config/mod.rs",
+           'let _ = sv.str_at("model")?;',
+           'let _ = sv.str_at("model")?;\n'
+           '        let _ = sv.get("spec");')
+    assert "SC202:spec" in keys(p2_manifest.run(str(tree)))
+
+
+def test_p2_entry_kind_drift_fires_sc203(tree):
+    mutate(tree, "python/compile/aot.py",
+           'needed[("m", "tag", "decode", 4, 0)] = 1',
+           'needed[("m", "tag", "decode", 4, 0)] = 1\n'
+           '    needed[("m", "tag", "decode_draft", 4, 0)] = 1')
+    assert "SC203:py:decode_draft" in keys(p2_manifest.run(str(tree)))
+
+
+def test_p3_unreported_metric_fires_sc301_and_sc302(tree):
+    mutate(tree, "rust/src/coordinator/metrics.rs",
+           "pub completed: u64,",
+           "pub completed: u64,\n    pub preemptions: u64,")
+    found = keys(p3_metrics.run(str(tree)))
+    assert "SC301:preemptions" in found
+    assert "SC302:preemptions" in found
+
+
+def test_p3_missing_bench_key_fires_sc303(tree):
+    mutate(tree, "rust/src/main.rs",
+           '("tokens_per_sec", json::num(1.0)),', "")
+    found = keys(p3_metrics.run(str(tree)))
+    assert "SC303:BENCH_baseline.json:tokens_per_sec" in found
+
+
+def test_p4_missing_cli_flag_fires_sc401(tree):
+    mutate(tree, "rust/src/main.rs",
+           '        .flag("paged", "paged KV")\n        .parse(argv)?;\n'
+           '    Ok(())\n}\n\nfn serve_bench',
+           '        .parse(argv)?;\n    Ok(())\n}\n\nfn serve_bench')
+    assert "SC401:paged:generate" in keys(p4_cli.run(str(tree)))
+
+
+def test_p4_alias_drift_fires_sc402(tree):
+    mutate(tree, "rust/src/main.rs",
+           '    let a = Args::new("serve-bench", "load test")\n'
+           '        .opt("model", "m", "model name")\n'
+           '        .opt("max-prefill-per-step", "", '
+           '"deprecated alias for budget")',
+           '    let a = Args::new("serve-bench", "load test")\n'
+           '        .opt("model", "m", "model name")\n'
+           '        .opt("max-prefill-per-step", "", "alias for budget")')
+    found = keys(p4_cli.run(str(tree)))
+    assert "SC402:max-prefill-per-step:serve-bench:unmarked" in found
+
+
+def test_p5_ungated_backend_method_fires_sc503(tree):
+    # FakeBackend claims supports_paged but drops a gated override.
+    mutate(tree, "rust/src/coordinator/backend.rs",
+           "    fn decode_paged(&mut self) -> Result<Vec<f32>> {\n"
+           "        Ok(vec![])\n    }\n", "")
+    found = keys(p5_backend.run(str(tree)))
+    assert "SC503:FakeBackend:decode_paged" in found
+
+
+def test_p5_new_bail_method_without_gate_fires_sc501(tree):
+    mutate(tree, "rust/src/coordinator/backend.rs",
+           "pub struct FakeBackend;",
+           "pub struct FakeBackend;\n"
+           "pub trait Extra {}\n")
+    mutate(tree, "rust/src/coordinator/backend.rs",
+           "    fn vocab(&self) -> usize;",
+           "    fn vocab(&self) -> usize;\n"
+           "    fn fork_lane(&mut self) -> Result<()> {\n"
+           "        bail!(\"backend cannot fork\")\n    }")
+    assert "SC501:fork_lane" in keys(p5_backend.run(str(tree)))
+
+
+def test_p5_panic_macro_fires_sc502(tree):
+    mutate(tree, "rust/src/runtime/mod.rs",
+           '"decode" => 3,', '"decode" => todo!("later"),')
+    found = keys(p5_backend.run(str(tree)))
+    assert "SC502:rust/src/runtime/mod.rs:todo!" in found
+
+
+def test_p6_unregistered_test_fires_sc601(tree):
+    (tree / "rust" / "tests" / "extra.rs").write_text("fn main() {}\n")
+    found = keys(p6_registry.run(str(tree)))
+    assert "SC601:rust/tests/extra.rs" in found
+
+
+def test_p6_dangling_entry_fires_sc604(tree):
+    (tree / "rust" / "tests" / "integration.rs").unlink()
+    found = keys(p6_registry.run(str(tree)))
+    assert "SC604:integration" in found
+
+
+# ---------------------------------------------------------------------------
+# framework: allowlist plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_allowlist_requires_justification_and_flags_stale(tmp_path):
+    path = tmp_path / "allow.txt"
+    path.write_text("SC101:acts:mx8  # known, tracked in #42\n"
+                    "SC104:py:bare-key\n")
+    allow = sccore.Allowlist.load(str(path))
+    assert [f.code for f in allow.problems] == ["SC002"]
+    hit = sccore.finding("SC101", "acts:mx8", "drift")
+    miss = sccore.finding("SC999", "other", "kept")
+    active, suppressed, stale = allow.split([hit, miss])
+    assert [f.key for f in suppressed] == ["SC101:acts:mx8"]
+    assert [f.key for f in active] == ["SC999:other"]
+    assert stale == ["SC104:py:bare-key"]
+
+
+def test_missing_surface_reports_sc001(tree):
+    (tree / "rust" / "src" / "quant" / "spec.rs").unlink()
+    found = p1_mirror.run(str(tree))
+    assert [f.code for f in found] == ["SC001"]
+
+
+# ---------------------------------------------------------------------------
+# the real repo passes through the checked-in runner + allowlist
+# ---------------------------------------------------------------------------
+
+
+def test_real_repo_is_clean_via_runner():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "staticcheck")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "staticcheck: OK" in proc.stdout
+
+
+def test_back_compat_shim_still_works():
+    proc = subprocess.run(
+        [sys.executable,
+         os.path.join(REPO, "scripts", "check_test_registry.py")],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "check_test_registry: OK" in proc.stdout

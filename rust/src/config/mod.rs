@@ -55,15 +55,28 @@ pub struct RunInfo {
     pub meta: PathBuf,
 }
 
-/// One lowered HLO graph.
+/// One lowered HLO graph.  `entry` is one of the kinds aot.py lowers:
+/// score | prefill | decode | decode_dev | decode_paged | kvwrite |
+/// kvwrite_paged | prefill_chunk | decode_draft | verify_batch
+/// (staticcheck P2 keeps this set in lockstep with
+/// `ModelRunner::outputs_for`).
 #[derive(Debug, Clone)]
 pub struct GraphInfo {
     pub model: String,
     pub graph: String,
-    pub entry: String, // score | prefill | decode | decode_dev | kvwrite
+    pub entry: String,
     pub b: usize,
     pub t: usize,
     pub path: PathBuf,
+}
+
+/// Figure-1a error-matrix export summary: the layer it was cut from and
+/// the `E_q` shape, so consumers can size buffers without opening
+/// `fig1a/fig1a.json` (null/absent when the AOT run skipped the stage).
+#[derive(Debug, Clone)]
+pub struct Fig1aInfo {
+    pub layer: String,
+    pub shape: (usize, usize),
 }
 
 /// Paged-KV geometry the AOT path lowered the paged graphs with
@@ -126,6 +139,8 @@ pub struct ServeInfo {
 #[derive(Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
+    /// Build timestamp stamped by aot.py (absent on legacy manifests).
+    pub created: Option<String>,
     pub models: Vec<ModelInfo>,
     pub runs: Vec<RunInfo>,
     pub graphs: Vec<GraphInfo>,
@@ -133,6 +148,10 @@ pub struct Manifest {
     pub score_shape: (usize, usize),
     pub fig3_model: String,
     pub fig3_ranks: Vec<usize>,
+    pub fig1a: Option<Fig1aInfo>,
+    /// Dataset subdirectory named by the manifest's `data.dir`
+    /// (legacy manifests without a `data` object keep the old layout).
+    data_subdir: String,
 }
 
 /// Strict array-of-usize accessor: a malformed manifest fails here with
@@ -182,6 +201,15 @@ impl Manifest {
         let mut models = Vec::new();
         for (name, m) in obj_entries(v.req("models")?, "models")? {
             let ctx = || format!("models.{name}");
+            // aot.py stamps each entry with its own map key under
+            // "name"; a mismatch means the manifest was hand-edited.
+            if let Some(n) = m.get("name").and_then(|n| n.as_str()) {
+                anyhow::ensure!(
+                    n == name,
+                    "models.{name}: entry name '{n}' does not match \
+                     its key"
+                );
+            }
             models.push(ModelInfo {
                 name: name.clone(),
                 vocab: m.usize_at("vocab").path_ctx(ctx)?,
@@ -331,8 +359,26 @@ impl Manifest {
 
         let score_shape = usize_pair(v.req("score_shape")?, "score_shape")?;
         let fig3 = v.req("fig3")?;
+        // aot.py emits `"fig1a": null` when the export stage was
+        // skipped; only an object carries the summary.
+        let fig1a = match v.get("fig1a") {
+            Some(f) if !matches!(f, Value::Null) => Some(Fig1aInfo {
+                layer: f
+                    .str_at("layer")
+                    .path_ctx(|| "fig1a".to_string())?,
+                shape: usize_pair(f.req("shape")?, "fig1a.shape")?,
+            }),
+            _ => None,
+        };
+        let data_subdir = match v.get("data") {
+            Some(d) => d.str_at("dir").path_ctx(|| "data".to_string())?,
+            None => "data".to_string(),
+        };
         Ok(Manifest {
             dir: artifacts_dir.to_path_buf(),
+            created: v
+                .get("created")
+                .and_then(|c| c.as_str().map(str::to_string)),
             models,
             runs,
             graphs,
@@ -340,6 +386,8 @@ impl Manifest {
             score_shape,
             fig3_model: fig3.str_at("model").path_ctx(|| "fig3".to_string())?,
             fig3_ranks: usize_list(fig3.req("ranks")?, "fig3.ranks")?,
+            fig1a,
+            data_subdir,
         })
     }
 
@@ -392,7 +440,7 @@ impl Manifest {
     }
 
     pub fn data_dir(&self) -> PathBuf {
-        self.dir.join("data")
+        self.dir.join(&self.data_subdir)
     }
 
     /// Per-run metadata (avg bits, approximation errors, opt seconds).
@@ -531,6 +579,49 @@ mod tests {
         let r = m.run("opt-x", "fp16").unwrap();
         assert_eq!(r.plan,
                    QuantSpec::from_method_name("l2qer-w4a8").unwrap());
+    }
+
+    #[test]
+    fn parses_created_fig1a_and_data_dir() {
+        let body = MINIMAL.replace(
+            "\"score_shape\": [4, 96],",
+            "\"score_shape\": [4, 96],
+             \"created\": \"2026-08-08 12:00:00\",
+             \"fig1a\": {\"layer\": \"layers.1.w_down\",
+                         \"shape\": [256, 64]},
+             \"data\": {\"dir\": \"corpus\"},",
+        );
+        let dir = write_manifest("extras", &body);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.created.as_deref(), Some("2026-08-08 12:00:00"));
+        let f = m.fig1a.as_ref().unwrap();
+        assert_eq!(f.layer, "layers.1.w_down");
+        assert_eq!(f.shape, (256, 64));
+        assert!(m.data_dir().ends_with("corpus"));
+        // Legacy manifest: all absent, data dir keeps the old layout.
+        let m0 =
+            Manifest::load(&write_manifest("extras_none", MINIMAL)).unwrap();
+        assert!(m0.created.is_none() && m0.fig1a.is_none());
+        assert!(m0.data_dir().ends_with("data"));
+    }
+
+    #[test]
+    fn fig1a_null_is_absent_and_name_mismatch_fails() {
+        // aot.py writes `"fig1a": null` when the stage was skipped.
+        let body = MINIMAL.replace("\"score_shape\": [4, 96],",
+                                   "\"score_shape\": [4, 96],
+                                    \"fig1a\": null,");
+        let m =
+            Manifest::load(&write_manifest("fig1a_null", &body)).unwrap();
+        assert!(m.fig1a.is_none());
+
+        let body = MINIMAL.replace("\"name\": \"opt-x\"",
+                                   "\"name\": \"opt-y\"");
+        let msg = format!(
+            "{:#}",
+            Manifest::load(&write_manifest("name_bad", &body)).unwrap_err()
+        );
+        assert!(msg.contains("does not match"), "{msg}");
     }
 
     #[test]

@@ -226,17 +226,26 @@ impl EngineMetrics {
         };
         let paged = if self.kv_blocks_total > 0 {
             format!(
-                " | kv {}/{} blocks ({:.0}% now, {:.0}% peak) | {} \
-                 preempted ({} swapped out, {} back in) | {} shared \
-                 blocks, {} cow, {} prefix hits ({} B saved)",
+                " | kv {}/{} blocks of {} rows ({:.0}% now, {:.0}% \
+                 peak) | {} preempted ({} mid-prefill, {} swapped out, \
+                 {} back in, {} fallbacks) | swap pool {}/{} blocks, \
+                 {} seqs parked | {} shared blocks ({} extra refs), {} \
+                 cow, {} prefix hits ({} B saved)",
                 self.kv_blocks_in_use,
                 self.kv_blocks_total,
+                self.kv_block_size,
                 self.kv_utilization * 100.0,
                 self.kv_util.max(),
                 self.preemptions,
+                self.preempted_prefills,
                 self.swap_outs,
                 self.swap_ins,
+                self.swap_fallbacks,
+                self.swap_blocks_in_use,
+                self.swap_blocks_total,
+                self.swapped_seqs,
                 self.kv_shared_blocks,
+                self.kv_shared_refs,
                 self.cow_copies,
                 self.prefix_hit_blocks,
                 self.prefix_bytes_saved,
@@ -245,17 +254,22 @@ impl EngineMetrics {
             String::new()
         };
         format!(
-            "requests {}/{} done ({} rejected, {} expired) | tokens {} \
+            "requests {}/{} done ({} rejected, {} expired; {} waiting, \
+             {} prefilling) | tokens {} \
              | prefill {} \
              steps {:.1} ms avg \
              | decode {} steps {:.2} ms avg | {:.1} tok/s decode | occupancy \
              {:.2} | ttft p50 {:.0} ms p99 {:.0} ms | itl p50 {:.2} ms \
-             p99 {:.2} ms | budget {}/tick (packed mean {:.1}, max {:.0}) \
+             p99 {:.2} ms | e2e p50 {:.0} ms p99 {:.0} ms \
+             | budget {}/tick (packed mean {:.1}, max {:.0}, prefill \
+             share {:.1}) \
              | decode stalled {:.1} ms{spec}{paged}",
             self.completed,
             self.submitted,
             self.rejected,
             self.expired,
+            self.waiting,
+            self.prefilling,
             self.tokens_generated,
             self.prefill_steps,
             if self.prefill_steps > 0 {
@@ -275,9 +289,12 @@ impl EngineMetrics {
             self.ttft_ms.percentile(99.0),
             self.itl_ms.percentile(50.0),
             self.itl_ms.percentile(99.0),
+            self.total_ms.percentile(50.0),
+            self.total_ms.percentile(99.0),
             self.tokens_per_step,
             self.packed_tokens.mean(),
             self.packed_tokens.max(),
+            self.packed_prefill_tokens.mean(),
             self.decode_stall_ms(),
         )
     }

@@ -198,11 +198,14 @@ fn route(
                      json::num(m.kv_shared_blocks as f64)),
                     ("kv_shared_refs",
                      json::num(m.kv_shared_refs as f64)),
+                    ("kv_block_size",
+                     json::num(m.kv_block_size as f64)),
                     ("kv_blocks_in_use",
                      json::num(m.kv_blocks_in_use as f64)),
                     ("kv_blocks_total",
                      json::num(m.kv_blocks_total as f64)),
                     ("kv_utilization", json::num(m.kv_utilization)),
+                    ("kv_util_peak_pct", json::num(m.kv_util.max())),
                     ("tokens_generated",
                      json::num(m.tokens_generated as f64)),
                     ("draft_tokens",
@@ -213,6 +216,16 @@ fn route(
                      json::num(m.acceptance_rate())),
                     ("rewind_blocks",
                      json::num(m.rewind_blocks as f64)),
+                    ("prefill_steps",
+                     json::num(m.prefill_steps as f64)),
+                    ("prefill_ms_avg",
+                     json::num(if m.prefill_steps > 0 {
+                         m.prefill_ns as f64
+                             / m.prefill_steps as f64
+                             / 1e6
+                     } else {
+                         0.0
+                     })),
                     ("decode_steps", json::num(m.decode_steps as f64)),
                     ("decode_tok_per_sec",
                      json::num(m.decode_tokens_per_sec())),
@@ -222,6 +235,10 @@ fn route(
                     ("ttft_ms_p99", json::num(m.ttft_ms.percentile(99.0))),
                     ("itl_ms_p50", json::num(m.itl_ms.percentile(50.0))),
                     ("itl_ms_p99", json::num(m.itl_ms.percentile(99.0))),
+                    ("total_ms_p50",
+                     json::num(m.total_ms.percentile(50.0))),
+                    ("total_ms_p99",
+                     json::num(m.total_ms.percentile(99.0))),
                 ])
                 .to_string(),
             ),

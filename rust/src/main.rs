@@ -81,6 +81,9 @@ fn info(argv: &[String]) -> Result<()> {
     let _ = Args::new("info", "artifact inventory").parse(argv)?;
     let m = manifest()?;
     println!("artifacts: {}", m.dir.display());
+    if let Some(created) = &m.created {
+        println!("built: {created}");
+    }
     let mut t = Table::new("models", &["name", "d", "layers", "heads",
                                        "ffn", "params"]);
     for mi in &m.models {
@@ -98,6 +101,11 @@ fn info(argv: &[String]) -> Result<()> {
              m.graphs.len());
     println!("serve model: {} (methods: {})", m.serve.model,
              m.serve.methods.join(", "));
+    println!("data dir: {}", m.data_dir().display());
+    if let Some(f) = &m.fig1a {
+        println!("fig1a export: {} ({}x{})", f.layer, f.shape.0,
+                 f.shape.1);
+    }
     Ok(())
 }
 

@@ -701,7 +701,8 @@ impl QuantSpec {
     }
 
     pub fn from_json(text: &str) -> Result<Self> {
-        let v = json::parse(text).map_err(|e| anyhow!("plan: {e}"))?;
+        let v = json::parse(text)
+            .map_err(|e| anyhow!("plan: invalid JSON ({e})"))?;
         QuantSpec::parse(&v, "plan")
     }
 

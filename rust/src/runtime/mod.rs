@@ -606,7 +606,7 @@ impl ModelRunner {
         match entry {
             "score" => 1,
             "prefill" | "decode" | "decode_dev" | "decode_paged"
-            | "prefill_chunk" => 3,
+            | "prefill_chunk" | "decode_draft" | "verify_batch" => 3,
             "kvwrite" | "kvwrite_paged" => 2,
             _ => 1,
         }

@@ -1,19 +1,9 @@
 #!/usr/bin/env python3
-"""Structural tier-1 guard: every ``rust/tests/*.rs`` file must have a
-matching ``[[test]]`` entry in the root ``Cargo.toml``.
-
-The tests live in a non-standard layout (``rust/tests`` instead of
-``tests/``), so cargo does **not** auto-discover them — a test file
-without a ``[[test]]`` entry silently never runs.  That bit PR 3
-(``paged_kv.rs`` sat unregistered for a whole PR while tier1.sh
-referenced it by name) and was hand-fixed in PR 4; this check makes it
-structural.  Also flags dangling entries whose file is gone, and
-``path``/``name`` mismatches that would confuse ``cargo test --test``.
-
-Usage::
-
-    python3 scripts/check_test_registry.py [--cargo Cargo.toml]
-                                           [--tests rust/tests]
+"""Back-compat shim: this check moved into the staticcheck framework as
+pass P6 (``scripts/staticcheck/p6_registry.py``, finding codes
+SC601–SC604).  The old entry point and its ``--cargo``/``--tests``
+flags keep working for existing tier1/CI invocations; prefer
+``python3 scripts/staticcheck`` which runs every pass.
 
 Stdlib only — no pip dependencies.
 """
@@ -22,24 +12,12 @@ from __future__ import annotations
 
 import argparse
 import os
-import re
 import sys
 
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "staticcheck"))
 
-def registered_tests(cargo_path):
-    """(name, path) of every [[test]] entry in Cargo.toml."""
-    with open(cargo_path) as f:
-        text = f.read()
-    entries = []
-    # Walk section by section; a [[test]] section ends at the next
-    # [section] header.
-    for m in re.finditer(r"^\[\[test\]\]\s*$(.*?)(?=^\[|\Z)", text,
-                         re.M | re.S):
-        body = m.group(1)
-        name = re.search(r'^\s*name\s*=\s*"([^"]+)"', body, re.M)
-        path = re.search(r'^\s*path\s*=\s*"([^"]+)"', body, re.M)
-        entries.append((name and name.group(1), path and path.group(1)))
-    return entries
+import p6_registry                                          # noqa: E402
 
 
 def main(argv=None):
@@ -47,42 +25,13 @@ def main(argv=None):
     ap.add_argument("--cargo", default="Cargo.toml")
     ap.add_argument("--tests", default="rust/tests")
     args = ap.parse_args(argv)
-
-    entries = registered_tests(args.cargo)
-    problems = []
-    by_path = {}
-    for name, path in entries:
-        if not name or not path:
-            problems.append(
-                f"[[test]] entry missing name or path: "
-                f"name={name!r} path={path!r}")
-            continue
-        by_path[path] = name
-        stem = os.path.splitext(os.path.basename(path))[0]
-        if stem != name:
-            problems.append(
-                f"[[test]] name '{name}' != file stem '{stem}' "
-                f"({path}): `cargo test --test {stem}` would miss it")
-        if not os.path.exists(path):
-            problems.append(
-                f"[[test]] '{name}' points at a missing file: {path}")
-
-    on_disk = sorted(
-        f for f in os.listdir(args.tests) if f.endswith(".rs"))
-    for f in on_disk:
-        rel = f"{args.tests}/{f}"
-        if rel not in by_path:
-            problems.append(
-                f"{rel} has no [[test]] entry in {args.cargo} — cargo "
-                f"will silently never run it (non-standard test layout)")
-
+    problems = p6_registry.check(args.cargo, args.tests)
     if problems:
         print(f"check_test_registry: FAIL ({len(problems)} problem(s)):")
-        for p in problems:
-            print(f"  {p}")
+        for f in problems:
+            print("  " + f.render().replace("\n", "\n  "))
         return 1
-    print(f"check_test_registry: OK ({len(on_disk)} test files, "
-          f"{len(entries)} [[test]] entries)")
+    print("check_test_registry: OK (staticcheck pass P6)")
     return 0
 
 

@@ -1,0 +1,8 @@
+"""Cross-language consistency analyzer (DESIGN.md §14).
+
+Run as ``python3 scripts/staticcheck``; passes live in p*_*.py and the
+framework (findings + allowlist) in sccore.py.  The modules import
+each other as top-level names (``import sccore``) because the runner
+and the test suite put this directory on sys.path — keeping every
+file runnable without installing anything.
+"""

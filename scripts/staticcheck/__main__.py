@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Unified runner: ``python3 scripts/staticcheck`` (or ``make
+staticcheck``).
+
+Runs every pass over the repo, applies the allowlist, prints active
+findings, and exits nonzero on any.  Deterministic output, stdlib
+only, no cargo/jax — safe as the first tier1.sh step and as a
+standalone CI job.
+
+    python3 scripts/staticcheck [--root DIR] [--pass P1] [--list-codes]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)
+
+import p1_mirror                                            # noqa: E402
+import p2_manifest                                          # noqa: E402
+import p3_metrics                                           # noqa: E402
+import p4_cli                                               # noqa: E402
+import p5_backend                                           # noqa: E402
+import p6_registry                                          # noqa: E402
+import sccore                                               # noqa: E402
+
+PASSES = [p1_mirror, p2_manifest, p3_metrics, p4_cli, p5_backend,
+          p6_registry]
+ALLOWLIST = os.path.join(_HERE, "allowlist.txt")
+
+
+def list_codes():
+    print("framework:")
+    for code, desc in sorted(sccore.CODES.items()):
+        print(f"  {code}  {desc}")
+    for mod in PASSES:
+        print(f"{mod.PASS_ID} {mod.PASS_NAME}:")
+        for code, desc in sorted(mod.CODES.items()):
+            print(f"  {code}  {desc}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="staticcheck", description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=os.path.dirname(
+        os.path.dirname(_HERE)), help="repo root to analyze")
+    ap.add_argument("--pass", dest="only", default="",
+                    help="run a single pass (P1..P6)")
+    ap.add_argument("--allowlist", default=ALLOWLIST)
+    ap.add_argument("--list-codes", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_codes:
+        list_codes()
+        return 0
+
+    findings = []
+    ran = []
+    for mod in PASSES:
+        if args.only and mod.PASS_ID.lower() != args.only.lower():
+            continue
+        ran.append(mod)
+        found = mod.run(args.root)
+        findings.extend(found)
+        print(f"[staticcheck] {mod.PASS_ID} {mod.PASS_NAME}: "
+              f"{len(found)} finding(s)")
+    if not ran:
+        print(f"staticcheck: unknown pass {args.only!r}", file=sys.stderr)
+        return 2
+
+    allow = sccore.Allowlist.load(args.allowlist)
+    active, suppressed, stale = allow.split(findings)
+    active.extend(allow.problems)
+    if not args.only:
+        # Stale entries only mean something on a full run; a single
+        # pass legitimately leaves other passes' keys unmatched.
+        for key in stale:
+            active.append(sccore.finding(
+                "SC003", f"stale:{key}",
+                f"allowlist entry '{key}' no longer suppresses "
+                f"anything — remove it", os.path.relpath(
+                    args.allowlist, args.root)))
+
+    if active:
+        print(f"\nstaticcheck: FAIL ({len(active)} active finding(s), "
+              f"{len(suppressed)} allowlisted):")
+        for f in sorted(active, key=lambda f: (f.code, f.key)):
+            print("  " + f.render().replace("\n", "\n  "))
+        return 1
+    print(f"staticcheck: OK ({len(PASSES) if not args.only else len(ran)}"
+          f" pass(es), {len(suppressed)} allowlisted finding(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

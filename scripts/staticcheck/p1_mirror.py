@@ -1,0 +1,544 @@
+"""P1 mirror-drift: python/compile/quant/spec.py <-> rust/src/quant/spec.rs.
+
+The QuantSpec schema is mirrored bit-for-bit across the language
+boundary (DESIGN.md §9).  The golden fixtures catch *serialization*
+drift for the values they encode; this pass diffs the schema surface
+itself at analysis time:
+
+  SC101  enum/variant drift (ACTS / ALGOS / INT_ONLY_ALGOS vs the
+         ActFormat / Algo as_str arms and needs_int_weights)
+  SC102  allowed-key-set drift (_check_keys tuples vs check_keys arrays)
+  SC103  integer-bound drift (_int call sites vs int_field call sites)
+  SC104  METHODS registry drift (name set + canonical per-method plan
+         vs the method_registry match arms)
+  SC105  validation-error message drift (SpecError f-strings vs
+         bail!/anyhow! format strings, compared as skeletons with
+         placeholders and path prefixes normalized away)
+  SC106  shared-constant drift (LOWRANK_DEFAULT_BITS)
+
+The python side is parsed with the ``ast`` module (defaults are read
+out of the dataclass definitions, so a changed default is real drift,
+not a parser constant to update); the rust side with the lexical
+reader in rustlex.py.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+import rustlex
+from sccore import finding, read_text, surface_missing
+
+PASS_ID = "P1"
+PASS_NAME = "mirror-drift"
+CODES = {
+    "SC101": "spec enum/variant drift between python and rust",
+    "SC102": "spec allowed-key-set drift between python and rust",
+    "SC103": "spec integer-bound drift between python and rust",
+    "SC104": "METHODS registry drift between python and rust",
+    "SC105": "validation-error message drift between python and rust",
+    "SC106": "shared spec constant drift between python and rust",
+}
+
+PY_SPEC = os.path.join("python", "compile", "quant", "spec.py")
+RS_SPEC = os.path.join("rust", "src", "quant", "spec.rs")
+
+
+# ---------------------------------------------------------------------------
+# python side (ast)
+# ---------------------------------------------------------------------------
+
+
+def _const_tuple(node):
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not isinstance(e, ast.Constant):
+                return None
+            out.append(e.value)
+        return tuple(out)
+    return None
+
+
+def _dataclass_defaults(tree, consts):
+    """{class: {field: default}} for the weight/lowrank dataclasses."""
+    out = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        fields = {}
+        for stmt in node.body:
+            if isinstance(stmt, ast.AnnAssign) and isinstance(
+                    stmt.target, ast.Name) and stmt.value is not None:
+                v = stmt.value
+                if isinstance(v, ast.Constant):
+                    fields[stmt.target.id] = v.value
+                elif isinstance(v, ast.Name) and v.id in consts:
+                    fields[stmt.target.id] = consts[v.id]
+        out[node.name] = fields
+    return out
+
+
+def _call_name(call):
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    return None
+
+
+def _canon_weight_py(call, defaults):
+    name = _call_name(call)
+    args = [a.value for a in call.args if isinstance(a, ast.Constant)]
+    kw = {k.arg: k.value.value for k in call.keywords
+          if isinstance(k.value, ast.Constant)}
+    if name == "Fp16":
+        return ("fp16",)
+    if name == "Mxint":
+        d = defaults.get("Mxint", {})
+        bits = args[0] if args else kw.get("bits")
+        return ("mxint", bits,
+                kw.get("exp_bits", args[1] if len(args) > 1
+                       else d.get("exp_bits")),
+                kw.get("block", args[2] if len(args) > 2
+                       else d.get("block")))
+    if name == "IntGroup":
+        d = defaults.get("IntGroup", {})
+        bits = args[0] if args else kw.get("bits")
+        return ("int", bits,
+                kw.get("group", args[1] if len(args) > 1
+                       else d.get("group")))
+    return None
+
+
+def _canon_lowrank_py(node, defaults):
+    if node is None or (isinstance(node, ast.Constant)
+                        and node.value is None):
+        return None
+    if not (isinstance(node, ast.Call) and _call_name(node) == "LowRank"):
+        return ("<unparsed>",)
+    d = defaults.get("LowRank", {})
+    args = [a.value for a in node.args if isinstance(a, ast.Constant)]
+    kw = {k.arg: (k.value.value if isinstance(k.value, ast.Constant)
+                  else None) for k in node.keywords}
+    k = args[0] if args else kw.get("k")
+    scaled = kw.get("scaled", args[1] if len(args) > 1
+                    else d.get("scaled"))
+    bits = kw.get("bits", args[2] if len(args) > 2 else d.get("bits"))
+    return (k, bool(scaled), "fp" if bits is None else bits)
+
+
+def _skeleton(text: str) -> str:
+    """Normalize a message into a cross-language skeleton."""
+    s = re.sub(r"\s+", " ", text).strip()
+    # Leading path-qualifier (always starts with a placeholder) -> drop.
+    s = re.sub(r"^\*(?:\.[^\s:]+)*:\s+", "", s)
+    return s
+
+
+def _py_skeleton(node) -> str:
+    """Skeleton of an f-string / string constant message node."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return _skeleton(node.value)
+    if isinstance(node, ast.JoinedStr):
+        parts = []
+        for v in node.values:
+            if isinstance(v, ast.Constant):
+                parts.append(str(v.value))
+            else:
+                parts.append("*")
+        return _skeleton("".join(parts))
+    return ""
+
+
+def _is_methods_assign(node) -> bool:
+    """``METHODS = {...}`` or ``METHODS: dict[...] = {...}``."""
+    if isinstance(node, ast.Assign) and len(node.targets) == 1:
+        tgt = node.targets[0]
+    elif isinstance(node, ast.AnnAssign):
+        tgt = node.target
+    else:
+        return False
+    return (isinstance(tgt, ast.Name) and tgt.id == "METHODS"
+            and isinstance(node.value, ast.Dict))
+
+
+def parse_python(path: str):
+    text = read_text(path)
+    if text is None:
+        return None
+    tree = ast.parse(text)
+    consts, key_sets, bounds, messages = {}, [], [], set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            tgt = node.targets[0].id
+            tup = _const_tuple(node.value)
+            if tup is not None:
+                consts[tgt] = tup
+            elif isinstance(node.value, ast.Constant):
+                consts[tgt] = node.value.value
+    defaults = _dataclass_defaults(tree, consts)
+    methods = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = _call_name(node)
+            if name == "_check_keys" and len(node.args) >= 2:
+                tup = _const_tuple(node.args[1])
+                if tup is not None:
+                    key_sets.append(frozenset(tup))
+            elif name == "_int" and len(node.args) >= 3:
+                key = None
+                if isinstance(node.args[0], ast.Call) and \
+                        _call_name(node.args[0]) == "_field":
+                    a = node.args[0].args
+                    if len(a) >= 2 and isinstance(a[1], ast.Constant):
+                        key = a[1].value
+                if key is None and isinstance(node.args[1], ast.JoinedStr):
+                    last = node.args[1].values[-1]
+                    if isinstance(last, ast.Constant):
+                        key = str(last.value).rsplit(".", 1)[-1]
+                lo = (node.args[2].value
+                      if isinstance(node.args[2], ast.Constant) else None)
+                hi = (node.args[3].value
+                      if len(node.args) > 3
+                      and isinstance(node.args[3], ast.Constant) else None)
+                if key is not None:
+                    bounds.append((key, lo, hi))
+        elif isinstance(node, ast.Raise) and isinstance(node.exc, ast.Call):
+            ename = _call_name(node.exc)
+            if ename in ("SpecError", "ValueError") and node.exc.args:
+                skel = _py_skeleton(node.exc.args[0])
+                if skel:
+                    messages.add(skel)
+        elif _is_methods_assign(node):
+            for k, v in zip(node.value.keys, node.value.values):
+                if not (isinstance(k, ast.Constant)
+                        and isinstance(v, ast.Call)
+                        and _call_name(v) == "_plan"):
+                    continue
+                a = v.args
+                weight = (_canon_weight_py(a[0], defaults)
+                          if a and isinstance(a[0], ast.Call) else None)
+                act = (a[1].value if len(a) > 1
+                       and isinstance(a[1], ast.Constant) else None)
+                algo = (a[2].value if len(a) > 2
+                        and isinstance(a[2], ast.Constant) else None)
+                lr_node = a[3] if len(a) > 3 else None
+                for kwa in v.keywords:
+                    if kwa.arg == "lowrank":
+                        lr_node = kwa.value
+                methods[k.value] = (weight, act, algo,
+                                    _canon_lowrank_py(lr_node, defaults))
+    return {
+        "acts": consts.get("ACTS"),
+        "algos": consts.get("ALGOS"),
+        "int_only": consts.get("INT_ONLY_ALGOS"),
+        "lowrank_bits": consts.get("LOWRANK_DEFAULT_BITS"),
+        "key_sets": key_sets,
+        "bounds": bounds,
+        "methods": methods,
+        "messages": messages,
+    }
+
+
+# ---------------------------------------------------------------------------
+# rust side (lexical)
+# ---------------------------------------------------------------------------
+
+
+def _split_args(s: str):
+    """Split a call argument list on top-level commas."""
+    out, depth, cur, in_str = [], 0, [], False
+    i = 0
+    while i < len(s):
+        c = s[i]
+        if in_str:
+            cur.append(c)
+            if c == "\\":
+                cur.append(s[i + 1] if i + 1 < len(s) else "")
+                i += 2
+                continue
+            if c == '"':
+                in_str = False
+        elif c == '"':
+            in_str = True
+            cur.append(c)
+        elif c in "([{":
+            depth += 1
+            cur.append(c)
+        elif c in ")]}":
+            depth -= 1
+            cur.append(c)
+        elif c == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(c)
+        i += 1
+    tail = "".join(cur).strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
+def _use_aliases(text: str, enum: str):
+    """{local_ident: variant} from ``use Enum::{A, B, None as X};``."""
+    out = {}
+    m = re.search(rf"use {enum}::\{{([^}}]*)\}}", text)
+    if not m:
+        return out
+    for item in m.group(1).split(","):
+        item = item.strip()
+        if not item:
+            continue
+        if " as " in item:
+            variant, alias = [p.strip() for p in item.split(" as ")]
+            out[alias] = variant
+        else:
+            out[item] = item
+    return out
+
+
+def _canon_weight_rs(expr, helpers):
+    expr = expr.strip()
+    if expr.endswith("Fp16"):
+        return ("fp16",)
+    m = re.match(r"mx\((\d+)\)$", expr)
+    if m:
+        return ("mxint", int(m.group(1)), helpers.get("mx_exp_bits"),
+                helpers.get("mx_block"))
+    m = re.match(r"ig\((\d+),\s*(\d+)\)$", expr)
+    if m:
+        return ("int", int(m.group(1)), int(m.group(2)))
+    m = re.search(r"Mxint\s*\{\s*bits:\s*(\d+),\s*exp_bits:\s*(\d+),"
+                  r"\s*block:\s*(\d+)", expr)
+    if m:
+        return ("mxint", int(m.group(1)), int(m.group(2)),
+                int(m.group(3)))
+    m = re.search(r"IntGroup\s*\{\s*bits:\s*(\d+),\s*group:\s*(\d+)", expr)
+    if m:
+        return ("int", int(m.group(1)), int(m.group(2)))
+    return None
+
+
+def _canon_lowrank_rs(expr, helpers):
+    expr = re.sub(r"\s+", " ", expr.strip())
+    if expr == "None":
+        return None
+    m = re.match(r"lr\((\d+),\s*(true|false)\)$", expr)
+    if m:
+        return (int(m.group(1)), m.group(2) == "true",
+                helpers.get("lr_bits"))
+    m = re.search(r"LowRank \{ k: (\d+), scaled: (true|false), "
+                  r"bits: (Some\((\d+)\)|None)", expr)
+    if m:
+        bits = "fp" if m.group(3) == "None" else int(m.group(4))
+        return (int(m.group(1)), m.group(2) == "true", bits)
+    return ("<unparsed>",)
+
+
+def parse_rust(path: str):
+    raw = read_text(path)
+    if raw is None:
+        return None
+    text = rustlex.cut_test_mod(rustlex.strip_comments(raw))
+
+    def as_str_arms(enum):
+        # Arms map variant -> literal: ``ActFormat::Mx8 => "mx8",``.
+        impl = rustlex.block(text, rf"impl {enum}\s")
+        if impl is None:
+            return None
+        body = rustlex.fn_body(impl, "as_str")
+        if body is None:
+            return None
+        return tuple(re.findall(r'=>\s*"([^"]+)"', body))
+
+    int_only = None
+    m = re.search(r"fn needs_int_weights[^{]*\{(.*?)\n    \}", text, re.S)
+    if m:
+        int_only = tuple(sorted(
+            v.lower() for v in re.findall(r"Algo::(\w+)", m.group(1))))
+
+    lowrank_bits = None
+    m = re.search(r"const LOWRANK_DEFAULT_BITS:\s*\w+\s*=\s*(\d+)", text)
+    if m:
+        lowrank_bits = int(m.group(1))
+
+    key_sets = []
+    for m in re.finditer(r"check_keys\(\s*\w+,\s*&\[([^\]]*)\]", text):
+        keys = re.findall(r'"([^"]+)"', m.group(1))
+        key_sets.append(frozenset(keys))
+
+    bounds = []
+    for m in re.finditer(
+            r'int_field\(\s*[^,]+,\s*"(\w+)",\s*[^,]+,\s*([^,]+),'
+            r"\s*([^)]+)\)", text):
+        key, lo, hi = m.group(1), m.group(2).strip(), m.group(3).strip()
+        bounds.append((key,
+                       None if "MAX" in lo else int(lo),
+                       None if "MAX" in hi else int(hi)))
+
+    helpers = {}
+    m = re.search(r"fn mx\([^{]*\{([^}]*)\}", text)
+    if m:
+        e = re.search(r"exp_bits:\s*(\d+)", m.group(1))
+        b = re.search(r"block:\s*(\d+)", m.group(1))
+        helpers["mx_exp_bits"] = e and int(e.group(1))
+        helpers["mx_block"] = b and int(b.group(1))
+    m = re.search(r"fn lr\([^{]*\{(.*?)\n\}", text, re.S)
+    if m:
+        if "LOWRANK_DEFAULT_BITS" in m.group(1):
+            helpers["lr_bits"] = lowrank_bits
+        else:
+            bm = re.search(r"bits:\s*Some\((\d+)\)", m.group(1))
+            helpers["lr_bits"] = bm and int(bm.group(1))
+
+    methods = {}
+    body = rustlex.fn_body(text, "method_registry")
+    if body is not None:
+        acts = _use_aliases(body, "ActFormat")
+        algos = _use_aliases(body, "Algo")
+        for pats, expr in rustlex.match_str_arms(body):
+            m = re.match(r"plan\((.*)\)\s*$",
+                         re.sub(r"\s+", " ", expr.strip()), re.S)
+            if not m:
+                continue
+            args = _split_args(m.group(1))
+            if len(args) != 4:
+                continue
+            w = _canon_weight_rs(args[0], helpers)
+            act_id = args[1].split("::")[-1].strip()
+            algo_id = args[2].split("::")[-1].strip()
+            act = acts.get(act_id, act_id).lower()
+            algo = algos.get(algo_id, algo_id).lower()
+            lr = _canon_lowrank_rs(args[3], helpers)
+            for p in pats:
+                methods[p] = (w, act, algo, lr)
+
+    messages = set()
+    for m in re.finditer(
+            r'(?:bail!|anyhow!)\(\s*"((?:[^"\\]|\\.)*)"', text, re.S):
+        lit = rustlex.collapse_continuations(m.group(1))
+        messages.add(_skeleton(re.sub(r"\{[^{}]*\}", "*", lit)))
+
+    return {
+        "acts": as_str_arms("ActFormat"),
+        "algos": as_str_arms("Algo"),
+        "int_only": int_only,
+        "lowrank_bits": lowrank_bits,
+        "key_sets": key_sets,
+        "bounds": bounds,
+        "methods": methods,
+        "messages": messages,
+    }
+
+
+# ---------------------------------------------------------------------------
+# diff
+# ---------------------------------------------------------------------------
+
+
+def _multiset_diff(a, b):
+    """(only_in_a, only_in_b) treating the lists as multisets."""
+    from collections import Counter
+    ca, cb = Counter(a), Counter(b)
+    return list((ca - cb).elements()), list((cb - ca).elements())
+
+
+def run(root: str):
+    py_path = os.path.join(root, PY_SPEC)
+    rs_path = os.path.join(root, RS_SPEC)
+    py = parse_python(py_path)
+    rs = parse_rust(rs_path)
+    out = []
+    if py is None:
+        out.append(surface_missing(PY_SPEC))
+    if rs is None:
+        out.append(surface_missing(RS_SPEC))
+    if out:
+        return out
+
+    # SC101: enum variants.
+    for name, label in (("acts", "ACTS/ActFormat"),
+                        ("algos", "ALGOS/Algo"),
+                        ("int_only", "INT_ONLY_ALGOS/needs_int_weights")):
+        p, r = py[name], rs[name]
+        if p is None or r is None:
+            out.append(finding(
+                "SC101", f"{name}:unparsed",
+                f"could not locate {label} on "
+                f"{'python' if p is None else 'rust'} side", RS_SPEC))
+            continue
+        only_p, only_r = set(p) - set(r), set(r) - set(p)
+        for v in sorted(only_p):
+            out.append(finding(
+                "SC101", f"{name}:{v}",
+                f"{label}: '{v}' exists in python but not rust", RS_SPEC))
+        for v in sorted(only_r):
+            out.append(finding(
+                "SC101", f"{name}:{v}",
+                f"{label}: '{v}' exists in rust but not python", PY_SPEC))
+
+    # SC106: shared constants.
+    if py["lowrank_bits"] != rs["lowrank_bits"]:
+        out.append(finding(
+            "SC106", "LOWRANK_DEFAULT_BITS",
+            f"LOWRANK_DEFAULT_BITS drift: python="
+            f"{py['lowrank_bits']} rust={rs['lowrank_bits']}", RS_SPEC))
+
+    # SC102: allowed-key sets.
+    only_p, only_r = _multiset_diff(py["key_sets"], rs["key_sets"])
+    for ks in only_p:
+        out.append(finding(
+            "SC102", "py:" + ",".join(sorted(ks)),
+            f"allowed-key set {sorted(ks)} checked in python "
+            f"but not rust", RS_SPEC))
+    for ks in only_r:
+        out.append(finding(
+            "SC102", "rs:" + ",".join(sorted(ks)),
+            f"allowed-key set {sorted(ks)} checked in rust "
+            f"but not python", PY_SPEC))
+
+    # SC103: integer bounds.
+    only_p, only_r = _multiset_diff(py["bounds"], rs["bounds"])
+    for b in only_p:
+        out.append(finding(
+            "SC103", f"py:{b[0]}:{b[1]}:{b[2]}",
+            f"int bound {b} enforced in python but not rust", RS_SPEC))
+    for b in only_r:
+        out.append(finding(
+            "SC103", f"rs:{b[0]}:{b[1]}:{b[2]}",
+            f"int bound {b} enforced in rust but not python", PY_SPEC))
+
+    # SC104: METHODS registry.
+    pm, rm = py["methods"], rs["methods"]
+    for name in sorted(set(pm) - set(rm)):
+        out.append(finding(
+            "SC104", f"py:{name}",
+            f"method '{name}' in python METHODS but not in the rust "
+            f"method_registry shim", RS_SPEC))
+    for name in sorted(set(rm) - set(pm)):
+        out.append(finding(
+            "SC104", f"rs:{name}",
+            f"method '{name}' in rust method_registry but not in "
+            f"python METHODS", PY_SPEC))
+    for name in sorted(set(pm) & set(rm)):
+        if pm[name] != rm[name]:
+            out.append(finding(
+                "SC104", f"plan:{name}",
+                f"method '{name}' plan drift: python={pm[name]} "
+                f"rust={rm[name]}", RS_SPEC))
+
+    # SC105: validation-message skeletons.
+    for skel in sorted(py["messages"] - rs["messages"]):
+        out.append(finding(
+            "SC105", f"py-only:{skel}",
+            f"validation message only in python: \"{skel}\"", RS_SPEC))
+    for skel in sorted(rs["messages"] - py["messages"]):
+        out.append(finding(
+            "SC105", f"rs-only:{skel}",
+            f"validation message only in rust: \"{skel}\"", PY_SPEC))
+    return out

@@ -1,0 +1,235 @@
+"""P2 manifest-parity: aot.py-emitted manifest keys <-> rust consumers.
+
+``python/compile/aot.py`` writes ``manifest.json`` once at build time;
+``rust/src/config/mod.rs`` (``Manifest`` + ``PagedServeInfo`` /
+``ChunkServeInfo`` / ``SpecServeInfo``) parses it on every engine start.
+A key renamed on one side silently falls back to the legacy/absent path
+at runtime — exactly the class of bug a golden fixture only catches if
+it happens to encode that key.  This pass diffs the two surfaces:
+
+  SC201  key emitted by aot.py with no rust consumer
+  SC202  key consumed by rust config with no aot.py emitter
+  SC203  graph entry kind drift (aot.py ``needed[(.., KIND, ..)]``
+         literals vs the ``ModelRunner::outputs_for`` match arms)
+
+Extraction contract (documented, deterministic):
+
+* Emitted keys are dotted paths rooted at the ``manifest = {...}``
+  literal (the one carrying a ``"serve"`` key — aot.py also builds an
+  unrelated per-weights-file manifest), chased one level through the
+  local names it references (``serve`` + its subscript-assigns, the
+  ``run_index`` / ``graph_index`` entry dicts, ``dataclasses_dict``).
+* Consumed keys are the string arguments of the accessor helpers in
+  config/mod.rs (``req`` / ``str_at`` / ``usize_at`` / ``get`` ...).
+* The two sides are matched on *leaf* key names: ``serve.paged.
+  block_size`` is satisfied by any rust ``"block_size"`` accessor.
+  This collapses same-named siblings (paged/chunk both carry
+  ``block_size``) — acceptable, since a rename changes the leaf on
+  one side and still fires.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+import rustlex
+from sccore import finding, read_text, surface_missing
+
+PASS_ID = "P2"
+PASS_NAME = "manifest-parity"
+CODES = {
+    "SC201": "manifest key emitted by aot.py but never consumed by rust",
+    "SC202": "manifest key consumed by rust but never emitted by aot.py",
+    "SC203": "graph entry kind drift between aot.py and ModelRunner",
+}
+
+PY_AOT = os.path.join("python", "compile", "aot.py")
+RS_CONFIG = os.path.join("rust", "src", "config", "mod.rs")
+RS_RUNTIME = os.path.join("rust", "src", "runtime", "mod.rs")
+
+_ACCESSORS = ("req", "str_at", "usize_at", "u64_at", "num_at", "get")
+
+
+def _dict_of(node):
+    """The dict literal inside a value expression, unwrapping the
+    ``fig1a and {...}`` guard pattern."""
+    if isinstance(node, ast.Dict):
+        return node
+    if isinstance(node, ast.BoolOp):
+        for v in reversed(node.values):
+            if isinstance(v, ast.Dict):
+                return v
+    return None
+
+
+def _const_keys(d: ast.Dict):
+    return [k.value for k in d.keys
+            if isinstance(k, ast.Constant) and isinstance(k.value, str)]
+
+
+def emitted_paths(path: str):
+    """Dotted manifest key paths emitted by aot.py, or None."""
+    text = read_text(path)
+    if text is None:
+        return None
+    tree = ast.parse(text)
+
+    manifest = None
+    serve_assign = None
+    serve_sub = []      # (key, value_node) from serve["key"] = ...
+    entry_dicts = {}    # helper name -> ast.Dict  (runs/graphs entries)
+    dc_dict = None      # dataclasses_dict return dict
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name) and isinstance(node.value, ast.Dict):
+                keys = _const_keys(node.value)
+                if tgt.id == "manifest" and "serve" in keys:
+                    manifest = node.value
+                elif tgt.id == "serve":
+                    serve_assign = node.value
+                elif tgt.id == "entry":
+                    entry_dicts["runs"] = node.value
+            elif (isinstance(tgt, ast.Subscript)
+                  and isinstance(tgt.value, ast.Name)
+                  and tgt.value.id == "serve"
+                  and isinstance(tgt.slice, ast.Constant)):
+                serve_sub.append((tgt.slice.value, node.value))
+        elif (isinstance(node, ast.Call)
+              and isinstance(node.func, ast.Attribute)
+              and node.func.attr == "append"
+              and isinstance(node.func.value, ast.Name)
+              and node.func.value.id == "graph_index"
+              and node.args and isinstance(node.args[0], ast.Dict)):
+            entry_dicts["graphs"] = node.args[0]
+        elif (isinstance(node, ast.FunctionDef)
+              and node.name == "dataclasses_dict"):
+            for stmt in ast.walk(node):
+                if isinstance(stmt, ast.Return) and \
+                        isinstance(stmt.value, ast.Dict):
+                    dc_dict = stmt.value
+
+    if manifest is None:
+        return None
+
+    paths = set()
+    for k, v in zip(manifest.keys, manifest.values):
+        if not (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+            continue
+        top = k.value
+        paths.add(top)
+        d = _dict_of(v)
+        if d is not None:
+            for sub in _const_keys(d):
+                paths.add(f"{top}.{sub}")
+        if top == "models" and isinstance(v, ast.DictComp):
+            inner = _dict_of(v.value)
+            if inner is not None:
+                for sub in _const_keys(inner):
+                    paths.add(f"models.{sub}")
+            if dc_dict is not None:
+                for sub in _const_keys(dc_dict):
+                    paths.add(f"models.{sub}")
+    if serve_assign is not None and "serve" in paths:
+        for sub in _const_keys(serve_assign):
+            paths.add(f"serve.{sub}")
+    for key, value in serve_sub:
+        paths.add(f"serve.{key}")
+        d = _dict_of(value)
+        if d is not None:
+            for sub in _const_keys(d):
+                paths.add(f"serve.{key}.{sub}")
+    for group, d in entry_dicts.items():
+        if group in paths:
+            for sub in _const_keys(d):
+                paths.add(f"{group}.{sub}")
+    return paths
+
+
+def entry_kinds_py(path: str):
+    """Graph entry-kind literals from ``needed[(.., KIND, ..)]``."""
+    text = read_text(path)
+    if text is None:
+        return None
+    kinds = set()
+    for node in ast.walk(ast.parse(text)):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+            continue
+        tgt = node.targets[0]
+        if (isinstance(tgt, ast.Subscript)
+                and isinstance(tgt.value, ast.Name)
+                and tgt.value.id == "needed"
+                and isinstance(tgt.slice, ast.Tuple)
+                and len(tgt.slice.elts) == 5
+                and isinstance(tgt.slice.elts[2], ast.Constant)):
+            kinds.add(tgt.slice.elts[2].value)
+    return kinds
+
+
+def consumed_keys(path: str):
+    """Key literals passed to the config accessor helpers, or None."""
+    text = read_text(path)
+    if text is None:
+        return None
+    text = rustlex.cut_test_mod(rustlex.strip_comments(text))
+    pat = re.compile(
+        r"\.(?:" + "|".join(_ACCESSORS) + r')\(\s*"([a-z_0-9]+)"')
+    return set(pat.findall(text))
+
+
+def entry_kinds_rs(path: str):
+    """Pattern literals of the ``outputs_for`` match (minus ``_``)."""
+    text = read_text(path)
+    if text is None:
+        return None
+    text = rustlex.cut_test_mod(rustlex.strip_comments(text))
+    body = rustlex.fn_body(text, "outputs_for")
+    if body is None:
+        return None
+    return {p for pats, _ in rustlex.match_str_arms(body) for p in pats}
+
+
+def run(root: str):
+    out = []
+    paths = emitted_paths(os.path.join(root, PY_AOT))
+    consumed = consumed_keys(os.path.join(root, RS_CONFIG))
+    if paths is None:
+        out.append(surface_missing(PY_AOT, "manifest literal not found"))
+    if consumed is None:
+        out.append(surface_missing(RS_CONFIG))
+    if paths is not None and consumed is not None:
+        leaves = {p.rsplit(".", 1)[-1] for p in paths}
+        for p in sorted(paths):
+            if p.rsplit(".", 1)[-1] not in consumed:
+                out.append(finding(
+                    "SC201", p,
+                    f"manifest key '{p}' is emitted by aot.py but has "
+                    f"no consumer in the rust config parser", RS_CONFIG))
+        for k in sorted(consumed - leaves):
+            out.append(finding(
+                "SC202", k,
+                f"rust config reads manifest key '{k}' that aot.py "
+                f"never emits", PY_AOT))
+
+    py_kinds = entry_kinds_py(os.path.join(root, PY_AOT))
+    rs_kinds = entry_kinds_rs(os.path.join(root, RS_RUNTIME))
+    if py_kinds is None:
+        out.append(surface_missing(PY_AOT, "needed[] assigns not found"))
+    if rs_kinds is None:
+        out.append(surface_missing(RS_RUNTIME, "outputs_for not found"))
+    if py_kinds is not None and rs_kinds is not None:
+        for kind in sorted(py_kinds - rs_kinds):
+            out.append(finding(
+                "SC203", f"py:{kind}",
+                f"graph entry kind '{kind}' is lowered by aot.py but "
+                f"ModelRunner::outputs_for has no arm for it (falls "
+                f"into the default)", RS_RUNTIME))
+        for kind in sorted(rs_kinds - py_kinds):
+            out.append(finding(
+                "SC203", f"rs:{kind}",
+                f"ModelRunner::outputs_for handles entry kind '{kind}' "
+                f"that aot.py never lowers", PY_AOT))
+    return out

@@ -1,0 +1,208 @@
+"""P3 metrics-parity: EngineMetrics fields <-> report() / GET /metrics,
+and bench_guard baseline keys <-> `lqer bench` emitters.
+
+A counter added to ``EngineMetrics`` but not surfaced is invisible in
+production; a bench_guard baseline key the bench subcommand stops
+emitting silently un-arms the CI regression gate.  Three checks:
+
+  SC301  EngineMetrics field absent from ``report()``
+  SC302  EngineMetrics field absent from the ``GET /metrics`` handler
+  SC303  armed bench_guard baseline key absent from its bench emitter
+
+Coverage contract (documented, deterministic):
+
+* A field is covered when the surface text mentions the field name or
+  a derived name: ``<name>`` plus an optional reporting suffix
+  (``_p50 _p99 _mean _max _avg _peak _pct _peak_pct``), or one of the
+  unit-conversion aliases below (``decode_ns`` is reported as
+  ``decode_tok_per_sec``, etc.).
+* Fields of type ``ExecStats`` are excluded: they are per-entry timing
+  aggregates with their own dump path (``exec_stats``), not serving
+  counters.
+* A bench baseline leaf key is *armed* when it appears in
+  bench_guard.py's HIGHER_IS_BETTER / LOWER_IS_BETTER sets; armed keys
+  must appear as string literals in the mapped ``fn bench_*`` body in
+  main.rs.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+
+import rustlex
+from sccore import finding, read_text, surface_missing
+
+PASS_ID = "P3"
+PASS_NAME = "metrics-parity"
+CODES = {
+    "SC301": "EngineMetrics field not covered by report()",
+    "SC302": "EngineMetrics field not covered by GET /metrics",
+    "SC303": "armed bench baseline key missing from its bench emitter",
+}
+
+RS_METRICS = os.path.join("rust", "src", "coordinator", "metrics.rs")
+RS_SERVER = os.path.join("rust", "src", "coordinator", "server.rs")
+RS_MAIN = os.path.join("rust", "src", "main.rs")
+BENCH_GUARD = os.path.join("scripts", "bench_guard.py")
+
+SUFFIXES = "_p50|_p99|_mean|_max|_avg|_peak|_pct|_peak_pct"
+ALIASES = {
+    "decode_stall_ns": ["decode_stall_ms"],
+    "decode_ns": ["decode_tok_per_sec", "decode_tokens_per_sec"],
+    "prefill_ns": ["prefill_ms_avg", "prefill_ms"],
+    "batch_occupancy": ["mean_batch_occupancy"],
+}
+BASELINE_EMITTERS = {
+    "BENCH_baseline.json": "bench_kv",
+    "BENCH_baseline_chunked.json": "bench_chunked",
+    "BENCH_baseline_spec.json": "bench_spec",
+}
+
+
+def engine_metrics_fields(path: str):
+    text = read_text(path)
+    if text is None:
+        return None
+    text = rustlex.cut_test_mod(rustlex.strip_comments(text))
+    fields = rustlex.struct_fields(text, "EngineMetrics")
+    if fields is None:
+        return None
+    return [(n, t) for n, t in fields if "ExecStats" not in t]
+
+
+def report_body(path: str):
+    text = read_text(path)
+    if text is None:
+        return None
+    return rustlex.fn_body(rustlex.strip_comments(text), "report")
+
+
+def metrics_route_body(path: str):
+    """The ``json::obj(vec![...])`` vec body of the /metrics arm."""
+    text = read_text(path)
+    if text is None:
+        return None
+    text = rustlex.strip_comments(text)
+    at = text.find('"/metrics"')
+    if at < 0:
+        return None
+    open_idx = text.find("vec![", at)
+    if open_idx < 0:
+        return None
+    i, depth, in_str = open_idx + 4, 0, False
+    start = i + 1
+    while i < len(text):
+        c = text[i]
+        if in_str:
+            if c == "\\":
+                i += 2
+                continue
+            if c == '"':
+                in_str = False
+        elif c == '"':
+            in_str = True
+        elif c == "[":
+            depth += 1
+        elif c == "]":
+            depth -= 1
+            if depth == 0:
+                return text[start:i]
+        i += 1
+    return None
+
+
+def covered(name: str, surface: str) -> bool:
+    for cand in [name] + ALIASES.get(name, []):
+        if re.search(rf"\b{re.escape(cand)}(?:{SUFFIXES})?\b", surface):
+            return True
+    return False
+
+
+def armed_keys(path: str):
+    """Union of bench_guard's HIGHER/LOWER_IS_BETTER set literals."""
+    text = read_text(path)
+    if text is None:
+        return None
+    armed = set()
+    seen = 0
+    for node in ast.walk(ast.parse(text)):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name) and \
+                node.targets[0].id in ("HIGHER_IS_BETTER",
+                                       "LOWER_IS_BETTER") and \
+                isinstance(node.value, ast.Set):
+            seen += 1
+            for e in node.value.elts:
+                if isinstance(e, ast.Constant):
+                    armed.add(e.value)
+    return armed if seen == 2 else None
+
+
+def _leaf_keys(obj, out):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if isinstance(v, dict):
+                _leaf_keys(v, out)
+            else:
+                out.add(k)
+
+
+def run(root: str):
+    out = []
+    fields = engine_metrics_fields(os.path.join(root, RS_METRICS))
+    rep = report_body(os.path.join(root, RS_METRICS))
+    route = metrics_route_body(os.path.join(root, RS_SERVER))
+    if fields is None:
+        out.append(surface_missing(RS_METRICS, "EngineMetrics struct"))
+    if rep is None:
+        out.append(surface_missing(RS_METRICS, "fn report"))
+    if route is None:
+        out.append(surface_missing(RS_SERVER, "/metrics json::obj vec"))
+    if fields is not None:
+        for name, _ in fields:
+            if rep is not None and not covered(name, rep):
+                out.append(finding(
+                    "SC301", name,
+                    f"EngineMetrics.{name} is never included in "
+                    f"report()", RS_METRICS))
+            if route is not None and not covered(name, route):
+                out.append(finding(
+                    "SC302", name,
+                    f"EngineMetrics.{name} is never exported on "
+                    f"GET /metrics", RS_SERVER))
+
+    armed = armed_keys(os.path.join(root, BENCH_GUARD))
+    main_text = read_text(os.path.join(root, RS_MAIN))
+    if armed is None:
+        out.append(surface_missing(BENCH_GUARD, "armed key sets"))
+    if main_text is None:
+        out.append(surface_missing(RS_MAIN))
+    else:
+        main_text = rustlex.cut_test_mod(rustlex.strip_comments(main_text))
+    if armed is not None and main_text is not None:
+        for fname, bench_fn in sorted(BASELINE_EMITTERS.items()):
+            bpath = os.path.join(root, fname)
+            btext = read_text(bpath)
+            if btext is None:
+                continue  # absent baseline = nothing armed for it
+            try:
+                leaves = set()
+                _leaf_keys(json.loads(btext), leaves)
+            except ValueError:
+                out.append(surface_missing(fname, "invalid JSON"))
+                continue
+            body = rustlex.fn_body(main_text, bench_fn)
+            if body is None:
+                out.append(surface_missing(RS_MAIN, f"fn {bench_fn}"))
+                continue
+            for key in sorted(leaves & armed):
+                if f'"{key}"' not in body:
+                    out.append(finding(
+                        "SC303", f"{fname}:{key}",
+                        f"baseline key '{key}' in {fname} is armed by "
+                        f"bench_guard but fn {bench_fn} never emits "
+                        f"it", RS_MAIN))
+    return out

@@ -1,0 +1,138 @@
+"""P4 CLI-parity: serve flags mirrored onto generate / serve-bench.
+
+The serving engine is configured identically whether it runs behind
+the HTTP frontend (``serve``), a one-shot request (``generate``), or
+the load test (``serve-bench``).  A flag added to ``serve`` but not the
+other two silently forks their engine configurations — serve-bench
+numbers stop describing what serve deploys.  Two checks:
+
+  SC401  flag registered on ``serve`` but missing on generate /
+         serve-bench (allowlistable: e.g. ``addr`` is HTTP-only)
+  SC402  deprecated-alias drift: a flag whose help marks it
+         ``deprecated`` on one serve-family command must be registered,
+         and marked deprecated, on all three
+
+Per-command extras (``prompt``, ``priority``, ``requests``) are fine:
+parity is directional, serve -> others.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+import rustlex
+from sccore import finding, read_text, surface_missing
+
+PASS_ID = "P4"
+PASS_NAME = "cli-parity"
+CODES = {
+    "SC401": "serve flag missing on a serve-family command",
+    "SC402": "deprecated-alias table inconsistent across commands",
+}
+
+RS_MAIN = os.path.join("rust", "src", "main.rs")
+FAMILY = ("serve", "generate", "serve-bench")
+
+
+def command_flags(text: str, cmd: str):
+    """{flag: full_call_args_text} for one ``Args::new(cmd)`` chain.
+
+    The chain is scanned string-aware from ``Args::new("cmd"`` to the
+    terminating ``;`` at paren depth 0 (help strings live inside call
+    parens, so a ``;`` inside one cannot end the scan early).
+    """
+    m = re.search(rf'Args::new\(\s*"{re.escape(cmd)}"', text)
+    if not m:
+        return None
+    i, n = m.start(), len(text)
+    depth, in_str = 0, False
+    end = n
+    while i < n:
+        c = text[i]
+        if in_str:
+            if c == "\\":
+                i += 2
+                continue
+            if c == '"':
+                in_str = False
+        elif c == '"':
+            in_str = True
+        elif c in "([":
+            depth += 1
+        elif c in ")]":
+            depth -= 1
+        elif c == ";" and depth == 0:
+            end = i
+            break
+        i += 1
+    chain = text[m.start():end]
+    flags = {}
+    for call in re.finditer(r"\.(?:opt|flag|pos)\(", chain):
+        open_idx = call.end() - 1
+        d, j, s = 0, open_idx, False
+        while j < len(chain):
+            c = chain[j]
+            if s:
+                if c == "\\":
+                    j += 2
+                    continue
+                if c == '"':
+                    s = False
+            elif c == '"':
+                s = True
+            elif c == "(":
+                d += 1
+            elif c == ")":
+                d -= 1
+                if d == 0:
+                    break
+            j += 1
+        args = chain[open_idx + 1:j]
+        nm = re.match(r'\s*"([a-z][a-z0-9-]*)"', args)
+        if nm:
+            flags[nm.group(1)] = args
+    return flags
+
+
+def run(root: str):
+    text = read_text(os.path.join(root, RS_MAIN))
+    if text is None:
+        return [surface_missing(RS_MAIN)]
+    text = rustlex.cut_test_mod(rustlex.strip_comments(text))
+    cmds = {}
+    out = []
+    for cmd in FAMILY:
+        flags = command_flags(text, cmd)
+        if flags is None:
+            out.append(surface_missing(RS_MAIN, f'Args::new("{cmd}")'))
+        else:
+            cmds[cmd] = flags
+    if len(cmds) != len(FAMILY):
+        return out
+
+    for flag in sorted(cmds["serve"]):
+        for target in ("generate", "serve-bench"):
+            if flag not in cmds[target]:
+                out.append(finding(
+                    "SC401", f"{flag}:{target}",
+                    f"serve flag '--{flag}' is not registered on "
+                    f"'{target}'", RS_MAIN))
+
+    deprecated = {cmd: {f for f, args in flags.items()
+                        if "deprecated" in args}
+                  for cmd, flags in cmds.items()}
+    all_aliases = set().union(*deprecated.values())
+    for alias in sorted(all_aliases):
+        for cmd in FAMILY:
+            if alias not in cmds[cmd]:
+                out.append(finding(
+                    "SC402", f"{alias}:{cmd}:missing",
+                    f"deprecated alias '--{alias}' is not registered "
+                    f"on '{cmd}'", RS_MAIN))
+            elif alias not in deprecated[cmd]:
+                out.append(finding(
+                    "SC402", f"{alias}:{cmd}:unmarked",
+                    f"'--{alias}' is marked deprecated elsewhere but "
+                    f"not in its '{cmd}' help text", RS_MAIN))
+    return out

@@ -1,0 +1,126 @@
+"""P5 backend-trait gating: DecodeBackend capability discipline.
+
+``DecodeBackend`` (rust/src/coordinator/backend.rs) gates optional
+capabilities behind ``supports_*`` probes; the un-supporting default
+method bodies ``bail!``.  The engine only calls a gated method after
+its probe returns true, so the invariants are:
+
+  SC501  a trait method with a bail!-ing default body has no entry in
+         the capability-gate table below — someone added an optional
+         method without a ``supports_*`` probe
+  SC502  ``todo!()`` / ``unimplemented!()`` (or ``dbg!``) anywhere in
+         rust/src — panicking placeholders are never a gated path
+  SC503  an ``impl DecodeBackend for X`` overrides a ``supports_*``
+         probe (claiming it may answer true) but does not override
+         every method that probe gates
+
+The gate table is the pass's contract with the trait; extending the
+trait means extending GATES here (SC501 is what reminds you).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+import rustlex
+from sccore import finding, read_text, surface_missing
+
+PASS_ID = "P5"
+PASS_NAME = "backend-gating"
+CODES = {
+    "SC501": "bail!-defaulted trait method has no capability gate",
+    "SC502": "todo!/unimplemented!/dbg! in rust sources",
+    "SC503": "impl overrides a supports_* probe but not all its methods",
+}
+
+RS_BACKEND = os.path.join("rust", "src", "coordinator", "backend.rs")
+RS_SRC = os.path.join("rust", "src")
+
+GATES = {
+    "prefill_chunk_paged": "supports_paged",
+    "decode_paged": "supports_paged",
+    "copy_block": "supports_block_ops",
+    "export_block": "supports_block_ops",
+    "import_block": "supports_block_ops",
+    "draft_step": "supports_speculation",
+    "verify_tokens": "supports_speculation",
+}
+
+_PANIC = re.compile(r"\b(todo!|unimplemented!|dbg!)\s*[(\[]")
+
+
+def _rust_files(root: str):
+    for dirpath, _, names in os.walk(os.path.join(root, RS_SRC)):
+        for name in sorted(names):
+            if name.endswith(".rs"):
+                yield os.path.join(dirpath, name)
+
+
+def trait_surface(path: str):
+    """{method: default_body_or_None} of trait DecodeBackend."""
+    text = read_text(path)
+    if text is None:
+        return None
+    text = rustlex.cut_test_mod(rustlex.strip_comments(text))
+    body = rustlex.block(text, r"\btrait DecodeBackend\b")
+    if body is None:
+        return None
+    return rustlex.trait_methods(body)
+
+
+def run(root: str):
+    out = []
+    trait = trait_surface(os.path.join(root, RS_BACKEND))
+    if trait is None:
+        out.append(surface_missing(RS_BACKEND, "trait DecodeBackend"))
+        gated_by = {}
+    else:
+        for name, body in sorted(trait.items()):
+            if body and "bail!" in body and name not in GATES:
+                out.append(finding(
+                    "SC501", name,
+                    f"DecodeBackend::{name} bails by default but has "
+                    f"no supports_* gate registered in the P5 gate "
+                    f"table", RS_BACKEND))
+        gated_by = {}
+        for method, gate in GATES.items():
+            gated_by.setdefault(gate, []).append(method)
+            if trait and method not in trait:
+                out.append(finding(
+                    "SC501", f"gone:{method}",
+                    f"P5 gate table lists DecodeBackend::{method} "
+                    f"which no longer exists on the trait",
+                    RS_BACKEND))
+
+    for path in _rust_files(root):
+        rel = os.path.relpath(path, root)
+        raw = read_text(path)
+        if raw is None:
+            continue
+        text = rustlex.cut_test_mod(rustlex.strip_comments(raw))
+        for m in _PANIC.finditer(text):
+            line = text.count("\n", 0, m.start()) + 1
+            out.append(finding(
+                "SC502", f"{rel}:{m.group(1)}",
+                f"{m.group(1)}() placeholder in non-test rust code",
+                rel, line))
+        for im in re.finditer(r"impl\s+DecodeBackend\s+for\s+(\w+)", text):
+            impl_name = im.group(1)
+            body = rustlex.block(text[im.start():],
+                                 r"impl\s+DecodeBackend\s+for")
+            if body is None:
+                continue
+            impl_fns = rustlex.fn_names(body)
+            for gate, methods in sorted(gated_by.items()):
+                if gate not in impl_fns:
+                    continue
+                for method in methods:
+                    if method not in impl_fns:
+                        out.append(finding(
+                            "SC503", f"{impl_name}:{method}",
+                            f"{impl_name} overrides {gate}() but not "
+                            f"{method}() — the bail! default would "
+                            f"fire behind a true capability probe",
+                            rel))
+    return out

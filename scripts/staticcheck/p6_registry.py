@@ -1,0 +1,100 @@
+"""P6 test-registry: every rust/tests/*.rs has a [[test]] entry.
+
+Folded in from ``scripts/check_test_registry.py`` (which is now a thin
+shim over this pass).  The tests live in a non-standard layout
+(``rust/tests`` instead of ``tests/``), so cargo does **not**
+auto-discover them — a test file without a ``[[test]]`` entry in the
+root Cargo.toml silently never runs (that bit PR 3: ``paged_kv.rs``
+sat unregistered for a whole PR while tier1.sh referenced it by name).
+
+  SC601  rust/tests file with no [[test]] entry (cargo never runs it)
+  SC602  [[test]] entry missing name or path
+  SC603  [[test]] name != file stem (``cargo test --test <stem>``
+         would miss it)
+  SC604  [[test]] entry points at a missing file
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+from sccore import finding, read_text, surface_missing
+
+PASS_ID = "P6"
+PASS_NAME = "test-registry"
+CODES = {
+    "SC601": "rust test file has no [[test]] entry in Cargo.toml",
+    "SC602": "[[test]] entry missing name or path",
+    "SC603": "[[test]] name does not match the file stem",
+    "SC604": "[[test]] entry points at a missing file",
+}
+
+CARGO = "Cargo.toml"
+TESTS_DIR = os.path.join("rust", "tests")
+
+
+def registered_tests(cargo_path: str):
+    """(name, path) of every [[test]] entry, or None if unreadable."""
+    text = read_text(cargo_path)
+    if text is None:
+        return None
+    entries = []
+    # Walk section by section; a [[test]] section ends at the next
+    # [section] header.
+    for m in re.finditer(r"^\[\[test\]\]\s*$(.*?)(?=^\[|\Z)", text,
+                         re.M | re.S):
+        body = m.group(1)
+        name = re.search(r'^\s*name\s*=\s*"([^"]+)"', body, re.M)
+        path = re.search(r'^\s*path\s*=\s*"([^"]+)"', body, re.M)
+        entries.append((name and name.group(1), path and path.group(1)))
+    return entries
+
+
+def check(cargo_path: str, tests_dir: str, root: str = "."):
+    """The pass body, parameterized for the back-compat shim."""
+    out = []
+    rel_dir = os.path.relpath(tests_dir, root)
+    entries = registered_tests(cargo_path)
+    if entries is None:
+        return [surface_missing(CARGO)]
+    by_path = {}
+    for name, path in entries:
+        if not name or not path:
+            out.append(finding(
+                "SC602", f"{name!r}:{path!r}",
+                f"[[test]] entry missing name or path: name={name!r} "
+                f"path={path!r}", CARGO))
+            continue
+        by_path[path] = name
+        stem = os.path.splitext(os.path.basename(path))[0]
+        if stem != name:
+            out.append(finding(
+                "SC603", name,
+                f"[[test]] name '{name}' != file stem '{stem}' "
+                f"({path}): `cargo test --test {stem}` would miss it",
+                CARGO))
+        if not os.path.exists(os.path.join(root, path)):
+            out.append(finding(
+                "SC604", name,
+                f"[[test]] '{name}' points at a missing file: {path}",
+                CARGO))
+    try:
+        on_disk = sorted(
+            f for f in os.listdir(tests_dir) if f.endswith(".rs"))
+    except OSError:
+        return out + [surface_missing(rel_dir)]
+    for f in on_disk:
+        rel = f"{rel_dir}/{f}"
+        if rel not in by_path:
+            out.append(finding(
+                "SC601", rel,
+                f"{rel} has no [[test]] entry in Cargo.toml — cargo "
+                f"will silently never run it (non-standard test "
+                f"layout)", rel))
+    return out
+
+
+def run(root: str):
+    return check(os.path.join(root, CARGO),
+                 os.path.join(root, TESTS_DIR), root)

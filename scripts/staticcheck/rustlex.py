@@ -1,0 +1,226 @@
+"""A small lexical Rust reader for the staticcheck passes.
+
+This is *not* a Rust parser.  The passes only need a handful of shapes —
+string literals, ``fn``/``impl``/``struct``/``trait`` block bodies,
+``"lit" => expr`` match arms — and the repo's rust style (rustfmt'd,
+no macros generating the checked surfaces) keeps those shapes regular
+enough for a scanner that understands strings, comments, and brace
+depth.  Anything fancier belongs in a real parser; if a pass starts
+needing one, the surface it checks has become too clever to mirror
+by hand anyway.
+
+Stdlib only.
+"""
+
+from __future__ import annotations
+
+import re
+
+
+def strip_comments(text: str) -> str:
+    """Remove ``//`` line comments and ``/* */`` blocks, preserving
+    string literals (and the line structure, for stable line numbers)."""
+    out = []
+    i, n = 0, len(text)
+    in_str = False
+    while i < n:
+        c = text[i]
+        if in_str:
+            out.append(c)
+            if c == "\\" and i + 1 < n:
+                out.append(text[i + 1])
+                i += 2
+                continue
+            if c == '"':
+                in_str = False
+            i += 1
+            continue
+        if c == '"':
+            in_str = True
+            out.append(c)
+            i += 1
+            continue
+        if c == "/" and i + 1 < n and text[i + 1] == "/":
+            j = text.find("\n", i)
+            i = n if j < 0 else j
+            continue
+        if c == "/" and i + 1 < n and text[i + 1] == "*":
+            j = text.find("*/", i + 2)
+            end = n if j < 0 else j + 2
+            out.append("\n" * text.count("\n", i, end))
+            i = end
+            continue
+        out.append(c)
+        i += 1
+    return "".join(out)
+
+
+def cut_test_mod(text: str) -> str:
+    """Drop everything from the first ``#[cfg(test)]`` on (the repo
+    keeps one trailing test module per file)."""
+    i = text.find("#[cfg(test)]")
+    return text if i < 0 else text[:i]
+
+
+def _match_brace(text: str, open_idx: int) -> int:
+    """Index just past the ``}`` matching ``text[open_idx] == '{'``
+    (string-aware).  Returns -1 if unbalanced."""
+    depth = 0
+    i, n = open_idx, len(text)
+    in_str = False
+    while i < n:
+        c = text[i]
+        if in_str:
+            if c == "\\":
+                i += 2
+                continue
+            if c == '"':
+                in_str = False
+        elif c == '"':
+            in_str = True
+        elif c == "{":
+            depth += 1
+        elif c == "}":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+        i += 1
+    return -1
+
+
+def block(text: str, header_re: str):
+    """Body (inside the braces) of the first block whose header matches
+    ``header_re``, e.g. ``r"fn report\\b"`` or
+    ``r"impl DecodeBackend for FakeBackend\\b"``.  None if absent."""
+    m = re.search(header_re, text)
+    if not m:
+        return None
+    open_idx = text.find("{", m.end())
+    if open_idx < 0:
+        return None
+    end = _match_brace(text, open_idx)
+    if end < 0:
+        return None
+    return text[open_idx + 1:end - 1]
+
+
+def fn_body(text: str, name: str):
+    return block(text, rf"fn {re.escape(name)}\b")
+
+
+def string_literals(text: str) -> list:
+    """All ``"..."`` literal contents, with rustfmt's backslash-newline
+    continuations collapsed (``"a \\\n    b"`` reads back as ``"a b"``)."""
+    lits = []
+    for m in re.finditer(r'"((?:[^"\\]|\\.)*)"', text, re.S):
+        lits.append(collapse_continuations(m.group(1)))
+    return lits
+
+
+def collapse_continuations(s: str) -> str:
+    """Undo ``\\<newline><indent>`` string continuations."""
+    return re.sub(r"\\\n\s*", "", s)
+
+
+def struct_fields(text: str, name: str):
+    """[(field, type)] of ``struct Name { ... }`` (pub or not).
+    None if the struct is absent."""
+    body = block(text, rf"struct {re.escape(name)}\b")
+    if body is None:
+        return None
+    fields = []
+    for m in re.finditer(
+            r"^\s*(?:pub\s+)?([a-z_][a-z_0-9]*)\s*:\s*([^,\n]+),?\s*$",
+            body, re.M):
+        fields.append((m.group(1), m.group(2).strip()))
+    return fields
+
+
+def match_str_arms(body: str) -> list:
+    """[(pattern_literals, arm_expr)] for ``"a" | "b" => expr,`` arms.
+
+    The arm expression is captured up to the comma at zero
+    paren/brace/bracket depth (string-aware), so multi-line
+    ``plan(...)`` calls come back whole.
+    """
+    arms = []
+    i, n = 0, len(body)
+    pat_re = re.compile(r'((?:"(?:[^"\\]|\\.)*"\s*\|\s*)*"(?:[^"\\]|\\.)*")'
+                        r"\s*=>")
+    while i < n:
+        m = pat_re.search(body, i)
+        if not m:
+            break
+        pats = re.findall(r'"((?:[^"\\]|\\.)*)"', m.group(1))
+        j = m.end()
+        depth = 0
+        in_str = False
+        start = j
+        while j < n:
+            c = body[j]
+            if in_str:
+                if c == "\\":
+                    j += 2
+                    continue
+                if c == '"':
+                    in_str = False
+            elif c == '"':
+                in_str = True
+            elif c in "([{":
+                depth += 1
+            elif c in ")]}":
+                depth -= 1
+            elif c == "," and depth == 0:
+                break
+            j += 1
+        arms.append((pats, body[start:j].strip()))
+        i = j + 1
+    return arms
+
+
+def fn_names(body: str) -> set:
+    """Names of ``fn`` items declared directly in a block body."""
+    return set(re.findall(r"\bfn\s+([a-z_][a-z_0-9]*)\s*[(<]", body))
+
+
+def trait_methods(trait_body: str) -> dict:
+    """{method: default_body_or_None} for a trait block body.
+
+    A method ending in ``;`` before any ``{`` is required (None); one
+    with a body gets that body text.
+    """
+    methods = {}
+    for m in re.finditer(r"\bfn\s+([a-z_][a-z_0-9]*)\s*[(<]", trait_body):
+        name = m.group(1)
+        # Scan past the signature: first `{` at depth 0 opens a default
+        # body; a `;` at depth 0 first means no default.
+        j = m.end() - 1
+        depth = 0
+        in_str = False
+        body = None
+        while j < len(trait_body):
+            c = trait_body[j]
+            if in_str:
+                if c == "\\":
+                    j += 2
+                    continue
+                if c == '"':
+                    in_str = False
+            elif c == '"':
+                in_str = True
+            elif c in "([":
+                # NB: `<`/`>` are not tracked — `-> Result<Vec<f32>>`
+                # would unbalance them, and no checked signature nests
+                # parens inside generics.
+                depth += 1
+            elif c in ")]":
+                depth -= 1
+            elif c == "{" and depth == 0:
+                end = _match_brace(trait_body, j)
+                body = trait_body[j + 1:end - 1] if end > 0 else ""
+                break
+            elif c == ";" and depth == 0:
+                break
+            j += 1
+        methods[name] = body
+    return methods

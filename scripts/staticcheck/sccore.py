@@ -1,0 +1,108 @@
+"""Framework core for scripts/staticcheck: findings + allowlist.
+
+A *finding* is one detected inconsistency.  It carries a stable code
+(``SC101`` ...; see ``python3 scripts/staticcheck --list-codes``) and a
+stable *key* — the identity string an allowlist entry suppresses.  Keys
+are deterministic functions of the drift itself (never of line numbers),
+so an allowlist entry survives unrelated edits to the checked files.
+
+Allowlist format (``scripts/staticcheck/allowlist.txt``)::
+
+    # free comment lines
+    SC105:py-only:unknown legacy weight spec *  # justification required
+
+Every entry MUST carry a trailing ``#`` justification; a bare key is
+itself a finding (SC002).  Entries that no longer suppress anything are
+stale and also findings (SC003) — the list can only shrink back to
+truth, never rot.
+
+Stdlib only — no pip dependencies (same policy as bench_guard.py).
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+
+# Framework-level codes (passes use their own SCxxx ranges).
+CODES = {
+    "SC001": "checked surface missing or unparseable",
+    "SC002": "allowlist entry without a justification comment",
+    "SC003": "stale allowlist entry (suppresses nothing)",
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    code: str            # stable finding code, e.g. "SC201"
+    key: str             # allowlist identity, e.g. "SC201:serve.paged"
+    message: str         # human-readable description
+    file: str = ""       # repo-relative anchor file
+    line: int = 0        # best-effort anchor line (0 = whole file)
+
+    def render(self) -> str:
+        loc = self.file
+        if self.line:
+            loc += f":{self.line}"
+        loc = f" [{loc}]" if loc else ""
+        return f"{self.code} {self.message}{loc}\n    key: {self.key}"
+
+
+def finding(code: str, key: str, message: str, file: str = "",
+            line: int = 0) -> Finding:
+    """Build a finding, namespacing the key by its code."""
+    return Finding(code, f"{code}:{key}", message, file, line)
+
+
+def surface_missing(path: str, detail: str = "") -> Finding:
+    """SC001: a file a pass needs to parse is absent/unreadable."""
+    extra = f" ({detail})" if detail else ""
+    return finding("SC001", path, f"checked surface missing: {path}{extra}")
+
+
+@dataclass
+class Allowlist:
+    entries: dict = field(default_factory=dict)   # key -> justification
+    problems: list = field(default_factory=list)  # list[Finding]
+
+    @classmethod
+    def load(cls, path: str) -> "Allowlist":
+        al = cls()
+        if not os.path.exists(path):
+            return al
+        with open(path) as fh:
+            for lineno, raw in enumerate(fh, 1):
+                line = raw.strip()
+                if not line or line.startswith("#"):
+                    continue
+                key, _, why = line.partition("#")
+                key, why = key.strip(), why.strip()
+                if not why:
+                    al.problems.append(finding(
+                        "SC002", f"{os.path.basename(path)}:{lineno}",
+                        f"allowlist entry '{key}' has no justification "
+                        f"comment", path, lineno))
+                al.entries[key] = why
+        return al
+
+    def split(self, findings: list) -> tuple:
+        """(active, suppressed, stale_keys)."""
+        active, suppressed = [], []
+        hit = set()
+        for f in findings:
+            if f.key in self.entries:
+                suppressed.append(f)
+                hit.add(f.key)
+            else:
+                active.append(f)
+        stale = [k for k in self.entries if k not in hit]
+        return active, suppressed, stale
+
+
+def read_text(path: str):
+    """File contents, or None when absent (caller emits SC001)."""
+    try:
+        with open(path, encoding="utf-8") as fh:
+            return fh.read()
+    except OSError:
+        return None

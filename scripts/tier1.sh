@@ -27,11 +27,12 @@ for arg in "$@"; do
     esac
 done
 
-# Structural guard before anything builds: every rust/tests/*.rs file
-# must be registered as a [[test]] in Cargo.toml (non-standard layout,
-# no auto-discovery — an unregistered file silently never runs; this
-# bit PR 3 and was hand-fixed in PR 4).
-python3 scripts/check_test_registry.py
+# Static analysis before anything builds (DESIGN.md §14): the
+# cross-language consistency passes — spec mirror, manifest parity,
+# metrics parity, CLI parity, backend gating, test registry — need no
+# cargo or jax, so they run even in cargo-less images and fail the gate
+# in seconds instead of after a full build.
+python3 scripts/staticcheck
 
 cargo build --release
 cargo test -q

@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
             // --speculate` / DESIGN.md §13
             spec: None,
             admission: Default::default(),
+            trace_capacity: 0,
         },
     )?;
 

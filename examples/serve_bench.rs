@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
             paged: None,
             spec: None,
             admission: Default::default(),
+            trace_capacity: 0,
         };
         let t0 = std::time::Instant::now();
         let stats = loadtest::run_loadtest(&manifest, &cfg, requests,

@@ -252,6 +252,40 @@ fn route(req: &HttpRequest) -> String {
 }
 '''
 
+RS_TRACE = '''\
+pub enum TraceEvent {
+    Admitted { blocks: usize },
+    Decoded,
+    Finished { reason: FinishReason },
+}
+
+impl TraceEvent {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Admitted { .. } => "admitted",
+            TraceEvent::Decoded => "decoded",
+            TraceEvent::Finished { .. } => "finished",
+        }
+    }
+}
+'''
+
+DESIGN_MD = '''\
+# fixture design notes
+
+## §14 Static consistency
+
+Registry of drift passes.
+
+## §15 Flight recorder
+
+| event | meaning |
+| --- | --- |
+| `Admitted` | request joined a lane |
+| `Decoded` | one decode step committed a token |
+| `Finished` | terminal transition |
+'''
+
 RS_MAIN = '''\
 fn serve(argv: &[String]) -> Result<()> {
     let a = Args::new("serve", "HTTP serving frontend")
@@ -371,7 +405,9 @@ TREE = {
     "rust/src/coordinator/metrics.rs": RS_METRICS,
     "rust/src/coordinator/server.rs": RS_SERVER,
     "rust/src/coordinator/backend.rs": RS_BACKEND,
+    "rust/src/coordinator/trace.rs": RS_TRACE,
     "rust/src/main.rs": RS_MAIN,
+    "DESIGN.md": DESIGN_MD,
     "scripts/bench_guard.py": BENCH_GUARD,
     "Cargo.toml": CARGO_TOML,
     "rust/tests/integration.rs": "fn main() {}\n",
@@ -501,6 +537,24 @@ def test_p3_missing_bench_key_fires_sc303(tree):
            '("tokens_per_sec", json::num(1.0)),', "")
     found = keys(p3_metrics.run(str(tree)))
     assert "SC303:BENCH_baseline.json:tokens_per_sec" in found
+
+
+def test_p3_undocumented_trace_variant_fires_sc304(tree):
+    # DESIGN.md §15 loses the Decoded row: the taxonomy drifts.
+    mutate(tree, "DESIGN.md",
+           "| `Decoded` | one decode step committed a token |\n", "")
+    found = keys(p3_metrics.run(str(tree)))
+    assert "SC304:Decoded" in found
+    assert "SC305:Decoded" not in found
+
+
+def test_p3_unserialized_trace_variant_fires_sc305(tree):
+    # kind() drops its Decoded arm: the variant vanishes from GET /trace.
+    mutate(tree, "rust/src/coordinator/trace.rs",
+           '            TraceEvent::Decoded => "decoded",\n', "")
+    found = keys(p3_metrics.run(str(tree)))
+    assert "SC305:Decoded" in found
+    assert "SC304:Decoded" not in found
 
 
 def test_p4_missing_cli_flag_fires_sc401(tree):

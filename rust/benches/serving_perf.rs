@@ -66,6 +66,7 @@ fn main() {
                     paged: None,
                     spec: None,
                     admission: Default::default(),
+                    trace_capacity: 0,
                 };
                 let stats =
                     loadtest::run_loadtest(&m, &cfg, requests, max_new)

@@ -6,8 +6,8 @@ use std::sync::mpsc;
 
 use anyhow::Result;
 
-use super::{EngineConfig, EngineHandle, EngineMetrics, Request, Response,
-            Sampling};
+use super::{trace, EngineConfig, EngineHandle, EngineMetrics, Request,
+            Response, Sampling};
 use crate::config::Manifest;
 use crate::util::json;
 
@@ -38,6 +38,18 @@ pub fn run_loadtest(
     n: usize,
     max_new: usize,
 ) -> Result<EngineMetrics> {
+    Ok(run_loadtest_traced(manifest, cfg, n, max_new)?.0)
+}
+
+/// [`run_loadtest`], but also drains the engine's flight-recorder ring
+/// (DESIGN.md §15) before shutdown so the caller can write a Chrome
+/// trace of the run (`serve-bench --trace-file`).
+pub fn run_loadtest_traced(
+    manifest: &Manifest,
+    cfg: &EngineConfig,
+    n: usize,
+    max_new: usize,
+) -> Result<(EngineMetrics, Vec<trace::TraceRecord>)> {
     let prompts = load_prompts(manifest)?;
     let engine = EngineHandle::spawn(manifest.dir.clone(), cfg.clone())?;
     let mut rxs: Vec<mpsc::Receiver<Response>> = Vec::with_capacity(n);
@@ -55,8 +67,9 @@ pub fn run_loadtest(
             .map_err(|_| anyhow::anyhow!("request dropped by engine"))?;
     }
     let metrics = engine.metrics()?;
+    let records = engine.trace()?;
     engine.shutdown();
-    Ok(metrics)
+    Ok((metrics, records))
 }
 
 /// Generate continuations for `prompts` with one engine.
@@ -132,6 +145,7 @@ pub fn run_judge(
         paged: None,
         spec: None,
         admission: super::AdmissionPolicy::default(),
+        trace_capacity: 0,
     };
     let gens_a = generate_all(manifest, &mk_cfg(method_a), &prompts,
                               max_new)?;

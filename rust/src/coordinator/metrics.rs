@@ -159,6 +159,22 @@ pub struct EngineMetrics {
     /// configuration (a budget covering the largest bucket) shows the
     /// old stall here.
     pub decode_stall_ns: u64,
+    /// Wall-clock of corrected verify passes inside speculative rounds
+    /// (DESIGN.md §15); part of each round's `decode_ns`.
+    pub verify_ns: u64,
+    /// Wall-clock of block export/import during swap-outs/swap-ins.
+    pub swap_ns: u64,
+    /// Whole engine ticks measured end-to-end (`tick_ns / ticks` is
+    /// the mean tick time the flight-recorder overhead budget is
+    /// asserted against).
+    pub tick_ns: u64,
+    /// Engine ticks executed.
+    pub ticks: u64,
+    /// Flight-recorder events ever recorded (DESIGN.md §15), at the
+    /// last snapshot.
+    pub trace_events_total: u64,
+    /// Flight-recorder events evicted by ring wraparound.
+    pub trace_dropped_total: u64,
     pub ttft_ms: LatencyHistogram,
     pub total_ms: LatencyHistogram,
     /// Gap between consecutive sampled tokens of a sequence (ms) — the
@@ -263,7 +279,9 @@ impl EngineMetrics {
              p99 {:.2} ms | e2e p50 {:.0} ms p99 {:.0} ms \
              | budget {}/tick (packed mean {:.1}, max {:.0}, prefill \
              share {:.1}) \
-             | decode stalled {:.1} ms{spec}{paged}",
+             | decode stalled {:.1} ms | verify {:.1} ms swap {:.1} ms \
+             | {} ticks {:.2} ms avg | trace {} events ({} \
+             dropped){spec}{paged}",
             self.completed,
             self.submitted,
             self.rejected,
@@ -296,6 +314,16 @@ impl EngineMetrics {
             self.packed_tokens.max(),
             self.packed_prefill_tokens.mean(),
             self.decode_stall_ms(),
+            self.verify_ns as f64 / 1e6,
+            self.swap_ns as f64 / 1e6,
+            self.ticks,
+            if self.ticks > 0 {
+                self.tick_ns as f64 / self.ticks as f64 / 1e6
+            } else {
+                0.0
+            },
+            self.trace_events_total,
+            self.trace_dropped_total,
         )
     }
 }

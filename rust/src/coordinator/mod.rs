@@ -53,9 +53,9 @@ pub mod loadtest;
 pub mod metrics;
 pub mod server;
 pub mod testbackend;
+pub mod trace;
 
 use std::sync::mpsc;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -67,6 +67,7 @@ use crate::kvcache::SlotMap;
 use crate::util::rng::Rng;
 
 use backend::{DecodeBackend, PjrtBackend};
+use trace::{now_ns, ns_to_ms, TraceEvent};
 
 pub use metrics::{EngineMetrics, LatencyHistogram};
 
@@ -148,6 +149,7 @@ pub struct Response {
 enum Msg {
     Submit(Request, mpsc::Sender<Response>),
     Metrics(mpsc::Sender<EngineMetrics>),
+    Trace(mpsc::Sender<Vec<trace::TraceRecord>>),
     Shutdown,
 }
 
@@ -250,6 +252,9 @@ pub struct EngineConfig {
     pub spec: Option<SpecConfig>,
     /// Overload behavior of the admission queue.
     pub admission: AdmissionPolicy,
+    /// Flight-recorder ring capacity in events (DESIGN.md §15); 0
+    /// resolves to [`trace::DEFAULT_CAPACITY`].
+    pub trace_capacity: usize,
 }
 
 impl EngineHandle {
@@ -296,6 +301,13 @@ impl EngineHandle {
         rx.recv().map_err(|_| anyhow::anyhow!("engine gone"))
     }
 
+    /// Flight-recorder contents (DESIGN.md §15), oldest first.
+    pub fn trace(&self) -> Result<Vec<trace::TraceRecord>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Trace(tx))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine gone"))
+    }
+
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(j) = self.join.take() {
@@ -320,17 +332,20 @@ impl Drop for EngineHandle {
 struct ActiveSeq {
     request: Request,
     reply: mpsc::Sender<Response>,
-    submitted: Instant,
+    /// Submission timestamp ([`now_ns`]) — the single monotonic clock
+    /// every latency metric derives from.
+    submitted: u64,
     ttft_ms: Option<f64>,
     /// Accumulated wall-clock spent swapped out (ms): counts into total
     /// latency, never into TTFT (the first token predates any swap).
     swapped_ms: f64,
     generated: Vec<u32>,
     last_token: u32,
-    /// When the previous token was sampled — feeds the inter-token
-    /// latency histogram (the metric chunked prefill exists to protect).
-    /// Time spent swapped out counts: the client experienced the gap.
-    last_token_at: Instant,
+    /// When the previous token was sampled ([`now_ns`]) — feeds the
+    /// inter-token latency histogram (the metric chunked prefill exists
+    /// to protect).  Time spent swapped out counts: the client
+    /// experienced the gap.
+    last_token_at: u64,
     rng: Rng,
     /// Current speculation depth (DESIGN.md §13), adapted per round
     /// within `[1, SpecConfig::gamma]`; unused when speculation is off.
@@ -350,7 +365,8 @@ struct ActiveSeq {
 struct PrefillSeq {
     request: Request,
     reply: mpsc::Sender<Response>,
-    submitted: Instant,
+    /// Submission timestamp ([`now_ns`]).
+    submitted: u64,
     /// Canonical (vocab-filtered, `t_max`-capped) prompt being
     /// streamed; its length is the prefill target.
     prompt: Vec<u32>,
@@ -400,7 +416,8 @@ impl Lane {
 struct Waiting {
     request: Request,
     reply: mpsc::Sender<Response>,
-    submitted: Instant,
+    /// Submission timestamp ([`now_ns`]).
+    submitted: u64,
     /// True for requests put back by preemption: they were already
     /// admitted once, so the admission deadline no longer applies
     /// (expiring them would turn preemption into request loss and
@@ -443,7 +460,8 @@ struct SwappedSeq {
     /// Valid cache rows at swap-out (the slot position to restore).
     pos: usize,
     data: Vec<SwappedBlock>,
-    swapped_at: Instant,
+    /// Swap-out timestamp ([`now_ns`]).
+    swapped_at: u64,
 }
 
 /// Admission plan for the queue head: what admitting it would cost.
@@ -501,6 +519,12 @@ pub struct Engine<B: DecodeBackend> {
     /// All zeros when speculation is off.
     tick_gamma: Vec<usize>,
     metrics: EngineMetrics,
+    /// Flight recorder (DESIGN.md §15): bounded ring of lifecycle
+    /// events, snapshot via `GET /trace` / [`Engine::trace_snapshot`].
+    recorder: trace::Recorder,
+    /// Logical tick index stamped on every trace event — deterministic
+    /// across runs, so golden tests compare event sequences.
+    tick_idx: u64,
 }
 
 impl Engine<PjrtBackend> {
@@ -585,6 +609,7 @@ impl<B: DecodeBackend> Engine<B> {
         });
         let slots = SlotMap::new(cfg.decode_batch, backend.t_max());
         let lanes = (0..cfg.decode_batch).map(|_| Lane::Idle).collect();
+        let recorder = trace::Recorder::new(cfg.trace_capacity);
         Engine {
             backend,
             slots,
@@ -601,6 +626,8 @@ impl<B: DecodeBackend> Engine<B> {
             tick_decode: Vec::new(),
             tick_gamma: Vec::new(),
             metrics: EngineMetrics::default(),
+            recorder,
+            tick_idx: 0,
         }
     }
 
@@ -613,7 +640,7 @@ impl<B: DecodeBackend> Engine<B> {
         let w = Waiting {
             request,
             reply,
-            submitted: Instant::now(),
+            submitted: now_ns(),
             preempted: false,
         };
         if let AdmissionPolicy::Wait { queue_depth, .. } =
@@ -702,7 +729,16 @@ impl<B: DecodeBackend> Engine<B> {
             m.swap_blocks_in_use = p.swap.blocks_in_use() as u64;
             m.swap_blocks_total = p.swap.max_blocks() as u64;
         }
+        m.trace_events_total = self.recorder.total();
+        m.trace_dropped_total = self.recorder.dropped();
         m
+    }
+
+    /// Flight-recorder contents, oldest first (DESIGN.md §15) — the
+    /// direct-drive twin of [`EngineHandle::trace`] for tests and
+    /// benches.
+    pub fn trace_snapshot(&self) -> Vec<trace::TraceRecord> {
+        self.recorder.snapshot()
     }
 
     fn run(&mut self, rx: mpsc::Receiver<Msg>) {
@@ -729,6 +765,9 @@ impl<B: DecodeBackend> Engine<B> {
                     Msg::Metrics(tx) => {
                         let _ = tx.send(self.metrics_snapshot());
                     }
+                    Msg::Trace(tx) => {
+                        let _ = tx.send(self.recorder.snapshot());
+                    }
                     Msg::Shutdown => return,
                 }
                 if !idle {
@@ -750,6 +789,8 @@ impl<B: DecodeBackend> Engine<B> {
     /// decode step over the lanes that were decoding at the top of the
     /// tick.
     pub fn tick(&mut self) {
+        let tick_t0 = now_ns();
+        self.tick_idx += 1;
         self.expire_waiting();
         self.swap_in_ready();
         // Snapshot the decode set.  Sequences completing their final
@@ -819,6 +860,8 @@ impl<B: DecodeBackend> Engine<B> {
                 crate::info!("decode step failed: {e:#}");
             }
         }
+        self.metrics.ticks += 1;
+        self.metrics.tick_ns += now_ns().saturating_sub(tick_t0);
     }
 
     /// Admit queue heads while capacity lasts.  Admission commits the
@@ -929,11 +972,13 @@ impl<B: DecodeBackend> Engine<B> {
         if deadline_ms == 0 {
             return;
         }
-        let deadline = std::time::Duration::from_millis(deadline_ms);
+        let deadline_ns = deadline_ms.saturating_mul(1_000_000);
+        let now = now_ns();
         let mut i = 0;
         while i < self.waiting.len() {
             if !self.waiting[i].preempted
-                && self.waiting[i].submitted.elapsed() >= deadline
+                && now.saturating_sub(self.waiting[i].submitted)
+                    >= deadline_ns
             {
                 let w = self.waiting.remove(i).unwrap();
                 self.reject(w, "admission deadline exceeded",
@@ -1053,7 +1098,24 @@ impl<B: DecodeBackend> Engine<B> {
             FinishReason::Expired => self.metrics.expired += 1,
             _ => self.metrics.rejected += 1,
         }
-        let total_ms = w.submitted.elapsed().as_secs_f64() * 1e3;
+        if finish == FinishReason::Expired {
+            self.recorder.emit(
+                self.tick_idx,
+                w.request.id,
+                None,
+                0,
+                TraceEvent::Expired,
+            );
+        }
+        self.recorder.emit(
+            self.tick_idx,
+            w.request.id,
+            None,
+            0,
+            TraceEvent::Finished { reason: finish },
+        );
+        let total_ms =
+            ns_to_ms(now_ns().saturating_sub(w.submitted));
         self.metrics.ttft_ms.record(total_ms);
         self.metrics.total_ms.record(total_ms);
         let _ = w.reply.send(Response {
@@ -1122,6 +1184,7 @@ impl<B: DecodeBackend> Engine<B> {
             self.reject(w, "slot update failed", FinishReason::Rejected);
             return;
         }
+        let rid = w.request.id;
         self.lanes[slot] = Lane::Prefilling(PrefillSeq {
             request: w.request,
             reply: w.reply,
@@ -1130,6 +1193,13 @@ impl<B: DecodeBackend> Engine<B> {
             next_row: shared_rows,
             shared_blocks: shared.len(),
         });
+        self.recorder.emit(
+            self.tick_idx,
+            rid,
+            Some(slot),
+            0,
+            TraceEvent::Admitted { blocks, shared: shared.len() },
+        );
         if shared_rows == len {
             // Whole prompt already resident: the final chunk processes
             // zero new rows, so run it now for its logits rather than
@@ -1138,11 +1208,11 @@ impl<B: DecodeBackend> Engine<B> {
             // blocks — see the dead-write note on [`PrefillSeq`].)
             // Its wall-clock stalls live decodes exactly like a packed
             // chunk, so it feeds the same gauge.
-            let t0 = Instant::now();
-            self.run_chunk(slot, len);
+            let t0 = now_ns();
+            self.run_chunk(slot, len, 0);
             if !self.tick_decode.is_empty() {
                 self.metrics.decode_stall_ns +=
-                    t0.elapsed().as_nanos() as u64;
+                    now_ns().saturating_sub(t0);
             }
         }
     }
@@ -1162,7 +1232,7 @@ impl<B: DecodeBackend> Engine<B> {
             .as_ref()
             .map(|p| p.alloc.block_size())
             .unwrap_or(1);
-        let stall_t0 = Instant::now();
+        let stall_t0 = now_ns();
         let decoding = !self.tick_decode.is_empty();
         let start = self.prefill_cursor % b;
         let mut packed = 0usize;
@@ -1184,14 +1254,15 @@ impl<B: DecodeBackend> Engine<B> {
                 continue;
             }
             let chunk_end = seq.next_row + take;
-            let done = self.run_chunk(slot, chunk_end);
+            let done =
+                self.run_chunk(slot, chunk_end, left.saturating_sub(take));
             packed += done;
             left = left.saturating_sub(done);
         }
         self.prefill_cursor = self.prefill_cursor.wrapping_add(1);
         if decoding && packed > 0 {
             self.metrics.decode_stall_ns +=
-                stall_t0.elapsed().as_nanos() as u64;
+                now_ns().saturating_sub(stall_t0);
         }
         packed
     }
@@ -1204,8 +1275,16 @@ impl<B: DecodeBackend> Engine<B> {
     /// finalized.  On the final chunk the first token is sampled (TTFT)
     /// and the lane transitions to Decoding.  Returns the new rows
     /// processed; a backend failure releases the lane and answers
-    /// `Rejected`.
-    fn run_chunk(&mut self, slot: usize, chunk_end: usize) -> usize {
+    /// `Rejected`.  `budget_left` is the tick budget remaining after
+    /// this chunk — pure trace payload (the fully-shared admission
+    /// chunk passes 0: it is charged against the leftover budget by
+    /// its caller).
+    fn run_chunk(
+        &mut self,
+        slot: usize,
+        chunk_end: usize,
+        budget_left: usize,
+    ) -> usize {
         let vocab = self.backend.vocab();
         let Some(bucket) =
             batching::pick_bucket(&self.cfg.prefill_buckets, chunk_end)
@@ -1215,7 +1294,7 @@ impl<B: DecodeBackend> Engine<B> {
             self.fail_prefill(slot, "no prefill bucket for chunk");
             return 0;
         };
-        let (len, row_offset, shared_blocks, toks) = {
+        let (len, row_offset, shared_blocks, toks, rid) = {
             let Lane::Prefilling(seq) = &self.lanes[slot] else {
                 unreachable!("chunk on a non-prefilling lane");
             };
@@ -1229,17 +1308,27 @@ impl<B: DecodeBackend> Engine<B> {
             {
                 toks[i] = *t as i32;
             }
-            (seq.prompt.len(), seq.next_row, seq.shared_blocks, toks)
+            (
+                seq.prompt.len(),
+                seq.next_row,
+                seq.shared_blocks,
+                toks,
+                seq.request.id,
+            )
         };
-        let t0 = Instant::now();
-        let result = match &self.paged {
-            Some(p) => self.backend.prefill_chunk_paged(
-                slot, &p.tables[slot], &toks, bucket, chunk_end,
-                row_offset, shared_blocks,
-            ),
-            None => self.backend.prefill_chunk(
-                slot, &toks, bucket, chunk_end, row_offset,
-            ),
+        let (result, chunk_ns) = {
+            let span = trace::Span::new(&mut self.metrics.prefill_ns);
+            let r = match &self.paged {
+                Some(p) => self.backend.prefill_chunk_paged(
+                    slot, &p.tables[slot], &toks, bucket, chunk_end,
+                    row_offset, shared_blocks,
+                ),
+                None => self.backend.prefill_chunk(
+                    slot, &toks, bucket, chunk_end, row_offset,
+                ),
+            };
+            let ns = span.elapsed_ns();
+            (r, ns)
         };
         let logits = match result {
             Ok(l) => l,
@@ -1252,7 +1341,6 @@ impl<B: DecodeBackend> Engine<B> {
             }
         };
         self.metrics.prefill_steps += 1;
-        self.metrics.prefill_ns += t0.elapsed().as_nanos() as u64;
         if logits.len() < bucket * vocab {
             self.fail_prefill(slot, "prefill returned short logits");
             return 0;
@@ -1262,6 +1350,13 @@ impl<B: DecodeBackend> Engine<B> {
             return 0;
         }
         let processed = chunk_end - row_offset;
+        self.recorder.emit(
+            self.tick_idx,
+            rid,
+            Some(slot),
+            chunk_ns,
+            TraceEvent::ChunkPrefilled { rows: processed, budget_left },
+        );
         if chunk_end < len {
             let Lane::Prefilling(seq) = &mut self.lanes[slot] else {
                 unreachable!();
@@ -1348,7 +1443,7 @@ impl<B: DecodeBackend> Engine<B> {
             swapped_ms: 0.0,
             generated: Vec::new(),
             last_token: 0,
-            last_token_at: Instant::now(),
+            last_token_at: now_ns(),
             gamma: self
                 .cfg
                 .spec
@@ -1358,10 +1453,11 @@ impl<B: DecodeBackend> Engine<B> {
             accept_ewma: 1.0,
         };
         let first = sample(row, seq.request.sampling, &mut seq.rng);
-        seq.ttft_ms = Some(seq.submitted.elapsed().as_secs_f64() * 1e3);
+        seq.ttft_ms =
+            Some(ns_to_ms(now_ns().saturating_sub(seq.submitted)));
         seq.generated.push(first);
         seq.last_token = first;
-        seq.last_token_at = Instant::now();
+        seq.last_token_at = now_ns();
         self.lanes[slot] = Lane::Decoding(seq);
         // The sampled token will be fed at position `len` by decode_step;
         // finish immediately if it is EOS or the request wants one token.
@@ -1429,6 +1525,17 @@ impl<B: DecodeBackend> Engine<B> {
                         // it untouched.
                         p.alloc.free(old);
                         self.metrics.cow_copies += 1;
+                        let rid = self.lanes[s]
+                            .request()
+                            .expect("COW on a live lane")
+                            .id;
+                        self.recorder.emit(
+                            self.tick_idx,
+                            rid,
+                            Some(s),
+                            0,
+                            TraceEvent::CowFork,
+                        );
                     }
                 }
                 continue;
@@ -1464,6 +1571,17 @@ impl<B: DecodeBackend> Engine<B> {
     /// fallback.
     fn preempt(&mut self, slot: usize) {
         self.metrics.preemptions += 1;
+        let rid = self.lanes[slot]
+            .request()
+            .expect("preempt of a live lane")
+            .id;
+        self.recorder.emit(
+            self.tick_idx,
+            rid,
+            Some(slot),
+            0,
+            TraceEvent::Preempted,
+        );
         if self.lanes[slot].is_prefilling() {
             let Lane::Prefilling(seq) = self.lanes[slot].take() else {
                 unreachable!();
@@ -1477,6 +1595,13 @@ impl<B: DecodeBackend> Engine<B> {
                 seq.prompt.len()
             );
             self.release_slot(slot);
+            self.recorder.emit(
+                self.tick_idx,
+                rid,
+                Some(slot),
+                0,
+                TraceEvent::Evicted,
+            );
             self.waiting.push_front(Waiting {
                 request: seq.request,
                 reply: seq.reply,
@@ -1497,6 +1622,13 @@ impl<B: DecodeBackend> Engine<B> {
             self.slots.pos(slot)
         );
         self.release_slot(slot);
+        self.recorder.emit(
+            self.tick_idx,
+            rid,
+            Some(slot),
+            0,
+            TraceEvent::Evicted,
+        );
         // Generated tokens are discarded; greedy and seeded top-k both
         // replay identically after re-prefill, and the original submit
         // time is kept so latency metrics stay honest.  `preempted`
@@ -1525,7 +1657,9 @@ impl<B: DecodeBackend> Engine<B> {
             return false;
         }
         // Shared blocks are copied out like private ones; their other
-        // holders keep the originals.
+        // holders keep the originals.  The export loop is the swap
+        // phase's device cost: it feeds `swap_ns` and the event span.
+        let t0 = now_ns();
         let mut data = Vec::with_capacity(n);
         for &b in p.tables[slot].blocks() {
             match self.backend.export_block(b) {
@@ -1537,6 +1671,8 @@ impl<B: DecodeBackend> Engine<B> {
                 }
             }
         }
+        let export_ns = now_ns().saturating_sub(t0);
+        self.metrics.swap_ns += export_ns;
         let pos = self.slots.pos(slot);
         let Lane::Decoding(seq) = self.lanes[slot].take() else {
             unreachable!("swap of a non-decoding lane");
@@ -1549,11 +1685,18 @@ impl<B: DecodeBackend> Engine<B> {
         self.release_slot(slot);
         self.paged.as_mut().unwrap().swap.reserve(n);
         self.metrics.swap_outs += 1;
+        self.recorder.emit(
+            self.tick_idx,
+            seq.request.id,
+            Some(slot),
+            export_ns,
+            TraceEvent::SwappedOut,
+        );
         self.swapped.push_back(SwappedSeq {
             seq,
             pos,
             data,
-            swapped_at: Instant::now(),
+            swapped_at: now_ns(),
         });
         true
     }
@@ -1617,6 +1760,7 @@ impl<B: DecodeBackend> Engine<B> {
             self.metrics.prefix_bytes_saved +=
                 hits.len() as u64 * block_bytes;
             let mut ok = true;
+            let t0 = now_ns();
             for blk in entry.data.iter().skip(hits.len()) {
                 let id = self
                     .paged
@@ -1631,17 +1775,28 @@ impl<B: DecodeBackend> Engine<B> {
                     break;
                 }
             }
+            let import_ns = now_ns().saturating_sub(t0);
+            self.metrics.swap_ns += import_ns;
             self.paged.as_mut().unwrap().swap.release(n);
             let mut seq = entry.seq;
             seq.swapped_ms +=
-                entry.swapped_at.elapsed().as_secs_f64() * 1e3;
+                ns_to_ms(now_ns().saturating_sub(entry.swapped_at));
             if !ok || self.slots.set_pos(slot, entry.pos).is_err() {
                 // Broken backend path: fail the request cleanly instead
                 // of resuming over a half-imported cache.
                 self.release_slot(slot);
                 self.metrics.rejected += 1;
+                self.recorder.emit(
+                    self.tick_idx,
+                    seq.request.id,
+                    Some(slot),
+                    0,
+                    TraceEvent::Finished {
+                        reason: FinishReason::Rejected,
+                    },
+                );
                 let total_ms =
-                    seq.submitted.elapsed().as_secs_f64() * 1e3;
+                    ns_to_ms(now_ns().saturating_sub(seq.submitted));
                 let ttft = seq.ttft_ms.unwrap_or(total_ms);
                 self.metrics.ttft_ms.record(ttft);
                 self.metrics.total_ms.record(total_ms);
@@ -1661,6 +1816,13 @@ impl<B: DecodeBackend> Engine<B> {
                 seq.request.id
             );
             self.metrics.swap_ins += 1;
+            self.recorder.emit(
+                self.tick_idx,
+                seq.request.id,
+                Some(slot),
+                import_ns,
+                TraceEvent::SwappedIn,
+            );
             self.lanes[slot] = Lane::Decoding(seq);
         }
     }
@@ -1695,22 +1857,25 @@ impl<B: DecodeBackend> Engine<B> {
             self.scratch_tokens[s] = seq.last_token as i32;
         }
         self.slots.pos_into(&mut self.scratch_pos);
-        let t0 = Instant::now();
-        let logits = match &self.paged {
-            Some(p) => self.backend.decode_paged(
-                &self.scratch_tokens,
-                &self.scratch_pos,
-                &self.scratch_active,
-                &p.tables,
-            )?,
-            None => self.backend.decode(
-                &self.scratch_tokens,
-                &self.scratch_pos,
-                &self.scratch_active,
-            )?,
+        let (logits, step_ns) = {
+            let span = trace::Span::new(&mut self.metrics.decode_ns);
+            let logits = match &self.paged {
+                Some(p) => self.backend.decode_paged(
+                    &self.scratch_tokens,
+                    &self.scratch_pos,
+                    &self.scratch_active,
+                    &p.tables,
+                )?,
+                None => self.backend.decode(
+                    &self.scratch_tokens,
+                    &self.scratch_pos,
+                    &self.scratch_active,
+                )?,
+            };
+            let ns = span.elapsed_ns();
+            (logits, ns)
         };
         self.metrics.decode_steps += 1;
-        self.metrics.decode_ns += t0.elapsed().as_nanos() as u64;
         self.metrics
             .batch_occupancy
             .record(self.scratch_active.len() as f64);
@@ -1732,13 +1897,19 @@ impl<B: DecodeBackend> Engine<B> {
             let tok = sample(row, seq.request.sampling, &mut seq.rng);
             seq.generated.push(tok);
             seq.last_token = tok;
-            let now = Instant::now();
-            self.metrics.itl_ms.record(
-                now.duration_since(seq.last_token_at).as_secs_f64()
-                    * 1e3,
-            );
+            let now = now_ns();
+            self.metrics.itl_ms.record(ns_to_ms(
+                now.saturating_sub(seq.last_token_at),
+            ));
             seq.last_token_at = now;
             self.metrics.tokens_generated += 1;
+            self.recorder.emit(
+                self.tick_idx,
+                seq.request.id,
+                Some(s),
+                step_ns,
+                TraceEvent::Decoded,
+            );
             self.maybe_finish(s);
         }
         Ok(())
@@ -1813,13 +1984,18 @@ impl<B: DecodeBackend> Engine<B> {
             }
             let gamma = self.grow_for_speculation(s, self.tick_gamma[s]);
             let pos = self.slots.pos(s);
-            let (sampling, mut draft_rng, last_token) = {
+            let (sampling, mut draft_rng, last_token, rid) = {
                 let Lane::Decoding(seq) = &self.lanes[s] else {
                     unreachable!();
                 };
-                (seq.request.sampling, seq.rng.clone(), seq.last_token)
+                (
+                    seq.request.sampling,
+                    seq.rng.clone(),
+                    seq.last_token,
+                    seq.request.id,
+                )
             };
-            let t0 = Instant::now();
+            let round_t0 = now_ns();
             // Draft phase: the backbone proposes the next γ tokens.
             let mut fed: Vec<i32> = Vec::with_capacity(gamma + 1);
             fed.push(last_token as i32);
@@ -1837,16 +2013,25 @@ impl<B: DecodeBackend> Engine<B> {
             }
             self.metrics.draft_tokens += gamma as u64;
             // Verify phase: one corrected pass over all fed tokens.
-            let logits = match &self.paged {
-                Some(p) => self.backend.verify_tokens(
-                    s, Some(&p.tables[s]), pos, &fed,
-                )?,
-                None => {
-                    self.backend.verify_tokens(s, None, pos, &fed)?
-                }
+            // The verify span is the event's duration; the whole round
+            // (draft + verify) still lands in `decode_ns` below.
+            let (logits, verify_ns) = {
+                let span =
+                    trace::Span::new(&mut self.metrics.verify_ns);
+                let logits = match &self.paged {
+                    Some(p) => self.backend.verify_tokens(
+                        s, Some(&p.tables[s]), pos, &fed,
+                    )?,
+                    None => {
+                        self.backend.verify_tokens(s, None, pos, &fed)?
+                    }
+                };
+                let ns = span.elapsed_ns();
+                (logits, ns)
             };
             self.metrics.decode_steps += 1;
-            self.metrics.decode_ns += t0.elapsed().as_nanos() as u64;
+            self.metrics.decode_ns +=
+                now_ns().saturating_sub(round_t0);
             anyhow::ensure!(
                 logits.len() >= fed.len() * vsize,
                 "verify logits size"
@@ -1855,23 +2040,21 @@ impl<B: DecodeBackend> Engine<B> {
             // corrected sample is itself emitted — the "free" token),
             // EOS, or the length limit.
             let mut emitted = 0usize;
+            let mut accepted = 0usize;
             {
                 let Lane::Decoding(seq) = &mut self.lanes[s] else {
                     unreachable!();
                 };
-                let mut accepted = 0usize;
                 for j in 0..fed.len() {
                     let row = &logits[j * vsize..(j + 1) * vsize];
                     let tok = sample(row, sampling, &mut seq.rng);
                     seq.generated.push(tok);
                     seq.last_token = tok;
                     emitted += 1;
-                    let now = Instant::now();
-                    self.metrics.itl_ms.record(
-                        now.duration_since(seq.last_token_at)
-                            .as_secs_f64()
-                            * 1e3,
-                    );
+                    let now = now_ns();
+                    self.metrics.itl_ms.record(ns_to_ms(
+                        now.saturating_sub(seq.last_token_at),
+                    ));
                     seq.last_token_at = now;
                     self.metrics.tokens_generated += 1;
                     if tok == self.eos
@@ -1910,14 +2093,23 @@ impl<B: DecodeBackend> Engine<B> {
             // so a plain `free` is refcount-correct.
             let new_pos = pos + emitted;
             self.slots.set_pos(s, new_pos)?;
+            let mut rewound = 0usize;
             if let Some(p) = &mut self.paged {
                 let bs = p.alloc.block_size();
                 let freed = p.tables[s].truncate_rows(new_pos, bs);
                 self.metrics.rewind_blocks += freed.len() as u64;
+                rewound = freed.len();
                 for id in freed {
                     p.alloc.free(id);
                 }
             }
+            self.recorder.emit(
+                self.tick_idx,
+                rid,
+                Some(s),
+                verify_ns,
+                TraceEvent::SpecRound { gamma, accepted, rewound },
+            );
             self.maybe_finish(s);
         }
         self.metrics
@@ -1958,7 +2150,15 @@ impl<B: DecodeBackend> Engine<B> {
             unreachable!("finish of a non-decoding lane");
         };
         self.release_slot(slot);
-        let total_ms = seq.submitted.elapsed().as_secs_f64() * 1e3;
+        self.recorder.emit(
+            self.tick_idx,
+            seq.request.id,
+            Some(slot),
+            0,
+            TraceEvent::Finished { reason },
+        );
+        let total_ms =
+            ns_to_ms(now_ns().saturating_sub(seq.submitted));
         self.metrics.completed += 1;
         self.metrics.ttft_ms.record(seq.ttft_ms.unwrap_or(total_ms));
         self.metrics.total_ms.record(total_ms);

@@ -6,6 +6,11 @@
 //! Endpoints:
 //!   GET  /healthz            -> 200 "ok"
 //!   GET  /metrics            -> engine counters as JSON
+//!   GET  /metrics/prom       -> the same counters in Prometheus text
+//!                               exposition format (DESIGN.md §15)
+//!   GET  /trace?last=N       -> flight-recorder events as JSON
+//!   GET  /trace/chrome       -> Chrome trace_event JSON for
+//!                               about:tracing / Perfetto
 //!   POST /generate           -> {"prompt": "...", "max_new_tokens": n,
 //!                                "top_k": k?}  ->
 //!                               {"output": "...", "tokens": n, ...}
@@ -21,9 +26,14 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::{EngineHandle, Request, Sampling};
+use super::{trace, EngineHandle, EngineMetrics, Request, Sampling};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::{self, Value};
+
+/// Content type of the Prometheus text exposition format (the version
+/// suffix is part of the format contract scrapers check).
+pub const PROM_CONTENT_TYPE: &str =
+    "text/plain; version=0.0.4; charset=utf-8";
 
 /// A parsed HTTP request (the subset we serve).
 #[derive(Debug, PartialEq)]
@@ -155,7 +165,12 @@ fn route(
     tokenizer: &Tokenizer,
     next_id: &AtomicU64,
 ) -> String {
-    match (req.method.as_str(), req.path.as_str()) {
+    // Split off the query string so `/trace?last=N` routes on `/trace`.
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.path.as_str(), ""),
+    };
+    match (req.method.as_str(), path) {
         ("GET", "/healthz") => http_response(200, "text/plain", "ok"),
         ("GET", "/metrics") => match engine.metrics() {
             Ok(m) => http_response(
@@ -239,14 +254,164 @@ fn route(
                      json::num(m.total_ms.percentile(50.0))),
                     ("total_ms_p99",
                      json::num(m.total_ms.percentile(99.0))),
+                    ("verify_ns", json::num(m.verify_ns as f64)),
+                    ("swap_ns", json::num(m.swap_ns as f64)),
+                    ("tick_ns", json::num(m.tick_ns as f64)),
+                    ("ticks", json::num(m.ticks as f64)),
+                    ("trace_events_total",
+                     json::num(m.trace_events_total as f64)),
+                    ("trace_dropped_total",
+                     json::num(m.trace_dropped_total as f64)),
                 ])
                 .to_string(),
+            ),
+            Err(e) => http_response(500, "text/plain", &format!("{e}")),
+        },
+        ("GET", "/metrics/prom") => match engine.metrics() {
+            Ok(m) => http_response(200, PROM_CONTENT_TYPE, &prom_text(&m)),
+            Err(e) => http_response(500, "text/plain", &format!("{e}")),
+        },
+        ("GET", "/trace") => match engine.trace() {
+            Ok(records) => {
+                let records = match query_last(query) {
+                    Ok(Some(n)) => {
+                        let skip = records.len().saturating_sub(n);
+                        records[skip..].to_vec()
+                    }
+                    Ok(None) => records,
+                    Err(msg) => {
+                        return http_response(400, "text/plain", msg)
+                    }
+                };
+                http_response(
+                    200,
+                    "application/json",
+                    &trace::to_json(&records).to_string(),
+                )
+            }
+            Err(e) => http_response(500, "text/plain", &format!("{e}")),
+        },
+        ("GET", "/trace/chrome") => match engine.trace() {
+            Ok(records) => http_response(
+                200,
+                "application/json",
+                &trace::to_chrome_json(&records).to_string(),
             ),
             Err(e) => http_response(500, "text/plain", &format!("{e}")),
         },
         ("POST", "/generate") => generate(req, engine, tokenizer, next_id),
         _ => http_response(404, "text/plain", "not found"),
     }
+}
+
+/// Parse the `last=N` query parameter of `GET /trace?last=N`.
+fn query_last(query: &str) -> Result<Option<usize>, &'static str> {
+    for pair in query.split('&').filter(|p| !p.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        if k == "last" {
+            return match v.parse::<usize>() {
+                Ok(n) => Ok(Some(n)),
+                Err(_) => Err("last must be a non-negative integer"),
+            };
+        }
+    }
+    Ok(None)
+}
+
+/// Escape a Prometheus label value per the text exposition format:
+/// backslash, double quote, and newline.
+fn prom_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Every `/metrics` key rendered in Prometheus text exposition format,
+/// `lqer_`-prefixed with `# TYPE` annotations.
+fn prom_text(m: &EngineMetrics) -> String {
+    use std::fmt::Write as _;
+    let counters: &[(&str, f64)] = &[
+        ("submitted", m.submitted as f64),
+        ("completed", m.completed as f64),
+        ("rejected", m.rejected as f64),
+        ("expired", m.expired as f64),
+        ("preemptions", m.preemptions as f64),
+        ("preempted_prefills", m.preempted_prefills as f64),
+        ("swap_outs", m.swap_outs as f64),
+        ("swap_ins", m.swap_ins as f64),
+        ("swap_fallbacks", m.swap_fallbacks as f64),
+        ("cow_copies", m.cow_copies as f64),
+        ("prefix_hit_blocks", m.prefix_hit_blocks as f64),
+        ("prefix_bytes_saved", m.prefix_bytes_saved as f64),
+        ("tokens_generated", m.tokens_generated as f64),
+        ("draft_tokens", m.draft_tokens as f64),
+        ("accepted_tokens", m.accepted_tokens as f64),
+        ("rewind_blocks", m.rewind_blocks as f64),
+        ("prefill_steps", m.prefill_steps as f64),
+        ("decode_steps", m.decode_steps as f64),
+        ("decode_stall_ms", m.decode_stall_ms()),
+        ("verify_ns", m.verify_ns as f64),
+        ("swap_ns", m.swap_ns as f64),
+        ("tick_ns", m.tick_ns as f64),
+        ("ticks", m.ticks as f64),
+        ("trace_events_total", m.trace_events_total as f64),
+        ("trace_dropped_total", m.trace_dropped_total as f64),
+    ];
+    let gauges: &[(&str, f64)] = &[
+        ("waiting", m.waiting as f64),
+        ("prefilling", m.prefilling as f64),
+        ("tokens_per_step", m.tokens_per_step as f64),
+        ("packed_tokens_mean", m.packed_tokens.mean()),
+        ("packed_tokens_max", m.packed_tokens.max()),
+        ("packed_prefill_tokens_mean", m.packed_prefill_tokens.mean()),
+        ("swapped_seqs", m.swapped_seqs as f64),
+        ("swap_blocks_in_use", m.swap_blocks_in_use as f64),
+        ("swap_blocks_total", m.swap_blocks_total as f64),
+        ("kv_shared_blocks", m.kv_shared_blocks as f64),
+        ("kv_shared_refs", m.kv_shared_refs as f64),
+        ("kv_block_size", m.kv_block_size as f64),
+        ("kv_blocks_in_use", m.kv_blocks_in_use as f64),
+        ("kv_blocks_total", m.kv_blocks_total as f64),
+        ("kv_utilization", m.kv_utilization),
+        ("kv_util_peak_pct", m.kv_util.max()),
+        ("acceptance_rate", m.acceptance_rate()),
+        ("prefill_ms_avg", if m.prefill_steps > 0 {
+            m.prefill_ns as f64 / m.prefill_steps as f64 / 1e6
+        } else {
+            0.0
+        }),
+        ("decode_tok_per_sec", m.decode_tokens_per_sec()),
+        ("mean_batch_occupancy", m.mean_batch_occupancy()),
+        ("ttft_ms_p50", m.ttft_ms.percentile(50.0)),
+        ("ttft_ms_p99", m.ttft_ms.percentile(99.0)),
+        ("itl_ms_p50", m.itl_ms.percentile(50.0)),
+        ("itl_ms_p99", m.itl_ms.percentile(99.0)),
+        ("total_ms_p50", m.total_ms.percentile(50.0)),
+        ("total_ms_p99", m.total_ms.percentile(99.0)),
+    ];
+    let mut out = String::new();
+    let _ = writeln!(out, "# TYPE lqer_build_info gauge");
+    let _ = writeln!(
+        out,
+        "lqer_build_info{{version=\"{}\"}} 1",
+        prom_escape(env!("CARGO_PKG_VERSION"))
+    );
+    for (name, v) in counters {
+        let _ = writeln!(out, "# TYPE lqer_{name} counter");
+        let _ = writeln!(out, "lqer_{name} {v}");
+    }
+    for (name, v) in gauges {
+        let _ = writeln!(out, "# TYPE lqer_{name} gauge");
+        let _ = writeln!(out, "lqer_{name} {v}");
+    }
+    out
 }
 
 fn generate(
@@ -372,5 +537,49 @@ mod tests {
         assert!(http_response(404, "text/plain", "").contains("Not Found"));
         assert!(http_response(400, "text/plain", "")
             .contains("Bad Request"));
+    }
+
+    #[test]
+    fn prom_response_carries_exposition_content_type() {
+        let resp = http_response(200, PROM_CONTENT_TYPE, "x 1\n");
+        assert!(resp.contains(
+            "Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n"
+        ));
+    }
+
+    #[test]
+    fn prom_escape_handles_specials() {
+        assert_eq!(prom_escape("plain"), "plain");
+        assert_eq!(prom_escape("a\\b"), "a\\\\b");
+        assert_eq!(prom_escape("a\"b"), "a\\\"b");
+        assert_eq!(prom_escape("a\nb"), "a\\nb");
+    }
+
+    #[test]
+    fn prom_text_exposes_every_metric_family() {
+        let m = EngineMetrics::default();
+        let text = prom_text(&m);
+        assert!(text.contains("# TYPE lqer_submitted counter"));
+        assert!(text.contains("lqer_submitted 0\n"));
+        assert!(text.contains("# TYPE lqer_waiting gauge"));
+        assert!(text.contains("lqer_ttft_ms_p50 0\n"));
+        assert!(text.contains("lqer_trace_events_total 0\n"));
+        assert!(text.contains("lqer_build_info{version=\""));
+        // Every line is either a comment or `name value`.
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# TYPE lqer_")
+                    || line.starts_with("lqer_"),
+                "bad exposition line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn query_last_parses() {
+        assert_eq!(query_last(""), Ok(None));
+        assert_eq!(query_last("last=5"), Ok(Some(5)));
+        assert_eq!(query_last("foo=1&last=12"), Ok(Some(12)));
+        assert!(query_last("last=abc").is_err());
     }
 }

@@ -1,0 +1,506 @@
+//! Flight recorder (DESIGN.md §15): a bounded ring buffer of typed
+//! per-request lifecycle events, plus the single monotonic clock and
+//! the `Span` scope-timer every engine phase measurement derives from.
+//!
+//! The recorder answers *what happened to request N at tick T*: every
+//! scheduling decision the engine takes (admission, chunked prefill,
+//! decode, speculative rounds, preemption, swap, COW forks, expiry,
+//! completion) lands here as a [`TraceEvent`] stamped with the request
+//! id, the decode lane, the logical tick index, and a monotonic-ns
+//! timestamp.  Because the tick index is logical, event *sequences*
+//! double as a correctness instrument: rust/tests/trace_events.rs pins
+//! them identical flat-vs-paged and speculative-vs-sequential with the
+//! timestamps stripped.
+//!
+//! Emission surfaces (server.rs / main.rs):
+//!   * `GET /trace?last=N`   — structured JSON, oldest first;
+//!   * `GET /trace/chrome`   — Chrome `trace_event` JSON for
+//!     `about:tracing` / Perfetto, one track per lane, phase events
+//!     (`chunk_prefilled`, `decoded`, `spec_round`, swaps) rendered as
+//!     duration spans;
+//!   * `--trace-file`        — the Chrome form written at shutdown;
+//!     `lqer trace` re-reads and summarizes such a file.
+//!
+//! Overhead budget: one event is a fixed-size enum pushed onto a
+//! pre-grown `VecDeque` — no allocation, no locks, no syscalls (the
+//! timestamp is a cached-anchor `Instant` delta).  `lqer bench spec`
+//! measures the per-event cost in-run and asserts the recorder costs
+//! ≤2% of measured tick time at the default capacity.
+
+use std::collections::VecDeque;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use super::FinishReason;
+use crate::util::json::{self, Value};
+
+/// Ring capacity (events) that `trace_capacity: 0` / the
+/// `--trace-capacity` default resolve to.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// Monotonic nanoseconds since the first call in this process — the
+/// single clock source behind every engine timestamp and latency
+/// metric (no more scattered `Instant` math; DESIGN.md §15).
+pub fn now_ns() -> u64 {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    ANCHOR.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// The one ns→ms conversion rule; `EngineMetrics::report()` and every
+/// latency histogram sample derive their ms values through this.
+pub fn ns_to_ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+/// Scope timer for one engine phase: measures from construction and
+/// adds the elapsed ns to the target per-phase counter
+/// (`prefill_ns`, `decode_ns`, `verify_ns`, `swap_ns`, `tick_ns`)
+/// when dropped.  [`Span::elapsed_ns`] reads the running value so the
+/// duration can also be attached to the trace event emitted for the
+/// same scope.
+#[must_use = "a span measures until it is dropped"]
+pub struct Span<'a> {
+    target: &'a mut u64,
+    t0: u64,
+}
+
+impl<'a> Span<'a> {
+    pub fn new(target: &'a mut u64) -> Span<'a> {
+        Span { target, t0: now_ns() }
+    }
+
+    /// Nanoseconds elapsed since the span started.
+    pub fn elapsed_ns(&self) -> u64 {
+        now_ns().saturating_sub(self.t0)
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        *self.target += now_ns().saturating_sub(self.t0);
+    }
+}
+
+/// One engine lifecycle event (DESIGN.md §15 lists the taxonomy —
+/// staticcheck SC304/SC305 pin this enum, that table, and the
+/// `GET /trace` serializer to each other).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// Lane + all KV blocks committed; the prompt streams in from the
+    /// next tick.  `blocks` fresh allocations, `shared` prefix-index
+    /// hits mapped read-only.
+    Admitted { blocks: usize, shared: usize },
+    /// One prefill chunk executed: `rows` new prompt rows written,
+    /// `budget_left` tick tokens remaining afterwards.
+    ChunkPrefilled { rows: usize, budget_left: usize },
+    /// One token sampled by the sequential decode path.
+    Decoded,
+    /// One speculative draft/verify/accept round (DESIGN.md §13).
+    SpecRound { gamma: usize, accepted: usize, rewound: usize },
+    /// Chosen as the eviction victim (followed by `SwappedOut` or
+    /// `Evicted` depending on how the eviction was resolved).
+    Preempted,
+    /// Blocks exported to the host swap pool, state parked.
+    SwappedOut,
+    /// Parked sequence resumed: blocks re-imported, decode continues.
+    SwappedIn,
+    /// Copy-on-write fork: a private copy of a shared block.
+    CowFork,
+    /// Requeued for deterministic re-prefill (blocks discarded).
+    Evicted,
+    /// Dropped from the admission queue past its deadline.
+    Expired,
+    /// Terminal outcome answered to the client.
+    Finished { reason: FinishReason },
+}
+
+/// Stable lower-case spelling of a [`FinishReason`] for serializers.
+pub fn reason_str(reason: FinishReason) -> &'static str {
+    match reason {
+        FinishReason::Eos => "eos",
+        FinishReason::Length => "length",
+        FinishReason::CacheFull => "cache_full",
+        FinishReason::Rejected => "rejected",
+        FinishReason::Expired => "expired",
+    }
+}
+
+impl TraceEvent {
+    /// snake_case event kind — the `"event"` key of `GET /trace` and
+    /// the Chrome-trace `name`.  Every variant must have an arm here
+    /// (staticcheck SC305).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Admitted { .. } => "admitted",
+            TraceEvent::ChunkPrefilled { .. } => "chunk_prefilled",
+            TraceEvent::Decoded => "decoded",
+            TraceEvent::SpecRound { .. } => "spec_round",
+            TraceEvent::Preempted => "preempted",
+            TraceEvent::SwappedOut => "swapped_out",
+            TraceEvent::SwappedIn => "swapped_in",
+            TraceEvent::CowFork => "cow_fork",
+            TraceEvent::Evicted => "evicted",
+            TraceEvent::Expired => "expired",
+            TraceEvent::Finished { .. } => "finished",
+        }
+    }
+
+    /// Variant payload as JSON fields (empty for unit variants).
+    pub fn payload(&self) -> Vec<(&'static str, Value)> {
+        match self {
+            TraceEvent::Admitted { blocks, shared } => vec![
+                ("blocks", json::num(*blocks as f64)),
+                ("shared", json::num(*shared as f64)),
+            ],
+            TraceEvent::ChunkPrefilled { rows, budget_left } => vec![
+                ("rows", json::num(*rows as f64)),
+                ("budget_left", json::num(*budget_left as f64)),
+            ],
+            TraceEvent::SpecRound { gamma, accepted, rewound } => vec![
+                ("gamma", json::num(*gamma as f64)),
+                ("accepted", json::num(*accepted as f64)),
+                ("rewound", json::num(*rewound as f64)),
+            ],
+            TraceEvent::Finished { reason } => {
+                vec![("reason", json::s(reason_str(*reason)))]
+            }
+            TraceEvent::Decoded
+            | TraceEvent::Preempted
+            | TraceEvent::SwappedOut
+            | TraceEvent::SwappedIn
+            | TraceEvent::CowFork
+            | TraceEvent::Evicted
+            | TraceEvent::Expired => Vec::new(),
+        }
+    }
+}
+
+/// One recorded event with its scheduling coordinates.
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    pub request: u64,
+    /// Decode lane; `None` for queue-side events (expiry, rejection)
+    /// that never held a lane.
+    pub lane: Option<usize>,
+    /// Logical tick index — deterministic, so golden tests compare
+    /// event sequences across engine configurations.
+    pub tick: u64,
+    /// Monotonic timestamp ([`now_ns`]) at emission.
+    pub t_ns: u64,
+    /// Span duration for phase events (chunk execution, decode step,
+    /// verify pass, block export/import); 0 for instant events.
+    pub dur_ns: u64,
+    pub event: TraceEvent,
+}
+
+impl TraceRecord {
+    /// The `GET /trace` serialization of one record.
+    pub fn to_json(&self) -> Value {
+        let mut fields: Vec<(&str, Value)> = vec![
+            ("event", json::s(self.event.kind())),
+            ("request", json::num(self.request as f64)),
+            (
+                "lane",
+                match self.lane {
+                    Some(l) => json::num(l as f64),
+                    None => Value::Null,
+                },
+            ),
+            ("tick", json::num(self.tick as f64)),
+            ("t_ns", json::num(self.t_ns as f64)),
+            ("dur_ns", json::num(self.dur_ns as f64)),
+        ];
+        fields.extend(self.event.payload());
+        json::obj(fields)
+    }
+}
+
+/// Bounded ring buffer of [`TraceRecord`]s: capacity-bound, oldest
+/// evicted first, nothing lost below capacity (property-tested in
+/// rust/tests/trace_events.rs).
+#[derive(Debug)]
+pub struct Recorder {
+    buf: VecDeque<TraceRecord>,
+    capacity: usize,
+    total: u64,
+    dropped: u64,
+}
+
+impl Recorder {
+    /// `capacity == 0` resolves to [`DEFAULT_CAPACITY`].
+    pub fn new(capacity: usize) -> Recorder {
+        let capacity =
+            if capacity == 0 { DEFAULT_CAPACITY } else { capacity };
+        Recorder {
+            // Pre-grow (bounded) so steady-state emission never
+            // reallocates on the engine thread.
+            buf: VecDeque::with_capacity(capacity.min(65_536)),
+            capacity,
+            total: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Record an event now, evicting the oldest entry when full.
+    pub fn emit(
+        &mut self,
+        tick: u64,
+        request: u64,
+        lane: Option<usize>,
+        dur_ns: u64,
+        event: TraceEvent,
+    ) {
+        self.push(TraceRecord {
+            request,
+            lane,
+            tick,
+            t_ns: now_ns(),
+            dur_ns,
+            event,
+        });
+    }
+
+    pub fn push(&mut self, rec: TraceRecord) {
+        if self.buf.len() == self.capacity {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(rec);
+        self.total += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Events ever recorded (the `/metrics` `trace_events_total` key).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Events evicted by wraparound (`trace_dropped_total`).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Buffer contents, oldest first.
+    pub fn snapshot(&self) -> Vec<TraceRecord> {
+        self.buf.iter().cloned().collect()
+    }
+
+    /// The newest `n` records, still oldest-first.
+    pub fn last(&self, n: usize) -> Vec<TraceRecord> {
+        let skip = self.buf.len().saturating_sub(n);
+        self.buf.iter().skip(skip).cloned().collect()
+    }
+}
+
+/// `GET /trace?last=N`: the records as a JSON array, oldest first.
+pub fn to_json(records: &[TraceRecord]) -> Value {
+    json::arr(records.iter().map(|r| r.to_json()))
+}
+
+/// `GET /trace/chrome` / `--trace-file`: Chrome `trace_event` JSON
+/// (object form) loadable in `about:tracing` and Perfetto.  One track
+/// per decode lane (`tid = lane + 1`; queue-side events on `tid 0`),
+/// phase events with a recorded duration as `ph:"X"` complete spans,
+/// instant lifecycle events as `ph:"i"`.
+pub fn to_chrome_json(records: &[TraceRecord]) -> Value {
+    let mut events: Vec<Value> = Vec::with_capacity(records.len() + 8);
+    let mut tids: Vec<usize> = Vec::new();
+    for r in records {
+        let tid = r.lane.map(|l| l + 1).unwrap_or(0);
+        if !tids.contains(&tid) {
+            tids.push(tid);
+        }
+        let mut args = vec![
+            ("request", json::num(r.request as f64)),
+            ("tick", json::num(r.tick as f64)),
+        ];
+        args.extend(r.event.payload());
+        let mut fields = vec![
+            ("name", json::s(r.event.kind())),
+            ("cat", json::s("engine")),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(tid as f64)),
+        ];
+        if r.dur_ns > 0 {
+            // Complete event: ts is the span start, in microseconds.
+            fields.push(("ph", json::s("X")));
+            fields.push((
+                "ts",
+                json::num(r.t_ns.saturating_sub(r.dur_ns) as f64 / 1e3),
+            ));
+            fields.push(("dur", json::num(r.dur_ns as f64 / 1e3)));
+        } else {
+            fields.push(("ph", json::s("i")));
+            fields.push(("ts", json::num(r.t_ns as f64 / 1e3)));
+            fields.push(("s", json::s("t")));
+        }
+        fields.push(("args", json::obj(args)));
+        events.push(json::obj(fields));
+    }
+    // Label the tracks so Perfetto shows "lane N" / "queue" instead of
+    // bare thread ids.
+    tids.sort_unstable();
+    for tid in tids {
+        let label = if tid == 0 {
+            "queue".to_string()
+        } else {
+            format!("lane {}", tid - 1)
+        };
+        events.push(json::obj(vec![
+            ("name", json::s("thread_name")),
+            ("ph", json::s("M")),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(tid as f64)),
+            ("args", json::obj(vec![("name", json::s(&label))])),
+        ]));
+    }
+    json::obj(vec![("traceEvents", json::arr(events))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: u64) -> TraceRecord {
+        TraceRecord {
+            request: i,
+            lane: Some(0),
+            tick: i,
+            t_ns: now_ns(),
+            dur_ns: 0,
+            event: TraceEvent::Decoded,
+        }
+    }
+
+    #[test]
+    fn now_ns_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn span_accumulates_into_target() {
+        let mut counter = 0u64;
+        {
+            let span = Span::new(&mut counter);
+            assert!(span.elapsed_ns() <= now_ns());
+        }
+        // The drop added *something* (possibly 0 on a coarse clock,
+        // but the counter must not have been corrupted).
+        let first = counter;
+        {
+            let _span = Span::new(&mut counter);
+            std::hint::black_box(());
+        }
+        assert!(counter >= first);
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_counts_drops() {
+        let mut r = Recorder::new(3);
+        for i in 0..5u64 {
+            r.push(rec(i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.total(), 5);
+        assert_eq!(r.dropped(), 2);
+        let ids: Vec<u64> =
+            r.snapshot().iter().map(|x| x.request).collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest evicted first");
+        let last: Vec<u64> =
+            r.last(2).iter().map(|x| x.request).collect();
+        assert_eq!(last, vec![3, 4]);
+    }
+
+    #[test]
+    fn zero_capacity_resolves_to_default() {
+        let r = Recorder::new(0);
+        assert_eq!(r.capacity(), DEFAULT_CAPACITY);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn every_event_kind_serializes_with_payload() {
+        let events = vec![
+            TraceEvent::Admitted { blocks: 2, shared: 1 },
+            TraceEvent::ChunkPrefilled { rows: 8, budget_left: 3 },
+            TraceEvent::Decoded,
+            TraceEvent::SpecRound { gamma: 4, accepted: 3, rewound: 1 },
+            TraceEvent::Preempted,
+            TraceEvent::SwappedOut,
+            TraceEvent::SwappedIn,
+            TraceEvent::CowFork,
+            TraceEvent::Evicted,
+            TraceEvent::Expired,
+            TraceEvent::Finished { reason: FinishReason::Eos },
+        ];
+        for e in events {
+            let kind = e.kind().to_string();
+            let r = TraceRecord {
+                request: 7,
+                lane: None,
+                tick: 3,
+                t_ns: 1_000,
+                dur_ns: 0,
+                event: e,
+            };
+            let text = r.to_json().to_string();
+            assert!(
+                text.contains(&format!("\"event\": \"{kind}\"")),
+                "{text}"
+            );
+            assert!(text.contains("\"lane\": null"), "{text}");
+        }
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let records = vec![
+            TraceRecord {
+                request: 1,
+                lane: Some(2),
+                tick: 1,
+                t_ns: 5_000,
+                dur_ns: 2_000,
+                event: TraceEvent::ChunkPrefilled {
+                    rows: 8,
+                    budget_left: 0,
+                },
+            },
+            TraceRecord {
+                request: 1,
+                lane: None,
+                tick: 2,
+                t_ns: 9_000,
+                dur_ns: 0,
+                event: TraceEvent::Expired,
+            },
+        ];
+        let v = to_chrome_json(&records);
+        let text = v.to_string();
+        assert!(text.starts_with("{\"traceEvents\": ["), "{text}");
+        // Span event: ph X at ts = (5000-2000)/1e3 us with dur 2 us,
+        // on the lane-2 track (tid 3).
+        assert!(text.contains("\"ph\": \"X\""), "{text}");
+        assert!(text.contains("\"dur\": 2"), "{text}");
+        assert!(text.contains("\"tid\": 3"), "{text}");
+        // Instant event on the queue track.
+        assert!(text.contains("\"ph\": \"i\""), "{text}");
+        assert!(text.contains("\"tid\": 0"), "{text}");
+        // Track labels.
+        assert!(text.contains("\"lane 2\""), "{text}");
+        assert!(text.contains("\"queue\""), "{text}");
+    }
+}

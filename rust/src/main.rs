@@ -7,6 +7,7 @@
 //! lqer serve     --addr host:port     HTTP serving frontend
 //! lqer generate  --prompt "..."       serve one request end-to-end
 //! lqer serve-bench                    batched serving load test
+//! lqer trace     --file TRACE.json    summarize a recorded engine trace
 //! lqer bench kv                       paged-KV engine bench (no PJRT)
 //! lqer bench kvshared                 prefix-sharing / swap bench (no PJRT)
 //! lqer bench chunked                  chunked-prefill ITL bench (no PJRT)
@@ -53,6 +54,7 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => serve(rest),
         "generate" => generate(rest),
         "serve-bench" => serve_bench(rest),
+        "trace" => trace_cmd(rest),
         "bench" => bench(rest),
         "eval-ppl" => eval_ppl(rest),
         "eval-tasks" => eval_tasks(rest),
@@ -64,8 +66,9 @@ fn run(argv: &[String]) -> Result<()> {
         _ => {
             println!(
                 "lqer — LQER (ICML 2024) reproduction CLI\n\n\
-                 subcommands: info serve generate serve-bench bench \
-                 eval-ppl eval-tasks judge spectra rank-sweep area plan\n\
+                 subcommands: info serve generate serve-bench trace \
+                 bench eval-ppl eval-tasks judge spectra rank-sweep \
+                 area plan\n\
                  run `lqer <cmd> --help` for options"
             );
             Ok(())
@@ -164,7 +167,7 @@ fn spec_arg(a: &Args) -> Result<Option<usize>> {
 fn engine_cfg(m: &Manifest, model: &str, method: &str, batch: usize,
               tokens_per_step: usize, host_cache: bool, paged: bool,
               prefix_share: bool, swap_blocks: usize,
-              spec_gamma: Option<usize>)
+              spec_gamma: Option<usize>, trace_capacity: usize)
               -> Result<EngineConfig> {
     anyhow::ensure!(
         paged || (!prefix_share && swap_blocks == 0),
@@ -239,6 +242,7 @@ fn engine_cfg(m: &Manifest, model: &str, method: &str, batch: usize,
         paged: paged_cfg,
         spec,
         admission: AdmissionPolicy::default(),
+        trace_capacity,
     })
 }
 
@@ -271,6 +275,12 @@ fn serve(argv: &[String]) -> Result<()> {
         .opt("gamma", "0",
              "max draft tokens per lane per speculation round \
               (0 = manifest serve.spec gamma; needs --speculate)")
+        .opt("trace-file", "",
+             "flight-recorder Chrome trace output path (serve runs \
+              until killed — fetch GET /trace/chrome instead)")
+        .opt("trace-capacity", "0",
+             "flight-recorder ring capacity in events (DESIGN.md \
+              \u{a7}15; 0 = default 4096)")
         .parse(argv)?;
     let tok = lqer::tokenizer::Tokenizer::from_file(
         &m.data_dir().join("vocab.json"))?;
@@ -281,10 +291,18 @@ fn serve(argv: &[String]) -> Result<()> {
                    tokens_per_step_arg(&a, &m, batch)?,
                    a.get_flag("host-cache"),
                    a.get_flag("paged"), a.get_flag("prefix-share"),
-                   a.get_usize("swap-blocks")?, spec_arg(&a)?)?,
+                   a.get_usize("swap-blocks")?, spec_arg(&a)?,
+                   a.get_usize("trace-capacity")?)?,
     )?;
+    if !a.get("trace-file").is_empty() {
+        eprintln!(
+            "note: serve runs until killed, so --trace-file is never \
+             written; fetch the live ring via GET /trace/chrome"
+        );
+    }
     println!("serving {} / {} on http://{}  (POST /generate, \
-              GET /metrics, GET /healthz)",
+              GET /metrics, GET /metrics/prom, GET /trace, \
+              GET /healthz)",
              a.get("model"), a.get("method"), a.get("addr"));
     lqer::coordinator::server::serve(&a.get("addr"), engine, tok)
 }
@@ -321,6 +339,12 @@ fn generate(argv: &[String]) -> Result<()> {
              "max draft tokens per lane per speculation round \
               (0 = manifest serve.spec gamma; needs --speculate)")
         .opt("priority", "normal", "eviction class: low|normal|high")
+        .opt("trace-file", "",
+             "write the flight-recorder Chrome trace here on exit \
+              (DESIGN.md \u{a7}15; empty = off)")
+        .opt("trace-capacity", "0",
+             "flight-recorder ring capacity in events (DESIGN.md \
+              \u{a7}15; 0 = default 4096)")
         .parse(argv)?;
     let tok = lqer::tokenizer::Tokenizer::from_file(
         &m.data_dir().join("vocab.json"))?;
@@ -331,7 +355,8 @@ fn generate(argv: &[String]) -> Result<()> {
                    tokens_per_step_arg(&a, &m, batch)?,
                    a.get_flag("host-cache"),
                    a.get_flag("paged"), a.get_flag("prefix-share"),
-                   a.get_usize("swap-blocks")?, spec_arg(&a)?)?,
+                   a.get_usize("swap-blocks")?, spec_arg(&a)?,
+                   a.get_usize("trace-capacity")?)?,
     )?;
     let sampling = match a.get_usize("topk")? {
         0 => Sampling::Greedy,
@@ -353,6 +378,16 @@ fn generate(argv: &[String]) -> Result<()> {
         "finish={:?} ttft={:.0}ms total={:.0}ms tokens={}",
         resp.finish, resp.ttft_ms, resp.total_ms, resp.tokens.len()
     );
+    let trace_file = a.get("trace-file");
+    if !trace_file.is_empty() {
+        let records = engine.trace()?;
+        std::fs::write(
+            &trace_file,
+            lqer::coordinator::trace::to_chrome_json(&records)
+                .to_string(),
+        )?;
+        println!("wrote {trace_file} ({} events)", records.len());
+    }
     engine.shutdown();
     Ok(())
 }
@@ -387,19 +422,135 @@ fn serve_bench(argv: &[String]) -> Result<()> {
         .opt("gamma", "0",
              "max draft tokens per lane per speculation round \
               (0 = manifest serve.spec gamma; needs --speculate)")
+        .opt("trace-file", "",
+             "write the flight-recorder Chrome trace here on exit \
+              (DESIGN.md \u{a7}15; empty = off)")
+        .opt("trace-capacity", "0",
+             "flight-recorder ring capacity in events (DESIGN.md \
+              \u{a7}15; 0 = default 4096)")
         .parse(argv)?;
     let batch = a.get_usize("batch")?;
-    let stats = lqer::coordinator::loadtest::run_loadtest(
-        &m,
-        &engine_cfg(&m, &a.get("model"), &a.get("method"), batch,
-                    tokens_per_step_arg(&a, &m, batch)?,
-                    a.get_flag("host-cache"),
-                    a.get_flag("paged"), a.get_flag("prefix-share"),
-                    a.get_usize("swap-blocks")?, spec_arg(&a)?)?,
-        a.get_usize("requests")?,
-        a.get_usize("max-new")?,
-    )?;
+    let (stats, records) =
+        lqer::coordinator::loadtest::run_loadtest_traced(
+            &m,
+            &engine_cfg(&m, &a.get("model"), &a.get("method"), batch,
+                        tokens_per_step_arg(&a, &m, batch)?,
+                        a.get_flag("host-cache"),
+                        a.get_flag("paged"), a.get_flag("prefix-share"),
+                        a.get_usize("swap-blocks")?, spec_arg(&a)?,
+                        a.get_usize("trace-capacity")?)?,
+            a.get_usize("requests")?,
+            a.get_usize("max-new")?,
+        )?;
     println!("{}", stats.report());
+    let trace_file = a.get("trace-file");
+    if !trace_file.is_empty() {
+        std::fs::write(
+            &trace_file,
+            lqer::coordinator::trace::to_chrome_json(&records)
+                .to_string(),
+        )?;
+        println!("wrote {trace_file} ({} events)", records.len());
+    }
+    Ok(())
+}
+
+/// `lqer trace` — dump / summarize a recorded flight-recorder file
+/// (the Chrome `trace_event` JSON written by `--trace-file`,
+/// DESIGN.md §15): per-event counts and accumulated span time, the
+/// track labels, and optionally the newest N raw events.
+fn trace_cmd(argv: &[String]) -> Result<()> {
+    use lqer::util::json;
+
+    let a = Args::new("trace", "dump / summarize a recorded trace file")
+        .opt("file", "TRACE_serve.json", "Chrome trace JSON path")
+        .opt("last", "0", "also print the newest N raw events")
+        .parse(argv)?;
+    let path = a.get("file");
+    let v = json::parse_file(std::path::Path::new(&path))?;
+    let events = v.req("traceEvents")?.as_array().unwrap_or(&[]);
+
+    let mut tracks: Vec<(usize, String)> = Vec::new();
+    // kind -> (count, accumulated span microseconds)
+    let mut by_kind: Vec<(String, u64, f64)> = Vec::new();
+    let mut n_events = 0usize;
+    let mut spans = 0usize;
+    let mut t_min = f64::INFINITY;
+    let mut t_max = f64::NEG_INFINITY;
+    for e in events {
+        let ph = e.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        let name = e
+            .get("name")
+            .and_then(|n| n.as_str())
+            .unwrap_or("?")
+            .to_string();
+        if ph == "M" {
+            if name == "thread_name" {
+                let tid = e
+                    .get("tid")
+                    .and_then(|t| t.as_usize())
+                    .unwrap_or(0);
+                let label = e
+                    .get("args")
+                    .and_then(|x| x.get("name"))
+                    .and_then(|n| n.as_str())
+                    .unwrap_or("?")
+                    .to_string();
+                tracks.push((tid, label));
+            }
+            continue;
+        }
+        n_events += 1;
+        let ts = e.get("ts").and_then(|t| t.as_f64()).unwrap_or(0.0);
+        let dur = e.get("dur").and_then(|d| d.as_f64()).unwrap_or(0.0);
+        if dur > 0.0 {
+            spans += 1;
+        }
+        t_min = t_min.min(ts);
+        t_max = t_max.max(ts + dur);
+        match by_kind.iter_mut().find(|(k, _, _)| *k == name) {
+            Some(row) => {
+                row.1 += 1;
+                row.2 += dur;
+            }
+            None => by_kind.push((name, 1, dur)),
+        }
+    }
+
+    let mut t = Table::new(
+        &format!("trace summary — {path}"),
+        &["event", "count", "span ms"],
+    );
+    for (kind, count, dur_us) in &by_kind {
+        t.row(vec![
+            kind.clone(),
+            count.to_string(),
+            format!("{:.2}", dur_us / 1e3),
+        ]);
+    }
+    print!("{}", t.render());
+    tracks.sort_unstable();
+    let labels: Vec<&str> =
+        tracks.iter().map(|(_, l)| l.as_str()).collect();
+    println!(
+        "{n_events} events ({spans} spans) on {} tracks [{}] over \
+         {:.2} ms",
+        tracks.len(),
+        labels.join(", "),
+        if t_max > t_min { (t_max - t_min) / 1e3 } else { 0.0 },
+    );
+    let last = a.get_usize("last")?;
+    if last > 0 {
+        let raw: Vec<&json::Value> = events
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(|p| p.as_str()) != Some("M")
+            })
+            .collect();
+        for e in raw.iter().skip(raw.len().saturating_sub(last)) {
+            println!("{e}");
+        }
+    }
     Ok(())
 }
 
@@ -507,6 +658,7 @@ fn bench_kv(a: &Args) -> Result<()> {
         paged: None,
         spec: None,
         admission: AdmissionPolicy::default(),
+        trace_capacity: 0,
     };
 
     // Paged engine: bounded waiting queue, preemption under pressure.
@@ -683,6 +835,7 @@ fn bench_kvshared(a: &Args) -> Result<()> {
             }),
             spec: None,
             admission,
+            trace_capacity: 0,
         }
     };
     let backend = || {
@@ -905,6 +1058,7 @@ fn bench_chunked(a: &Args) -> Result<()> {
                 queue_depth: requests.max(16),
                 deadline_ms: 0,
             },
+            trace_capacity: 0,
         };
         let mut engine = Engine::with_backend(
             FakeBackend::new_paged(
@@ -1016,7 +1170,7 @@ fn bench_chunked(a: &Args) -> Result<()> {
 /// units, vs one token per `C_full` without speculation.
 fn bench_spec(a: &Args) -> Result<()> {
     use lqer::coordinator::testbackend::{FakeBackend, FakeCacheMode};
-    use lqer::coordinator::{Engine, EngineMetrics};
+    use lqer::coordinator::{trace, Engine, EngineMetrics};
     use lqer::util::json;
     use lqer::util::rng::Rng;
 
@@ -1056,7 +1210,7 @@ fn bench_spec(a: &Args) -> Result<()> {
     // token (baseline) or one per-lane speculation round, so the
     // modeled units below map 1:1 onto metric counters.
     let drive = |spec: Option<SpecConfig>|
-        -> Result<(EngineMetrics, Vec<Vec<u32>>)> {
+        -> Result<(EngineMetrics, Vec<Vec<u32>>, Vec<trace::TraceRecord>)> {
         let cfg = EngineConfig {
             model: "fake".into(),
             method: "fake".into(),
@@ -1067,6 +1221,10 @@ fn bench_spec(a: &Args) -> Result<()> {
             paged: None,
             spec,
             admission: AdmissionPolicy::default(),
+            // Large enough that no event of this workload is evicted:
+            // the SpecRound-vs-verify_steps equality below needs the
+            // complete record.
+            trace_capacity: 1 << 20,
         };
         let mut engine = Engine::with_backend(
             FakeBackend::new(FakeCacheMode::Host, VOCAB, LAYERS, DIM,
@@ -1091,15 +1249,65 @@ fn bench_spec(a: &Args) -> Result<()> {
             let r = rx.recv().map_err(|_| anyhow::anyhow!("reply dropped"))?;
             streams.push(r.tokens);
         }
-        Ok((engine.metrics_snapshot(), streams))
+        let records = engine.trace_snapshot();
+        Ok((engine.metrics_snapshot(), streams, records))
     };
 
-    let (base_m, base_streams) = drive(None)?;
-    let (spec_m, spec_streams) = drive(Some(SpecConfig { gamma }))?;
+    let (base_m, base_streams, base_trace) = drive(None)?;
+    let (spec_m, spec_streams, spec_trace) =
+        drive(Some(SpecConfig { gamma }))?;
     anyhow::ensure!(
         spec_streams == base_streams,
         "speculative token streams diverged from the baseline \
          (the golden invariant — see rust/tests/spec_decode.rs)"
+    );
+
+    // The flight recorder doubles as a correctness instrument here:
+    // every sequential token must have a Decoded event and every
+    // verify pass exactly one SpecRound event.
+    let decoded_events = base_trace
+        .iter()
+        .filter(|r| matches!(r.event, trace::TraceEvent::Decoded))
+        .count() as u64;
+    anyhow::ensure!(
+        decoded_events == base_m.tokens_generated,
+        "recorder lost decode events: {} Decoded vs {} tokens",
+        decoded_events,
+        base_m.tokens_generated
+    );
+    let spec_rounds = spec_trace
+        .iter()
+        .filter(|r| {
+            matches!(r.event, trace::TraceEvent::SpecRound { .. })
+        })
+        .count() as u64;
+    anyhow::ensure!(
+        spec_rounds == spec_m.decode_steps,
+        "recorder lost speculation rounds: {} SpecRound events vs {} \
+         verify steps",
+        spec_rounds,
+        spec_m.decode_steps
+    );
+
+    // Recorder overhead: per-event emit cost measured on a
+    // default-capacity ring, held against the measured mean tick time
+    // (the ≤2% budget of DESIGN.md §15).
+    let mut probe = trace::Recorder::new(0);
+    let emits = 100_000u64;
+    let probe_t0 = trace::now_ns();
+    for i in 0..emits {
+        probe.emit(i, i, Some(0), 0, trace::TraceEvent::Decoded);
+    }
+    let per_event_ns = trace::now_ns().saturating_sub(probe_t0) as f64
+        / emits as f64;
+    std::hint::black_box(&probe);
+    let overhead_pct = 100.0
+        * (spec_m.trace_events_total as f64 * per_event_ns)
+        / spec_m.tick_ns.max(1) as f64;
+    anyhow::ensure!(
+        overhead_pct <= 2.0,
+        "flight-recorder overhead {overhead_pct:.3}% of tick time \
+         exceeds the 2% budget (DESIGN.md §15)"
     );
 
     // Modeled per-pass costs: avg streamed weight bits of the serving
@@ -1143,6 +1351,12 @@ fn bench_spec(a: &Args) -> Result<()> {
             ("acceptance_rate", json::num(spec_m.acceptance_rate())),
             ("rewind_blocks", json::num(spec_m.rewind_blocks as f64)),
             ("verify_steps", json::num(spec_m.decode_steps as f64)),
+            ("spec_rounds", json::num(spec_rounds as f64)),
+            // Armed deterministic invariant: one SpecRound trace
+            // event per verify step, always exactly 1.0.
+            ("spec_rounds_per_verify",
+             json::num(spec_rounds as f64
+                       / spec_m.decode_steps.max(1) as f64)),
             ("modeled_units", json::num(units_spec)),
             ("modeled_tokens_per_kunit",
              json::num(1e3 * tokens / units_spec.max(1e-9))),
@@ -1156,6 +1370,8 @@ fn bench_spec(a: &Args) -> Result<()> {
              json::num(1e3 * tokens / units_base.max(1e-9))),
         ])),
         ("spec_speedup", json::num(speedup)),
+        // Wall-clock based, so reported but never armed in the guard.
+        ("trace_overhead_pct", json::num(overhead_pct)),
     ]);
     let path = match a.get("out").as_str() {
         "" => "BENCH_spec.json".to_string(),
@@ -1196,6 +1412,11 @@ fn bench_spec(a: &Args) -> Result<()> {
         "modeled decode speedup: {speedup:.2}x at {:.0}% acceptance \
          (streams bit-identical)",
         100.0 * spec_m.acceptance_rate()
+    );
+    println!(
+        "flight recorder: {} events, {per_event_ns:.0} ns/event, \
+         {overhead_pct:.3}% of tick time (budget 2%)",
+        spec_m.trace_events_total
     );
     println!("wrote {path}");
     Ok(())

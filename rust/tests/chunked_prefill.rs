@@ -55,6 +55,7 @@ fn cfg(
         }),
         spec: None,
         admission,
+        trace_capacity: 0,
     }
 }
 

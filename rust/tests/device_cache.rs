@@ -37,6 +37,7 @@ fn cfg(batch: usize) -> EngineConfig {
         paged: None,
         spec: None,
         admission: Default::default(),
+        trace_capacity: 0,
     }
 }
 
@@ -276,6 +277,7 @@ fn real_runtime_device_host_bit_exact() {
             paged: None,
             spec: None,
             admission: Default::default(),
+            trace_capacity: 0,
         };
         let engine = lqer::coordinator::EngineHandle::spawn(
             m.dir.clone(), cfg,

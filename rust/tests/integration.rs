@@ -166,6 +166,7 @@ fn engine_serves_deterministically_and_batches() {
         paged: None,
         spec: None,
         admission: Default::default(),
+        trace_capacity: 0,
     };
     let engine = EngineHandle::spawn(m.dir.clone(), cfg).unwrap();
     let prompts =

@@ -54,6 +54,7 @@ fn cfg(
         }),
         spec: None,
         admission,
+        trace_capacity: 0,
     }
 }
 

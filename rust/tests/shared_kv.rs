@@ -57,6 +57,7 @@ fn cfg(
         }),
         spec: None,
         admission,
+        trace_capacity: 0,
     }
 }
 

@@ -52,6 +52,7 @@ fn cfg(
         }),
         spec,
         admission: AdmissionPolicy::Wait { queue_depth: 64, deadline_ms: 0 },
+        trace_capacity: 0,
     }
 }
 

@@ -1,0 +1,362 @@
+//! Flight-recorder tests (DESIGN.md §15), driven end-to-end through the
+//! real `Engine` over the deterministic `FakeBackend`:
+//!
+//! * golden equality: because trace events carry *logical* tick
+//!   indices, the timestamp-stripped event sequence of a 16-request
+//!   mixed workload is bit-identical flat-vs-paged (same scheduler
+//!   decisions, only the cache layout differs);
+//! * strategy equivalence: the per-request lifecycle — admission,
+//!   token generation, terminal reason — is identical speculative vs
+//!   sequential once the token-emitting events (`Decoded` /
+//!   `SpecRound`) are collapsed;
+//! * completeness: every generated token of a sequential run has a
+//!   `Decoded` event, every request exactly one `Admitted` and one
+//!   `Finished`;
+//! * ring wraparound (property test): the buffer is capacity-bound,
+//!   evicts oldest-first, and loses nothing below capacity.
+
+use std::sync::mpsc;
+
+use lqer::coordinator::testbackend::{FakeBackend, FakeCacheMode};
+use lqer::coordinator::trace::{Recorder, TraceEvent, TraceRecord};
+use lqer::coordinator::{
+    AdmissionPolicy, Engine, EngineConfig, EngineMetrics, PagedKvConfig,
+    Request, Response, Sampling, SpecConfig,
+};
+use lqer::util::proptest::{check, Pair, USize};
+use lqer::util::rng::Rng;
+
+const VOCAB: usize = 40;
+const LAYERS: usize = 2;
+const DIM: usize = 4;
+const T_MAX: usize = 64;
+const EOS: u32 = 2;
+/// Block size: divides both prefill buckets (8, 16) and T_MAX.
+const BS: usize = 8;
+/// Per-tick token budget, large enough that every prompt prefills in
+/// one whole chunk: `chunk_len` returns the full remainder whenever it
+/// fits the budget, so the flat (align 1) and paged (align BS) packers
+/// cut identical chunks and the golden comparison below can demand
+/// byte-equal `ChunkPrefilled` payloads.
+const BUDGET: usize = 256;
+
+fn cfg(
+    batch: usize,
+    usable_blocks: Option<usize>,
+    spec: Option<SpecConfig>,
+) -> EngineConfig {
+    EngineConfig {
+        model: "fake".into(),
+        method: "fake".into(),
+        decode_batch: batch,
+        prefill_buckets: vec![8, 16],
+        tokens_per_step: BUDGET,
+        host_cache: false, // FakeBackend's mode is chosen directly
+        paged: usable_blocks.map(|n| PagedKvConfig {
+            block_size: BS,
+            num_blocks: n + 1, // + sentinel
+            prefix_sharing: false,
+            swap_blocks: 0,
+        }),
+        spec,
+        admission: AdmissionPolicy::Wait { queue_depth: 64, deadline_ms: 0 },
+        trace_capacity: 1 << 16, // nothing of this workload is evicted
+    }
+}
+
+fn flat(batch: usize) -> FakeBackend {
+    FakeBackend::new(FakeCacheMode::Host, VOCAB, LAYERS, DIM, T_MAX, batch)
+}
+
+fn paged(batch: usize, usable: usize) -> FakeBackend {
+    FakeBackend::new_paged(
+        FakeCacheMode::Host, VOCAB, LAYERS, DIM, T_MAX, batch, usable + 1,
+        BS,
+    )
+}
+
+fn run_requests(
+    mut engine: Engine<FakeBackend>,
+    requests: &[Request],
+) -> (Vec<Response>, EngineMetrics, Vec<TraceRecord>) {
+    let mut rxs = Vec::with_capacity(requests.len());
+    for r in requests {
+        let (tx, rx) = mpsc::channel();
+        engine.enqueue(r.clone(), tx);
+        rxs.push(rx);
+    }
+    let mut guard = 0;
+    while engine.has_work() {
+        engine.tick();
+        guard += 1;
+        assert!(guard < 200_000, "engine did not drain");
+    }
+    let responses = rxs
+        .into_iter()
+        .map(|rx| rx.recv().expect("reply sender dropped"))
+        .collect();
+    (responses, engine.metrics_snapshot(), engine.trace_snapshot())
+}
+
+/// Mixed workload: both prefill buckets, greedy and seeded top-k
+/// sampling, EOS reachable, more requests than lanes.
+fn golden_requests(n: u64) -> Vec<Request> {
+    let mut rng = Rng::new(42);
+    (0..n)
+        .map(|i| {
+            let plen = 1 + rng.below(14);
+            Request {
+                id: i + 1,
+                prompt: (0..plen).map(|_| rng.below(VOCAB) as u32).collect(),
+                max_new_tokens: 1 + rng.below(16),
+                sampling: if i % 3 == 0 {
+                    Sampling::TopK { k: 5, temperature: 0.7, seed: 11 }
+                } else {
+                    Sampling::Greedy
+                },
+                priority: Default::default(),
+            }
+        })
+        .collect()
+}
+
+/// Timestamp-stripped view of one run.  The `Admitted` payload is
+/// cache-layout specific (a flat engine commits 0 blocks where the
+/// paged one allocates), so it is reduced to its kind; every other
+/// payload must match byte-for-byte, ticks and lanes included.
+fn projection(records: &[TraceRecord]) -> Vec<String> {
+    records
+        .iter()
+        .map(|r| {
+            let payload = match &r.event {
+                TraceEvent::Admitted { .. } => String::new(),
+                e => format!("{e:?}"),
+            };
+            format!(
+                "t{} r{} l{:?} {} {payload}",
+                r.tick,
+                r.request,
+                r.lane,
+                r.event.kind()
+            )
+        })
+        .collect()
+}
+
+/// Per-request lifecycle with the decode strategy abstracted away:
+/// consecutive token-emitting events (`Decoded`, `SpecRound`) collapse
+/// into one `generated` marker; everything else keeps kind + payload.
+fn lifecycle(records: &[TraceRecord], request: u64) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for r in records.iter().filter(|r| r.request == request) {
+        let step = match &r.event {
+            TraceEvent::Decoded | TraceEvent::SpecRound { .. } => {
+                "generated".to_string()
+            }
+            TraceEvent::Admitted { .. } => "admitted".to_string(),
+            e => format!("{e:?}"),
+        };
+        if step == "generated" && out.last().map(String::as_str)
+            == Some("generated")
+        {
+            continue;
+        }
+        out.push(step);
+    }
+    out
+}
+
+fn count<F: Fn(&TraceRecord) -> bool>(
+    records: &[TraceRecord],
+    pred: F,
+) -> usize {
+    records.iter().filter(|r| pred(r)).count()
+}
+
+// ---------------------------------------------------------------------------
+// Golden: flat and paged engines record identical event sequences
+// ---------------------------------------------------------------------------
+
+#[test]
+fn flat_and_paged_traces_are_identical_without_timestamps() {
+    let batch = 3;
+    let ample = batch * T_MAX / BS; // same memory as the flat cache
+    let requests = golden_requests(16);
+
+    let (flat_out, _, flat_trace) = run_requests(
+        Engine::with_backend(flat(batch), cfg(batch, None, None), EOS),
+        &requests,
+    );
+    let (paged_out, _, paged_trace) = run_requests(
+        Engine::with_backend(
+            paged(batch, ample),
+            cfg(batch, Some(ample), None),
+            EOS,
+        ),
+        &requests,
+    );
+
+    for (x, y) in flat_out.iter().zip(&paged_out) {
+        assert_eq!(x.tokens, y.tokens, "request {} output diverged", x.id);
+    }
+    let fp = projection(&flat_trace);
+    let pp = projection(&paged_trace);
+    assert!(fp.len() > 100, "trace too small to be meaningful");
+    assert_eq!(fp, pp, "flat vs paged event sequences diverged");
+
+    // Monotonic coordinates: the ring is emitted in tick/time order.
+    for w in flat_trace.windows(2) {
+        assert!(w[1].tick >= w[0].tick, "tick order violated");
+        assert!(w[1].t_ns >= w[0].t_ns, "timestamp order violated");
+    }
+
+    // Completeness: one Admitted + one Finished per request, one
+    // Decoded per generated token, prefilled rows cover every prompt.
+    let tokens: usize = flat_out.iter().map(|r| r.tokens.len()).sum();
+    assert_eq!(
+        count(&flat_trace, |r| matches!(r.event, TraceEvent::Decoded)),
+        tokens
+    );
+    let prompt_rows: usize = requests.iter().map(|r| r.prompt.len()).sum();
+    let traced_rows: usize = flat_trace
+        .iter()
+        .map(|r| match r.event {
+            TraceEvent::ChunkPrefilled { rows, .. } => rows,
+            _ => 0,
+        })
+        .sum();
+    assert_eq!(traced_rows, prompt_rows);
+    for req in &requests {
+        let id = req.id;
+        assert_eq!(
+            count(&flat_trace, |r| r.request == id
+                && matches!(r.event, TraceEvent::Admitted { .. })),
+            1,
+            "request {id} admissions"
+        );
+        assert_eq!(
+            count(&flat_trace, |r| r.request == id
+                && matches!(r.event, TraceEvent::Finished { .. })),
+            1,
+            "request {id} completions"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden: speculative and sequential lifecycles are identical
+// ---------------------------------------------------------------------------
+
+#[test]
+fn speculative_and_sequential_lifecycles_are_identical() {
+    let batch = 3;
+    let requests = golden_requests(16);
+
+    let (seq_out, _, seq_trace) = run_requests(
+        Engine::with_backend(flat(batch), cfg(batch, None, None), EOS),
+        &requests,
+    );
+    let (spec_out, spec_m, spec_trace) = run_requests(
+        Engine::with_backend(
+            flat(batch),
+            cfg(batch, None, Some(SpecConfig { gamma: 4 })),
+            EOS,
+        ),
+        &requests,
+    );
+
+    for (x, y) in seq_out.iter().zip(&spec_out) {
+        assert_eq!(x.tokens, y.tokens, "request {} output diverged", x.id);
+        assert_eq!(x.finish, y.finish, "request {} finish", x.id);
+    }
+    // The strategies record through different event kinds...
+    assert!(
+        count(&spec_trace, |r| matches!(
+            r.event,
+            TraceEvent::SpecRound { .. }
+        )) > 0,
+        "speculative run recorded no SpecRound"
+    );
+    assert_eq!(
+        count(&spec_trace, |r| matches!(r.event, TraceEvent::Decoded)),
+        0,
+        "speculative decode must not emit sequential Decoded events"
+    );
+    assert_eq!(
+        count(&seq_trace, |r| matches!(
+            r.event,
+            TraceEvent::SpecRound { .. }
+        )),
+        0
+    );
+    // ...and exactly one SpecRound per verify pass (the invariant
+    // `lqer bench spec` and bench_guard.py arm).
+    assert_eq!(
+        count(&spec_trace, |r| matches!(
+            r.event,
+            TraceEvent::SpecRound { .. }
+        )) as u64,
+        spec_m.decode_steps,
+        "SpecRound events vs verify steps"
+    );
+    // ...but the per-request lifecycle is the same once token emission
+    // is collapsed: admitted -> generated -> finished:<same reason>.
+    for req in &requests {
+        let a = lifecycle(&seq_trace, req.id);
+        let b = lifecycle(&spec_trace, req.id);
+        assert_eq!(a, b, "request {} lifecycle diverged", req.id);
+        assert_eq!(a.first().map(String::as_str), Some("admitted"));
+        assert!(
+            a.last().expect("empty lifecycle").starts_with("Finished"),
+            "request {} did not finish: {a:?}",
+            req.id
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ring wraparound (property test)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ring_wraparound_is_bounded_ordered_and_lossless_below_capacity() {
+    check(
+        "trace_ring_wraparound",
+        300,
+        &Pair(USize { lo: 1, hi: 48 }, USize { lo: 0, hi: 160 }),
+        |&(capacity, n)| {
+            let mut rec = Recorder::new(capacity);
+            for i in 0..n as u64 {
+                rec.emit(i, i, None, 0, TraceEvent::Decoded);
+            }
+            let snap = rec.snapshot();
+            if snap.len() != n.min(capacity) {
+                return Err(format!(
+                    "len {} != min(n={n}, capacity={capacity})",
+                    snap.len()
+                ));
+            }
+            if rec.total() != n as u64 {
+                return Err(format!("total {} != {n}", rec.total()));
+            }
+            if rec.dropped() != (n - snap.len()) as u64 {
+                return Err(format!(
+                    "dropped {} != {}",
+                    rec.dropped(),
+                    n - snap.len()
+                ));
+            }
+            // Oldest evicted first: the survivors are exactly the
+            // newest `len` events, still in emission order.
+            let ids: Vec<u64> =
+                snap.iter().map(|r| r.request).collect();
+            let want: Vec<u64> =
+                (n.saturating_sub(snap.len()) as u64..n as u64)
+                    .collect();
+            if ids != want {
+                return Err(format!("ids {ids:?} != {want:?}"));
+            }
+            Ok(())
+        },
+    );
+}

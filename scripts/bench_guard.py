@@ -55,6 +55,10 @@ HIGHER_IS_BETTER = {
     "acceptance_rate",
     "modeled_tokens_per_kunit",
     "spec_speedup",
+    # flight-recorder parity (DESIGN.md §15): SpecRound trace events /
+    # verify steps — exactly 1.0 when the recorder loses nothing (the
+    # bench also hard-fails in-run on inequality).
+    "spec_rounds_per_verify",
 }
 LOWER_IS_BETTER = {
     "rejected",

@@ -1,13 +1,19 @@
 """P3 metrics-parity: EngineMetrics fields <-> report() / GET /metrics,
-and bench_guard baseline keys <-> `lqer bench` emitters.
+bench_guard baseline keys <-> `lqer bench` emitters, and TraceEvent
+variants <-> their documented/serialized surfaces.
 
 A counter added to ``EngineMetrics`` but not surfaced is invisible in
 production; a bench_guard baseline key the bench subcommand stops
-emitting silently un-arms the CI regression gate.  Three checks:
+emitting silently un-arms the CI regression gate; a ``TraceEvent``
+variant absent from the DESIGN.md §15 taxonomy or swallowed by a
+catch-all serializer arm is untraceable drift.  Five checks:
 
   SC301  EngineMetrics field absent from ``report()``
   SC302  EngineMetrics field absent from the ``GET /metrics`` handler
   SC303  armed bench_guard baseline key absent from its bench emitter
+  SC304  TraceEvent variant absent from the DESIGN.md §15 event table
+  SC305  TraceEvent variant absent from ``TraceEvent::kind()`` (the
+         ``GET /trace`` serializer)
 
 Coverage contract (documented, deterministic):
 
@@ -41,12 +47,16 @@ CODES = {
     "SC301": "EngineMetrics field not covered by report()",
     "SC302": "EngineMetrics field not covered by GET /metrics",
     "SC303": "armed bench baseline key missing from its bench emitter",
+    "SC304": "TraceEvent variant missing from the DESIGN.md §15 table",
+    "SC305": "TraceEvent variant missing from the GET /trace serializer",
 }
 
 RS_METRICS = os.path.join("rust", "src", "coordinator", "metrics.rs")
 RS_SERVER = os.path.join("rust", "src", "coordinator", "server.rs")
+RS_TRACE = os.path.join("rust", "src", "coordinator", "trace.rs")
 RS_MAIN = os.path.join("rust", "src", "main.rs")
 BENCH_GUARD = os.path.join("scripts", "bench_guard.py")
+DESIGN = "DESIGN.md"
 
 SUFFIXES = "_p50|_p99|_mean|_max|_avg|_peak|_pct|_peak_pct"
 ALIASES = {
@@ -114,6 +124,43 @@ def metrics_route_body(path: str):
     return None
 
 
+def trace_event_variants(path: str):
+    """Variant names of ``enum TraceEvent`` in trace.rs; None if the
+    enum (or the file) is absent."""
+    text = read_text(path)
+    if text is None:
+        return None
+    text = rustlex.cut_test_mod(rustlex.strip_comments(text))
+    body = rustlex.block(text, r"enum TraceEvent\b")
+    if body is None:
+        return None
+    return re.findall(
+        r"^\s*([A-Z][A-Za-z0-9]*)\s*(?:\{|,|\()", body, re.M)
+
+
+def trace_kind_body(path: str):
+    """Body of ``TraceEvent::kind()`` — the one place every variant
+    maps to its ``GET /trace`` / Chrome-trace event name."""
+    text = read_text(path)
+    if text is None:
+        return None
+    text = rustlex.cut_test_mod(rustlex.strip_comments(text))
+    return rustlex.fn_body(text, "kind")
+
+
+def design_section(path: str, header: str):
+    """Body of one ``## §N`` DESIGN.md section (to the next ``## `` or
+    EOF); None if the file or the header is absent."""
+    text = read_text(path)
+    if text is None:
+        return None
+    m = re.search(rf"^## {re.escape(header)}\b.*$", text, re.M)
+    if not m:
+        return None
+    nxt = text.find("\n## ", m.end())
+    return text[m.end():nxt if nxt >= 0 else len(text)]
+
+
 def covered(name: str, surface: str) -> bool:
     for cand in [name] + ALIASES.get(name, []):
         if re.search(rf"\b{re.escape(cand)}(?:{SUFFIXES})?\b", surface):
@@ -173,6 +220,30 @@ def run(root: str):
                     "SC302", name,
                     f"EngineMetrics.{name} is never exported on "
                     f"GET /metrics", RS_SERVER))
+
+    variants = trace_event_variants(os.path.join(root, RS_TRACE))
+    kind_body = trace_kind_body(os.path.join(root, RS_TRACE))
+    section = design_section(os.path.join(root, DESIGN), "§15")
+    if variants is None:
+        out.append(surface_missing(RS_TRACE, "enum TraceEvent"))
+    if kind_body is None:
+        out.append(surface_missing(RS_TRACE, "fn kind"))
+    if section is None:
+        out.append(surface_missing(DESIGN, "§15 section"))
+    if variants is not None:
+        for v in variants:
+            if section is not None and \
+                    not re.search(rf"\b{re.escape(v)}\b", section):
+                out.append(finding(
+                    "SC304", v,
+                    f"TraceEvent::{v} is missing from the DESIGN.md "
+                    f"§15 event table", DESIGN))
+            if kind_body is not None and \
+                    not re.search(rf"\b{re.escape(v)}\b", kind_body):
+                out.append(finding(
+                    "SC305", v,
+                    f"TraceEvent::{v} has no arm in TraceEvent::kind() "
+                    f"(the GET /trace serializer)", RS_TRACE))
 
     armed = armed_keys(os.path.join(root, BENCH_GUARD))
     main_text = read_text(os.path.join(root, RS_MAIN))

@@ -58,6 +58,11 @@ cargo test -q --test chunked_prefill
 cargo test -q --test spec_decode
 cargo test -q --test proptests block_table_rewind_keeps_allocator_invariants
 
+# Flight-recorder gate (DESIGN.md §15): timestamp-stripped event
+# sequences golden flat-vs-paged and speculative-vs-sequential, plus
+# the ring-wraparound property.
+cargo test -q --test trace_events
+
 # plan-check: the checked-in QuantSpec golden fixtures must validate on
 # both sides of the language boundary.  The rust side ran above inside
 # `cargo test` (rust/tests/plan_roundtrip.rs); the python validator is

@@ -8,7 +8,7 @@
 # targets so local and CI gates cannot drift.
 
 .PHONY: artifacts tier1 tier1-bench test-python plan-check bench-guard \
-	staticcheck
+	staticcheck linkcheck
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../artifacts
@@ -28,12 +28,17 @@ plan-check:
 	python3 python/compile/quant/spec.py check \
 	    rust/tests/fixtures/quantspec_golden.json
 
-# Cross-language consistency analyzer (DESIGN.md §14): six passes over
-# the mirrored surfaces (spec.py<->spec.rs, manifest keys, metrics,
-# CLI flags, backend gating, test registry).  Pure stdlib, no cargo —
-# also the first tier1.sh step.
+# Cross-language consistency analyzer (DESIGN.md §14): seven passes
+# over the mirrored surfaces (spec.py<->spec.rs, manifest keys,
+# metrics, CLI flags, backend gating, test registry, doc parity).
+# Pure stdlib, no cargo — also the first tier1.sh step.
 staticcheck:
 	python3 scripts/staticcheck
+
+# Documentation link gate: relative paths and heading anchors in every
+# checked-in markdown file must resolve.  Stdlib only.
+linkcheck:
+	python3 scripts/check_md_links.py
 
 # Re-check the last bench run against the committed baseline without
 # re-running the bench.

@@ -1,0 +1,135 @@
+"""Tests for scripts/check_md_links.py — the documentation link gate.
+
+Fixture-level: GitHub slug rule, fences, images, anchors across files.
+Repo-level: every checked-in markdown file must pass (the same
+invocation tier1.sh and CI run).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+SCRIPTS = os.path.join(REPO, "scripts")
+if SCRIPTS not in sys.path:
+    sys.path.insert(0, SCRIPTS)
+
+import check_md_links  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# slug rule
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("heading,slug", [
+    ("Quickstart", "quickstart"),
+    ("CLI reference", "cli-reference"),
+    ("§16 Forked decoding", "16-forked-decoding"),
+    ("`lqer serve` flags", "lqer-serve-flags"),
+    ("Admission, preemption & swap", "admission-preemption--swap"),
+    ("GET /metrics", "get-metrics"),
+    ("reading_the_trace", "reading_the_trace"),
+])
+def test_slugify_matches_github(heading, slug):
+    assert check_md_links.slugify(heading) == slug
+
+
+def test_duplicate_headings_get_numeric_suffixes(tmp_path):
+    md = tmp_path / "a.md"
+    md.write_text("# Setup\n\n## Setup\n\ntext\n\n## Setup\n")
+    assert check_md_links.anchors(str(md)) == {
+        "setup", "setup-1", "setup-2"}
+
+
+# ---------------------------------------------------------------------------
+# link checking
+# ---------------------------------------------------------------------------
+
+
+def write_tree(tmp_path, files):
+    for rel, content in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(content)
+    return tmp_path
+
+
+def problems(tmp_path):
+    out = []
+    for md in check_md_links.find_markdown(str(tmp_path)):
+        out.extend(check_md_links.check_file(md, str(tmp_path)))
+    return out
+
+
+def test_clean_tree_passes(tmp_path):
+    write_tree(tmp_path, {
+        "README.md": (
+            "# Top\n\n"
+            "See [design](docs/design.md) and "
+            "[the table](docs/design.md#the-table), or jump "
+            "[down](#local).\n\n"
+            "External: [site](https://example.com/x) and "
+            "<mailto:[email protected]>.\n\n"
+            "## Local\n\ntext\n"),
+        "docs/design.md": (
+            "# Design\n\n[back](../README.md)\n\n## The table\n"),
+    })
+    assert problems(tmp_path) == []
+
+
+def test_broken_relative_path_is_reported(tmp_path):
+    write_tree(tmp_path, {"README.md": "[gone](docs/missing.md)\n"})
+    out = problems(tmp_path)
+    assert len(out) == 1
+    assert "broken path 'docs/missing.md'" in out[0]
+
+
+def test_broken_intra_doc_anchor_is_reported(tmp_path):
+    write_tree(tmp_path, {
+        "README.md": "# Only\n\n[jump](#nowhere)\n"})
+    out = problems(tmp_path)
+    assert len(out) == 1
+    assert "broken anchor '#nowhere'" in out[0]
+
+
+def test_broken_cross_file_anchor_is_reported(tmp_path):
+    write_tree(tmp_path, {
+        "README.md": "[x](docs/d.md#absent-section)\n",
+        "docs/d.md": "# Present\n"})
+    out = problems(tmp_path)
+    assert len(out) == 1
+    assert "no anchor '#absent-section'" in out[0]
+
+
+def test_fenced_code_and_inline_code_are_ignored(tmp_path):
+    write_tree(tmp_path, {
+        "README.md": (
+            "# A\n\n"
+            "```\n[not a link](nope.md)\n# not a heading\n```\n\n"
+            "Inline `[also not](gone.md)` example.\n")})
+    assert problems(tmp_path) == []
+
+
+def test_image_targets_are_checked(tmp_path):
+    write_tree(tmp_path, {"README.md": "![fig](img/missing.png)\n"})
+    out = problems(tmp_path)
+    assert len(out) == 1
+    assert "img/missing.png" in out[0]
+
+
+# ---------------------------------------------------------------------------
+# the real repo's docs are link-clean (same invocation as tier1/CI)
+# ---------------------------------------------------------------------------
+
+
+def test_repo_markdown_is_link_clean():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(SCRIPTS, "check_md_links.py"),
+         "--root", REPO],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "check_md_links: OK" in proc.stdout

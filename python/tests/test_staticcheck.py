@@ -27,6 +27,7 @@ import p3_metrics  # noqa: E402
 import p4_cli  # noqa: E402
 import p5_backend  # noqa: E402
 import p6_registry  # noqa: E402
+import p7_docs  # noqa: E402
 import sccore  # noqa: E402
 
 # ---------------------------------------------------------------------------
@@ -396,6 +397,25 @@ name = "integration"
 path = "rust/tests/integration.rs"
 '''
 
+README_MD = '''\
+# fixture
+
+Serving quickstart; drift passes are indexed in DESIGN.md §14.
+
+## CLI
+
+| flag | meaning |
+| --- | --- |
+| `--model` | model name |
+| `--prompt` | prompt text |
+| `--paged` | paged KV |
+| `--max-prefill-per-step` | deprecated alias |
+
+## HTTP
+
+`GET /metrics` returns the engine counters as JSON.
+'''
+
 TREE = {
     "python/compile/quant/spec.py": PY_SPEC,
     "python/compile/aot.py": PY_AOT,
@@ -411,13 +431,14 @@ TREE = {
     "scripts/bench_guard.py": BENCH_GUARD,
     "Cargo.toml": CARGO_TOML,
     "rust/tests/integration.rs": "fn main() {}\n",
+    "README.md": README_MD,
     "BENCH_baseline.json": json.dumps(
         {"bench": {"paged": {"completed": 4, "rejected": 0,
                              "tokens_per_sec": 0.0}}}),
 }
 
 ALL_PASSES = [p1_mirror, p2_manifest, p3_metrics, p4_cli, p5_backend,
-              p6_registry]
+              p6_registry, p7_docs]
 
 
 @pytest.fixture()
@@ -617,6 +638,34 @@ def test_p6_dangling_entry_fires_sc604(tree):
     (tree / "rust" / "tests" / "integration.rs").unlink()
     found = keys(p6_registry.run(str(tree)))
     assert "SC604:integration" in found
+
+
+def test_p7_undocumented_flag_fires_sc701(tree):
+    mutate(tree, "README.md", "| `--paged` | paged KV |\n", "")
+    found = keys(p7_docs.run(str(tree)))
+    assert "SC701:paged" in found
+
+
+def test_p7_undocumented_route_fires_sc702(tree):
+    mutate(tree, "README.md",
+           "`GET /metrics` returns the engine counters as JSON.\n", "")
+    found = keys(p7_docs.run(str(tree)))
+    assert "SC702:GET:/metrics" in found
+
+
+def test_p7_dangling_design_reference_fires_sc703(tree):
+    # Only the section number is swapped so this source file never
+    # contains the dangling `DESIGN.md §N` literal SC703 scans for.
+    mutate(tree, "README.md", "§14", "§99")
+    found = keys(p7_docs.run(str(tree)))
+    assert "SC703:README.md:99" in found
+
+
+def test_p7_stale_doc_flag_fires_sc704(tree):
+    mutate(tree, "README.md", "| `--paged` | paged KV |",
+           "| `--paged` | paged KV |\n| `--turbo` | removed long ago |")
+    found = keys(p7_docs.run(str(tree)))
+    assert "SC704:README.md:turbo" in found
 
 
 # ---------------------------------------------------------------------------

@@ -30,41 +30,125 @@ pub fn load_prompts(manifest: &Manifest) -> Result<Vec<Vec<u32>>> {
     Ok(out)
 }
 
-/// Submit `n` requests open-loop and wait for all of them; returns the
-/// engine metrics (throughput, latency percentiles, batch occupancy).
+/// Submit `n` one-shot requests open-loop and wait for all of them;
+/// returns the engine metrics (throughput, latency percentiles, batch
+/// occupancy).
 pub fn run_loadtest(
     manifest: &Manifest,
     cfg: &EngineConfig,
     n: usize,
     max_new: usize,
 ) -> Result<EngineMetrics> {
-    Ok(run_loadtest_traced(manifest, cfg, n, max_new)?.0)
+    Ok(run_loadtest_traced(manifest, cfg, n, max_new, "oneshot")?.0)
 }
 
-/// [`run_loadtest`], but also drains the engine's flight-recorder ring
-/// (DESIGN.md §15) before shutdown so the caller can write a Chrome
-/// trace of the run (`serve-bench --trace-file`).
+/// [`run_loadtest`] with a traffic shape (DESIGN.md §16), also draining
+/// the engine's flight-recorder ring (DESIGN.md §15) before shutdown so
+/// the caller can write a Chrome trace of the run (`serve-bench
+/// --trace-file --shape ...`):
+///
+/// * `oneshot` — `n` independent single-sample requests, the legacy
+///   open-loop load;
+/// * `chat`    — multi-turn conversations: `n` requests spread over
+///   `n/3` sessions of 3 turns, every turn replaying the (bounded)
+///   visible history so a session-budgeted engine re-maps it from the
+///   parked KV chain;
+/// * `agent`   — one long agent loop: `n` sequential short turns in a
+///   single session, history growing each turn;
+/// * `batch`   — batch-eval: `n` low-priority requests with 4 parallel
+///   samples each (needs a paged, prefix-sharing engine).
 pub fn run_loadtest_traced(
     manifest: &Manifest,
     cfg: &EngineConfig,
     n: usize,
     max_new: usize,
+    shape: &str,
 ) -> Result<(EngineMetrics, Vec<trace::TraceRecord>)> {
     let prompts = load_prompts(manifest)?;
     let engine = EngineHandle::spawn(manifest.dir.clone(), cfg.clone())?;
-    let mut rxs: Vec<mpsc::Receiver<Response>> = Vec::with_capacity(n);
-    for i in 0..n {
-        rxs.push(engine.submit(Request {
-            id: i as u64 + 1,
-            prompt: prompts[i % prompts.len()].clone(),
+    let req = |id: u64, prompt: Vec<u32>, fanout: usize,
+               session: Option<u64>, priority: super::Priority|
+        -> Request {
+        Request {
+            id,
+            prompt,
             max_new_tokens: max_new,
             sampling: Sampling::Greedy,
-            priority: super::Priority::Normal,
-        }));
-    }
-    for rx in rxs {
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("request dropped by engine"))?;
+            priority,
+            n: fanout,
+            beams: 0,
+            session,
+        }
+    };
+    // Closed-loop turn runner for the session shapes: one turn of each
+    // live conversation in flight at a time, the next turn's prompt
+    // extending the previous one with a bounded slice of the response
+    // (so prompts stay inside the prefill buckets).
+    let run_turns = |sessions: usize, turns: usize|
+        -> Result<()> {
+        let mut histories: Vec<Vec<u32>> = (0..sessions)
+            .map(|s| prompts[s % prompts.len()].clone())
+            .collect();
+        let mut id = 0u64;
+        for turn in 0..turns {
+            let rxs: Vec<(usize, mpsc::Receiver<Response>)> =
+                (0..sessions)
+                    .map(|s| {
+                        id += 1;
+                        (s, engine.submit(req(
+                            id,
+                            histories[s].clone(),
+                            1,
+                            Some(1000 + s as u64),
+                            super::Priority::Normal,
+                        )))
+                    })
+                    .collect();
+            for (s, rx) in rxs {
+                let resp = rx.recv().map_err(|_| {
+                    anyhow::anyhow!("request dropped by engine")
+                })?;
+                let keep = resp.tokens.len().min(8);
+                histories[s].extend_from_slice(&resp.tokens[..keep]);
+                let chunk =
+                    &prompts[(s + turn + 1) % prompts.len()];
+                histories[s]
+                    .extend_from_slice(&chunk[..chunk.len().min(4)]);
+            }
+        }
+        Ok(())
+    };
+    match shape {
+        "oneshot" | "batch" => {
+            let fanout = if shape == "batch" { 4 } else { 1 };
+            let priority = if shape == "batch" {
+                super::Priority::Low
+            } else {
+                super::Priority::Normal
+            };
+            let mut rxs: Vec<mpsc::Receiver<Response>> =
+                Vec::with_capacity(n);
+            for i in 0..n {
+                rxs.push(engine.submit(req(
+                    i as u64 + 1,
+                    prompts[i % prompts.len()].clone(),
+                    fanout,
+                    None,
+                    priority,
+                )));
+            }
+            for rx in rxs {
+                rx.recv().map_err(|_| {
+                    anyhow::anyhow!("request dropped by engine")
+                })?;
+            }
+        }
+        "chat" => run_turns((n / 3).max(1), 3)?,
+        "agent" => run_turns(1, n.max(1))?,
+        other => anyhow::bail!(
+            "unknown traffic shape {other:?} (expected: oneshot, chat, \
+             agent, batch)"
+        ),
     }
     let metrics = engine.metrics()?;
     let records = engine.trace()?;
@@ -90,6 +174,9 @@ pub fn generate_all(
                 max_new_tokens: max_new,
                 sampling: Sampling::Greedy,
                 priority: super::Priority::Normal,
+                n: 1,
+                beams: 0,
+                session: None,
             })
         })
         .collect();

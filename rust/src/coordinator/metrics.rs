@@ -34,6 +34,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Add one sample (bucket count, running sum/max).
     pub fn record(&mut self, v: f64) {
         let idx = self
             .bounds
@@ -46,10 +47,12 @@ impl LatencyHistogram {
         self.max = self.max.max(v);
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Mean of all samples (0.0 when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -58,6 +61,7 @@ impl LatencyHistogram {
         }
     }
 
+    /// Largest recorded sample (0.0 when empty).
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -138,6 +142,27 @@ pub struct EngineMetrics {
     pub kv_shared_refs: u64,
     pub swap_blocks_in_use: u64,
     pub swap_blocks_total: u64,
+    /// Candidate decode tails forked off prefilled prompts (DESIGN.md
+    /// §16): `n`-sampling and beam-search siblings, primaries excluded.
+    pub forks: u64,
+    /// Candidate forks dropped because no free lane was left; the
+    /// group completes with the candidates that fit.
+    pub fork_denied: u64,
+    /// Beam-search hypotheses pruned (their lanes re-forked from a
+    /// surviving beam, freed tail blocks revivable).
+    pub beam_prunes: u64,
+    /// Admissions whose `session` id matched a parked conversation —
+    /// the near-zero-prefill re-admission path (DESIGN.md §16).
+    pub session_hits: u64,
+    /// Parked sessions dropped — past the block budget or reclaimed
+    /// under capacity pressure (their blocks stay revivable).
+    pub session_evictions: u64,
+    /// Conversations currently parked in the session store, at the
+    /// last snapshot.
+    pub sessions_live: u64,
+    /// Block references those parked sessions hold, at the last
+    /// snapshot.
+    pub session_blocks_held: u64,
     pub tokens_generated: u64,
     /// Speculative decoding (DESIGN.md §13): tokens proposed by the
     /// draft (backbone-only) passes.
@@ -199,6 +224,8 @@ pub struct EngineMetrics {
 }
 
 impl EngineMetrics {
+    /// Decode throughput over time actually spent in decode steps
+    /// (0.0 before the first step).
     pub fn decode_tokens_per_sec(&self) -> f64 {
         if self.decode_ns == 0 {
             0.0
@@ -207,6 +234,7 @@ impl EngineMetrics {
         }
     }
 
+    /// Mean decoding lanes running per engine tick.
     pub fn mean_batch_occupancy(&self) -> f64 {
         self.batch_occupancy.mean()
     }
@@ -227,6 +255,8 @@ impl EngineMetrics {
         self.decode_stall_ns as f64 / 1e6
     }
 
+    /// One-line human summary of every counter (the `serve-bench`
+    /// footer); `GET /metrics` serves the same fields as JSON.
     pub fn report(&self) -> String {
         let spec = if self.draft_tokens > 0 {
             format!(
@@ -246,7 +276,9 @@ impl EngineMetrics {
                  peak) | {} preempted ({} mid-prefill, {} swapped out, \
                  {} back in, {} fallbacks) | swap pool {}/{} blocks, \
                  {} seqs parked | {} shared blocks ({} extra refs), {} \
-                 cow, {} prefix hits ({} B saved)",
+                 cow, {} prefix hits ({} B saved) | {} forks ({} \
+                 denied), {} beams pruned | sessions {} live ({} \
+                 blocks held, {} hits, {} evicted)",
                 self.kv_blocks_in_use,
                 self.kv_blocks_total,
                 self.kv_block_size,
@@ -265,6 +297,13 @@ impl EngineMetrics {
                 self.cow_copies,
                 self.prefix_hit_blocks,
                 self.prefix_bytes_saved,
+                self.forks,
+                self.fork_denied,
+                self.beam_prunes,
+                self.sessions_live,
+                self.session_blocks_held,
+                self.session_hits,
+                self.session_evictions,
             )
         } else {
             String::new()

@@ -47,12 +47,22 @@
 //! new sequences join the decode batch as soon as a slot frees up, without
 //! draining the batch.
 
+/// The `DecodeBackend` trait and its PJRT-backed implementations.
 pub mod backend;
+/// Prefill bucketing and chunk-length selection (DESIGN.md §12).
 pub mod batching;
+/// Closed-loop `serve-bench` driver and its traffic shapes
+/// (DESIGN.md §16).
 pub mod loadtest;
+/// [`EngineMetrics`]: every counter, gauge, and histogram the
+/// engine exports.
 pub mod metrics;
+/// Minimal HTTP/1.1 front end (`/generate`, `/metrics`, `/trace`).
 pub mod server;
+/// Deterministic fake backend for tests and benches.
 pub mod testbackend;
+/// Flight recorder: bounded event ring + span timers
+/// (DESIGN.md §15).
 pub mod trace;
 
 use std::sync::mpsc;
@@ -104,6 +114,7 @@ impl Priority {
     }
 }
 
+/// One generation request as the engine sees it.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -111,6 +122,28 @@ pub struct Request {
     pub max_new_tokens: usize,
     pub sampling: Sampling,
     pub priority: Priority,
+    /// Parallel-sampling fanout (DESIGN.md §16): the prompt is admitted
+    /// and prefilled once, then `n` decode tails fork off it, sharing
+    /// every prompt block read-only (copy-on-write on first divergent
+    /// write).  0 and 1 both mean the plain single-sequence path; the
+    /// candidates come back ranked in [`Response::candidates`].
+    /// Requires a paged engine with block ops; mutually exclusive with
+    /// `beams`.
+    pub n: usize,
+    /// Beam-search width (DESIGN.md §16): fork `beams` hypotheses off
+    /// the prefilled prompt and re-rank them in lockstep each decode
+    /// step by cumulative log-probability, re-forking pruned beams'
+    /// lanes from survivors via the block table (freed tail blocks stay
+    /// revivable).  0 and 1 both mean off.  Beam ranking is
+    /// deterministic (greedy over the expansion set) regardless of
+    /// `sampling`.
+    pub beams: usize,
+    /// Conversation id for multi-turn session persistence (DESIGN.md
+    /// §16): when set and the engine has a session budget, a finished
+    /// turn parks its KV tail in the prefix index keyed by content, so
+    /// a follow-up turn extending the conversation re-admits with only
+    /// its new suffix to prefill.
+    pub session: Option<u64>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -128,10 +161,27 @@ pub enum FinishReason {
     Expired,
 }
 
+/// One completed candidate of a forked request (`n` parallel samples
+/// or `beams` beam-search hypotheses), ranked best-first in
+/// [`Response::candidates`].
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    /// Cumulative natural-log probability of `tokens` under the
+    /// model's per-step softmax — the ranking key (ties break toward
+    /// the lower candidate index, so greedy fanouts stay
+    /// deterministic).
+    pub score: f64,
+}
+
+/// The engine's answer to a [`Request`].
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
     pub prompt_len: usize,
+    /// The generated stream — for a forked request, the best
+    /// candidate's stream (`candidates[0].tokens`).
     pub tokens: Vec<u32>,
     pub finish: FinishReason,
     /// Wall-clock from submit to first generated token (ms).  Recorded
@@ -144,6 +194,10 @@ pub struct Response {
     /// Wall-clock this sequence spent swapped out to the host pool (ms);
     /// part of `total_ms`, never of `ttft_ms`.
     pub swapped_ms: f64,
+    /// Every candidate of a forked request (`n` > 1 or `beams` >= 2),
+    /// best first; empty on the plain single-sequence path, where
+    /// `tokens` is the only stream.
+    pub candidates: Vec<Candidate>,
 }
 
 enum Msg {
@@ -181,6 +235,14 @@ pub struct PagedKvConfig {
     /// sequence for re-prefill.  0 disables swapping (re-prefill
     /// fallback only).
     pub swap_blocks: usize,
+    /// Budget (in blocks) for parked multi-turn sessions (DESIGN.md
+    /// §16): a finished turn with [`Request::session`] set keeps its
+    /// tail blocks referenced and prefix-indexed so the next turn
+    /// re-admits with near-zero prefill.  Oldest sessions are dropped
+    /// past the budget, and any parked session is reclaimed before the
+    /// engine preempts live work.  0 disables persistence; requires
+    /// `prefix_sharing`.
+    pub session_blocks: usize,
 }
 
 /// Self-speculative decoding (DESIGN.md §13): the quantized backbone
@@ -295,6 +357,7 @@ impl EngineHandle {
         rx.recv().map_err(|_| anyhow::anyhow!("engine dropped request"))
     }
 
+    /// Snapshot of the engine's counters (one channel round-trip).
     pub fn metrics(&self) -> Result<EngineMetrics> {
         let (tx, rx) = mpsc::channel();
         self.tx.send(Msg::Metrics(tx))?;
@@ -308,6 +371,8 @@ impl EngineHandle {
         rx.recv().map_err(|_| anyhow::anyhow!("engine gone"))
     }
 
+    /// Stop the engine thread and join it.  In-flight work is dropped;
+    /// waiting callers see their reply channel close.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(j) = self.join.take() {
@@ -356,6 +421,17 @@ struct ActiveSeq {
     /// optimistic (1.0): the first rounds run at full depth and the
     /// depth backs off only on observed rejections.
     accept_ewma: f64,
+    /// Fork-group key (the request id) when this lane is one candidate
+    /// of a forked request (DESIGN.md §16); `None` on the plain
+    /// single-sequence path.
+    group: Option<u64>,
+    /// Candidate index within the group (0 = the primary, whose RNG
+    /// stream is bit-identical to the unforked request's).
+    cand: usize,
+    /// Cumulative log-probability of the emitted tokens; ranks the
+    /// candidates when the group completes.  Only maintained for
+    /// grouped lanes — the plain path never computes it.
+    score: f64,
 }
 
 /// A sequence in the Prefilling phase (DESIGN.md §12): its lane and KV
@@ -439,6 +515,24 @@ struct PagedState {
     /// swapping is off).
     swap: SwapPool,
     sharing: bool,
+    /// Parked multi-turn sessions (DESIGN.md §16), oldest first: each
+    /// entry holds one reference on every block of a finished turn's
+    /// KV chain, keeping the bytes resident for the next turn's prefix
+    /// match.  Empty when `session_budget` is 0.
+    sessions: Vec<SessionEntry>,
+    /// [`PagedKvConfig::session_blocks`].
+    session_budget: usize,
+}
+
+/// One finished conversation's parked KV tail: the block references of
+/// its final token chain, still registered in the prefix index so a
+/// follow-up turn re-maps them instead of re-prefilling.
+struct SessionEntry {
+    id: u64,
+    blocks: Vec<u32>,
+    /// Valid cache rows the blocks cover (prompt + generated tokens
+    /// except the never-written last one).
+    rows: usize,
 }
 
 impl PagedState {
@@ -450,6 +544,48 @@ impl PagedState {
         self.index.forget_block(id);
         Some(id)
     }
+
+    /// Blocks currently held by parked sessions (each holds one
+    /// reference per block; shared blocks count once per session).
+    fn session_blocks_held(&self) -> usize {
+        self.sessions.iter().map(|e| e.blocks.len()).sum()
+    }
+
+    /// Drop the oldest parked session, releasing its block references.
+    /// The bytes stay prefix-indexed, so a later matching turn can
+    /// still revive them from the free list — eviction only gives up
+    /// the *guarantee* of residency.  Returns false when none is
+    /// parked.
+    fn evict_oldest_session(&mut self) -> bool {
+        if self.sessions.is_empty() {
+            return false;
+        }
+        let e = self.sessions.remove(0);
+        for b in e.blocks {
+            self.alloc.free(b);
+        }
+        true
+    }
+}
+
+/// Shared completion state of a forked request (`n` > 1 sampling or
+/// beam search): the candidates finish independently, and the single
+/// [`Response`] is assembled and sent when the last one lands.
+struct ForkGroup {
+    reply: mpsc::Sender<Response>,
+    prompt_len: usize,
+    /// Submission timestamp ([`now_ns`]) — group latency clock.
+    submitted: u64,
+    /// Beam-search group: [`Engine::beam_step`] re-ranks and prunes
+    /// its lanes in lockstep instead of sampling them independently.
+    beams: bool,
+    /// Lanes still decoding for this group.
+    live: usize,
+    /// Finished candidates as `(candidate index, candidate)`.
+    done: Vec<(usize, Candidate)>,
+    /// TTFT of the shared prefill (all candidates fork after it).
+    ttft_ms: Option<f64>,
+    swapped_ms: f64,
 }
 
 /// A preempted sequence living in the host swap pool: the full decode
@@ -500,6 +636,10 @@ pub struct Engine<B: DecodeBackend> {
     /// Preempted sequences parked in the host swap pool, oldest first;
     /// swap-in resumes them before any new admission.
     swapped: std::collections::VecDeque<SwappedSeq>,
+    /// In-flight fork groups (DESIGN.md §16), keyed by request id: one
+    /// entry per forked request from the moment its candidates fork at
+    /// prefill completion until the last one finishes.
+    groups: std::collections::HashMap<u64, ForkGroup>,
     /// Round-robin start of the chunk packer, so one long prompt cannot
     /// monopolize the prefill budget tick after tick.
     prefill_cursor: usize,
@@ -597,6 +737,11 @@ impl<B: DecodeBackend> Engine<B> {
                 "prefix sharing / swap need backend block ops (the \
                  device-paged path is gated, see ROADMAP)"
             );
+            assert!(
+                p.session_blocks == 0 || p.prefix_sharing,
+                "session persistence re-admits via the prefix index; \
+                 session_blocks needs prefix_sharing"
+            );
             PagedState {
                 alloc: BlockAllocator::new(p.num_blocks, p.block_size),
                 tables: (0..cfg.decode_batch)
@@ -605,6 +750,8 @@ impl<B: DecodeBackend> Engine<B> {
                 index: PrefixIndex::new(),
                 swap: SwapPool::new(p.swap_blocks),
                 sharing: p.prefix_sharing,
+                sessions: Vec::new(),
+                session_budget: p.session_blocks,
             }
         });
         let slots = SlotMap::new(cfg.decode_batch, backend.t_max());
@@ -619,6 +766,7 @@ impl<B: DecodeBackend> Engine<B> {
             lanes,
             paged,
             swapped: Default::default(),
+            groups: Default::default(),
             prefill_cursor: 0,
             scratch_active: Vec::new(),
             scratch_tokens: Vec::new(),
@@ -667,14 +815,17 @@ impl<B: DecodeBackend> Engine<B> {
         self.swapped.len()
     }
 
+    /// Decode lanes currently unoccupied.
     pub fn free_slots(&self) -> usize {
         self.slots.free_count()
     }
 
+    /// Decode batch size (lane count) the engine was built with.
     pub fn kv_batch(&self) -> usize {
         self.slots.batch()
     }
 
+    /// Requests parked in the admission queue.
     pub fn waiting_len(&self) -> usize {
         self.waiting.len()
     }
@@ -709,6 +860,8 @@ impl<B: DecodeBackend> Engine<B> {
         self.paged.as_ref().map(|p| p.alloc.free_count()).unwrap_or(0)
     }
 
+    /// Direct (non-channel) metrics snapshot with live gauges filled
+    /// in — the in-process view tests and benches read.
     pub fn metrics_snapshot(&self) -> EngineMetrics {
         let mut m = self.metrics.clone();
         m.exec = self.backend.exec_stats();
@@ -728,6 +881,8 @@ impl<B: DecodeBackend> Engine<B> {
             m.swapped_seqs = self.swapped.len() as u64;
             m.swap_blocks_in_use = p.swap.blocks_in_use() as u64;
             m.swap_blocks_total = p.swap.max_blocks() as u64;
+            m.sessions_live = p.sessions.len() as u64;
+            m.session_blocks_held = p.session_blocks_held() as u64;
         }
         m.trace_events_total = self.recorder.total();
         m.trace_dropped_total = self.recorder.dropped();
@@ -943,20 +1098,27 @@ impl<B: DecodeBackend> Engine<B> {
                         spent += charge;
                     }
                 }
-                // Capacity miss.  Preempted entries always wait — they
-                // were already admitted once, and shedding them would
-                // turn preemption into request loss even under
-                // RejectOnFull.
-                Ok(_) => match self.cfg.admission {
-                    AdmissionPolicy::RejectOnFull
-                        if !self.waiting[0].preempted =>
-                    {
-                        let w = self.waiting.pop_front().unwrap();
-                        self.reject(w, "no free KV capacity",
-                                    FinishReason::Rejected);
+                // Capacity miss.  Parked sessions are reclaimed first
+                // (their blocks stay revivable via the index); only
+                // then do preempted-entry / shed rules apply.
+                // Preempted entries always wait — they were already
+                // admitted once, and shedding them would turn
+                // preemption into request loss even under RejectOnFull.
+                Ok(_) => {
+                    if self.reclaim_session_blocks() {
+                        continue; // re-plan with the larger free list
                     }
-                    _ => break, // head waits
-                },
+                    match self.cfg.admission {
+                        AdmissionPolicy::RejectOnFull
+                            if !self.waiting[0].preempted =>
+                        {
+                            let w = self.waiting.pop_front().unwrap();
+                            self.reject(w, "no free KV capacity",
+                                        FinishReason::Rejected);
+                        }
+                        _ => break, // head waits
+                    }
+                }
             }
         }
         spent
@@ -1009,6 +1171,28 @@ impl<B: DecodeBackend> Engine<B> {
     /// prefix index, so they cannot diverge.
     fn plan_admission(&self, request: &Request)
         -> Result<AdmitPlan, String> {
+        if request.n > 1 || request.beams > 1 {
+            // Forked workloads (DESIGN.md §16) need the COW block
+            // machinery; on anything else they are permanently
+            // unservable, not a capacity miss.
+            if request.n > 1 && request.beams > 1 {
+                return Err(
+                    "n > 1 and beams > 1 are mutually exclusive".into()
+                );
+            }
+            if self.paged.is_none()
+                || !self.backend.supports_block_ops()
+            {
+                return Err("parallel sampling / beam search need a \
+                            paged engine with block ops"
+                    .into());
+            }
+            if self.cfg.spec.is_some() {
+                return Err("parallel sampling / beam search are not \
+                            supported on a speculative engine"
+                    .into());
+            }
+        }
         let prompt = self.canonical_prompt(&request.prompt);
         let len = prompt.len();
         if len == 0 {
@@ -1078,6 +1262,20 @@ impl<B: DecodeBackend> Engine<B> {
         }
     }
 
+    /// Under capacity pressure, parked sessions are the first thing to
+    /// go: drop the oldest one so its blocks return to the free list
+    /// (still prefix-indexed — a later matching turn can revive them).
+    /// Returns true when something was reclaimed and the caller should
+    /// retry its allocation.
+    fn reclaim_session_blocks(&mut self) -> bool {
+        let Some(p) = &mut self.paged else { return false };
+        if p.evict_oldest_session() {
+            self.metrics.session_evictions += 1;
+            return true;
+        }
+        false
+    }
+
     /// Return a lane's blocks (if paged) and the lane itself.
     fn release_slot(&mut self, slot: usize) {
         if let Some(p) = &mut self.paged {
@@ -1126,6 +1324,7 @@ impl<B: DecodeBackend> Engine<B> {
             ttft_ms: total_ms,
             total_ms,
             swapped_ms: 0.0,
+            candidates: Vec::new(),
         });
     }
 
@@ -1137,6 +1336,22 @@ impl<B: DecodeBackend> Engine<B> {
     fn admit(&mut self, w: Waiting, plan: AdmitPlan) {
         let AdmitPlan { prompt, blocks, shared } = plan;
         let len = prompt.len();
+        if let (Some(sid), Some(p)) =
+            (w.request.session, &mut self.paged)
+        {
+            // A returning conversation: count the hit and LRU-touch the
+            // parked entry.  The prefix hits in `shared` do the actual
+            // block reuse — sharing is content-addressed, not
+            // session-id-keyed, so an edited history simply matches
+            // less.
+            if let Some(i) =
+                p.sessions.iter().position(|e| e.id == sid)
+            {
+                let e = p.sessions.remove(i);
+                p.sessions.push(e);
+                self.metrics.session_hits += 1;
+            }
+        }
         let Some(slot) = self.slots.alloc(w.request.id) else {
             self.reject(w, "no free KV slot", FinishReason::Rejected);
             return;
@@ -1431,6 +1646,9 @@ impl<B: DecodeBackend> Engine<B> {
 
         // Sample the first generated token from the last prompt position.
         let row = &logits[(len - 1) * vocab..len * vocab];
+        let fanout = request.n.max(1).max(request.beams);
+        let beams = request.beams > 1;
+        let rid = request.id;
         let mut seq = ActiveSeq {
             rng: Rng::new(match request.sampling {
                 Sampling::TopK { seed, .. } => seed ^ request.id,
@@ -1451,17 +1669,170 @@ impl<B: DecodeBackend> Engine<B> {
                 .map(|sc| sc.gamma)
                 .unwrap_or(0),
             accept_ewma: 1.0,
+            group: None,
+            cand: 0,
+            score: 0.0,
         };
-        let first = sample(row, seq.request.sampling, &mut seq.rng);
+        // Fanout (DESIGN.md §16): the primary candidate IS the plain
+        // sequence — same RNG stream, same first-token draw — so the
+        // n=1 path stays bit-identical by construction.  Beam search
+        // ranks deterministically: candidate i starts from the i-th
+        // best first token.
+        let ranked = if fanout > 1 {
+            top_tokens(row, fanout)
+        } else {
+            Vec::new()
+        };
+        let first = if beams {
+            ranked[0].0
+        } else {
+            sample(row, seq.request.sampling, &mut seq.rng)
+        };
+        if fanout > 1 {
+            seq.group = Some(rid);
+            seq.score = if beams {
+                ranked[0].1
+            } else {
+                token_logprob(row, first)
+            };
+        }
         seq.ttft_ms =
             Some(ns_to_ms(now_ns().saturating_sub(seq.submitted)));
         seq.generated.push(first);
         seq.last_token = first;
         seq.last_token_at = now_ns();
         self.lanes[slot] = Lane::Decoding(seq);
+        if fanout > 1 {
+            // Siblings fork before the primary's finish check so the
+            // group exists by the time any candidate completes.
+            self.fork_group(slot, rid, fanout, beams, row, &ranked);
+        }
         // The sampled token will be fed at position `len` by decode_step;
         // finish immediately if it is EOS or the request wants one token.
         self.maybe_finish(slot);
+    }
+
+    /// Fork `fanout - 1` sibling decode tails off a freshly-prefilled
+    /// lane (DESIGN.md §16): each sibling's block table retains every
+    /// block of the primary's table read-only (COW splits the tail on
+    /// the first divergent write, so K candidates cost ~1x the prompt),
+    /// draws its own first token from the same final-chunk logits row,
+    /// and joins the request's [`ForkGroup`].  Siblings beyond the free
+    /// lane supply are dropped (`fork_denied`) — the group completes
+    /// with the candidates that fit.
+    fn fork_group(
+        &mut self,
+        primary: usize,
+        rid: u64,
+        fanout: usize,
+        beams: bool,
+        row: &[f32],
+        ranked: &[(u32, f64)],
+    ) {
+        let (reply, submitted, request, ttft_ms) = {
+            let Lane::Decoding(seq) = &self.lanes[primary] else {
+                unreachable!("fork off a non-decoding lane");
+            };
+            (
+                seq.reply.clone(),
+                seq.submitted,
+                seq.request.clone(),
+                seq.ttft_ms,
+            )
+        };
+        self.groups.insert(
+            rid,
+            ForkGroup {
+                reply: reply.clone(),
+                prompt_len: request.prompt.len(),
+                submitted,
+                beams,
+                live: 1, // the primary
+                done: Vec::new(),
+                ttft_ms,
+                swapped_ms: 0.0,
+            },
+        );
+        let parent_pos = self.slots.pos(primary);
+        let parent_blocks: Vec<u32> = self
+            .paged
+            .as_ref()
+            .map(|p| p.tables[primary].blocks().to_vec())
+            .unwrap_or_default();
+        let base_seed = match request.sampling {
+            Sampling::TopK { seed, .. } => seed ^ rid,
+            Sampling::Greedy => rid,
+        };
+        let mut sibs: Vec<usize> = Vec::new();
+        for i in 1..fanout {
+            if beams && i >= ranked.len() {
+                break; // vocabulary smaller than the beam width
+            }
+            let Some(slot) = self.slots.alloc(rid) else {
+                self.metrics.fork_denied += (fanout - i) as u64;
+                break;
+            };
+            if self.slots.set_pos(slot, parent_pos).is_err() {
+                self.slots.free(slot);
+                self.metrics.fork_denied += (fanout - i) as u64;
+                break;
+            }
+            if let Some(p) = &mut self.paged {
+                debug_assert!(
+                    p.tables[slot].is_empty(),
+                    "stale fork table"
+                );
+                for &b in &parent_blocks {
+                    p.alloc.retain(b);
+                    p.tables[slot].push(b);
+                }
+            }
+            // Each sampling sibling decorrelates its RNG stream from
+            // the primary's with an odd-constant mix of its candidate
+            // index; beam candidates are deterministic and never draw.
+            let mut rng = Rng::new(
+                base_seed
+                    ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            let (first, score) = if beams {
+                ranked[i]
+            } else {
+                let t = sample(row, request.sampling, &mut rng);
+                (t, token_logprob(row, t))
+            };
+            let now = now_ns();
+            self.lanes[slot] = Lane::Decoding(ActiveSeq {
+                request: request.clone(),
+                reply: reply.clone(),
+                submitted,
+                ttft_ms,
+                swapped_ms: 0.0,
+                generated: vec![first],
+                last_token: first,
+                last_token_at: now,
+                rng,
+                gamma: 0,
+                accept_ewma: 1.0,
+                group: Some(rid),
+                cand: i,
+                score,
+            });
+            sibs.push(slot);
+        }
+        if let Some(g) = self.groups.get_mut(&rid) {
+            g.live += sibs.len();
+        }
+        self.metrics.forks += sibs.len() as u64;
+        self.recorder.emit(
+            self.tick_idx,
+            rid,
+            Some(primary),
+            0,
+            TraceEvent::Forked { siblings: sibs.len() },
+        );
+        for s in sibs {
+            self.maybe_finish(s);
+        }
     }
 
     /// Make every decoding lane's next append writable: grow its table
@@ -1540,6 +1911,12 @@ impl<B: DecodeBackend> Engine<B> {
                 }
                 continue;
             }
+            // Pool dry: parked sessions go before live work — their
+            // blocks stay revivable via the index, so reclaiming one is
+            // strictly cheaper than preempting a running sequence.
+            if self.reclaim_session_blocks() {
+                continue;
+            }
             let victim = self
                 .slots
                 .active_iter()
@@ -1559,6 +1936,18 @@ impl<B: DecodeBackend> Engine<B> {
                 );
                 self.finish(s, FinishReason::CacheFull);
                 return Ok(());
+            }
+            let victim_grouped = matches!(
+                &self.lanes[victim],
+                Lane::Decoding(seq) if seq.group.is_some()
+            );
+            if victim_grouped {
+                // A forked candidate never requeues (re-admission would
+                // re-fork the whole group) or swaps (beam lanes move in
+                // lockstep): close it with the tokens it has — the
+                // group completes from the surviving candidates.
+                self.finish(victim, FinishReason::CacheFull);
+                continue;
             }
             self.preempt(victim);
         }
@@ -1731,13 +2120,17 @@ impl<B: DecodeBackend> Engine<B> {
             };
             let draw = n - hits.len()
                 + hits.iter().filter(|&&(_, revive)| revive).count();
-            {
-                let p = self.paged.as_ref().unwrap();
-                if self.slots.free_count() == 0
-                    || p.alloc.free_count() < draw
-                {
-                    return;
+            if self.slots.free_count() == 0 {
+                return;
+            }
+            if self.paged.as_ref().unwrap().alloc.free_count() < draw {
+                // Parked sessions yield to resumption, like they yield
+                // to admission and growth; the retry recomputes the
+                // prefix hits against the changed refcounts.
+                if self.reclaim_session_blocks() {
+                    continue;
                 }
+                return;
             }
             let entry = self.swapped.pop_front().unwrap();
             let slot = self
@@ -1808,6 +2201,7 @@ impl<B: DecodeBackend> Engine<B> {
                     ttft_ms: ttft,
                     total_ms,
                     swapped_ms: seq.swapped_ms,
+                    candidates: Vec::new(),
                 });
                 continue;
             }
@@ -1888,13 +2282,41 @@ impl<B: DecodeBackend> Engine<B> {
 
         let vsize = self.backend.vocab();
         anyhow::ensure!(logits.len() >= b * vsize, "decode logits size");
+        // Beam-search lanes are re-ranked per group after this loop
+        // (from the same batched logits) instead of sampled
+        // independently.
+        let mut beam_groups: Vec<u64> = Vec::new();
+        for &s in &self.scratch_active {
+            if let Lane::Decoding(seq) = &self.lanes[s] {
+                if let Some(gid) = seq.group {
+                    if self
+                        .groups
+                        .get(&gid)
+                        .map(|g| g.beams)
+                        .unwrap_or(false)
+                        && !beam_groups.contains(&gid)
+                    {
+                        beam_groups.push(gid);
+                    }
+                }
+            }
+        }
         for i in 0..self.scratch_active.len() {
             let s = self.scratch_active[i];
             let row = &logits[s * vsize..(s + 1) * vsize];
             let Lane::Decoding(seq) = &mut self.lanes[s] else {
                 unreachable!();
             };
+            if seq
+                .group
+                .map_or(false, |gid| beam_groups.contains(&gid))
+            {
+                continue;
+            }
             let tok = sample(row, seq.request.sampling, &mut seq.rng);
+            if seq.group.is_some() {
+                seq.score += token_logprob(row, tok);
+            }
             seq.generated.push(tok);
             seq.last_token = tok;
             let now = now_ns();
@@ -1912,7 +2334,191 @@ impl<B: DecodeBackend> Engine<B> {
             );
             self.maybe_finish(s);
         }
+        for gid in beam_groups {
+            self.beam_step(gid, &logits, step_ns);
+        }
         Ok(())
+    }
+
+    /// One lockstep beam-search expansion for group `gid` (DESIGN.md
+    /// §16).  All live beams sit at the same cache position (they
+    /// forked at the same prefill completion and advance together), so
+    /// their logits rows come from the same batched decode step that
+    /// just ran.  Expand each live beam by its top-`width`
+    /// continuations, keep the `width` globally best by cumulative
+    /// log-probability, and re-point the lanes: a beam whose best
+    /// continuation survives keeps its lane; a pruned beam's lane is
+    /// re-forked from a surviving beam's block table (`beam_prunes`,
+    /// with its freed divergent tail blocks going back to the free
+    /// list, revivable).  An EOS continuation finishes its beam into
+    /// the group, shrinking the width for later steps.
+    fn beam_step(&mut self, gid: u64, logits: &[f32], step_ns: u64) {
+        let vsize = self.backend.vocab();
+        // Live lanes of this group, in lane order — deterministic.
+        let members: Vec<usize> = self
+            .scratch_active
+            .iter()
+            .copied()
+            .filter(|&s| match &self.lanes[s] {
+                Lane::Decoding(seq) => seq.group == Some(gid),
+                _ => false,
+            })
+            .collect();
+        let width = members.len();
+        if width == 0 {
+            return;
+        }
+        // Expansion set: per-beam top-`width` continuations, globally
+        // re-ranked by cumulative score (ties: source lane, then token
+        // id — fully deterministic).
+        let mut cand: Vec<(f64, usize, u32)> = Vec::new();
+        for &s in &members {
+            let Lane::Decoding(seq) = &self.lanes[s] else {
+                unreachable!();
+            };
+            let row = &logits[s * vsize..(s + 1) * vsize];
+            for (tok, lp) in top_tokens(row, width) {
+                cand.push((seq.score + lp, s, tok));
+            }
+        }
+        cand.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+        });
+        cand.truncate(width);
+        // Assignment: each source's first winner continues in its own
+        // lane; extra winners take over lanes whose beam got pruned.
+        let mut seen_src: Vec<usize> = Vec::new();
+        let mut inplace: Vec<(usize, u32, f64)> = Vec::new();
+        let mut refork: Vec<(usize, u32, f64)> = Vec::new();
+        for &(score, src, tok) in &cand {
+            if seen_src.contains(&src) {
+                refork.push((src, tok, score));
+            } else {
+                seen_src.push(src);
+                inplace.push((src, tok, score));
+            }
+        }
+        let mut pruned: Vec<usize> = members
+            .iter()
+            .copied()
+            .filter(|s| !seen_src.contains(s))
+            .collect();
+        // Snapshot re-fork sources *before* the in-place pushes mutate
+        // them: a re-forked beam branches from its source's pre-step
+        // history plus its own divergent token.
+        let snaps: Vec<(Vec<u32>, Vec<u32>)> = refork
+            .iter()
+            .map(|&(src, _, _)| {
+                let Lane::Decoding(seq) = &self.lanes[src] else {
+                    unreachable!();
+                };
+                let blocks = self
+                    .paged
+                    .as_ref()
+                    .map(|p| p.tables[src].blocks().to_vec())
+                    .unwrap_or_default();
+                (seq.generated.clone(), blocks)
+            })
+            .collect();
+        let now = now_ns();
+        let mut touched: Vec<usize> = Vec::new();
+        for &(s, tok, score) in &inplace {
+            let Lane::Decoding(seq) = &mut self.lanes[s] else {
+                unreachable!();
+            };
+            seq.generated.push(tok);
+            seq.last_token = tok;
+            seq.score = score;
+            self.metrics.itl_ms.record(ns_to_ms(
+                now.saturating_sub(seq.last_token_at),
+            ));
+            seq.last_token_at = now;
+            self.metrics.tokens_generated += 1;
+            self.recorder.emit(
+                self.tick_idx,
+                gid,
+                Some(s),
+                step_ns,
+                TraceEvent::Decoded,
+            );
+            touched.push(s);
+        }
+        for (i, &(_, tok, score)) in refork.iter().enumerate() {
+            let Some(d) = pruned.pop() else {
+                // |refork| == |pruned| by construction; defensive.
+                break;
+            };
+            self.metrics.beam_prunes += 1;
+            self.recorder.emit(
+                self.tick_idx,
+                gid,
+                Some(d),
+                0,
+                TraceEvent::BeamPruned,
+            );
+            let (gen, blocks) = &snaps[i];
+            if let Some(p) = &mut self.paged {
+                // Drop the dead beam's references (its divergent tail
+                // goes back to the free list, revivable) and retain the
+                // survivor's table wholesale — positions are equal by
+                // lockstep, so no set_pos is needed.
+                for id in p.tables[d].take_blocks() {
+                    p.alloc.free(id);
+                }
+                for &b in blocks {
+                    p.alloc.retain(b);
+                    p.tables[d].push(b);
+                }
+            }
+            let Lane::Decoding(seq) = &mut self.lanes[d] else {
+                unreachable!();
+            };
+            let mut g = gen.clone();
+            g.push(tok);
+            seq.generated = g;
+            seq.last_token = tok;
+            seq.score = score;
+            self.metrics.itl_ms.record(ns_to_ms(
+                now.saturating_sub(seq.last_token_at),
+            ));
+            seq.last_token_at = now;
+            self.metrics.tokens_generated += 1;
+            self.recorder.emit(
+                self.tick_idx,
+                gid,
+                Some(d),
+                step_ns,
+                TraceEvent::Decoded,
+            );
+            touched.push(d);
+        }
+        // Leftover pruned lanes happen only when the expansion set was
+        // smaller than the width (vocabulary < width): those beams die
+        // without a candidate.
+        for d in pruned {
+            self.metrics.beam_prunes += 1;
+            self.recorder.emit(
+                self.tick_idx,
+                gid,
+                Some(d),
+                0,
+                TraceEvent::BeamPruned,
+            );
+            self.lanes[d] = Lane::Idle;
+            self.release_slot(d);
+            if let Some(g) = self.groups.get_mut(&gid) {
+                g.live -= 1;
+            }
+        }
+        for s in touched {
+            if self.lanes[s].is_decoding() {
+                self.maybe_finish(s);
+            }
+        }
+        self.finish_group_if_done(gid);
     }
 
     /// Grow lane `s`'s block table to cover the speculative write range
@@ -2143,13 +2749,21 @@ impl<B: DecodeBackend> Engine<B> {
         }
     }
 
-    /// Complete a running sequence: release its lane + blocks and send
-    /// the response.
+    /// Complete a running sequence: persist its KV tail when it closes
+    /// a session turn (otherwise release lane + blocks), then either
+    /// send the response (plain path) or bank the candidate into its
+    /// fork group, answering once the last candidate lands.
     fn finish(&mut self, slot: usize, reason: FinishReason) {
         let Lane::Decoding(seq) = self.lanes[slot].take() else {
             unreachable!("finish of a non-decoding lane");
         };
-        self.release_slot(slot);
+        if self.persist_session(slot, &seq, reason) {
+            // Block references moved into the session store; only the
+            // lane itself is returned.
+            self.slots.free(slot);
+        } else {
+            self.release_slot(slot);
+        }
         self.recorder.emit(
             self.tick_idx,
             seq.request.id,
@@ -2157,9 +2771,36 @@ impl<B: DecodeBackend> Engine<B> {
             0,
             TraceEvent::Finished { reason },
         );
+        // Each candidate of a forked request counts as a completion
+        // (it occupied a lane like any sequence); latency histograms
+        // record once per *request*, at group completion.
+        self.metrics.completed += 1;
         let total_ms =
             ns_to_ms(now_ns().saturating_sub(seq.submitted));
-        self.metrics.completed += 1;
+        if let Some(gid) = seq.group {
+            let ttft = seq.ttft_ms;
+            let swapped = seq.swapped_ms;
+            if let Some(g) = self.groups.get_mut(&gid) {
+                g.done.push((
+                    seq.cand,
+                    Candidate {
+                        tokens: seq.generated,
+                        finish: reason,
+                        score: seq.score,
+                    },
+                ));
+                g.ttft_ms = match (g.ttft_ms, ttft) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+                if swapped > g.swapped_ms {
+                    g.swapped_ms = swapped;
+                }
+                g.live -= 1;
+            }
+            self.finish_group_if_done(gid);
+            return;
+        }
         self.metrics.ttft_ms.record(seq.ttft_ms.unwrap_or(total_ms));
         self.metrics.total_ms.record(total_ms);
         let _ = seq.reply.send(Response {
@@ -2170,7 +2811,144 @@ impl<B: DecodeBackend> Engine<B> {
             ttft_ms: seq.ttft_ms.unwrap_or(total_ms),
             total_ms,
             swapped_ms: seq.swapped_ms,
+            candidates: Vec::new(),
         });
+    }
+
+    /// Send the assembled response once every candidate of a fork group
+    /// has finished: candidates rank by cumulative log-probability
+    /// (ties toward the lower candidate index, keeping greedy fanouts
+    /// deterministic), and the best one doubles as the response's
+    /// primary `tokens` / `finish`.
+    fn finish_group_if_done(&mut self, gid: u64) {
+        let done = self
+            .groups
+            .get(&gid)
+            .map(|g| g.live == 0)
+            .unwrap_or(false);
+        if !done {
+            return;
+        }
+        let mut g = self.groups.remove(&gid).unwrap();
+        g.done.sort_by(|a, b| {
+            b.1.score
+                .partial_cmp(&a.1.score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.0.cmp(&b.0))
+        });
+        let candidates: Vec<Candidate> =
+            g.done.into_iter().map(|(_, c)| c).collect();
+        let Some(best) = candidates.first().cloned() else {
+            // Every candidate died without output (vocabulary narrower
+            // than the beam width on a one-token run); defensive.
+            return;
+        };
+        let total_ms =
+            ns_to_ms(now_ns().saturating_sub(g.submitted));
+        let ttft = g.ttft_ms.unwrap_or(total_ms);
+        self.metrics.ttft_ms.record(ttft);
+        self.metrics.total_ms.record(total_ms);
+        let _ = g.reply.send(Response {
+            id: gid,
+            prompt_len: g.prompt_len,
+            tokens: best.tokens,
+            finish: best.finish,
+            ttft_ms: ttft,
+            total_ms,
+            swapped_ms: g.swapped_ms,
+            candidates,
+        });
+    }
+
+    /// Park a finished conversation turn's KV tail (DESIGN.md §16):
+    /// register the full token chain (prompt + generated, minus the
+    /// never-written last token) in the prefix index and move the
+    /// lane's block references into the session store, so the next
+    /// turn's prompt — this conversation plus a suffix — re-admits
+    /// with only the suffix to prefill.  Returns true when the blocks
+    /// were moved (the caller must then skip freeing them).  Grouped
+    /// candidates, speculative lanes, and pressure finishes
+    /// (`CacheFull`) never persist.
+    fn persist_session(
+        &mut self,
+        slot: usize,
+        seq: &ActiveSeq,
+        reason: FinishReason,
+    ) -> bool {
+        let Some(sid) = seq.request.session else { return false };
+        if seq.group.is_some()
+            || self.cfg.spec.is_some()
+            || !matches!(
+                reason,
+                FinishReason::Eos | FinishReason::Length
+            )
+        {
+            return false;
+        }
+        let prompt = self.canonical_prompt(&seq.request.prompt);
+        let Some(p) = &mut self.paged else { return false };
+        if p.session_budget == 0 || !p.sharing {
+            return false;
+        }
+        let m = seq.generated.len();
+        // Valid resident rows: the prompt plus every generated token
+        // except the last — sampled, but never fed back and written.
+        let chain: Vec<u32> = prompt
+            .iter()
+            .copied()
+            .chain(
+                seq.generated[..m.saturating_sub(1)].iter().copied(),
+            )
+            .collect();
+        let rows = chain.len();
+        let bs = p.alloc.block_size();
+        let full = rows / bs;
+        let blocks = p.tables[slot].blocks();
+        if blocks.len() < full + usize::from(rows % bs != 0) {
+            return false; // defensive: table shorter than the chain
+        }
+        // Index the chain's full blocks.  Prompt blocks are already
+        // registered (complete_prefill); entries are content-addressed
+        // and first-writer-wins, so re-insertion is a no-op and the
+        // new entries cover the generated tail.
+        let mut parent = PREFIX_SEED;
+        for i in 0..full {
+            let span = &chain[i * bs..(i + 1) * bs];
+            p.index.insert(parent, span, blocks[i]);
+            parent = chain_hash(parent, span);
+        }
+        if rows % bs != 0 {
+            p.index.insert(parent, &chain[full * bs..rows],
+                           blocks[full]);
+        }
+        let count = p.tables[slot].len();
+        let taken = p.tables[slot].take_blocks();
+        // One parked turn per conversation: a newer turn supersedes
+        // the older entry (whose blocks mostly overlap — the retains
+        // differ only in the new tail).
+        if let Some(i) = p.sessions.iter().position(|e| e.id == sid) {
+            let old = p.sessions.remove(i);
+            for b in old.blocks {
+                p.alloc.free(b);
+            }
+        }
+        p.sessions.push(SessionEntry { id: sid, blocks: taken, rows });
+        let mut evictions = 0u64;
+        while p.session_blocks_held() > p.session_budget {
+            if !p.evict_oldest_session() {
+                break;
+            }
+            evictions += 1;
+        }
+        self.metrics.session_evictions += evictions;
+        self.recorder.emit(
+            self.tick_idx,
+            seq.request.id,
+            Some(slot),
+            0,
+            TraceEvent::SessionPersisted { blocks: count },
+        );
+        true
     }
 }
 
@@ -2204,6 +2982,37 @@ pub fn sample(logits: &[f32], strategy: Sampling, rng: &mut Rng) -> u32 {
     }
 }
 
+/// Natural-log probability of `tok` under the row's softmax — the
+/// candidate-ranking currency of fanout and beam search (DESIGN.md
+/// §16).
+fn token_logprob(row: &[f32], tok: u32) -> f64 {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+    let lse: f64 =
+        row.iter().map(|&x| f64::from(x - mx).exp()).sum();
+    f64::from(row[tok as usize] - mx) - lse.ln()
+}
+
+/// The `k` highest-logit tokens of a row with their log-probabilities,
+/// best first; ties break toward the lower token id, so beam expansion
+/// is fully deterministic.
+fn top_tokens(row: &[f32], k: usize) -> Vec<(u32, f64)> {
+    let k = k.max(1).min(row.len());
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| {
+        row[b]
+            .partial_cmp(&row[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+    let lse: f64 =
+        row.iter().map(|&x| f64::from(x - mx).exp()).sum();
+    idx.into_iter()
+        .map(|i| (i as u32, f64::from(row[i] - mx) - lse.ln()))
+        .collect()
+}
+
 fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
     for (i, x) in xs.iter().enumerate() {
@@ -2217,6 +3026,42 @@ fn argmax(xs: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn top_tokens_orders_and_scores() {
+        let row = vec![0.1, 2.0, -1.0, 1.9];
+        let top = top_tokens(&row, 3);
+        assert_eq!(
+            top.iter().map(|t| t.0).collect::<Vec<_>>(),
+            vec![1, 3, 0]
+        );
+        // Scores are genuine log-probabilities: descending, and the
+        // full distribution sums to 1.
+        assert!(top[0].1 > top[1].1 && top[1].1 > top[2].1);
+        let total: f64 = top_tokens(&row, row.len())
+            .iter()
+            .map(|t| t.1.exp())
+            .sum();
+        assert!((total - 1.0).abs() < 1e-9, "{total}");
+    }
+
+    #[test]
+    fn token_logprob_matches_top_tokens() {
+        let row = vec![-0.5, 3.0, 0.25];
+        for (tok, lp) in top_tokens(&row, row.len()) {
+            assert!((token_logprob(&row, tok) - lp).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn top_tokens_breaks_ties_by_token_id() {
+        let row = vec![1.0, 2.0, 2.0, 1.0];
+        let top = top_tokens(&row, 4);
+        assert_eq!(
+            top.iter().map(|t| t.0).collect::<Vec<_>>(),
+            vec![1, 2, 0, 3]
+        );
+    }
 
     #[test]
     fn greedy_sampling_is_argmax() {

@@ -12,8 +12,10 @@
 //!   GET  /trace/chrome       -> Chrome trace_event JSON for
 //!                               about:tracing / Perfetto
 //!   POST /generate           -> {"prompt": "...", "max_new_tokens": n,
-//!                                "top_k": k?}  ->
-//!                               {"output": "...", "tokens": n, ...}
+//!                                "top_k": k?, "n": k?, "best_of": k?,
+//!                                "beams": k?, "session": id?}  ->
+//!                               {"output": "...", "tokens": n,
+//!                                "candidates": [...], ...}
 //!
 //! One OS thread per connection (std::net); the engine itself is the
 //! single consumer of the request channel, so concurrency is bounded by
@@ -204,6 +206,17 @@ fn route(
                      json::num(m.swap_blocks_in_use as f64)),
                     ("swap_blocks_total",
                      json::num(m.swap_blocks_total as f64)),
+                    ("forks", json::num(m.forks as f64)),
+                    ("fork_denied", json::num(m.fork_denied as f64)),
+                    ("beam_prunes", json::num(m.beam_prunes as f64)),
+                    ("session_hits",
+                     json::num(m.session_hits as f64)),
+                    ("session_evictions",
+                     json::num(m.session_evictions as f64)),
+                    ("sessions_live",
+                     json::num(m.sessions_live as f64)),
+                    ("session_blocks_held",
+                     json::num(m.session_blocks_held as f64)),
                     ("cow_copies", json::num(m.cow_copies as f64)),
                     ("prefix_hit_blocks",
                      json::num(m.prefix_hit_blocks as f64)),
@@ -347,6 +360,11 @@ fn prom_text(m: &EngineMetrics) -> String {
         ("swap_outs", m.swap_outs as f64),
         ("swap_ins", m.swap_ins as f64),
         ("swap_fallbacks", m.swap_fallbacks as f64),
+        ("forks", m.forks as f64),
+        ("fork_denied", m.fork_denied as f64),
+        ("beam_prunes", m.beam_prunes as f64),
+        ("session_hits", m.session_hits as f64),
+        ("session_evictions", m.session_evictions as f64),
         ("cow_copies", m.cow_copies as f64),
         ("prefix_hit_blocks", m.prefix_hit_blocks as f64),
         ("prefix_bytes_saved", m.prefix_bytes_saved as f64),
@@ -371,6 +389,8 @@ fn prom_text(m: &EngineMetrics) -> String {
         ("packed_tokens_mean", m.packed_tokens.mean()),
         ("packed_tokens_max", m.packed_tokens.max()),
         ("packed_prefill_tokens_mean", m.packed_prefill_tokens.mean()),
+        ("sessions_live", m.sessions_live as f64),
+        ("session_blocks_held", m.session_blocks_held as f64),
         ("swapped_seqs", m.swapped_seqs as f64),
         ("swap_blocks_in_use", m.swap_blocks_in_use as f64),
         ("swap_blocks_total", m.swap_blocks_total as f64),
@@ -466,6 +486,69 @@ fn generate(
             }
         }
     };
+    // Multi-candidate knobs (DESIGN.md §16): `n` parallel samples,
+    // `best_of` over-generation (fanout = max(n, best_of); only the top
+    // `n` candidates are returned), `beams` for beam search.  A
+    // non-integer value is a client error, not a silent 1.
+    let n = match parsed.get("n") {
+        None => 1usize,
+        Some(v) => match v.as_usize() {
+            Some(k) if k > 0 => k,
+            _ => {
+                return http_response(
+                    400,
+                    "text/plain",
+                    "n must be a positive integer",
+                )
+            }
+        },
+    };
+    let best_of = match parsed.get("best_of") {
+        None => n,
+        Some(v) => match v.as_usize() {
+            Some(k) if k >= n => k,
+            Some(_) => {
+                return http_response(
+                    400,
+                    "text/plain",
+                    "best_of must be >= n",
+                )
+            }
+            None => {
+                return http_response(
+                    400,
+                    "text/plain",
+                    "best_of must be a positive integer",
+                )
+            }
+        },
+    };
+    let beams = match parsed.get("beams") {
+        None => 0usize,
+        Some(v) => match v.as_usize() {
+            Some(k) => k,
+            None => {
+                return http_response(
+                    400,
+                    "text/plain",
+                    "beams must be a non-negative integer",
+                )
+            }
+        },
+    };
+    let session = match parsed.get("session") {
+        None => None,
+        Some(v) => match v.as_usize() {
+            Some(s) => Some(s as u64),
+            None => {
+                return http_response(
+                    400,
+                    "text/plain",
+                    "session must be a non-negative integer",
+                )
+            }
+        },
+    };
     let id = next_id.fetch_add(1, Ordering::Relaxed);
     match engine.generate(Request {
         id,
@@ -473,21 +556,45 @@ fn generate(
         max_new_tokens: max_new.min(256),
         sampling,
         priority,
+        n: best_of,
+        beams,
+        session,
     }) {
-        Ok(resp) => http_response(
-            200,
-            "application/json",
-            &json::obj(vec![
-                ("id", json::num(resp.id as f64)),
-                ("output", json::s(&tokenizer.decode_clean(&resp.tokens))),
-                ("tokens", json::num(resp.tokens.len() as f64)),
-                ("finish", json::s(&format!("{:?}", resp.finish))),
-                ("ttft_ms", json::num(resp.ttft_ms)),
-                ("total_ms", json::num(resp.total_ms)),
-                ("swapped_ms", json::num(resp.swapped_ms)),
-            ])
-            .to_string(),
-        ),
+        Ok(resp) => {
+            // Truncate over-generated candidates to the requested `n`
+            // (they are already sorted best-first by the engine).
+            let cands: Vec<Value> = resp
+                .candidates
+                .iter()
+                .take(n.max(beams))
+                .map(|c| {
+                    json::obj(vec![
+                        ("output",
+                         json::s(&tokenizer.decode_clean(&c.tokens))),
+                        ("tokens", json::num(c.tokens.len() as f64)),
+                        ("finish",
+                         json::s(&format!("{:?}", c.finish))),
+                        ("score", json::num(c.score)),
+                    ])
+                })
+                .collect();
+            http_response(
+                200,
+                "application/json",
+                &json::obj(vec![
+                    ("id", json::num(resp.id as f64)),
+                    ("output",
+                     json::s(&tokenizer.decode_clean(&resp.tokens))),
+                    ("tokens", json::num(resp.tokens.len() as f64)),
+                    ("finish", json::s(&format!("{:?}", resp.finish))),
+                    ("candidates", json::arr(cands)),
+                    ("ttft_ms", json::num(resp.ttft_ms)),
+                    ("total_ms", json::num(resp.total_ms)),
+                    ("swapped_ms", json::num(resp.swapped_ms)),
+                ])
+                .to_string(),
+            )
+        }
         Err(e) => http_response(500, "text/plain", &format!("{e}")),
     }
 }

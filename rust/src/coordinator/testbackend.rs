@@ -56,6 +56,11 @@ pub enum FakeCacheMode {
     Device,
 }
 
+/// Deterministic in-process `DecodeBackend` for tests and benches:
+/// logits are a fixed function of (token, position), so any two
+/// engines fed the same requests produce bit-identical streams.
+/// Models the honest costs (chunked prefill reads earlier rows;
+/// ~10% of draft argmaxes are skewed for speculation acceptance).
 pub struct FakeBackend {
     vocab: usize,
     layers: usize,
@@ -75,6 +80,8 @@ pub struct FakeBackend {
 }
 
 impl FakeBackend {
+    /// Flat-cache backend (see [`FakeBackend::new_paged`] for the
+    /// block-pool variant).
     pub fn new(
         mode: FakeCacheMode,
         vocab: usize,
@@ -121,6 +128,7 @@ impl FakeBackend {
         be
     }
 
+    /// Which cache layout this instance models.
     pub fn mode(&self) -> FakeCacheMode {
         self.mode
     }

@@ -4,8 +4,9 @@
 //!
 //! The recorder answers *what happened to request N at tick T*: every
 //! scheduling decision the engine takes (admission, chunked prefill,
-//! decode, speculative rounds, preemption, swap, COW forks, expiry,
-//! completion) lands here as a [`TraceEvent`] stamped with the request
+//! decode, speculative rounds, preemption, swap, COW forks, candidate
+//! forks, beam prunes, session persistence, expiry, completion) lands
+//! here as a [`TraceEvent`] stamped with the request
 //! id, the decode lane, the logical tick index, and a monotonic-ns
 //! timestamp.  Because the tick index is logical, event *sequences*
 //! double as a correctness instrument: rust/tests/trace_events.rs pins
@@ -65,6 +66,8 @@ pub struct Span<'a> {
 }
 
 impl<'a> Span<'a> {
+    /// Start timing; the elapsed nanoseconds are added to `target`
+    /// when the span drops.
     pub fn new(target: &'a mut u64) -> Span<'a> {
         Span { target, t0: now_ns() }
     }
@@ -110,6 +113,16 @@ pub enum TraceEvent {
     Evicted,
     /// Dropped from the admission queue past its deadline.
     Expired,
+    /// Prefill completed and `siblings` candidate lanes forked off the
+    /// primary, sharing its blocks read-only (DESIGN.md §16).
+    Forked { siblings: usize },
+    /// A beam-search hypothesis was pruned; its lane was re-forked
+    /// from a survivor (or released outright when no continuation was
+    /// left for it).
+    BeamPruned,
+    /// A finished session turn parked `blocks` block references in the
+    /// session store for near-zero-prefill re-admission.
+    SessionPersisted { blocks: usize },
     /// Terminal outcome answered to the client.
     Finished { reason: FinishReason },
 }
@@ -141,6 +154,9 @@ impl TraceEvent {
             TraceEvent::CowFork => "cow_fork",
             TraceEvent::Evicted => "evicted",
             TraceEvent::Expired => "expired",
+            TraceEvent::Forked { .. } => "forked",
+            TraceEvent::BeamPruned => "beam_pruned",
+            TraceEvent::SessionPersisted { .. } => "session_persisted",
             TraceEvent::Finished { .. } => "finished",
         }
     }
@@ -161,6 +177,12 @@ impl TraceEvent {
                 ("accepted", json::num(*accepted as f64)),
                 ("rewound", json::num(*rewound as f64)),
             ],
+            TraceEvent::Forked { siblings } => {
+                vec![("siblings", json::num(*siblings as f64))]
+            }
+            TraceEvent::SessionPersisted { blocks } => {
+                vec![("blocks", json::num(*blocks as f64))]
+            }
             TraceEvent::Finished { reason } => {
                 vec![("reason", json::s(reason_str(*reason)))]
             }
@@ -170,7 +192,8 @@ impl TraceEvent {
             | TraceEvent::SwappedIn
             | TraceEvent::CowFork
             | TraceEvent::Evicted
-            | TraceEvent::Expired => Vec::new(),
+            | TraceEvent::Expired
+            | TraceEvent::BeamPruned => Vec::new(),
         }
     }
 }
@@ -260,6 +283,8 @@ impl Recorder {
         });
     }
 
+    /// Append one record, evicting the oldest past capacity
+    /// (`dropped` counts evictions).
     pub fn push(&mut self, rec: TraceRecord) {
         if self.buf.len() == self.capacity {
             self.buf.pop_front();
@@ -269,14 +294,17 @@ impl Recorder {
         self.total += 1;
     }
 
+    /// Records currently buffered.
     pub fn len(&self) -> usize {
         self.buf.len()
     }
 
+    /// True when nothing is buffered.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
 
+    /// Ring capacity in records.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
@@ -444,6 +472,9 @@ mod tests {
             TraceEvent::CowFork,
             TraceEvent::Evicted,
             TraceEvent::Expired,
+            TraceEvent::Forked { siblings: 3 },
+            TraceEvent::BeamPruned,
+            TraceEvent::SessionPersisted { blocks: 4 },
             TraceEvent::Finished { reason: FinishReason::Eos },
         ];
         for e in events {

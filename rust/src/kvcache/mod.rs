@@ -20,13 +20,19 @@
 //! * `pos(slot) <= t_max` always; append past `t_max` is rejected,
 //! * freeing zeroes occupancy so the scheduler's accounting stays exact.
 
+/// Block-granular pool: refcounted allocator, block tables, prefix
+/// index, swap pool (DESIGN.md §10–§11).
 pub mod paged;
 
 use anyhow::Result;
 
+/// One decode lane's occupancy: free, or owned by a request with
+/// `pos` rows already written.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Slot {
+    /// Unoccupied and claimable.
     Free,
+    /// Owned by `request_id` with `pos` valid rows.
     Active { request_id: u64, pos: usize },
 }
 
@@ -34,6 +40,8 @@ pub enum Slot {
 // SlotMap: occupancy + positions, no tensor data
 // ---------------------------------------------------------------------------
 
+/// Lane occupancy and write positions — the bookkeeping layer every
+/// cache variant (flat, mirror, paged) shares; holds no tensor data.
 #[derive(Debug, Clone)]
 pub struct SlotMap {
     t_max: usize,
@@ -41,26 +49,33 @@ pub struct SlotMap {
 }
 
 impl SlotMap {
+    /// All-free map with `batch` lanes of `t_max` rows each.
     pub fn new(batch: usize, t_max: usize) -> Self {
         SlotMap { t_max, slots: vec![Slot::Free; batch] }
     }
 
+    /// Number of lanes.
     pub fn batch(&self) -> usize {
         self.slots.len()
     }
 
+    /// Row capacity per lane.
     pub fn t_max(&self) -> usize {
         self.t_max
     }
 
+    /// Raw per-lane occupancy.
     pub fn slots(&self) -> &[Slot] {
         &self.slots
     }
 
+    /// Lanes currently [`Slot::Free`].
     pub fn free_count(&self) -> usize {
         self.slots.iter().filter(|s| matches!(s, Slot::Free)).count()
     }
 
+    /// Active lane indices, freshly collected (see
+    /// [`Self::active_iter`] for the allocation-free form).
     pub fn active_slots(&self) -> Vec<usize> {
         self.active_iter().collect()
     }
@@ -82,10 +97,12 @@ impl SlotMap {
         out.extend(self.active_iter());
     }
 
+    /// True when at least one lane is occupied.
     pub fn any_active(&self) -> bool {
         self.slots.iter().any(|s| matches!(s, Slot::Active { .. }))
     }
 
+    /// Rows written in `slot` (0 for a free lane).
     pub fn pos(&self, slot: usize) -> usize {
         match self.slots[slot] {
             Slot::Active { pos, .. } => pos,
@@ -93,6 +110,7 @@ impl SlotMap {
         }
     }
 
+    /// Owner of `slot`, if occupied.
     pub fn request_id(&self, slot: usize) -> Option<u64> {
         match self.slots[slot] {
             Slot::Active { request_id, .. } => Some(request_id),
@@ -160,6 +178,8 @@ impl SlotMap {
 // HostKvMirror: host-side cache arrays (legacy serving path, eval, tests)
 // ---------------------------------------------------------------------------
 
+/// Host-side K/V arrays (legacy serving path, eval, tests) with
+/// right-padded prefill and per-row append writes.
 #[derive(Debug)]
 pub struct HostKvMirror {
     pub layers: usize,
@@ -171,6 +191,7 @@ pub struct HostKvMirror {
 }
 
 impl HostKvMirror {
+    /// Zeroed host K/V arrays of shape `(layers, batch, t_max, d)`.
     pub fn new(layers: usize, batch: usize, t_max: usize, d: usize) -> Self {
         let n = layers * batch * t_max * d;
         HostKvMirror {
@@ -188,10 +209,12 @@ impl HostKvMirror {
         ((layer * self.batch + slot) * self.t_max + t) * self.d
     }
 
+    /// The K array, row-major `(layers, batch, t_max, d)`.
     pub fn k_data(&self) -> &[f32] {
         &self.k
     }
 
+    /// The V array, same layout as [`Self::k_data`].
     pub fn v_data(&self) -> &[f32] {
         &self.v
     }
@@ -255,6 +278,8 @@ impl HostKvMirror {
 // KvCache: legacy façade (SlotMap + HostKvMirror, original API)
 // ---------------------------------------------------------------------------
 
+/// Legacy facade: [`SlotMap`] + [`HostKvMirror`] behind the original
+/// pre-paged API.
 #[derive(Debug)]
 pub struct KvCache {
     pub layers: usize,
@@ -266,6 +291,7 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// Fresh cache: all lanes free, mirrors zeroed.
     pub fn new(layers: usize, batch: usize, t_max: usize, d: usize) -> Self {
         KvCache {
             layers,
@@ -277,30 +303,37 @@ impl KvCache {
         }
     }
 
+    /// The host K mirror (see [`HostKvMirror::k_data`]).
     pub fn k_data(&self) -> &[f32] {
         self.mirror.k_data()
     }
 
+    /// The host V mirror.
     pub fn v_data(&self) -> &[f32] {
         self.mirror.v_data()
     }
 
+    /// Raw per-lane occupancy.
     pub fn slots(&self) -> &[Slot] {
         self.slots.slots()
     }
 
+    /// Lanes currently [`Slot::Free`].
     pub fn free_count(&self) -> usize {
         self.slots.free_count()
     }
 
+    /// Active lane indices.
     pub fn active_slots(&self) -> Vec<usize> {
         self.slots.active_slots()
     }
 
+    /// Rows written in `slot` (0 for a free lane).
     pub fn pos(&self, slot: usize) -> usize {
         self.slots.pos(slot)
     }
 
+    /// Owner of `slot`, if occupied.
     pub fn request_id(&self, slot: usize) -> Option<u64> {
         self.slots.request_id(slot)
     }

@@ -90,6 +90,7 @@ impl BlockAllocator {
         BlockAllocator { block_size, free, refcount, pos_in_free }
     }
 
+    /// Token rows per block.
     pub fn block_size(&self) -> usize {
         self.block_size
     }
@@ -104,10 +105,12 @@ impl BlockAllocator {
         self.refcount.len() - 1
     }
 
+    /// Blocks on the free list (refcount 0, claimable or revivable).
     pub fn free_count(&self) -> usize {
         self.free.len()
     }
 
+    /// Usable blocks with refcount >= 1.
     pub fn in_use(&self) -> usize {
         self.capacity() - self.free.len()
     }
@@ -131,6 +134,8 @@ impl BlockAllocator {
         self.capacity() * self.block_size
     }
 
+    /// Claim a free block (LIFO) at refcount 1, or `None` on a dry
+    /// pool.
     pub fn alloc(&mut self) -> Option<u32> {
         let id = self.free.pop()?;
         debug_assert_eq!(
@@ -231,22 +236,27 @@ pub struct BlockTable {
 }
 
 impl BlockTable {
+    /// Empty table (no rows mapped).
     pub fn new() -> Self {
         BlockTable { blocks: Vec::new() }
     }
 
+    /// Physical block ids in logical order.
     pub fn blocks(&self) -> &[u32] {
         &self.blocks
     }
 
+    /// Mapped block count.
     pub fn len(&self) -> usize {
         self.blocks.len()
     }
 
+    /// True when no blocks are mapped.
     pub fn is_empty(&self) -> bool {
         self.blocks.is_empty()
     }
 
+    /// Append the next logical block.
     pub fn push(&mut self, id: u32) {
         self.blocks.push(id);
     }
@@ -346,14 +356,17 @@ pub struct PrefixIndex {
 }
 
 impl PrefixIndex {
+    /// Empty index.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Registered spans.
     pub fn len(&self) -> usize {
         self.by_hash.len()
     }
 
+    /// True when nothing is registered.
     pub fn is_empty(&self) -> bool {
         self.by_hash.is_empty()
     }
@@ -422,10 +435,12 @@ impl SwapPool {
         SwapPool { max_blocks, in_use: 0 }
     }
 
+    /// Admission ceiling in blocks.
     pub fn max_blocks(&self) -> usize {
         self.max_blocks
     }
 
+    /// Blocks currently parked host-side.
     pub fn blocks_in_use(&self) -> usize {
         self.in_use
     }
@@ -468,6 +483,8 @@ pub struct PagedHostKv {
 }
 
 impl PagedHostKv {
+    /// Zeroed pool storage for `num_blocks` blocks of `block_size`
+    /// rows across `layers` layers.
     pub fn new(
         layers: usize,
         num_blocks: usize,
@@ -485,18 +502,22 @@ impl PagedHostKv {
         }
     }
 
+    /// Token rows per block.
     pub fn block_size(&self) -> usize {
         self.block_size
     }
 
+    /// Total pool size including the sentinel block 0.
     pub fn num_blocks(&self) -> usize {
         self.num_blocks
     }
 
+    /// The K array, row-major `(layers, num_blocks, block_size, d)`.
     pub fn k_data(&self) -> &[f32] {
         &self.k
     }
 
+    /// The V array, same layout as [`Self::k_data`].
     pub fn v_data(&self) -> &[f32] {
         &self.v
     }

@@ -11,6 +11,7 @@
 //! lqer bench kv                       paged-KV engine bench (no PJRT)
 //! lqer bench kvshared                 prefix-sharing / swap bench (no PJRT)
 //! lqer bench chunked                  chunked-prefill ITL bench (no PJRT)
+//! lqer bench sessions                 multi-turn session bench (no PJRT)
 //! lqer eval-ppl  --model --method     WikiText-style perplexity (Tables 2/3/6)
 //! lqer eval-tasks --model --method    downstream accuracy (Table 4)
 //! lqer judge     --a --b              pairwise win rate (Table 5)
@@ -167,11 +168,17 @@ fn spec_arg(a: &Args) -> Result<Option<usize>> {
 fn engine_cfg(m: &Manifest, model: &str, method: &str, batch: usize,
               tokens_per_step: usize, host_cache: bool, paged: bool,
               prefix_share: bool, swap_blocks: usize,
-              spec_gamma: Option<usize>, trace_capacity: usize)
+              session_blocks: usize, spec_gamma: Option<usize>,
+              trace_capacity: usize)
               -> Result<EngineConfig> {
     anyhow::ensure!(
         paged || (!prefix_share && swap_blocks == 0),
         "--prefix-share / --swap-blocks require --paged"
+    );
+    anyhow::ensure!(
+        session_blocks == 0 || prefix_share,
+        "--session-blocks needs --prefix-share (sessions re-admit \
+         through the prefix index, DESIGN.md §16)"
     );
     // --gamma 0 defers to the manifest's serve.spec section (compiled
     // next to the decode graphs), falling back to 4 for legacy
@@ -223,6 +230,7 @@ fn engine_cfg(m: &Manifest, model: &str, method: &str, batch: usize,
             num_blocks: geometry.num_blocks(batch),
             prefix_sharing: prefix_share,
             swap_blocks,
+            session_blocks,
         })
     } else {
         None
@@ -268,6 +276,11 @@ fn serve(argv: &[String]) -> Result<()> {
         .opt("swap-blocks", "0",
              "host swap pool size in blocks (0 = re-prefill on \
               preemption; needs --paged --host-cache)")
+        .opt("session-blocks", "0",
+             "multi-turn session budget in blocks (DESIGN.md \u{a7}16): \
+              finished conversations keep their KV tail registered for \
+              near-zero-prefill follow-up turns (0 = off; needs \
+              --prefix-share)")
         .flag("speculate",
               "self-speculative decode (DESIGN.md §13): the \
                lowrank-free backbone drafts, the corrected model \
@@ -291,7 +304,8 @@ fn serve(argv: &[String]) -> Result<()> {
                    tokens_per_step_arg(&a, &m, batch)?,
                    a.get_flag("host-cache"),
                    a.get_flag("paged"), a.get_flag("prefix-share"),
-                   a.get_usize("swap-blocks")?, spec_arg(&a)?,
+                   a.get_usize("swap-blocks")?,
+                   a.get_usize("session-blocks")?, spec_arg(&a)?,
                    a.get_usize("trace-capacity")?)?,
     )?;
     if !a.get("trace-file").is_empty() {
@@ -331,6 +345,11 @@ fn generate(argv: &[String]) -> Result<()> {
         .opt("swap-blocks", "0",
              "host swap pool size in blocks (0 = re-prefill on \
               preemption; needs --paged --host-cache)")
+        .opt("session-blocks", "0",
+             "multi-turn session budget in blocks (DESIGN.md \u{a7}16): \
+              finished conversations keep their KV tail registered for \
+              near-zero-prefill follow-up turns (0 = off; needs \
+              --prefix-share)")
         .flag("speculate",
               "self-speculative decode (DESIGN.md §13): the \
                lowrank-free backbone drafts, the corrected model \
@@ -338,6 +357,20 @@ fn generate(argv: &[String]) -> Result<()> {
         .opt("gamma", "0",
              "max draft tokens per lane per speculation round \
               (0 = manifest serve.spec gamma; needs --speculate)")
+        .opt("n", "1",
+             "parallel samples per prompt (DESIGN.md \u{a7}16): fork n \
+              decode tails COW-sharing the prompt blocks (needs \
+              --paged --prefix-share --host-cache)")
+        .opt("best-of", "0",
+             "over-generate max(n, best_of) candidates, return the \
+              best n by cumulative logprob (0 = n)")
+        .opt("beams", "0",
+             "beam-search width (DESIGN.md \u{a7}16; 0/1 = off; \
+              mutually exclusive with --n; needs --paged \
+              --prefix-share --host-cache)")
+        .opt("session", "0",
+             "session id for multi-turn KV reuse (0 = none; needs \
+              --session-blocks on the engine)")
         .opt("priority", "normal", "eviction class: low|normal|high")
         .opt("trace-file", "",
              "write the flight-recorder Chrome trace here on exit \
@@ -355,7 +388,8 @@ fn generate(argv: &[String]) -> Result<()> {
                    tokens_per_step_arg(&a, &m, batch)?,
                    a.get_flag("host-cache"),
                    a.get_flag("paged"), a.get_flag("prefix-share"),
-                   a.get_usize("swap-blocks")?, spec_arg(&a)?,
+                   a.get_usize("swap-blocks")?,
+                   a.get_usize("session-blocks")?, spec_arg(&a)?,
                    a.get_usize("trace-capacity")?)?,
     )?;
     let sampling = match a.get_usize("topk")? {
@@ -365,12 +399,28 @@ fn generate(argv: &[String]) -> Result<()> {
     let priority = Priority::parse(&a.get("priority")).ok_or_else(|| {
         anyhow::anyhow!("--priority must be low|normal|high")
     })?;
+    let n = a.get_usize("n")?.max(1);
+    let best_of = match a.get_usize("best-of")? {
+        0 => n,
+        b => {
+            anyhow::ensure!(b >= n, "--best-of must be >= --n");
+            b
+        }
+    };
+    let session = match a.get_usize("session")? {
+        0 => None,
+        s => Some(s as u64),
+    };
+    let beams = a.get_usize("beams")?;
     let resp = engine.generate(Request {
         id: 1,
         prompt: tok.encode_prompt(&a.get("prompt")),
         max_new_tokens: a.get_usize("max-new")?,
         sampling,
         priority,
+        n: best_of,
+        beams,
+        session,
     })?;
     println!("prompt : {}", a.get("prompt"));
     println!("output : {}", tok.decode_clean(&resp.tokens));
@@ -378,6 +428,15 @@ fn generate(argv: &[String]) -> Result<()> {
         "finish={:?} ttft={:.0}ms total={:.0}ms tokens={}",
         resp.finish, resp.ttft_ms, resp.total_ms, resp.tokens.len()
     );
+    // Over-generated (`best_of > n`) candidates are engine-sorted
+    // best-first; show only what the user asked for.
+    let show = if beams > 1 { beams } else { n };
+    for (i, c) in resp.candidates.iter().take(show).enumerate() {
+        println!(
+            "cand {i} : {}  (score {:.3}, finish {:?})",
+            tok.decode_clean(&c.tokens), c.score, c.finish
+        );
+    }
     let trace_file = a.get("trace-file");
     if !trace_file.is_empty() {
         let records = engine.trace()?;
@@ -415,6 +474,11 @@ fn serve_bench(argv: &[String]) -> Result<()> {
         .opt("swap-blocks", "0",
              "host swap pool size in blocks (0 = re-prefill on \
               preemption; needs --paged --host-cache)")
+        .opt("session-blocks", "0",
+             "multi-turn session budget in blocks (DESIGN.md \u{a7}16): \
+              finished conversations keep their KV tail registered for \
+              near-zero-prefill follow-up turns (0 = off; needs \
+              --prefix-share)")
         .flag("speculate",
               "self-speculative decode (DESIGN.md §13): the \
                lowrank-free backbone drafts, the corrected model \
@@ -422,6 +486,10 @@ fn serve_bench(argv: &[String]) -> Result<()> {
         .opt("gamma", "0",
              "max draft tokens per lane per speculation round \
               (0 = manifest serve.spec gamma; needs --speculate)")
+        .opt("shape", "oneshot",
+             "traffic shape (DESIGN.md \u{a7}16): oneshot | chat \
+              (multi-turn sessions) | agent (one long session) | \
+              batch (n=4 parallel sampling)")
         .opt("trace-file", "",
              "write the flight-recorder Chrome trace here on exit \
               (DESIGN.md \u{a7}15; empty = off)")
@@ -437,10 +505,12 @@ fn serve_bench(argv: &[String]) -> Result<()> {
                         tokens_per_step_arg(&a, &m, batch)?,
                         a.get_flag("host-cache"),
                         a.get_flag("paged"), a.get_flag("prefix-share"),
-                        a.get_usize("swap-blocks")?, spec_arg(&a)?,
+                        a.get_usize("swap-blocks")?,
+                        a.get_usize("session-blocks")?, spec_arg(&a)?,
                         a.get_usize("trace-capacity")?)?,
             a.get_usize("requests")?,
             a.get_usize("max-new")?,
+            &a.get("shape"),
         )?;
     println!("{}", stats.report());
     let trace_file = a.get("trace-file");
@@ -558,7 +628,8 @@ fn trace_cmd(argv: &[String]) -> Result<()> {
 /// artifacts or PJRT (they drive the deterministic FakeBackend).
 fn bench(argv: &[String]) -> Result<()> {
     let a = Args::new("bench", "synthetic engine benchmarks")
-        .pos("suite", "bench suite: kv | kvshared | chunked | spec")
+        .pos("suite",
+             "bench suite: kv | kvshared | chunked | spec | sessions")
         .opt("batch", "4", "decode lanes")
         .opt("requests", "16", "concurrent requests (4x lanes default)")
         .opt("max-new", "12", "max tokens per request")
@@ -572,9 +643,10 @@ fn bench(argv: &[String]) -> Result<()> {
         Some("kvshared") => bench_kvshared(&a),
         Some("chunked") => bench_chunked(&a),
         Some("spec") => bench_spec(&a),
+        Some("sessions") => bench_sessions(&a),
         other => anyhow::bail!(
             "unknown bench suite {:?} (expected: kv, kvshared, chunked, \
-             spec)",
+             spec, sessions)",
             other
         ),
     }
@@ -623,6 +695,9 @@ fn bench_kv(a: &Args) -> Result<()> {
                     max_new_tokens: 1 + rng.below(max_new),
                     sampling: Sampling::Greedy,
                     priority: Priority::Normal,
+                    n: 1,
+                    beams: 0,
+                    session: None,
                 }
             })
             .collect()
@@ -668,6 +743,7 @@ fn bench_kv(a: &Args) -> Result<()> {
             num_blocks: blocks + 1,
             prefix_sharing: false,
             swap_blocks: 0,
+            session_blocks: 0,
         }),
         admission: AdmissionPolicy::Wait {
             queue_depth: requests.max(16),
@@ -794,6 +870,9 @@ fn bench_kvshared(a: &Args) -> Result<()> {
                 max_new_tokens: 6,
                 sampling: Sampling::Greedy,
                 priority: Priority::Normal,
+                n: 1,
+                beams: 0,
+                session: None,
             })
             .collect()
     };
@@ -832,6 +911,7 @@ fn bench_kvshared(a: &Args) -> Result<()> {
                 num_blocks: usable + 1,
                 prefix_sharing: sharing,
                 swap_blocks: swap,
+                session_blocks: 0,
             }),
             spec: None,
             admission,
@@ -876,6 +956,7 @@ fn bench_kvshared(a: &Args) -> Result<()> {
             num_blocks: 5 + 1,
             prefix_sharing: false,
             swap_blocks: swap,
+            session_blocks: 0,
         });
         let reqs: Vec<Request> = (1..=2u64)
             .map(|id| Request {
@@ -886,6 +967,9 @@ fn bench_kvshared(a: &Args) -> Result<()> {
                 max_new_tokens: 12,
                 sampling: Sampling::Greedy,
                 priority: Priority::Normal,
+                n: 1,
+                beams: 0,
+                session: None,
             })
             .collect();
         drive(
@@ -1034,6 +1118,9 @@ fn bench_chunked(a: &Args) -> Result<()> {
                     max_new_tokens: if long { 4 } else { 24 },
                     sampling: Sampling::Greedy,
                     priority: Priority::Normal,
+                    n: 1,
+                    beams: 0,
+                    session: None,
                 }
             })
             .collect()
@@ -1052,6 +1139,7 @@ fn bench_chunked(a: &Args) -> Result<()> {
                 num_blocks: usable + 1,
                 prefix_sharing: false,
                 swap_blocks: 0,
+                session_blocks: 0,
             }),
             spec: None,
             admission: AdmissionPolicy::Wait {
@@ -1201,6 +1289,9 @@ fn bench_spec(a: &Args) -> Result<()> {
                     max_new_tokens: max_new,
                     sampling: Sampling::Greedy,
                     priority: Priority::Normal,
+                    n: 1,
+                    beams: 0,
+                    session: None,
                 }
             })
             .collect()
@@ -1417,6 +1508,222 @@ fn bench_spec(a: &Args) -> Result<()> {
         "flight recorder: {} events, {per_event_ns:.0} ns/event, \
          {overhead_pct:.3}% of tick time (budget 2%)",
         spec_m.trace_events_total
+    );
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Multi-turn session bench (DESIGN.md §16) on the deterministic
+/// FakeBackend: one conversation runs two turns against an engine with
+/// a session budget (the finished first turn parks its KV chain in the
+/// prefix index) and against a cold engine that re-prefills from
+/// scratch.  The block arithmetic is exact by construction — EOS sits
+/// outside the vocabulary, so turn 1 generates exactly `max-new`
+/// tokens and its chain covers `prompt + max-new - 1` rows (the last
+/// sampled token is never written) — and the headline numbers are
+/// deterministic: `turn2_prefill_rows` (rows the second turn still
+/// had to prefill) and `prefill_saved_pct` (chain rows re-mapped from
+/// the parked session instead of recomputed).
+fn bench_sessions(a: &Args) -> Result<()> {
+    use lqer::coordinator::testbackend::{FakeBackend, FakeCacheMode};
+    use lqer::coordinator::{Engine, EngineMetrics};
+    use lqer::util::json;
+
+    const VOCAB: usize = 48;
+    const LAYERS: usize = 2;
+    const DIM: usize = 8;
+    const T_MAX: usize = 64;
+    const BS: usize = 8;
+    // EOS outside the vocab: turns never end early, so the chain /
+    // block arithmetic below is exact.
+    const NO_EOS: u32 = VOCAB as u32 + 1;
+    const SESSION: u64 = 7;
+    let buckets = vec![8usize, 48];
+
+    let max_new = 8usize;
+    // Turn 1: a 3-block prompt (24 tokens).  Turn 2 replays the whole
+    // visible history — prompt + the 8 generated tokens — plus a
+    // 7-token user suffix: 39 rows, of which the first 24 (3 full
+    // blocks) are resident in the parked session chain.
+    let prompt1: Vec<u32> = (0..24).map(|i| (i % 7) as u32 + 10).collect();
+    let suffix: Vec<u32> = (0..7).map(|i| (i % 5) as u32 + 20).collect();
+    let usable = 16usize;
+
+    let drive_turn = |engine: &mut Engine<FakeBackend>, id: u64,
+                      prompt: Vec<u32>, session: Option<u64>|
+        -> Result<Vec<u32>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        engine.enqueue(
+            Request {
+                id,
+                prompt,
+                max_new_tokens: max_new,
+                sampling: Sampling::Greedy,
+                priority: Priority::Normal,
+                n: 1,
+                beams: 0,
+                session,
+            },
+            tx,
+        );
+        let mut guard = 0;
+        while engine.has_work() {
+            engine.tick();
+            guard += 1;
+            anyhow::ensure!(guard < 1_000_000, "engine did not drain");
+        }
+        let r = rx.recv().map_err(|_| anyhow::anyhow!("reply dropped"))?;
+        anyhow::ensure!(
+            r.finish == lqer::coordinator::FinishReason::Length,
+            "turn {id} did not run to max-new: {:?}",
+            r.finish
+        );
+        Ok(r.tokens)
+    };
+
+    let mk_engine = |sessions: bool| -> Engine<FakeBackend> {
+        Engine::with_backend(
+            FakeBackend::new_paged(
+                FakeCacheMode::Host, VOCAB, LAYERS, DIM, T_MAX, 2,
+                usable + 1, BS,
+            ),
+            EngineConfig {
+                model: "fake".into(),
+                method: "fake".into(),
+                decode_batch: 2,
+                prefill_buckets: buckets.clone(),
+                tokens_per_step: 0, // auto: batch + largest bucket
+                host_cache: false,
+                paged: Some(PagedKvConfig {
+                    block_size: BS,
+                    num_blocks: usable + 1,
+                    prefix_sharing: sessions,
+                    swap_blocks: 0,
+                    session_blocks: if sessions { 8 } else { 0 },
+                }),
+                spec: None,
+                admission: AdmissionPolicy::Wait {
+                    queue_depth: 16,
+                    deadline_ms: 0,
+                },
+                trace_capacity: 0,
+            },
+            NO_EOS,
+        )
+    };
+
+    // --- warm: session budget parks the turn-1 chain -------------------
+    let mut warm = mk_engine(true);
+    let turn1 = drive_turn(&mut warm, 1, prompt1.clone(), Some(SESSION))?;
+    let m1 = warm.metrics_snapshot();
+    // Chain rows: prompt + generated tokens except the never-written
+    // last one; its whole-block prefix is what turn 2 can re-map.
+    let chain_rows = prompt1.len() + turn1.len() - 1;
+    let chain_blocks = chain_rows / BS;
+    anyhow::ensure!(
+        m1.sessions_live == 1,
+        "turn 1 did not park a session (sessions_live {})",
+        m1.sessions_live
+    );
+    let mut prompt2 = prompt1.clone();
+    prompt2.extend_from_slice(&turn1);
+    prompt2.extend_from_slice(&suffix);
+    let turn2 =
+        drive_turn(&mut warm, 2, prompt2.clone(), Some(SESSION))?;
+    let m2 = warm.metrics_snapshot();
+    let hit_blocks =
+        (m2.prefix_hit_blocks - m1.prefix_hit_blocks) as usize;
+    anyhow::ensure!(
+        hit_blocks == chain_blocks,
+        "turn 2 re-mapped {hit_blocks} blocks, want the chain's \
+         {chain_blocks} full blocks"
+    );
+    anyhow::ensure!(
+        m2.session_hits == 1,
+        "turn 2 did not match the parked session ({} hits)",
+        m2.session_hits
+    );
+    let turn2_prefill_rows = prompt2.len() - hit_blocks * BS;
+    let prefill_saved_pct =
+        100.0 * (hit_blocks * BS) as f64 / prompt2.len() as f64;
+
+    // --- cold: no sharing, turn 2 re-prefills all 39 rows --------------
+    let mut cold = mk_engine(false);
+    let cold1 = drive_turn(&mut cold, 1, prompt1.clone(), None)?;
+    anyhow::ensure!(
+        cold1 == turn1,
+        "session machinery changed turn-1 tokens (the golden \
+         invariant — see rust/tests/fork_sessions.rs)"
+    );
+    let _ = drive_turn(&mut cold, 2, prompt2.clone(), None)?;
+    let cold_m = cold.metrics_snapshot();
+
+    let side = |m: &EngineMetrics| {
+        json::obj(vec![
+            ("completed", json::num(m.completed as f64)),
+            ("tokens", json::num(m.tokens_generated as f64)),
+            ("session_hits", json::num(m.session_hits as f64)),
+            ("sessions_live", json::num(m.sessions_live as f64)),
+            ("session_blocks_held",
+             json::num(m.session_blocks_held as f64)),
+            ("prefix_hit_blocks",
+             json::num(m.prefix_hit_blocks as f64)),
+            ("prefix_bytes_saved",
+             json::num(m.prefix_bytes_saved as f64)),
+            ("tokens_per_sec", json::num(m.decode_tokens_per_sec())),
+            ("ttft_ms_p99", json::num(m.ttft_ms.percentile(99.0))),
+        ])
+    };
+    let out = json::obj(vec![
+        ("suite", json::s("sessions")),
+        ("block_size", json::num(BS as f64)),
+        ("usable_blocks", json::num(usable as f64)),
+        ("turn1_prompt_rows", json::num(prompt1.len() as f64)),
+        ("turn2_prompt_rows", json::num(prompt2.len() as f64)),
+        ("chain_rows", json::num(chain_rows as f64)),
+        ("chain_blocks", json::num(chain_blocks as f64)),
+        ("session_hits", json::num(m2.session_hits as f64)),
+        ("turn2_prefill_rows",
+         json::num(turn2_prefill_rows as f64)),
+        ("prefill_saved_pct", json::num(prefill_saved_pct)),
+        ("warm", side(&m2)),
+        ("cold", side(&cold_m)),
+    ]);
+    let path = match a.get("out").as_str() {
+        "" => "BENCH_sessions.json".to_string(),
+        p => p.to_string(),
+    };
+    std::fs::write(&path, out.to_string())?;
+
+    let mut t = Table::new(
+        &format!(
+            "multi-turn session bench — 2 turns, block {BS} rows, \
+             session budget 8 blocks"
+        ),
+        &["engine", "done", "session hits", "prefix hits",
+          "turn-2 prefill rows", "saved %"],
+    );
+    for (name, m, rows, saved) in [
+        ("warm (sessions)", &m2, turn2_prefill_rows,
+         prefill_saved_pct),
+        ("cold (re-prefill)", &cold_m, prompt2.len(), 0.0),
+    ] {
+        t.row(vec![
+            name.into(),
+            format!("{}/{}", m.completed, m.submitted),
+            m.session_hits.to_string(),
+            m.prefix_hit_blocks.to_string(),
+            rows.to_string(),
+            format!("{saved:.1}"),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "turn 2 prefilled {turn2_prefill_rows}/{} rows \
+         ({prefill_saved_pct:.1}% re-mapped from the parked session); \
+         {} tokens match the cold engine bit-for-bit",
+        prompt2.len(),
+        turn2.len()
     );
     println!("wrote {path}");
     Ok(())

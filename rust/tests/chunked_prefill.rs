@@ -52,6 +52,7 @@ fn cfg(
             num_blocks: n + 1, // + sentinel
             prefix_sharing: sharing,
             swap_blocks: 0,
+            session_blocks: 0,
         }),
         spec: None,
         admission,
@@ -109,6 +110,9 @@ fn mk(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         priority: Default::default(),
+        n: 1,
+        beams: 0,
+        session: None,
     }
 }
 
@@ -133,6 +137,9 @@ fn golden_requests(n: u64) -> Vec<Request> {
                     Sampling::Greedy
                 },
                 priority: Default::default(),
+                n: 1,
+                beams: 0,
+                session: None,
             }
         })
         .collect()

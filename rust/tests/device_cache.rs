@@ -93,6 +93,9 @@ fn golden_requests() -> Vec<Request> {
                 Sampling::Greedy
             },
             priority: Default::default(),
+            n: 1,
+            beams: 0,
+            session: None,
         });
     }
     requests
@@ -127,6 +130,9 @@ fn rejected_requests_get_a_response_not_a_dropped_channel() {
         max_new_tokens: 4,
         sampling: Sampling::Greedy,
         priority: Default::default(),
+        n: 1,
+        beams: 0,
+        session: None,
     };
     let (tx1, rx1) = mpsc::channel();
     engine.enqueue(mk(1, vec![POISON, 3, 4]), tx1); // prefill fails
@@ -209,6 +215,9 @@ fn no_scheduler_path_leaks_a_slot() {
                     max_new_tokens: max_new,
                     sampling: Sampling::Greedy,
                     priority: Default::default(),
+                    n: 1,
+                    beams: 0,
+                    session: None,
                 },
                 tx,
             );
@@ -294,6 +303,9 @@ fn real_runtime_device_host_bit_exact() {
                     max_new_tokens: 8,
                     sampling: Sampling::Greedy,
                     priority: Default::default(),
+                    n: 1,
+                    beams: 0,
+                    session: None,
                 })
             })
             .collect();

@@ -1,0 +1,444 @@
+//! Parallel sampling, beam search and multi-turn sessions on the COW
+//! block pool (DESIGN.md §16), driven end-to-end through the real
+//! `Engine` scheduler over the deterministic `FakeBackend`:
+//!
+//! * golden equality: an `n = 1` request takes the plain decode path —
+//!   bit-identical across the flat mirror and the paged engine on a
+//!   mixed-length continuous-batching trace;
+//! * greedy fanout: with `n = K` under greedy sampling every candidate
+//!   argmaxes the same rows, so all K streams must equal the plain
+//!   `n = 1` stream — and a non-block-aligned prompt must trigger
+//!   exactly K-1 copy-on-write forks of the shared tail block;
+//! * prompt sharing: mid-flight, a K-way fork holds every full prompt
+//!   block once with K references (asserted via `kv_shared_blocks` /
+//!   `kv_shared_refs`), and the drain leaks neither lanes nor blocks;
+//! * beam search: `beams = W` returns exactly W candidates sorted by
+//!   cumulative log-probability, deterministically across runs;
+//! * admission: `n > 1 && beams > 1` and fanout on a non-paged engine
+//!   are permanently unservable (`Rejected`), not capacity misses;
+//! * sessions: a second conversation turn re-admits through the parked
+//!   KV chain — prefix hits cover every full chain block, and the
+//!   revived-KV decode is bit-identical to a cold full re-prefill.
+
+use std::sync::mpsc;
+
+use lqer::coordinator::testbackend::{FakeBackend, FakeCacheMode};
+use lqer::coordinator::{
+    AdmissionPolicy, Engine, EngineConfig, FinishReason, PagedKvConfig,
+    Request, Response, Sampling,
+};
+use lqer::util::rng::Rng;
+
+const VOCAB: usize = 48;
+const LAYERS: usize = 2;
+const DIM: usize = 4;
+const T_MAX: usize = 64;
+/// Token id outside the vocabulary: never sampled, so every request
+/// runs to `max_new_tokens` (`FinishReason::Length`) deterministically.
+const NO_EOS: u32 = VOCAB as u32 + 1;
+const EOS: u32 = 2;
+/// Block size: divides both prefill buckets (8, 48) and T_MAX.
+const BS: usize = 8;
+
+fn cfg(
+    batch: usize,
+    usable_blocks: Option<usize>,
+    sharing: bool,
+    session_blocks: usize,
+) -> EngineConfig {
+    EngineConfig {
+        model: "fake".into(),
+        method: "fake".into(),
+        decode_batch: batch,
+        prefill_buckets: vec![8, 48],
+        tokens_per_step: 0, // engine default: batch + largest bucket
+        host_cache: false,  // FakeBackend's mode is chosen directly
+        paged: usable_blocks.map(|n| PagedKvConfig {
+            block_size: BS,
+            num_blocks: n + 1, // + sentinel
+            prefix_sharing: sharing,
+            swap_blocks: 0,
+            session_blocks,
+        }),
+        spec: None,
+        admission: AdmissionPolicy::Wait { queue_depth: 64, deadline_ms: 0 },
+        trace_capacity: 0,
+    }
+}
+
+fn flat(batch: usize) -> FakeBackend {
+    FakeBackend::new(FakeCacheMode::Host, VOCAB, LAYERS, DIM, T_MAX, batch)
+}
+
+fn paged(batch: usize, usable: usize) -> FakeBackend {
+    FakeBackend::new_paged(
+        FakeCacheMode::Host, VOCAB, LAYERS, DIM, T_MAX, batch, usable + 1,
+        BS,
+    )
+}
+
+fn req(
+    id: u64,
+    prompt: Vec<u32>,
+    max_new: usize,
+    n: usize,
+    beams: usize,
+    session: Option<u64>,
+) -> Request {
+    Request {
+        id,
+        prompt,
+        max_new_tokens: max_new,
+        sampling: Sampling::Greedy,
+        priority: Default::default(),
+        n,
+        beams,
+        session,
+    }
+}
+
+fn drain(engine: &mut Engine<FakeBackend>) {
+    let mut guard = 0;
+    while engine.has_work() {
+        engine.tick();
+        guard += 1;
+        assert!(guard < 200_000, "engine did not drain");
+    }
+}
+
+/// Run `requests` to completion and assert the scheduler leaked neither
+/// a lane nor a block (modulo blocks deliberately parked in the session
+/// store, which stay checked out of the free list by design).
+fn run_requests(
+    mut engine: Engine<FakeBackend>,
+    requests: &[Request],
+) -> (Vec<Response>, lqer::coordinator::EngineMetrics) {
+    let mut rxs = Vec::with_capacity(requests.len());
+    for r in requests {
+        let (tx, rx) = mpsc::channel();
+        engine.enqueue(r.clone(), tx);
+        rxs.push(rx);
+    }
+    drain(&mut engine);
+    let m = engine.metrics_snapshot();
+    assert_eq!(engine.free_slots(), engine.kv_batch(), "lane leak");
+    if m.kv_blocks_total > 0 {
+        assert_eq!(
+            engine.free_blocks() as u64 + m.session_blocks_held,
+            m.kv_blocks_total,
+            "block leak"
+        );
+    }
+    let responses = rxs
+        .into_iter()
+        .map(|rx| rx.recv().expect("reply sender dropped"))
+        .collect();
+    (responses, m)
+}
+
+/// Mixed-length workload spanning both sampling modes with `n = 1`:
+/// must ride the plain decode path untouched by the fork machinery.
+fn golden_requests(n: u64) -> Vec<Request> {
+    let mut rng = Rng::new(42);
+    (0..n)
+        .map(|i| {
+            let plen = 1 + rng.below(14);
+            let mut r = req(
+                i + 1,
+                (0..plen).map(|_| rng.below(VOCAB) as u32).collect(),
+                1 + rng.below(10),
+                1,
+                0,
+                None,
+            );
+            if i % 3 == 0 {
+                r.sampling =
+                    Sampling::TopK { k: 5, temperature: 0.7, seed: 11 };
+            }
+            r
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Golden: n = 1 is the plain decode path, flat and paged bit-identical
+// ---------------------------------------------------------------------------
+
+#[test]
+fn n1_requests_ride_the_plain_decode_path() {
+    let batch = 3;
+    let ample = batch * T_MAX / BS;
+    let requests = golden_requests(12);
+
+    let run = |backend: FakeBackend, cfg: EngineConfig| {
+        run_requests(Engine::with_backend(backend, cfg, EOS), &requests)
+    };
+    let (flat_out, _) =
+        run(flat(batch), cfg(batch, None, false, 0));
+    let (paged_out, pm) =
+        run(paged(batch, ample), cfg(batch, Some(ample), false, 0));
+
+    assert_eq!(flat_out.len(), paged_out.len());
+    for (a, b) in flat_out.iter().zip(&paged_out) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {} diverged", a.id);
+        assert_eq!(a.finish, b.finish, "request {} finish", a.id);
+        assert!(a.candidates.is_empty(), "n = 1 grew candidates");
+        assert!(b.candidates.is_empty(), "n = 1 grew candidates");
+    }
+    assert_eq!(pm.forks, 0, "n = 1 must not fork");
+    assert_eq!(pm.beam_prunes, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Greedy fanout: every candidate equals the plain stream; COW on the
+// shared partial tail block happens exactly K-1 times
+// ---------------------------------------------------------------------------
+
+#[test]
+fn greedy_fanout_candidates_match_plain_stream() {
+    // 14-token prompt: one full block + a 6-row partial tail that all
+    // K lanes share after the fork and COW on first write.
+    let prompt: Vec<u32> = (0..14).map(|i| (i % 11) as u32 + 3).collect();
+    let max_new = 6;
+
+    let (plain, _) = run_requests(
+        Engine::with_backend(
+            paged(4, 16),
+            cfg(4, Some(16), false, 0),
+            NO_EOS,
+        ),
+        &[req(1, prompt.clone(), max_new, 1, 0, None)],
+    );
+    assert_eq!(plain[0].finish, FinishReason::Length);
+    assert_eq!(plain[0].tokens.len(), max_new);
+
+    let (fanned, m) = run_requests(
+        Engine::with_backend(
+            paged(4, 16),
+            cfg(4, Some(16), false, 0),
+            NO_EOS,
+        ),
+        &[req(1, prompt, max_new, 3, 0, None)],
+    );
+    let resp = &fanned[0];
+    assert_eq!(resp.finish, FinishReason::Length);
+    assert_eq!(
+        resp.tokens, plain[0].tokens,
+        "fanout best stream diverged from plain decode"
+    );
+    assert_eq!(resp.candidates.len(), 3);
+    for (i, c) in resp.candidates.iter().enumerate() {
+        assert_eq!(
+            c.tokens, plain[0].tokens,
+            "greedy candidate {i} diverged from the plain stream"
+        );
+        assert_eq!(c.finish, FinishReason::Length);
+    }
+    assert_eq!(m.forks, 2, "n = 3 forks two siblings");
+    assert_eq!(m.fork_denied, 0);
+    // Partial tail block shared 3 ways: the first two writers fork it,
+    // the last writer owns it in place.
+    assert_eq!(m.cow_copies, 2, "expected exactly K-1 COW copies");
+}
+
+// ---------------------------------------------------------------------------
+// Mid-flight sharing: a K-way fork keeps one copy of the prompt
+// ---------------------------------------------------------------------------
+
+#[test]
+fn k_way_fork_shares_prompt_blocks_mid_flight() {
+    // Block-aligned 16-token prompt -> 2 full blocks, retained
+    // read-only by all 4 lanes; decode rows land in fresh blocks.
+    let prompt: Vec<u32> = (0..16).map(|i| (i % 9) as u32 + 5).collect();
+    let mut engine = Engine::with_backend(
+        paged(4, 12),
+        cfg(4, Some(12), false, 0),
+        NO_EOS,
+    );
+    let (tx, rx) = mpsc::channel();
+    engine.enqueue(req(1, prompt, 4, 4, 0, None), tx);
+
+    let mut guard = 0;
+    while engine.metrics_snapshot().forks < 3 {
+        assert!(engine.has_work(), "request finished before forking");
+        engine.tick();
+        guard += 1;
+        assert!(guard < 10_000, "fork never happened");
+    }
+    let mid = engine.metrics_snapshot();
+    assert_eq!(mid.forks, 3, "n = 4 forks three siblings");
+    assert_eq!(
+        mid.kv_shared_blocks, 2,
+        "both prompt blocks held once, not per-lane"
+    );
+    assert_eq!(
+        mid.kv_shared_refs, 6,
+        "2 shared blocks x 3 extra references"
+    );
+
+    drain(&mut engine);
+    let m = engine.metrics_snapshot();
+    assert_eq!(engine.free_slots(), engine.kv_batch(), "lane leak");
+    assert_eq!(
+        engine.free_blocks() as u64,
+        m.kv_blocks_total,
+        "block leak after fanout drain"
+    );
+    let resp = rx.recv().expect("reply sender dropped");
+    assert_eq!(resp.candidates.len(), 4);
+    for c in &resp.candidates {
+        assert_eq!(c.finish, FinishReason::Length);
+        assert_eq!(c.tokens.len(), 4);
+        assert_eq!(c.tokens, resp.candidates[0].tokens, "greedy lockstep");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Beam search: W candidates, ranked, deterministic across runs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn beam_search_returns_ranked_deterministic_candidates() {
+    let prompt: Vec<u32> = (0..9).map(|i| (i % 13) as u32 + 7).collect();
+    let run = || {
+        run_requests(
+            Engine::with_backend(
+                paged(4, 16),
+                cfg(4, Some(16), false, 0),
+                NO_EOS,
+            ),
+            &[req(1, prompt.clone(), 5, 1, 3, None)],
+        )
+    };
+    let (a, m) = run();
+    let resp = &a[0];
+    assert_eq!(resp.candidates.len(), 3, "beam width 3 -> 3 candidates");
+    assert_eq!(resp.tokens, resp.candidates[0].tokens);
+    for w in resp.candidates.windows(2) {
+        assert!(
+            w[0].score >= w[1].score,
+            "candidates not sorted by score: {} < {}",
+            w[0].score,
+            w[1].score
+        );
+    }
+    for c in &resp.candidates {
+        assert_eq!(c.finish, FinishReason::Length);
+        assert_eq!(c.tokens.len(), 5);
+    }
+    assert_eq!(m.forks, 2, "width 3 forks two sibling lanes");
+
+    let (b, _) = run();
+    for (x, y) in a[0].candidates.iter().zip(&b[0].candidates) {
+        assert_eq!(x.tokens, y.tokens, "beam search not deterministic");
+        assert_eq!(x.score, y.score);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Admission: impossible fanouts are Rejected, not retried forever
+// ---------------------------------------------------------------------------
+
+#[test]
+fn impossible_fanouts_are_rejected_at_admission() {
+    // n > 1 and beams > 1 together are mutually exclusive.
+    let (out, _) = run_requests(
+        Engine::with_backend(
+            paged(2, 8),
+            cfg(2, Some(8), false, 0),
+            NO_EOS,
+        ),
+        &[req(1, vec![3, 4, 5], 4, 2, 2, None)],
+    );
+    assert_eq!(out[0].finish, FinishReason::Rejected);
+    assert!(out[0].tokens.is_empty());
+
+    // Fanout needs the COW block machinery: permanently unservable on
+    // the flat engine, for parallel sampling and beam search alike.
+    let (out, _) = run_requests(
+        Engine::with_backend(flat(2), cfg(2, None, false, 0), NO_EOS),
+        &[
+            req(1, vec![3, 4, 5], 4, 2, 0, None),
+            req(2, vec![3, 4, 5], 4, 1, 2, None),
+        ],
+    );
+    assert_eq!(out[0].finish, FinishReason::Rejected);
+    assert_eq!(out[1].finish, FinishReason::Rejected);
+}
+
+// ---------------------------------------------------------------------------
+// Sessions: turn two re-admits through the parked chain, bit-identical
+// to a cold full re-prefill
+// ---------------------------------------------------------------------------
+
+#[test]
+fn session_second_turn_reuses_parked_chain() {
+    const SESSION: u64 = 7;
+    let max_new = 8;
+    // 24-token turn-1 prompt: 3 full blocks. The parked chain is
+    // prompt + 7 written generated rows = 31 rows -> 3 full blocks in
+    // the prefix index plus a partial tail block (4 held in total).
+    let prompt1: Vec<u32> = (0..24).map(|i| (i % 7) as u32 + 10).collect();
+    let suffix: Vec<u32> = (0..7).map(|i| (i % 5) as u32 + 20).collect();
+
+    let turn = |engine: &mut Engine<FakeBackend>,
+                id: u64,
+                prompt: Vec<u32>,
+                session: Option<u64>|
+     -> Response {
+        let (tx, rx) = mpsc::channel();
+        engine.enqueue(req(id, prompt, max_new, 1, 0, session), tx);
+        drain(engine);
+        let resp = rx.recv().expect("reply sender dropped");
+        assert_eq!(resp.finish, FinishReason::Length);
+        resp
+    };
+
+    // Warm engine: prefix sharing on, 8 blocks of session budget.
+    let mut warm = Engine::with_backend(
+        paged(2, 16),
+        cfg(2, Some(16), true, 8),
+        NO_EOS,
+    );
+    let r1 = turn(&mut warm, 1, prompt1.clone(), Some(SESSION));
+    assert_eq!(r1.tokens.len(), max_new);
+    let m1 = warm.metrics_snapshot();
+    assert_eq!(m1.sessions_live, 1, "turn 1 did not park its chain");
+    assert_eq!(m1.session_blocks_held, 4, "3 full blocks + partial tail");
+
+    let mut prompt2 = prompt1.clone();
+    prompt2.extend_from_slice(&r1.tokens);
+    prompt2.extend_from_slice(&suffix);
+    let r2 = turn(&mut warm, 2, prompt2.clone(), Some(SESSION));
+    let m2 = warm.metrics_snapshot();
+    assert_eq!(m2.session_hits - m1.session_hits, 1, "turn 2 missed");
+    assert_eq!(
+        m2.prefix_hit_blocks - m1.prefix_hit_blocks,
+        3,
+        "turn 2 must re-map every full chain block instead of \
+         re-prefilling it"
+    );
+    assert_eq!(m2.sessions_live, 1, "newer turn supersedes the old park");
+    // Lanes all released; only the parked chain stays checked out.
+    assert_eq!(warm.free_slots(), warm.kv_batch(), "lane leak");
+    assert_eq!(
+        warm.free_blocks() as u64 + m2.session_blocks_held,
+        m2.kv_blocks_total,
+        "block leak past the session store"
+    );
+
+    // Cold engine: no sharing, no session — full re-prefill both turns.
+    let mut cold = Engine::with_backend(
+        paged(2, 16),
+        cfg(2, Some(16), false, 0),
+        NO_EOS,
+    );
+    let c1 = turn(&mut cold, 1, prompt1, None);
+    let c2 = turn(&mut cold, 2, prompt2, None);
+    assert_eq!(r1.tokens, c1.tokens, "turn 1 diverged from cold engine");
+    assert_eq!(
+        r2.tokens, c2.tokens,
+        "revived-KV decode diverged from a cold full re-prefill"
+    );
+}

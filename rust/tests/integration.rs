@@ -180,6 +180,9 @@ fn engine_serves_deterministically_and_batches() {
         max_new_tokens: 8,
         sampling: Sampling::Greedy,
         priority: Default::default(),
+        n: 1,
+        beams: 0,
+        session: None,
     };
     let rx1 = engine.submit(mk(1, &prompts[0]));
     let rx2 = engine.submit(mk(2, &prompts[1]));

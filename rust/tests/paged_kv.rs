@@ -51,6 +51,7 @@ fn cfg(
             num_blocks: n + 1, // + sentinel
             prefix_sharing: false,
             swap_blocks: 0,
+            session_blocks: 0,
         }),
         spec: None,
         admission,
@@ -120,6 +121,9 @@ fn golden_requests(n: u64) -> Vec<Request> {
                     Sampling::Greedy
                 },
                 priority: Default::default(),
+                n: 1,
+                beams: 0,
+                session: None,
             }
         })
         .collect()
@@ -251,6 +255,9 @@ fn preemption_requeues_and_replays_identically() {
         max_new_tokens: 12,
         sampling: Sampling::Greedy,
         priority: Default::default(),
+        n: 1,
+        beams: 0,
+        session: None,
     };
     let requests: Vec<Request> = (1..=2).map(mk).collect();
 
@@ -295,6 +302,9 @@ fn preemption_mid_speculation_replays_identically() {
         max_new_tokens: 12,
         sampling: Sampling::Greedy,
         priority: Default::default(),
+        n: 1,
+        beams: 0,
+        session: None,
     };
     let requests: Vec<Request> = (1..=2).map(mk).collect();
 
@@ -340,6 +350,9 @@ fn preempted_requests_survive_the_admission_deadline() {
         max_new_tokens: 12,
         sampling: Sampling::Greedy,
         priority: Default::default(),
+        n: 1,
+        beams: 0,
+        session: None,
     };
     let mut engine = Engine::with_backend(
         paged(FakeCacheMode::Host, batch, 5),
@@ -396,6 +409,9 @@ fn lone_sequence_hitting_pool_ceiling_finishes_cache_full() {
         max_new_tokens: 20,
         sampling: Sampling::Greedy,
         priority: Default::default(),
+        n: 1,
+        beams: 0,
+        session: None,
     }];
     let (resp, m) = run_requests(
         Engine::with_backend(
@@ -433,6 +449,9 @@ fn queue_overflow_and_deadline_answer_with_latency_samples() {
         max_new_tokens: 4,
         sampling: Sampling::Greedy,
         priority: Default::default(),
+        n: 1,
+        beams: 0,
+        session: None,
     };
     let mut rxs = Vec::new();
     for id in 1..=4 {
@@ -488,6 +507,9 @@ fn overlong_prompt_rejection_records_latency_sample() {
             max_new_tokens: 4,
             sampling: Sampling::Greedy,
             priority: Default::default(),
+            n: 1,
+            beams: 0,
+            session: None,
         },
         tx,
     );
@@ -561,6 +583,9 @@ fn no_paged_scheduler_path_leaks_lanes_or_blocks() {
                     max_new_tokens: max_new,
                     sampling: Sampling::Greedy,
                     priority: Default::default(),
+                    n: 1,
+                    beams: 0,
+                    session: None,
                 },
                 tx,
             );

@@ -657,3 +657,104 @@ fn tokenizer_roundtrip_property() {
         }
     });
 }
+
+// ---------------------------------------------------------------------------
+// Paged KV: beam fork/prune never leaks, double-frees, or strands a
+// pruned beam's blocks beyond revival
+// ---------------------------------------------------------------------------
+
+#[test]
+fn beam_fork_prune_keeps_allocator_invariants() {
+    check("paged-beam-fork-prune", 60, &OpTrace, |ops| {
+        let (num_blocks, bs) = (13usize, 4usize);
+        let lanes_n = 3usize;
+        let mut alloc = BlockAllocator::new(num_blocks, bs);
+        // Model: each lane is the list of blocks its table maps, one
+        // reference per lane.  Expected refcount of a block is the
+        // number of lanes holding it.
+        let mut lanes: Vec<Vec<u32>> = vec![Vec::new(); lanes_n];
+        let count = |lanes: &[Vec<u32>], id: u32| -> u32 {
+            lanes.iter().filter(|l| l.contains(&id)).count() as u32
+        };
+        for &op in ops {
+            let t = (op as usize / 3) % lanes_n;
+            match op % 3 {
+                0 => {
+                    // Beam advances: its table grows by a fresh block.
+                    if let Some(id) = alloc.alloc() {
+                        if count(&lanes, id) != 0 {
+                            return Err(format!(
+                                "alloc handed out mapped block {id}"
+                            ));
+                        }
+                        lanes[t].push(id);
+                    } else if alloc.free_count() != 0 {
+                        return Err("alloc failed with free blocks".into());
+                    }
+                }
+                1 => {
+                    // Beam step forks a surviving beam into an idle
+                    // lane: retain every source block, clone the table.
+                    let d = (t + 1 + op as usize / 9) % lanes_n;
+                    if d != t && lanes[d].is_empty() && !lanes[t].is_empty()
+                    {
+                        for &id in &lanes[t] {
+                            alloc.retain(id);
+                        }
+                        lanes[d] = lanes[t].clone();
+                    }
+                }
+                _ => {
+                    // Prune a dead beam: drop one reference per block.
+                    // Blocks nobody else maps must land on the free
+                    // list *revivable* (prefix-index hit path).
+                    let dead = std::mem::take(&mut lanes[t]);
+                    for id in dead {
+                        alloc.free(id);
+                        if count(&lanes, id) == 0 {
+                            if !alloc.revive(id) {
+                                return Err(format!(
+                                    "pruned block {id} not revivable"
+                                ));
+                            }
+                            alloc.free(id); // put it back
+                        }
+                    }
+                }
+            }
+            // Refcounts mirror the lane model exactly, for every block.
+            for id in 1..num_blocks as u32 {
+                let want = count(&lanes, id);
+                if alloc.ref_count(id) != want {
+                    return Err(format!(
+                        "block {id}: refcount {} != {} lanes mapping it",
+                        alloc.ref_count(id),
+                        want
+                    ));
+                }
+            }
+            if alloc.in_use() + alloc.free_count() != alloc.capacity() {
+                return Err("capacity accounting broken".into());
+            }
+            let want_shared =
+                (1..num_blocks as u32).filter(|&b| count(&lanes, b) > 1);
+            if alloc.shared_blocks() != want_shared.count() {
+                return Err("shared_blocks drifted from model".into());
+            }
+        }
+        // Pruning every beam must restore the full pool (no leaks).
+        for t in 0..lanes_n {
+            for id in std::mem::take(&mut lanes[t]) {
+                alloc.free(id);
+            }
+        }
+        if alloc.free_count() != alloc.capacity() {
+            return Err(format!(
+                "leaked blocks: {}/{} free after pruning all beams",
+                alloc.free_count(),
+                alloc.capacity()
+            ));
+        }
+        Ok(())
+    });
+}

@@ -54,6 +54,7 @@ fn cfg(
             num_blocks: n + 1, // + sentinel
             prefix_sharing: sharing,
             swap_blocks,
+            session_blocks: 0,
         }),
         spec: None,
         admission,
@@ -117,6 +118,9 @@ fn mk(id: u64, prompt: Vec<u32>, max_new: usize) -> Request {
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         priority: Priority::Normal,
+        n: 1,
+        beams: 0,
+        session: None,
     }
 }
 

@@ -49,6 +49,7 @@ fn cfg(
             num_blocks: n + 1, // + sentinel
             prefix_sharing: false,
             swap_blocks: 0,
+            session_blocks: 0,
         }),
         spec,
         admission: AdmissionPolicy::Wait { queue_depth: 64, deadline_ms: 0 },
@@ -115,6 +116,9 @@ fn golden_requests(n: u64) -> Vec<Request> {
                     Sampling::Greedy
                 },
                 priority: Default::default(),
+                n: 1,
+                beams: 0,
+                session: None,
             }
         })
         .collect()
@@ -212,6 +216,9 @@ fn preemption_during_speculation_replays_identically() {
         max_new_tokens: 20,
         sampling: Sampling::Greedy,
         priority: Default::default(),
+        n: 1,
+        beams: 0,
+        session: None,
     };
     let requests: Vec<Request> = (1..=2).map(mk).collect();
 
@@ -257,6 +264,9 @@ fn modeled_speedup_clears_1_3x_at_healthy_acceptance() {
             max_new_tokens: 24,
             sampling: Sampling::Greedy,
             priority: Default::default(),
+            n: 1,
+            beams: 0,
+            session: None,
         })
         .collect();
 

@@ -57,6 +57,7 @@ fn cfg(
             num_blocks: n + 1, // + sentinel
             prefix_sharing: false,
             swap_blocks: 0,
+            session_blocks: 0,
         }),
         spec,
         admission: AdmissionPolicy::Wait { queue_depth: 64, deadline_ms: 0 },
@@ -115,6 +116,9 @@ fn golden_requests(n: u64) -> Vec<Request> {
                     Sampling::Greedy
                 },
                 priority: Default::default(),
+                n: 1,
+                beams: 0,
+                session: None,
             }
         })
         .collect()

@@ -59,6 +59,10 @@ HIGHER_IS_BETTER = {
     # verify steps — exactly 1.0 when the recorder loses nothing (the
     # bench also hard-fails in-run on inequality).
     "spec_rounds_per_verify",
+    # sessions bench: multi-turn KV reuse (DESIGN.md §16) — second-turn
+    # prefix hits from the parked chain and the prefill rows they save.
+    "session_hits",
+    "prefill_saved_pct",
 }
 LOWER_IS_BETTER = {
     "rejected",
@@ -69,6 +73,9 @@ LOWER_IS_BETTER = {
     # decode-stall gauge.
     "itl_ms_p99",
     "decode_stall_ms",
+    # sessions bench: rows the second turn still has to prefill after
+    # re-mapping the parked chain (the new-turn suffix only).
+    "turn2_prefill_rows",
 }
 # Counters where tiny absolute jitter on a near-zero baseline must not
 # trip the percentage gate.

@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the repo's documentation surface.
+
+Validates every inline ``[text](target)`` link in the repo's markdown
+files:
+
+* **relative paths** must exist on disk (resolved from the linking
+  file's directory; a ``#fragment`` on a ``.md`` target must match a
+  heading anchor in that file);
+* **intra-doc anchors** (``#section``) must match a heading in the
+  same file, using GitHub's slug rule (lowercase, spaces to hyphens,
+  strip everything but alphanumerics/hyphens/underscores);
+* ``http(s)://`` / ``mailto:`` targets are skipped (no network in the
+  gate).
+
+Usage::
+
+    python3 scripts/check_md_links.py [--root DIR] [FILES...]
+
+With no FILES, checks every tracked-looking ``*.md`` outside hidden
+and artifact directories.  Exits nonzero listing each broken link.
+Stdlib only — wired into tier1.sh and the CI staticcheck job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+IMAGE_RE = re.compile(r"!\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+FENCE_RE = re.compile(r"^(```|~~~)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+SKIP_DIRS = {".git", ".github", "artifacts", "target", "__pycache__",
+             "node_modules"}
+# Verbatim third-party reference material (exemplar READMEs quoted from
+# other repos): their links point at *those* repos' trees, not ours.
+SKIP_FILES = {"SNIPPETS.md", "PAPERS.md"}
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor rule: lowercase, drop everything but word chars,
+    spaces and hyphens, then spaces -> hyphens."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)      # unwrap code spans
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # unwrap links
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def anchors(path: str) -> set:
+    """All heading anchors of one markdown file (GitHub slugs, with the
+    -1, -2 suffixes duplicates get)."""
+    out, seen = set(), {}
+    in_fence = False
+    try:
+        with open(path, encoding="utf-8") as fh:
+            for line in fh:
+                if FENCE_RE.match(line):
+                    in_fence = not in_fence
+                    continue
+                if in_fence:
+                    continue
+                m = HEADING_RE.match(line)
+                if not m:
+                    continue
+                slug = slugify(m.group(2))
+                n = seen.get(slug, 0)
+                seen[slug] = n + 1
+                out.add(slug if n == 0 else f"{slug}-{n}")
+    except OSError:
+        pass
+    return out
+
+
+def links_in(path: str):
+    """Yield (lineno, target) for every inline link and image."""
+    in_fence = False
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            if FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            # strip inline code spans so `[x](y)` examples don't count
+            stripped = re.sub(r"`[^`]*`", "", line)
+            for rx in (LINK_RE, IMAGE_RE):
+                for m in rx.finditer(stripped):
+                    yield lineno, m.group(1)
+
+
+def check_file(md: str, root: str) -> list:
+    """All broken links in one file, as printable strings."""
+    problems = []
+    rel = os.path.relpath(md, root)
+    for lineno, target in links_in(md):
+        if target.startswith(SKIP_SCHEMES):
+            continue
+        path_part, _, fragment = target.partition("#")
+        if not path_part:                       # pure intra-doc anchor
+            if fragment and fragment not in anchors(md):
+                problems.append(
+                    f"{rel}:{lineno}: broken anchor '#{fragment}'")
+            continue
+        dest = os.path.normpath(
+            os.path.join(os.path.dirname(md), path_part))
+        if not os.path.exists(dest):
+            problems.append(
+                f"{rel}:{lineno}: broken path '{target}'")
+            continue
+        if fragment and dest.endswith(".md") and \
+                fragment not in anchors(dest):
+            problems.append(
+                f"{rel}:{lineno}: '{path_part}' has no anchor "
+                f"'#{fragment}'")
+    return problems
+
+
+def find_markdown(root: str) -> list:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d not in SKIP_DIRS)
+        for name in sorted(filenames):
+            if name.endswith(".md") and name not in SKIP_FILES:
+                out.append(os.path.join(dirpath, name))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), help="repo root")
+    ap.add_argument("files", nargs="*", help="markdown files (default: "
+                    "all *.md under --root)")
+    args = ap.parse_args(argv)
+
+    files = args.files or find_markdown(args.root)
+    problems = []
+    for md in files:
+        problems.extend(check_file(md, args.root))
+    if problems:
+        print(f"check_md_links: FAIL ({len(problems)} broken link(s) "
+              f"over {len(files)} file(s)):")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(f"check_md_links: OK ({len(files)} markdown file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

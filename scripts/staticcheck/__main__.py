@@ -26,10 +26,11 @@ import p3_metrics                                           # noqa: E402
 import p4_cli                                               # noqa: E402
 import p5_backend                                           # noqa: E402
 import p6_registry                                          # noqa: E402
+import p7_docs                                              # noqa: E402
 import sccore                                               # noqa: E402
 
 PASSES = [p1_mirror, p2_manifest, p3_metrics, p4_cli, p5_backend,
-          p6_registry]
+          p6_registry, p7_docs]
 ALLOWLIST = os.path.join(_HERE, "allowlist.txt")
 
 

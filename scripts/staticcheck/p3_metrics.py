@@ -69,6 +69,7 @@ BASELINE_EMITTERS = {
     "BENCH_baseline.json": "bench_kv",
     "BENCH_baseline_chunked.json": "bench_chunked",
     "BENCH_baseline_spec.json": "bench_spec",
+    "BENCH_baseline_sessions.json": "bench_sessions",
 }
 
 

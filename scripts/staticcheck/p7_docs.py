@@ -1,0 +1,179 @@
+"""P7 doc-parity: README.md / docs/ <-> the CLI, HTTP, and DESIGN.md
+surfaces they describe.
+
+Documentation is a checked surface like any other mirror (DESIGN.md
+§14): a serve flag or HTTP route that ships undocumented is invisible
+to operators, and a doc paragraph describing a removed flag actively
+misleads them.  Four checks:
+
+  SC701  serve-family CLI flag absent from README.md / docs/*.md
+         (allowlistable for internal-only switches)
+  SC702  HTTP route handled in server.rs but never documented
+  SC703  ``DESIGN.md §N`` source reference with no ``## §N`` header
+  SC704  stale doc: a backticked ``--flag`` in README/docs that is
+         registered nowhere in the tree (rust, scripts, Makefile, CI)
+
+Coverage contract (documented, deterministic):
+
+* The doc corpus is ``README.md`` plus every ``docs/*.md``.
+* A CLI flag is documented when ``--<flag>`` appears anywhere in the
+  corpus; flags are read from the same ``Args::new("serve"|...)``
+  chains P4 parses, across all three serve-family commands.
+* A route is documented when its literal path (e.g. ``/metrics/prom``)
+  appears in the corpus; routes are the ``("GET"|"POST", "/...")``
+  match tuples in server.rs.
+* ``DESIGN.md §N`` references are scanned in rust/, python/, scripts/,
+  the doc corpus, and DESIGN.md itself; each must resolve to a
+  ``## §N`` header.
+* SC704 considers a doc flag live when ``--<flag>`` or the bare
+  registration literal ``"<flag>"`` appears in rust/src, rust/tests,
+  scripts/, python/, the Makefile, or .github/workflows.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+import p4_cli
+import rustlex
+from sccore import finding, read_text, surface_missing
+
+PASS_ID = "P7"
+PASS_NAME = "doc-parity"
+CODES = {
+    "SC701": "serve-family CLI flag undocumented in README/docs",
+    "SC702": "HTTP route handled in server.rs but undocumented",
+    "SC703": "DESIGN.md §N reference to a nonexistent section",
+    "SC704": "stale doc flag: backticked --flag not in the tree",
+}
+
+RS_MAIN = os.path.join("rust", "src", "main.rs")
+RS_SERVER = os.path.join("rust", "src", "coordinator", "server.rs")
+DESIGN = "DESIGN.md"
+
+ROUTE_RE = re.compile(r'\(\s*"(GET|POST)"\s*,\s*"(/[^"]*)"\s*\)')
+SECTION_REF_RE = re.compile(r"DESIGN\.md[^\S\n]*\(?§(\d+)")
+DOC_FLAG_RE = re.compile(r"`--([a-z][a-z0-9-]*)")
+
+
+def doc_corpus(root: str):
+    """{relpath: text} for README.md + docs/*.md (sorted, stable)."""
+    out = {}
+    readme = read_text(os.path.join(root, "README.md"))
+    if readme is not None:
+        out["README.md"] = readme
+    docs_dir = os.path.join(root, "docs")
+    if os.path.isdir(docs_dir):
+        for name in sorted(os.listdir(docs_dir)):
+            if name.endswith(".md"):
+                text = read_text(os.path.join(docs_dir, name))
+                if text is not None:
+                    out[os.path.join("docs", name)] = text
+    return out
+
+
+def source_files(root: str, subdirs, exts):
+    """Sorted relpaths of matching files under the given subtrees."""
+    out = []
+    for sub in subdirs:
+        base = os.path.join(root, sub)
+        if os.path.isfile(base):
+            out.append(sub)
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames.sort()
+            for name in sorted(filenames):
+                if any(name.endswith(e) for e in exts) or not exts:
+                    out.append(os.path.relpath(
+                        os.path.join(dirpath, name), root))
+    return out
+
+
+def run(root: str):
+    out = []
+    docs = doc_corpus(root)
+    if "README.md" not in docs:
+        out.append(surface_missing("README.md"))
+    corpus = "\n".join(docs.values())
+
+    # SC701: every serve-family flag must appear as --flag in the docs.
+    main_text = read_text(os.path.join(root, RS_MAIN))
+    if main_text is None:
+        out.append(surface_missing(RS_MAIN))
+    else:
+        main_text = rustlex.cut_test_mod(rustlex.strip_comments(main_text))
+        flags = set()
+        for cmd in p4_cli.FAMILY:
+            got = p4_cli.command_flags(main_text, cmd)
+            if got is None:
+                out.append(surface_missing(
+                    RS_MAIN, f'Args::new("{cmd}")'))
+            else:
+                flags.update(got)
+        for flag in sorted(flags):
+            if f"--{flag}" not in corpus:
+                out.append(finding(
+                    "SC701", flag,
+                    f"serve-family flag '--{flag}' is not documented in "
+                    f"README.md or docs/", RS_MAIN))
+
+    # SC702: every handled route must appear literally in the docs.
+    server_text = read_text(os.path.join(root, RS_SERVER))
+    if server_text is None:
+        out.append(surface_missing(RS_SERVER))
+    else:
+        server_clean = rustlex.cut_test_mod(
+            rustlex.strip_comments(server_text))
+        routes = sorted(set(ROUTE_RE.findall(server_clean)))
+        if not routes:
+            out.append(surface_missing(RS_SERVER, "route match tuples"))
+        for method, path in routes:
+            if path not in corpus:
+                out.append(finding(
+                    "SC702", f"{method}:{path}",
+                    f"HTTP route {method} {path} is handled but not "
+                    f"documented in README.md or docs/", RS_SERVER))
+
+    # SC703: every `DESIGN.md §N` reference resolves to a `## §N`.
+    design_text = read_text(os.path.join(root, DESIGN))
+    if design_text is None:
+        out.append(surface_missing(DESIGN))
+    else:
+        headers = set(re.findall(r"^## §(\d+)\b", design_text, re.M))
+        scan = dict(docs)
+        for rel in source_files(
+                root,
+                ["rust/src", "rust/tests", "scripts", "python",
+                 "Makefile", DESIGN],
+                (".rs", ".py", ".sh", ".md", "Makefile")):
+            text = read_text(os.path.join(root, rel))
+            if text is not None:
+                scan[rel] = text
+        for rel in sorted(scan):
+            for n in sorted(set(SECTION_REF_RE.findall(scan[rel]))):
+                if n not in headers:
+                    out.append(finding(
+                        "SC703", f"{rel}:{n}",
+                        f"{rel} references DESIGN.md §{n}, which has no "
+                        f"'## §{n}' header", rel))
+
+    # SC704: backticked --flags in the docs must exist somewhere real.
+    tree = []
+    for rel in source_files(
+            root,
+            ["rust/src", "rust/tests", "scripts", "python", "Makefile",
+             os.path.join(".github", "workflows")],
+            (".rs", ".py", ".sh", ".yml", ".yaml", "Makefile")):
+        text = read_text(os.path.join(root, rel))
+        if text is not None:
+            tree.append(text)
+    tree = "\n".join(tree)
+    for rel in sorted(docs):
+        for flag in sorted(set(DOC_FLAG_RE.findall(docs[rel]))):
+            if f"--{flag}" not in tree and f'"{flag}"' not in tree:
+                out.append(finding(
+                    "SC704", f"{rel}:{flag}",
+                    f"{rel} documents '--{flag}', which is registered "
+                    f"nowhere in the tree (stale?)", rel))
+    return out

@@ -29,10 +29,15 @@ done
 
 # Static analysis before anything builds (DESIGN.md §14): the
 # cross-language consistency passes — spec mirror, manifest parity,
-# metrics parity, CLI parity, backend gating, test registry — need no
-# cargo or jax, so they run even in cargo-less images and fail the gate
-# in seconds instead of after a full build.
+# metrics parity, CLI parity, backend gating, test registry, doc
+# parity — need no cargo or jax, so they run even in cargo-less images
+# and fail the gate in seconds instead of after a full build.
 python3 scripts/staticcheck
+
+# Documentation link gate: every relative path and heading anchor in
+# the repo's markdown must resolve (stdlib only, same policy as
+# staticcheck).
+python3 scripts/check_md_links.py
 
 cargo build --release
 cargo test -q
@@ -63,6 +68,18 @@ cargo test -q --test proptests block_table_rewind_keeps_allocator_invariants
 # the ring-wraparound property.
 cargo test -q --test trace_events
 
+# Fork/session gate (DESIGN.md §16): n=1 bit-identity with plain
+# decode, greedy-fanout candidate equality, mid-flight prompt-block
+# sharing, beam determinism, session re-admit goldens, and the beam
+# fork/prune allocator proptest.
+cargo test -q --test fork_sessions
+cargo test -q --test proptests beam_fork_prune_keeps_allocator_invariants
+
+# Rustdoc gate: the public API docs must build warning-clean (the
+# doc-parity pass checks the markdown side; this checks the rustdoc
+# side).
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 # plan-check: the checked-in QuantSpec golden fixtures must validate on
 # both sides of the language boundary.  The rust side ran above inside
 # `cargo test` (rust/tests/plan_roundtrip.rs); the python validator is
@@ -84,12 +101,15 @@ if [[ "$BENCH" == 1 ]]; then
     ./target/release/lqer bench kvshared --out BENCH_kvshared.json
     ./target/release/lqer bench chunked --out BENCH_chunked.json
     ./target/release/lqer bench spec --out BENCH_spec.json
+    ./target/release/lqer bench sessions --out BENCH_sessions.json
     python3 scripts/bench_guard.py --bench BENCH_kvpaged.json \
         --baseline BENCH_baseline.json
     python3 scripts/bench_guard.py --bench BENCH_chunked.json \
         --baseline BENCH_baseline_chunked.json
     python3 scripts/bench_guard.py --bench BENCH_spec.json \
         --baseline BENCH_baseline_spec.json
+    python3 scripts/bench_guard.py --bench BENCH_sessions.json \
+        --baseline BENCH_baseline_sessions.json
 fi
 
 if [[ "$FAST" != 1 ]]; then

@@ -272,11 +272,16 @@ def stage_hlo(out_dir: str, trained: dict, models: list[str],
                 # drafting with the full model would verify itself.
                 if rank > 0:
                     draft_gv = M.GraphVariant(act=act, rank=0)
+                    # Both passes are lowered per decode bucket: the
+                    # engine's batched round issues ONE draft launch per
+                    # speculation round and ONE verify launch per tick
+                    # across all lanes (DESIGN.md §13), so the graphs
+                    # must exist at every serving batch, not just b=1.
                     for b in DECODE_BATCHES:
                         needed[(SERVE_MODEL, draft_gv.tag,
                                 "decode_draft", b, 0)] = draft_gv
-                    needed[(SERVE_MODEL, tag, "verify_batch",
-                            1, SPEC_GAMMA + 1)] = gv
+                        needed[(SERVE_MODEL, tag, "verify_batch",
+                                b, SPEC_GAMMA + 1)] = gv
 
     for (name, tag, entry_kind, b, t), gv in sorted(needed.items()):
         cfg, params = trained[name]
@@ -523,8 +528,16 @@ def main() -> None:
                 "buckets": [t for _, t in PREFILL_SHAPES],
             }
             # Self-speculative decoding (DESIGN.md §13): default draft
-            # window for `--speculate` when the CLI passes --gamma 0.
-            serve["spec"] = {"gamma": SPEC_GAMMA}
+            # window for `--speculate` when the CLI passes --gamma 0,
+            # plus the batched graph entry names — both passes are
+            # lowered per decode bucket so the engine's batched round
+            # can draft every lane in one launch and verify every
+            # lane's window in another.
+            serve["spec"] = {
+                "gamma": SPEC_GAMMA,
+                "draft_entry": "decode_draft",
+                "verify_entry": "verify_batch",
+            }
         manifest = {
             "created": time.strftime("%Y-%m-%d %H:%M:%S"),
             "models": {

@@ -56,6 +56,47 @@ def test_verify_batch_matches_sequential_decode(setup):
         assert not changed[pos[lane] + s:].any()
 
 
+def test_verify_batch_lanes_are_independent(setup):
+    """Lane b's logits and K/V rows must not depend on any other lane's
+    window, cache, or position — the property that lets the engine pack
+    heterogeneous per-lane windows (padded with dead rows) into ONE
+    batched verify launch per tick (DESIGN.md §13)."""
+    cfg, params = setup
+    gv = M.GraphVariant(act="none", rank=0)
+    rng = np.random.default_rng(21)
+    b, s, keep = 3, 4, 1
+    pos = np.array([2, 7, 11], np.int32)
+    kc0 = rng.normal(
+        size=(cfg.layers, b, cfg.t_max, cfg.d)).astype(np.float32)
+    vc0 = rng.normal(
+        size=(cfg.layers, b, cfg.t_max, cfg.d)).astype(np.float32)
+    tokens = rng.integers(0, cfg.vocab, size=(b, s)).astype(np.int32)
+
+    out, kc_v, vc_v = M.verify_batch(
+        params, tokens, jnp.asarray(kc0), jnp.asarray(vc0), pos, cfg, gv)
+
+    # Scramble every lane except `keep`: different tokens, caches, and
+    # positions — the garbage a padded batched launch would carry.
+    tokens2 = rng.integers(0, cfg.vocab, size=(b, s)).astype(np.int32)
+    pos2 = np.array([9, 0, 3], np.int32)
+    kc2 = rng.normal(
+        size=(cfg.layers, b, cfg.t_max, cfg.d)).astype(np.float32)
+    vc2 = rng.normal(
+        size=(cfg.layers, b, cfg.t_max, cfg.d)).astype(np.float32)
+    tokens2[keep], pos2[keep] = tokens[keep], pos[keep]
+    kc2[:, keep], vc2[:, keep] = kc0[:, keep], vc0[:, keep]
+
+    out2, kc_v2, vc_v2 = M.verify_batch(
+        params, tokens2, jnp.asarray(kc2), jnp.asarray(vc2), pos2, cfg,
+        gv)
+    np.testing.assert_array_equal(np.asarray(out)[keep],
+                                  np.asarray(out2)[keep])
+    np.testing.assert_array_equal(np.asarray(kc_v)[:, keep],
+                                  np.asarray(kc_v2)[:, keep])
+    np.testing.assert_array_equal(np.asarray(vc_v)[:, keep],
+                                  np.asarray(vc_v2)[:, keep])
+
+
 def test_verify_batch_s1_is_one_decode_step(setup):
     cfg, params = setup
     gv = M.GraphVariant(act="none", rank=0)

@@ -360,6 +360,12 @@ pub trait DecodeBackend {
     fn verify_tokens(&mut self) -> Result<()> {
         bail!("backend has no speculation")
     }
+    fn draft_step_batch(&mut self) -> Result<Vec<f32>> {
+        bail!("backend has no batched speculation")
+    }
+    fn verify_tokens_batch(&mut self) -> Result<Vec<f32>> {
+        bail!("backend has no batched speculation")
+    }
 }
 
 pub struct FakeBackend;
@@ -619,6 +625,40 @@ def test_p5_new_bail_method_without_gate_fires_sc501(tree):
            "    fn fork_lane(&mut self) -> Result<()> {\n"
            "        bail!(\"backend cannot fork\")\n    }")
     assert "SC501:fork_lane" in keys(p5_backend.run(str(tree)))
+
+
+def test_p5_partial_batched_spec_override_fires_sc503(tree):
+    # An impl that claims supports_speculation must override ALL four
+    # gated spec methods — the batched pair included.  Overriding
+    # everything but verify_tokens_batch is a finding, not silent drift.
+    mutate(tree, "rust/src/coordinator/backend.rs",
+           "    fn decode_paged(&mut self) -> Result<Vec<f32>> {\n"
+           "        Ok(vec![])\n    }\n}",
+           "    fn decode_paged(&mut self) -> Result<Vec<f32>> {\n"
+           "        Ok(vec![])\n    }\n"
+           "    fn supports_speculation(&self) -> bool {\n"
+           "        true\n    }\n"
+           "    fn draft_step(&mut self) -> Result<()> {\n"
+           "        Ok(())\n    }\n"
+           "    fn verify_tokens(&mut self) -> Result<()> {\n"
+           "        Ok(())\n    }\n"
+           "    fn draft_step_batch(&mut self) -> Result<Vec<f32>> {\n"
+           "        Ok(vec![])\n    }\n}")
+    found = keys(p5_backend.run(str(tree)))
+    assert "SC503:FakeBackend:verify_tokens_batch" in found
+    assert "SC503:FakeBackend:draft_step_batch" not in found
+
+
+def test_p5_ungated_batched_spec_method_fires_sc501(tree):
+    # A batched spec method whose bail! default is not listed in GATES
+    # would let an unsupported backend panic at runtime instead of
+    # being refused at config time.
+    mutate(tree, "rust/src/coordinator/backend.rs",
+           "    fn vocab(&self) -> usize;",
+           "    fn vocab(&self) -> usize;\n"
+           "    fn draft_tree_batch(&mut self) -> Result<Vec<f32>> {\n"
+           "        bail!(\"backend has no tree speculation\")\n    }")
+    assert "SC501:draft_tree_batch" in keys(p5_backend.run(str(tree)))
 
 
 def test_p5_panic_macro_fires_sc502(tree):

@@ -114,6 +114,14 @@ pub struct ChunkServeInfo {
 #[derive(Debug, Clone)]
 pub struct SpecServeInfo {
     pub gamma: usize,
+    /// Graph entry name of the batched backbone draft step, lowered
+    /// per decode bucket (one launch drafts every lane's next token).
+    /// Legacy manifests omit it; the historical name is the default.
+    pub draft_entry: String,
+    /// Graph entry name of the batched corrected verify pass, lowered
+    /// per decode bucket at window `gamma + 1`.  Legacy manifests omit
+    /// it (their `verify_batch` was lowered at b=1 only).
+    pub verify_entry: String,
 }
 
 #[derive(Debug, Clone)]
@@ -345,6 +353,18 @@ impl Manifest {
                         gamma: s
                             .usize_at("gamma")
                             .path_ctx(|| "serve.spec".to_string())?,
+                        draft_entry: match s.get("draft_entry") {
+                            Some(_) => s
+                                .str_at("draft_entry")
+                                .path_ctx(|| "serve.spec".to_string())?,
+                            None => "decode_draft".to_string(),
+                        },
+                        verify_entry: match s.get("verify_entry") {
+                            Some(_) => s
+                                .str_at("verify_entry")
+                                .path_ctx(|| "serve.spec".to_string())?,
+                            None => "verify_batch".to_string(),
+                        },
                     };
                     anyhow::ensure!(
                         info.gamma >= 1,
@@ -541,11 +561,30 @@ mod tests {
         let body = MINIMAL.replace(
             "\"prefill_shapes\": [[1, 16]]",
             "\"prefill_shapes\": [[1, 16]],
-             \"spec\": {\"gamma\": 4}",
+             \"spec\": {\"gamma\": 4,
+                        \"draft_entry\": \"decode_draft\",
+                        \"verify_entry\": \"verify_batch\"}",
         );
         let dir = write_manifest("spec", &body);
         let m = Manifest::load(&dir).unwrap();
-        assert_eq!(m.serve.spec.as_ref().unwrap().gamma, 4);
+        let sp = m.serve.spec.as_ref().unwrap();
+        assert_eq!(sp.gamma, 4);
+        assert_eq!(sp.draft_entry, "decode_draft");
+        assert_eq!(sp.verify_entry, "verify_batch");
+
+        // entry names are optional: legacy spec manifests carried only
+        // gamma, and the historical graph names are the defaults.
+        let body = MINIMAL.replace(
+            "\"prefill_shapes\": [[1, 16]]",
+            "\"prefill_shapes\": [[1, 16]],
+             \"spec\": {\"gamma\": 2}",
+        );
+        let dir = write_manifest("spec_legacy", &body);
+        let m1 = Manifest::load(&dir).unwrap();
+        let sp1 = m1.serve.spec.as_ref().unwrap();
+        assert_eq!(sp1.gamma, 2);
+        assert_eq!(sp1.draft_entry, "decode_draft");
+        assert_eq!(sp1.verify_entry, "verify_batch");
         // absent on legacy manifests
         let m0 =
             Manifest::load(&write_manifest("spec_none", MINIMAL)).unwrap();

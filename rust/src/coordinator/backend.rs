@@ -199,6 +199,50 @@ pub trait DecodeBackend {
         anyhow::bail!("backend has no speculative verify pass")
     }
 
+    /// One batched draft round across the whole batch: feed
+    /// `tokens[s]` at row `pos[s]` for every lane `s` in `active`,
+    /// append each active lane's K/V row, and return `batch * vocab`
+    /// logits row-major (lane `s`'s row at `s * vocab`; rows of
+    /// inactive lanes are unspecified).  `tables` is per-lane when
+    /// paged (indexed by slot), `None` on a flat cache.  Lanes *not*
+    /// in `active` must not have any live cache row disturbed — a
+    /// lattice that writes every lane parks dead rows in the sentinel
+    /// block (paged) or the `t_max - 1` DUS-clamp row (flat), exactly
+    /// like batched plain decode.  One launch replaces `|active|`
+    /// [`DecodeBackend::draft_step`] calls.
+    fn draft_step_batch(
+        &mut self,
+        _tokens: &[i32],
+        _pos: &[i32],
+        _active: &[usize],
+        _tables: Option<&[BlockTable]>,
+    ) -> Result<Vec<f32>> {
+        anyhow::bail!("backend has no batched speculative draft pass")
+    }
+
+    /// One batched corrected verify pass across the whole batch:
+    /// `tokens` is `batch * width` row-major (lane `s`'s fed window at
+    /// `tokens[s * width ..]`), of which only the first `lens[s]`
+    /// entries are live for lane `s`; feed token `i` at row
+    /// `start_pos[s] + i`, writing each live position's K/V row
+    /// exactly as sequential decode would.  Returns
+    /// `batch * width * vocab` logits row-major — lane `s`, position
+    /// `i` at `(s * width + i) * vocab`; rows past `lens[s]` and rows
+    /// of lanes not in `active` are unspecified, and their writes (if
+    /// the lattice emits them) must be parked dead like
+    /// [`DecodeBackend::draft_step_batch`]'s.  One launch replaces
+    /// `|active|` [`DecodeBackend::verify_tokens`] calls.
+    fn verify_tokens_batch(
+        &mut self,
+        _tokens: &[i32],
+        _lens: &[usize],
+        _start_pos: &[i32],
+        _active: &[usize],
+        _tables: Option<&[BlockTable]>,
+    ) -> Result<Vec<f32>> {
+        anyhow::bail!("backend has no batched speculative verify pass")
+    }
+
     /// Runtime-boundary statistics, when the backend measures them.
     fn exec_stats(&self) -> ExecStats {
         ExecStats::default()
@@ -285,6 +329,21 @@ impl PjrtBackend {
         }
         for &t in &cfg.prefill_buckets {
             runner.executable(&rt, &manifest, "prefill", 1, t)?;
+        }
+        // Speculation graphs: the batched draft round and the batched
+        // verify pass are lowered per decode bucket (manifest
+        // `serve.spec` names the entries); pre-compile them at the
+        // engine's decode batch so a `--speculate` run pays compilation
+        // up front like every other serving graph.  The engine still
+        // gates the spec path on `supports_speculation` (ROADMAP) —
+        // this only proves the artifacts carry the graphs.
+        if cfg.spec.is_some() {
+            if let Some(sp) = &manifest.serve.spec {
+                runner.executable(&rt, &manifest, &sp.draft_entry,
+                                  cfg.decode_batch, 0)?;
+                runner.executable(&rt, &manifest, &sp.verify_entry,
+                                  cfg.decode_batch, sp.gamma + 1)?;
+            }
         }
         let backing = match (cfg.host_cache, &cfg.paged) {
             (true, None) => CacheBacking::Host(HostKvMirror::new(

@@ -173,6 +173,21 @@ pub struct EngineMetrics {
     /// Whole KV blocks released by speculative rewinds (rejected-tail
     /// truncation of lane block tables).
     pub rewind_blocks: u64,
+    /// Model launches issued to the backend (prefill chunks, batched
+    /// decode steps, draft rounds, verify passes) — the host-side
+    /// launch economics the batched speculative path optimizes
+    /// (DESIGN.md §13): per tick, batched speculation spends at most
+    /// `max_γ + 1` launches where the per-lane loop spent
+    /// `B · (γ + 1)`.
+    pub backend_launches: u64,
+    /// Draft-pass launches: one per speculation *round* on the batched
+    /// path (≤ `max_γ` per tick), one per drafted token per lane on
+    /// the serial reference path.
+    pub draft_launches: u64,
+    /// Corrected verify-pass launches: one per speculative tick on the
+    /// batched path, one per lane per tick on the serial reference
+    /// path.
+    pub verify_launches: u64,
     pub prefill_steps: u64,
     pub prefill_ns: u64,
     pub decode_steps: u64,
@@ -261,11 +276,13 @@ impl EngineMetrics {
         let spec = if self.draft_tokens > 0 {
             format!(
                 " | spec {} drafted, {} accepted ({:.0}%), {} blocks \
-                 rewound",
+                 rewound, {} draft + {} verify launches",
                 self.draft_tokens,
                 self.accepted_tokens,
                 self.acceptance_rate() * 100.0,
                 self.rewind_blocks,
+                self.draft_launches,
+                self.verify_launches,
             )
         } else {
             String::new()
@@ -319,8 +336,8 @@ impl EngineMetrics {
              | budget {}/tick (packed mean {:.1}, max {:.0}, prefill \
              share {:.1}) \
              | decode stalled {:.1} ms | verify {:.1} ms swap {:.1} ms \
-             | {} ticks {:.2} ms avg | trace {} events ({} \
-             dropped){spec}{paged}",
+             | {} launches | {} ticks {:.2} ms avg | trace {} events \
+             ({} dropped){spec}{paged}",
             self.completed,
             self.submitted,
             self.rejected,
@@ -355,6 +372,7 @@ impl EngineMetrics {
             self.decode_stall_ms(),
             self.verify_ns as f64 / 1e6,
             self.swap_ns as f64 / 1e6,
+            self.backend_launches,
             self.ticks,
             if self.ticks > 0 {
                 self.tick_ns as f64 / self.ticks as f64 / 1e6

@@ -648,6 +648,27 @@ pub struct Engine<B: DecodeBackend> {
     scratch_active: Vec<usize>,
     scratch_tokens: Vec<i32>,
     scratch_pos: Vec<i32>,
+    /// Beam-group ids present in the current decode step, collected
+    /// once per tick, sorted and deduped — membership checks in the
+    /// sample loop are a binary search instead of a linear scan.
+    scratch_groups: Vec<u64>,
+    /// Speculative-round scratch (DESIGN.md §13, batched path), all
+    /// slot-indexed and reused across ticks: planned depth, base cache
+    /// position, fed-token windows (`batch × (max_γ + 1)` row-major),
+    /// per-lane window lengths, cloned draft RNGs + sampling
+    /// snapshots, and the per-round active-lane list.
+    scratch_gamma: Vec<usize>,
+    scratch_base: Vec<usize>,
+    scratch_fed: Vec<i32>,
+    scratch_lens: Vec<usize>,
+    scratch_rng: Vec<Rng>,
+    scratch_sampling: Vec<Sampling>,
+    scratch_round: Vec<usize>,
+    /// Serve speculation with the PR 6 per-lane draft/verify loop
+    /// instead of the batched round — kept as the bit-exactness
+    /// reference the golden tests and the batched-vs-serial proptest
+    /// compare against ([`Engine::set_spec_serial`]).
+    spec_serial: bool,
     /// Lanes decoding at the top of the current tick — the set the
     /// budget reserved for and the decode step serves (sequences whose
     /// final chunk lands mid-tick join the batch next tick, keeping the
@@ -771,12 +792,31 @@ impl<B: DecodeBackend> Engine<B> {
             scratch_active: Vec::new(),
             scratch_tokens: Vec::new(),
             scratch_pos: Vec::new(),
+            scratch_groups: Vec::new(),
+            scratch_gamma: Vec::new(),
+            scratch_base: Vec::new(),
+            scratch_fed: Vec::new(),
+            scratch_lens: Vec::new(),
+            scratch_rng: Vec::new(),
+            scratch_sampling: Vec::new(),
+            scratch_round: Vec::new(),
+            spec_serial: false,
             tick_decode: Vec::new(),
             tick_gamma: Vec::new(),
             metrics: EngineMetrics::default(),
             recorder,
             tick_idx: 0,
         }
+    }
+
+    /// Route speculative ticks through the per-lane PR 6 draft/verify
+    /// loop instead of the batched round.  Token streams are
+    /// bit-identical either way (the batching changes launch shape,
+    /// not sampling order) — golden tests and the batched-vs-serial
+    /// proptest pin exactly that, and `lqer bench spec` uses it to
+    /// measure the launch-count delta.
+    pub fn set_spec_serial(&mut self, serial: bool) {
+        self.spec_serial = serial;
     }
 
     /// Queue a request for admission (the threaded path does this from
@@ -1556,6 +1596,7 @@ impl<B: DecodeBackend> Engine<B> {
             }
         };
         self.metrics.prefill_steps += 1;
+        self.metrics.backend_launches += 1;
         if logits.len() < bucket * vocab {
             self.fail_prefill(slot, "prefill returned short logits");
             return 0;
@@ -2270,6 +2311,7 @@ impl<B: DecodeBackend> Engine<B> {
             (logits, ns)
         };
         self.metrics.decode_steps += 1;
+        self.metrics.backend_launches += 1;
         self.metrics
             .batch_occupancy
             .record(self.scratch_active.len() as f64);
@@ -2284,33 +2326,33 @@ impl<B: DecodeBackend> Engine<B> {
         anyhow::ensure!(logits.len() >= b * vsize, "decode logits size");
         // Beam-search lanes are re-ranked per group after this loop
         // (from the same batched logits) instead of sampled
-        // independently.
-        let mut beam_groups: Vec<u64> = Vec::new();
+        // independently.  Collect every active lane's group id once,
+        // sort + dedup, then drop the non-beam ids — the sample loop
+        // below tests membership by binary search (O(lanes · log
+        // groups) per tick, not O(lanes²)), and each group is fetched
+        // from the map once here instead of once per lane.
+        self.scratch_groups.clear();
         for &s in &self.scratch_active {
             if let Lane::Decoding(seq) = &self.lanes[s] {
                 if let Some(gid) = seq.group {
-                    if self
-                        .groups
-                        .get(&gid)
-                        .map(|g| g.beams)
-                        .unwrap_or(false)
-                        && !beam_groups.contains(&gid)
-                    {
-                        beam_groups.push(gid);
-                    }
+                    self.scratch_groups.push(gid);
                 }
             }
         }
+        self.scratch_groups.sort_unstable();
+        self.scratch_groups.dedup();
+        let groups = &self.groups;
+        self.scratch_groups
+            .retain(|gid| groups.get(gid).map_or(false, |g| g.beams));
         for i in 0..self.scratch_active.len() {
             let s = self.scratch_active[i];
             let row = &logits[s * vsize..(s + 1) * vsize];
             let Lane::Decoding(seq) = &mut self.lanes[s] else {
                 unreachable!();
             };
-            if seq
-                .group
-                .map_or(false, |gid| beam_groups.contains(&gid))
-            {
+            if seq.group.map_or(false, |gid| {
+                self.scratch_groups.binary_search(&gid).is_ok()
+            }) {
                 continue;
             }
             let tok = sample(row, seq.request.sampling, &mut seq.rng);
@@ -2334,7 +2376,11 @@ impl<B: DecodeBackend> Engine<B> {
             );
             self.maybe_finish(s);
         }
-        for gid in beam_groups {
+        // Ascending-id group order (scratch_groups is sorted); groups
+        // own disjoint lane sets, so expansion order cannot change any
+        // stream.
+        for i in 0..self.scratch_groups.len() {
+            let gid = self.scratch_groups[i];
             self.beam_step(gid, &logits, step_ns);
         }
         Ok(())
@@ -2550,8 +2596,24 @@ impl<B: DecodeBackend> Engine<B> {
         gamma
     }
 
-    /// Speculative decode phase (DESIGN.md §13): one draft/verify round
-    /// per decoding lane instead of the single batched decode step.
+    /// Speculative decode phase (DESIGN.md §13).  Dispatches to the
+    /// batched round ([`Self::decode_step_spec_batched`], the default:
+    /// at most `max_γ + 1` launches per tick across all lanes) or the
+    /// per-lane PR 6 loop ([`Self::decode_step_spec_serial`],
+    /// `B · (γ + 1)` launches, retained as the bit-exactness
+    /// reference).  Both produce identical token streams: speculation
+    /// batching changes launch shape, never sampling order.
+    fn decode_step_spec(&mut self) -> Result<()> {
+        if self.spec_serial {
+            self.decode_step_spec_serial()
+        } else {
+            self.decode_step_spec_batched()
+        }
+    }
+
+    /// Per-lane speculative round (the PR 6 path): one draft/verify
+    /// loop per decoding lane instead of the single batched decode
+    /// step.
     ///
     /// Per lane: draft `γ` tokens with the backbone-only pass (sampling
     /// from a *clone* of the lane RNG, so the real stream state only
@@ -2568,7 +2630,7 @@ impl<B: DecodeBackend> Engine<B> {
     /// every sample actually consumed matches its sequential
     /// counterpart, including the RNG draw order (one draw per emitted
     /// token, none for rejected drafts).
-    fn decode_step_spec(&mut self) -> Result<()> {
+    fn decode_step_spec_serial(&mut self) -> Result<()> {
         if self.paged.is_some() {
             self.ensure_paged_capacity()?;
         }
@@ -2618,6 +2680,10 @@ impl<B: DecodeBackend> Engine<B> {
                 fed.push(d as i32);
             }
             self.metrics.draft_tokens += gamma as u64;
+            // Serial launch economics: one draft launch per token per
+            // lane — what the batched round collapses.
+            self.metrics.draft_launches += gamma as u64;
+            self.metrics.backend_launches += gamma as u64;
             // Verify phase: one corrected pass over all fed tokens.
             // The verify span is the event's duration; the whole round
             // (draft + verify) still lands in `decode_ns` below.
@@ -2636,6 +2702,8 @@ impl<B: DecodeBackend> Engine<B> {
                 (logits, ns)
             };
             self.metrics.decode_steps += 1;
+            self.metrics.verify_launches += 1;
+            self.metrics.backend_launches += 1;
             self.metrics.decode_ns +=
                 now_ns().saturating_sub(round_t0);
             anyhow::ensure!(
@@ -2697,6 +2765,284 @@ impl<B: DecodeBackend> Engine<B> {
             // rejected tail.  Freed tail blocks were allocated fresh
             // for this round or a previous one — never prefix-shared —
             // so a plain `free` is refcount-correct.
+            let new_pos = pos + emitted;
+            self.slots.set_pos(s, new_pos)?;
+            let mut rewound = 0usize;
+            if let Some(p) = &mut self.paged {
+                let bs = p.alloc.block_size();
+                let freed = p.tables[s].truncate_rows(new_pos, bs);
+                self.metrics.rewind_blocks += freed.len() as u64;
+                rewound = freed.len();
+                for id in freed {
+                    p.alloc.free(id);
+                }
+            }
+            self.recorder.emit(
+                self.tick_idx,
+                rid,
+                Some(s),
+                verify_ns,
+                TraceEvent::SpecRound { gamma, accepted, rewound },
+            );
+            self.maybe_finish(s);
+        }
+        self.metrics
+            .batch_occupancy
+            .record(self.scratch_active.len() as f64);
+        if let Some(p) = &self.paged {
+            self.metrics.kv_util.record(p.alloc.utilization() * 100.0);
+        }
+        Ok(())
+    }
+
+    /// Batched speculative round: the whole batch advances through one
+    /// phase-structured launch sequence per tick instead of a
+    /// draft/verify loop per lane.
+    ///
+    /// 1. **Plan** — grow every decoding lane's block table up front
+    ///    ([`Self::grow_for_speculation`]), snapshot per-lane depth
+    ///    `γ_s`, base position, sampling mode, and a *clone* of the
+    ///    lane RNG for drafting.
+    /// 2. **Draft** — `max_γ` rounds of one batched
+    ///    [`DecodeBackend::draft_step_batch`] launch each; a lane
+    ///    whose `γ_s` is exhausted drops out of later rounds and its
+    ///    lattice row lands dead (sentinel block / DUS-clamp row),
+    ///    exactly like idle lanes under plain batched decode.
+    /// 3. **Verify** — one [`DecodeBackend::verify_tokens_batch`]
+    ///    launch over every lane's fed window (`γ_s + 1` live rows,
+    ///    padded to `max_γ + 1`).
+    /// 4. **Accept** — the per-lane accept/EWMA/rewind walk of the
+    ///    serial path, unchanged, over the batched logits.
+    ///
+    /// Launch count per tick: at most `max_γ + 1`, down from
+    /// `B · (γ + 1)`.  Bit-exactness with the serial path is by
+    /// construction — each lane's draft RNG clone and accept-walk RNG
+    /// are independent of every other lane's, the model is
+    /// lane-independent, and the accept walk runs in lane order — so
+    /// batching changes launch shape, not sampling order.  One
+    /// observable difference under a *starved* pool: growing all
+    /// tables before any lane rewinds can shrink a later lane's γ
+    /// where the serial path's interleaved rewinds would have freed
+    /// blocks first.  Depth only bounds how far a round speculates —
+    /// the emitted stream is identical, only draft-volume metrics can
+    /// differ.
+    fn decode_step_spec_batched(&mut self) -> Result<()> {
+        if self.paged.is_some() {
+            self.ensure_paged_capacity()?;
+        }
+        self.scratch_active.clear();
+        for i in 0..self.tick_decode.len() {
+            let s = self.tick_decode[i];
+            if self.lanes[s].is_decoding() {
+                self.scratch_active.push(s);
+            }
+        }
+        if self.scratch_active.is_empty() {
+            return Ok(());
+        }
+        let b = self.slots.batch();
+        let vsize = self.backend.vocab();
+        let round_t0 = now_ns();
+
+        // Phase 1 — plan.  Grow every lane's table first (the serial
+        // path interleaved growth with rewinds; see the doc comment),
+        // then snapshot the per-lane round state into the slot-indexed
+        // scratch.
+        self.scratch_gamma.clear();
+        self.scratch_gamma.resize(b, 0);
+        self.scratch_base.clear();
+        self.scratch_base.resize(b, 0);
+        self.scratch_lens.clear();
+        self.scratch_lens.resize(b, 0);
+        self.scratch_sampling.clear();
+        self.scratch_sampling.resize(b, Sampling::Greedy);
+        self.scratch_rng.resize_with(b, || Rng::new(0));
+        let mut max_gamma = 0usize;
+        for i in 0..self.scratch_active.len() {
+            let s = self.scratch_active[i];
+            let gamma = self.grow_for_speculation(s, self.tick_gamma[s]);
+            let pos = self.slots.pos(s);
+            let Lane::Decoding(seq) = &self.lanes[s] else {
+                unreachable!();
+            };
+            self.scratch_gamma[s] = gamma;
+            self.scratch_base[s] = pos;
+            self.scratch_lens[s] = gamma + 1;
+            self.scratch_sampling[s] = seq.request.sampling;
+            self.scratch_rng[s] = seq.rng.clone();
+            max_gamma = max_gamma.max(gamma);
+        }
+        let width = max_gamma + 1;
+        self.scratch_fed.clear();
+        self.scratch_fed.resize(b * width, 0);
+        for i in 0..self.scratch_active.len() {
+            let s = self.scratch_active[i];
+            let Lane::Decoding(seq) = &self.lanes[s] else {
+                unreachable!();
+            };
+            self.scratch_fed[s * width] = seq.last_token as i32;
+        }
+
+        // Phase 2 — batched draft rounds: one launch per round, each
+        // lane sampling its proposal from its own RNG clone.
+        // `scratch_pos` starts from the true per-slot positions so
+        // lanes outside the round keep the same dead-write row plain
+        // batched decode gives them.
+        for r in 0..max_gamma {
+            self.scratch_round.clear();
+            self.scratch_tokens.clear();
+            self.scratch_tokens.resize(b, 0);
+            self.slots.pos_into(&mut self.scratch_pos);
+            for i in 0..self.scratch_active.len() {
+                let s = self.scratch_active[i];
+                if self.scratch_gamma[s] > r {
+                    self.scratch_round.push(s);
+                    self.scratch_tokens[s] =
+                        self.scratch_fed[s * width + r];
+                    self.scratch_pos[s] =
+                        (self.scratch_base[s] + r) as i32;
+                }
+            }
+            if self.scratch_round.is_empty() {
+                break; // starved pool planned γ = 0 everywhere
+            }
+            let logits = match &self.paged {
+                Some(p) => self.backend.draft_step_batch(
+                    &self.scratch_tokens,
+                    &self.scratch_pos,
+                    &self.scratch_round,
+                    Some(&p.tables),
+                )?,
+                None => self.backend.draft_step_batch(
+                    &self.scratch_tokens,
+                    &self.scratch_pos,
+                    &self.scratch_round,
+                    None,
+                )?,
+            };
+            self.metrics.draft_launches += 1;
+            self.metrics.backend_launches += 1;
+            anyhow::ensure!(
+                logits.len() >= b * vsize,
+                "draft logits size"
+            );
+            for i in 0..self.scratch_round.len() {
+                let s = self.scratch_round[i];
+                let row = &logits[s * vsize..(s + 1) * vsize];
+                let d = sample(
+                    row,
+                    self.scratch_sampling[s],
+                    &mut self.scratch_rng[s],
+                );
+                self.scratch_fed[s * width + r + 1] = d as i32;
+                self.metrics.draft_tokens += 1;
+            }
+        }
+
+        // Phase 3 — one batched verify over every lane's fed window.
+        self.slots.pos_into(&mut self.scratch_pos);
+        for i in 0..self.scratch_active.len() {
+            let s = self.scratch_active[i];
+            self.scratch_pos[s] = self.scratch_base[s] as i32;
+        }
+        let (logits, verify_ns) = {
+            let span = trace::Span::new(&mut self.metrics.verify_ns);
+            let logits = match &self.paged {
+                Some(p) => self.backend.verify_tokens_batch(
+                    &self.scratch_fed,
+                    &self.scratch_lens,
+                    &self.scratch_pos,
+                    &self.scratch_active,
+                    Some(&p.tables),
+                )?,
+                None => self.backend.verify_tokens_batch(
+                    &self.scratch_fed,
+                    &self.scratch_lens,
+                    &self.scratch_pos,
+                    &self.scratch_active,
+                    None,
+                )?,
+            };
+            let ns = span.elapsed_ns();
+            (logits, ns)
+        };
+        self.metrics.verify_launches += 1;
+        self.metrics.backend_launches += 1;
+        self.metrics.decode_ns += now_ns().saturating_sub(round_t0);
+        anyhow::ensure!(
+            logits.len() >= b * width * vsize,
+            "verify logits size"
+        );
+
+        // Phase 4 — per-lane accept/EWMA/rewind walk over the batched
+        // logits, in lane order: identical to the serial path row for
+        // row, draw for draw.
+        for i in 0..self.scratch_active.len() {
+            let s = self.scratch_active[i];
+            let gamma = self.scratch_gamma[s];
+            let pos = self.scratch_base[s];
+            let fed_len = self.scratch_lens[s];
+            let sampling = self.scratch_sampling[s];
+            // This lane's verify window still cost a full corrected
+            // pass; `decode_steps` stays per-lane so modeled cost
+            // units and the `spec_rounds == decode_steps` bench
+            // invariant carry over from the serial path.
+            self.metrics.decode_steps += 1;
+            let mut emitted = 0usize;
+            let mut accepted = 0usize;
+            let rid;
+            {
+                let Lane::Decoding(seq) = &mut self.lanes[s] else {
+                    unreachable!();
+                };
+                rid = seq.request.id;
+                for j in 0..fed_len {
+                    let row =
+                        &logits[(s * width + j) * vsize..][..vsize];
+                    let tok = sample(row, sampling, &mut seq.rng);
+                    seq.generated.push(tok);
+                    seq.last_token = tok;
+                    emitted += 1;
+                    let now = now_ns();
+                    self.metrics.itl_ms.record(ns_to_ms(
+                        now.saturating_sub(seq.last_token_at),
+                    ));
+                    seq.last_token_at = now;
+                    self.metrics.tokens_generated += 1;
+                    if tok == self.eos
+                        || seq.generated.len()
+                            >= seq.request.max_new_tokens
+                    {
+                        break;
+                    }
+                    if j + 1 < fed_len {
+                        if tok as i32
+                            != self.scratch_fed[s * width + j + 1]
+                        {
+                            break;
+                        }
+                        accepted += 1;
+                    }
+                }
+                self.metrics.accepted_tokens += accepted as u64;
+                // γ adaptation: identical EWMA walk to the serial path.
+                if gamma > 0 {
+                    let rate = accepted as f64 / gamma as f64;
+                    seq.accept_ewma =
+                        0.7 * seq.accept_ewma + 0.3 * rate;
+                    let max_g =
+                        self.cfg.spec.as_ref().unwrap().gamma;
+                    if seq.accept_ewma > 0.8 {
+                        seq.gamma = (seq.gamma + 1).min(max_g);
+                    } else if seq.accept_ewma < 0.5 {
+                        seq.gamma = seq.gamma.saturating_sub(1).max(1);
+                    }
+                }
+            }
+            // Commit the emitted prefix, rewind the rejected tail —
+            // freed tail blocks were pushed fresh by this or an
+            // earlier round, never prefix-shared, so a plain `free`
+            // is refcount-correct.
             let new_pos = pos + emitted;
             self.slots.set_pos(s, new_pos)?;
             let mut rewound = 0usize;

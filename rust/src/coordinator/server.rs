@@ -244,6 +244,12 @@ fn route(
                      json::num(m.acceptance_rate())),
                     ("rewind_blocks",
                      json::num(m.rewind_blocks as f64)),
+                    ("backend_launches",
+                     json::num(m.backend_launches as f64)),
+                    ("draft_launches",
+                     json::num(m.draft_launches as f64)),
+                    ("verify_launches",
+                     json::num(m.verify_launches as f64)),
                     ("prefill_steps",
                      json::num(m.prefill_steps as f64)),
                     ("prefill_ms_avg",
@@ -372,6 +378,9 @@ fn prom_text(m: &EngineMetrics) -> String {
         ("draft_tokens", m.draft_tokens as f64),
         ("accepted_tokens", m.accepted_tokens as f64),
         ("rewind_blocks", m.rewind_blocks as f64),
+        ("backend_launches", m.backend_launches as f64),
+        ("draft_launches", m.draft_launches as f64),
+        ("verify_launches", m.verify_launches as f64),
         ("prefill_steps", m.prefill_steps as f64),
         ("decode_steps", m.decode_steps as f64),
         ("decode_stall_ms", m.decode_stall_ms()),
@@ -671,6 +680,9 @@ mod tests {
         assert!(text.contains("# TYPE lqer_waiting gauge"));
         assert!(text.contains("lqer_ttft_ms_p50 0\n"));
         assert!(text.contains("lqer_trace_events_total 0\n"));
+        assert!(text.contains("# TYPE lqer_backend_launches counter"));
+        assert!(text.contains("lqer_draft_launches 0\n"));
+        assert!(text.contains("lqer_verify_launches 0\n"));
         assert!(text.contains("lqer_build_info{version=\""));
         // Every line is either a comment or `name value`.
         for line in text.lines() {

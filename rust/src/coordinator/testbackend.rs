@@ -528,6 +528,142 @@ impl DecodeBackend for FakeBackend {
         Ok(logits)
     }
 
+    fn draft_step_batch(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        active: &[usize],
+        tables: Option<&[BlockTable]>,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            tokens.len() == self.batch && pos.len() == self.batch,
+            "draft batch"
+        );
+        if let Some(t) = tables {
+            anyhow::ensure!(
+                t.len() == self.batch && self.paged.is_some(),
+                "draft tables"
+            );
+        }
+        let mut logits = vec![0.0f32; self.batch * self.vocab];
+        let mut is_active = vec![false; self.batch];
+        for &s in active {
+            is_active[s] = true;
+            let p = pos[s] as usize;
+            let table = tables.map(|t| &t[s]);
+            self.check_spec_row(table, p)?;
+            let mut row = match table {
+                Some(t) => self.lane_logits_paged(t, p, tokens[s]),
+                None => self.lane_logits(s, p, tokens[s]),
+            };
+            // Same backbone quantization-error model as the per-lane
+            // draft pass — hash of (position, token), lane-blind, so
+            // batched and serial drafts diverge at identical points.
+            if let Some(idx) = self.draft_skew(p, tokens[s]) {
+                row[idx] = 2.0;
+            }
+            logits[s * self.vocab..(s + 1) * self.vocab]
+                .copy_from_slice(&row);
+            match table {
+                Some(t) => self.write_row_paged(t, tokens[s], p),
+                None => self.write_row(s, tokens[s], p),
+            }
+        }
+        if self.mode == FakeCacheMode::Device {
+            // The DUS lattice writes one row for every lane; lanes the
+            // round dropped (γ exhausted, idle, mid-prefill) park
+            // theirs exactly like plain batched decode — the sentinel
+            // block when beyond-table, the clamp row when flat.
+            for b in 0..self.batch {
+                if is_active[b] {
+                    continue;
+                }
+                match tables {
+                    Some(t) => self.write_row_paged(
+                        &t[b], tokens[b], pos[b] as usize),
+                    None => self.write_row(
+                        b, tokens[b], pos[b] as usize),
+                }
+            }
+        }
+        Ok(logits)
+    }
+
+    fn verify_tokens_batch(
+        &mut self,
+        tokens: &[i32],
+        lens: &[usize],
+        start_pos: &[i32],
+        active: &[usize],
+        tables: Option<&[BlockTable]>,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            lens.len() == self.batch
+                && start_pos.len() == self.batch
+                && !tokens.is_empty()
+                && tokens.len() % self.batch == 0,
+            "verify batch"
+        );
+        let width = tokens.len() / self.batch;
+        if let Some(t) = tables {
+            anyhow::ensure!(
+                t.len() == self.batch && self.paged.is_some(),
+                "verify tables"
+            );
+        }
+        let mut logits = vec![0.0f32; self.batch * width * self.vocab];
+        let mut is_active = vec![false; self.batch];
+        for &s in active {
+            is_active[s] = true;
+            anyhow::ensure!(
+                (1..=width).contains(&lens[s]),
+                "verify window for lane {s}"
+            );
+            let table = tables.map(|t| &t[s]);
+            for i in 0..lens[s] {
+                let tok = tokens[s * width + i];
+                let p = start_pos[s] as usize + i;
+                self.check_spec_row(table, p)?;
+                // Row i reads everything below p — including the rows
+                // this pass wrote for the lane's earlier tokens and
+                // nothing of any other lane; lane independence is what
+                // makes one batched launch bit-identical to per-lane
+                // verify.
+                let row = match table {
+                    Some(t) => self.lane_logits_paged(t, p, tok),
+                    None => self.lane_logits(s, p, tok),
+                };
+                logits[(s * width + i) * self.vocab..][..self.vocab]
+                    .copy_from_slice(&row);
+                match table {
+                    Some(t) => self.write_row_paged(t, tok, p),
+                    None => self.write_row(s, tok, p),
+                }
+            }
+        }
+        if self.mode == FakeCacheMode::Device {
+            // The unrolled lattice writes `width` rows per lane: the
+            // padded tail of a short window and every row of a dropped
+            // lane land dead — beyond-table rows park in the sentinel,
+            // flat rows past a lane's committed prefix are never read
+            // before a later pass rewrites them (DUS clamp at
+            // `t_max - 1`).
+            for b in 0..self.batch {
+                let from = if is_active[b] { lens[b] } else { 0 };
+                for i in from..width {
+                    let p = start_pos[b] as usize + i;
+                    match tables {
+                        Some(t) => self.write_row_paged(
+                            &t[b], tokens[b * width + i], p),
+                        None => self.write_row(
+                            b, tokens[b * width + i], p),
+                    }
+                }
+            }
+        }
+        Ok(logits)
+    }
+
     fn copy_block(&mut self, src: u32, dst: u32) -> Result<()> {
         let (store, _) = self.paged.as_mut().expect("paged store");
         store.copy_block(src, dst)

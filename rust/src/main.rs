@@ -1297,15 +1297,18 @@ fn bench_spec(a: &Args) -> Result<()> {
             .collect()
     };
 
-    // One lane: a decode step streams the weights for exactly one
-    // token (baseline) or one per-lane speculation round, so the
-    // modeled units below map 1:1 onto metric counters.
-    let drive = |spec: Option<SpecConfig>|
+    // The modeled-cost drives run one lane: a decode step streams the
+    // weights for exactly one token (baseline) or one per-lane
+    // speculation round, so the modeled units below map 1:1 onto
+    // metric counters.  The launch-economics drives run `batch` lanes,
+    // with `serial` flipping the engine onto the retained per-lane
+    // speculation loop.
+    let drive = |batch: usize, spec: Option<SpecConfig>, serial: bool|
         -> Result<(EngineMetrics, Vec<Vec<u32>>, Vec<trace::TraceRecord>)> {
         let cfg = EngineConfig {
             model: "fake".into(),
             method: "fake".into(),
-            decode_batch: 1,
+            decode_batch: batch,
             prefill_buckets: buckets.clone(),
             tokens_per_step: 0, // auto: batch + largest bucket
             host_cache: true,
@@ -1319,10 +1322,11 @@ fn bench_spec(a: &Args) -> Result<()> {
         };
         let mut engine = Engine::with_backend(
             FakeBackend::new(FakeCacheMode::Host, VOCAB, LAYERS, DIM,
-                             T_MAX, 1),
+                             T_MAX, batch),
             cfg,
             NO_EOS,
         );
+        engine.set_spec_serial(serial);
         let mut rxs = Vec::new();
         for r in mk_requests() {
             let (tx, rx) = std::sync::mpsc::channel();
@@ -1344,9 +1348,9 @@ fn bench_spec(a: &Args) -> Result<()> {
         Ok((engine.metrics_snapshot(), streams, records))
     };
 
-    let (base_m, base_streams, base_trace) = drive(None)?;
+    let (base_m, base_streams, base_trace) = drive(1, None, false)?;
     let (spec_m, spec_streams, spec_trace) =
-        drive(Some(SpecConfig { gamma }))?;
+        drive(1, Some(SpecConfig { gamma }), false)?;
     anyhow::ensure!(
         spec_streams == base_streams,
         "speculative token streams diverged from the baseline \
@@ -1422,6 +1426,58 @@ fn bench_spec(a: &Args) -> Result<()> {
     let tokens = base_m.tokens_generated as f64;
     let speedup = units_base / units_spec.max(1e-9);
 
+    // Launch economics on a multi-lane engine: the batched round must
+    // collapse the per-lane B·(γ+1) launch pattern into at most γ
+    // draft launches plus one verify launch per tick, while emitting
+    // bit-identical streams to the retained per-lane loop.
+    const LANES: usize = 4;
+    let (b4_m, b4_streams, _) =
+        drive(LANES, Some(SpecConfig { gamma }), false)?;
+    let (s4_m, s4_streams, _) =
+        drive(LANES, Some(SpecConfig { gamma }), true)?;
+    anyhow::ensure!(
+        b4_streams == s4_streams,
+        "batched speculation diverged from the per-lane loop at \
+         batch {LANES} (the golden invariant — see \
+         rust/tests/spec_decode.rs)"
+    );
+    anyhow::ensure!(
+        b4_m.verify_launches <= b4_m.ticks,
+        "more than one verify launch per tick: {} launches over {} \
+         ticks",
+        b4_m.verify_launches,
+        b4_m.ticks
+    );
+    anyhow::ensure!(
+        b4_m.draft_launches <= gamma as u64 * b4_m.verify_launches,
+        "more than γ draft launches per verify tick: {} draft vs {} \
+         verify launches at γ {gamma}",
+        b4_m.draft_launches,
+        b4_m.verify_launches
+    );
+    if requests >= 2 * LANES {
+        anyhow::ensure!(
+            b4_m.verify_launches < b4_m.decode_steps,
+            "batched verify never served more than one lane per \
+             launch ({} launches for {} lane-rounds)",
+            b4_m.verify_launches,
+            b4_m.decode_steps
+        );
+        anyhow::ensure!(
+            b4_m.draft_tokens > b4_m.draft_launches,
+            "batched draft rounds never carried more than one lane \
+             ({} tokens over {} launches)",
+            b4_m.draft_tokens,
+            b4_m.draft_launches
+        );
+    }
+    let b4_launches = b4_m.draft_launches + b4_m.verify_launches;
+    let s4_launches = s4_m.draft_launches + s4_m.verify_launches;
+    let launches_per_token =
+        b4_launches as f64 / b4_m.tokens_generated.max(1) as f64;
+    let launch_reduction =
+        s4_launches as f64 / b4_launches.max(1) as f64;
+
     let out = json::obj(vec![
         ("suite", json::s("spec")),
         ("requests", json::num(requests as f64)),
@@ -1461,6 +1517,22 @@ fn bench_spec(a: &Args) -> Result<()> {
              json::num(1e3 * tokens / units_base.max(1e-9))),
         ])),
         ("spec_speedup", json::num(speedup)),
+        // Launch economics of the batched round at LANES lanes.
+        // `launches_per_token` is armed lower-is-better in the guard;
+        // the launch *counts* and the reduction ratio are recorded as
+        // context (the hard bounds are the in-run ensure!s above).
+        ("batched", json::obj(vec![
+            ("decode_batch", json::num(LANES as f64)),
+            ("completed", json::num(b4_m.completed as f64)),
+            ("tokens", json::num(b4_m.tokens_generated as f64)),
+            ("draft_launches",
+             json::num(b4_m.draft_launches as f64)),
+            ("verify_launches",
+             json::num(b4_m.verify_launches as f64)),
+            ("serial_launches", json::num(s4_launches as f64)),
+            ("launch_reduction", json::num(launch_reduction)),
+            ("launches_per_token", json::num(launches_per_token)),
+        ])),
         // Wall-clock based, so reported but never armed in the guard.
         ("trace_overhead_pct", json::num(overhead_pct)),
     ]);
@@ -1508,6 +1580,14 @@ fn bench_spec(a: &Args) -> Result<()> {
         "flight recorder: {} events, {per_event_ns:.0} ns/event, \
          {overhead_pct:.3}% of tick time (budget 2%)",
         spec_m.trace_events_total
+    );
+    println!(
+        "batched speculation ({LANES} lanes): {} draft + {} verify \
+         launches for {} tokens ({launches_per_token:.2} \
+         launches/token, {launch_reduction:.1}x fewer than per-lane)",
+        b4_m.draft_launches,
+        b4_m.verify_launches,
+        b4_m.tokens_generated
     );
     println!("wrote {path}");
     Ok(())

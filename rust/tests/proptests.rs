@@ -758,3 +758,139 @@ fn beam_fork_prune_keeps_allocator_invariants() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Engine: the batched speculative round is stream-identical to the
+// per-lane loop under random lane counts, heterogeneous depths, and
+// mid-speculation preemption, and neither path leaks lanes or blocks
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batched_speculation_matches_serial_under_preemption() {
+    use std::sync::mpsc;
+
+    use lqer::coordinator::testbackend::{FakeBackend, FakeCacheMode};
+    use lqer::coordinator::{
+        AdmissionPolicy, Engine, EngineConfig, PagedKvConfig, Request,
+        Sampling, SpecConfig,
+    };
+
+    const VOCAB: usize = 40;
+    const T_MAX: usize = 64;
+    const BS: usize = 8;
+    const EOS: u32 = 2;
+
+    let gen = USize { lo: 0, hi: 1 << 20 };
+    check("spec-batched-vs-serial", 40, &gen, |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        // Random engine shape: lane count, pool size (small enough to
+        // preempt mid-speculation on many seeds), draft depth.
+        let batch = 1 + rng.below(3);
+        let usable = 6 + rng.below(5);
+        let gamma = 1 + rng.below(4);
+        // Random workload: mixed prompt lengths, length limits (which
+        // clamp per-lane γ near each stream's end — heterogeneity),
+        // greedy and seeded top-k lanes, EOS reachable.
+        let requests: Vec<Request> = (0..2 + rng.below(5) as u64)
+            .map(|i| Request {
+                id: i + 1,
+                prompt: (0..1 + rng.below(14))
+                    .map(|_| rng.below(VOCAB) as u32)
+                    .collect(),
+                max_new_tokens: 1 + rng.below(20),
+                sampling: if rng.below(2) == 0 {
+                    Sampling::Greedy
+                } else {
+                    Sampling::TopK {
+                        k: 5,
+                        temperature: 0.7,
+                        seed: 11,
+                    }
+                },
+                priority: Default::default(),
+                n: 1,
+                beams: 0,
+                session: None,
+            })
+            .collect();
+        let cfg = EngineConfig {
+            model: "fake".into(),
+            method: "fake".into(),
+            decode_batch: batch,
+            prefill_buckets: vec![8, 16],
+            tokens_per_step: 0,
+            host_cache: false,
+            paged: Some(PagedKvConfig {
+                block_size: BS,
+                num_blocks: usable + 1, // + sentinel
+                prefix_sharing: false,
+                swap_blocks: 0,
+                session_blocks: 0,
+            }),
+            spec: Some(SpecConfig { gamma }),
+            admission: AdmissionPolicy::Wait {
+                queue_depth: 64,
+                deadline_ms: 0,
+            },
+            trace_capacity: 0,
+        };
+        let run = |serial: bool| -> Result<Vec<(u64, Vec<u32>)>, String> {
+            let mut engine = Engine::with_backend(
+                FakeBackend::new_paged(
+                    FakeCacheMode::Host, VOCAB, 2, 4, T_MAX, batch,
+                    usable + 1, BS,
+                ),
+                cfg.clone(),
+                EOS,
+            );
+            engine.set_spec_serial(serial);
+            let mut rxs = Vec::new();
+            for r in &requests {
+                let (tx, rx) = mpsc::channel();
+                engine.enqueue(r.clone(), tx);
+                rxs.push(rx);
+            }
+            let mut guard = 0;
+            while engine.has_work() {
+                engine.tick();
+                guard += 1;
+                if guard >= 200_000 {
+                    return Err("engine did not drain".into());
+                }
+            }
+            if engine.free_slots() != engine.kv_batch() {
+                return Err(format!(
+                    "lane leak: {}/{} free",
+                    engine.free_slots(),
+                    engine.kv_batch()
+                ));
+            }
+            let m = engine.metrics_snapshot();
+            if engine.free_blocks() as u64 != m.kv_blocks_total {
+                return Err(format!(
+                    "block leak: {}/{} free",
+                    engine.free_blocks(),
+                    m.kv_blocks_total
+                ));
+            }
+            let mut out = Vec::new();
+            for rx in rxs {
+                let r = rx
+                    .recv()
+                    .map_err(|_| "reply sender dropped".to_string())?;
+                out.push((r.id, r.tokens));
+            }
+            Ok(out)
+        };
+        let batched = run(false)?;
+        let serial_out = run(true)?;
+        if batched != serial_out {
+            return Err(format!(
+                "streams diverged (batch {batch}, γ {gamma}, pool \
+                 {usable}): batched {batched:?} vs serial \
+                 {serial_out:?}"
+            ));
+        }
+        Ok(())
+    });
+}

@@ -18,6 +18,7 @@
 use std::sync::mpsc;
 
 use lqer::coordinator::testbackend::{FakeBackend, FakeCacheMode};
+use lqer::coordinator::trace::TraceEvent;
 use lqer::coordinator::{
     AdmissionPolicy, Engine, EngineConfig, EngineMetrics, PagedKvConfig,
     Request, Response, Sampling, SpecConfig,
@@ -122,6 +123,13 @@ fn golden_requests(n: u64) -> Vec<Request> {
             }
         })
         .collect()
+}
+
+/// Flip the engine onto the retained per-lane speculation loop — the
+/// bit-exactness reference the batched round is pinned against.
+fn serial(mut engine: Engine<FakeBackend>) -> Engine<FakeBackend> {
+    engine.set_spec_serial(true);
+    engine
 }
 
 fn assert_same_outputs(a: &[Response], b: &[Response], what: &str) {
@@ -243,6 +251,20 @@ fn preemption_during_speculation_replays_identically() {
     assert_eq!(rm.preemptions, 0);
     assert_same_outputs(&reference, &starved,
                         "preempted speculative vs ample sequential");
+
+    // The per-lane loop under the same starved pool replays to the
+    // same streams: preemption mid-speculation is path-independent.
+    let (starved_serial, ssm) = run_requests(
+        serial(Engine::with_backend(
+            paged(batch, 6),
+            cfg(batch, Some(6), Some(SpecConfig { gamma: 4 })),
+            no_eos,
+        )),
+        &requests,
+    );
+    assert!(ssm.preemptions > 0);
+    assert_same_outputs(&reference, &starved_serial,
+                        "preempted per-lane speculative vs ample");
 }
 
 // ---------------------------------------------------------------------------
@@ -326,5 +348,211 @@ fn modeled_speedup_clears_1_3x_at_healthy_acceptance() {
         "lanes never drafted deeply ({} drafts / {} verifies)",
         spec_m.draft_tokens,
         spec_m.decode_steps
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Batched round vs per-lane loop: same streams, collapsed launches
+// ---------------------------------------------------------------------------
+
+/// The launch-economics bounds of the batched round (at most one draft
+/// launch per round and one verify launch per tick) plus the serial
+/// path's identities (one draft launch per drafted token, one verify
+/// launch per lane round).
+fn assert_launch_economics(
+    batched: &EngineMetrics,
+    serial_m: &EngineMetrics,
+    gamma: u64,
+) {
+    assert!(
+        batched.draft_launches <= gamma * batched.verify_launches,
+        "batched: more than γ draft rounds per verify tick \
+         ({} draft launches, {} verify launches)",
+        batched.draft_launches,
+        batched.verify_launches
+    );
+    assert!(
+        batched.verify_launches < batched.decode_steps,
+        "batched verify never served more than one lane per launch \
+         ({} launches for {} lane-rounds)",
+        batched.verify_launches,
+        batched.decode_steps
+    );
+    assert!(
+        batched.draft_tokens > batched.draft_launches,
+        "batched draft rounds never carried more than one lane \
+         ({} tokens over {} launches)",
+        batched.draft_tokens,
+        batched.draft_launches
+    );
+    assert_eq!(
+        serial_m.draft_launches, serial_m.draft_tokens,
+        "serial path: one draft launch per drafted token"
+    );
+    assert_eq!(
+        serial_m.verify_launches, serial_m.decode_steps,
+        "serial path: one verify launch per lane round"
+    );
+}
+
+#[test]
+fn batched_flat_equals_serial_and_sequential() {
+    let batch = 3;
+    let requests = golden_requests(12);
+
+    let (seq, _) =
+        run_requests(Engine::with_backend(flat(batch),
+                                          cfg(batch, None, None), EOS),
+                     &requests);
+    let (batched, bm) = run_requests(
+        Engine::with_backend(
+            flat(batch),
+            cfg(batch, None, Some(SpecConfig { gamma: 4 })),
+            EOS,
+        ),
+        &requests,
+    );
+    let (per_lane, sm) = run_requests(
+        serial(Engine::with_backend(
+            flat(batch),
+            cfg(batch, None, Some(SpecConfig { gamma: 4 })),
+            EOS,
+        )),
+        &requests,
+    );
+
+    assert_same_outputs(&seq, &batched, "flat batched vs sequential");
+    assert_same_outputs(&per_lane, &batched,
+                        "flat batched vs per-lane");
+    // Flat lanes never starve a block pool, so the batched round's
+    // up-front table growth plans exactly the serial depths: the two
+    // paths draft and accept token-for-token, not just stream-equal.
+    assert_eq!(bm.draft_tokens, sm.draft_tokens);
+    assert_eq!(bm.accepted_tokens, sm.accepted_tokens);
+    assert_eq!(bm.decode_steps, sm.decode_steps);
+    assert_launch_economics(&bm, &sm, 4);
+    assert!(
+        bm.backend_launches < sm.backend_launches,
+        "batching must strictly reduce total launches \
+         ({} batched vs {} serial)",
+        bm.backend_launches,
+        sm.backend_launches
+    );
+}
+
+#[test]
+fn batched_paged_equals_serial_and_sequential() {
+    let batch = 3;
+    let ample = batch * T_MAX / BS;
+    let requests = golden_requests(12);
+
+    let (seq, _) =
+        run_requests(Engine::with_backend(flat(batch),
+                                          cfg(batch, None, None), EOS),
+                     &requests);
+    let (batched, bm) = run_requests(
+        Engine::with_backend(
+            paged(batch, ample),
+            cfg(batch, Some(ample), Some(SpecConfig { gamma: 4 })),
+            EOS,
+        ),
+        &requests,
+    );
+    let (per_lane, sm) = run_requests(
+        serial(Engine::with_backend(
+            paged(batch, ample),
+            cfg(batch, Some(ample), Some(SpecConfig { gamma: 4 })),
+            EOS,
+        )),
+        &requests,
+    );
+
+    assert_same_outputs(&seq, &batched, "paged batched vs flat seq");
+    assert_same_outputs(&per_lane, &batched,
+                        "paged batched vs per-lane");
+    // An ample pool never clamps `grow_for_speculation`, so the
+    // draft-volume identity holds on paged lanes too.
+    assert_eq!(bm.draft_tokens, sm.draft_tokens);
+    assert_eq!(bm.accepted_tokens, sm.accepted_tokens);
+    assert!(bm.rewind_blocks > 0, "no rewinds crossed a block edge");
+    assert_launch_economics(&bm, &sm, 4);
+}
+
+// ---------------------------------------------------------------------------
+// Heterogeneous per-lane γ: one verify launch still serves all lanes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn heterogeneous_gamma_lanes_share_one_verify_launch() {
+    // Three lanes with identical prompts but staggered length limits:
+    // the γ planner clamps a lane's depth to `max_new - generated - 1`,
+    // so lane 3 (max_new = 3) plans γ = 2 while the others sit at the
+    // full γ = 4 — heterogeneity by construction, in the very first
+    // tick the three lanes decode together.
+    let no_eos = VOCAB as u32 + 1;
+    let batch = 3;
+    let mk = |id: u64, max_new: usize| Request {
+        id,
+        prompt: (0..8).map(|j| (j % 5) as u32 + 10).collect(),
+        max_new_tokens: max_new,
+        sampling: Sampling::Greedy,
+        priority: Default::default(),
+        n: 1,
+        beams: 0,
+        session: None,
+    };
+    let requests =
+        vec![mk(1, 30), mk(2, 30), mk(3, 3)];
+
+    let mut engine = Engine::with_backend(
+        flat(batch),
+        cfg(batch, None, Some(SpecConfig { gamma: 4 })),
+        no_eos,
+    );
+    let mut rxs = Vec::new();
+    for r in &requests {
+        let (tx, rx) = mpsc::channel();
+        engine.enqueue(r.clone(), tx);
+        rxs.push(rx);
+    }
+    let mut guard = 0;
+    while engine.has_work() {
+        engine.tick();
+        guard += 1;
+        assert!(guard < 10_000, "engine did not drain");
+    }
+    let m = engine.metrics_snapshot();
+    let trace = engine.trace_snapshot();
+    for rx in rxs {
+        rx.recv().expect("reply sender dropped");
+    }
+
+    // Group SpecRound events by tick: at least one tick must carry two
+    // distinct planned depths, and the number of distinct spec ticks
+    // must equal the verify launch count — one batched verify pass per
+    // tick no matter how ragged the per-lane windows are.
+    let mut by_tick: Vec<(u64, Vec<usize>)> = Vec::new();
+    for r in &trace {
+        if let TraceEvent::SpecRound { gamma, .. } = r.event {
+            match by_tick.last_mut() {
+                Some((t, gs)) if *t == r.tick => gs.push(gamma),
+                _ => by_tick.push((r.tick, vec![gamma])),
+            }
+        }
+    }
+    assert_eq!(
+        by_tick.len() as u64,
+        m.verify_launches,
+        "one verify launch per speculative tick"
+    );
+    assert!(
+        by_tick.iter().any(|(_, gs)| {
+            gs.len() > 1 && gs.iter().any(|&g| g != gs[0])
+        }),
+        "no tick ran lanes at heterogeneous depths: {by_tick:?}"
+    );
+    assert!(
+        m.draft_launches <= 4 * m.verify_launches,
+        "draft rounds exceeded max γ per tick"
     );
 }

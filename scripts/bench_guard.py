@@ -76,6 +76,12 @@ LOWER_IS_BETTER = {
     # sessions bench: rows the second turn still has to prefill after
     # re-mapping the parked chain (the new-turn suffix only).
     "turn2_prefill_rows",
+    # speculative-decode bench: batched-round launch economics —
+    # (draft + verify) launches per generated token on the multi-lane
+    # drive.  The bench also hard-fails in-run if a tick ever exceeds
+    # γ draft launches + 1 verify launch, which is the structural
+    # bound; this leaf guards against drift in the achieved ratio.
+    "launches_per_token",
 }
 # Counters where tiny absolute jitter on a near-zero baseline must not
 # trip the percentage gate.

@@ -45,6 +45,8 @@ GATES = {
     "import_block": "supports_block_ops",
     "draft_step": "supports_speculation",
     "verify_tokens": "supports_speculation",
+    "draft_step_batch": "supports_speculation",
+    "verify_tokens_batch": "supports_speculation",
 }
 
 _PANIC = re.compile(r"\b(todo!|unimplemented!|dbg!)\s*[(\[]")

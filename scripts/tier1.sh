@@ -62,6 +62,10 @@ cargo test -q --test chunked_prefill
 # modeled >=1.3x speedup bar.
 cargo test -q --test spec_decode
 cargo test -q --test proptests block_table_rewind_keeps_allocator_invariants
+# Batched-round gate: random lane counts x heterogeneous per-lane
+# depths x mid-speculation preemption — the batched speculative round
+# must emit the per-lane loop's exact streams and leak nothing.
+cargo test -q --test proptests batched_speculation_matches_serial_under_preemption
 
 # Flight-recorder gate (DESIGN.md §15): timestamp-stripped event
 # sequences golden flat-vs-paged and speculative-vs-sequential, plus
